@@ -1,0 +1,73 @@
+//! Net-B compression study (§VI of the paper): per-layer codec survey,
+//! Table-6 distributions, whole-model compressed size, and the Fischer
+//! fixed-rate bound — on the trained CIFAR CNN.
+//!
+//!     make artifacts && cargo run --release --example cifar_compression
+
+use pvqnet::compress::{codec_survey, compress_layer, decompress_layer, Codec};
+use pvqnet::nn::weights::load_model;
+use pvqnet::nn::ModelSpec;
+use pvqnet::pvq::{np_bits_estimate, RhoMode};
+use pvqnet::quant::{distribution_table, quantize};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let spec = ModelSpec::by_name("b").unwrap();
+    let model = load_model(&dir.join("net_b.pvqw"), &spec)?;
+    let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm)?;
+
+    println!("—— Table 6: weight distribution per layer ——");
+    println!("{}", distribution_table(&q));
+
+    println!("—— §VI codec survey per layer ——");
+    let mut total_raw = 0u64;
+    let mut total_best = 0u64;
+    for (r, &li) in q.reports.iter().zip(&spec.weighted_layers()) {
+        let layer = q.quant_model.layers[li].as_ref().unwrap();
+        let mut comps = layer.w.clone();
+        comps.extend_from_slice(&layer.b_pyramid);
+        let pv = pvqnet::pvq::PvqVector { k: layer.k, components: comps, rho: layer.rho };
+        println!("{} (N={}, K={}, N/K={:.2}):", r.label, r.n, r.k, r.ratio);
+        let survey = codec_survey(&pv);
+        for (name, bpw) in &survey {
+            println!("  {name:<16} {bpw:>7.3} bits/weight");
+        }
+        let best = survey
+            .iter()
+            .filter(|(n, _)| n != "entropy-bound" && n != "raw-f32" && n != "fischer-index")
+            .map(|(_, b)| *b)
+            .fold(f64::INFINITY, f64::min);
+        total_raw += r.n as u64 * 32;
+        total_best += (best * r.n as f64).ceil() as u64;
+
+        // container roundtrip proves losslessness on the real layer
+        let bytes = compress_layer(&pv, Codec::Rle);
+        let back = decompress_layer(&bytes)?;
+        assert_eq!(back.components, pv.components, "roundtrip failed");
+    }
+    println!(
+        "whole model: {} → {} bits ({:.1}× compression, lossless given ρ's)",
+        total_raw,
+        total_best,
+        total_raw as f64 / total_best as f64
+    );
+
+    println!("\n—— Fischer fixed-rate bound (log₂ Nₚ per layer) ——");
+    for r in &q.reports {
+        let bits = np_bits_estimate(r.n as u64, r.k as u64);
+        println!(
+            "  {:<7} log₂Nₚ({}, {}) = {:.0} bits → {:.3} bits/weight",
+            r.label,
+            r.n,
+            r.k,
+            bits,
+            bits / r.n as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! END-TO-END DRIVER (DESIGN.md §4, EXPERIMENTS.md): exercises every layer
+//! of the stack on the real (synthetic-MNIST) workload:
+//!
+//!   L2/L1 artifacts → rust weight loader → PVQ quantization →
+//!   float engine + integer PVQ engine + PJRT HLO engine →
+//!   §VII accuracy tables, §VI compression, §VIII cycles →
+//!   batched serving with latency/throughput.
+//!
+//!     make artifacts && cargo run --release --example mnist_pvq_pipeline
+
+use pvqnet::coordinator::{Engine, Server, ServerConfig};
+use pvqnet::data::Dataset;
+use pvqnet::hw::HwReport;
+use pvqnet::nn::weights::load_model;
+use pvqnet::nn::ModelSpec;
+use pvqnet::pvq::RhoMode;
+use pvqnet::quant::{distribution_table, evaluate, quantize, ratio_sweep};
+use pvqnet::runtime::HloModel;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // ---------- load trained net A + test data
+    let spec = ModelSpec::by_name("a").unwrap();
+    let model = load_model(&dir.join("net_a.pvqw"), &spec)?;
+    let data = Dataset::load(&dir.join("mnist_test.bin"))?;
+    println!("net A loaded: {} params, test set {}×{}px\n", spec.total_params(), data.n, data.h);
+    println!("{}", spec.anatomy_table(&spec.paper_ratios()));
+
+    // ---------- §VII: quantize at paper ratios, before/after accuracy
+    let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm)?;
+    let rep = evaluate(&model, &q, &data, 500)?;
+    println!("—— §VII accuracy (Table-1 ratios) ——");
+    println!("{}\n", rep.render());
+
+    // ---------- Tables 5-ish: weight distribution
+    println!("—— Table 5 (weight distribution after PVQ) ——");
+    println!("{}", distribution_table(&q));
+
+    // ---------- §VI: compression survey on FC0
+    println!("—— §VI compression (FC0) ——");
+    let fc0 = q.quant_model.layers.iter().flatten().next().unwrap();
+    let mut comps = fc0.w.clone();
+    comps.extend_from_slice(&fc0.b_pyramid);
+    let pv = pvqnet::pvq::PvqVector { k: fc0.k, components: comps, rho: fc0.rho };
+    for (name, bpw) in pvqnet::compress::codec_survey(&pv) {
+        println!("  {name:<16} {bpw:>7.3} bits/weight");
+    }
+
+    // ---------- §VIII: hardware cycles
+    println!("\n—— §VIII hardware report ——");
+    println!("{}", HwReport::from_model(&q.quant_model).render());
+
+    // ---------- ratio sweep (the paper's §IV iteration)
+    println!("—— N/K sweep (200 samples) ——");
+    for p in ratio_sweep(&model, &data, &[1.0, 2.0, 3.0, 5.0, 8.0], 200)? {
+        println!(
+            "  N/K {:>4.1} → accuracy {:>6.2}%  mean-cosine {:.4}  total-K {}",
+            p.ratio,
+            100.0 * p.accuracy,
+            p.mean_cosine,
+            p.total_k
+        );
+    }
+
+    // ---------- serving: PJRT float vs integer PVQ engine
+    println!("\n—— serving (batched, 400 requests each) ——");
+    let hlo = HloModel::load(&dir.join("net_a.hlo.txt"), 32, 784, 10)?;
+    let compiled = Arc::new(pvqnet::nn::CompiledQuantModel::compile(&q.quant_model)?);
+    for (name, engine) in [
+        ("hlo-pjrt", Engine::Hlo(Arc::new(hlo))),
+        ("pvq-int", Engine::PvqInt(Arc::new(q.quant_model.clone()))),
+        ("pvq-csr", Engine::PvqCompiled(compiled, spec.input_shape.clone())),
+    ] {
+        let server = Server::start(
+            engine,
+            ServerConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+                workers: 1,
+                queue_cap: 4096,
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let n = 400;
+        let mut correct = 0;
+        for i in 0..n {
+            let r = server.classify(data.sample(i % data.n).to_vec())?;
+            if r.class == data.labels[i % data.n] as usize {
+                correct += 1;
+            }
+        }
+        let dt = t0.elapsed();
+        println!(
+            "  {:<9} {:>7.0} req/s  accuracy {:>6.2}%  [{}]",
+            name,
+            n as f64 / dt.as_secs_f64(),
+            100.0 * correct as f64 / n as f64,
+            server.metrics().summary()
+        );
+        server.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the whole PVQ story in one file, no artifacts required.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! 1. PVQ-encode a vector, inspect the pyramid point and gain
+//! 2. dot products: exact float vs PVQ approximation, op counts
+//! 3. quantize a small trained-ish model and compare accuracy
+//! 4. compress the weights and show bits/weight
+//! 5. simulate the paper's hardware circuits
+
+use pvqnet::compress::{codec_survey, Distribution};
+use pvqnet::data::synth_glyphs;
+use pvqnet::hw::{add_only_arch, mult_arch};
+use pvqnet::nn::{Activation, LayerSpec, ModelSpec};
+use pvqnet::pvq::{cosine, encode_opt, CountTable, RhoMode};
+use pvqnet::quant::{evaluate, quantize};
+use pvqnet::testkit::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== 1. PVQ encoding (paper §II)");
+    let mut rng = Rng::new(42);
+    let v: Vec<f64> = rng.laplacian_vec(16, 1.0);
+    let q = encode_opt(&v, 8, RhoMode::Norm);
+    println!("v      = {:?}", v.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>());
+    println!("ŷ∈P(16,8) = {:?}  (Σ|ŷ|={} = K)", q.components, q.l1());
+    println!("ρ = {:.4}, cosine(v, ŷ) = {:.4}", q.rho, cosine(&v, &q));
+    let t = CountTable::new(16, 8);
+    println!(
+        "Nₚ(16,8) = {} → {} bits fixed-rate (vs 16×32 raw f32 bits)",
+        t.count(16, 8),
+        t.index_bits(16, 8)
+    );
+
+    println!("\n== 2. dot products (paper §III, §VIII)");
+    let x: Vec<i64> = (0..16).map(|_| rng.below(256) as i64).collect();
+    let m = mult_arch(&q.components, &x);
+    let a = add_only_arch(&q.components, &x);
+    println!("mult-arch : value {} in {} cycles (one per nonzero)", m.value, m.cycles);
+    println!("add-only  : value {} in {} cycles (exactly K)", a.value, a.cycles);
+
+    println!("\n== 3. quantize a model (paper §IV/§VII)");
+    let train = synth_glyphs(400, 16, 16, 1);
+    let test = synth_glyphs(200, 16, 16, 2);
+    // template-matching readout as a stand-in for a trained net
+    let d = train.sample_len();
+    let mut w = Vec::with_capacity(10 * d);
+    for c in 0..10 {
+        let mut mean = vec![0f64; d];
+        let mut cnt = 0.0f64;
+        for i in 0..train.n {
+            if train.labels[i] as usize == c {
+                cnt += 1.0;
+                for (j, &p) in train.sample(i).iter().enumerate() {
+                    mean[j] += p as f64;
+                }
+            }
+        }
+        let norm: f64 = mean.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-9);
+        w.extend(mean.iter().map(|&v| (v / cnt.max(1.0) / norm) as f32));
+    }
+    let spec = ModelSpec {
+        name: "quickstart".into(),
+        input_shape: vec![d],
+        layers: vec![LayerSpec::Dense { input: d, output: 10, act: Activation::None }],
+    };
+    let model = pvqnet::nn::Model {
+        spec,
+        params: vec![Some(pvqnet::nn::LayerParams { w, b: vec![0.0; 10] })],
+    };
+    let quantized = quantize(&model, &[5.0], RhoMode::Norm)?;
+    let rep = evaluate(&model, &quantized, &test, 200)?;
+    println!("{}", rep.render());
+
+    println!("\n== 4. weight compression (paper §VI)");
+    let layer = quantized.quant_model.layers.iter().flatten().next().unwrap();
+    let dist = Distribution::from_values(&layer.w);
+    println!("{}", dist.table_row("FC0"));
+    let mut comps = layer.w.clone();
+    comps.extend_from_slice(&layer.b_pyramid);
+    let pv = pvqnet::pvq::PvqVector { k: layer.k, components: comps, rho: layer.rho };
+    for (name, bpw) in codec_survey(&pv) {
+        println!("  {name:<16} {bpw:>7.3} bits/weight");
+    }
+
+    println!("\n== 5. next steps");
+    println!("  make artifacts            # train the paper's nets A–D (python, once)");
+    println!("  pvqnet eval --net a       # §VII accuracy before/after");
+    println!("  pvqnet serve --net b      # batching inference server");
+    Ok(())
+}

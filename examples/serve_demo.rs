@@ -1,0 +1,94 @@
+//! Serving demo: multi-model router with the float PJRT graph, the
+//! PVQ-quantized PJRT graph, and the pure-integer PVQ engine side by side,
+//! under concurrent client load.
+//!
+//!     make artifacts && cargo run --release --example serve_demo
+
+use pvqnet::coordinator::{Engine, Router, ServerConfig};
+use pvqnet::data::Dataset;
+use pvqnet::nn::weights::load_model;
+use pvqnet::nn::ModelSpec;
+use pvqnet::pvq::RhoMode;
+use pvqnet::quant::quantize;
+use pvqnet::runtime::HloModel;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let spec = ModelSpec::by_name("a").unwrap();
+    let model = load_model(&dir.join("net_a.pvqw"), &spec)?;
+    let data = Arc::new(Dataset::load(&dir.join("mnist_test.bin"))?);
+    let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm)?;
+
+    let engines = vec![
+        (
+            "float-hlo".to_string(),
+            Engine::Hlo(Arc::new(HloModel::load(&dir.join("net_a.hlo.txt"), 32, 784, 10)?)),
+        ),
+        (
+            "pvq-hlo".to_string(),
+            Engine::Hlo(Arc::new(HloModel::load(&dir.join("net_a_pvq.hlo.txt"), 32, 784, 10)?)),
+        ),
+        ("pvq-int".to_string(), Engine::PvqInt(Arc::new(q.quant_model))),
+    ];
+    let router = Arc::new(Router::new(
+        engines,
+        "pvq-int",
+        ServerConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+            queue_cap: 8192,
+        },
+    )?);
+
+    // concurrent clients hammering different routes
+    let routes = ["float-hlo", "pvq-hlo", "pvq-int"];
+    let per_client = 300usize;
+    let mut handles = Vec::new();
+    let t0 = std::time::Instant::now();
+    for (ci, route) in routes.iter().enumerate() {
+        let router = router.clone();
+        let data = data.clone();
+        let route = route.to_string();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(String, usize)> {
+            let mut correct = 0;
+            for i in 0..per_client {
+                let idx = (ci * 131 + i) % data.n;
+                let r = router.classify(Some(&route), data.sample(idx).to_vec())?;
+                if r.class == data.labels[idx] as usize {
+                    correct += 1;
+                }
+            }
+            Ok((route, correct))
+        }));
+    }
+    for h in handles {
+        let (route, correct) = h.join().unwrap()?;
+        println!(
+            "route {:<10} accuracy {:>6.2}% over {} requests",
+            route,
+            100.0 * correct as f64 / per_client as f64,
+            per_client
+        );
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\ntotal {} requests in {:.2}s → {:.0} req/s aggregate",
+        routes.len() * per_client,
+        dt.as_secs_f64(),
+        (routes.len() * per_client) as f64 / dt.as_secs_f64()
+    );
+    println!("{}", router.summary());
+    match Arc::try_unwrap(router) {
+        Ok(r) => r.shutdown(),
+        Err(_) => unreachable!("all clients joined"),
+    }
+    Ok(())
+}

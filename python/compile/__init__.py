@@ -1,0 +1,4 @@
+"""Build-time python package: L2 jax models + L1 Pallas kernels + AOT export.
+
+Never imported at runtime — the rust binary consumes only the artifacts.
+"""

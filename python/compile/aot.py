@@ -1,0 +1,257 @@
+"""AOT build: datasets → training → weights + HLO artifacts.
+
+Run once via ``make artifacts`` (python never runs on the request path):
+
+  artifacts/mnist_{train,test}.bin, cifar_{train,test}.bin   datasets
+  artifacts/net_{a,b,c,d}.pvqw                                f32 weights
+  artifacts/net_{a,b,c,d}.hlo.txt                             float graphs
+  artifacts/net_{a,c}_pallas.hlo.txt                          pallas-kernel graphs
+  artifacts/net_{a,b}_pvq.hlo.txt                             PVQ-quantized graphs
+  artifacts/pvq_golden.txt                                    cross-language cases
+  artifacts/manifest.txt                                      geometry for rust
+
+HLO text (not serialized protos) is the interchange — see
+/opt/xla-example/README.md. Sizes/steps tunable via env:
+  PVQNET_TRAIN_N / PVQNET_TEST_N / PVQNET_STEPS_MLP / PVQNET_STEPS_CNN
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import models
+from . import pvq as pvq_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the text
+    parser, which is what makes xla_extension 0.5.1 accept jax ≥ 0.5
+    output)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides baked weight tensors
+    # as "{...}", which the rust-side text parser would silently turn into
+    # garbage weights.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text contains elided constants"
+    return text
+
+
+def save_pvqw(path: str, records: list[dict]) -> None:
+    """Write the PVQW container (rust/src/nn/weights.rs)."""
+    with open(path, "wb") as f:
+        f.write(b"PVQW")
+        f.write(struct.pack("<II", 1, len(records)))
+        for r in records:
+            name = r["name"].encode()
+            f.write(struct.pack("<B", len(name)))
+            f.write(name)
+            f.write(struct.pack("<B", r["kind"]))
+            f.write(struct.pack("<4I", *r["dims"]))
+            w = np.asarray(r["w"], dtype=np.float32).ravel()
+            b = np.asarray(r["b"], dtype=np.float32).ravel()
+            f.write(struct.pack("<I", len(w)))
+            f.write(w.tobytes())
+            f.write(struct.pack("<I", len(b)))
+            f.write(b.tobytes())
+
+
+def mlp_records(params) -> list[dict]:
+    recs = []
+    for i, p in enumerate(params):
+        out, inp = p["w"].shape
+        recs.append(
+            {"name": f"fc{i}", "kind": 0, "dims": (inp, out, 0, 0), "w": p["w"], "b": p["b"]}
+        )
+    return recs
+
+
+def cnn_records(params) -> list[dict]:
+    recs = []
+    for i, p in enumerate(params):
+        if p["w"].ndim == 4:
+            kh, kw, cin, cout = p["w"].shape
+            recs.append(
+                {"name": f"conv{i}", "kind": 1, "dims": (kh, kw, cin, cout), "w": p["w"], "b": p["b"]}
+            )
+        else:
+            out, inp = p["w"].shape
+            recs.append(
+                {"name": f"fc{i}", "kind": 0, "dims": (inp, out, 0, 0), "w": p["w"], "b": p["b"]}
+            )
+    return recs
+
+
+# paper Tables 1-4 N/K ratios, per weighted layer
+PAPER_RATIOS = {
+    "a": [5.0, 5.0, 5.0],
+    "b": [1.0 / 3.0, 1.0, 1.0, 1.0, 4.0, 1.0],
+    "c": [2.5, 5.0, 4.0],
+    "d": [0.4, 1.0, 1.5, 2.0, 5.0, 1.0],
+}
+
+
+def quantize_params(params, ratios):
+    """The paper's §VII substitution in trained units: per layer, PVQ over
+    (w ++ b) → (ρŵ, ρb̂). (The rust side additionally derives the
+    integer-engine bias; for a float HLO graph ρb̂ is the exact value.)"""
+    out = []
+    for p, ratio in zip(params, ratios):
+        wq, bq, _, rho, _ = pvq_mod.quantize_layer_weights(
+            np.asarray(p["w"]), np.asarray(p["b"]), ratio
+        )
+        out.append({"w": jnp.asarray(wq.reshape(p["w"].shape)), "b": jnp.asarray(bq)})
+    return out
+
+
+def lower_mlp(params, act: str, batch: int, use_pallas: bool) -> str:
+    def fn(x):
+        return (models.mlp_forward(params, x, act=act, use_pallas=use_pallas),)
+
+    spec = jax.ShapeDtypeStruct((batch, 784), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_cnn(params, act: str, batch: int) -> str:
+    def fn(xflat):
+        x = xflat.reshape(batch, 32, 32, 3)
+        return (models.cnn_forward(params, x, act=act),)
+
+    spec = jax.ShapeDtypeStruct((batch, 32 * 32 * 3), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def write_golden(path: str, cases: int = 40, seed: int = 1234) -> None:
+    """Cross-language encoder cases: rust must reproduce exactly."""
+    rng = np.random.RandomState(seed)
+    with open(path, "w") as f:
+        f.write("# pvq golden cases: lines = n k | v… | components… | rho\n")
+        for ci in range(cases):
+            n = int(rng.randint(2, 33))
+            k = int(rng.randint(1, 41))
+            kind = ci % 3
+            if kind == 0:
+                v = rng.laplace(0, 1, size=n)
+            elif kind == 1:
+                v = rng.normal(0, 1, size=n)
+            else:
+                v = rng.normal(0, 1, size=n) * (rng.uniform(size=n) < 0.5)
+            q = pvq_mod.encode_fast([float(x) for x in v], k)
+            f.write(f"{n} {k}\n")
+            f.write(" ".join(repr(float(x)) for x in v) + "\n")
+            f.write(" ".join(str(c) for c in q.components) + "\n")
+            f.write(repr(q.rho) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=int(os.environ.get("PVQNET_BATCH", 32)))
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    train_n = int(os.environ.get("PVQNET_TRAIN_N", 4000))
+    test_n = int(os.environ.get("PVQNET_TEST_N", 1000))
+    steps_mlp = int(os.environ.get("PVQNET_STEPS_MLP", 400))
+    steps_cnn = int(os.environ.get("PVQNET_STEPS_CNN", 250))
+    batch = args.batch
+
+    manifest = []
+
+    # ---------------- datasets
+    print("== datasets")
+    mtr_x, mtr_y = data_mod.synth_mnist(train_n, seed=10)
+    mte_x, mte_y = data_mod.synth_mnist(test_n, seed=11)
+    ctr_x, ctr_y = data_mod.synth_cifar(train_n, seed=20)
+    cte_x, cte_y = data_mod.synth_cifar(test_n, seed=21)
+    data_mod.save_dataset(os.path.join(out, "mnist_train.bin"), mtr_x, mtr_y)
+    data_mod.save_dataset(os.path.join(out, "mnist_test.bin"), mte_x, mte_y)
+    data_mod.save_dataset(os.path.join(out, "cifar_train.bin"), ctr_x, ctr_y)
+    data_mod.save_dataset(os.path.join(out, "cifar_test.bin"), cte_x, cte_y)
+
+    # ---------------- nets
+    nets = {}
+    for name, (fwd, act, steps, lr) in {
+        "a": ("mlp", "relu", steps_mlp, 1e-3),
+        "c": ("mlp", "bsign", steps_mlp, 1e-3),
+        "b": ("cnn", "relu", steps_cnn, 1e-3),
+        "d": ("cnn", "bsign", steps_cnn, 5e-4),
+    }.items():
+        print(f"== train net {name.upper()} ({fwd}, {act}, {steps} steps)")
+        key = jax.random.PRNGKey({"a": 0, "b": 1, "c": 2, "d": 3}[name])
+        params = models.init_mlp(key) if fwd == "mlp" else models.init_cnn(key)
+        imgs, labels = (mtr_x, mtr_y) if fwd == "mlp" else (ctr_x, ctr_y)
+        timgs, tlabels = (mte_x, mte_y) if fwd == "mlp" else (cte_x, cte_y)
+        params, _ = models.train(params, imgs, labels, fwd, act, steps=steps, lr=lr)
+        acc = models.evaluate(params, timgs, tlabels, fwd, act)
+        print(f"   test accuracy (normalized-input convention): {acc:.4f}")
+        # .pvqw keeps *trained-unit* params (the rust ModelSpec carries an
+        # explicit Scale(1/255) layer); HLO graphs get the scale folded in
+        # so they consume raw pixels directly.
+        nets[name] = {"params": params, "fwd": fwd, "act": act, "acc": acc}
+        recs = mlp_records(params) if fwd == "mlp" else cnn_records(params)
+        save_pvqw(os.path.join(out, f"net_{name}.pvqw"), recs)
+        manifest.append(f"net_{name}.acc {acc:.4f}")
+
+    # ---------------- HLO lowering (raw-pixel inputs: fold 1/255 in)
+    print("== lower HLO")
+    for name, net in nets.items():
+        net["raw_params"] = models.fold_input_scale(net["params"], 255.0)
+        if net["fwd"] == "mlp":
+            hlo = lower_mlp(net["raw_params"], net["act"], batch, use_pallas=False)
+            ilen, olen = 784, 10
+        else:
+            hlo = lower_cnn(net["raw_params"], net["act"], batch)
+            ilen, olen = 32 * 32 * 3, 10
+        p = os.path.join(out, f"net_{name}.hlo.txt")
+        open(p, "w").write(hlo)
+        manifest.append(f"net_{name}.hlo net_{name}.hlo.txt {batch} {ilen} {olen}")
+        print(f"   net_{name}.hlo.txt ({len(hlo)} chars)")
+
+    # pallas-kernel variants (the L1 kernel lowered into the same HLO)
+    for name in ("a", "c"):
+        net = nets[name]
+        hlo = lower_mlp(net["raw_params"], net["act"], batch, use_pallas=True)
+        p = os.path.join(out, f"net_{name}_pallas.hlo.txt")
+        open(p, "w").write(hlo)
+        manifest.append(f"net_{name}_pallas.hlo net_{name}_pallas.hlo.txt {batch} 784 10")
+        print(f"   net_{name}_pallas.hlo.txt ({len(hlo)} chars)")
+
+    # PVQ-quantized variants at paper ratios (weights baked quantized)
+    for name in ("a", "b"):
+        net = nets[name]
+        qparams = quantize_params(net["params"], PAPER_RATIOS[name])
+        qraw = models.fold_input_scale(qparams, 255.0)
+        if net["fwd"] == "mlp":
+            hlo = lower_mlp(qraw, net["act"], batch, use_pallas=False)
+            ilen = 784
+        else:
+            hlo = lower_cnn(qraw, net["act"], batch)
+            ilen = 32 * 32 * 3
+        p = os.path.join(out, f"net_{name}_pvq.hlo.txt")
+        open(p, "w").write(hlo)
+        manifest.append(f"net_{name}_pvq.hlo net_{name}_pvq.hlo.txt {batch} {ilen} 10")
+        print(f"   net_{name}_pvq.hlo.txt ({len(hlo)} chars)")
+
+    # ---------------- golden cases + manifest
+    write_golden(os.path.join(out, "pvq_golden.txt"))
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("== done:", out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

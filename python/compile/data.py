@@ -1,0 +1,122 @@
+"""Synthetic datasets (no-network substitution for MNIST / CIFAR10).
+
+See DESIGN.md §3: PVQ's behaviour depends on trained weight statistics,
+not on the exact pixels, so any natural-ish classification task with the
+same shapes exercises the same code paths.
+
+* ``synth_mnist``  — 28×28×1: ten 7×5 digit glyph templates rendered with
+  random shift, per-pixel noise and brightness jitter.
+* ``synth_cifar``  — 32×32×3: ten classes, each a (color palette,
+  oriented sinusoidal texture frequency) pair with additive noise and a
+  random phase — CNN-learnable, MLP-hostile, like the real thing.
+
+Both are deterministic in the seed and emit u8 NHWC arrays + u8 labels.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GLYPHS = np.array(
+    [
+        [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110],
+        [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110],
+        [0b01110, 0b10001, 0b00001, 0b00110, 0b01000, 0b10000, 0b11111],
+        [0b01110, 0b10001, 0b00001, 0b00110, 0b00001, 0b10001, 0b01110],
+        [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010],
+        [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110],
+        [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110],
+        [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000],
+        [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110],
+        [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100],
+    ],
+    dtype=np.uint8,
+)
+
+
+def _glyph_bitmap(cls: int) -> np.ndarray:
+    rows = GLYPHS[cls]
+    bm = np.zeros((7, 5), dtype=np.float32)
+    for y in range(7):
+        for x in range(5):
+            bm[y, x] = (rows[y] >> (4 - x)) & 1
+    return bm
+
+
+def synth_mnist(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n samples of 28×28×1 u8 glyph images; labels round-robin 0..9."""
+    rng = np.random.RandomState(seed)
+    images = np.zeros((n, 28, 28, 1), dtype=np.uint8)
+    labels = (np.arange(n) % 10).astype(np.uint8)
+    scale = 3  # 7x5 glyph -> 21x15
+    for i in range(n):
+        bm = _glyph_bitmap(labels[i])
+        big = np.kron(bm, np.ones((scale, scale), dtype=np.float32))  # 21x15
+        # heavy background noise so the task is not trivially separable
+        img = rng.randint(0, 90, size=(28, 28)).astype(np.float32)
+        oy = rng.randint(0, 28 - 21 + 1)
+        ox = rng.randint(0, 28 - 15 + 1)
+        bright = rng.uniform(0.55, 1.0)
+        patch = img[oy : oy + 21, ox : ox + 15]
+        glyph = 90.0 + big * bright * 165.0
+        img[oy : oy + 21, ox : ox + 15] = np.where(big > 0, glyph, patch)
+        # pixel dropout inside the glyph
+        noise = rng.uniform(size=(21, 15)) < 0.12
+        img[oy : oy + 21, ox : ox + 15][noise & (big > 0)] = rng.randint(0, 90)
+        # random occluding block
+        if rng.uniform() < 0.5:
+            by, bx = rng.randint(0, 22), rng.randint(0, 22)
+            img[by : by + 5, bx : bx + 5] = rng.randint(0, 255)
+        # distractor stroke
+        if rng.uniform() < 0.5:
+            ry = rng.randint(0, 28)
+            img[ry, :] = np.maximum(img[ry, :], rng.randint(80, 200))
+        images[i, :, :, 0] = np.clip(img, 0, 255).astype(np.uint8)
+    return images, labels
+
+
+def synth_cifar(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n samples of 32×32×3 u8 procedural-texture images, 10 classes."""
+    rng = np.random.RandomState(seed)
+    images = np.zeros((n, 32, 32, 3), dtype=np.uint8)
+    labels = (np.arange(n) % 10).astype(np.uint8)
+    yy, xx = np.meshgrid(np.arange(32), np.arange(32), indexing="ij")
+    # class -> (palette rgb, spatial frequency, orientation)
+    palettes = np.array(
+        [
+            [200, 60, 60], [60, 200, 60], [60, 60, 200], [200, 200, 60],
+            [200, 60, 200], [60, 200, 200], [230, 150, 40], [120, 120, 220],
+            [160, 220, 120], [220, 120, 160],
+        ],
+        dtype=np.float32,
+    )
+    freqs = np.array([0.2, 0.45, 0.2, 0.45, 0.2, 0.45, 0.2, 0.45, 0.2, 0.45])
+    thetas = np.array([0.0, 0.0, 0.9, 0.9, 0.0, 0.9, 0.45, 0.45, 1.35, 1.35])
+    # pull palettes toward gray and make class pairs share a palette so
+    # color alone cannot separate them — texture must be learned
+    palettes = 0.35 * palettes + 0.65 * 128.0
+    palettes = palettes[np.array([0, 0, 1, 1, 2, 2, 3, 3, 4, 4])]
+    for i in range(n):
+        c = labels[i]
+        phase = rng.uniform(0, 2 * np.pi)
+        freq = freqs[c] * rng.uniform(0.8, 1.2)
+        theta = thetas[c] + rng.normal(0, 0.12)
+        # oriented sinusoid texture in [0,1]
+        proj = np.cos(theta) * xx + np.sin(theta) * yy
+        tex = 0.5 + 0.5 * np.sin(2 * np.pi * freq * proj / 4.0 + phase)
+        gain = rng.uniform(0.75, 1.25)
+        base = palettes[c][None, None, :] * (0.4 + 0.6 * tex[:, :, None]) * gain
+        noise = rng.normal(0, 48, size=(32, 32, 3))
+        images[i] = np.clip(base + noise, 0, 255).astype(np.uint8)
+    return images, labels
+
+
+def save_dataset(path: str, images: np.ndarray, labels: np.ndarray, nclasses: int = 10) -> None:
+    """Write the PVQD container consumed by rust (rust/src/data/mod.rs)."""
+    n, h, w, c = images.shape
+    with open(path, "wb") as f:
+        f.write(b"PVQD")
+        for v in (n, h, w, c, nclasses):
+            f.write(int(v).to_bytes(4, "little"))
+        f.write(images.astype(np.uint8).tobytes())
+        f.write(labels.astype(np.uint8).tobytes())

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (interpret=True) + jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .pvq_matmul import pvq_matmul  # noqa: F401
+from .pvq_project import pvq_project  # noqa: F401

@@ -1,0 +1,141 @@
+"""Pallas kernel: PVQ dense layer  y = (x @ ŵᵀ)·ρ + b.
+
+TPU adaptation of the paper's §III dot-product trick (DESIGN.md
+§Hardware-Adaptation): on a systolic-array machine the win is not
+add-vs-mult — the MXU does fused MACs — but *weight bandwidth*: PVQ
+weights are tiny integers (Tables 5–8: ≥97 % in {0,±1,±2,±3}), so ŵ ships
+HBM→VMEM as int8 (4× less traffic than f32) and is upcast in-register
+right before the MXU dot; ρ is one scalar multiply per tile.
+
+Grid layout: (B/bm, M/bn, N/bk), K-innermost so each (i,j) output tile
+stays resident in VMEM while the kernel marches over the contraction —
+the BlockSpec index maps express the HBM→VMEM schedule the paper's FPGA
+designs express with serial accumulators.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU perf is estimated analytically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles; shrunk automatically for small operands.
+DEF_BM, DEF_BN, DEF_BK = 128, 128, 512
+
+
+def _kernel(x_ref, w_ref, b_ref, rho_ref, o_ref, *, nk: int):
+    """One (bm × bn) output tile; k = program_id(2) marches over N."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # int8 weights upcast in-register (VMEM→register dequant, no extra
+    # HBM traffic) — on TPU this feeds the MXU as bf16/f32.
+    acc = jnp.dot(
+        x_ref[...],
+        w_ref[...].astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = o_ref[...] * rho_ref[0] + b_ref[...][None, :]
+
+
+def _pick(tile: int, dim: int) -> int:
+    return min(tile, dim)
+
+
+def _pvq_matmul_impl(x, w_int, b, rho, *, bm: int, bn: int, bk: int):
+    B, N = x.shape
+    M, N2 = w_int.shape
+    assert N == N2, f"contraction mismatch {N} vs {N2}"
+    assert b.shape == (M,)
+
+    bm_, bn_, bk_ = _pick(bm, B), _pick(bn, M), _pick(bk, N)
+    Bp, Mp, Np = -(-B // bm_) * bm_, -(-M // bn_) * bn_, -(-N // bk_) * bk_
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Bp - B), (0, Np - N)))
+    wp = jnp.pad(w_int, ((0, Mp - M), (0, Np - N)))
+    bp = jnp.pad(b.astype(jnp.float32), (0, Mp - M))
+    rho_arr = jnp.asarray([rho], dtype=jnp.float32)
+
+    nk = Np // bk_
+    grid = (Bp // bm_, Mp // bn_, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),  # x tile
+            pl.BlockSpec((bn_, bk_), lambda i, j, k: (j, k)),  # ŵ tile
+            pl.BlockSpec((bn_,), lambda i, j, k: (j,)),  # bias tile
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),  # ρ
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Mp), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp, rho_arr)
+    return out[:B, :M]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _pvq_matmul_vjp(x, w_int, b, rho, bm, bn, bk):
+    return _pvq_matmul_impl(x, w_int, b, rho, bm=bm, bn=bn, bk=bk)
+
+
+def _fwd(x, w_int, b, rho, bm, bn, bk):
+    y = _pvq_matmul_impl(x, w_int, b, rho, bm=bm, bn=bn, bk=bk)
+    return y, (x, w_int, b, rho)
+
+
+def _bwd(bm, bn, bk, res, g):
+    # Hand-written VJP: pallas_call with accumulating grids is not
+    # reverse-differentiable in this jax version, and training needs the
+    # gradient path when the kernel backs L2 dense layers. Integer ŵ is a
+    # frozen constant by construction → float0 cotangent.
+    import numpy as _np
+
+    x, w_int, b, rho = res
+    wf = w_int.astype(jnp.float32)
+    dx = (g @ wf) * rho
+    if jnp.issubdtype(w_int.dtype, jnp.floating):
+        dw = (rho * (g.T @ x)).astype(w_int.dtype)
+    else:
+        dw = _np.zeros(w_int.shape, dtype=jax.dtypes.float0)
+    db = jnp.sum(g, axis=0)
+    drho = jnp.sum(g * (x @ wf.T)).astype(jnp.float32)
+    return dx, dw, db, drho
+
+
+_pvq_matmul_vjp.defvjp(_fwd, _bwd)
+
+
+def pvq_matmul(x, w_int, b, rho, *, bm: int = DEF_BM, bn: int = DEF_BN, bk: int = DEF_BK):
+    """y = (x @ ŵᵀ)·ρ + b with ŵ in a compact integer dtype.
+
+    x: [B, N] f32; w_int: [M, N] int8/int32 (integer-valued) or f32;
+    b: [M] f32; rho: scalar. Shapes need not be tile-aligned — inputs are
+    zero-padded to the tile grid (zero rows/cols contribute nothing).
+    Differentiable via a hand-written VJP (w gradient defined only for
+    float weight dtypes; integer ŵ is a frozen constant by construction).
+    """
+    rho = jnp.asarray(rho, dtype=jnp.float32)
+    return _pvq_matmul_vjp(x, w_int, b, rho, bm, bn, bk)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, w_dtype_bytes: int = 1) -> int:
+    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf):
+    x tile (f32) + ŵ tile (int8) + out tile (f32) + bias."""
+    return bm * bk * 4 + bn * bk * w_dtype_bytes + bm * bn * 4 + bn * 4
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of 128×128 MXU lanes a tile shape keeps busy."""
+    return min(bm / 128.0, 1.0) * min(bn / 128.0, 1.0)

@@ -1,0 +1,62 @@
+"""Pallas kernel: batched pyramid projection (PVQ encoding, data-parallel
+half).
+
+Row-wise over a [B, N] block: t = K·|v|/‖v‖₁, y = ⌊t + ½⌋. This is the
+O(N) part of the author's O(NK) CUDA encoder (§VII) re-thought for TPU:
+rows are independent lanes, the reduction is a VMEM-resident row sum.
+The ±pulse correction (expected O(√N) fixups per row) stays on the host
+(or in rust) — it is sequential and negligible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_ROWS = 8  # rows per grid step
+
+
+def _kernel(v_ref, k_ref, y_ref, s_ref):
+    v = v_ref[...]
+    av = jnp.abs(v)
+    l1 = jnp.sum(av, axis=-1, keepdims=True)
+    k = k_ref[0].astype(jnp.float32)
+    t = jnp.where(l1 > 0, k * av / l1, 0.0)
+    y = jnp.floor(t + 0.5)
+    y_ref[...] = y
+    s_ref[...] = jnp.sum(y, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def pvq_project(v, k, *, rows: int = DEF_ROWS):
+    """Project each row of v [B, N] onto P(N, k) magnitudes (pre-correction).
+
+    Returns (y [B, N] f32 magnitudes, sums [B] i32). The full vector on
+    the pyramid is sign(v)·y after the host-side pulse correction.
+    """
+    B, N = v.shape
+    rows_ = min(rows, B)
+    Bp = -(-B // rows_) * rows_
+    vp = jnp.pad(v.astype(jnp.float32), ((0, Bp - B), (0, 0)))
+    k_arr = jnp.asarray([k], dtype=jnp.int32)
+    y, s = pl.pallas_call(
+        _kernel,
+        grid=(Bp // rows_,),
+        in_specs=[
+            pl.BlockSpec((rows_, N), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_, N), lambda i: (i, 0)),
+            pl.BlockSpec((rows_,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        interpret=True,
+    )(vp, k_arr)
+    return y[:B], s[:B]

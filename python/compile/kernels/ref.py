@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest + hypothesis sweep shapes
+and dtypes and require the kernels to match these to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pvq_matmul_ref(x, w_int, b, rho):
+    """y = (x @ ŵᵀ)·ρ + b.
+
+    x: [B, N] f32 activations
+    w_int: [M, N] integer-valued PVQ weights (stored int8/int32/f32)
+    b: [M] f32 bias (already ρ-scaled by the quantizer)
+    rho: scalar gain
+    """
+    return jnp.dot(x, w_int.astype(jnp.float32).T) * rho + b[None, :]
+
+
+def pvq_project_ref(v, k):
+    """Row-wise pyramid prescale: t = K·|v| / ‖v‖₁, y = ⌊t + ½⌋.
+
+    Returns (y_magnitudes f32 [B, N], sum_y i32 [B]) — the data-parallel
+    half of PVQ encoding; the ±1-pulse correction is a short host-side
+    loop over the O(√N) residual (see aot.py / rust encode_fast).
+    Zero rows project to zero.
+    """
+    av = jnp.abs(v)
+    l1 = jnp.sum(av, axis=-1, keepdims=True)
+    t = jnp.where(l1 > 0, k * av / l1, 0.0)
+    y = jnp.floor(t + 0.5)
+    return y, jnp.sum(y, axis=-1).astype(jnp.int32)

@@ -1,0 +1,257 @@
+"""L2: the paper's nets A–D in pure jax (Tables 1–4).
+
+* A — MNIST MLP 784-512-512-10, ReLU
+* B — CIFAR CNN conv32,32 / pool / conv64,64 / pool / fc512 / fc10, ReLU
+* C — A with bsign activations + straight-through estimator (§VII, eq. 17/18)
+* D — B with bsign + STE
+
+Dense layers can route through the L1 Pallas kernel (``use_pallas=True``)
+so the kernel lowers into the same HLO the rust runtime executes.
+
+Input convention: raw u8 pixel values as f32 (0..255) — matching the
+rust engines and the paper's integer-input nets. The 1/255 normalization
+used during training is *folded into the first layer's weights* at export
+(``fold_input_scale``), keeping train-time conditioning and inference-time
+raw-pixel semantics exactly consistent.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pvq_matmul import pvq_matmul
+
+
+# ---------------------------------------------------------------- bsign/STE
+@jax.custom_vjp
+def bsign(x):
+    """eq. 17: +1 for x ≥ 0, −1 otherwise."""
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def _bsign_fwd(x):
+    return bsign(x), None
+
+
+def _bsign_bwd(_, g):
+    # eq. 18 (Hinton's straight-through estimator): d/dx bsign(x) := 1
+    return (g,)
+
+
+bsign.defvjp(_bsign_fwd, _bsign_bwd)
+
+
+def _act(x, kind: str):
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "bsign":
+        return bsign(x)
+    if kind == "none":
+        return x
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- params
+def init_mlp(key, sizes=(784, 512, 512, 10)):
+    """Net A/C parameters: list of dense {'w': [out,in], 'b': [out]}."""
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k1 = jax.random.split(key)
+        fan_in = sizes[i]
+        w = jax.random.normal(k1, (sizes[i + 1], sizes[i])) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((sizes[i + 1],))})
+    return params
+
+
+def init_cnn(key):
+    """Net B/D parameters. Convs are HWIO; dense rows are out-major."""
+    params = []
+    shapes = [
+        ("conv", (3, 3, 3, 32)),
+        ("conv", (3, 3, 32, 32)),
+        ("conv", (3, 3, 32, 64)),
+        ("conv", (3, 3, 64, 64)),
+        ("dense", (512, 4096)),
+        ("dense", (10, 512)),
+    ]
+    for kind, shp in shapes:
+        key, k1 = jax.random.split(key)
+        if kind == "conv":
+            fan_in = shp[0] * shp[1] * shp[2]
+            w = jax.random.normal(k1, shp) * jnp.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((shp[3],))})
+        else:
+            fan_in = shp[1]
+            w = jax.random.normal(k1, shp) * jnp.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((shp[0],))})
+    return params
+
+
+# ---------------------------------------------------------------- forward
+def dense_apply(p, x, use_pallas: bool):
+    if use_pallas:
+        return pvq_matmul(x, p["w"], p["b"], 1.0)
+    return x @ p["w"].T + p["b"][None, :]
+
+
+def _dropout(h, rate, key):
+    if key is None or rate <= 0.0:
+        return h
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, h.shape)
+    return jnp.where(mask, h / keep, 0.0)
+
+
+def mlp_forward(params, x, act: str = "relu", use_pallas: bool = False, dropout_key=None):
+    """Net A/C forward. x: [B, 784] raw-pixel f32. Returns logits [B, 10].
+
+    `dropout_key` enables the paper's Table-1 dropout (0.2 after each
+    hidden layer) during training; inference leaves it None.
+    """
+    h = x
+    for i, p in enumerate(params[:-1]):
+        h = _act(dense_apply(p, h, use_pallas), act)
+        if dropout_key is not None:
+            h = _dropout(h, 0.2, jax.random.fold_in(dropout_key, i))
+    return dense_apply(params[-1], h, use_pallas)
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"][None, None, None, :]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params, x, act: str = "relu", use_pallas: bool = False, dropout_key=None):
+    """Net B/D forward. x: [B, 32, 32, 3] raw-pixel f32 → logits [B, 10].
+
+    `dropout_key` enables Table-2 dropout (0.25 / 0.25 / 0.5).
+    """
+    h = _act(_conv(params[0], x), act)
+    h = _act(_conv(params[1], h), act)
+    h = _pool(h)
+    if dropout_key is not None:
+        h = _dropout(h, 0.25, jax.random.fold_in(dropout_key, 0))
+    h = _act(_conv(params[2], h), act)
+    h = _act(_conv(params[3], h), act)
+    h = _pool(h)
+    if dropout_key is not None:
+        h = _dropout(h, 0.25, jax.random.fold_in(dropout_key, 1))
+    h = h.reshape(h.shape[0], -1)  # [B, 4096] (HWC order = rust Flatten)
+    h = _act(dense_apply(params[4], h, use_pallas), act)
+    if dropout_key is not None:
+        h = _dropout(h, 0.5, jax.random.fold_in(dropout_key, 2))
+    return dense_apply(params[5], h, use_pallas)
+
+
+def fold_input_scale(params, scale: float):
+    """Fold a 1/scale input normalization into the first layer so the
+    exported model consumes raw pixels: W₀ ← W₀/scale (bias unchanged)."""
+    out = [dict(p) for p in params]
+    out[0] = {"w": out[0]["w"] / scale, "b": out[0]["b"]}
+    return out
+
+
+# ---------------------------------------------------------------- training
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("forward_name", "act", "use_dropout"))
+def _loss_and_grad(params, x, y, key, forward_name: str, act: str, use_dropout: bool):
+    fwd = {"mlp": mlp_forward, "cnn": cnn_forward}[forward_name]
+
+    def loss_fn(p):
+        dk = key if use_dropout else None
+        return cross_entropy(fwd(p, x, act=act, dropout_key=dk), y)
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+@jax.jit
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=1e-4):
+    """AdamW: decoupled weight decay — §IV of the paper notes L1/L2
+    regularization sparsifies weights and helps PVQ encoding."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(
+    params,
+    images: Any,
+    labels: Any,
+    forward_name: str,
+    act: str,
+    steps: int,
+    batch: int = 64,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 50,
+):
+    """Minibatch Adam on normalized images (x/255). Returns trained params
+    (still in normalized-input convention — fold before export)."""
+    import numpy as np
+
+    x_all = np.asarray(images, dtype=np.float32).reshape(len(images), *images.shape[1:]) / 255.0
+    if forward_name == "mlp":
+        x_all = x_all.reshape(len(x_all), -1)
+    y_all = np.asarray(labels, dtype=np.int32)
+    rng = np.random.RandomState(seed)
+    state = adam_init(params)
+    history = []
+    use_dropout = act == "relu"  # paper: dropout for A/B; none for C/D
+    for s in range(steps):
+        idx = rng.randint(0, len(x_all), size=batch)
+        key = jax.random.PRNGKey(seed * 100003 + s)
+        loss, grads = _loss_and_grad(
+            params, jnp.asarray(x_all[idx]), jnp.asarray(y_all[idx]), key, forward_name, act, use_dropout
+        )
+        params, state = adam_update(params, grads, state, lr=lr)
+        if s % log_every == 0 or s == steps - 1:
+            history.append((s, float(loss)))
+            print(f"  step {s:5d} loss {float(loss):.4f}")
+    return params, history
+
+
+def evaluate(params, images, labels, forward_name: str, act: str, batch: int = 256) -> float:
+    """Accuracy with normalized inputs (training convention)."""
+    import numpy as np
+
+    x_all = np.asarray(images, dtype=np.float32) / 255.0
+    if forward_name == "mlp":
+        x_all = x_all.reshape(len(x_all), -1)
+    y_all = np.asarray(labels, dtype=np.int64)
+    fwd = {"mlp": mlp_forward, "cnn": cnn_forward}[forward_name]
+    correct = 0
+    for i in range(0, len(x_all), batch):
+        logits = fwd(params, jnp.asarray(x_all[i : i + batch]), act=act)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == jnp.asarray(y_all[i : i + batch])))
+    return correct / len(x_all)

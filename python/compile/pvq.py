@@ -1,0 +1,127 @@
+"""Pyramid Vector Quantization — python reference encoder.
+
+Mirrors ``rust/src/pvq/encode.rs::encode_fast`` operation-for-operation so
+the two implementations can be golden-tested against each other:
+
+* sequential (non-pairwise) f64 accumulation of the L1 norm
+* targets t_i = K * |v_i| / l1
+* magnitudes y_i = floor(t_i + 0.5)
+* pulse-sum correction by largest/smallest rounding error, ties on index
+
+This is the build-time encoder used by ``aot.py`` to produce the
+PVQ-quantized HLO variants; the request path always uses the rust encoder.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+
+@dataclass
+class PvqVector:
+    """Integer pyramid point plus gain (product PVQ, eq. 2 of the paper)."""
+
+    k: int
+    components: list[int]
+    rho: float
+
+    def l1(self) -> int:
+        return sum(abs(c) for c in self.components)
+
+    def is_valid(self) -> bool:
+        return self.l1() == self.k
+
+    def decode(self) -> list[float]:
+        return [self.rho * c for c in self.components]
+
+
+def encode_fast(v: Sequence[float], k: int, rho_mode: str = "norm") -> PvqVector:
+    """Scale-round-correct PVQ encoder (see module docstring).
+
+    rho_mode: "norm" (paper, r/||ŷ||₂) or "lsq" (least-squares gain).
+    """
+    n = len(v)
+    l1 = 0.0
+    for x in v:
+        l1 += abs(x)
+    if l1 == 0.0 or k == 0:
+        return PvqVector(0, [0] * n, 0.0)
+
+    y = [0] * n
+    err = [0.0] * n
+    total = 0
+    for i, x in enumerate(v):
+        t = k * abs(x) / l1
+        r = math.floor(t + 0.5)
+        y[i] = int(r)
+        err[i] = r - t
+        total += int(r)
+
+    if total != k:
+        if total > k:
+            order = sorted(range(n), key=lambda i: (-err[i], i))
+            excess = total - k
+            idx = 0
+            while excess > 0:
+                i = order[idx % n]
+                if y[i] > 0:
+                    y[i] -= 1
+                    err[i] -= 1.0
+                    excess -= 1
+                idx += 1
+                if idx % n == 0:
+                    order = sorted(range(n), key=lambda i: (-err[i], i))
+        else:
+            order = sorted(range(n), key=lambda i: (err[i], i))
+            deficit = k - total
+            idx = 0
+            while deficit > 0:
+                i = order[idx % n]
+                y[i] += 1
+                err[i] += 1.0
+                deficit -= 1
+                idx += 1
+                if idx % n == 0:
+                    order = sorted(range(n), key=lambda i: (err[i], i))
+
+    comps = [-m if x < 0.0 else m for m, x in zip(y, v)]
+    energy = float(sum(c * c for c in comps))
+    if energy == 0.0:
+        rho = 0.0
+    elif rho_mode == "norm":
+        r2 = 0.0
+        for x in v:
+            r2 += x * x
+        rho = math.sqrt(r2) / math.sqrt(energy)
+    elif rho_mode == "lsq":
+        corr = 0.0
+        for x, c in zip(v, comps):
+            corr += x * c
+        rho = max(corr / energy, 0.0)
+    else:
+        raise ValueError(f"unknown rho_mode {rho_mode}")
+    assert sum(abs(c) for c in comps) == k, "pyramid invariant violated"
+    return PvqVector(k, comps, rho)
+
+
+def quantize_layer_weights(w_flat, b, ratio: float, input_scale: float = 1.0):
+    """The paper's §VII per-layer procedure (mirrors rust quant::apply):
+
+    flatten weights ++ (biases / input_scale), PVQ-encode at
+    K = max(1, round(N / ratio)), return (w_q, b_q, components, rho, k)
+    where w_q/b_q are the float-equivalent substituted parameters.
+    """
+    import numpy as np
+
+    w_flat = np.asarray(w_flat, dtype=np.float64).ravel()
+    b = np.asarray(b, dtype=np.float64).ravel()
+    flat = list(w_flat) + [x / input_scale for x in b]
+    n = len(flat)
+    k = max(1, int(round(n / ratio)))
+    q = encode_fast(flat, k)
+    comps = np.array(q.components, dtype=np.int32)
+    wq = (q.rho * comps[: len(w_flat)]).astype(np.float32)
+    bq = (q.rho * input_scale * comps[len(w_flat):]).astype(np.float32)
+    return wq, bq, comps, q.rho, k

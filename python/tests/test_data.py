@@ -1,0 +1,59 @@
+"""Dataset generator tests + container format checks."""
+
+import os
+import struct
+import tempfile
+
+import numpy as np
+
+from compile.data import save_dataset, synth_cifar, synth_mnist
+
+
+def test_mnist_shapes_determinism():
+    x, y = synth_mnist(40, seed=5)
+    assert x.shape == (40, 28, 28, 1) and x.dtype == np.uint8
+    assert y.shape == (40,) and set(np.unique(y)) <= set(range(10))
+    x2, _ = synth_mnist(40, seed=5)
+    np.testing.assert_array_equal(x, x2)
+    x3, _ = synth_mnist(40, seed=6)
+    assert not np.array_equal(x, x3)
+
+
+def test_cifar_shapes_and_class_signal():
+    x, y = synth_cifar(60, seed=7)
+    assert x.shape == (60, 32, 32, 3) and x.dtype == np.uint8
+    # class pairs deliberately SHARE palettes (color alone must not solve
+    # the task); the class signal is texture. Check palette groups differ
+    # across pairs while texture frequency separates within a pair.
+    means = np.stack([x[y == c].mean(axis=(0, 1, 2)) for c in range(10)])
+    # classes 0 and 2 use different palettes
+    assert np.linalg.norm(means[0] - means[2]) > 4.0
+    # classes 0 and 1 share a palette → color means are close…
+    assert np.linalg.norm(means[0] - means[1]) < 25.0  # gain jitter adds spread
+    # …and the texture carries real structure (not flat noise). The
+    # class-separability of the texture signal itself is asserted
+    # end-to-end by net B/D reaching far-above-chance accuracy in the
+    # rust integration suite (broadband noise masks simple spectral
+    # statistics here by design).
+    assert x.astype(np.float32).std() > 20.0
+
+
+def test_container_layout():
+    x, y = synth_mnist(7, seed=8)
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "d.bin")
+        save_dataset(p, x, y)
+        raw = open(p, "rb").read()
+        assert raw[:4] == b"PVQD"
+        n, h, w, c, ncls = struct.unpack("<5I", raw[4:24])
+        assert (n, h, w, c, ncls) == (7, 28, 28, 1, 10)
+        assert len(raw) == 24 + 7 * 28 * 28 + 7
+        # pixel payload matches
+        pix = np.frombuffer(raw[24 : 24 + 7 * 784], dtype=np.uint8).reshape(7, 28, 28, 1)
+        np.testing.assert_array_equal(pix, x)
+
+
+def test_glyphs_brightness():
+    x, _ = synth_mnist(20, seed=9)
+    for i in range(20):
+        assert (x[i] >= 150).sum() > 50, f"sample {i} lacks glyph signal"

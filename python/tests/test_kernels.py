@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes; tolerances are float32-tight. This is the CORE
+kernel correctness signal — the same kernels lower into the HLO the rust
+runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pvq_matmul import (
+    mxu_utilization_estimate,
+    pvq_matmul,
+    vmem_footprint_bytes,
+)
+from compile.kernels.pvq_project import pvq_project
+from compile.kernels.ref import pvq_matmul_ref, pvq_project_ref
+
+
+def _pvq_like_weights(rng, m, n):
+    """Integer weights with PVQ-ish statistics (mostly 0/±1)."""
+    probs = rng.uniform(size=(m, n))
+    w = np.zeros((m, n), dtype=np.int8)
+    w[probs > 0.6] = 1
+    w[probs > 0.8] = -1
+    w[probs > 0.95] = 2
+    w[probs > 0.98] = -3
+    return w
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 17),
+    m=st.integers(1, 40),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pvq_matmul_matches_ref(b, m, n, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.normal(0, 1, size=(b, n)).astype(np.float32)
+    w = _pvq_like_weights(rng, m, n)
+    bias = rng.normal(0, 0.1, size=(m,)).astype(np.float32)
+    rho = float(rng.uniform(0.01, 2.0))
+    got = pvq_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), rho)
+    want = pvq_matmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), rho)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32, jnp.float32])
+def test_pvq_matmul_weight_dtypes(dtype):
+    rng = np.random.RandomState(0)
+    x = rng.normal(size=(4, 30)).astype(np.float32)
+    w = _pvq_like_weights(rng, 8, 30).astype(np.asarray(jnp.zeros(1, dtype)).dtype)
+    bias = np.zeros(8, dtype=np.float32)
+    got = pvq_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), 0.5)
+    want = pvq_matmul_ref(jnp.asarray(x), jnp.asarray(w, dtype=jnp.float32), jnp.asarray(bias), 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_pvq_matmul_tile_aligned_and_tiny_tiles():
+    rng = np.random.RandomState(1)
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    w = _pvq_like_weights(rng, 16, 64)
+    bias = rng.normal(size=(16,)).astype(np.float32)
+    want = np.asarray(pvq_matmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), 1.3))
+    for bm, bn, bk in [(8, 16, 64), (4, 8, 16), (2, 2, 8)]:
+        got = np.asarray(
+            pvq_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), 1.3, bm=bm, bn=bn, bk=bk)
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_pvq_matmul_grad_flows():
+    """The kernel participates in jax autodiff (training-path usability)."""
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.normal(size=(3, 10)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 10)).astype(np.float32))
+    bias = jnp.zeros(5, dtype=jnp.float32)
+
+    def loss(xx):
+        return jnp.sum(pvq_matmul(xx, w, bias, 1.0) ** 2)
+
+    g = jax.grad(loss)(x)
+    ref = jax.grad(lambda xx: jnp.sum(pvq_matmul_ref(xx, w, bias, 1.0) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    n=st.integers(1, 100),
+    k=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pvq_project_matches_ref(b, n, k, seed):
+    rng = np.random.RandomState(seed)
+    v = rng.laplace(0, 1, size=(b, n)).astype(np.float32)
+    y, s = pvq_project(jnp.asarray(v), k)
+    yr, sr = pvq_project_ref(jnp.asarray(v), k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_pvq_project_zero_rows():
+    v = jnp.zeros((3, 16), dtype=jnp.float32)
+    y, s = pvq_project(v, 10)
+    assert np.all(np.asarray(y) == 0)
+    assert np.all(np.asarray(s) == 0)
+
+
+def test_pvq_project_sum_near_k():
+    """Pre-correction pulse sums land within O(√N) of K (the correction
+    the host performs is small — that is why it stays off the TPU)."""
+    rng = np.random.RandomState(3)
+    v = rng.laplace(0, 1, size=(16, 400)).astype(np.float32)
+    k = 100
+    _, s = pvq_project(jnp.asarray(v), k)
+    dev = np.abs(np.asarray(s) - k)
+    # each of the N components contributes < 1/2 rounding error; in
+    # practice the deviation is a small fraction of K
+    assert dev.max() <= 80, f"max |Σy−K| = {dev.max()}"
+
+
+def test_vmem_and_mxu_estimates():
+    # default tiles fit comfortably in 16 MiB VMEM and fill the MXU
+    assert vmem_footprint_bytes(128, 128, 512) < 16 << 20
+    assert mxu_utilization_estimate(128, 128, 512) == 1.0
+    assert mxu_utilization_estimate(64, 128, 512) == 0.5

@@ -1,0 +1,81 @@
+"""L2 model tests: shapes, STE gradients, training smoke, export identities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import models
+from compile.data import synth_cifar, synth_mnist
+
+
+def test_mlp_shapes():
+    params = models.init_mlp(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 784))
+    out = models.mlp_forward(params, x)
+    assert out.shape == (4, 10)
+
+
+def test_cnn_shapes_match_paper_table2():
+    params = models.init_cnn(jax.random.PRNGKey(0))
+    # paper Table 2 param counts per layer
+    counts = [int(np.prod(p["w"].shape)) + int(np.prod(p["b"].shape)) for p in params]
+    assert counts == [896, 9248, 18496, 36928, 2097664, 5130]
+    x = jnp.zeros((2, 32, 32, 3))
+    out = models.cnn_forward(params, x)
+    assert out.shape == (2, 10)
+
+
+def test_bsign_values_and_ste_grad():
+    x = jnp.asarray([-2.0, -0.0, 0.0, 3.5])
+    y = models.bsign(x)
+    np.testing.assert_array_equal(np.asarray(y), [-1.0, 1.0, 1.0, 1.0])
+    # STE: gradient passes through as identity (eq. 18)
+    g = jax.grad(lambda v: jnp.sum(models.bsign(v) * jnp.asarray([1.0, 2.0, 3.0, 4.0])))(x)
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 2.0, 3.0, 4.0])
+
+
+def test_bsign_mlp_forward_pm1_hidden():
+    params = models.init_mlp(jax.random.PRNGKey(1), sizes=(16, 8, 4))
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 16))
+    h = models._act(models.dense_apply(params[0], x, False), "bsign")
+    assert set(np.unique(np.asarray(h))) <= {-1.0, 1.0}
+
+
+def test_fold_input_scale_identity():
+    """model(x/255, params) == model(x, fold(params, 255)) exactly at f32."""
+    params = models.init_mlp(jax.random.PRNGKey(3), sizes=(12, 6, 4))
+    x = jnp.asarray(np.random.RandomState(0).randint(0, 256, size=(5, 12)).astype(np.float32))
+    a = models.mlp_forward(params, x / 255.0)
+    b = models.mlp_forward(models.fold_input_scale(params, 255.0), x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_training_reduces_loss_mlp():
+    imgs, labels = synth_mnist(600, seed=1)
+    params = models.init_mlp(jax.random.PRNGKey(4))
+    params, hist = models.train(params, imgs, labels, "mlp", "relu", steps=60, log_every=59)
+    assert hist[-1][1] < hist[0][1], f"loss did not drop: {hist}"
+    acc = models.evaluate(params, imgs, labels, "mlp", "relu")
+    assert acc > 0.3, f"train accuracy {acc}"
+
+
+def test_training_bsign_learns():
+    imgs, labels = synth_mnist(600, seed=2)
+    params = models.init_mlp(jax.random.PRNGKey(5))
+    params, hist = models.train(params, imgs, labels, "mlp", "bsign", steps=60, log_every=59)
+    assert hist[-1][1] < hist[0][1]
+
+
+def test_cnn_train_smoke():
+    imgs, labels = synth_cifar(200, seed=3)
+    params = models.init_cnn(jax.random.PRNGKey(6))
+    params, hist = models.train(params, imgs, labels, "cnn", "relu", steps=8, batch=16, log_every=7)
+    assert np.isfinite(hist[-1][1])
+
+
+def test_pallas_dense_path_matches_jnp():
+    params = models.init_mlp(jax.random.PRNGKey(7), sizes=(20, 12, 4))
+    x = jax.random.normal(jax.random.PRNGKey(8), (6, 20))
+    a = models.mlp_forward(params, x, use_pallas=False)
+    b = models.mlp_forward(params, x, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,88 @@
+"""PVQ encoder invariants (python reference implementation)."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.pvq import encode_fast, quantize_layer_weights
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    k=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_on_pyramid(n, k, seed):
+    rng = np.random.RandomState(seed)
+    v = [float(x) for x in rng.laplace(0, 1, size=n)]
+    q = encode_fast(v, k)
+    assert q.is_valid()
+    assert len(q.components) == n
+    # signs follow input
+    for x, c in zip(v, q.components):
+        if c != 0:
+            assert (x < 0) == (c < 0)
+
+
+def test_zero_vector_and_zero_k():
+    q = encode_fast([0.0, 0.0], 5)
+    assert q.rho == 0.0 and q.components == [0, 0]
+    q = encode_fast([1.0, -2.0], 0)
+    assert q.rho == 0.0
+
+
+def test_norm_rho_preserves_radius():
+    rng = np.random.RandomState(1)
+    v = [float(x) for x in rng.normal(size=32)]
+    q = encode_fast(v, 16)
+    rv = math.sqrt(sum(x * x for x in v))
+    rd = math.sqrt(sum(x * x for x in q.decode()))
+    assert abs(rv - rd) < 1e-9
+
+
+def test_error_monotone_in_k():
+    rng = np.random.RandomState(2)
+    v = [float(x) for x in rng.laplace(size=24)]
+    last = float("inf")
+    for k in (1, 2, 4, 8, 16, 32, 64, 128):
+        q = encode_fast(v, k, rho_mode="lsq")
+        mse = sum((a - b) ** 2 for a, b in zip(v, q.decode())) / len(v)
+        assert mse <= last + 1e-12
+        last = mse
+
+
+def test_sparsity_guarantee_at_ratio_5():
+    """§VI: N/K=5 ⇒ ≥ 4/5 zeros."""
+    rng = np.random.RandomState(3)
+    n = 5000
+    v = [float(x) for x in rng.laplace(size=n)]
+    q = encode_fast(v, n // 5)
+    zeros = sum(1 for c in q.components if c == 0)
+    assert zeros * 5 >= 4 * n - 5
+
+
+def test_quantize_layer_weights_roundtrip():
+    rng = np.random.RandomState(4)
+    w = rng.laplace(0, 0.2, size=(16, 32)).astype(np.float32)
+    b = rng.laplace(0, 0.05, size=16).astype(np.float32)
+    wq, bq, comps, rho, k = quantize_layer_weights(w, b, ratio=2.0)
+    n = w.size + b.size
+    assert k == max(1, round(n / 2.0))
+    assert abs(comps).sum() == k
+    assert wq.shape == (w.size,)
+    assert bq.shape == (16,)
+    # float-equivalent weights = rho * integer components
+    np.testing.assert_allclose(wq, rho * comps[: w.size], rtol=1e-6)
+
+
+def test_bias_input_scale():
+    """With input_scale s, the encoded vector sees b/s but the substituted
+    bias is ρ·s·b̂ — consistency identity."""
+    rng = np.random.RandomState(5)
+    w = rng.laplace(0, 0.2, size=(8, 8)).astype(np.float32)
+    b = rng.laplace(0, 0.1, size=8).astype(np.float32)
+    s = 0.37
+    wq, bq, comps, rho, k = quantize_layer_weights(w, b, ratio=1.0, input_scale=s)
+    np.testing.assert_allclose(bq, rho * s * comps[w.size:], rtol=1e-6)

@@ -1,0 +1,151 @@
+//! Bit-level I/O for the entropy coders (§VI of the paper).
+//!
+//! MSB-first bit order (the convention of the video-codec bitstreams the
+//! paper points at — JPEG/H.264 exp-Golomb is MSB-first).
+
+/// MSB-first bit writer over a growable byte buffer.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bits already used in the trailing partial byte (0..8)
+    bit_pos: u8,
+}
+
+impl BitWriter {
+    /// Fresh empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a single bit.
+    pub fn put_bit(&mut self, bit: bool) {
+        if self.bit_pos == 0 {
+            self.buf.push(0);
+        }
+        if bit {
+            let last = self.buf.last_mut().unwrap();
+            *last |= 1 << (7 - self.bit_pos);
+        }
+        self.bit_pos = (self.bit_pos + 1) % 8;
+    }
+
+    /// Append the low `n` bits of `v`, MSB first. n ≤ 64.
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        if self.bit_pos == 0 {
+            self.buf.len() as u64 * 8
+        } else {
+            (self.buf.len() as u64 - 1) * 8 + self.bit_pos as u64
+        }
+    }
+
+    /// Finish and return the byte buffer (zero-padded to a byte boundary).
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64, // absolute bit position
+}
+
+impl<'a> BitReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Next bit; None at end of buffer.
+    pub fn get_bit(&mut self) -> Option<bool> {
+        let byte = (self.pos / 8) as usize;
+        if byte >= self.buf.len() {
+            return None;
+        }
+        let bit = (self.buf[byte] >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Next `n` bits as an integer (MSB first); None if fewer remain.
+    pub fn get_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit()? as u64;
+        }
+        Some(v)
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> u64 {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.put_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 2);
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.get_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn multibit_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut w = BitWriter::new();
+        let mut expected = Vec::new();
+        for _ in 0..500 {
+            let n = 1 + (rng.next_u64() % 33) as u32;
+            let v = rng.next_u64() & ((1u64 << n) - 1).max(1);
+            let v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+            w.put_bits(v, n);
+            expected.push((v, n));
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for (v, n) in expected {
+            assert_eq!(r.get_bits(n), Some(v), "width {n}");
+        }
+    }
+
+    #[test]
+    fn eof_detection() {
+        let bytes = [0xABu8];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.get_bits(8).is_some());
+        assert_eq!(r.get_bit(), None);
+        assert_eq!(r.get_bits(4), None);
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101, 3);
+        let bytes = w.finish();
+        assert_eq!(bytes[0], 0b1010_0000);
+    }
+}

@@ -1,0 +1,184 @@
+//! Exponential-Golomb codes (§VI of the paper).
+//!
+//! Order-0 exp-Golomb, H.264-style: value m ≥ 0 is coded as
+//! `⌊log₂(m+1)⌋` zeros, a one, then the low bits of m+1 —
+//! 1 bit for 0, 3 bits for 1–2, 5 bits for 3–6, 7 bits for 7–14, …
+//!
+//! Signed values use the zig-zag map 0,+1,−1,+2,−2,… → 0,1,2,3,4,…, which
+//! reproduces the paper's §VI accounting exactly: 1 bit for 0, 3 bits for
+//! ±1, 5 bits for ±2..3, 7 bits for ±4..7 (the paper's FC0-of-net-A
+//! example: 0.8119·1 + 0.1771·3 + 0.011·5 + 0.000052·7 ≈ 1.4 bits/weight).
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Zig-zag, H.264 se(v) order: 0,+1,−1,+2,−2,… → 0,1,2,3,4,…
+/// (codeNum = 2|v| − [v > 0]).
+pub fn zigzag(v: i64) -> u64 {
+    if v > 0 {
+        (2 * v - 1) as u64
+    } else {
+        (-2 * v) as u64
+    }
+}
+
+/// Inverse zig-zag (H.264 order).
+pub fn unzigzag(u: u64) -> i64 {
+    if u & 1 == 1 {
+        ((u + 1) / 2) as i64
+    } else {
+        -((u / 2) as i64)
+    }
+}
+
+/// Code length in bits of ue(m).
+pub fn ue_len(m: u64) -> u32 {
+    2 * (64 - (m + 1).leading_zeros() - 1) + 1
+}
+
+/// Code length in bits of the signed code se(v).
+pub fn se_len(v: i64) -> u32 {
+    ue_len(zigzag(v))
+}
+
+/// Write unsigned exp-Golomb ue(m).
+pub fn write_ue(w: &mut BitWriter, m: u64) {
+    let x = m + 1;
+    let nbits = 64 - x.leading_zeros(); // ⌊log₂ x⌋ + 1
+    w.put_bits(0, nbits - 1); // leading zeros
+    w.put_bits(x, nbits); // 1-prefixed payload
+}
+
+/// Read ue(m); None on truncated stream.
+pub fn read_ue(r: &mut BitReader) -> Option<u64> {
+    let mut zeros = 0u32;
+    loop {
+        match r.get_bit()? {
+            false => zeros += 1,
+            true => break,
+        }
+        if zeros > 63 {
+            return None; // corrupt stream guard
+        }
+    }
+    let rest = r.get_bits(zeros)?;
+    Some(((1u64 << zeros) | rest) - 1)
+}
+
+/// Write signed exp-Golomb se(v) (zig-zag + ue).
+pub fn write_se(w: &mut BitWriter, v: i64) {
+    write_ue(w, zigzag(v));
+}
+
+/// Read se(v).
+pub fn read_se(r: &mut BitReader) -> Option<i64> {
+    read_ue(r).map(unzigzag)
+}
+
+/// Encode a slice of signed values (e.g. PVQ weight components) as a
+/// contiguous se() stream; returns (bytes, exact bit length).
+pub fn encode_slice(values: &[i32]) -> (Vec<u8>, u64) {
+    let mut w = BitWriter::new();
+    for &v in values {
+        write_se(&mut w, v as i64);
+    }
+    let bits = w.bit_len();
+    (w.finish(), bits)
+}
+
+/// Decode `n` signed values from a se() stream.
+pub fn decode_slice(bytes: &[u8], n: usize) -> Option<Vec<i32>> {
+    let mut r = BitReader::new(bytes);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(read_se(&mut r)? as i32);
+    }
+    Some(out)
+}
+
+/// Exact bits/weight of se() over a slice without materializing the stream.
+pub fn bits_per_weight(values: &[i32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let total: u64 = values.iter().map(|&v| se_len(v as i64) as u64).sum();
+    total as f64 / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn zigzag_bijective() {
+        for v in -1000i64..=1000 {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(1), 1);
+        assert_eq!(zigzag(-1), 2);
+        assert_eq!(zigzag(2), 3);
+        assert_eq!(zigzag(-2), 4);
+    }
+
+    #[test]
+    fn paper_code_lengths() {
+        // §VI: 1 bit for 0, 3 bits for ±1, 5 bits for ±2..3, 7 for ±4..7
+        assert_eq!(se_len(0), 1);
+        assert_eq!(se_len(1), 3);
+        assert_eq!(se_len(-1), 3);
+        assert_eq!(se_len(2), 5);
+        assert_eq!(se_len(-3), 5);
+        assert_eq!(se_len(4), 7);
+        assert_eq!(se_len(-7), 7);
+        assert_eq!(se_len(8), 9);
+    }
+
+    #[test]
+    fn paper_fc0_average() {
+        // Table 5 FC0 frequencies → ≈1.4 bits/weight (paper §VI example).
+        let avg: f64 = 0.8119 * 1.0 + 0.1771 * 3.0 + 0.011 * 5.0 + 0.000052 * 7.0;
+        assert!((avg - 1.4).abs() < 0.02, "avg {avg}");
+    }
+
+    #[test]
+    fn ue_roundtrip_exhaustive_small() {
+        for m in 0u64..5000 {
+            let mut w = BitWriter::new();
+            write_ue(&mut w, m);
+            assert_eq!(w.bit_len(), ue_len(m) as u64);
+            let b = w.finish();
+            let mut r = BitReader::new(&b);
+            assert_eq!(read_ue(&mut r), Some(m));
+        }
+    }
+
+    #[test]
+    fn se_roundtrip_random() {
+        let mut rng = Rng::new(42);
+        let vals: Vec<i32> = (0..2000)
+            .map(|_| (rng.next_laplacian() * 3.0).round() as i32)
+            .collect();
+        let (bytes, bits) = encode_slice(&vals);
+        assert!(bits <= bytes.len() as u64 * 8);
+        let back = decode_slice(&bytes, vals.len()).unwrap();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn truncated_stream_returns_none() {
+        let mut w = BitWriter::new();
+        write_se(&mut w, 1000);
+        let mut b = w.finish();
+        b.truncate(1);
+        let mut r = BitReader::new(&b);
+        assert_eq!(read_se(&mut r), None);
+    }
+
+    #[test]
+    fn bits_per_weight_matches_stream() {
+        let vals = vec![0, 0, 1, -1, 3, 0, -2, 7, 0, 0];
+        let (_, bits) = encode_slice(&vals);
+        assert!((bits_per_weight(&vals) - bits as f64 / vals.len() as f64).abs() < 1e-12);
+    }
+}

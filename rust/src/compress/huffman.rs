@@ -1,0 +1,305 @@
+//! Canonical Huffman coding with an escape symbol (§VI of the paper).
+//!
+//! The paper's practical scheme: build a Huffman table for every value with
+//! |v| ≤ V plus one ESCAPE code; values beyond V are sent as ESCAPE
+//! followed by a raw fixed-width residual. This bounds the table size
+//! (2V+2 symbols) regardless of K.
+
+use super::bitio::{BitReader, BitWriter};
+use std::collections::BinaryHeap;
+
+/// Raw bits used for an escaped value.
+const ESCAPE_RAW_BITS: u32 = 32;
+
+/// A canonical Huffman codebook over the alphabet
+/// { −V, …, −1, 0, 1, …, V, ESCAPE } (symbol index = v+V; ESCAPE = 2V+1).
+#[derive(Clone, Debug)]
+pub struct HuffmanCodec {
+    /// Magnitude bound V of the direct alphabet.
+    pub v_max: i32,
+    /// Code length per symbol (canonical; 0 = symbol absent).
+    lengths: Vec<u32>,
+    /// Canonical codewords (MSB-aligned in the low bits).
+    codes: Vec<u64>,
+}
+
+impl HuffmanCodec {
+    fn escape_sym(v_max: i32) -> usize {
+        (2 * v_max + 1) as usize
+    }
+
+    /// Build from the value histogram of `values`, clamping the direct
+    /// alphabet at |v| ≤ `v_max`.
+    pub fn from_values(values: &[i32], v_max: i32) -> Self {
+        assert!(v_max >= 1);
+        let nsym = 2 * v_max as usize + 2;
+        let mut freq = vec![0u64; nsym];
+        for &v in values {
+            if v.abs() <= v_max {
+                freq[(v + v_max) as usize] += 1;
+            } else {
+                freq[Self::escape_sym(v_max)] += 1;
+            }
+        }
+        Self::from_freqs(v_max, &freq)
+    }
+
+    /// Build from explicit symbol frequencies (length 2V+2).
+    pub fn from_freqs(v_max: i32, freq: &[u64]) -> Self {
+        let nsym = 2 * v_max as usize + 2;
+        assert_eq!(freq.len(), nsym);
+
+        // Huffman code lengths via a min-heap of (weight, tie, node).
+        #[derive(PartialEq, Eq)]
+        struct Node {
+            w: u64,
+            tie: usize,
+            id: usize,
+        }
+        impl Ord for Node {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                // reversed for min-heap
+                o.w.cmp(&self.w).then(o.tie.cmp(&self.tie))
+            }
+        }
+        impl PartialOrd for Node {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+
+        let present: Vec<usize> = (0..nsym).filter(|&s| freq[s] > 0).collect();
+        let mut lengths = vec![0u32; nsym];
+        match present.len() {
+            0 => {}
+            1 => lengths[present[0]] = 1,
+            _ => {
+                // parent pointers over a forest of ≤ 2·nsym nodes
+                let mut parent: Vec<usize> = (0..nsym).collect();
+                let mut heap = BinaryHeap::new();
+                for &s in &present {
+                    heap.push(Node { w: freq[s], tie: s, id: s });
+                }
+                let mut next_id = nsym;
+                parent.resize(2 * nsym, 0);
+                while heap.len() > 1 {
+                    let a = heap.pop().unwrap();
+                    let b = heap.pop().unwrap();
+                    parent[a.id] = next_id;
+                    parent[b.id] = next_id;
+                    parent[next_id] = next_id;
+                    heap.push(Node { w: a.w + b.w, tie: a.tie.min(b.tie), id: next_id });
+                    next_id += 1;
+                }
+                let root = heap.pop().unwrap().id;
+                for &s in &present {
+                    let mut d = 0;
+                    let mut n = s;
+                    while n != root {
+                        n = parent[n];
+                        d += 1;
+                    }
+                    lengths[s] = d;
+                }
+            }
+        }
+
+        // Canonicalize: sort by (length, symbol), assign increasing codes.
+        let mut order: Vec<usize> =
+            (0..nsym).filter(|&s| lengths[s] > 0).collect();
+        order.sort_by_key(|&s| (lengths[s], s));
+        let mut codes = vec![0u64; nsym];
+        let mut code = 0u64;
+        let mut prev_len = 0u32;
+        for &s in &order {
+            code <<= lengths[s] - prev_len;
+            codes[s] = code;
+            code += 1;
+            prev_len = lengths[s];
+        }
+        HuffmanCodec { v_max, lengths, codes }
+    }
+
+    /// Bits to code value `v` under this table.
+    pub fn value_len(&self, v: i32) -> u32 {
+        if v.abs() <= self.v_max {
+            self.lengths[(v + self.v_max) as usize]
+        } else {
+            self.lengths[Self::escape_sym(self.v_max)] + ESCAPE_RAW_BITS
+        }
+    }
+
+    /// Encode a slice; returns (bytes, exact bits). Values absent from the
+    /// training histogram but within |v| ≤ V would have no code — callers
+    /// must build the codec from (at least) the data being coded.
+    pub fn encode_slice(&self, values: &[i32]) -> (Vec<u8>, u64) {
+        let mut w = BitWriter::new();
+        for &v in values {
+            if v.abs() <= self.v_max {
+                let s = (v + self.v_max) as usize;
+                assert!(self.lengths[s] > 0, "value {v} has no codeword");
+                w.put_bits(self.codes[s], self.lengths[s]);
+            } else {
+                let esc = Self::escape_sym(self.v_max);
+                assert!(self.lengths[esc] > 0, "escape value {v} but no escape code");
+                w.put_bits(self.codes[esc], self.lengths[esc]);
+                w.put_bits(v as u32 as u64, ESCAPE_RAW_BITS);
+            }
+        }
+        let bits = w.bit_len();
+        (w.finish(), bits)
+    }
+
+    /// Decode `n` values.
+    pub fn decode_slice(&self, bytes: &[u8], n: usize) -> Option<Vec<i32>> {
+        // Build a (length, code) → symbol lookup once per call; tables are
+        // tiny (≤ 2V+2 entries).
+        let nsym = self.lengths.len();
+        let mut by_len: Vec<Vec<(u64, usize)>> = vec![Vec::new(); 65];
+        for s in 0..nsym {
+            if self.lengths[s] > 0 {
+                by_len[self.lengths[s] as usize].push((self.codes[s], s));
+            }
+        }
+        let mut r = BitReader::new(bytes);
+        let mut out = Vec::with_capacity(n);
+        'outer: for _ in 0..n {
+            let mut code = 0u64;
+            for len in 1..=64u32 {
+                code = (code << 1) | r.get_bit()? as u64;
+                for &(c, s) in &by_len[len as usize] {
+                    if c == code {
+                        if s == Self::escape_sym(self.v_max) {
+                            let raw = r.get_bits(ESCAPE_RAW_BITS)?;
+                            out.push(raw as u32 as i32);
+                        } else {
+                            out.push(s as i32 - self.v_max);
+                        }
+                        continue 'outer;
+                    }
+                }
+            }
+            return None; // no codeword matched
+        }
+        Some(out)
+    }
+
+    /// Average bits/weight over a slice (exact).
+    pub fn bits_per_weight(&self, values: &[i32]) -> f64 {
+        if values.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = values.iter().map(|&v| self.value_len(v) as u64).sum();
+        total as f64 / values.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let vals = vec![0, 0, 0, 1, -1, 0, 2, 0, 0, -1, 0, 3];
+        let codec = HuffmanCodec::from_values(&vals, 3);
+        let (bytes, bits) = codec.encode_slice(&vals);
+        assert_eq!(codec.decode_slice(&bytes, vals.len()).unwrap(), vals);
+        assert!((codec.bits_per_weight(&vals) - bits as f64 / vals.len() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn escape_path() {
+        let vals = vec![0, 0, 100, -5000, 0, 1];
+        let codec = HuffmanCodec::from_values(&vals, 2);
+        let (bytes, _) = codec.encode_slice(&vals);
+        assert_eq!(codec.decode_slice(&bytes, vals.len()).unwrap(), vals);
+    }
+
+    #[test]
+    fn single_symbol_degenerate() {
+        let vals = vec![0i32; 50];
+        let codec = HuffmanCodec::from_values(&vals, 1);
+        let (bytes, bits) = codec.encode_slice(&vals);
+        assert_eq!(bits, 50); // 1 bit per symbol in the degenerate table
+        assert_eq!(codec.decode_slice(&bytes, 50).unwrap(), vals);
+    }
+
+    #[test]
+    fn near_entropy_on_skewed_source() {
+        // Huffman should be within 1 bit/symbol of the Shannon entropy.
+        let mut rng = Rng::new(5);
+        let vals: Vec<i32> = (0..20_000)
+            .map(|_| (rng.next_laplacian() * 0.8).round() as i32)
+            .collect();
+        let codec = HuffmanCodec::from_values(&vals, 7);
+        let bpw = codec.bits_per_weight(&vals);
+        let entropy = {
+            let mut hist = std::collections::HashMap::new();
+            for &v in &vals {
+                *hist.entry(v).or_insert(0u64) += 1;
+            }
+            let n = vals.len() as f64;
+            hist.values()
+                .map(|&c| {
+                    let p = c as f64 / n;
+                    -p * p.log2()
+                })
+                .sum::<f64>()
+        };
+        assert!(bpw >= entropy - 1e-9, "bpw {bpw} below entropy {entropy}?");
+        assert!(bpw <= entropy + 1.0, "bpw {bpw} vs entropy {entropy}");
+    }
+
+    #[test]
+    fn prefix_free() {
+        let mut rng = Rng::new(6);
+        let vals: Vec<i32> =
+            (0..5000).map(|_| (rng.next_laplacian() * 2.0).round() as i32).collect();
+        let codec = HuffmanCodec::from_values(&vals, 5);
+        // no codeword is a prefix of another
+        let codewords: Vec<(u64, u32)> = (0..codec.lengths.len())
+            .filter(|&s| codec.lengths[s] > 0)
+            .map(|s| (codec.codes[s], codec.lengths[s]))
+            .collect();
+        for (i, &(ca, la)) in codewords.iter().enumerate() {
+            for &(cb, lb) in codewords.iter().skip(i + 1) {
+                let l = la.min(lb);
+                assert_ne!(ca >> (la - l), cb >> (lb - l), "prefix violation");
+            }
+        }
+    }
+
+    #[test]
+    fn kraft_inequality() {
+        let mut rng = Rng::new(7);
+        let vals: Vec<i32> =
+            (0..3000).map(|_| (rng.next_gaussian() * 1.5).round() as i32).collect();
+        let codec = HuffmanCodec::from_values(&vals, 4);
+        let kraft: f64 = codec
+            .lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-12, "Kraft sum {kraft}");
+    }
+
+    #[test]
+    fn random_roundtrips() {
+        let mut rng = Rng::new(8);
+        for case in 0..30 {
+            let n = 10 + (rng.next_u64() % 2000) as usize;
+            let scale = 0.3 + rng.next_f64() * 4.0;
+            let vals: Vec<i32> =
+                (0..n).map(|_| (rng.next_laplacian() * scale).round() as i32).collect();
+            let codec = HuffmanCodec::from_values(&vals, 3);
+            let (bytes, _) = codec.encode_slice(&vals);
+            assert_eq!(
+                codec.decode_slice(&bytes, n).unwrap(),
+                vals,
+                "case {case} n {n}"
+            );
+        }
+    }
+}

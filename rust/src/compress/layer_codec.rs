@@ -1,0 +1,269 @@
+//! Whole-layer compressed container for PVQ-encoded weights.
+//!
+//! Binary layout (little-endian):
+//! ```text
+//! magic  "PVQL"                     4 bytes
+//! codec  u8   (0=ExpGolomb 1=Rle 2=Huffman 3=Raw)
+//! n      u32  component count
+//! k      u32  pulse budget
+//! rho    f64  gain
+//! extra  codec-specific header (Huffman: u8 v_max + (2v_max+2)×u32 lengths→freq table proxy)
+//! plen   u32  payload byte length
+//! payload
+//! ```
+//! For Huffman the symbol *frequencies* are stored (u32-clamped) so the
+//! decoder rebuilds the identical canonical codebook.
+
+use super::expgolomb;
+use super::huffman::HuffmanCodec;
+use super::rle;
+use crate::pvq::PvqVector;
+use anyhow::{bail, Context, Result};
+
+/// Entropy coder selector for a compressed layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Signed exp-Golomb per component.
+    ExpGolomb,
+    /// Zero run-length + exp-Golomb values (best for sparse FC layers).
+    Rle,
+    /// Canonical Huffman with escape, V=7.
+    Huffman,
+    /// Raw i32 components (debug/baseline).
+    Raw,
+}
+
+impl Codec {
+    fn id(self) -> u8 {
+        match self {
+            Codec::ExpGolomb => 0,
+            Codec::Rle => 1,
+            Codec::Huffman => 2,
+            Codec::Raw => 3,
+        }
+    }
+    fn from_id(id: u8) -> Result<Self> {
+        Ok(match id {
+            0 => Codec::ExpGolomb,
+            1 => Codec::Rle,
+            2 => Codec::Huffman,
+            3 => Codec::Raw,
+            _ => bail!("unknown codec id {id}"),
+        })
+    }
+}
+
+const HUFF_V_MAX: i32 = 7;
+
+/// Serialize a PVQ-encoded layer with the chosen codec.
+pub fn compress_layer(q: &PvqVector, codec: Codec) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"PVQL");
+    out.push(codec.id());
+    out.extend_from_slice(&(q.components.len() as u32).to_le_bytes());
+    out.extend_from_slice(&q.k.to_le_bytes());
+    out.extend_from_slice(&q.rho.to_le_bytes());
+
+    let payload: Vec<u8> = match codec {
+        Codec::ExpGolomb => expgolomb::encode_slice(&q.components).0,
+        Codec::Rle => rle::encode_slice(&q.components).0,
+        Codec::Huffman => {
+            let h = HuffmanCodec::from_values(&q.components, HUFF_V_MAX);
+            // store frequency table so decode rebuilds the same codebook
+            let nsym = 2 * HUFF_V_MAX as usize + 2;
+            let mut freq = vec![0u32; nsym];
+            for &v in &q.components {
+                if v.abs() <= HUFF_V_MAX {
+                    freq[(v + HUFF_V_MAX) as usize] += 1;
+                } else {
+                    freq[nsym - 1] += 1;
+                }
+            }
+            for f in &freq {
+                out.extend_from_slice(&f.to_le_bytes());
+            }
+            h.encode_slice(&q.components).0
+        }
+        Codec::Raw => {
+            let mut p = Vec::with_capacity(q.components.len() * 4);
+            for &v in &q.components {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            p
+        }
+    };
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Deserialize a layer produced by [`compress_layer`].
+pub fn decompress_layer(bytes: &[u8]) -> Result<PvqVector> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated layer container at offset {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+
+    if take(&mut pos, 4)? != b"PVQL" {
+        bail!("bad magic");
+    }
+    let codec = Codec::from_id(take(&mut pos, 1)?[0])?;
+    let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let k = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let rho = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+
+    let huff = if codec == Codec::Huffman {
+        let nsym = 2 * HUFF_V_MAX as usize + 2;
+        let mut freq = vec![0u64; nsym];
+        for f in freq.iter_mut() {
+            *f = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as u64;
+        }
+        Some(HuffmanCodec::from_freqs(HUFF_V_MAX, &freq))
+    } else {
+        None
+    };
+
+    let plen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let payload = take(&mut pos, plen)?;
+
+    let components: Vec<i32> = match codec {
+        Codec::ExpGolomb => {
+            expgolomb::decode_slice(payload, n).context("exp-golomb payload corrupt")?
+        }
+        Codec::Rle => rle::decode_slice(payload, n).context("rle payload corrupt")?,
+        Codec::Huffman => huff
+            .unwrap()
+            .decode_slice(payload, n)
+            .context("huffman payload corrupt")?,
+        Codec::Raw => {
+            if plen != n * 4 {
+                bail!("raw payload length mismatch");
+            }
+            payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        }
+    };
+    let q = PvqVector { k, components, rho };
+    if !q.is_valid() && k != 0 {
+        bail!("decoded layer violates pyramid invariant (Σ|ŷ|={} ≠ K={k})", q.l1());
+    }
+    Ok(q)
+}
+
+/// Compressed size in bits for each codec on this layer (exact), plus the
+/// Shannon entropy bound — the §VI comparison in one call.
+pub fn codec_survey(q: &PvqVector) -> Vec<(String, f64)> {
+    let n = q.components.len() as f64;
+    let h = HuffmanCodec::from_values(&q.components, HUFF_V_MAX);
+    vec![
+        ("exp-golomb".into(), expgolomb::bits_per_weight(&q.components)),
+        ("rle".into(), rle::bits_per_weight(&q.components)),
+        ("huffman(V=7)".into(), h.bits_per_weight(&q.components)),
+        (
+            "fischer-index".into(),
+            crate::pvq::np_bits_estimate(q.components.len() as u64, q.k as u64) / n,
+        ),
+        ("entropy-bound".into(), super::stats::entropy_bits(&q.components)),
+        ("raw-f32".into(), 32.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pvq::{encode_fast, RhoMode};
+    use crate::testkit::Rng;
+
+    fn sample_layer(seed: u64, n: usize, ratio: usize) -> PvqVector {
+        let mut rng = Rng::new(seed);
+        let v = rng.laplacian_vec(n, 0.7);
+        encode_fast(&v, (n / ratio).max(1) as u32, RhoMode::Norm)
+    }
+
+    #[test]
+    fn roundtrip_all_codecs() {
+        let q = sample_layer(1, 4000, 5);
+        for codec in [Codec::ExpGolomb, Codec::Rle, Codec::Huffman, Codec::Raw] {
+            let bytes = compress_layer(&q, codec);
+            let back = decompress_layer(&bytes).unwrap();
+            assert_eq!(back.components, q.components, "{codec:?}");
+            assert_eq!(back.k, q.k);
+            assert_eq!(back.rho, q.rho);
+        }
+    }
+
+    #[test]
+    fn compression_beats_raw() {
+        let q = sample_layer(2, 50_000, 5);
+        let raw = compress_layer(&q, Codec::Raw).len();
+        for codec in [Codec::ExpGolomb, Codec::Rle, Codec::Huffman] {
+            let c = compress_layer(&q, codec).len();
+            assert!(
+                (c as f64) < raw as f64 / 8.0,
+                "{codec:?}: {c} bytes vs raw {raw} — PVQ weights must compress ≥8×"
+            );
+        }
+    }
+
+    #[test]
+    fn codecs_beat_entropy_within_tolerance() {
+        let q = sample_layer(3, 30_000, 5);
+        let survey = codec_survey(&q);
+        let entropy = survey.iter().find(|(n, _)| n == "entropy-bound").unwrap().1;
+        for (name, bpw) in &survey {
+            if name == "entropy-bound" || name == "raw-f32" || name == "fischer-index" {
+                continue;
+            }
+            assert!(*bpw + 1e-9 >= entropy, "{name} {bpw} under entropy {entropy}");
+            assert!(*bpw <= entropy + 1.2, "{name} {bpw} way over entropy {entropy}");
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let q = sample_layer(4, 100, 2);
+        let mut bytes = compress_layer(&q, Codec::ExpGolomb);
+        bytes[0] = b'X';
+        assert!(decompress_layer(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let q = sample_layer(5, 100, 2);
+        let bytes = compress_layer(&q, Codec::Rle);
+        for cut in [3, 10, bytes.len() - 2] {
+            assert!(decompress_layer(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn invariant_violation_detected() {
+        let q = sample_layer(6, 64, 2);
+        let mut bytes = compress_layer(&q, Codec::Raw);
+        // flip one raw component to break Σ|ŷ| = K
+        let payload_start = bytes.len() - 64 * 4;
+        bytes[payload_start] = bytes[payload_start].wrapping_add(1);
+        assert!(decompress_layer(&bytes).is_err());
+    }
+
+    #[test]
+    fn paper_ratio_bits_per_weight() {
+        // §VI: ≈1.4 b/w at N/K=5 (exp-Golomb), RLE better
+        let q = sample_layer(7, 100_000, 5);
+        let eg = expgolomb::bits_per_weight(&q.components);
+        let rl = rle::bits_per_weight(&q.components);
+        assert!(eg < 1.8, "exp-golomb {eg}");
+        assert!(rl < eg);
+        // conv-style N/K=1 ⇒ ≈2.8 b/w ballpark (paper CONV1 example)
+        let qc = sample_layer(8, 40_000, 1);
+        let egc = expgolomb::bits_per_weight(&qc.components);
+        assert!(egc > 1.8 && egc < 3.6, "conv-ratio exp-golomb {egc}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Lossless compression of PVQ-encoded weights (§VI of the paper).
+//!
+//! * [`bitio`] — MSB-first bit reader/writer.
+//! * [`expgolomb`] — signed/unsigned exp-Golomb (the paper's 1/3/5/7-bit
+//!   accounting).
+//! * [`rle`] — zero-run-length coding for sparse (N/K ≥ 2) layers.
+//! * [`huffman`] — canonical Huffman with escape (the paper's bounded-table
+//!   scheme).
+//! * [`stats`] — Tables 5–8 bucketed distributions + entropy bounds.
+//! * [`layer_codec`] — self-describing compressed layer container and the
+//!   per-codec bits/weight survey.
+
+pub mod bitio;
+pub mod expgolomb;
+pub mod huffman;
+pub mod layer_codec;
+pub mod rle;
+pub mod stats;
+
+pub use huffman::HuffmanCodec;
+pub use layer_codec::{codec_survey, compress_layer, decompress_layer, Codec};
+pub use stats::{entropy_bits, Distribution};

@@ -1,0 +1,168 @@
+//! Zero-run-length coding (§VI of the paper).
+//!
+//! Tailored to PVQ-encoded fully connected layers: with N/K ≈ 5 at least
+//! 4/5 of the components are guaranteed zero (paper §VI), so coding
+//! (run-of-zeros, nonzero-value) pairs beats per-symbol exp-Golomb.
+//!
+//! Stream grammar: repeated [ue(run) se′(value)] where `run` is the number
+//! of zeros before the next nonzero and se′ codes the nonzero value with
+//! the zero slot removed (|v|−1 with sign), then a final ue(tail-run).
+
+use super::bitio::{BitReader, BitWriter};
+use super::expgolomb::{read_se, read_ue, se_len, ue_len, write_se, write_ue};
+
+/// Map a nonzero value to the gap-free signed domain: ±1→±1 slot 0, etc.
+/// v>0 → v−1 zig-zag side, v<0 → same magnitude negative side.
+fn pack_nonzero(v: i32) -> i64 {
+    debug_assert!(v != 0);
+    if v > 0 {
+        (v - 1) as i64
+    } else {
+        v as i64
+    }
+}
+
+fn unpack_nonzero(p: i64) -> i32 {
+    if p >= 0 {
+        (p + 1) as i32
+    } else {
+        p as i32
+    }
+}
+
+/// Encode a component slice with zero-RLE; returns (bytes, exact bits).
+pub fn encode_slice(values: &[i32]) -> (Vec<u8>, u64) {
+    let mut w = BitWriter::new();
+    let mut run = 0u64;
+    for &v in values {
+        if v == 0 {
+            run += 1;
+        } else {
+            write_ue(&mut w, run);
+            write_se(&mut w, pack_nonzero(v));
+            run = 0;
+        }
+    }
+    write_ue(&mut w, run); // tail run (possibly 0)
+    let bits = w.bit_len();
+    (w.finish(), bits)
+}
+
+/// Decode `n` components from a zero-RLE stream.
+pub fn decode_slice(bytes: &[u8], n: usize) -> Option<Vec<i32>> {
+    let mut r = BitReader::new(bytes);
+    let mut out: Vec<i32> = Vec::with_capacity(n);
+    while out.len() < n {
+        let run = read_ue(&mut r)? as usize;
+        if out.len() + run > n {
+            return None;
+        }
+        out.extend(std::iter::repeat(0).take(run));
+        if out.len() == n {
+            // the final ue was the tail run; done
+            return Some(out);
+        }
+        let v = read_se(&mut r)?;
+        out.push(unpack_nonzero(v));
+    }
+    // n nonzero-terminated: still need to consume the tail run marker
+    let _ = read_ue(&mut r)?;
+    Some(out)
+}
+
+/// Exact bits/weight of the RLE code without materializing the stream.
+pub fn bits_per_weight(values: &[i32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut bits = 0u64;
+    let mut run = 0u64;
+    for &v in values {
+        if v == 0 {
+            run += 1;
+        } else {
+            bits += ue_len(run) as u64 + se_len(pack_nonzero(v)) as u64;
+            run = 0;
+        }
+    }
+    bits += ue_len(run) as u64;
+    bits as f64 / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pvq::{encode, RhoMode};
+    use crate::testkit::Rng;
+
+    #[test]
+    fn roundtrip_basic() {
+        let vals = vec![0, 0, 0, 2, 0, -1, 1, 0, 0, 0, 0, -3, 0, 0];
+        let (bytes, _) = encode_slice(&vals);
+        assert_eq!(decode_slice(&bytes, vals.len()).unwrap(), vals);
+    }
+
+    #[test]
+    fn roundtrip_all_zero() {
+        let vals = vec![0i32; 100];
+        let (bytes, bits) = encode_slice(&vals);
+        assert_eq!(decode_slice(&bytes, 100).unwrap(), vals);
+        assert!(bits < 16, "100 zeros should cost a single ue: {bits} bits");
+    }
+
+    #[test]
+    fn roundtrip_no_zero() {
+        let vals = vec![1, -1, 2, -2, 5, -5];
+        let (bytes, _) = encode_slice(&vals);
+        assert_eq!(decode_slice(&bytes, vals.len()).unwrap(), vals);
+    }
+
+    #[test]
+    fn roundtrip_random_pvq_like() {
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let n = 50 + (rng.next_u64() % 500) as usize;
+            let v = rng.laplacian_vec(n, 1.0);
+            let q = crate::pvq::encode_fast(&v, (n / 5) as u32, RhoMode::Norm);
+            let (bytes, bits) = encode_slice(&q.components);
+            assert_eq!(decode_slice(&bytes, n).unwrap(), q.components);
+            assert!((bits_per_weight(&q.components) - bits as f64 / n as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rle_beats_expgolomb_on_sparse_layers() {
+        // §VI: "For fully connected layers … run length encoding is a good
+        // fit" — at N/K = 5 RLE should code under the ~1.4 b/w of se().
+        let mut rng = Rng::new(9);
+        let n = 20_000;
+        let v = rng.laplacian_vec(n, 1.0);
+        let q = encode(&v, (n / 5) as u32);
+        let eg = super::super::expgolomb::bits_per_weight(&q.components);
+        let rl = bits_per_weight(&q.components);
+        assert!(
+            rl < eg,
+            "RLE ({rl:.3} b/w) should beat exp-Golomb ({eg:.3} b/w) at N/K=5"
+        );
+        assert!(rl < 1.4, "RLE b/w {rl:.3} should be < 1.4 on N/K=5 Laplacian");
+    }
+
+    #[test]
+    fn guaranteed_zero_fraction() {
+        // paper §VI: N/K≈5 ⇒ ≥ 4/5 zeros, best case all nonzeros are ±1
+        let mut rng = Rng::new(10);
+        let n = 5000;
+        let v = rng.laplacian_vec(n, 1.0);
+        let q = encode(&v, (n / 5) as u32);
+        let zeros = q.components.iter().filter(|&&c| c == 0).count();
+        assert!(zeros * 5 >= 4 * n - 5, "zeros {zeros}/{n}");
+    }
+
+    #[test]
+    fn corrupt_stream_detected() {
+        let vals = vec![0, 5, 0, 0];
+        let (bytes, _) = encode_slice(&vals);
+        // ask for more symbols than encoded
+        assert!(decode_slice(&bytes, 400).is_none());
+    }
+}

@@ -1,0 +1,174 @@
+//! Weight-distribution statistics in the paper's Tables 5–8 format.
+//!
+//! The paper buckets PVQ-encoded weights as 0, ±1, ±2..3, ±4..7, Others
+//! and reports counts + percentages per layer; §VI derives bits/weight
+//! numbers from these. [`Distribution`] reproduces that bucketing plus the
+//! Shannon entropy lower bound the codecs are judged against.
+
+use std::collections::HashMap;
+
+/// Bucketed distribution of integer weight values (Tables 5–8 layout).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Distribution {
+    /// count of 0
+    pub zero: u64,
+    /// count of ±1
+    pub one: u64,
+    /// count of ±2..±3
+    pub two_three: u64,
+    /// count of ±4..±7
+    pub four_seven: u64,
+    /// count of anything larger
+    pub others: u64,
+}
+
+impl Distribution {
+    /// Bucket a slice of PVQ components.
+    pub fn from_values(values: &[i32]) -> Self {
+        let mut d = Distribution::default();
+        for &v in values {
+            match v.unsigned_abs() {
+                0 => d.zero += 1,
+                1 => d.one += 1,
+                2..=3 => d.two_three += 1,
+                4..=7 => d.four_seven += 1,
+                _ => d.others += 1,
+            }
+        }
+        d
+    }
+
+    /// Total count.
+    pub fn total(&self) -> u64 {
+        self.zero + self.one + self.two_three + self.four_seven + self.others
+    }
+
+    /// Percentages in table order [0, ±1, ±2..3, ±4..7, others].
+    pub fn percentages(&self) -> [f64; 5] {
+        let t = self.total().max(1) as f64;
+        [
+            100.0 * self.zero as f64 / t,
+            100.0 * self.one as f64 / t,
+            100.0 * self.two_three as f64 / t,
+            100.0 * self.four_seven as f64 / t,
+            100.0 * self.others as f64 / t,
+        ]
+    }
+
+    /// The paper's §VI bits/weight accounting from bucket frequencies
+    /// alone (signed exp-Golomb lengths 1/3/5/7, 9 for "others" —
+    /// a lower bound for the last bucket).
+    pub fn golomb_bits_estimate(&self) -> f64 {
+        let t = self.total().max(1) as f64;
+        (self.zero as f64 * 1.0
+            + self.one as f64 * 3.0
+            + self.two_three as f64 * 5.0
+            + self.four_seven as f64 * 7.0
+            + self.others as f64 * 9.0)
+            / t
+    }
+
+    /// One formatted table row: counts then percentages.
+    pub fn table_row(&self, label: &str) -> String {
+        let p = self.percentages();
+        format!(
+            "{:<8} {:>10} {:>10} {:>8} {:>8} {:>8}\n{:<8} {:>9.2}% {:>9.2}% {:>7.2}% {:>7.3}% {:>7.3}%",
+            label, self.zero, self.one, self.two_three, self.four_seven, self.others,
+            "", p[0], p[1], p[2], p[3], p[4]
+        )
+    }
+}
+
+/// Exact Shannon entropy (bits/symbol) of a value slice.
+pub fn entropy_bits(values: &[i32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut hist: HashMap<i32, u64> = HashMap::new();
+    for &v in values {
+        *hist.entry(v).or_insert(0) += 1;
+    }
+    let n = values.len() as f64;
+    hist.values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pvq::encode;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn bucketing() {
+        let vals = vec![0, 1, -1, 2, -3, 4, -7, 8, -100, 0];
+        let d = Distribution::from_values(&vals);
+        assert_eq!(d.zero, 2);
+        assert_eq!(d.one, 2);
+        assert_eq!(d.two_three, 2);
+        assert_eq!(d.four_seven, 2);
+        assert_eq!(d.others, 2);
+        assert_eq!(d.total(), 10);
+        let p = d.percentages();
+        assert!((p.iter().sum::<f64>() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_table5_fc0_shape() {
+        // Table 5 FC0 (N/K = 5): 81.19% zeros, 17.71% ±1, 1.1% ±2..3 —
+        // a Laplacian source at the same ratio must land in the same
+        // regime: ≳75% zeros, nonzeros dominated by ±1.
+        let mut rng = Rng::new(42);
+        let n = 100_000;
+        let v = rng.laplacian_vec(n, 1.0);
+        let q = encode(&v, (n / 5) as u32);
+        let d = Distribution::from_values(&q.components);
+        let p = d.percentages();
+        assert!(p[0] > 75.0, "zeros {:.1}%", p[0]);
+        assert!(p[1] > 10.0 && p[1] < 25.0, "±1 {:.1}%", p[1]);
+        assert!(p[2] < 5.0, "±2..3 {:.1}%", p[2]);
+        assert!(p[4] < 0.1, "others {:.3}%", p[4]);
+        // §VI example: exp-Golomb average ≈ 1.4 bits/weight at this ratio
+        let bpw = d.golomb_bits_estimate();
+        assert!(bpw > 1.0 && bpw < 1.8, "golomb estimate {bpw}");
+    }
+
+    #[test]
+    fn conv_ratio_distribution() {
+        // N/K = 1 (conv layers, Tables 6/8): ~1/3 zeros per §VIII
+        let mut rng = Rng::new(43);
+        let n = 40_000;
+        let v = rng.laplacian_vec(n, 1.0);
+        let q = encode(&v, n as u32);
+        let d = Distribution::from_values(&q.components);
+        let p = d.percentages();
+        assert!(p[0] > 20.0 && p[0] < 55.0, "zeros {:.1}%", p[0]);
+        assert!(p[1] > 25.0, "±1 {:.1}%", p[1]);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let vals = vec![0, 0, 0, 0, 1, 1, -1, 2];
+        let e = entropy_bits(&vals);
+        assert!(e > 0.0 && e < 2.0);
+        assert_eq!(entropy_bits(&[5, 5, 5]), 0.0);
+        assert_eq!(entropy_bits(&[]), 0.0);
+    }
+
+    #[test]
+    fn golomb_estimate_matches_exact_coder() {
+        let mut rng = Rng::new(44);
+        let n = 10_000;
+        let v = rng.laplacian_vec(n, 1.0);
+        let q = encode(&v, (n / 5) as u32);
+        let d = Distribution::from_values(&q.components);
+        let est = d.golomb_bits_estimate();
+        let exact = crate::compress::expgolomb::bits_per_weight(&q.components);
+        // estimate uses 9 bits for "others"; with no others they agree
+        assert!((est - exact).abs() < 0.05, "est {est} exact {exact}");
+    }
+}

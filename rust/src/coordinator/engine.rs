@@ -1,0 +1,150 @@
+//! Engine abstraction the coordinator dispatches batches to: the float
+//! reference engine, the integer PVQ engine, the bit-aware binary path,
+//! or an AOT-compiled XLA graph via PJRT.
+
+use crate::nn::csr_engine::CompiledQuantModel;
+use crate::nn::layers::Model;
+use crate::nn::pvq_engine::forward_int;
+use crate::nn::tensor::{argmax_i64, ITensor, Tensor};
+use crate::nn::QuantModel;
+use crate::runtime::HloModel;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A classification engine over u8-pixel samples.
+pub enum Engine {
+    /// Float reference engine (rust, f32).
+    Float(Arc<Model>),
+    /// Integer PVQ engine (rust, adds/subs only — §V), reference path.
+    PvqInt(Arc<QuantModel>),
+    /// CSR-compiled integer PVQ engine (the optimized hot path); the
+    /// second field is the sample shape for ITensor construction.
+    PvqCompiled(Arc<CompiledQuantModel>, Vec<usize>),
+    /// AOT-lowered XLA graph on PJRT (fixed batch; padded as needed).
+    Hlo(Arc<HloModel>),
+}
+
+impl Engine {
+    /// Human name for logs/metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Float(_) => "float",
+            Engine::PvqInt(_) => "pvq-int",
+            Engine::PvqCompiled(..) => "pvq-csr",
+            Engine::Hlo(_) => "hlo-pjrt",
+        }
+    }
+
+    /// Per-sample feature count the engine expects.
+    pub fn input_len(&self) -> usize {
+        match self {
+            Engine::Float(m) => m.spec.input_shape.iter().product(),
+            Engine::PvqInt(m) => m.spec.input_shape.iter().product(),
+            Engine::PvqCompiled(_, shape) => shape.iter().product(),
+            Engine::Hlo(m) => m.input_len,
+        }
+    }
+
+    /// Classify a batch of u8 samples (each `input_len` long).
+    pub fn classify_batch(&self, samples: &[&[u8]]) -> Result<Vec<usize>> {
+        match self {
+            Engine::Float(m) => {
+                let flat = m.spec.input_shape.len() == 1;
+                let shape: Vec<usize> = if flat {
+                    vec![self.input_len()]
+                } else {
+                    m.spec.input_shape.clone()
+                };
+                Ok(samples
+                    .iter()
+                    .map(|s| {
+                        let t = Tensor::from_vec(
+                            &shape,
+                            s.iter().map(|&b| b as f32).collect(),
+                        );
+                        crate::nn::classify(m, &t)
+                    })
+                    .collect())
+            }
+            Engine::PvqInt(m) => {
+                let flat = m.spec.input_shape.len() == 1;
+                let shape: Vec<usize> = if flat {
+                    vec![self.input_len()]
+                } else {
+                    m.spec.input_shape.clone()
+                };
+                samples
+                    .iter()
+                    .map(|s| {
+                        let t = ITensor::from_u8(&shape, s);
+                        Ok(argmax_i64(&forward_int(m, &t)?.logits))
+                    })
+                    .collect()
+            }
+            Engine::PvqCompiled(m, shape) => Ok(samples
+                .iter()
+                .map(|s| m.classify(&ITensor::from_u8(shape, s)))
+                .collect()),
+            Engine::Hlo(m) => {
+                // pad up to the lowered batch size, run in waves
+                let mut out = Vec::with_capacity(samples.len());
+                for wave in samples.chunks(m.batch) {
+                    let mut x = vec![0f32; m.batch * m.input_len];
+                    for (i, s) in wave.iter().enumerate() {
+                        for (j, &b) in s.iter().enumerate() {
+                            x[i * m.input_len + j] = b as f32;
+                        }
+                    }
+                    let classes = m.classify_batch(&x)?;
+                    out.extend_from_slice(&classes[..wave.len()]);
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::LayerParams;
+    use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+    use crate::testkit::Rng;
+
+    fn tiny_model(seed: u64) -> Model {
+        let spec = ModelSpec {
+            name: "e".into(),
+            input_shape: vec![16],
+            layers: vec![LayerSpec::Dense { input: 16, output: 4, act: Activation::None }],
+        };
+        let mut rng = Rng::new(seed);
+        Model {
+            spec,
+            params: vec![Some(LayerParams {
+                w: rng.gaussian_vec_f32(64, 0.2),
+                b: vec![0.0; 4],
+            })],
+        }
+    }
+
+    #[test]
+    fn float_and_int_engines_agree() {
+        let m = tiny_model(1);
+        let q = quantize(&m, &[1.0], RhoMode::Norm).unwrap();
+        let ef = Engine::Float(Arc::new(q.float_model.clone()));
+        let ei = Engine::PvqInt(Arc::new(q.quant_model.clone()));
+        let mut rng = Rng::new(2);
+        let samples: Vec<Vec<u8>> = (0..20)
+            .map(|_| (0..16).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let cf = ef.classify_batch(&refs).unwrap();
+        let ci = ei.classify_batch(&refs).unwrap();
+        assert_eq!(cf, ci);
+        assert_eq!(ef.name(), "float");
+        assert_eq!(ei.name(), "pvq-int");
+        assert_eq!(ef.input_len(), 16);
+    }
+}

@@ -1,0 +1,129 @@
+//! Serving metrics: counters + log-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 latency buckets (1µs … ~1000s).
+const BUCKETS: usize = 32;
+
+/// Lock-free metrics sink shared across batcher/worker threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests admitted.
+    pub requests: AtomicU64,
+    /// Responses delivered.
+    pub responses: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Total samples across executed batches (≤ requests if padding is
+    /// excluded; padding is not counted).
+    pub batched_samples: AtomicU64,
+    /// log2 µs latency histogram.
+    hist: [AtomicU64; BUCKETS],
+    /// Sum of latencies in µs (for the mean).
+    lat_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    /// Fresh zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request→response latency.
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.hist[b].fetch_add(1, Ordering::Relaxed);
+        self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency quantile from the histogram (upper bucket edge).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (b + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Mean latency in µs.
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.lat_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Mean batch fill (samples per executed batch).
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_samples.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "req {} resp {} batches {} fill {:.1} lat mean {:.0}µs p50 {}µs p99 {}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_fill(),
+            self.mean_latency_us(),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let m = Metrics::new();
+        for us in [10u64, 20, 40, 80, 10_000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.responses.load(Ordering::Relaxed), 5);
+        let p50 = m.latency_quantile_us(0.5);
+        assert!(p50 >= 16 && p50 <= 64, "p50 {p50}");
+        let p99 = m.latency_quantile_us(0.99);
+        assert!(p99 >= 8192, "p99 {p99}");
+        assert!(m.mean_latency_us() > 1000.0);
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.mean_batch_fill(), 0.0);
+        assert!(m.summary().contains("req 0"));
+    }
+
+    #[test]
+    fn batch_fill() {
+        let m = Metrics::new();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_samples.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_fill(), 5.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Multi-model router: dispatch requests to named model variants
+//! (e.g. the float baseline vs PVQ variants at different K), with a
+//! default route and per-route metrics. This is the L3 front door the
+//! CLI's `serve` subcommand and the serving bench exercise.
+
+use super::server::{Response, Server, ServerConfig};
+use super::Engine;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Named collection of running servers.
+pub struct Router {
+    routes: HashMap<String, Server>,
+    default_route: String,
+}
+
+impl Router {
+    /// Build from (name, engine) pairs; `default_route` must be present.
+    pub fn new(
+        engines: Vec<(String, Engine)>,
+        default_route: &str,
+        cfg: ServerConfig,
+    ) -> Result<Router> {
+        if !engines.iter().any(|(n, _)| n == default_route) {
+            bail!("default route '{default_route}' not among engines");
+        }
+        let mut routes = HashMap::new();
+        for (name, engine) in engines {
+            routes.insert(name, Server::start(engine, cfg.clone()));
+        }
+        Ok(Router { routes, default_route: default_route.to_string() })
+    }
+
+    /// Classify on a named route (None → default).
+    pub fn classify(&self, route: Option<&str>, pixels: Vec<u8>) -> Result<Response> {
+        let name = route.unwrap_or(&self.default_route);
+        match self.routes.get(name) {
+            Some(s) => s.classify(pixels),
+            None => bail!("unknown route '{name}'"),
+        }
+    }
+
+    /// Route names.
+    pub fn routes(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Metrics summary across routes.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        let mut names: Vec<&String> = self.routes.keys().collect();
+        names.sort();
+        for name in names {
+            out.push_str(&format!("[{name}] {}\n", self.routes[name].metrics().summary()));
+        }
+        out
+    }
+
+    /// Stop all servers.
+    pub fn shutdown(self) {
+        for (_, s) in self.routes {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::{LayerParams, Model};
+    use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+    use crate::testkit::Rng;
+    use std::sync::Arc;
+
+    fn engines(seed: u64) -> Vec<(String, Engine)> {
+        let spec = ModelSpec {
+            name: "r".into(),
+            input_shape: vec![16],
+            layers: vec![LayerSpec::Dense { input: 16, output: 4, act: Activation::None }],
+        };
+        let mut rng = Rng::new(seed);
+        let m = Model {
+            spec,
+            params: vec![Some(LayerParams {
+                w: rng.gaussian_vec_f32(64, 0.2),
+                b: vec![0.0; 4],
+            })],
+        };
+        let q = quantize(&m, &[1.0], RhoMode::Norm).unwrap();
+        vec![
+            ("float".to_string(), Engine::Float(Arc::new(m))),
+            ("pvq".to_string(), Engine::PvqInt(Arc::new(q.quant_model))),
+        ]
+    }
+
+    #[test]
+    fn routes_and_default() {
+        let router = Router::new(engines(1), "float", ServerConfig::default()).unwrap();
+        let mut rng = Rng::new(2);
+        let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+        let a = router.classify(None, pixels.clone()).unwrap();
+        let b = router.classify(Some("pvq"), pixels.clone()).unwrap();
+        // K=N quantization: engines should agree on most inputs; don't
+        // assert equality per-sample, just validity
+        assert!(a.class < 4 && b.class < 4);
+        assert!(router.classify(Some("nope"), pixels).is_err());
+        let s = router.summary();
+        assert!(s.contains("[float]") && s.contains("[pvq]"));
+        router.shutdown();
+    }
+
+    #[test]
+    fn bad_default_rejected() {
+        assert!(Router::new(engines(3), "missing", ServerConfig::default()).is_err());
+    }
+}

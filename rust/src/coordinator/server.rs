@@ -1,0 +1,332 @@
+//! Batching inference server.
+//!
+//! vLLM-router-style shape scaled to this paper: a FIFO request queue, a
+//! dynamic batcher (dispatch when `max_batch` requests are waiting or the
+//! oldest has waited `max_wait`), and a worker pool executing an
+//! [`Engine`]. std::thread + mpsc (tokio is unavailable in this offline
+//! environment; the request path is CPU-bound anyway).
+
+use super::engine::Engine;
+use super::metrics::Metrics;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Dispatch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// …or when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Bound on the admission queue (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// One classification response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Predicted class.
+    pub class: usize,
+    /// Queue+execute latency.
+    pub latency: Duration,
+}
+
+struct Request {
+    pixels: Vec<u8>,
+    enqueued: Instant,
+    resp: SyncSender<Result<Response, String>>,
+}
+
+/// Handle to a running server; dropping it (or calling [`Server::shutdown`])
+/// stops the threads.
+pub struct Server {
+    tx: Option<SyncSender<Request>>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start batcher + workers over `engine`.
+    pub fn start(engine: Engine, cfg: ServerConfig) -> Server {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_cap);
+        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let brx = Arc::new(Mutex::new(brx));
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let engine = Arc::new(engine);
+
+        // batcher thread
+        let m = metrics.clone();
+        let stop_b = stop.clone();
+        let max_batch = cfg.max_batch;
+        let max_wait = cfg.max_wait;
+        let batcher = std::thread::Builder::new()
+            .name("pvq-batcher".into())
+            .spawn(move || {
+                batcher_loop(rx, btx, m, stop_b, max_batch, max_wait);
+            })
+            .expect("spawn batcher");
+
+        // workers
+        let mut threads = vec![batcher];
+        for wi in 0..cfg.workers {
+            let brx = brx.clone();
+            let engine = engine.clone();
+            let m = metrics.clone();
+            let t = std::thread::Builder::new()
+                .name(format!("pvq-worker-{wi}"))
+                .spawn(move || worker_loop(brx, engine, m))
+                .expect("spawn worker");
+            threads.push(t);
+        }
+
+        Server { tx: Some(tx), metrics, stop, threads }
+    }
+
+    /// Submit a request; returns the response channel. Errors if the
+    /// admission queue is full (backpressure) or the server is stopped.
+    pub fn submit(&self, pixels: Vec<u8>) -> Result<Receiver<Result<Response, String>>> {
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { pixels, enqueued: Instant::now(), resp: rtx };
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .try_send(req)
+            .map_err(|e| anyhow::anyhow!("queue full or closed: {e}"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait.
+    pub fn classify(&self, pixels: Vec<u8>) -> Result<Response> {
+        let rx = self.submit(pixels)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Shared metrics.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Stop threads and drain.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.tx.take(); // close admission channel
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.tx.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    btx: SyncSender<Vec<Request>>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    'outer: loop {
+        // block for the first request of a batch
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        let deadline = first.enqueued + max_wait;
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    // flush what we have, then exit
+                    metrics.batches.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .batched_samples
+                        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    let _ = btx.send(batch);
+                    break 'outer;
+                }
+            }
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_samples
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        if btx.send(batch).is_err() {
+            return;
+        }
+    }
+}
+
+fn worker_loop(
+    brx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    engine: Arc<Engine>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let batch = {
+            let guard = brx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return,
+            }
+        };
+        let views: Vec<&[u8]> = batch.iter().map(|r| r.pixels.as_slice()).collect();
+        match engine.classify_batch(&views) {
+            Ok(classes) => {
+                for (req, class) in batch.into_iter().zip(classes) {
+                    let latency = req.enqueued.elapsed();
+                    metrics.record_latency(latency);
+                    let _ = req.resp.send(Ok(Response { class, latency }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine error: {e}");
+                for req in batch {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::{LayerParams, Model};
+    use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+    use crate::testkit::Rng;
+    use std::sync::Arc as StdArc;
+
+    fn float_engine(seed: u64) -> Engine {
+        let spec = ModelSpec {
+            name: "srv".into(),
+            input_shape: vec![16],
+            layers: vec![LayerSpec::Dense { input: 16, output: 4, act: Activation::None }],
+        };
+        let mut rng = Rng::new(seed);
+        Engine::Float(StdArc::new(Model {
+            spec,
+            params: vec![Some(LayerParams {
+                w: rng.gaussian_vec_f32(64, 0.2),
+                b: vec![0.0; 4],
+            })],
+        }))
+    }
+
+    #[test]
+    fn every_request_answered_once() {
+        let server = Server::start(
+            float_engine(1),
+            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(1), workers: 2, queue_cap: 256 },
+        );
+        let mut rng = Rng::new(2);
+        let mut rxs = Vec::new();
+        for _ in 0..100 {
+            let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+            rxs.push(server.submit(pixels).unwrap());
+        }
+        let mut answered = 0;
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert!(r.class < 4);
+            answered += 1;
+        }
+        assert_eq!(answered, 100);
+        let m = server.metrics();
+        assert_eq!(m.responses.load(Ordering::Relaxed), 100);
+        assert!(m.batches.load(Ordering::Relaxed) >= 100 / 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn deterministic_results_match_direct_engine() {
+        let engine = float_engine(3);
+        let mut rng = Rng::new(4);
+        let samples: Vec<Vec<u8>> =
+            (0..32).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let direct = engine.classify_batch(&views).unwrap();
+
+        let server = Server::start(float_engine(3), ServerConfig::default());
+        for (s, &want) in samples.iter().zip(&direct) {
+            let r = server.classify(s.clone()).unwrap();
+            assert_eq!(r.class, want);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_respects_max_batch() {
+        let server = Server::start(
+            float_engine(5),
+            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(20), workers: 1, queue_cap: 256 },
+        );
+        let mut rng = Rng::new(6);
+        let mut rxs = Vec::new();
+        for _ in 0..40 {
+            let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+            rxs.push(server.submit(pixels).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        }
+        let m = server.metrics();
+        // with max_batch=4 and 40 requests, at least 10 batches
+        assert!(m.batches.load(Ordering::Relaxed) >= 10);
+        // mean fill can never exceed max_batch
+        assert!(m.mean_batch_fill() <= 4.0 + 1e-9);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_clean_under_load() {
+        let server = Server::start(float_engine(7), ServerConfig::default());
+        let mut rng = Rng::new(8);
+        for _ in 0..10 {
+            let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+            let _ = server.classify(pixels);
+        }
+        server.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,221 @@
+//! Datasets: the `.bin` container written by `python/compile/data.py`
+//! plus an in-process synthetic generator so `examples/quickstart.rs`
+//! runs without `make artifacts`.
+//!
+//! Container layout (little-endian):
+//! ```text
+//! magic "PVQD"  u32 n  u32 h  u32 w  u32 c  u32 nclasses
+//! u8 pixels  n·h·w·c   (NHWC)
+//! u8 labels  n
+//! ```
+
+use crate::nn::tensor::{ITensor, Tensor};
+use crate::testkit::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// An in-memory labelled image dataset (u8 pixels, NHWC).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Sample count.
+    pub n: usize,
+    /// Image height.
+    pub h: usize,
+    /// Image width.
+    pub w: usize,
+    /// Channels.
+    pub c: usize,
+    /// Class count.
+    pub nclasses: usize,
+    /// Pixels, `n·h·w·c` bytes.
+    pub pixels: Vec<u8>,
+    /// Labels, `n` bytes.
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    /// Per-sample element count.
+    pub fn sample_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Sample i as raw bytes.
+    pub fn sample(&self, i: usize) -> &[u8] {
+        let l = self.sample_len();
+        &self.pixels[i * l..(i + 1) * l]
+    }
+
+    /// Sample i as f32 tensor. MLP specs get `[features]`, CNN `[h,w,c]`.
+    pub fn sample_f32(&self, i: usize, flat: bool) -> Tensor {
+        let data: Vec<f32> = self.sample(i).iter().map(|&b| b as f32).collect();
+        if flat {
+            Tensor::from_vec(&[self.sample_len()], data)
+        } else {
+            Tensor::from_vec(&[self.h, self.w, self.c], data)
+        }
+    }
+
+    /// Sample i as integer tensor (the paper's 8-bit integer inputs).
+    pub fn sample_i64(&self, i: usize, flat: bool) -> ITensor {
+        if flat {
+            ITensor::from_u8(&[self.sample_len()], self.sample(i))
+        } else {
+            ITensor::from_u8(&[self.h, self.w, self.c], self.sample(i))
+        }
+    }
+
+    /// Load a `.bin` dataset.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"PVQD" {
+            bail!("bad dataset magic in {}", path.display());
+        }
+        let mut u = [0u8; 4];
+        let mut rd = || -> Result<usize> {
+            f.read_exact(&mut u)?;
+            Ok(u32::from_le_bytes(u) as usize)
+        };
+        let (n, h, w, c, nclasses) = (rd()?, rd()?, rd()?, rd()?, rd()?);
+        if n * h * w * c > 1 << 30 {
+            bail!("implausible dataset size");
+        }
+        let mut pixels = vec![0u8; n * h * w * c];
+        f.read_exact(&mut pixels)?;
+        let mut labels = vec![0u8; n];
+        f.read_exact(&mut labels)?;
+        Ok(Dataset { n, h, w, c, nclasses, pixels, labels })
+    }
+
+    /// Save as `.bin` (used by tests; python writes the real artifacts).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"PVQD")?;
+        for v in [self.n, self.h, self.w, self.c, self.nclasses] {
+            f.write_all(&(v as u32).to_le_bytes())?;
+        }
+        f.write_all(&self.pixels)?;
+        f.write_all(&self.labels)?;
+        Ok(())
+    }
+}
+
+/// Synthetic glyph dataset, mirroring `python/compile/data.py`: 10
+/// digit-like 7×5 glyph templates rendered into h×w with random shift and
+/// noise. Good enough to exercise every inference/quantization code path
+/// without network access (see DESIGN.md §3 substitutions).
+pub fn synth_glyphs(n: usize, h: usize, w: usize, seed: u64) -> Dataset {
+    // 7x5 bitmap font for digits 0-9
+    const GLYPHS: [[u8; 7]; 10] = [
+        [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+        [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+        [0b01110, 0b10001, 0b00001, 0b00110, 0b01000, 0b10000, 0b11111], // 2
+        [0b01110, 0b10001, 0b00001, 0b00110, 0b00001, 0b10001, 0b01110], // 3
+        [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+        [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+        [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+        [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+        [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+        [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+    ];
+    let mut rng = Rng::new(seed);
+    let mut pixels = vec![0u8; n * h * w];
+    let mut labels = vec![0u8; n];
+    let (sy, sx) = ((h / 8).max(1), (w / 6).max(1)); // glyph cell scale
+    for s in 0..n {
+        let cls = (s % 10) as u8;
+        labels[s] = cls;
+        let g = &GLYPHS[cls as usize];
+        let (oy, ox) = (
+            rng.below((h - 7 * sy).max(1) as u64) as usize,
+            rng.below((w - 5 * sx).max(1) as u64) as usize,
+        );
+        let img = &mut pixels[s * h * w..(s + 1) * h * w];
+        // noise floor
+        for p in img.iter_mut() {
+            *p = rng.below(40) as u8;
+        }
+        // glyph
+        for (ry, row) in g.iter().enumerate() {
+            for rx in 0..5 {
+                if row >> (4 - rx) & 1 == 1 {
+                    for dy in 0..sy {
+                        for dx in 0..sx {
+                            let (py, px) = (oy + ry * sy + dy, ox + rx * sx + dx);
+                            if py < h && px < w {
+                                img[py * w + px] = 200 + rng.below(56) as u8;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Dataset { n, h, w, c: 1, nclasses: 10, pixels, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_shapes_and_labels() {
+        let d = synth_glyphs(50, 28, 28, 1);
+        assert_eq!(d.n, 50);
+        assert_eq!(d.sample_len(), 784);
+        assert_eq!(d.pixels.len(), 50 * 784);
+        assert!(d.labels.iter().all(|&l| l < 10));
+        // balanced-ish: round-robin classes
+        assert_eq!(d.labels[0], 0);
+        assert_eq!(d.labels[11], 1);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = synth_glyphs(10, 28, 28, 7);
+        let b = synth_glyphs(10, 28, 28, 7);
+        assert_eq!(a.pixels, b.pixels);
+        let c = synth_glyphs(10, 28, 28, 8);
+        assert_ne!(a.pixels, c.pixels);
+    }
+
+    #[test]
+    fn glyphs_have_signal() {
+        // glyph pixels should be much brighter than background
+        let d = synth_glyphs(20, 28, 28, 2);
+        for i in 0..d.n {
+            let s = d.sample(i);
+            let bright = s.iter().filter(|&&p| p >= 200).count();
+            assert!(bright > 20, "sample {i} has only {bright} bright pixels");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = synth_glyphs(12, 16, 16, 3);
+        let dir = std::env::temp_dir().join("pvqd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        d.save(&p).unwrap();
+        let back = Dataset::load(&p).unwrap();
+        assert_eq!(back.pixels, d.pixels);
+        assert_eq!(back.labels, d.labels);
+        assert_eq!(back.nclasses, 10);
+    }
+
+    #[test]
+    fn tensor_views() {
+        let d = synth_glyphs(3, 8, 8, 4);
+        let t = d.sample_f32(1, true);
+        assert_eq!(t.shape, vec![64]);
+        let t = d.sample_f32(1, false);
+        assert_eq!(t.shape, vec![8, 8, 1]);
+        let it = d.sample_i64(2, true);
+        assert_eq!(it.data.len(), 64);
+    }
+}

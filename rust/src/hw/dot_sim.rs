@@ -1,0 +1,215 @@
+//! Cycle-accurate simulators of the paper's serial dot-product circuits.
+//!
+//! Fig. 1 (integer PVQ nets):
+//! * **MultArch** — multiplier + accumulator; zero weights are known
+//!   offline and skipped, so it takes one cycle per *nonzero* weight
+//!   ("at most K cycles", fewer when weights are zero).
+//! * **AddOnlyArch** — adds/subtracts xᵢ |ŵᵢ| times; no multiplier;
+//!   takes *exactly* K cycles regardless of the weights.
+//!
+//! Fig. 2 (binary PVQ nets, x ∈ {−1,+1}):
+//! * **BinAccumArch** — accumulates ±ŵᵢ controlled by xᵢ; one cycle per
+//!   nonzero weight (≤ K).
+//! * **BinCounterArch** — up/down counter clocked once per pulse with an
+//!   XOR sign product; exactly K cycles.
+//!
+//! Each simulator executes the dot product the way the circuit would and
+//! returns (result, cycles) so the tests can check *both* the numerics
+//! and the paper's cycle-count claims.
+
+/// Result and cost of a simulated serial dot product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimResult {
+    /// Accumulator value at the end.
+    pub value: i64,
+    /// Clock cycles consumed (after INIT).
+    pub cycles: u64,
+}
+
+/// Fig. 1 left: multiplier architecture. One cycle per nonzero weight.
+pub fn mult_arch(w: &[i32], x: &[i64]) -> SimResult {
+    assert_eq!(w.len(), x.len());
+    let mut acc = 0i64;
+    let mut cycles = 0u64;
+    for (&wv, &xv) in w.iter().zip(x) {
+        if wv != 0 {
+            // one multiply-accumulate per clock
+            acc += wv as i64 * xv;
+            cycles += 1;
+        }
+    }
+    SimResult { value: acc, cycles }
+}
+
+/// Fig. 1 right: add-only architecture. xᵢ added/subtracted |ŵᵢ| times —
+/// exactly K cycles, no multiplier.
+pub fn add_only_arch(w: &[i32], x: &[i64]) -> SimResult {
+    assert_eq!(w.len(), x.len());
+    let mut acc = 0i64;
+    let mut cycles = 0u64;
+    for (&wv, &xv) in w.iter().zip(x) {
+        for _ in 0..wv.unsigned_abs() {
+            if wv > 0 {
+                acc += xv;
+            } else {
+                acc -= xv;
+            }
+            cycles += 1;
+        }
+    }
+    SimResult { value: acc, cycles }
+}
+
+/// Fig. 2 left: binary accumulate architecture (x ∈ {−1,+1} controls
+/// add/sub of the weight). One cycle per nonzero weight.
+pub fn bin_accum_arch(w: &[i32], x_pm1: &[i8]) -> SimResult {
+    assert_eq!(w.len(), x_pm1.len());
+    let mut acc = 0i64;
+    let mut cycles = 0u64;
+    for (&wv, &xv) in w.iter().zip(x_pm1) {
+        debug_assert!(xv == 1 || xv == -1);
+        if wv != 0 {
+            if xv == 1 {
+                acc += wv as i64;
+            } else {
+                acc -= wv as i64;
+            }
+            cycles += 1;
+        }
+    }
+    SimResult { value: acc, cycles }
+}
+
+/// Fig. 2 right: up/down counter with XOR sign product. The counter is
+/// clocked once per *pulse* (|ŵᵢ| pulses for weight i): exactly K cycles.
+pub fn bin_counter_arch(w: &[i32], x_pm1: &[i8]) -> SimResult {
+    assert_eq!(w.len(), x_pm1.len());
+    let mut counter = 0i64;
+    let mut cycles = 0u64;
+    for (&wv, &xv) in w.iter().zip(x_pm1) {
+        debug_assert!(xv == 1 || xv == -1);
+        // sign bit of the weight pulse stream XOR the input sign
+        let w_neg = wv < 0;
+        let x_neg = xv < 0;
+        let down = w_neg ^ x_neg; // XOR gate of Fig. 2
+        for _ in 0..wv.unsigned_abs() {
+            if down {
+                counter -= 1;
+            } else {
+                counter += 1;
+            }
+            cycles += 1;
+        }
+    }
+    SimResult { value: counter, cycles }
+}
+
+/// Layer-level cycle accounting for a serial PE array: with `pe` parallel
+/// dot-product units, `outputs` dot products of the given per-row cycle
+/// counts take ⌈outputs/pe⌉ waves, each as long as its slowest row.
+pub fn layer_cycles(per_row_cycles: &[u64], pe: usize) -> u64 {
+    assert!(pe > 0);
+    let mut total = 0u64;
+    for wave in per_row_cycles.chunks(pe) {
+        total += wave.iter().copied().max().unwrap_or(0);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pvq::{encode_opt, RhoMode};
+    use crate::testkit::Rng;
+
+    fn reference_dot(w: &[i32], x: &[i64]) -> i64 {
+        w.iter().zip(x).map(|(&a, &b)| a as i64 * b).sum()
+    }
+
+    #[test]
+    fn all_architectures_agree_with_reference() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let n = 1 + (rng.next_u64() % 64) as usize;
+            let k = 1 + (rng.next_u64() % 32) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+            let q = encode_opt(&v, k, RhoMode::Norm);
+            let x: Vec<i64> = (0..n).map(|_| rng.below(256) as i64).collect();
+            let expect = reference_dot(&q.components, &x);
+            assert_eq!(mult_arch(&q.components, &x).value, expect);
+            assert_eq!(add_only_arch(&q.components, &x).value, expect);
+
+            let xb: Vec<i8> = (0..n).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+            let xb64: Vec<i64> = xb.iter().map(|&v| v as i64).collect();
+            let expect_b = reference_dot(&q.components, &xb64);
+            assert_eq!(bin_accum_arch(&q.components, &xb).value, expect_b);
+            assert_eq!(bin_counter_arch(&q.components, &xb).value, expect_b);
+        }
+    }
+
+    #[test]
+    fn cycle_count_claims() {
+        // §VIII: mult arch ≤ K cycles (= #nonzeros); add-only exactly K.
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let n = 8 + (rng.next_u64() % 56) as usize;
+            let k = 1 + (rng.next_u64() % 40) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+            let q = encode_opt(&v, k, RhoMode::Norm);
+            let x: Vec<i64> = (0..n).map(|_| rng.below(256) as i64).collect();
+            let xb: Vec<i8> = (0..n).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+
+            let nz = q.nonzeros() as u64;
+            assert_eq!(mult_arch(&q.components, &x).cycles, nz);
+            assert!(nz <= k as u64);
+            assert_eq!(add_only_arch(&q.components, &x).cycles, k as u64);
+            assert_eq!(bin_accum_arch(&q.components, &xb).cycles, nz);
+            assert_eq!(bin_counter_arch(&q.components, &xb).cycles, k as u64);
+        }
+    }
+
+    #[test]
+    fn paper_example_weights() {
+        // §V example: binary PVQ weights (-2,1,0,0,0,2,2) — N=K=7, dot with
+        // any ±1 input still takes ≤ 6 adds on the accumulate arch... the
+        // counter arch takes exactly 7 cycles (K).
+        let w = [-2, 1, 0, 0, 0, 2, 2];
+        let x: Vec<i8> = vec![1, -1, 1, 1, -1, 1, -1];
+        assert_eq!(bin_counter_arch(&w, &x).cycles, 7);
+        assert!(bin_accum_arch(&w, &x).cycles <= 6);
+        let x64: Vec<i64> = x.iter().map(|&v| v as i64).collect();
+        assert_eq!(bin_accum_arch(&w, &x).value, reference_dot(&w, &x64));
+        // second example from the paper
+        let w2 = [0, 0, -3, 0, -2, 2, 0];
+        assert_eq!(bin_counter_arch(&w2, &x).cycles, 7);
+        assert_eq!(bin_accum_arch(&w2, &x).cycles, 3);
+    }
+
+    #[test]
+    fn mult_arch_faster_on_sparse_layers() {
+        // §VIII: "even with N≈K, up to 1/3 of the PVQ weights is zero,"
+        // letting the multiplier architecture finish earlier.
+        let mut rng = Rng::new(3);
+        let n = 10_000;
+        let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+        let q = crate::pvq::encode(&v, n as u32); // N/K = 1
+        let x: Vec<i64> = (0..n).map(|_| rng.below(256) as i64).collect();
+        let m = mult_arch(&q.components, &x);
+        let a = add_only_arch(&q.components, &x);
+        assert_eq!(m.value, a.value);
+        assert!(
+            (m.cycles as f64) < 0.8 * a.cycles as f64,
+            "mult {} vs add-only {}",
+            m.cycles,
+            a.cycles
+        );
+    }
+
+    #[test]
+    fn layer_cycles_waves() {
+        assert_eq!(layer_cycles(&[5, 3, 7, 2], 2), 5 + 7); // waves (5,3),(7,2)
+        assert_eq!(layer_cycles(&[5, 3, 7, 2], 4), 7);
+        assert_eq!(layer_cycles(&[5, 3, 7], 1), 15);
+        assert_eq!(layer_cycles(&[], 4), 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Fig. 3: FPGA LUT packing of binary PVQ partial sums.
+//!
+//! A 6-input LUT can precompute the partial sum Σ ŵᵢxᵢ over any 6 binary
+//! inputs as a function of the 2⁶ input patterns; stacking LUTs as a
+//! bit-slice yields one partial-sum bit per LUT. This module simulates the
+//! scheme: group a row's nonzero-weight inputs into 6-wide LUT groups,
+//! tabulate each group's partial sum, evaluate by lookup, and add the
+//! partial sums with a small adder tree. Returns numerics + resource
+//! counts (LUT count, adder count, output bit width) so the Fig. 3 bench
+//! can report resource/speed trade-offs.
+
+/// Resource/cost accounting of a LUT-packed dot product row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LutCost {
+    /// 6-input LUT groups used (per output bit-slice).
+    pub lut_groups: usize,
+    /// Bits per partial sum (bit-slice depth — physical LUT count is
+    /// `lut_groups × bits`).
+    pub bits: u32,
+    /// Adder-tree additions to combine partial sums.
+    pub tree_adds: usize,
+}
+
+/// One compiled LUT row: groups of (input indices, 64-entry table).
+#[derive(Clone, Debug)]
+pub struct LutRow {
+    groups: Vec<(Vec<usize>, Vec<i32>)>,
+    bias: i32,
+    /// worst-case |partial sum| over all groups (bit-width driver)
+    max_abs: i64,
+}
+
+impl LutRow {
+    /// Compile a weight row: nonzero positions are packed 6 per LUT.
+    pub fn compile(w: &[i32], bias: i32) -> Self {
+        let nz: Vec<usize> = (0..w.len()).filter(|&i| w[i] != 0).collect();
+        let mut groups = Vec::new();
+        let mut max_abs = bias.unsigned_abs() as i64;
+        for chunk in nz.chunks(6) {
+            let idxs = chunk.to_vec();
+            let mut table = vec![0i32; 1 << idxs.len()];
+            for (pat, entry) in table.iter_mut().enumerate() {
+                let mut s = 0i32;
+                for (bit, &i) in idxs.iter().enumerate() {
+                    // bit set ⇔ xᵢ = +1 (paper's 0 ⇔ +1 convention inverted
+                    // here for readability; pure relabeling)
+                    let x = if pat >> bit & 1 == 1 { 1 } else { -1 };
+                    s += w[i] * x;
+                }
+                *entry = s;
+                max_abs = max_abs.max(s.unsigned_abs() as i64);
+            }
+            groups.push((idxs, table));
+        }
+        LutRow { groups, bias, max_abs }
+    }
+
+    /// Evaluate on a ±1 input vector by table lookup.
+    pub fn eval(&self, x_pm1: &[i8]) -> i64 {
+        let mut acc = self.bias as i64;
+        for (idxs, table) in &self.groups {
+            let mut pat = 0usize;
+            for (bit, &i) in idxs.iter().enumerate() {
+                debug_assert!(x_pm1[i] == 1 || x_pm1[i] == -1);
+                if x_pm1[i] == 1 {
+                    pat |= 1 << bit;
+                }
+            }
+            acc += table[pat] as i64;
+        }
+        acc
+    }
+
+    /// Resource accounting.
+    pub fn cost(&self) -> LutCost {
+        let bits = 64 - self.max_abs.max(1).leading_zeros() + 1; // + sign
+        LutCost {
+            lut_groups: self.groups.len(),
+            bits,
+            tree_adds: self.groups.len().saturating_sub(1) + (self.bias != 0) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pvq::{encode_opt, RhoMode};
+    use crate::testkit::Rng;
+
+    fn reference_dot(w: &[i32], x: &[i8], bias: i32) -> i64 {
+        bias as i64 + w.iter().zip(x).map(|(&a, &b)| a as i64 * b as i64).sum::<i64>()
+    }
+
+    #[test]
+    fn lut_eval_matches_reference() {
+        let mut rng = Rng::new(1);
+        for _ in 0..60 {
+            let n = 1 + (rng.next_u64() % 100) as usize;
+            let k = 1 + (rng.next_u64() % 24) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+            let q = encode_opt(&v, k, RhoMode::Norm);
+            let bias = (rng.below(7) as i32) - 3;
+            let row = LutRow::compile(&q.components, bias);
+            let x: Vec<i8> =
+                (0..n).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+            assert_eq!(row.eval(&x), reference_dot(&q.components, &x, bias));
+        }
+    }
+
+    #[test]
+    fn lut_count_is_ceil_nz_over_6() {
+        let w = [1, 0, -1, 2, 0, 0, 1, 1, -3, 0, 1, 1]; // 8 nonzeros
+        let row = LutRow::compile(&w, 0);
+        let cost = row.cost();
+        assert_eq!(cost.lut_groups, 2); // ⌈8/6⌉
+        assert_eq!(cost.tree_adds, 1);
+    }
+
+    #[test]
+    fn bit_width_tracks_magnitudes() {
+        // six +1 weights: partial sums range ±6 → 4 bits + sign
+        let w = [1i32; 6];
+        let row = LutRow::compile(&w, 0);
+        assert!(row.cost().bits >= 4);
+        // one big weight dominates
+        let w2 = [100i32, 0, 0, 0, 0, 0];
+        let row2 = LutRow::compile(&w2, 0);
+        assert!(row2.cost().bits >= 8);
+    }
+
+    #[test]
+    fn zero_row() {
+        let w = [0i32; 10];
+        let row = LutRow::compile(&w, 5);
+        let x = vec![1i8; 10];
+        assert_eq!(row.eval(&x), 5);
+        assert_eq!(row.cost().lut_groups, 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Hardware cycle/resource simulators for §VIII of the paper.
+
+pub mod dot_sim;
+pub mod lut_sim;
+pub mod report;
+
+pub use dot_sim::{add_only_arch, bin_accum_arch, bin_counter_arch, layer_cycles, mult_arch, SimResult};
+pub use lut_sim::{LutCost, LutRow};
+pub use report::{HwReport, LayerHwReport};

@@ -1,0 +1,238 @@
+//! Whole-network hardware cost reports: cycles per architecture,
+//! op counts, and storage — the quantitative side of §VIII.
+
+use super::dot_sim::layer_cycles;
+use crate::nn::model::LayerSpec;
+use crate::nn::pvq_engine::QuantModel;
+
+/// Per-layer hardware accounting.
+#[derive(Clone, Debug)]
+pub struct LayerHwReport {
+    /// Layer label.
+    pub label: String,
+    /// Dot products executed per inference (dense: out; conv: h·w·cout).
+    pub dots: u64,
+    /// Cycles/inference, Fig.1-left multiplier architecture (1 PE).
+    pub cycles_mult: u64,
+    /// Cycles/inference, Fig.1-right add-only architecture (1 PE).
+    pub cycles_addonly: u64,
+    /// Weight storage bits under exp-Golomb.
+    pub storage_bits_eg: u64,
+    /// Weight storage bits raw f32 baseline.
+    pub storage_bits_f32: u64,
+}
+
+/// Hardware report for an entire quantized net.
+#[derive(Clone, Debug)]
+pub struct HwReport {
+    /// Per weighted layer.
+    pub layers: Vec<LayerHwReport>,
+}
+
+impl HwReport {
+    /// Build from a quantized model. `image_hw` supplies the input
+    /// geometry for conv nets (taken from the spec).
+    pub fn from_model(m: &QuantModel) -> Self {
+        let mut layers = Vec::new();
+        let mut hw: Option<(usize, usize)> = match m.spec.input_shape.as_slice() {
+            [h, w, _] => Some((*h, *w)),
+            _ => None,
+        };
+        let mut wi = 0;
+        for (l, q) in m.spec.layers.iter().zip(&m.layers) {
+            match l {
+                LayerSpec::Dense { input, output, .. } => {
+                    let q = q.as_ref().expect("quantized");
+                    // per-row nonzeros / pulse counts
+                    let mut cyc_mult = Vec::with_capacity(*output);
+                    let mut cyc_add = Vec::with_capacity(*output);
+                    for o in 0..*output {
+                        let row = &q.w[o * input..(o + 1) * input];
+                        let nz = row.iter().filter(|&&v| v != 0).count() as u64
+                            + (q.b_pyramid[o] != 0) as u64;
+                        let pulses: u64 =
+                            row.iter().map(|v| v.unsigned_abs() as u64).sum::<u64>()
+                                + q.b_pyramid[o].unsigned_abs() as u64;
+                        cyc_mult.push(nz);
+                        cyc_add.push(pulses);
+                    }
+                    let eg = crate::compress::expgolomb::bits_per_weight(&q.w)
+                        * q.w.len() as f64;
+                    layers.push(LayerHwReport {
+                        label: format!("FC{wi}"),
+                        dots: *output as u64,
+                        cycles_mult: layer_cycles(&cyc_mult, 1),
+                        cycles_addonly: layer_cycles(&cyc_add, 1),
+                        storage_bits_eg: eg as u64,
+                        storage_bits_f32: (q.w.len() as u64) * 32,
+                    });
+                    wi += 1;
+                }
+                LayerSpec::Conv2d { kh, kw, cin, cout, .. } => {
+                    let q = q.as_ref().expect("quantized");
+                    let (h, w) = hw.expect("conv geometry");
+                    // one dot per output position per cout; kernel reused
+                    let positions = (h * w) as u64;
+                    let mut cyc_mult = Vec::with_capacity(*cout);
+                    let mut cyc_add = Vec::with_capacity(*cout);
+                    for co in 0..*cout {
+                        let mut nz = (q.b_pyramid[co] != 0) as u64;
+                        let mut pulses = q.b_pyramid[co].unsigned_abs() as u64;
+                        for ky in 0..*kh {
+                            for kx in 0..*kw {
+                                for ci in 0..*cin {
+                                    let v = q.w[((ky * kw + kx) * cin + ci) * cout + co];
+                                    if v != 0 {
+                                        nz += 1;
+                                        pulses += v.unsigned_abs() as u64;
+                                    }
+                                }
+                            }
+                        }
+                        cyc_mult.push(nz);
+                        cyc_add.push(pulses);
+                    }
+                    let eg = crate::compress::expgolomb::bits_per_weight(&q.w)
+                        * q.w.len() as f64;
+                    layers.push(LayerHwReport {
+                        label: format!("CONV{wi}"),
+                        dots: positions * *cout as u64,
+                        cycles_mult: positions * layer_cycles(&cyc_mult, 1),
+                        cycles_addonly: positions * layer_cycles(&cyc_add, 1),
+                        storage_bits_eg: eg as u64,
+                        storage_bits_f32: (q.w.len() as u64) * 32,
+                    });
+                    wi += 1;
+                }
+                LayerSpec::MaxPool2x2 => {
+                    if let Some((h, w)) = hw {
+                        hw = Some((h / 2, w / 2));
+                    }
+                }
+                _ => {}
+            }
+        }
+        HwReport { layers }
+    }
+
+    /// Totals: (cycles mult-arch, cycles add-only, storage EG bits, storage f32 bits).
+    pub fn totals(&self) -> (u64, u64, u64, u64) {
+        let mut t = (0, 0, 0, 0);
+        for l in &self.layers {
+            t.0 += l.cycles_mult;
+            t.1 += l.cycles_addonly;
+            t.2 += l.storage_bits_eg;
+            t.3 += l.storage_bits_f32;
+        }
+        t
+    }
+
+    /// Render the report table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<8} {:>10} {:>14} {:>14} {:>12} {:>12} {:>8}\n",
+            "layer", "dots", "cyc(mult)", "cyc(addonly)", "bits(EG)", "bits(f32)", "ratio"
+        ));
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{:<8} {:>10} {:>14} {:>14} {:>12} {:>12} {:>7.1}x\n",
+                l.label,
+                l.dots,
+                l.cycles_mult,
+                l.cycles_addonly,
+                l.storage_bits_eg,
+                l.storage_bits_f32,
+                l.storage_bits_f32 as f64 / l.storage_bits_eg.max(1) as f64
+            ));
+        }
+        let (cm, ca, eg, f32b) = self.totals();
+        out.push_str(&format!(
+            "total: cyc(mult) {} cyc(addonly) {} storage {}→{} bits ({:.1}x)\n",
+            cm,
+            ca,
+            f32b,
+            eg,
+            f32b as f64 / eg.max(1) as f64
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::LayerParams;
+    use crate::nn::model::{Activation, ModelSpec};
+    use crate::nn::Model;
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+    use crate::testkit::Rng;
+
+    fn quantized_mlp(seed: u64, ratio: f64) -> crate::quant::Quantized {
+        let spec = ModelSpec {
+            name: "hw".into(),
+            input_shape: vec![64],
+            layers: vec![
+                LayerSpec::Dense { input: 64, output: 32, act: Activation::Relu },
+                LayerSpec::Dense { input: 32, output: 10, act: Activation::None },
+            ],
+        };
+        let mut rng = Rng::new(seed);
+        let params = spec
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerSpec::Dense { input, output, .. } => Some(LayerParams {
+                    w: rng.laplacian_vec(input * output, 0.2).iter().map(|&v| v as f32).collect(),
+                    b: rng.laplacian_vec(*output, 0.02).iter().map(|&v| v as f32).collect(),
+                }),
+                _ => None,
+            })
+            .collect();
+        let m = Model { spec, params };
+        let ratios = vec![ratio; 2];
+        quantize(&m, &ratios, RhoMode::Norm).unwrap()
+    }
+
+    #[test]
+    fn dense_cycles_bounded_by_k() {
+        let q = quantized_mlp(1, 2.0);
+        let rep = HwReport::from_model(&q.quant_model);
+        for (l, r) in rep.layers.iter().zip(&q.reports) {
+            // add-only serial total = Σ pulses = K exactly
+            assert_eq!(l.cycles_addonly, r.k as u64, "{}", l.label);
+            assert!(l.cycles_mult <= l.cycles_addonly);
+        }
+    }
+
+    #[test]
+    fn storage_compresses() {
+        let q = quantized_mlp(2, 5.0);
+        let rep = HwReport::from_model(&q.quant_model);
+        let (_, _, eg, f32b) = rep.totals();
+        assert!(eg * 8 < f32b, "EG {eg} vs f32 {f32b}");
+        let text = rep.render();
+        assert!(text.contains("FC0"));
+    }
+
+    #[test]
+    fn conv_report_scales_with_positions() {
+        let spec = ModelSpec {
+            name: "c".into(),
+            input_shape: vec![8, 8, 2],
+            layers: vec![LayerSpec::Conv2d { kh: 3, kw: 3, cin: 2, cout: 4, act: Activation::Relu }],
+        };
+        let mut rng = Rng::new(3);
+        let params = vec![Some(LayerParams {
+            w: rng.laplacian_vec(3 * 3 * 2 * 4, 0.3).iter().map(|&v| v as f32).collect(),
+            b: vec![0.0; 4],
+        })];
+        let m = Model { spec, params };
+        let q = quantize(&m, &[1.0], RhoMode::Norm).unwrap();
+        let rep = HwReport::from_model(&q.quant_model);
+        assert_eq!(rep.layers[0].dots, 64 * 4);
+        // kernel reused at 64 positions
+        assert_eq!(rep.layers[0].cycles_addonly % 64, 0);
+    }
+}

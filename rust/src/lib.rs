@@ -1,0 +1,20 @@
+//! # pvqnet — Pyramid Vector Quantization for Deep Learning
+//!
+//! Full-system reproduction of V. Liguori, *"Pyramid Vector Quantization
+//! for Deep Learning"* (2017): PVQ weight quantization, integer & binary
+//! PVQ inference engines, weight compression codecs, hardware cycle
+//! simulators, and a batching inference coordinator that serves both
+//! AOT-compiled XLA graphs (via PJRT) and the pure-integer PVQ engines.
+//!
+//! See `DESIGN.md` for the module inventory and the paper-experiment index,
+//! and `examples/quickstart.rs` for a five-minute tour.
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod nn;
+pub mod pvq;
+pub mod quant;
+pub mod runtime;
+pub mod testkit;

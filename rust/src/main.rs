@@ -1,0 +1,217 @@
+//! `pvqnet` — CLI front end for the PVQ-for-deep-learning system.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!   tables                       print paper Tables 1–4 anatomies
+//!   quantize --net a [...]       PVQ a trained net, print Tables 5–8 row
+//!   eval --net a [...]           §VII before/after accuracy experiment
+//!   compress --net a [...]       §VI codec survey per layer
+//!   hwsim --net a [...]          §VIII cycle/storage report
+//!   serve --net a [...]          batching inference server demo
+//!   info                         artifact inventory
+
+use anyhow::{bail, Context, Result};
+use pvqnet::coordinator::{Engine, Router, ServerConfig};
+use pvqnet::data::Dataset;
+use pvqnet::hw::HwReport;
+use pvqnet::nn::weights::load_model;
+use pvqnet::nn::ModelSpec;
+use pvqnet::pvq::RhoMode;
+use pvqnet::quant::{distribution_table, evaluate, quantize};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> PathBuf {
+    flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn load_net(flags: &HashMap<String, String>) -> Result<(ModelSpec, pvqnet::nn::Model, Dataset)> {
+    let net = flags.get("net").map(|s| s.as_str()).unwrap_or("a");
+    let spec = ModelSpec::by_name(net).with_context(|| format!("unknown net '{net}'"))?;
+    let dir = artifacts_dir(flags);
+    let weights = dir.join(format!("net_{}.pvqw", net.to_ascii_lowercase()));
+    let model = load_model(&weights, &spec)
+        .with_context(|| format!("load {} (run `make artifacts` first)", weights.display()))?;
+    let dataset = if spec.input_shape == vec![784] {
+        Dataset::load(&dir.join("mnist_test.bin"))?
+    } else {
+        Dataset::load(&dir.join("cifar_test.bin"))?
+    };
+    Ok((spec, model, dataset))
+}
+
+fn ratios_from_flags(flags: &HashMap<String, String>, spec: &ModelSpec) -> Result<Vec<f64>> {
+    match flags.get("ratios") {
+        None => Ok(spec.paper_ratios()),
+        Some(s) => {
+            let r: Result<Vec<f64>, _> = s.split(',').map(|x| x.trim().parse::<f64>()).collect();
+            let r = r.context("parse --ratios as comma-separated floats")?;
+            if r.len() == 1 {
+                Ok(vec![r[0]; spec.weighted_layers().len()])
+            } else {
+                Ok(r)
+            }
+        }
+    }
+}
+
+fn cmd_tables() {
+    for n in ["a", "b", "c", "d"] {
+        let spec = ModelSpec::by_name(n).unwrap();
+        println!("{}", spec.anatomy_table(&spec.paper_ratios()));
+    }
+}
+
+fn cmd_quantize(flags: &HashMap<String, String>) -> Result<()> {
+    let (spec, model, _) = load_net(flags)?;
+    let ratios = ratios_from_flags(flags, &spec)?;
+    let q = quantize(&model, &ratios, RhoMode::Norm)?;
+    println!("{}", spec.anatomy_table(&ratios));
+    println!("{}", distribution_table(&q));
+    for r in &q.reports {
+        println!(
+            "{}: N={} K={} rho={:.6e} cosine={:.4}",
+            r.label, r.n, r.k, r.rho, r.cosine
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
+    let (spec, model, data) = load_net(flags)?;
+    let ratios = ratios_from_flags(flags, &spec)?;
+    let limit: usize = flags.get("limit").map(|s| s.parse()).transpose()?.unwrap_or(500);
+    let q = quantize(&model, &ratios, RhoMode::Norm)?;
+    let rep = evaluate(&model, &q, &data, limit)?;
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
+    let (spec, model, _) = load_net(flags)?;
+    let ratios = ratios_from_flags(flags, &spec)?;
+    let q = quantize(&model, &ratios, RhoMode::Norm)?;
+    let widx = spec.weighted_layers();
+    for (r, &li) in q.reports.iter().zip(&widx) {
+        let layer = q.quant_model.layers[li].as_ref().unwrap();
+        let mut comps = layer.w.clone();
+        comps.extend_from_slice(&layer.b_pyramid);
+        let pv = pvqnet::pvq::PvqVector { k: layer.k, components: comps, rho: layer.rho };
+        println!("{} (N={} K={}):", r.label, r.n, r.k);
+        for (name, bpw) in pvqnet::compress::codec_survey(&pv) {
+            println!("  {name:<16} {bpw:>7.3} bits/weight");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_hwsim(flags: &HashMap<String, String>) -> Result<()> {
+    let (_, model, _) = load_net(flags)?;
+    let ratios = ratios_from_flags(flags, &model.spec.clone())?;
+    let q = quantize(&model, &ratios, RhoMode::Norm)?;
+    let rep = HwReport::from_model(&q.quant_model);
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let (spec, model, data) = load_net(flags)?;
+    let ratios = ratios_from_flags(flags, &spec)?;
+    let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
+    let q = quantize(&model, &ratios, RhoMode::Norm)?;
+    let engines = vec![
+        ("float".to_string(), Engine::Float(Arc::new(model))),
+        ("pvq".to_string(), Engine::PvqInt(Arc::new(q.quant_model))),
+    ];
+    let router = Router::new(
+        engines,
+        "pvq",
+        ServerConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+            queue_cap: 4096,
+        },
+    )?;
+    println!("serving {n_req} requests against net {} (routes: float, pvq)", spec.name);
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    for i in 0..n_req {
+        let s = data.sample(i % data.n).to_vec();
+        let route = if i % 4 == 0 { Some("float") } else { None };
+        let resp = router.classify(route, s)?;
+        if resp.class == data.labels[i % data.n] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done in {:.2}s → {:.0} req/s, accuracy {:.2}%",
+        dt.as_secs_f64(),
+        n_req as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / n_req as f64
+    );
+    println!("{}", router.summary());
+    router.shutdown();
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = artifacts_dir(flags);
+    println!("artifacts dir: {}", dir.display());
+    let manifest = dir.join("manifest.txt");
+    if manifest.exists() {
+        print!("{}", std::fs::read_to_string(manifest)?);
+    } else {
+        println!("(no manifest — run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "tables" => cmd_tables(),
+        "quantize" => cmd_quantize(&flags)?,
+        "eval" => cmd_eval(&flags)?,
+        "compress" => cmd_compress(&flags)?,
+        "hwsim" => cmd_hwsim(&flags)?,
+        "serve" => cmd_serve(&flags)?,
+        "info" => cmd_info(&flags)?,
+        "help" | "--help" | "-h" => {
+            println!(
+                "pvqnet — Pyramid Vector Quantization for Deep Learning\n\
+                 usage: pvqnet <tables|quantize|eval|compress|hwsim|serve|info>\n\
+                   common flags: --net a|b|c|d  --artifacts DIR  --ratios R[,R…]\n\
+                   eval:  --limit N      serve: --requests N"
+            );
+        }
+        other => bail!("unknown command '{other}' (try `pvqnet help`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Bit-packed binary PVQ dense layers (§V "binary PVQ nets", §VIII Fig. 2/3).
+//!
+//! When activations are bsign outputs (±1), a PVQ dot product
+//! Σ ŵᵢxᵢ can be evaluated with bit operations: pack x as a bitmask of
+//! +1 positions; group weights by signed value v; then
+//!
+//! ```text
+//! Σ_{i: ŵᵢ=v} v·xᵢ = v · (2·popcount(maskᵥ ∧ x⁺) − popcount(maskᵥ))
+//! ```
+//!
+//! — the software analogue of the paper's XOR/up-down-counter circuit
+//! (Fig. 2) and LUT packing (Fig. 3). PVQ weight values are tiny
+//! (Tables 5–8: ≥97% in {0,±1,±2,±3}), so each row holds only a handful
+//! of masks.
+
+use anyhow::{bail, Result};
+
+/// ±1 activations packed as a "+1 positions" bitmask.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitVec {
+    /// Logical length in elements.
+    pub len: usize,
+    /// 64-bit words, LSB-first; bit i set ⇔ xᵢ = +1.
+    pub words: Vec<u64>,
+}
+
+impl BitVec {
+    /// Pack a ±1 i64 slice.
+    pub fn from_pm1(x: &[i64]) -> Result<Self> {
+        let mut words = vec![0u64; x.len().div_ceil(64)];
+        for (i, &v) in x.iter().enumerate() {
+            match v {
+                1 => words[i / 64] |= 1 << (i % 64),
+                -1 => {}
+                _ => bail!("non-±1 activation {v} at {i}"),
+            }
+        }
+        Ok(BitVec { len: x.len(), words })
+    }
+
+    /// Unpack to ±1 values.
+    pub fn to_pm1(&self) -> Vec<i64> {
+        (0..self.len)
+            .map(|i| if self.words[i / 64] >> (i % 64) & 1 == 1 { 1 } else { -1 })
+            .collect()
+    }
+}
+
+/// One output row: weights grouped by signed value into position masks.
+#[derive(Clone, Debug)]
+struct BinRow {
+    /// (signed weight value v, +1-position mask of the inputs it touches,
+    ///  popcount of that mask)
+    groups: Vec<(i32, Vec<u64>, u32)>,
+    /// integer bias
+    bias: i32,
+}
+
+/// A bit-packed binary PVQ dense layer.
+#[derive(Clone, Debug)]
+pub struct BinaryDense {
+    /// Input dimension.
+    pub input: usize,
+    /// Output dimension.
+    pub output: usize,
+    rows: Vec<BinRow>,
+}
+
+impl BinaryDense {
+    /// Compile integer weights (out-major `w[out·in]`, bias `b[out]`) into
+    /// per-value masks.
+    pub fn compile(w: &[i32], b: &[i32], input: usize, output: usize) -> Self {
+        assert_eq!(w.len(), input * output);
+        assert_eq!(b.len(), output);
+        let nwords = input.div_ceil(64);
+        let mut rows = Vec::with_capacity(output);
+        for o in 0..output {
+            let row = &w[o * input..(o + 1) * input];
+            let mut by_val: std::collections::BTreeMap<i32, Vec<u64>> =
+                std::collections::BTreeMap::new();
+            for (i, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    let mask = by_val.entry(v).or_insert_with(|| vec![0u64; nwords]);
+                    mask[i / 64] |= 1 << (i % 64);
+                }
+            }
+            let groups = by_val
+                .into_iter()
+                .map(|(v, mask)| {
+                    let pc: u32 = mask.iter().map(|w| w.count_ones()).sum();
+                    (v, mask, pc)
+                })
+                .collect();
+            rows.push(BinRow { groups, bias: b[o] });
+        }
+        BinaryDense { input, output, rows }
+    }
+
+    /// y = ŵ·x + b̂ for ±1 packed input — popcount path.
+    pub fn forward(&self, x: &BitVec) -> Vec<i64> {
+        debug_assert_eq!(x.len, self.input);
+        let mut y = Vec::with_capacity(self.output);
+        for row in &self.rows {
+            let mut acc = row.bias as i64;
+            for (v, mask, pc) in &row.groups {
+                let mut plus = 0u32;
+                for (m, xw) in mask.iter().zip(&x.words) {
+                    plus += (m & xw).count_ones();
+                }
+                // Σ v·x over mask = v·(plus − minus) = v·(2·plus − pc)
+                acc += *v as i64 * (2 * plus as i64 - *pc as i64);
+            }
+            y.push(acc);
+        }
+        y
+    }
+
+    /// Apply bsign to integer pre-activations and repack.
+    pub fn forward_bsign(&self, x: &BitVec) -> BitVec {
+        let y = self.forward(x);
+        let mut words = vec![0u64; self.output.div_ceil(64)];
+        for (i, &v) in y.iter().enumerate() {
+            if v >= 0 {
+                words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        BitVec { len: self.output, words }
+    }
+}
+
+/// The paper's binary maxpool (eq. 20): with +1 encoded as a set bit,
+/// max over a window is the OR of the bits (any +1 ⇒ +1).
+pub fn binary_max(bits: &[bool]) -> bool {
+    bits.iter().any(|&b| b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::pvq_engine::{dense_i64, OpCount};
+    use crate::testkit::Rng;
+
+    #[test]
+    fn pack_roundtrip() {
+        let x: Vec<i64> = vec![1, -1, -1, 1, 1, -1, 1];
+        let b = BitVec::from_pm1(&x).unwrap();
+        assert_eq!(b.to_pm1(), x);
+    }
+
+    #[test]
+    fn rejects_non_pm1() {
+        assert!(BitVec::from_pm1(&[1, 0, -1]).is_err());
+        assert!(BitVec::from_pm1(&[2]).is_err());
+    }
+
+    #[test]
+    fn matches_integer_dense() {
+        let mut rng = Rng::new(6);
+        for _ in 0..30 {
+            let input = 1 + (rng.next_u64() % 300) as usize;
+            let output = 1 + (rng.next_u64() % 20) as usize;
+            let w: Vec<i32> = (0..input * output)
+                .map(|_| {
+                    // PVQ-like: mostly 0, small magnitudes
+                    let r = rng.next_u64() % 10;
+                    match r {
+                        0..=5 => 0,
+                        6 => 1,
+                        7 => -1,
+                        8 => 2,
+                        _ => -3,
+                    }
+                })
+                .collect();
+            let b: Vec<i32> = (0..output).map(|_| (rng.below(5) as i32) - 2).collect();
+            let x: Vec<i64> = (0..input).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+
+            let mut ops = OpCount::default();
+            let expect = dense_i64(&x, &w, &b, input, output, &mut ops);
+            let bd = BinaryDense::compile(&w, &b, input, output);
+            let packed = BitVec::from_pm1(&x).unwrap();
+            assert_eq!(bd.forward(&packed), expect);
+        }
+    }
+
+    #[test]
+    fn bsign_chain() {
+        let mut rng = Rng::new(7);
+        let (n0, n1, n2) = (128, 64, 10);
+        let w1: Vec<i32> = (0..n0 * n1).map(|_| (rng.below(3) as i32) - 1).collect();
+        let b1 = vec![0i32; n1];
+        let w2: Vec<i32> = (0..n1 * n2).map(|_| (rng.below(3) as i32) - 1).collect();
+        let b2 = vec![0i32; n2];
+        let x: Vec<i64> = (0..n0).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+
+        // reference: integer path with explicit bsign
+        let mut ops = OpCount::default();
+        let mut h = dense_i64(&x, &w1, &b1, n0, n1, &mut ops);
+        for v in h.iter_mut() {
+            *v = if *v >= 0 { 1 } else { -1 };
+        }
+        let logits_ref = dense_i64(&h, &w2, &b2, n1, n2, &mut ops);
+
+        // bit path
+        let l1 = BinaryDense::compile(&w1, &b1, n0, n1);
+        let l2 = BinaryDense::compile(&w2, &b2, n1, n2);
+        let logits_bit = l2.forward(&l1.forward_bsign(&BitVec::from_pm1(&x).unwrap()));
+        assert_eq!(logits_bit, logits_ref);
+    }
+
+    #[test]
+    fn binary_max_is_or() {
+        assert!(binary_max(&[false, true]));
+        assert!(!binary_max(&[false, false]));
+    }
+}

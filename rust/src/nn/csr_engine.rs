@@ -1,0 +1,313 @@
+//! Compiled (CSR) integer PVQ engine — the performance-optimized hot path.
+//!
+//! [`crate::nn::pvq_engine::forward_int`] walks the dense weight buffer
+//! and branches on every zero (70–90 % of entries at FC ratios). Since
+//! PVQ weights are offline constants (§VIII: "the number and position of
+//! zero coefficients … are known in advance and they can be excluded from
+//! any calculation"), we compile each dense layer to CSR once and the hot
+//! loop touches only nonzeros — the software twin of the Fig. 1
+//! multiplier architecture's cycle skipping.
+//!
+//! Conv layers keep the dense kernel loop (kernels are tiny and reused
+//! per position; the zero-branch predicts well there) but hoist the
+//! kernel nonzero list per output channel.
+
+use super::model::{Activation, LayerSpec};
+use super::pvq_engine::{maxpool2x2_i64, QuantModel};
+use super::tensor::{argmax_i64, ITensor};
+use anyhow::{bail, Result};
+
+/// One CSR-compiled dense layer.
+#[derive(Clone, Debug)]
+struct CsrDense {
+    input: usize,
+    output: usize,
+    /// row_ptr[o]..row_ptr[o+1] indexes idx/val for output o.
+    row_ptr: Vec<u32>,
+    idx: Vec<u32>,
+    val: Vec<i32>,
+    bias: Vec<i64>,
+    act: Activation,
+}
+
+/// Conv layer with per-output-channel nonzero kernel taps.
+#[derive(Clone, Debug)]
+struct TapConv {
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    /// per cout: (ky, kx, ci, weight)
+    taps: Vec<Vec<(u8, u8, u16, i32)>>,
+    bias: Vec<i64>,
+    act: Activation,
+}
+
+#[derive(Clone, Debug)]
+enum CompiledLayer {
+    Dense(CsrDense),
+    Conv(TapConv),
+    MaxPool,
+    Flatten,
+    Noop,
+}
+
+/// A quantized model compiled for fast integer inference.
+#[derive(Clone, Debug)]
+pub struct CompiledQuantModel {
+    layers: Vec<CompiledLayer>,
+    input_shape: Vec<usize>,
+    /// scratch-free: output class count for sizing
+    pub outputs: usize,
+}
+
+impl CompiledQuantModel {
+    /// Compile a [`QuantModel`] (one-time cost, off the request path).
+    pub fn compile(m: &QuantModel) -> Result<Self> {
+        let mut layers = Vec::new();
+        let mut outputs = 0;
+        for (l, q) in m.spec.layers.iter().zip(&m.layers) {
+            match l {
+                LayerSpec::Dense { input, output, act } => {
+                    let q = match q {
+                        Some(q) => q,
+                        None => bail!("dense layer not quantized"),
+                    };
+                    let mut row_ptr = Vec::with_capacity(output + 1);
+                    let mut idx = Vec::new();
+                    let mut val = Vec::new();
+                    row_ptr.push(0u32);
+                    for o in 0..*output {
+                        let row = &q.w[o * input..(o + 1) * input];
+                        for (i, &wv) in row.iter().enumerate() {
+                            if wv != 0 {
+                                idx.push(i as u32);
+                                val.push(wv);
+                            }
+                        }
+                        row_ptr.push(idx.len() as u32);
+                    }
+                    layers.push(CompiledLayer::Dense(CsrDense {
+                        input: *input,
+                        output: *output,
+                        row_ptr,
+                        idx,
+                        val,
+                        bias: q.b.iter().map(|&b| b as i64).collect(),
+                        act: *act,
+                    }));
+                    outputs = *output;
+                }
+                LayerSpec::Conv2d { kh, kw, cin, cout, act } => {
+                    let q = match q {
+                        Some(q) => q,
+                        None => bail!("conv layer not quantized"),
+                    };
+                    let mut taps = vec![Vec::new(); *cout];
+                    for ky in 0..*kh {
+                        for kx in 0..*kw {
+                            for ci in 0..*cin {
+                                for (co, tap) in taps.iter_mut().enumerate() {
+                                    let wv = q.w[((ky * kw + kx) * cin + ci) * cout + co];
+                                    if wv != 0 {
+                                        tap.push((ky as u8, kx as u8, ci as u16, wv));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    layers.push(CompiledLayer::Conv(TapConv {
+                        kh: *kh,
+                        kw: *kw,
+                        cin: *cin,
+                        cout: *cout,
+                        taps,
+                        bias: q.b.iter().map(|&b| b as i64).collect(),
+                        act: *act,
+                    }));
+                    outputs = *cout;
+                }
+                LayerSpec::MaxPool2x2 => layers.push(CompiledLayer::MaxPool),
+                LayerSpec::Flatten => layers.push(CompiledLayer::Flatten),
+                LayerSpec::Dropout(_) | LayerSpec::Scale(_) => layers.push(CompiledLayer::Noop),
+            }
+        }
+        Ok(CompiledQuantModel { layers, input_shape: m.spec.input_shape.clone(), outputs })
+    }
+
+    /// Integer forward pass — argmax-identical to
+    /// [`crate::nn::pvq_engine::forward_int`] (property-tested), without
+    /// op counting or scale bookkeeping.
+    pub fn forward(&self, input: &ITensor) -> Vec<i64> {
+        let mut data = input.data.clone();
+        let mut hwc: Option<(usize, usize, usize)> = match self.input_shape.as_slice() {
+            [h, w, c] => Some((*h, *w, *c)),
+            _ => None,
+        };
+        let mut out: Vec<i64> = Vec::new();
+        for layer in &self.layers {
+            match layer {
+                CompiledLayer::Dense(d) => {
+                    debug_assert_eq!(data.len(), d.input);
+                    out.clear();
+                    out.reserve(d.output);
+                    for o in 0..d.output {
+                        let lo = d.row_ptr[o] as usize;
+                        let hi = d.row_ptr[o + 1] as usize;
+                        let mut acc = d.bias[o];
+                        for t in lo..hi {
+                            // SAFETY-free fast path: indices are compile-
+                            // checked against `input` at build time.
+                            acc += d.val[t] as i64 * data[d.idx[t] as usize];
+                        }
+                        out.push(apply_act(acc, d.act));
+                    }
+                    std::mem::swap(&mut data, &mut out);
+                }
+                CompiledLayer::Conv(cv) => {
+                    let (h, w, cin) = hwc.expect("conv needs HWC");
+                    debug_assert_eq!(cin, cv.cin);
+                    let mut o = vec![0i64; h * w * cv.cout];
+                    for oy in 0..h {
+                        for ox in 0..w {
+                            let obase = (oy * w + ox) * cv.cout;
+                            for co in 0..cv.cout {
+                                let mut acc = cv.bias[co];
+                                for &(ky, kx, ci, wv) in &cv.taps[co] {
+                                    let iy = oy as isize + ky as isize - (cv.kh / 2) as isize;
+                                    let ix = ox as isize + kx as isize - (cv.kw / 2) as isize;
+                                    if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                                        acc += wv as i64
+                                            * data[((iy as usize) * w + ix as usize) * cin
+                                                + ci as usize];
+                                    }
+                                }
+                                o[obase + co] = apply_act(acc, cv.act);
+                            }
+                        }
+                    }
+                    data = o;
+                    hwc = Some((h, w, cv.cout));
+                }
+                CompiledLayer::MaxPool => {
+                    let dims = hwc.expect("pool needs HWC");
+                    let (d, nd) = maxpool2x2_i64(&data, dims);
+                    data = d;
+                    hwc = Some(nd);
+                }
+                CompiledLayer::Flatten => hwc = None,
+                CompiledLayer::Noop => {}
+            }
+        }
+        data
+    }
+
+    /// Classify one integer input.
+    pub fn classify(&self, input: &ITensor) -> usize {
+        argmax_i64(&self.forward(input))
+    }
+}
+
+#[inline(always)]
+fn apply_act(v: i64, act: Activation) -> i64 {
+    match act {
+        Activation::Relu => v.max(0),
+        Activation::BSign => {
+            if v >= 0 {
+                1
+            } else {
+                -1
+            }
+        }
+        Activation::None => v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::LayerParams;
+    use crate::nn::model::ModelSpec;
+    use crate::nn::{forward_int, Model};
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn matches_reference_engine_mlp() {
+        check("csr-vs-reference", 606, 20, |_, rng| {
+            let d0 = 8 + rng.below(60) as usize;
+            let d1 = 4 + rng.below(30) as usize;
+            let d2 = 2 + rng.below(8) as usize;
+            let spec = ModelSpec {
+                name: "csr".into(),
+                input_shape: vec![d0],
+                layers: vec![
+                    LayerSpec::Scale(1.0 / 255.0),
+                    LayerSpec::Dense { input: d0, output: d1, act: Activation::Relu },
+                    LayerSpec::Dense { input: d1, output: d2, act: Activation::None },
+                ],
+            };
+            let params = vec![
+                None,
+                Some(LayerParams {
+                    w: rng.laplacian_vec(d0 * d1, 0.3).iter().map(|&v| v as f32).collect(),
+                    b: rng.laplacian_vec(d1, 0.1).iter().map(|&v| v as f32).collect(),
+                }),
+                Some(LayerParams {
+                    w: rng.laplacian_vec(d1 * d2, 0.3).iter().map(|&v| v as f32).collect(),
+                    b: rng.laplacian_vec(d2, 0.1).iter().map(|&v| v as f32).collect(),
+                }),
+            ];
+            let model = Model { spec, params };
+            let q = quantize(&model, &[3.0, 3.0], RhoMode::Norm).unwrap();
+            let compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+            for _ in 0..5 {
+                let pix: Vec<u8> = (0..d0).map(|_| rng.below(256) as u8).collect();
+                let xi = ITensor::from_u8(&[d0], &pix);
+                let want = forward_int(&q.quant_model, &xi).unwrap().logits;
+                let got = compiled.forward(&xi);
+                assert_eq!(got, want);
+            }
+        });
+    }
+
+    #[test]
+    fn matches_reference_engine_cnn() {
+        let mut rng = Rng::new(7);
+        let spec = ModelSpec {
+            name: "csrc".into(),
+            input_shape: vec![8, 8, 2],
+            layers: vec![
+                LayerSpec::Scale(1.0 / 255.0),
+                LayerSpec::Conv2d { kh: 3, kw: 3, cin: 2, cout: 4, act: Activation::Relu },
+                LayerSpec::MaxPool2x2,
+                LayerSpec::Flatten,
+                LayerSpec::Dense { input: 4 * 4 * 4, output: 5, act: Activation::None },
+            ],
+        };
+        let params = vec![
+            None,
+            Some(LayerParams {
+                w: rng.laplacian_vec(3 * 3 * 2 * 4, 0.3).iter().map(|&v| v as f32).collect(),
+                b: rng.laplacian_vec(4, 0.05).iter().map(|&v| v as f32).collect(),
+            }),
+            None,
+            None,
+            Some(LayerParams {
+                w: rng.laplacian_vec(64 * 5, 0.3).iter().map(|&v| v as f32).collect(),
+                b: rng.laplacian_vec(5, 0.05).iter().map(|&v| v as f32).collect(),
+            }),
+        ];
+        let model = Model { spec, params };
+        let q = quantize(&model, &[1.0, 2.0], RhoMode::Norm).unwrap();
+        let compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+        for _ in 0..10 {
+            let pix: Vec<u8> = (0..8 * 8 * 2).map(|_| rng.below(256) as u8).collect();
+            let xi = ITensor::from_u8(&[8, 8, 2], &pix);
+            let want = forward_int(&q.quant_model, &xi).unwrap().logits;
+            let got = compiled.forward(&xi);
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Float reference engine: forward pass over a [`ModelSpec`] with f32
+//! parameters. This is the "NN as trained" baseline the PVQ engines are
+//! compared against, and the ground truth the PJRT-loaded HLO graphs are
+//! integration-tested on.
+
+use super::model::{Activation, LayerSpec, ModelSpec};
+use super::tensor::{argmax_f32, Tensor};
+use anyhow::{bail, Result};
+
+/// Weights+bias of one layer. Dense: `w[out·in]` (row-major, out-major);
+/// conv: HWIO `w[kh·kw·cin·cout]`. Bias length = output channels/units.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    /// Weight buffer.
+    pub w: Vec<f32>,
+    /// Bias buffer.
+    pub b: Vec<f32>,
+}
+
+/// A spec plus per-layer parameters (None for parameterless layers).
+#[derive(Clone, Debug)]
+pub struct Model {
+    /// Architecture.
+    pub spec: ModelSpec,
+    /// Parallel to `spec.layers`.
+    pub params: Vec<Option<LayerParams>>,
+}
+
+impl Model {
+    /// Validate parameter buffer sizes against the spec.
+    pub fn validate(&self) -> Result<()> {
+        if self.params.len() != self.spec.layers.len() {
+            bail!("params/layers length mismatch");
+        }
+        for (i, (l, p)) in self.spec.layers.iter().zip(&self.params).enumerate() {
+            match (l.has_params(), p) {
+                (true, Some(p)) => {
+                    let (wlen, blen) = match l {
+                        LayerSpec::Dense { input, output, .. } => (input * output, *output),
+                        LayerSpec::Conv2d { kh, kw, cin, cout, .. } => (kh * kw * cin * cout, *cout),
+                        _ => unreachable!(),
+                    };
+                    if p.w.len() != wlen || p.b.len() != blen {
+                        bail!("layer {i}: expected w={wlen} b={blen}, got w={} b={}", p.w.len(), p.b.len());
+                    }
+                }
+                (true, None) => bail!("layer {i} missing params"),
+                (false, Some(_)) => bail!("layer {i} should not have params"),
+                (false, None) => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Parameters of the i-th *weighted* layer.
+    pub fn weighted_params(&self, wi: usize) -> &LayerParams {
+        let idx = self.spec.weighted_layers()[wi];
+        self.params[idx].as_ref().unwrap()
+    }
+}
+
+/// Apply activation in place.
+fn activate(data: &mut [f32], act: Activation) {
+    match act {
+        Activation::Relu => {
+            for v in data {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Activation::BSign => {
+            for v in data {
+                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        Activation::None => {}
+    }
+}
+
+/// Dense layer: y = Wx + b.
+pub fn dense_f32(x: &[f32], w: &[f32], b: &[f32], input: usize, output: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), input);
+    let mut y = Vec::with_capacity(output);
+    for o in 0..output {
+        let row = &w[o * input..(o + 1) * input];
+        let mut acc = b[o];
+        for i in 0..input {
+            acc += row[i] * x[i];
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// SAME-padded stride-1 conv over HWC input with HWIO kernel.
+pub fn conv2d_same_f32(
+    x: &[f32],
+    (h, w, cin): (usize, usize, usize),
+    k: &[f32],
+    b: &[f32],
+    (kh, kw, cout): (usize, usize, usize),
+) -> Vec<f32> {
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut out = vec![0.0f32; h * w * cout];
+    for oy in 0..h {
+        for ox in 0..w {
+            let obase = (oy * w + ox) * cout;
+            out[obase..obase + cout].copy_from_slice(b);
+            for ky in 0..kh {
+                let iy = oy as isize + ky as isize - ph as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = ox as isize + kx as isize - pw as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let ibase = ((iy as usize) * w + ix as usize) * cin;
+                    let kbase = ((ky * kw + kx) * cin) * cout;
+                    for ci in 0..cin {
+                        let xv = x[ibase + ci];
+                        let krow = &k[kbase + ci * cout..kbase + (ci + 1) * cout];
+                        let orow = &mut out[obase..obase + cout];
+                        for co in 0..cout {
+                            orow[co] += xv * krow[co];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 stride-2 max pool (floor) over HWC.
+pub fn maxpool2x2_f32(x: &[f32], (h, w, c): (usize, usize, usize)) -> (Vec<f32>, (usize, usize, usize)) {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ci in 0..c {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(x[((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ci]);
+                    }
+                }
+                out[(oy * ow + ox) * c + ci] = m;
+            }
+        }
+    }
+    (out, (oh, ow, c))
+}
+
+/// Full forward pass; returns raw logits.
+pub fn forward(model: &Model, input: &Tensor) -> Vec<f32> {
+    let mut data = input.data.clone();
+    let mut hwc: Option<(usize, usize, usize)> = match model.spec.input_shape.as_slice() {
+        [h, w, c] => Some((*h, *w, *c)),
+        _ => None,
+    };
+    for (l, p) in model.spec.layers.iter().zip(&model.params) {
+        match l {
+            LayerSpec::Dense { input, output, act } => {
+                let p = p.as_ref().expect("dense params");
+                data = dense_f32(&data, &p.w, &p.b, *input, *output);
+                activate(&mut data, *act);
+            }
+            LayerSpec::Conv2d { kh, kw, cin, cout, act } => {
+                let p = p.as_ref().expect("conv params");
+                let dims = hwc.expect("conv needs HWC input");
+                debug_assert_eq!(dims.2, *cin);
+                data = conv2d_same_f32(&data, dims, &p.w, &p.b, (*kh, *kw, *cout));
+                hwc = Some((dims.0, dims.1, *cout));
+                activate(&mut data, *act);
+            }
+            LayerSpec::MaxPool2x2 => {
+                let dims = hwc.expect("pool needs HWC input");
+                let (d, nd) = maxpool2x2_f32(&data, dims);
+                data = d;
+                hwc = Some(nd);
+            }
+            LayerSpec::Flatten => {
+                hwc = None;
+            }
+            LayerSpec::Dropout(_) => {} // inference no-op
+            LayerSpec::Scale(c) => {
+                for v in data.iter_mut() {
+                    *v *= c;
+                }
+            }
+        }
+    }
+    data
+}
+
+/// Classify a single input (argmax of logits).
+pub fn classify(model: &Model, input: &Tensor) -> usize {
+    argmax_f32(&forward(model, input))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::Activation;
+    use crate::testkit::Rng;
+
+    fn tiny_dense_model(act: Activation) -> Model {
+        let spec = ModelSpec {
+            name: "tiny".into(),
+            input_shape: vec![3],
+            layers: vec![
+                LayerSpec::Dense { input: 3, output: 2, act },
+                LayerSpec::Dense { input: 2, output: 2, act: Activation::None },
+            ],
+        };
+        let params = vec![
+            Some(LayerParams { w: vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5], b: vec![0.0, 1.0] }),
+            Some(LayerParams { w: vec![1.0, -1.0, 2.0, 0.0], b: vec![0.5, -0.5] }),
+        ];
+        Model { spec, params }
+    }
+
+    #[test]
+    fn dense_forward_by_hand() {
+        let m = tiny_dense_model(Activation::Relu);
+        m.validate().unwrap();
+        // layer0: [1*1+0*2-1*3, 0.5*(1+2+3)+1] = [-2, 4] → relu → [0, 4]
+        // layer1: [0*1-4*1+0.5, 0*2+4*0-0.5] = [-3.5, -0.5]
+        let out = forward(&m, &Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]));
+        assert_eq!(out, vec![-3.5, -0.5]);
+        assert_eq!(classify(&m, &Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0])), 1);
+    }
+
+    #[test]
+    fn bsign_outputs_pm1() {
+        let m = tiny_dense_model(Activation::BSign);
+        let mut rng = Rng::new(1);
+        let x = Tensor::from_vec(&[3], rng.gaussian_vec_f32(3, 1.0));
+        // intermediate activations are ±1; final layer linear
+        let out = forward(&m, &x);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1×1 kernel, 1→1 channels, weight 1, bias 0: output == input
+        let spec = ModelSpec {
+            name: "id".into(),
+            input_shape: vec![4, 4, 1],
+            layers: vec![LayerSpec::Conv2d { kh: 1, kw: 1, cin: 1, cout: 1, act: Activation::None }],
+        };
+        let params = vec![Some(LayerParams { w: vec![1.0], b: vec![0.0] })];
+        let m = Model { spec, params };
+        let mut rng = Rng::new(2);
+        let x = rng.gaussian_vec_f32(16, 1.0);
+        let out = forward(&m, &Tensor::from_vec(&[4, 4, 1], x.clone()));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn conv_same_padding_shape_and_sum() {
+        // 3×3 all-ones kernel on all-ones 3×3 image: center=9, edge=6, corner=4
+        let spec = ModelSpec {
+            name: "sum".into(),
+            input_shape: vec![3, 3, 1],
+            layers: vec![LayerSpec::Conv2d { kh: 3, kw: 3, cin: 1, cout: 1, act: Activation::None }],
+        };
+        let params = vec![Some(LayerParams { w: vec![1.0; 9], b: vec![0.0] })];
+        let m = Model { spec, params };
+        let out = forward(&m, &Tensor::from_vec(&[3, 3, 1], vec![1.0; 9]));
+        assert_eq!(out, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect(); // 4x4x1
+        let (out, dims) = maxpool2x2_f32(&x, (4, 4, 1));
+        assert_eq!(dims, (2, 2, 1));
+        assert_eq!(out, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_odd_floor() {
+        let x = vec![1.0; 5 * 5 * 2];
+        let (out, dims) = maxpool2x2_f32(&x, (5, 5, 2));
+        assert_eq!(dims, (2, 2, 2));
+        assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn full_cnn_shape_flow() {
+        // net-B-shaped but tiny channels: verify geometry end to end
+        let spec = ModelSpec {
+            name: "mini".into(),
+            input_shape: vec![8, 8, 3],
+            layers: vec![
+                LayerSpec::Conv2d { kh: 3, kw: 3, cin: 3, cout: 4, act: Activation::Relu },
+                LayerSpec::MaxPool2x2,
+                LayerSpec::Flatten,
+                LayerSpec::Dense { input: 4 * 4 * 4, output: 10, act: Activation::None },
+            ],
+        };
+        let mut rng = Rng::new(3);
+        let params = vec![
+            Some(LayerParams { w: rng.gaussian_vec_f32(3 * 3 * 3 * 4, 0.2), b: vec![0.0; 4] }),
+            None,
+            None,
+            Some(LayerParams { w: rng.gaussian_vec_f32(64 * 10, 0.2), b: vec![0.0; 10] }),
+        ];
+        let m = Model { spec, params };
+        m.validate().unwrap();
+        let x = Tensor::from_vec(&[8, 8, 3], rng.gaussian_vec_f32(192, 1.0));
+        let out = forward(&m, &x);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let mut m = tiny_dense_model(Activation::Relu);
+        m.params[0].as_mut().unwrap().w.pop();
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Neural-network substrates: float reference engine, integer PVQ engine,
+//! bit-packed binary engine, model descriptors, weight container.
+
+pub mod binary;
+pub mod csr_engine;
+pub mod layers;
+pub mod model;
+pub mod pvq_engine;
+pub mod tensor;
+pub mod weights;
+
+pub use layers::{classify, forward, LayerParams, Model};
+pub use model::{Activation, LayerSpec, ModelSpec};
+pub use csr_engine::CompiledQuantModel;
+pub use pvq_engine::{classify_int, forward_int, IntForward, OpCount, QuantLayer, QuantModel};
+pub use tensor::{argmax_f32, argmax_i64, ITensor, Tensor};

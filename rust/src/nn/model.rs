@@ -1,0 +1,246 @@
+//! Model architecture descriptors — the paper's nets A, B, C, D
+//! (Tables 1–4) plus arbitrary user-defined stacks.
+
+/// Activation applied inside a weighted layer (the paper's eq. 12 vs 16
+//  distinction: ReLU passes ρ through; bsign absorbs it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// max(0, x): f(ρx) = ρ·f(x) — ρ propagates (integer PVQ nets).
+    Relu,
+    /// bsign(x) ∈ {−1,+1}: f(ρx) = f(x) for ρ>0 — ρ absorbed (binary PVQ nets).
+    BSign,
+    /// identity (output layer before argmax).
+    None,
+}
+
+/// One layer of a sequential model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    /// Fully connected `in → out` with activation.
+    Dense { input: usize, output: usize, act: Activation },
+    /// 2-D convolution, kernel `kh×kw`, channels `cin → cout`, stride 1,
+    /// SAME padding (all the paper's conv layers are SAME — Table 2's
+    /// FC4 input of 4096 = 8·8·64 requires it), HWC layout, HWIO kernels.
+    Conv2d { kh: usize, kw: usize, cin: usize, cout: usize, act: Activation },
+    /// 2×2 max pooling, stride 2 (floor).
+    MaxPool2x2,
+    /// Flatten HWC → vector.
+    Flatten,
+    /// Dropout — inference no-op, recorded for table parity.
+    Dropout(f32),
+    /// Multiply inputs by a constant (e.g. 1/255 pixel normalization).
+    /// The float engine applies it; the integer engine folds it into the
+    /// scale bookkeeping (x_true = c·u) so integers stay integers.
+    Scale(f32),
+}
+
+impl LayerSpec {
+    /// Number of weights + biases (the paper's per-layer N column).
+    pub fn param_count(&self) -> usize {
+        match self {
+            LayerSpec::Dense { input, output, .. } => input * output + output,
+            LayerSpec::Conv2d { kh, kw, cin, cout, .. } => kh * kw * cin * cout + cout,
+            _ => 0,
+        }
+    }
+
+    /// True if the layer carries weights (PVQ applies to it).
+    pub fn has_params(&self) -> bool {
+        self.param_count() > 0
+    }
+
+    /// Short display name matching the paper's table labels.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerSpec::Dense { .. } => "FC",
+            LayerSpec::Conv2d { .. } => "CONV",
+            LayerSpec::MaxPool2x2 => "MAX",
+            LayerSpec::Flatten => "FLAT",
+            LayerSpec::Dropout(_) => "DRP",
+            LayerSpec::Scale(_) => "SCL",
+        }
+    }
+}
+
+/// A sequential model description plus input geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// Human name ("A", "B", "C", "D", or custom).
+    pub name: String,
+    /// Input shape: `[features]` for MLPs, `[h, w, c]` for CNNs.
+    pub input_shape: Vec<usize>,
+    /// Layers in execution order.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Paper Table 1 / Table 3: MNIST MLP 784-512-512-10.
+    /// `act` = Relu → net A; BSign → net C.
+    pub fn mnist_mlp(act: Activation, name: &str) -> Self {
+        ModelSpec {
+            name: name.to_string(),
+            input_shape: vec![784],
+            layers: vec![
+                LayerSpec::Scale(1.0 / 255.0),
+                LayerSpec::Dense { input: 784, output: 512, act },
+                LayerSpec::Dropout(0.2),
+                LayerSpec::Dense { input: 512, output: 512, act },
+                LayerSpec::Dropout(0.2),
+                LayerSpec::Dense { input: 512, output: 10, act: Activation::None },
+            ],
+        }
+    }
+
+    /// Paper Table 2 / Table 4: CIFAR CNN. `act` = Relu → net B; BSign → D.
+    /// (Dropout layers included for net B per Table 2; the paper dropped
+    /// them for net D "as it resulted in worse results" — we keep the spec
+    /// identical and let training decide, since dropout is an inference
+    /// no-op.)
+    pub fn cifar_cnn(act: Activation, name: &str) -> Self {
+        ModelSpec {
+            name: name.to_string(),
+            input_shape: vec![32, 32, 3],
+            layers: vec![
+                LayerSpec::Scale(1.0 / 255.0),
+                LayerSpec::Conv2d { kh: 3, kw: 3, cin: 3, cout: 32, act },
+                LayerSpec::Conv2d { kh: 3, kw: 3, cin: 32, cout: 32, act },
+                LayerSpec::MaxPool2x2,
+                LayerSpec::Dropout(0.25),
+                LayerSpec::Conv2d { kh: 3, kw: 3, cin: 32, cout: 64, act },
+                LayerSpec::Conv2d { kh: 3, kw: 3, cin: 64, cout: 64, act },
+                LayerSpec::MaxPool2x2,
+                LayerSpec::Dropout(0.25),
+                LayerSpec::Flatten,
+                LayerSpec::Dense { input: 4096, output: 512, act },
+                LayerSpec::Dropout(0.5),
+                LayerSpec::Dense { input: 512, output: 10, act: Activation::None },
+            ],
+        }
+    }
+
+    /// Nets by paper letter.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "a" => Some(Self::mnist_mlp(Activation::Relu, "A")),
+            "b" => Some(Self::cifar_cnn(Activation::Relu, "B")),
+            "c" => Some(Self::mnist_mlp(Activation::BSign, "C")),
+            "d" => Some(Self::cifar_cnn(Activation::BSign, "D")),
+            _ => None,
+        }
+    }
+
+    /// The paper's default N/K ratio per weighted layer (§VII tables).
+    /// Returned in weighted-layer order.
+    pub fn paper_ratios(&self) -> Vec<f64> {
+        match self.name.as_str() {
+            // Table 1: FC0 5, FC1 5, FC2 5
+            "A" => vec![5.0, 5.0, 5.0],
+            // Table 2: CONV0 1/3, CONV1 1, CONV2 1, CONV3 1, FC4 4, FC5 1
+            "B" => vec![1.0 / 3.0, 1.0, 1.0, 1.0, 4.0, 1.0],
+            // Table 3: FC0 5/2, FC1 5, FC2 4
+            "C" => vec![2.5, 5.0, 4.0],
+            // Table 4: CONV0 2/5, CONV1 1, CONV2 3/2, CONV3 2, FC4 5, FC5 1
+            "D" => vec![0.4, 1.0, 1.5, 2.0, 5.0, 1.0],
+            _ => self.layers.iter().filter(|l| l.has_params()).map(|_| 1.0).collect(),
+        }
+    }
+
+    /// Indices (into `layers`) of weighted layers.
+    pub fn weighted_layers(&self) -> Vec<usize> {
+        (0..self.layers.len()).filter(|&i| self.layers[i].has_params()).collect()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Render the paper-style anatomy table (Tables 1–4 format).
+    pub fn anatomy_table(&self, ratios: &[f64]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("Net {} — input {:?}\n", self.name, self.input_shape));
+        out.push_str(&format!("{:<8} {:>14} {:>10} {:>8}\n", "Layer", "shape", "N", "N/K"));
+        let mut wi = 0;
+        for l in self.layers.iter() {
+            let shape = match l {
+                LayerSpec::Dense { input, output, .. } => format!("{input}→{output}"),
+                LayerSpec::Conv2d { kh, kw, cin, cout, .. } => {
+                    format!("{kh}x{kw},{cin}→{cout}")
+                }
+                LayerSpec::Dropout(p) => format!("p={p}"),
+                LayerSpec::Scale(c) => format!("x{c}"),
+                _ => String::new(),
+            };
+            if l.has_params() {
+                let r = ratios.get(wi).copied().unwrap_or(1.0);
+                out.push_str(&format!(
+                    "{:<8} {:>14} {:>10} {:>8.3}\n",
+                    format!("{}{}", l.label(), wi),
+                    shape,
+                    l.param_count(),
+                    r
+                ));
+                wi += 1;
+            } else {
+                out.push_str(&format!("{:<8} {:>14} {:>10} {:>8}\n", l.label(), shape, "-", "-"));
+            }
+        }
+        out.push_str(&format!("total params: {}\n", self.total_params()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_param_counts() {
+        // paper Table 1: FC0 401,920; FC1 262,656 (paper prints 262,625 —
+        // 512·512+512 = 262,656, we take the arithmetic); FC2 5,130.
+        let a = ModelSpec::by_name("a").unwrap();
+        let params: Vec<usize> =
+            a.layers.iter().filter(|l| l.has_params()).map(|l| l.param_count()).collect();
+        assert_eq!(params, vec![401_920, 262_656, 5_130]);
+    }
+
+    #[test]
+    fn table2_param_counts() {
+        let b = ModelSpec::by_name("b").unwrap();
+        let params: Vec<usize> =
+            b.layers.iter().filter(|l| l.has_params()).map(|l| l.param_count()).collect();
+        // paper Table 2: 896, 9,248, 18,496, 36,928, 2,097,664, 5,130
+        assert_eq!(params, vec![896, 9_248, 18_496, 36_928, 2_097_664, 5_130]);
+    }
+
+    #[test]
+    fn nets_c_d_share_anatomy_with_a_b() {
+        let a = ModelSpec::by_name("a").unwrap();
+        let c = ModelSpec::by_name("c").unwrap();
+        assert_eq!(a.total_params(), c.total_params());
+        let b = ModelSpec::by_name("b").unwrap();
+        let d = ModelSpec::by_name("d").unwrap();
+        assert_eq!(b.total_params(), d.total_params());
+    }
+
+    #[test]
+    fn ratios_match_weighted_layers() {
+        for n in ["a", "b", "c", "d"] {
+            let m = ModelSpec::by_name(n).unwrap();
+            assert_eq!(m.paper_ratios().len(), m.weighted_layers().len(), "net {n}");
+        }
+    }
+
+    #[test]
+    fn anatomy_table_renders() {
+        let b = ModelSpec::by_name("b").unwrap();
+        let t = b.anatomy_table(&b.paper_ratios());
+        assert!(t.contains("CONV0"));
+        assert!(t.contains("2097664") || t.contains("2,097,664"));
+    }
+
+    #[test]
+    fn unknown_net_none() {
+        assert!(ModelSpec::by_name("z").is_none());
+    }
+}

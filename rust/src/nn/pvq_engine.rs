@@ -1,0 +1,457 @@
+//! Integer PVQ inference engine (§V of the paper).
+//!
+//! After per-layer PVQ encoding, every weighted layer holds integer
+//! weights ŵ (Σ|ŵ| = K, biases included in the pyramid vector) and a
+//! scalar gain ρ. With ReLU/maxpool, ρ commutes with the nonlinearities,
+//! so the engine executes the whole net in pure integer adds/subs and
+//! tracks the accumulated scale `s = Π ρᵢ` only as metadata: the final
+//! argmax is unaffected (the paper's "integer PVQ nets").
+//!
+//! With bsign activations ρ is absorbed at every layer ("binary PVQ
+//! nets"); see also [`crate::nn::binary`] for the bit-packed fast path.
+//!
+//! Bias-scale correctness: the quantizer (`crate::quant::apply`) encodes
+//! layer ℓ over (w, b/s_{ℓ−1}) so that the integer recurrence
+//! uₗ = f(ŵ·uₗ₋₁ + b̂) reproduces the float PVQ net exactly with
+//! x_true = sₗ·uₗ. §V's power-of-2 rescaling is implemented: when
+//! activations outgrow [`RESCALE_LIMIT`], they are shifted right and the
+//! shift is folded into the scale.
+
+use super::model::{Activation, LayerSpec, ModelSpec};
+use super::tensor::{argmax_i64, ITensor};
+use anyhow::{bail, Result};
+
+/// Activation magnitude that triggers the §V power-of-2 rescale.
+pub const RESCALE_LIMIT: i64 = 1 << 40;
+/// Post-rescale target magnitude.
+const RESCALE_TARGET: u32 = 24;
+
+/// Integer parameters of one PVQ-encoded layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantLayer {
+    /// Integer weights, same layout as the float layer (dense out-major,
+    /// conv HWIO).
+    pub w: Vec<i32>,
+    /// Executable integer biases B = round(b̂/s) — what `forward_int`
+    /// adds (see `quant::apply` for the scale derivation).
+    pub b: Vec<i32>,
+    /// Pyramid bias components b̂ (part of the encoded point; the
+    /// invariant Σ|ŵ| + Σ|b̂| = K holds over these).
+    pub b_pyramid: Vec<i32>,
+    /// Gain ρ of the layer's PVQ encoding.
+    pub rho: f64,
+    /// Pulse budget K (Σ|ŵ| + Σ|b̂|).
+    pub k: u32,
+}
+
+impl QuantLayer {
+    /// Verify the pyramid invariant Σ|ŵ| + Σ|b̂| = K.
+    pub fn is_valid(&self) -> bool {
+        let l1: u64 = self
+            .w
+            .iter()
+            .chain(&self.b_pyramid)
+            .map(|&v| v.unsigned_abs() as u64)
+            .sum();
+        l1 == self.k as u64
+    }
+
+    /// Nonzero weight count (multiplier-architecture cycles, Fig. 1).
+    pub fn nonzeros(&self) -> usize {
+        self.w.iter().chain(&self.b).filter(|&&v| v != 0).count()
+    }
+}
+
+/// A fully PVQ-quantized model.
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    /// Architecture (shared with the float model).
+    pub spec: ModelSpec,
+    /// Parallel to `spec.layers`; Some for weighted layers.
+    pub layers: Vec<Option<QuantLayer>>,
+}
+
+/// Operation counts of one forward pass — the paper's §III/§V cost model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCount {
+    /// Integer additions/subtractions executed (multiplier architecture:
+    /// one per nonzero weight touch).
+    pub adds: u64,
+    /// Multiplications executed (nonzero |w| > 1 touches; |w| = 1 needs none).
+    pub mults: u64,
+    /// Adds the add-only architecture (Fig. 1 right) would execute:
+    /// Σ|ŵᵢ| per weight touch (= K per dense layer application).
+    pub adds_addonly: u64,
+    /// Float-baseline op pairs (mult+add) for the same layer shapes.
+    pub float_macs: u64,
+}
+
+impl OpCount {
+    /// Merge two counts.
+    pub fn merge(&mut self, o: &OpCount) {
+        self.adds += o.adds;
+        self.mults += o.mults;
+        self.adds_addonly += o.adds_addonly;
+        self.float_macs += o.float_macs;
+    }
+}
+
+/// Integer dense layer: y = ŵ·x + b̂ (i64 accumulate), counting ops.
+pub fn dense_i64(
+    x: &[i64],
+    w: &[i32],
+    b: &[i32],
+    input: usize,
+    output: usize,
+    ops: &mut OpCount,
+) -> Vec<i64> {
+    debug_assert_eq!(x.len(), input);
+    let mut y = Vec::with_capacity(output);
+    for o in 0..output {
+        let row = &w[o * input..(o + 1) * input];
+        let mut acc = b[o] as i64;
+        for i in 0..input {
+            let wv = row[i];
+            if wv != 0 {
+                acc += wv as i64 * x[i];
+                ops.adds += 1;
+                if wv != 1 && wv != -1 {
+                    ops.mults += 1;
+                }
+                ops.adds_addonly += wv.unsigned_abs() as u64;
+            }
+        }
+        if b[o] != 0 {
+            ops.adds += 1;
+            ops.adds_addonly += b[o].unsigned_abs() as u64;
+        }
+        y.push(acc);
+    }
+    ops.float_macs += (input * output + output) as u64;
+    y
+}
+
+/// Integer SAME conv (HWC × HWIO), counting ops.
+pub fn conv2d_same_i64(
+    x: &[i64],
+    (h, w, cin): (usize, usize, usize),
+    k: &[i32],
+    b: &[i32],
+    (kh, kw, cout): (usize, usize, usize),
+    ops: &mut OpCount,
+) -> Vec<i64> {
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut out = vec![0i64; h * w * cout];
+    for oy in 0..h {
+        for ox in 0..w {
+            let obase = (oy * w + ox) * cout;
+            for (co, &bv) in b.iter().enumerate() {
+                out[obase + co] = bv as i64;
+                if bv != 0 {
+                    ops.adds += 1;
+                    ops.adds_addonly += bv.unsigned_abs() as u64;
+                }
+            }
+            for ky in 0..kh {
+                let iy = oy as isize + ky as isize - ph as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = ox as isize + kx as isize - pw as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let ibase = ((iy as usize) * w + ix as usize) * cin;
+                    let kbase = ((ky * kw + kx) * cin) * cout;
+                    for ci in 0..cin {
+                        let xv = x[ibase + ci];
+                        let krow = &k[kbase + ci * cout..kbase + (ci + 1) * cout];
+                        for co in 0..cout {
+                            let wv = krow[co];
+                            if wv != 0 {
+                                out[obase + co] += wv as i64 * xv;
+                                ops.adds += 1;
+                                if wv != 1 && wv != -1 {
+                                    ops.mults += 1;
+                                }
+                                ops.adds_addonly += wv.unsigned_abs() as u64;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ops.float_macs += (h * w * (kh * kw * cin + 1) * cout) as u64;
+    out
+}
+
+/// 2×2 stride-2 integer max pool.
+pub fn maxpool2x2_i64(x: &[i64], (h, w, c): (usize, usize, usize)) -> (Vec<i64>, (usize, usize, usize)) {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![i64::MIN; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ci in 0..c {
+                let mut m = i64::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(x[((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ci]);
+                    }
+                }
+                out[(oy * ow + ox) * c + ci] = m;
+            }
+        }
+    }
+    (out, (oh, ow, c))
+}
+
+/// Result of an integer forward pass.
+#[derive(Clone, Debug)]
+pub struct IntForward {
+    /// Integer logits (argmax-equivalent to the float PVQ net).
+    pub logits: Vec<i64>,
+    /// Accumulated output scale s = Π ρᵢ · 2^shifts — float logits are
+    /// `s · logits` (for ReLU nets; meaningless for bsign nets where ρ is
+    /// absorbed layer by layer).
+    pub scale: f64,
+    /// Operation counts of this pass.
+    pub ops: OpCount,
+    /// Total power-of-2 rescale shifts applied (§V).
+    pub shifts: u32,
+}
+
+fn activate_i64(data: &mut [i64], act: Activation) {
+    match act {
+        Activation::Relu => {
+            for v in data.iter_mut() {
+                if *v < 0 {
+                    *v = 0;
+                }
+            }
+        }
+        Activation::BSign => {
+            for v in data.iter_mut() {
+                *v = if *v >= 0 { 1 } else { -1 };
+            }
+        }
+        Activation::None => {}
+    }
+}
+
+/// Execute the integer PVQ net on integer input (u8 pixels upcast to i64).
+pub fn forward_int(model: &QuantModel, input: &ITensor) -> Result<IntForward> {
+    let mut data = input.data.clone();
+    let mut hwc: Option<(usize, usize, usize)> = match model.spec.input_shape.as_slice() {
+        [h, w, c] => Some((*h, *w, *c)),
+        _ => None,
+    };
+    let mut scale = 1.0f64;
+    let mut shifts = 0u32;
+    let mut ops = OpCount::default();
+
+    for (l, q) in model.spec.layers.iter().zip(&model.layers) {
+        match l {
+            LayerSpec::Dense { input, output, act } => {
+                let q = match q {
+                    Some(q) => q,
+                    None => bail!("dense layer not quantized"),
+                };
+                data = dense_i64(&data, &q.w, &q.b, *input, *output, &mut ops);
+                match act {
+                    Activation::BSign => {
+                        // f(ρx) = f(x): ρ absorbed, scale resets to 1
+                        activate_i64(&mut data, *act);
+                        scale = 1.0;
+                    }
+                    _ => {
+                        activate_i64(&mut data, *act);
+                        scale *= q.rho;
+                    }
+                }
+            }
+            LayerSpec::Conv2d { kh, kw, cout, act, .. } => {
+                let q = match q {
+                    Some(q) => q,
+                    None => bail!("conv layer not quantized"),
+                };
+                let dims = hwc.ok_or_else(|| anyhow::anyhow!("conv needs HWC"))?;
+                data = conv2d_same_i64(&data, dims, &q.w, &q.b, (*kh, *kw, *cout), &mut ops);
+                hwc = Some((dims.0, dims.1, *cout));
+                match act {
+                    Activation::BSign => {
+                        activate_i64(&mut data, *act);
+                        scale = 1.0;
+                    }
+                    _ => {
+                        activate_i64(&mut data, *act);
+                        scale *= q.rho;
+                    }
+                }
+            }
+            LayerSpec::MaxPool2x2 => {
+                let dims = hwc.ok_or_else(|| anyhow::anyhow!("pool needs HWC"))?;
+                let (d, nd) = maxpool2x2_i64(&data, dims);
+                data = d;
+                hwc = Some(nd);
+            }
+            LayerSpec::Flatten => hwc = None,
+            LayerSpec::Dropout(_) => {}
+            // integers stay integers: x_true = c·u folds into the scale
+            LayerSpec::Scale(c) => scale *= *c as f64,
+        }
+        // §V: rescale by a power of two (shift) when integers outgrow the
+        // budget; exactness of argmax is preserved to within the dropped
+        // low bits, which the paper accepts by construction.
+        let ma = data.iter().map(|v| v.abs()).max().unwrap_or(0);
+        if ma > RESCALE_LIMIT {
+            let bits = 64 - ma.leading_zeros() as u32;
+            let shift = bits - RESCALE_TARGET;
+            for v in data.iter_mut() {
+                *v >>= shift;
+            }
+            scale *= (1u64 << shift) as f64;
+            shifts += shift;
+        }
+    }
+
+    Ok(IntForward { logits: data, scale, ops, shifts })
+}
+
+/// Classify one integer input.
+pub fn classify_int(model: &QuantModel, input: &ITensor) -> Result<usize> {
+    Ok(argmax_i64(&forward_int(model, input)?.logits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+
+    fn tiny_quant_model(act: Activation) -> QuantModel {
+        let spec = ModelSpec {
+            name: "tq".into(),
+            input_shape: vec![3],
+            layers: vec![
+                LayerSpec::Dense { input: 3, output: 2, act },
+                LayerSpec::Dense { input: 2, output: 2, act: Activation::None },
+            ],
+        };
+        QuantModel {
+            spec,
+            layers: vec![
+                Some(QuantLayer { w: vec![1, 0, -1, 0, 2, 0], b: vec![1, 0], b_pyramid: vec![1, 0], rho: 0.5, k: 5 }),
+                Some(QuantLayer { w: vec![1, -1, 0, 1], b: vec![0, -1], b_pyramid: vec![0, -1], rho: 0.25, k: 4 }),
+            ],
+        }
+    }
+
+    #[test]
+    fn integer_forward_by_hand() {
+        let m = tiny_quant_model(Activation::Relu);
+        assert!(m.layers[0].as_ref().unwrap().is_valid());
+        assert!(m.layers[1].as_ref().unwrap().is_valid());
+        let x = ITensor::from_vec(&[3], vec![10, 20, 30]);
+        let r = forward_int(&m, &x).unwrap();
+        // layer0: [10-30+1, 40] = [-19, 40] → relu → [0, 40]
+        // layer1: [0-40, 40-1] = [-40, 39]
+        assert_eq!(r.logits, vec![-40, 39]);
+        assert!((r.scale - 0.125).abs() < 1e-12);
+        assert_eq!(r.shifts, 0);
+    }
+
+    #[test]
+    fn op_counts_match_paper_model() {
+        let m = tiny_quant_model(Activation::Relu);
+        let x = ITensor::from_vec(&[3], vec![1, 1, 1]);
+        let r = forward_int(&m, &x).unwrap();
+        // layer0: nonzero w = 3 (1,-1,2), bias 1 → adds = 4;
+        //   addonly = |1|+|1|+|2|+|1| = 5 = K; mults: only the 2 → 1
+        // layer1: nonzero w = 3, bias 1 → adds = 4; addonly = 4 = K; mults 0
+        assert_eq!(r.ops.adds, 8);
+        assert_eq!(r.ops.mults, 1);
+        assert_eq!(r.ops.adds_addonly, 5 + 4);
+        // float baseline: (3·2+2) + (2·2+2) = 14 MACs
+        assert_eq!(r.ops.float_macs, 14);
+    }
+
+    #[test]
+    fn addonly_equals_k_per_dense_layer() {
+        // the §III claim: dense layer costs exactly K adds on the add-only
+        // architecture (bias pulses included)
+        let m = tiny_quant_model(Activation::Relu);
+        let x = ITensor::from_vec(&[3], vec![5, -3, 2]);
+        let r = forward_int(&m, &x).unwrap();
+        let k_total: u64 =
+            m.layers.iter().flatten().map(|q| q.k as u64).sum();
+        assert_eq!(r.ops.adds_addonly, k_total);
+    }
+
+    #[test]
+    fn bsign_absorbs_scale() {
+        let m = tiny_quant_model(Activation::BSign);
+        let x = ITensor::from_vec(&[3], vec![10, 20, 30]);
+        let r = forward_int(&m, &x).unwrap();
+        // layer0 bsign: [-19,41] → [-1, 1]; scale resets to 1, final layer
+        // contributes ρ=0.25
+        assert_eq!(r.logits, vec![-1 - 1, 1 - 1]);
+        assert!((r.scale - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rescale_triggers_and_preserves_argmax() {
+        // one dense layer with huge activations
+        let spec = ModelSpec {
+            name: "big".into(),
+            input_shape: vec![2],
+            layers: vec![
+                LayerSpec::Dense { input: 2, output: 2, act: Activation::Relu },
+                LayerSpec::Dense { input: 2, output: 2, act: Activation::None },
+            ],
+        };
+        let m = QuantModel {
+            spec,
+            layers: vec![
+                Some(QuantLayer { w: vec![3, 0, 0, 2], b: vec![0, 0], b_pyramid: vec![0, 0], rho: 1.0, k: 5 }),
+                Some(QuantLayer { w: vec![1, 0, 0, 1], b: vec![0, 0], b_pyramid: vec![0, 0], rho: 1.0, k: 2 }),
+            ],
+        };
+        let x = ITensor::from_vec(&[2], vec![1 << 45, 1 << 44]);
+        let r = forward_int(&m, &x).unwrap();
+        assert!(r.shifts > 0, "rescale should trigger");
+        assert_eq!(argmax_i64(&r.logits), 0);
+        // scale accounts for the shift: s = 2^shifts
+        assert!((r.scale.log2() - r.shifts as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integer_maxpool() {
+        let x: Vec<i64> = (0..16).collect();
+        let (out, dims) = maxpool2x2_i64(&x, (4, 4, 1));
+        assert_eq!(dims, (2, 2, 1));
+        assert_eq!(out, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn conv_i64_matches_f32_on_integers() {
+        use crate::nn::layers::conv2d_same_f32;
+        use crate::testkit::Rng;
+        let mut rng = Rng::new(4);
+        let (h, w, cin, cout, kh, kw) = (5, 5, 2, 3, 3, 3);
+        let x: Vec<i64> = (0..h * w * cin).map(|_| rng.below(256) as i64).collect();
+        let k: Vec<i32> = (0..kh * kw * cin * cout)
+            .map(|_| (rng.below(5) as i32) - 2)
+            .collect();
+        let b: Vec<i32> = (0..cout).map(|_| (rng.below(3) as i32) - 1).collect();
+        let mut ops = OpCount::default();
+        let yi = conv2d_same_i64(&x, (h, w, cin), &k, &b, (kh, kw, cout), &mut ops);
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let kf: Vec<f32> = k.iter().map(|&v| v as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let yf = conv2d_same_f32(&xf, (h, w, cin), &kf, &bf, (kh, kw, cout));
+        for (a, b) in yi.iter().zip(&yf) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal dense tensors for the inference engines.
+//!
+//! Two element types are enough for the whole system: `f32` for the float
+//! reference engine and the PJRT boundary, `i64` for the integer PVQ
+//! engines (whose entire point — §V of the paper — is that every
+//! activation stays an integer).
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    /// Dimension sizes, outermost first (images are HWC).
+    pub shape: Vec<usize>,
+    /// Row-major data; `len == shape.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// New zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Wrap existing data (checked).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+/// Dense row-major i64 tensor (integer PVQ engine activations).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ITensor {
+    /// Dimension sizes, outermost first.
+    pub shape: Vec<usize>,
+    /// Row-major data.
+    pub data: Vec<i64>,
+}
+
+impl ITensor {
+    /// New zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        ITensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    /// Wrap existing data (checked).
+    pub fn from_vec(shape: &[usize], data: Vec<i64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        ITensor { shape: shape.to_vec(), data }
+    }
+
+    /// From u8 pixels (the paper's "integer inputs, i.e. 8 bit pixels").
+    pub fn from_u8(shape: &[usize], bytes: &[u8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), bytes.len());
+        ITensor { shape: shape.to_vec(), data: bytes.iter().map(|&b| b as i64).collect() }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Largest |value| (drives the power-of-2 rescaling of §V).
+    pub fn max_abs(&self) -> i64 {
+        self.data.iter().map(|v| v.abs()).max().unwrap_or(0)
+    }
+}
+
+/// argmax over a logits slice (ties → lowest index), the paper's one-hot
+/// output readout that makes the final ρ scaling irrelevant (§V).
+pub fn argmax_f32(v: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..v.len() {
+        if v[i] > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// argmax over integer logits.
+pub fn argmax_i64(v: &[i64]) -> usize {
+    let mut best = 0;
+    for i in 1..v.len() {
+        if v[i] > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_reshape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        let t = t.reshape(&[6, 4]);
+        assert_eq!(t.shape, vec![6, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn itensor_from_u8() {
+        let t = ITensor::from_u8(&[2, 2], &[0, 127, 255, 3]);
+        assert_eq!(t.data, vec![0, 127, 255, 3]);
+        assert_eq!(t.max_abs(), 255);
+    }
+
+    #[test]
+    fn argmax_ties_lowest() {
+        assert_eq!(argmax_f32(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax_i64(&[-5, -2, -2]), 1);
+        assert_eq!(argmax_f32(&[7.0]), 0);
+    }
+}

@@ -1,0 +1,246 @@
+//! `.pvqw` weight container — the L2→L3 interchange for trained
+//! parameters (written by `python/compile/aot.py`, read here).
+//!
+//! Little-endian layout:
+//! ```text
+//! magic "PVQW"  u32 version  u32 n_layers
+//! per layer:
+//!   u8  name_len, name bytes (utf-8)
+//!   u8  kind (0=dense 1=conv)
+//!   u32 dims[4]: dense (in, out, 0, 0); conv (kh, kw, cin, cout)
+//!   u32 wlen, f32 × wlen   (dense out-major [out][in]; conv HWIO)
+//!   u32 blen, f32 × blen
+//! ```
+
+use super::layers::{LayerParams, Model};
+use super::model::{LayerSpec, ModelSpec};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One stored layer record.
+#[derive(Clone, Debug)]
+pub struct WeightRecord {
+    /// Layer name (informational, e.g. "fc0").
+    pub name: String,
+    /// 0 = dense, 1 = conv.
+    pub kind: u8,
+    /// Geometry; see container doc.
+    pub dims: [u32; 4],
+    /// Weight buffer.
+    pub w: Vec<f32>,
+    /// Bias buffer.
+    pub b: Vec<f32>,
+}
+
+/// Write records to a `.pvqw` file.
+pub fn save(path: &Path, records: &[WeightRecord]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(b"PVQW")?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(records.len() as u32).to_le_bytes())?;
+    for r in records {
+        let nb = r.name.as_bytes();
+        if nb.len() > 255 {
+            bail!("layer name too long");
+        }
+        f.write_all(&[nb.len() as u8])?;
+        f.write_all(nb)?;
+        f.write_all(&[r.kind])?;
+        for d in r.dims {
+            f.write_all(&d.to_le_bytes())?;
+        }
+        f.write_all(&(r.w.len() as u32).to_le_bytes())?;
+        for v in &r.w {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.write_all(&(r.b.len() as u32).to_le_bytes())?;
+        for v in &r.b {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load records from a `.pvqw` file.
+pub fn load(path: &Path) -> Result<Vec<WeightRecord>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"PVQW" {
+        bail!("bad magic in {}", path.display());
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != 1 {
+        bail!("unsupported pvqw version {version}");
+    }
+    f.read_exact(&mut u32buf)?;
+    let n_layers = u32::from_le_bytes(u32buf) as usize;
+    if n_layers > 1024 {
+        bail!("implausible layer count {n_layers}");
+    }
+
+    let mut records = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let mut lb = [0u8; 1];
+        f.read_exact(&mut lb)?;
+        let mut name = vec![0u8; lb[0] as usize];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("layer name not utf-8")?;
+        let mut kind = [0u8; 1];
+        f.read_exact(&mut kind)?;
+        let mut dims = [0u32; 4];
+        for d in dims.iter_mut() {
+            f.read_exact(&mut u32buf)?;
+            *d = u32::from_le_bytes(u32buf);
+        }
+        f.read_exact(&mut u32buf)?;
+        let wlen = u32::from_le_bytes(u32buf) as usize;
+        if wlen > 256 << 20 {
+            bail!("implausible weight count {wlen}");
+        }
+        let mut w = vec![0f32; wlen];
+        let mut fbuf = [0u8; 4];
+        for v in w.iter_mut() {
+            f.read_exact(&mut fbuf)?;
+            *v = f32::from_le_bytes(fbuf);
+        }
+        f.read_exact(&mut u32buf)?;
+        let blen = u32::from_le_bytes(u32buf) as usize;
+        if blen > 1 << 24 {
+            bail!("implausible bias count {blen}");
+        }
+        let mut b = vec![0f32; blen];
+        for v in b.iter_mut() {
+            f.read_exact(&mut fbuf)?;
+            *v = f32::from_le_bytes(fbuf);
+        }
+        records.push(WeightRecord { name, kind: kind[0], dims, w, b });
+    }
+    Ok(records)
+}
+
+/// Bind loaded records to a [`ModelSpec`], checking geometry layer by
+/// layer (records must be in weighted-layer order).
+pub fn bind(spec: &ModelSpec, records: &[WeightRecord]) -> Result<Model> {
+    let widx = spec.weighted_layers();
+    if records.len() != widx.len() {
+        bail!("expected {} weighted layers, file has {}", widx.len(), records.len());
+    }
+    let mut params: Vec<Option<LayerParams>> = vec![None; spec.layers.len()];
+    for (r, &li) in records.iter().zip(&widx) {
+        match &spec.layers[li] {
+            LayerSpec::Dense { input, output, .. } => {
+                if r.kind != 0 || r.dims[0] as usize != *input || r.dims[1] as usize != *output {
+                    bail!("record '{}' does not match dense {input}→{output}", r.name);
+                }
+            }
+            LayerSpec::Conv2d { kh, kw, cin, cout, .. } => {
+                if r.kind != 1
+                    || r.dims != [*kh as u32, *kw as u32, *cin as u32, *cout as u32]
+                {
+                    bail!("record '{}' does not match conv {kh}x{kw} {cin}→{cout}", r.name);
+                }
+            }
+            _ => unreachable!(),
+        }
+        params[li] = Some(LayerParams { w: r.w.clone(), b: r.b.clone() });
+    }
+    let model = Model { spec: spec.clone(), params };
+    model.validate()?;
+    Ok(model)
+}
+
+/// Convenience: load a file and bind it to a spec.
+pub fn load_model(path: &Path, spec: &ModelSpec) -> Result<Model> {
+    bind(spec, &load(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{Activation, ModelSpec};
+    use crate::testkit::Rng;
+
+    fn sample_records(spec: &ModelSpec, seed: u64) -> Vec<WeightRecord> {
+        let mut rng = Rng::new(seed);
+        spec.layers
+            .iter()
+            .filter(|l| l.has_params())
+            .enumerate()
+            .map(|(i, l)| match l {
+                LayerSpec::Dense { input, output, .. } => WeightRecord {
+                    name: format!("fc{i}"),
+                    kind: 0,
+                    dims: [*input as u32, *output as u32, 0, 0],
+                    w: rng.gaussian_vec_f32(input * output, 0.1),
+                    b: rng.gaussian_vec_f32(*output, 0.05),
+                },
+                LayerSpec::Conv2d { kh, kw, cin, cout, .. } => WeightRecord {
+                    name: format!("conv{i}"),
+                    kind: 1,
+                    dims: [*kh as u32, *kw as u32, *cin as u32, *cout as u32],
+                    w: rng.gaussian_vec_f32(kh * kw * cin * cout, 0.1),
+                    b: rng.gaussian_vec_f32(*cout, 0.05),
+                },
+                _ => unreachable!(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let spec = ModelSpec::mnist_mlp(Activation::Relu, "A");
+        let recs = sample_records(&spec, 1);
+        let dir = std::env::temp_dir().join("pvqw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.pvqw");
+        save(&path, &recs).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), recs.len());
+        for (a, b) in recs.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+            assert_eq!(a.dims, b.dims);
+        }
+        let model = bind(&spec, &back).unwrap();
+        model.validate().unwrap();
+    }
+
+    #[test]
+    fn bind_rejects_wrong_geometry() {
+        let spec = ModelSpec::mnist_mlp(Activation::Relu, "A");
+        let mut recs = sample_records(&spec, 2);
+        recs[0].dims[1] = 99;
+        assert!(bind(&spec, &recs).is_err());
+        let recs2 = sample_records(&spec, 2);
+        assert!(bind(&spec, &recs2[..2].to_vec()).is_err());
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("pvqw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.pvqw");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn cnn_roundtrip() {
+        let spec = ModelSpec::cifar_cnn(Activation::Relu, "B");
+        // shrink: only check record/bind machinery, use the real spec
+        let recs = sample_records(&spec, 3);
+        let dir = std::env::temp_dir().join("pvqw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.pvqw");
+        save(&path, &recs).unwrap();
+        let model = load_model(&path, &spec).unwrap();
+        assert_eq!(model.spec.name, "B");
+    }
+}

@@ -1,0 +1,281 @@
+//! Minimal arbitrary-precision unsigned integer.
+//!
+//! The offline registry for this environment has no `num-bigint`, and the
+//! Fischer enumeration of P(N,K) (`crate::pvq::count`) routinely overflows
+//! u128 — e.g. Nₚ(256,128) has hundreds of bits. This is a small,
+//! dependency-free bignum supporting exactly the operations the PVQ
+//! counting/indexing algorithms need: add, checked sub, compare, small
+//! multiply/divide, bit length, and decimal formatting.
+//!
+//! Representation: little-endian base-2³² limbs, no leading zero limbs
+//! (zero == empty limb vector).
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Arbitrary-precision unsigned integer (little-endian u32 limbs).
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct BigUint {
+    limbs: Vec<u32>,
+}
+
+impl BigUint {
+    /// The value 0.
+    pub fn zero() -> Self {
+        BigUint { limbs: Vec::new() }
+    }
+
+    /// The value 1.
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    /// Construct from a u64.
+    pub fn from_u64(v: u64) -> Self {
+        let mut limbs = vec![(v & 0xffff_ffff) as u32, (v >> 32) as u32];
+        while limbs.last() == Some(&0) {
+            limbs.pop();
+        }
+        BigUint { limbs }
+    }
+
+    /// True iff the value is 0.
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    /// Number of significant bits (0 for the value 0).
+    pub fn bits(&self) -> u64 {
+        match self.limbs.last() {
+            None => 0,
+            Some(&hi) => (self.limbs.len() as u64 - 1) * 32 + (32 - hi.leading_zeros() as u64),
+        }
+    }
+
+    /// Value as u64 if it fits.
+    pub fn to_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0] as u64),
+            2 => Some(self.limbs[0] as u64 | (self.limbs[1] as u64) << 32),
+            _ => None,
+        }
+    }
+
+    /// Value as f64 (approximate for large values).
+    pub fn to_f64(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for &l in self.limbs.iter().rev() {
+            acc = acc * 4294967296.0 + l as f64;
+        }
+        acc
+    }
+
+    fn trim(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    /// self + other.
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let (a, b) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..a.len() {
+            let sum = a[i] as u64 + *b.get(i).unwrap_or(&0) as u64 + carry;
+            out.push((sum & 0xffff_ffff) as u32);
+            carry = sum >> 32;
+        }
+        if carry != 0 {
+            out.push(carry as u32);
+        }
+        BigUint { limbs: out }
+    }
+
+    /// In-place self += other.
+    pub fn add_assign(&mut self, other: &BigUint) {
+        *self = self.add(other);
+    }
+
+    /// self - other; None if other > self.
+    pub fn checked_sub(&self, other: &BigUint) -> Option<BigUint> {
+        if self.cmp_big(other) == Ordering::Less {
+            return None;
+        }
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0i64;
+        for i in 0..self.limbs.len() {
+            let d = self.limbs[i] as i64 - *other.limbs.get(i).unwrap_or(&0) as i64 - borrow;
+            if d < 0 {
+                out.push((d + (1i64 << 32)) as u32);
+                borrow = 1;
+            } else {
+                out.push(d as u32);
+                borrow = 0;
+            }
+        }
+        debug_assert_eq!(borrow, 0);
+        let mut r = BigUint { limbs: out };
+        r.trim();
+        Some(r)
+    }
+
+    /// Total-order comparison.
+    pub fn cmp_big(&self, other: &BigUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+
+    /// self * m for a small multiplier.
+    pub fn mul_small(&self, m: u32) -> BigUint {
+        if m == 0 || self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u64;
+        for &l in &self.limbs {
+            let p = l as u64 * m as u64 + carry;
+            out.push((p & 0xffff_ffff) as u32);
+            carry = p >> 32;
+        }
+        while carry != 0 {
+            out.push((carry & 0xffff_ffff) as u32);
+            carry >>= 32;
+        }
+        BigUint { limbs: out }
+    }
+
+    /// (self / d, self % d) for a small divisor. Panics if d == 0.
+    pub fn divmod_small(&self, d: u32) -> (BigUint, u32) {
+        assert!(d != 0, "division by zero");
+        let mut out = vec![0u32; self.limbs.len()];
+        let mut rem = 0u64;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 32) | self.limbs[i] as u64;
+            out[i] = (cur / d as u64) as u32;
+            rem = cur % d as u64;
+        }
+        let mut q = BigUint { limbs: out };
+        q.trim();
+        (q, rem as u32)
+    }
+}
+
+impl PartialOrd for BigUint {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_big(other))
+    }
+}
+impl Ord for BigUint {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_big(other)
+    }
+}
+
+impl fmt::Display for BigUint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        // Repeated division by 1e9, collecting 9-digit groups.
+        let mut v = self.clone();
+        let mut groups: Vec<u32> = Vec::new();
+        while !v.is_zero() {
+            let (q, r) = v.divmod_small(1_000_000_000);
+            groups.push(r);
+            v = q;
+        }
+        write!(f, "{}", groups.pop().unwrap())?;
+        for g in groups.iter().rev() {
+            write!(f, "{:09}", g)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_and_one() {
+        assert!(BigUint::zero().is_zero());
+        assert_eq!(BigUint::one().to_u64(), Some(1));
+        assert_eq!(BigUint::zero().bits(), 0);
+        assert_eq!(BigUint::one().bits(), 1);
+    }
+
+    #[test]
+    fn add_small() {
+        let a = BigUint::from_u64(123);
+        let b = BigUint::from_u64(456);
+        assert_eq!(a.add(&b).to_u64(), Some(579));
+    }
+
+    #[test]
+    fn add_carry_across_limbs() {
+        let a = BigUint::from_u64(u64::MAX);
+        let b = BigUint::one();
+        let c = a.add(&b);
+        assert_eq!(c.bits(), 65);
+        assert_eq!(c.to_string(), "18446744073709551616");
+    }
+
+    #[test]
+    fn sub_roundtrip() {
+        let a = BigUint::from_u64(1 << 40);
+        let b = BigUint::from_u64(12345);
+        let c = a.add(&b);
+        assert_eq!(c.checked_sub(&b).unwrap(), a);
+        assert_eq!(b.checked_sub(&a), None);
+        assert!(a.checked_sub(&a).unwrap().is_zero());
+    }
+
+    #[test]
+    fn mul_div_small() {
+        let a = BigUint::from_u64(0xdead_beef_cafe);
+        let m = a.mul_small(1_000_000_007);
+        let (q, r) = m.divmod_small(1_000_000_007);
+        assert_eq!(q, a);
+        assert_eq!(r, 0);
+    }
+
+    #[test]
+    fn display_large() {
+        // 2^128 = 340282366920938463463374607431768211456
+        let mut v = BigUint::one();
+        for _ in 0..128 {
+            v = v.mul_small(2);
+        }
+        assert_eq!(v.to_string(), "340282366920938463463374607431768211456");
+        assert_eq!(v.bits(), 129);
+    }
+
+    #[test]
+    fn to_f64_approx() {
+        let v = BigUint::from_u64(1 << 53);
+        assert_eq!(v.to_f64(), (1u64 << 53) as f64);
+    }
+
+    #[test]
+    fn ordering() {
+        let a = BigUint::from_u64(5);
+        let b = BigUint::from_u64(7);
+        assert!(a < b);
+        assert!(b > a);
+        assert_eq!(a.cmp_big(&a), Ordering::Equal);
+    }
+}

@@ -1,0 +1,217 @@
+//! Counting points on the pyramid surface P(N,K).
+//!
+//! Nₚ(N,K) = #{ ŷ ∈ ℤᴺ : Σ|ŷᵢ| = K } — equation (1) of the paper.
+//! Fischer's recurrence (ref. [8] of the paper):
+//!
+//! ```text
+//! Nₚ(n,k) = Nₚ(n−1,k) + Nₚ(n−1,k−1) + Nₚ(n,k−1)
+//! Nₚ(n,0) = 1,  Nₚ(0,k) = 0 for k ≥ 1
+//! ```
+//!
+//! The counts grow fast (the paper's own example: Nₚ(8,4) = 2816 → <12 bits
+//! instead of 32), so the table is held in [`BigUint`].
+
+use super::bigint::BigUint;
+
+/// Memoized table of Nₚ(n,k) for 0 ≤ n ≤ N, 0 ≤ k ≤ K.
+///
+/// Built once per (N,K); the index-mapping algorithms in
+/// [`crate::pvq::index`] walk it repeatedly.
+pub struct CountTable {
+    n: usize,
+    k: usize,
+    /// Row-major table, `(k+1)` entries per row, rows 0..=n.
+    table: Vec<BigUint>,
+}
+
+impl CountTable {
+    /// Build the full Nₚ table up to (n, k) via the Fischer recurrence.
+    pub fn new(n: usize, k: usize) -> Self {
+        let w = k + 1;
+        let mut table = vec![BigUint::zero(); (n + 1) * w];
+        // Nₚ(n,0) = 1 (the origin direction collapses; exactly the zero-pulse point)
+        for row in 0..=n {
+            table[row * w] = BigUint::one();
+        }
+        // Nₚ(0,k) = 0 for k >= 1 (already zero)
+        for row in 1..=n {
+            for col in 1..=k {
+                let a = table[(row - 1) * w + col].clone(); // Nₚ(n−1,k)
+                let b = &table[(row - 1) * w + col - 1]; // Nₚ(n−1,k−1)
+                let c = &table[row * w + col - 1]; // Nₚ(n,k−1)
+                table[row * w + col] = a.add(b).add(c);
+            }
+        }
+        CountTable { n, k, table }
+    }
+
+    /// Nₚ(n,k) from the table. Panics if out of range.
+    pub fn count(&self, n: usize, k: usize) -> &BigUint {
+        assert!(n <= self.n && k <= self.k, "CountTable range exceeded");
+        &self.table[n * (self.k + 1) + k]
+    }
+
+    /// Bits required for a fixed-length index of a point of P(n,k):
+    /// ⌈log₂ Nₚ(n,k)⌉. This is the paper's §II / §VI fixed-rate code size.
+    pub fn index_bits(&self, n: usize, k: usize) -> u64 {
+        let c = self.count(n, k);
+        if c.is_zero() || c.to_u64() == Some(1) {
+            return 0;
+        }
+        // ceil(log2(c)) = bits(c-1)
+        c.checked_sub(&BigUint::one()).unwrap().bits()
+    }
+
+    /// Max dimension of the table.
+    pub fn max_n(&self) -> usize {
+        self.n
+    }
+    /// Max pulse count of the table.
+    pub fn max_k(&self) -> usize {
+        self.k
+    }
+}
+
+/// Convenience: Nₚ(n,k) without keeping the table.
+pub fn np(n: usize, k: usize) -> BigUint {
+    CountTable::new(n, k).count(n, k).clone()
+}
+
+/// log₂ Nₚ(n,k) as f64 — bits/vector for the fixed-rate Fischer code,
+/// usable for very large (n,k) where exact counting is not needed.
+/// Uses the exact table (cost O(nk) bigint adds); for quick estimates on
+/// huge layers prefer [`np_bits_estimate`].
+pub fn np_bits(n: usize, k: usize) -> f64 {
+    let t = CountTable::new(n, k);
+    t.index_bits(n, k) as f64
+}
+
+/// Cheap log-domain estimate of log₂ Nₚ(n,k) via the dominant-term
+/// binomial form Nₚ(n,k) = Σⱼ 2ʲ C(n,j) C(k−1, j−1); computed in log space
+/// with log-sum-exp so it never overflows. Used for whole-layer
+/// (N ~ 10⁶) storage accounting where the exact bigint table would be
+/// gigabytes.
+pub fn np_bits_estimate(n: u64, k: u64) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let ln_fact = |m: u64| -> f64 {
+        // Stirling with correction; exact loop for small m.
+        if m < 32 {
+            (2..=m).map(|i| (i as f64).ln()).sum()
+        } else {
+            let x = m as f64;
+            x * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI * x).ln() + 1.0 / (12.0 * x)
+        }
+    };
+    let ln_choose = |a: u64, b: u64| -> f64 {
+        if b > a {
+            f64::NEG_INFINITY
+        } else {
+            ln_fact(a) - ln_fact(b) - ln_fact(a - b)
+        }
+    };
+    let mut max_ln = f64::NEG_INFINITY;
+    let mut terms: Vec<f64> = Vec::new();
+    for j in 1..=k.min(n) {
+        let t = j as f64 * std::f64::consts::LN_2 + ln_choose(n, j) + ln_choose(k - 1, j - 1);
+        terms.push(t);
+        if t > max_ln {
+            max_ln = t;
+        }
+    }
+    let sum: f64 = terms.iter().map(|t| (t - max_ln).exp()).sum();
+    (max_ln + sum.ln()) / std::f64::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force count of P(n,k) by enumeration (tiny cases only).
+    fn brute(n: usize, k: i32) -> u64 {
+        fn rec(dims: usize, rem: i32) -> u64 {
+            if dims == 0 {
+                return (rem == 0) as u64;
+            }
+            let mut total = 0;
+            for v in -rem..=rem {
+                total += rec(dims - 1, rem - v.abs());
+            }
+            total
+        }
+        rec(n, k)
+    }
+
+    #[test]
+    fn base_cases() {
+        assert_eq!(np(0, 0).to_u64(), Some(1));
+        assert_eq!(np(0, 3).to_u64(), Some(0));
+        assert_eq!(np(5, 0).to_u64(), Some(1));
+        // P(1,k) = {+k, -k} → 2 points
+        assert_eq!(np(1, 7).to_u64(), Some(2));
+        // P(n,1) = 2n points (±eᵢ)
+        assert_eq!(np(6, 1).to_u64(), Some(12));
+    }
+
+    #[test]
+    fn paper_example_n8_k4() {
+        // §II of the paper: Nₚ(8,4) = 2816 → "less than 12 bits"
+        assert_eq!(np(8, 4).to_u64(), Some(2816));
+        let t = CountTable::new(8, 4);
+        assert_eq!(t.index_bits(8, 4), 12);
+        assert!(t.index_bits(8, 4) < 32); // vs 8×4-bit naive
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        for n in 1..=5 {
+            for k in 0..=5 {
+                assert_eq!(
+                    np(n, k).to_u64(),
+                    Some(brute(n, k as i32)),
+                    "N_p({n},{k}) mismatch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symmetry_growth() {
+        // Monotone in both n and k (k >= 1)
+        let t = CountTable::new(12, 12);
+        for n in 2..=12 {
+            for k in 1..=12 {
+                assert!(t.count(n, k) >= t.count(n - 1, k));
+                assert!(t.count(n, k) > t.count(n, k - 1) || (n == 0));
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_tracks_exact() {
+        for &(n, k) in &[(8usize, 4usize), (16, 16), (32, 8), (64, 64), (128, 32)] {
+            let exact = {
+                let t = CountTable::new(n, k);
+                let c = t.count(n, k);
+                // log2 via bits-1 .. bits bracket then refine with f64
+                c.to_f64().log2()
+            };
+            let est = np_bits_estimate(n as u64, k as u64);
+            assert!(
+                (exact - est).abs() < 0.15,
+                "n={n} k={k}: exact {exact} est {est}"
+            );
+        }
+    }
+
+    #[test]
+    fn large_layer_estimate_finite() {
+        // Net A FC0: N=401920, K=N/5
+        let bits = np_bits_estimate(401_920, 80_384);
+        assert!(bits.is_finite() && bits > 0.0);
+        // fixed-rate bits/weight should be well under 2 for N/K=5
+        let per_weight = bits / 401_920.0;
+        assert!(per_weight > 0.5 && per_weight < 2.5, "bits/weight {per_weight}");
+    }
+}

@@ -1,0 +1,440 @@
+//! PVQ encoding: project a real vector onto the pyramid P(N,K).
+//!
+//! Three encoders, trading accuracy for cost:
+//!
+//! * [`encode`] / [`encode_fast`] — scale-round-correct, O(N log N).
+//!   Rounds K·|vᵢ|/‖v‖₁ and fixes the pulse-sum discrepancy by adjusting
+//!   the components with the largest rounding error. This is the
+//!   layer-scale encoder (the paper PVQ-encodes whole layers of up to
+//!   ~2·10⁶ weights at once; §VII).
+//! * [`encode_opt`] — greedy pulse allocation maximizing the cosine to the
+//!   input after every pulse, O(NK). This matches the "most accurate PVQ
+//!   encoding algorithm known to the author … O(NK)" of §VII and is meant
+//!   for small groups (e.g. grouped/product coding, N ≤ a few hundred).
+//! * [`encode_exhaustive`] — brute-force search of all of P(N,K); test
+//!   oracle for tiny (N,K) only.
+//!
+//! All encoders share sign handling (ŷᵢ takes vᵢ's sign; sign(0)=+) and
+//! deterministic tie-breaking (lowest index first), which the python
+//! implementation (`python/compile/pvq.py`) mirrors exactly — the two are
+//! golden-tested against each other (`rust/tests/golden_pvq.rs`).
+
+use super::types::{PvqVector, RhoMode};
+
+/// Compute ρ for a chosen point given the input.
+fn rho_for(v: &[f64], y: &[i32], mode: RhoMode) -> f64 {
+    let energy: f64 = y.iter().map(|&c| (c as f64) * (c as f64)).sum();
+    if energy == 0.0 {
+        return 0.0;
+    }
+    match mode {
+        RhoMode::Norm => {
+            let r: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            r / energy.sqrt()
+        }
+        RhoMode::Lsq => {
+            let corr: f64 = v.iter().zip(y).map(|(x, &c)| x * c as f64).sum();
+            (corr / energy).max(0.0)
+        }
+    }
+}
+
+/// Layer-scale PVQ encoder (scale-round-correct), paper ρ mode.
+pub fn encode(v: &[f64], k: u32) -> PvqVector {
+    encode_fast(v, k, RhoMode::Norm)
+}
+
+/// Layer-scale PVQ encoder with explicit ρ mode.
+///
+/// Algorithm:
+/// 1. tᵢ = K·|vᵢ| / ‖v‖₁ (target pulse mass per component)
+/// 2. yᵢ = ⌊tᵢ + ½⌋ (round-half-up on the nonnegative magnitudes)
+/// 3. Σy ≠ K is fixed by decrementing the most over-rounded components
+///    (largest yᵢ−tᵢ, requires yᵢ ≥ 1) or incrementing the most
+///    under-rounded (smallest yᵢ−tᵢ). Ties break on lower index.
+pub fn encode_fast(v: &[f64], k: u32, mode: RhoMode) -> PvqVector {
+    let n = v.len();
+    // Sequential sum — mirrored by the python implementation (which avoids
+    // numpy's pairwise summation) so golden cases agree bit-for-bit.
+    let mut l1 = 0.0f64;
+    for x in v {
+        l1 += x.abs();
+    }
+    if l1 == 0.0 || k == 0 {
+        return PvqVector { k: 0, components: vec![0; n], rho: 0.0 };
+    }
+
+    let mut y: Vec<i64> = Vec::with_capacity(n);
+    let mut err: Vec<f64> = Vec::with_capacity(n); // yᵢ − tᵢ (signed round-off)
+    let mut sum: i64 = 0;
+    for x in v {
+        let t = k as f64 * x.abs() / l1;
+        let r = (t + 0.5).floor();
+        y.push(r as i64);
+        err.push(r - t);
+        sum += r as i64;
+    }
+
+    if sum != k as i64 {
+        let mut order: Vec<usize> = (0..n).collect();
+        if sum > k as i64 {
+            // Remove (sum−K) pulses from the most over-rounded components.
+            order.sort_by(|&a, &b| err[b].partial_cmp(&err[a]).unwrap().then(a.cmp(&b)));
+            let mut excess = sum - k as i64;
+            let mut idx = 0;
+            while excess > 0 {
+                let i = order[idx % n];
+                if y[i] > 0 {
+                    y[i] -= 1;
+                    err[i] -= 1.0;
+                    excess -= 1;
+                }
+                idx += 1;
+                if idx % n == 0 {
+                    // re-rank after a full pass (rare; happens when many
+                    // components hit zero)
+                    order.sort_by(|&a, &b| err[b].partial_cmp(&err[a]).unwrap().then(a.cmp(&b)));
+                }
+            }
+        } else {
+            // Add (K−sum) pulses to the most under-rounded components.
+            order.sort_by(|&a, &b| err[a].partial_cmp(&err[b]).unwrap().then(a.cmp(&b)));
+            let mut deficit = k as i64 - sum;
+            let mut idx = 0;
+            while deficit > 0 {
+                let i = order[idx % n];
+                y[i] += 1;
+                err[i] += 1.0;
+                deficit -= 1;
+                idx += 1;
+                if idx % n == 0 {
+                    order.sort_by(|&a, &b| err[a].partial_cmp(&err[b]).unwrap().then(a.cmp(&b)));
+                }
+            }
+        }
+    }
+
+    let comps: Vec<i32> = y
+        .iter()
+        .zip(v)
+        .map(|(&m, &x)| if x < 0.0 { -(m as i32) } else { m as i32 })
+        .collect();
+    let rho = rho_for(v, &comps, mode);
+    debug_assert_eq!(comps.iter().map(|c| c.unsigned_abs() as u64).sum::<u64>(), k as u64);
+    PvqVector { k, components: comps, rho }
+}
+
+/// O(NK) greedy pulse-allocation encoder.
+///
+/// Each of the K pulses goes to the component maximizing the post-pulse
+/// cosine to |v|:  argmaxᵢ (corr + |vᵢ|)² / (energy + 2yᵢ + 1).
+/// Equivalent to the CELT/Opus PVQ search; within float precision this is
+/// the most accurate practical encoder (§VII calls it O(NK)).
+pub fn encode_opt(v: &[f64], k: u32, mode: RhoMode) -> PvqVector {
+    let n = v.len();
+    let mut l1 = 0.0f64;
+    for x in v {
+        l1 += x.abs();
+    }
+    if l1 == 0.0 || k == 0 {
+        return PvqVector { k: 0, components: vec![0; n], rho: 0.0 };
+    }
+    let absv: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+    let mut y = vec![0i64; n];
+    let mut corr = 0.0f64; // Σ |vᵢ|·yᵢ
+    let mut energy = 0.0f64; // Σ yᵢ²
+
+    // Pre-seed with a conservative floor scale when K is large, so the
+    // greedy loop only places the O(N) remainder — keeps the practical
+    // cost near O(N·(K/N + log)) while reproducing pure-greedy results
+    // (pre-seeding by floor(t−1)⁺ never overshoots the greedy path).
+    if k as usize > 2 * n {
+        let mut placed = 0i64;
+        for i in 0..n {
+            let t = (k as f64 * absv[i] / l1 - 1.0).floor();
+            if t > 0.0 {
+                y[i] = t as i64;
+                placed += t as i64;
+                corr += absv[i] * t;
+                energy += t * t;
+            }
+        }
+        debug_assert!(placed <= k as i64);
+    }
+
+    let placed: i64 = y.iter().sum();
+    for _ in placed..k as i64 {
+        let mut best_i = 0usize;
+        let mut best_num = 0.0f64;
+        let mut best_den = 1.0f64;
+        for i in 0..n {
+            let num = corr + absv[i];
+            let den = energy + 2.0 * y[i] as f64 + 1.0;
+            // compare num²/den > best_num²/best_den without division
+            if num * num * best_den > best_num * best_num * den {
+                best_i = i;
+                best_num = num;
+                best_den = den;
+            }
+        }
+        y[best_i] += 1;
+        corr += absv[best_i];
+        energy += 2.0 * (y[best_i] - 1) as f64 + 1.0;
+    }
+
+    let comps: Vec<i32> = y
+        .iter()
+        .zip(v)
+        .map(|(&m, &x)| if x < 0.0 { -(m as i32) } else { m as i32 })
+        .collect();
+    let rho = rho_for(v, &comps, mode);
+    debug_assert_eq!(comps.iter().map(|c| c.unsigned_abs() as u64).sum::<u64>(), k as u64);
+    PvqVector { k, components: comps, rho }
+}
+
+/// Brute-force optimal encoder: enumerates every point of P(N,K) and keeps
+/// the max-cosine one. Exponential — test oracle for N,K ≤ ~6 only.
+pub fn encode_exhaustive(v: &[f64], k: u32, mode: RhoMode) -> PvqVector {
+    let n = v.len();
+    let mut best: Option<(f64, Vec<i32>)> = None;
+    let mut cur = vec![0i32; n];
+
+    fn rec(
+        v: &[f64],
+        cur: &mut Vec<i32>,
+        pos: usize,
+        rem: i32,
+        best: &mut Option<(f64, Vec<i32>)>,
+    ) {
+        let n = v.len();
+        if pos == n {
+            if rem != 0 {
+                return;
+            }
+            let corr: f64 = v.iter().zip(cur.iter()).map(|(x, &c)| x * c as f64).sum();
+            let energy: f64 = cur.iter().map(|&c| (c as f64) * (c as f64)).sum();
+            if energy == 0.0 {
+                return;
+            }
+            let cos = corr / energy.sqrt();
+            match best {
+                Some((b, _)) if *b >= cos => {}
+                _ => *best = Some((cos, cur.clone())),
+            }
+            return;
+        }
+        for val in -rem..=rem {
+            cur[pos] = val;
+            rec(v, cur, pos + 1, rem - val.abs(), best);
+        }
+        cur[pos] = 0;
+    }
+
+    rec(v, &mut cur, 0, k as i32, &mut best);
+    match best {
+        None => PvqVector { k: 0, components: vec![0; n], rho: 0.0 },
+        Some((_, comps)) => {
+            let rho = rho_for(v, &comps, mode);
+            PvqVector { k, components: comps, rho }
+        }
+    }
+}
+
+/// Mean squared reconstruction error ‖v − ρŷ‖²/N of an encoding.
+pub fn reconstruction_mse(v: &[f64], q: &PvqVector) -> f64 {
+    let dec = q.decode();
+    v.iter().zip(&dec).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / v.len() as f64
+}
+
+/// Cosine similarity between v and its quantized direction.
+pub fn cosine(v: &[f64], q: &PvqVector) -> f64 {
+    let corr: f64 = v.iter().zip(&q.components).map(|(x, &c)| x * c as f64).sum();
+    let nv: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let ny = (q.energy() as f64).sqrt();
+    if nv == 0.0 || ny == 0.0 {
+        0.0
+    } else {
+        corr / (nv * ny)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn zero_vector() {
+        let q = encode(&[0.0, 0.0, 0.0], 5);
+        assert_eq!(q.rho, 0.0);
+        assert_eq!(q.components, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn k_zero() {
+        let q = encode(&[1.0, -2.0], 0);
+        assert_eq!(q.rho, 0.0);
+        assert!(q.components.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn single_pulse_goes_to_max() {
+        let q = encode(&[0.1, -3.0, 0.2, 1.0], 1);
+        assert_eq!(q.components, vec![0, -1, 0, 0]);
+        assert!(q.is_valid());
+    }
+
+    #[test]
+    fn signs_follow_input() {
+        let v = [1.0, -1.0, 2.0, -2.0];
+        let q = encode(&v, 6);
+        for (x, &c) in v.iter().zip(&q.components) {
+            if c != 0 {
+                assert_eq!(x.signum() as i32, c.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn on_pyramid_fast_and_opt() {
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let n = 1 + (rng.next_u64() % 32) as usize;
+            let k = 1 + (rng.next_u64() % 40) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let qf = encode(&v, k);
+            let qo = encode_opt(&v, k, RhoMode::Norm);
+            assert!(qf.is_valid(), "fast not on pyramid n={n} k={k}");
+            assert!(qo.is_valid(), "opt not on pyramid n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn opt_matches_exhaustive_cosine_small() {
+        let mut rng = Rng::new(7);
+        for _ in 0..40 {
+            let n = 2 + (rng.next_u64() % 3) as usize; // 2..4
+            let k = 1 + (rng.next_u64() % 4) as u32; // 1..4
+            let v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let qo = encode_opt(&v, k, RhoMode::Norm);
+            let qe = encode_exhaustive(&v, k, RhoMode::Norm);
+            let co = cosine(&v, &qo);
+            let ce = cosine(&v, &qe);
+            assert!(
+                co >= ce - 1e-9,
+                "greedy cosine {co} < exhaustive {ce} for v={v:?} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_k() {
+        let mut rng = Rng::new(3);
+        let v: Vec<f64> = (0..24).map(|_| rng.next_gaussian()).collect();
+        let mut last = f64::INFINITY;
+        for k in [1u32, 2, 4, 8, 16, 32, 64, 128] {
+            let q = encode_opt(&v, k, RhoMode::Lsq);
+            let mse = reconstruction_mse(&v, &q);
+            assert!(
+                mse <= last + 1e-12,
+                "MSE not monotone at k={k}: {mse} > {last}"
+            );
+            last = mse;
+        }
+        assert!(last < 5e-3, "K=128 on N=24 should be near-exact, mse={last}");
+    }
+
+    #[test]
+    fn lsq_rho_never_worse() {
+        let mut rng = Rng::new(11);
+        for _ in 0..100 {
+            let n = 4 + (rng.next_u64() % 28) as usize;
+            let k = 1 + (rng.next_u64() % 24) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+            let qn = encode_fast(&v, k, RhoMode::Norm);
+            let ql = encode_fast(&v, k, RhoMode::Lsq);
+            assert_eq!(qn.components, ql.components);
+            let en = reconstruction_mse(&v, &qn);
+            let el = reconstruction_mse(&v, &ql);
+            assert!(el <= en + 1e-12, "lsq {el} > norm {en}");
+        }
+    }
+
+    #[test]
+    fn scale_invariant_direction() {
+        let mut rng = Rng::new(5);
+        let v: Vec<f64> = (0..16).map(|_| rng.next_gaussian()).collect();
+        let v2: Vec<f64> = v.iter().map(|x| x * 37.5).collect();
+        let q1 = encode(&v, 8);
+        let q2 = encode(&v2, 8);
+        assert_eq!(q1.components, q2.components);
+        assert!((q2.rho / q1.rho - 37.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm_rho_preserves_l2() {
+        let mut rng = Rng::new(9);
+        let v: Vec<f64> = (0..32).map(|_| rng.next_gaussian()).collect();
+        let q = encode_fast(&v, 16, RhoMode::Norm);
+        let dec = q.decode();
+        let rv: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let rd: f64 = dec.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((rv - rd).abs() < 1e-9, "norm mode must preserve radius");
+    }
+
+    #[test]
+    fn fast_large_layer_shape() {
+        // Layer-scale smoke: N=50k, N/K=5 (paper FC ratios)
+        let mut rng = Rng::new(13);
+        let n = 50_000;
+        let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+        let k = (n / 5) as u32;
+        let q = encode(&v, k);
+        assert!(q.is_valid());
+        // paper §VI: with N/K=5 at least 4/5 of components are zero
+        let zeros = q.components.iter().filter(|&&c| c == 0).count();
+        assert!(zeros as f64 >= 0.8 * n as f64 - 1.0, "zeros={zeros}");
+        // quantized direction still correlates strongly (measured ≈0.83 for
+        // a Laplacian source at N/K=5 — consistent with the paper's
+        // few-%-accuracy-drop claim at this ratio)
+        assert!(cosine(&v, &q) > 0.80);
+    }
+
+    #[test]
+    fn preseed_path_matches_pure_greedy() {
+        // K > 2N triggers the pre-seed; must equal the un-seeded greedy.
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let n = 3 + (rng.next_u64() % 6) as usize;
+            let k = (3 * n as u32) + (rng.next_u64() % 10) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let seeded = encode_opt(&v, k, RhoMode::Norm);
+            // pure greedy: simulate by calling with a vector that disables
+            // the shortcut — re-run greedy manually
+            let pure = {
+                let absv: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+                let mut y = vec![0i64; n];
+                let (mut corr, mut energy) = (0.0f64, 0.0f64);
+                for _ in 0..k {
+                    let (mut bi, mut bn, mut bd) = (0usize, 0.0f64, 1.0f64);
+                    for i in 0..n {
+                        let num = corr + absv[i];
+                        let den = energy + 2.0 * y[i] as f64 + 1.0;
+                        if num * num * bd > bn * bn * den {
+                            bi = i;
+                            bn = num;
+                            bd = den;
+                        }
+                    }
+                    y[bi] += 1;
+                    corr += absv[bi];
+                    energy += 2.0 * (y[bi] - 1) as f64 + 1.0;
+                }
+                y
+            };
+            let seeded_mag: Vec<i64> =
+                seeded.components.iter().map(|&c| c.unsigned_abs() as i64).collect();
+            assert_eq!(seeded_mag, pure, "pre-seed diverged from greedy");
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Fischer enumeration: bijection between points of P(N,K) and integers
+//! in [0, Nₚ(N,K)).
+//!
+//! §II / §VI of the paper: mapping a PVQ vector to its rank gives a
+//! fixed-length ⌈log₂ Nₚ(N,K)⌉-bit code — the most compact possible
+//! fixed-rate representation. The paper notes the arithmetic involves very
+//! long integers for layer-sized N; that is exactly why the mapping is
+//! offered here over [`BigUint`] and intended for *grouped* coding
+//! (`crate::pvq::grouped`) where N is a few dozen.
+//!
+//! Canonical order: points are ranked component by component; for position
+//! j with k' pulses left, all points whose |component| is smaller come
+//! first; within equal magnitude, positive precedes negative.
+
+use super::bigint::BigUint;
+use super::count::CountTable;
+
+/// Rank a point of P(n,k) (n = y.len(), k = Σ|yᵢ|) to its index.
+///
+/// Cost: O(N + K) bigint additions against a prebuilt [`CountTable`].
+pub fn vector_to_index(y: &[i32], table: &CountTable) -> BigUint {
+    let n = y.len();
+    let k: u32 = y.iter().map(|&c| c.unsigned_abs()).sum();
+    assert!(n <= table.max_n() && k as usize <= table.max_k(), "table too small");
+
+    let mut index = BigUint::zero();
+    let mut k_rem = k as usize;
+    for (j, &v) in y.iter().enumerate() {
+        if k_rem == 0 {
+            break;
+        }
+        let dims_after = n - j - 1;
+        let mag = v.unsigned_abs() as usize;
+        // points with |component_j| = w < mag come first: w=0 has one sign,
+        // w>0 has two.
+        for w in 0..mag {
+            let c = table.count(dims_after, k_rem - w);
+            if w == 0 {
+                index.add_assign(c);
+            } else {
+                index.add_assign(c);
+                index.add_assign(c);
+            }
+        }
+        // within |component_j| = mag: positive precedes negative
+        if v < 0 {
+            index.add_assign(table.count(dims_after, k_rem - mag));
+        }
+        k_rem -= mag;
+    }
+    index
+}
+
+/// Inverse of [`vector_to_index`]: recover the point of P(n,k) with the
+/// given rank. Panics if `index >= Nₚ(n,k)`.
+pub fn index_to_vector(index: &BigUint, n: usize, k: u32, table: &CountTable) -> Vec<i32> {
+    assert!(n <= table.max_n() && k as usize <= table.max_k(), "table too small");
+    assert!(
+        index.cmp_big(table.count(n, k as usize)) == std::cmp::Ordering::Less,
+        "index out of range for P({n},{k})"
+    );
+    let mut rem = index.clone();
+    let mut y = vec![0i32; n];
+    let mut k_rem = k as usize;
+
+    for j in 0..n {
+        if k_rem == 0 {
+            break;
+        }
+        let dims_after = n - j - 1;
+        let mut mag = 0usize;
+        let mut neg = false;
+        loop {
+            let block = table.count(dims_after, k_rem - mag).clone();
+            if mag == 0 {
+                // single (positive-sign-only) zero block
+                match rem.checked_sub(&block) {
+                    Some(r) => {
+                        rem = r;
+                        mag += 1;
+                    }
+                    None => break,
+                }
+            } else {
+                // positive block then negative block
+                match rem.checked_sub(&block) {
+                    Some(r) => match r.checked_sub(&block) {
+                        Some(r2) => {
+                            rem = r2;
+                            mag += 1;
+                        }
+                        None => {
+                            rem = r;
+                            neg = true;
+                            break;
+                        }
+                    },
+                    None => break,
+                }
+            }
+            if mag > k_rem {
+                unreachable!("ran past pulse budget while decoding index");
+            }
+        }
+        y[j] = if neg { -(mag as i32) } else { mag as i32 };
+        k_rem -= mag;
+    }
+    debug_assert_eq!(k_rem, 0, "decoded point does not exhaust pulses");
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pvq::encode::encode_opt;
+    use crate::pvq::types::RhoMode;
+    use crate::testkit::Rng;
+
+    /// Enumerate all points of P(n,k) (test helper).
+    fn all_points(n: usize, k: i32) -> Vec<Vec<i32>> {
+        fn rec(n: usize, rem: i32, cur: &mut Vec<i32>, out: &mut Vec<Vec<i32>>) {
+            if n == 0 {
+                if rem == 0 {
+                    out.push(cur.clone());
+                }
+                return;
+            }
+            for v in -rem..=rem {
+                cur.push(v);
+                rec(n - 1, rem - v.abs(), cur, out);
+                cur.pop();
+            }
+        }
+        let mut out = Vec::new();
+        rec(n, k, &mut Vec::new(), &mut out);
+        out
+    }
+
+    #[test]
+    fn bijective_on_small_pyramids() {
+        for (n, k) in [(2usize, 3u32), (3, 2), (3, 4), (4, 3), (5, 2)] {
+            let table = CountTable::new(n, k as usize);
+            let points = all_points(n, k as i32);
+            assert_eq!(
+                points.len() as u64,
+                table.count(n, k as usize).to_u64().unwrap()
+            );
+            let mut seen = vec![false; points.len()];
+            for p in &points {
+                let idx = vector_to_index(p, &table);
+                let i = idx.to_u64().unwrap() as usize;
+                assert!(i < points.len(), "index {i} out of range");
+                assert!(!seen[i], "index {i} assigned twice (P({n},{k}))");
+                seen[i] = true;
+                let back = index_to_vector(&idx, n, k, &table);
+                assert_eq!(&back, p, "roundtrip failed for {p:?}");
+            }
+            assert!(seen.iter().all(|&s| s), "mapping not surjective");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_medium() {
+        let mut rng = Rng::new(77);
+        let table = CountTable::new(32, 32);
+        for _ in 0..100 {
+            let n = 8 + (rng.next_u64() % 25) as usize;
+            let k = 1 + (rng.next_u64() % 32) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+            let q = encode_opt(&v, k, RhoMode::Norm);
+            let idx = vector_to_index(&q.components, &table);
+            let back = index_to_vector(&idx, n, k, &table);
+            assert_eq!(back, q.components);
+        }
+    }
+
+    #[test]
+    fn index_fits_in_declared_bits() {
+        let table = CountTable::new(8, 4);
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let v: Vec<f64> = (0..8).map(|_| rng.next_gaussian()).collect();
+            let q = encode_opt(&v, 4, RhoMode::Norm);
+            let idx = vector_to_index(&q.components, &table);
+            assert!(idx.bits() <= table.index_bits(8, 4)); // ≤ 12 bits (paper §II)
+        }
+    }
+
+    #[test]
+    fn paper_example_bits() {
+        let table = CountTable::new(8, 4);
+        assert_eq!(table.count(8, 4).to_u64(), Some(2816));
+        assert_eq!(table.index_bits(8, 4), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "index out of range")]
+    fn out_of_range_index_panics() {
+        let table = CountTable::new(3, 2);
+        let np = table.count(3, 2).clone();
+        index_to_vector(&np, 3, 2, &table);
+    }
+}

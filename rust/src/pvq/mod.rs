@@ -1,0 +1,22 @@
+//! Pyramid Vector Quantization — the paper's core substrate.
+//!
+//! * [`types`] — [`types::PvqVector`] (point ŷ ∈ P(N,K) + gain ρ), ρ modes.
+//! * [`encode`] — layer-scale O(N log N), greedy O(NK), and exhaustive
+//!   encoders (§II–III, §VII of the paper).
+//! * [`count`] — Nₚ(N,K) point counting (Fischer recurrence, bigint).
+//! * [`index`] — Fischer enumeration: point ↔ integer rank (§II, §VI).
+//! * [`grouped`] — product-code grouping and the §V shared-ρ construction.
+//! * [`bigint`] — dependency-free unsigned bignum backing count/index.
+
+pub mod bigint;
+pub mod count;
+pub mod encode;
+pub mod grouped;
+pub mod index;
+pub mod types;
+
+pub use count::{np, np_bits_estimate, CountTable};
+pub use encode::{cosine, encode, encode_fast, encode_opt, reconstruction_mse};
+pub use grouped::{encode_grouped, encode_grouped_shared_rho, GroupedPvq};
+pub use index::{index_to_vector, vector_to_index};
+pub use types::{PvqVector, RhoMode};

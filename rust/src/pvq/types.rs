@@ -1,0 +1,86 @@
+//! Core PVQ value types.
+
+/// How the scalar gain ρ of a product-PVQ approximation is derived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RhoMode {
+    /// The paper's product PVQ (eq. 2): ρ = ‖v‖₂ / ‖ŷ‖₂ — preserves the
+    /// input's L2 norm exactly.
+    Norm,
+    /// Least-squares optimal gain: ρ = ⟨v,ŷ⟩ / ⟨ŷ,ŷ⟩ — minimizes
+    /// ‖v − ρŷ‖₂. Strictly ≤ the Norm error; offered as an ablation
+    /// (DESIGN.md experiment `ablation_rho`).
+    Lsq,
+}
+
+/// A product-PVQ encoded vector: integer point ŷ ∈ P(N,K) (Σ|ŷᵢ| = K)
+/// plus the scalar gain ρ ≥ 0. The approximated real vector is ρ·ŷ.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PvqVector {
+    /// Pulse budget K of the pyramid P(N,K) this point lies on.
+    pub k: u32,
+    /// Integer components; invariant: Σ|components[i]| == k.
+    pub components: Vec<i32>,
+    /// Scalar gain ρ ≥ 0 (0 encodes the null vector).
+    pub rho: f64,
+}
+
+impl PvqVector {
+    /// Dimension N.
+    pub fn n(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Σ|ŷᵢ| — must equal `k` for a valid point (checked in debug builds
+    /// at construction sites; exposed for tests/validation).
+    pub fn l1(&self) -> u64 {
+        self.components.iter().map(|&c| c.unsigned_abs() as u64).sum()
+    }
+
+    /// ‖ŷ‖₂².
+    pub fn energy(&self) -> u64 {
+        self.components.iter().map(|&c| (c as i64 * c as i64) as u64).sum()
+    }
+
+    /// Number of nonzero components (drives the multiplier-architecture
+    /// cycle count in Fig. 1 of the paper).
+    pub fn nonzeros(&self) -> usize {
+        self.components.iter().filter(|&&c| c != 0).count()
+    }
+
+    /// Check the pyramid invariant Σ|ŷᵢ| == K.
+    pub fn is_valid(&self) -> bool {
+        self.l1() == self.k as u64
+    }
+
+    /// Reconstruct the approximated real vector ρ·ŷ.
+    pub fn decode(&self) -> Vec<f64> {
+        self.components.iter().map(|&c| self.rho * c as f64).collect()
+    }
+
+    /// Reconstruct as f32 (the numeric type of the NN engines).
+    pub fn decode_f32(&self) -> Vec<f32> {
+        self.components.iter().map(|&c| (self.rho * c as f64) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invariants() {
+        let v = PvqVector { k: 4, components: vec![2, -1, 0, 1], rho: 0.5 };
+        assert!(v.is_valid());
+        assert_eq!(v.n(), 4);
+        assert_eq!(v.l1(), 4);
+        assert_eq!(v.energy(), 6);
+        assert_eq!(v.nonzeros(), 3);
+        assert_eq!(v.decode(), vec![1.0, -0.5, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn invalid_detected() {
+        let v = PvqVector { k: 5, components: vec![2, -1, 0, 1], rho: 0.5 };
+        assert!(!v.is_valid());
+    }
+}

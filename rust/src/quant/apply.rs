@@ -1,0 +1,300 @@
+//! Applying PVQ to a trained model — §IV/§VII procedure.
+//!
+//! Per weighted layer, exactly as the paper prescribes:
+//! 1. flatten the weight tensor and concatenate the biases → one N-vector
+//! 2. PVQ-encode it at K = ⌈N / ratio⌉ → (ρ, ŵ ∈ P(N,K))
+//! 3. split ρ·ŵ back into weights and biases and substitute them
+//!
+//! Two extra pieces of engineering the paper leaves implicit:
+//!
+//! * **Integer-bias derivation.** The pyramid vector is encoded over the
+//!   *trained-unit* vector (w ++ b) — anything else skews the pulse
+//!   allocation between weights and biases. For integer execution (§V)
+//!   layer ℓ's integer inputs u relate to true activations by
+//!   x_true = s·u (s starts at the input Scale layer's constant, e.g.
+//!   1/255, and accumulates ρ's). The integer bias is B = round(b̂/s) and
+//!   the float-equivalent layer is (ρŵ, ρ·s·B) — exactly what the integer
+//!   engine computes (the rounding is exact at layer 0 where 1/s is an
+//!   integer, and ≤ ρ·s/2 elsewhere — orders of magnitude below the
+//!   quantization noise). For bsign nets ρ is absorbed so s stays at the
+//!   input constant and this reduces to the paper's plain procedure.
+//! * **K tuning hooks** — ratios are per layer, so the §VII tables' mixed
+//!   ratios (first conv 1/3, FC 5, …) drop straight in.
+
+use crate::compress::Distribution;
+use crate::nn::layers::{LayerParams, Model};
+use crate::nn::model::{Activation, LayerSpec};
+use crate::nn::pvq_engine::{QuantLayer, QuantModel};
+use crate::pvq::{encode_fast, RhoMode};
+use anyhow::{bail, Result};
+
+/// Per-layer quantization report (feeds the Tables 1–8 benches).
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    /// Label, e.g. "FC0" / "CONV2".
+    pub label: String,
+    /// Flattened dimension N (weights + biases).
+    pub n: usize,
+    /// Pulse budget K.
+    pub k: u32,
+    /// N/K ratio actually used.
+    pub ratio: f64,
+    /// Gain ρ.
+    pub rho: f64,
+    /// Value distribution of ŵ (Tables 5–8 buckets).
+    pub dist: Distribution,
+    /// Cosine between original and quantized direction.
+    pub cosine: f64,
+}
+
+/// Result of quantizing a model: float-equivalent model (for accuracy
+/// comparison on the float engine), integer model (for the PVQ engines),
+/// and per-layer reports.
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    /// PVQ-weights model in float form: params are ρŵ (and ρ·s·b̂).
+    pub float_model: Model,
+    /// Integer model for [`crate::nn::pvq_engine`].
+    pub quant_model: QuantModel,
+    /// Per weighted layer, in order.
+    pub reports: Vec<LayerReport>,
+}
+
+/// Quantize `model` with one N/K ratio per weighted layer.
+pub fn quantize(model: &Model, ratios: &[f64], mode: RhoMode) -> Result<Quantized> {
+    let widx = model.spec.weighted_layers();
+    if ratios.len() != widx.len() {
+        bail!("need {} ratios, got {}", widx.len(), ratios.len());
+    }
+    let mut fparams: Vec<Option<LayerParams>> = vec![None; model.spec.layers.len()];
+    let mut qlayers: Vec<Option<QuantLayer>> = vec![None; model.spec.layers.len()];
+    let mut reports = Vec::new();
+    let mut s = 1.0f64; // x_true = s·u of the *integer* engine, pre-layer
+
+    let mut wi = 0;
+    for (li, layer) in model.spec.layers.iter().enumerate() {
+        if let LayerSpec::Scale(c) = layer {
+            s *= *c as f64; // mirror forward_int bookkeeping
+            continue;
+        }
+        if !layer.has_params() {
+            continue;
+        }
+        let p = model.params[li].as_ref().unwrap();
+        let ratio = ratios[wi];
+        let n = p.w.len() + p.b.len();
+        let k = ((n as f64 / ratio).round() as u32).max(1);
+
+        // §VII procedure: flatten weights ++ biases in *trained* units
+        let mut flat: Vec<f64> = Vec::with_capacity(n);
+        flat.extend(p.w.iter().map(|&v| v as f64));
+        flat.extend(p.b.iter().map(|&v| v as f64));
+
+        let q = encode_fast(&flat, k, mode);
+        let cosine = crate::pvq::cosine(&flat, &q);
+        let rho = q.rho;
+
+        let (wi32, bi32) = q.components.split_at(p.w.len());
+        // integer bias B = round(b̂/s); exact when 1/s is an integer
+        // (layer 0 behind a Scale(1/255)), ≤ ρ·s/2 absolute error else.
+        let bint: Vec<i32> = bi32
+            .iter()
+            .map(|&c| (c as f64 / s).round().clamp(i32::MIN as f64, i32::MAX as f64) as i32)
+            .collect();
+        // float-equivalent parameters — EXACTLY what the integer engine
+        // computes: (ρŵ, ρ·s·B)
+        let wq: Vec<f32> = wi32.iter().map(|&c| (rho * c as f64) as f32).collect();
+        let bq: Vec<f32> = bint.iter().map(|&c| (rho * s * c as f64) as f32).collect();
+
+        fparams[li] = Some(LayerParams { w: wq, b: bq });
+        qlayers[li] = Some(QuantLayer {
+            w: wi32.to_vec(),
+            b: bint,
+            b_pyramid: bi32.to_vec(),
+            rho,
+            k,
+        });
+        let label = format!("{}{}", layer.label(), wi);
+        reports.push(LayerReport {
+            label,
+            n,
+            k,
+            ratio,
+            rho,
+            dist: Distribution::from_values(&q.components),
+            cosine,
+        });
+
+        // integer-engine scale propagation mirrors forward_int:
+        let act = match layer {
+            LayerSpec::Dense { act, .. } | LayerSpec::Conv2d { act, .. } => *act,
+            _ => Activation::None,
+        };
+        if act == Activation::BSign {
+            s = 1.0;
+        } else {
+            s *= rho;
+        }
+        wi += 1;
+    }
+
+    let float_model = Model { spec: model.spec.clone(), params: fparams };
+    float_model.validate()?;
+    let quant_model = QuantModel { spec: model.spec.clone(), layers: qlayers };
+    Ok(Quantized { float_model, quant_model, reports })
+}
+
+/// Quantize with the paper's per-net default ratios (Tables 1–4).
+pub fn quantize_paper_ratios(model: &Model, mode: RhoMode) -> Result<Quantized> {
+    let ratios = model.spec.paper_ratios();
+    quantize(model, &ratios, mode)
+}
+
+/// Render the Tables 5–8 style distribution table for a quantized model.
+pub fn distribution_table(q: &Quantized) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:>10} {:>10} {:>8} {:>8} {:>8}\n",
+        "layer", "0", "±1", "±2..3", "±4..7", "others"
+    ));
+    for r in &q.reports {
+        out.push_str(&r.dist.table_row(&r.label));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{Activation, ModelSpec};
+    use crate::nn::tensor::{ITensor, Tensor};
+    use crate::nn::{forward, forward_int};
+    use crate::testkit::Rng;
+
+    /// Random Laplacian-weight model over a small MLP spec.
+    fn small_mlp(act: Activation, seed: u64) -> Model {
+        let spec = ModelSpec {
+            name: "small".into(),
+            input_shape: vec![20],
+            layers: vec![
+                LayerSpec::Dense { input: 20, output: 16, act },
+                LayerSpec::Dense { input: 16, output: 8, act },
+                LayerSpec::Dense { input: 8, output: 4, act: Activation::None },
+            ],
+        };
+        let mut rng = Rng::new(seed);
+        let params = spec
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerSpec::Dense { input, output, .. } => Some(LayerParams {
+                    w: rng.laplacian_vec(input * output, 0.2).iter().map(|&v| v as f32).collect(),
+                    b: rng.laplacian_vec(*output, 0.05).iter().map(|&v| v as f32).collect(),
+                }),
+                _ => None,
+            })
+            .collect();
+        Model { spec, params }
+    }
+
+    #[test]
+    fn quantize_produces_valid_layers() {
+        let m = small_mlp(Activation::Relu, 1);
+        let q = quantize(&m, &[2.0, 2.0, 2.0], RhoMode::Norm).unwrap();
+        assert_eq!(q.reports.len(), 3);
+        for l in q.quant_model.layers.iter().flatten() {
+            assert!(l.is_valid());
+        }
+        for r in &q.reports {
+            assert!(r.cosine > 0.7, "{}: cosine {}", r.label, r.cosine);
+            assert_eq!(r.dist.total() as usize, r.n);
+        }
+    }
+
+    #[test]
+    fn integer_engine_matches_float_equivalent_relu() {
+        // THE central consistency property: the integer engine's argmax ==
+        // float engine on the float-equivalent quantized model, for ReLU
+        // nets with integer inputs (paper's integer PVQ nets).
+        let m = small_mlp(Activation::Relu, 2);
+        let q = quantize(&m, &[1.5, 1.5, 1.5], RhoMode::Norm).unwrap();
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let pix: Vec<u8> = (0..20).map(|_| rng.below(256) as u8).collect();
+            let xf = Tensor::from_vec(&[20], pix.iter().map(|&b| b as f32).collect());
+            let xi = ITensor::from_u8(&[20], &pix);
+            let lf = forward(&q.float_model, &xf);
+            let li = forward_int(&q.quant_model, &xi).unwrap();
+            // scaled integer logits ≈ float logits
+            for (a, b) in lf.iter().zip(&li.logits) {
+                let scaled = li.scale * *b as f64;
+                assert!(
+                    (scaled - *a as f64).abs() < 1e-3 * (1.0 + a.abs() as f64),
+                    "logit mismatch: float {a} vs scaled-int {scaled}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integer_engine_matches_float_equivalent_bsign() {
+        // bsign is discontinuous: the f32 float engine can flip the sign of
+        // a pre-activation that is within f32-rounding of zero, while the
+        // integer engine is exact. So the property is high *classification*
+        // agreement, not bit-equal logits (the integer engine is the ground
+        // truth — that is the paper's point).
+        let m = small_mlp(Activation::BSign, 3);
+        let q = quantize(&m, &[2.0, 2.0, 2.0], RhoMode::Norm).unwrap();
+        let mut rng = Rng::new(77);
+        let mut agree = 0;
+        let trials = 50;
+        for _ in 0..trials {
+            let pix: Vec<u8> = (0..20).map(|_| rng.below(256) as u8).collect();
+            let xf = Tensor::from_vec(&[20], pix.iter().map(|&b| b as f32).collect());
+            let xi = ITensor::from_u8(&[20], &pix);
+            let lf = forward(&q.float_model, &xf);
+            let li = forward_int(&q.quant_model, &xi).unwrap();
+            if crate::nn::argmax_f32(&lf) == crate::nn::argmax_i64(&li.logits) {
+                agree += 1;
+            }
+        }
+        assert!(agree * 10 >= trials * 9, "bsign engine agreement {agree}/{trials}");
+    }
+
+    #[test]
+    fn pulse_budget_respected() {
+        let m = small_mlp(Activation::Relu, 4);
+        let q = quantize(&m, &[5.0, 5.0, 5.0], RhoMode::Norm).unwrap();
+        for (r, l) in q.reports.iter().zip(q.quant_model.layers.iter().flatten()) {
+            assert_eq!(r.k, l.k);
+            let expected_k = ((r.n as f64 / r.ratio).round() as u32).max(1);
+            assert_eq!(r.k, expected_k);
+        }
+    }
+
+    #[test]
+    fn higher_k_higher_cosine() {
+        let m = small_mlp(Activation::Relu, 5);
+        let q_coarse = quantize(&m, &[8.0, 8.0, 8.0], RhoMode::Norm).unwrap();
+        let q_fine = quantize(&m, &[1.0, 1.0, 1.0], RhoMode::Norm).unwrap();
+        for (c, f) in q_coarse.reports.iter().zip(&q_fine.reports) {
+            assert!(f.cosine > c.cosine, "{}: {} !> {}", c.label, f.cosine, c.cosine);
+        }
+    }
+
+    #[test]
+    fn wrong_ratio_count_rejected() {
+        let m = small_mlp(Activation::Relu, 6);
+        assert!(quantize(&m, &[2.0], RhoMode::Norm).is_err());
+    }
+
+    #[test]
+    fn distribution_table_renders() {
+        let m = small_mlp(Activation::Relu, 7);
+        let q = quantize(&m, &[5.0, 5.0, 5.0], RhoMode::Norm).unwrap();
+        let t = distribution_table(&q);
+        assert!(t.contains("FC0"));
+        assert!(t.contains("±1"));
+    }
+}

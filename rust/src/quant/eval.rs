@@ -1,0 +1,217 @@
+//! Accuracy evaluation harness — the before/after comparisons of §VII.
+
+use super::apply::Quantized;
+use crate::data::Dataset;
+use crate::nn::layers::Model;
+use crate::nn::pvq_engine::{forward_int, OpCount};
+use crate::nn::tensor::{argmax_f32, argmax_i64};
+use crate::nn::{classify, QuantModel};
+use anyhow::Result;
+
+/// Accuracy of the float engine on a dataset.
+pub fn accuracy_float(model: &Model, data: &Dataset, limit: usize) -> f64 {
+    let flat = model.spec.input_shape.len() == 1;
+    let n = data.n.min(limit);
+    let mut correct = 0usize;
+    for i in 0..n {
+        if classify(model, &data.sample_f32(i, flat)) == data.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Accuracy + op counts of the integer PVQ engine on a dataset.
+pub fn accuracy_int(model: &QuantModel, data: &Dataset, limit: usize) -> Result<(f64, OpCount)> {
+    let flat = model.spec.input_shape.len() == 1;
+    let n = data.n.min(limit);
+    let mut correct = 0usize;
+    let mut ops = OpCount::default();
+    for i in 0..n {
+        let r = forward_int(model, &data.sample_i64(i, flat))?;
+        if argmax_i64(&r.logits) == data.labels[i] as usize {
+            correct += 1;
+        }
+        ops.merge(&r.ops);
+    }
+    Ok((correct as f64 / n as f64, ops))
+}
+
+/// Fraction of samples where the integer engine and the float-equivalent
+/// quantized model agree on the class — a consistency check, should be
+/// ≈ 1.0 (small disagreement only from f32 rounding at ties).
+pub fn engine_agreement(q: &Quantized, data: &Dataset, limit: usize) -> Result<f64> {
+    let flat = q.float_model.spec.input_shape.len() == 1;
+    let n = data.n.min(limit);
+    let mut agree = 0usize;
+    for i in 0..n {
+        let cf = argmax_f32(&crate::nn::forward(&q.float_model, &data.sample_f32(i, flat)));
+        let ci = argmax_i64(&forward_int(&q.quant_model, &data.sample_i64(i, flat))?.logits);
+        if cf == ci {
+            agree += 1;
+        }
+    }
+    Ok(agree as f64 / n as f64)
+}
+
+/// §VII headline row: accuracy before vs after PVQ encoding.
+#[derive(Clone, Debug)]
+pub struct AccuracyReport {
+    /// Net name.
+    pub net: String,
+    /// Float accuracy before quantization.
+    pub before: f64,
+    /// Accuracy of the quantized net (float-equivalent weights).
+    pub after_float: f64,
+    /// Accuracy of the integer PVQ engine.
+    pub after_int: f64,
+    /// Engine agreement (float-equivalent vs integer).
+    pub agreement: f64,
+    /// Aggregate op counts of the integer engine over the eval set.
+    pub ops: OpCount,
+}
+
+impl AccuracyReport {
+    /// Render one report line.
+    pub fn render(&self) -> String {
+        format!(
+            "net {}: before {:.2}%  after(PVQ,float) {:.2}%  after(PVQ,int) {:.2}%  drop {:+.2}pp  agreement {:.3}\n  ops/sample: adds {} mults {} (add-only arch adds {}), float MACs {} → mult reduction {:.0}×",
+            self.net,
+            100.0 * self.before,
+            100.0 * self.after_float,
+            100.0 * self.after_int,
+            100.0 * (self.after_int - self.before),
+            self.agreement,
+            self.ops.adds,
+            self.ops.mults,
+            self.ops.adds_addonly,
+            self.ops.float_macs,
+            self.ops.float_macs as f64 / (self.ops.mults.max(1)) as f64,
+        )
+    }
+}
+
+/// Full §VII experiment for one net: evaluate before/after on `data`.
+pub fn evaluate(model: &Model, q: &Quantized, data: &Dataset, limit: usize) -> Result<AccuracyReport> {
+    let before = accuracy_float(model, data, limit);
+    let after_float = accuracy_float(&q.float_model, data, limit);
+    let (after_int, mut ops) = accuracy_int(&q.quant_model, data, limit)?;
+    let agreement = engine_agreement(q, data, limit)?;
+    let n = data.n.min(limit).max(1) as u64;
+    ops.adds /= n;
+    ops.mults /= n;
+    ops.adds_addonly /= n;
+    ops.float_macs /= n;
+    Ok(AccuracyReport {
+        net: model.spec.name.clone(),
+        before,
+        after_float,
+        after_int,
+        agreement,
+        ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_glyphs;
+    use crate::nn::layers::LayerParams;
+    use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+    use crate::quant::apply::quantize;
+    use crate::pvq::RhoMode;
+    use crate::testkit::Rng;
+
+    /// A tiny hand-trained-ish model: random feature layer + prototype
+    /// readout gives way-above-chance accuracy on the glyph set without
+    /// needing a training loop in rust.
+    fn template_model(data: &Dataset) -> Model {
+        // readout weights = class mean images (template matching)
+        let d = data.sample_len();
+        let mut means = vec![vec![0f64; d]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..data.n {
+            let c = data.labels[i] as usize;
+            counts[c] += 1;
+            for (j, &p) in data.sample(i).iter().enumerate() {
+                means[c][j] += p as f64;
+            }
+        }
+        let mut w = Vec::with_capacity(10 * d);
+        for c in 0..10 {
+            let cnt = counts[c].max(1) as f64;
+            let mean: Vec<f64> = means[c].iter().map(|&v| v / cnt / 255.0).collect();
+            let norm: f64 = mean.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-9);
+            w.extend(mean.iter().map(|&v| (v / norm) as f32));
+        }
+        let spec = ModelSpec {
+            name: "tmpl".into(),
+            input_shape: vec![d],
+            layers: vec![LayerSpec::Dense { input: d, output: 10, act: Activation::None }],
+        };
+        Model { spec, params: vec![Some(LayerParams { w, b: vec![0.0; 10] })] }
+    }
+
+    #[test]
+    fn template_model_learns_glyphs() {
+        let train = synth_glyphs(200, 16, 16, 1);
+        let test = synth_glyphs(100, 16, 16, 2);
+        let m = template_model(&train);
+        let acc = accuracy_float(&m, &test, 100);
+        assert!(acc > 0.65, "template accuracy {acc}");
+    }
+
+    #[test]
+    fn quantized_accuracy_close_and_engines_agree() {
+        let train = synth_glyphs(200, 16, 16, 3);
+        let test = synth_glyphs(100, 16, 16, 4);
+        let m = template_model(&train);
+        let q = quantize(&m, &[2.0], RhoMode::Norm).unwrap();
+        let rep = evaluate(&m, &q, &test, 100).unwrap();
+        assert!(rep.before > 0.65);
+        // few-% drop claim at N/K=2 on a 1-layer template net
+        assert!(
+            rep.after_int >= rep.before - 0.15,
+            "int acc {} vs before {}",
+            rep.after_int,
+            rep.before
+        );
+        assert!(rep.agreement > 0.95, "agreement {}", rep.agreement);
+        assert!(rep.ops.mults < rep.ops.float_macs / 3, "mult reduction too weak");
+        let line = rep.render();
+        assert!(line.contains("net tmpl"));
+    }
+
+    #[test]
+    fn coarser_k_worse_or_equal_accuracy() {
+        let train = synth_glyphs(300, 16, 16, 5);
+        let test = synth_glyphs(150, 16, 16, 6);
+        let m = template_model(&train);
+        let fine = quantize(&m, &[1.0], RhoMode::Norm).unwrap();
+        let coarse = quantize(&m, &[16.0], RhoMode::Norm).unwrap();
+        let af = accuracy_float(&fine.float_model, &test, 150);
+        let ac = accuracy_float(&coarse.float_model, &test, 150);
+        assert!(af + 0.02 >= ac, "fine {af} vs coarse {ac}");
+    }
+
+    #[test]
+    fn random_model_chance_level() {
+        let mut rng = Rng::new(9);
+        let d = 256;
+        let spec = ModelSpec {
+            name: "rand".into(),
+            input_shape: vec![d],
+            layers: vec![LayerSpec::Dense { input: d, output: 10, act: Activation::None }],
+        };
+        let m = Model {
+            spec,
+            params: vec![Some(LayerParams {
+                w: rng.gaussian_vec_f32(d * 10, 0.1),
+                b: vec![0.0; 10],
+            })],
+        };
+        let test = synth_glyphs(200, 16, 16, 10);
+        let acc = accuracy_float(&m, &test, 200);
+        assert!(acc < 0.35, "random model should be near chance, got {acc}");
+    }
+}

@@ -1,0 +1,10 @@
+//! PVQ application to trained models, accuracy evaluation, and K tuning
+//! (§IV and §VII of the paper).
+
+pub mod apply;
+pub mod eval;
+pub mod sweep;
+
+pub use apply::{distribution_table, quantize, quantize_paper_ratios, LayerReport, Quantized};
+pub use eval::{accuracy_float, accuracy_int, evaluate, AccuracyReport};
+pub use sweep::{k_annealing, ratio_sweep, tune_ratio, SweepPoint};

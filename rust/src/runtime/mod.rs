@@ -1,0 +1,95 @@
+//! PJRT runtime: load AOT-lowered HLO text (written by
+//! `python/compile/aot.py`), compile once on the CPU PJRT client, execute
+//! batches from the rust request path. Python never runs here.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled HLO graph bound to a PJRT client.
+pub struct HloModel {
+    /// Executable; PJRT clients are not Sync, so guard execution.
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    /// Input geometry: flattened feature count per sample.
+    pub input_len: usize,
+    /// Output geometry: logits per sample.
+    pub output_len: usize,
+    /// Batch size the graph was lowered for.
+    pub batch: usize,
+}
+
+// SAFETY: all PJRT access goes through the Mutex; the underlying CPU client
+// is thread-compatible under external synchronization.
+unsafe impl Send for HloModel {}
+unsafe impl Sync for HloModel {}
+
+impl HloModel {
+    /// Load HLO text, compile on a fresh CPU PJRT client.
+    ///
+    /// The lowered jax function must take one `f32[batch, input_len]`
+    /// argument and return a 1-tuple of `f32[batch, output_len]`
+    /// (`aot.py` lowers with `return_tuple=True`).
+    pub fn load(path: &Path, batch: usize, input_len: usize, output_len: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(HloModel { exe: Mutex::new(exe), input_len, output_len, batch })
+    }
+
+    /// Execute one batch. `x.len()` must equal `batch × input_len`; returns
+    /// `batch × output_len` logits.
+    pub fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.batch * self.input_len,
+            "expected {} inputs, got {}",
+            self.batch * self.input_len,
+            x.len()
+        );
+        let lit = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, self.input_len as i64])
+            .context("reshape input literal")?;
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[lit]).context("PJRT execute")?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = out.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            v.len() == self.batch * self.output_len,
+            "expected {} outputs, got {}",
+            self.batch * self.output_len,
+            v.len()
+        );
+        Ok(v)
+    }
+
+    /// Classify a batch: per-sample argmax.
+    pub fn classify_batch(&self, x: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.run_batch(x)?;
+        Ok(logits
+            .chunks(self.output_len)
+            .map(crate::nn::tensor::argmax_f32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! PJRT integration tests live in `rust/tests/hlo_runtime.rs` (they
+    //! need `make artifacts`). Here: only argument validation.
+    use super::*;
+
+    #[test]
+    fn missing_file_errors() {
+        let r = HloModel::load(Path::new("/nonexistent/x.hlo.txt"), 1, 4, 2);
+        assert!(r.is_err());
+    }
+}

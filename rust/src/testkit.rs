@@ -1,0 +1,143 @@
+//! Tiny in-tree property-testing kit.
+//!
+//! `proptest` is not available in this environment's offline registry, so
+//! the invariant tests ship their own deterministic generators: a
+//! SplitMix64 PRNG with Gaussian/Laplacian samplers (Laplacian matters —
+//! the paper's whole premise is that trained NN weights are approximately
+//! Laplacian, §IV) and a `check` driver that runs a property over many
+//! seeded cases and reports the failing seed for reproduction.
+
+/// SplitMix64 PRNG — tiny, fast, splittable, good enough for tests and for
+/// the synthetic workload generators in the benches.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded constructor; equal seeds ⇒ equal streams.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0,1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // multiply-shift; bias negligible for test usage
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Standard Laplacian (b=1): inverse-CDF sampling.
+    pub fn next_laplacian(&mut self) -> f64 {
+        let u = self.next_f64() - 0.5;
+        -u.signum() * (1.0 - 2.0 * u.abs()).max(1e-300).ln()
+    }
+
+    /// Vector of Laplacian samples — the canonical "trained NN weights"
+    /// surrogate used across the test suite and benches.
+    pub fn laplacian_vec(&mut self, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| self.next_laplacian() * scale).collect()
+    }
+
+    /// Vector of f32 Gaussian samples (activations surrogate).
+    pub fn gaussian_vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (self.next_gaussian() as f32) * scale).collect()
+    }
+}
+
+/// Run `prop` over `cases` seeded inputs; panic with the failing case id so
+/// `Rng::new(seed + id)` reproduces it.
+pub fn check<F: FnMut(u64, &mut Rng)>(name: &str, seed: u64, cases: u64, mut prop: F) {
+    for id in 0..cases {
+        let mut rng = Rng::new(seed ^ (id.wrapping_mul(0xA24BAED4963EE407)));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(id, &mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {id} (seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.below(17);
+            assert!(y < 17);
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn laplacian_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_laplacian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        // Laplace(0,1) variance = 2
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 2.0).abs() < 0.12, "var {var}");
+    }
+
+    #[test]
+    fn check_driver_runs_all_cases() {
+        let mut count = 0;
+        check("counter", 9, 25, |_, _| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+}

@@ -1,0 +1,63 @@
+//! Cross-language golden test: the rust encoder must reproduce the python
+//! reference encoder (python/compile/pvq.py) bit-for-bit on shared cases.
+//!
+//! Requires `make artifacts` (which writes artifacts/pvq_golden.txt); the
+//! test is skipped with a notice when artifacts are absent so `cargo test`
+//! stays runnable on a fresh checkout.
+
+use pvqnet::pvq::{encode, PvqVector};
+use std::path::Path;
+
+fn parse_golden(text: &str) -> Vec<(Vec<f64>, u32, Vec<i32>, f64)> {
+    let mut lines = text.lines().filter(|l| !l.starts_with('#') && !l.trim().is_empty());
+    let mut cases = Vec::new();
+    while let Some(header) = lines.next() {
+        let mut it = header.split_whitespace();
+        let n: usize = it.next().unwrap().parse().unwrap();
+        let k: u32 = it.next().unwrap().parse().unwrap();
+        let v: Vec<f64> = lines
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .map(|t| t.parse().unwrap())
+            .collect();
+        let comps: Vec<i32> = lines
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .map(|t| t.parse().unwrap())
+            .collect();
+        let rho: f64 = lines.next().unwrap().parse().unwrap();
+        assert_eq!(v.len(), n);
+        assert_eq!(comps.len(), n);
+        cases.push((v, k, comps, rho));
+    }
+    cases
+}
+
+#[test]
+fn rust_encoder_matches_python_reference() {
+    let path = Path::new("artifacts/pvq_golden.txt");
+    if !path.exists() {
+        eprintln!("SKIP golden_pvq: {} missing (run `make artifacts`)", path.display());
+        return;
+    }
+    let text = std::fs::read_to_string(path).unwrap();
+    let cases = parse_golden(&text);
+    assert!(cases.len() >= 30, "golden file too small: {} cases", cases.len());
+    for (i, (v, k, comps, rho)) in cases.iter().enumerate() {
+        let q: PvqVector = encode(v, *k);
+        assert_eq!(
+            &q.components, comps,
+            "case {i}: components diverge (n={} k={k})",
+            v.len()
+        );
+        assert!(
+            (q.rho - rho).abs() <= 1e-12 * rho.abs().max(1.0),
+            "case {i}: rho {} vs python {}",
+            q.rho,
+            rho
+        );
+    }
+    println!("golden_pvq: {} cases matched exactly", cases.len());
+}

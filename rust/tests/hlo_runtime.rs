@@ -1,0 +1,119 @@
+//! PJRT integration: the AOT-lowered HLO graphs must load, compile, run,
+//! and agree with the rust float engine on the same weights and inputs.
+//!
+//! Skipped with a notice when `make artifacts` has not been run.
+
+use pvqnet::data::Dataset;
+use pvqnet::nn::weights::load_model;
+use pvqnet::nn::{forward, ModelSpec, Tensor};
+use pvqnet::runtime::HloModel;
+use std::path::Path;
+
+const BATCH: usize = 32;
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.txt").exists()
+}
+
+#[test]
+fn net_a_hlo_matches_rust_float_engine() {
+    if !have_artifacts() {
+        eprintln!("SKIP hlo_runtime: run `make artifacts` first");
+        return;
+    }
+    let spec = ModelSpec::by_name("a").unwrap();
+    let model = load_model(Path::new("artifacts/net_a.pvqw"), &spec).unwrap();
+    let hlo = HloModel::load(Path::new("artifacts/net_a.hlo.txt"), BATCH, 784, 10).unwrap();
+    let data = Dataset::load(Path::new("artifacts/mnist_test.bin")).unwrap();
+
+    let mut x = vec![0f32; BATCH * 784];
+    for i in 0..BATCH {
+        for (j, &b) in data.sample(i).iter().enumerate() {
+            x[i * 784 + j] = b as f32;
+        }
+    }
+    let logits = hlo.run_batch(&x).unwrap();
+    for i in 0..BATCH {
+        let t = Tensor::from_vec(&[784], x[i * 784..(i + 1) * 784].to_vec());
+        let want = forward(&model, &t);
+        let got = &logits[i * 10..(i + 1) * 10];
+        for (a, b) in want.iter().zip(got) {
+            assert!(
+                (a - b).abs() < 1e-2 * (1.0 + a.abs()),
+                "sample {i}: rust {a} vs pjrt {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pallas_lowered_hlo_matches_plain_hlo() {
+    if !have_artifacts() {
+        eprintln!("SKIP hlo_runtime: run `make artifacts` first");
+        return;
+    }
+    let plain = HloModel::load(Path::new("artifacts/net_a.hlo.txt"), BATCH, 784, 10).unwrap();
+    let pallas = HloModel::load(Path::new("artifacts/net_a_pallas.hlo.txt"), BATCH, 784, 10).unwrap();
+    let data = Dataset::load(Path::new("artifacts/mnist_test.bin")).unwrap();
+    let mut x = vec![0f32; BATCH * 784];
+    for i in 0..BATCH {
+        for (j, &b) in data.sample(i + BATCH).iter().enumerate() {
+            x[i * 784 + j] = b as f32;
+        }
+    }
+    let a = plain.run_batch(&x).unwrap();
+    let b = pallas.run_batch(&x).unwrap();
+    for (i, (va, vb)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (va - vb).abs() < 1e-2 * (1.0 + va.abs()),
+            "logit {i}: plain {va} vs pallas-kernel {vb}"
+        );
+    }
+}
+
+#[test]
+fn quantized_hlo_loads_and_classifies() {
+    if !have_artifacts() {
+        eprintln!("SKIP hlo_runtime: run `make artifacts` first");
+        return;
+    }
+    let hlo = HloModel::load(Path::new("artifacts/net_a_pvq.hlo.txt"), BATCH, 784, 10).unwrap();
+    let data = Dataset::load(Path::new("artifacts/mnist_test.bin")).unwrap();
+    let mut x = vec![0f32; BATCH * 784];
+    for i in 0..BATCH {
+        for (j, &b) in data.sample(i).iter().enumerate() {
+            x[i * 784 + j] = b as f32;
+        }
+    }
+    let classes = hlo.classify_batch(&x).unwrap();
+    let correct = classes
+        .iter()
+        .enumerate()
+        .filter(|(i, &c)| c == data.labels[*i] as usize)
+        .count();
+    // quantized net at paper ratios should stay way above chance
+    assert!(correct * 2 >= BATCH, "quantized HLO accuracy {correct}/{BATCH}");
+}
+
+#[test]
+fn hlo_engine_serves_through_coordinator() {
+    if !have_artifacts() {
+        eprintln!("SKIP hlo_runtime: run `make artifacts` first");
+        return;
+    }
+    use pvqnet::coordinator::{Engine, Server, ServerConfig};
+    use std::sync::Arc;
+    let hlo = HloModel::load(Path::new("artifacts/net_a.hlo.txt"), BATCH, 784, 10).unwrap();
+    let data = Dataset::load(Path::new("artifacts/mnist_test.bin")).unwrap();
+    let server = Server::start(Engine::Hlo(Arc::new(hlo)), ServerConfig::default());
+    let mut correct = 0;
+    let n = 64;
+    for i in 0..n {
+        let r = server.classify(data.sample(i).to_vec()).unwrap();
+        if r.class == data.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct * 2 > n, "served accuracy {correct}/{n}");
+    server.shutdown();
+}

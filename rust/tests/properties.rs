@@ -1,0 +1,220 @@
+//! Cross-module property tests (in-tree testkit; proptest unavailable
+//! offline). Each property runs over many seeded cases; the failing case
+//! id is printed on panic for reproduction.
+
+use pvqnet::compress::{compress_layer, decompress_layer, Codec};
+use pvqnet::coordinator::{Engine, Server, ServerConfig};
+use pvqnet::nn::layers::LayerParams;
+use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
+use pvqnet::nn::tensor::{argmax_f32, argmax_i64, ITensor, Tensor};
+use pvqnet::nn::{forward, forward_int, Model};
+use pvqnet::pvq::{
+    encode_fast, index_to_vector, vector_to_index, CountTable, PvqVector, RhoMode,
+};
+use pvqnet::quant::quantize;
+use pvqnet::testkit::{check, Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// encode → container-compress (each codec) → decompress → identical point.
+#[test]
+fn prop_compress_roundtrip_any_codec() {
+    check("compress-roundtrip", 101, 60, |id, rng| {
+        let n = 1 + rng.below(3000) as usize;
+        let ratio = 1 + rng.below(6) as usize;
+        let scale = 0.5 + rng.next_f64();
+        let v = rng.laplacian_vec(n, scale);
+        let q = encode_fast(&v, (n / ratio).max(1) as u32, RhoMode::Norm);
+        let codec = match id % 4 {
+            0 => Codec::ExpGolomb,
+            1 => Codec::Rle,
+            2 => Codec::Huffman,
+            _ => Codec::Raw,
+        };
+        let bytes = compress_layer(&q, codec);
+        let back = decompress_layer(&bytes).unwrap();
+        assert_eq!(back.components, q.components);
+        assert_eq!(back.k, q.k);
+    });
+}
+
+/// Fischer index mapping is a bijection along random points.
+#[test]
+fn prop_index_bijection() {
+    let table = CountTable::new(24, 24);
+    check("index-bijection", 202, 100, |_, rng| {
+        let n = 2 + rng.below(23) as usize;
+        let k = 1 + rng.below(24) as u32;
+        let v = rng.laplacian_vec(n, 1.0);
+        let q = encode_fast(&v, k, RhoMode::Norm);
+        let idx = vector_to_index(&q.components, &table);
+        let back = index_to_vector(&idx, n, k, &table);
+        assert_eq!(back, q.components);
+        // rank < Np(n,k)
+        assert!(idx.cmp_big(table.count(n, k as usize)) == std::cmp::Ordering::Less);
+    });
+}
+
+/// Quantized ReLU nets: integer engine ≡ float-equivalent model (scaled),
+/// on random architectures and random integer inputs.
+#[test]
+fn prop_engine_equivalence_random_mlps() {
+    check("engine-equivalence", 303, 25, |_, rng| {
+        let d0 = 4 + rng.below(40) as usize;
+        let d1 = 2 + rng.below(24) as usize;
+        let d2 = 2 + rng.below(10) as usize;
+        let spec = ModelSpec {
+            name: "p".into(),
+            input_shape: vec![d0],
+            layers: vec![
+                LayerSpec::Dense { input: d0, output: d1, act: Activation::Relu },
+                LayerSpec::Dense { input: d1, output: d2, act: Activation::None },
+            ],
+        };
+        let params = vec![
+            Some(LayerParams {
+                w: rng.laplacian_vec(d0 * d1, 0.3).iter().map(|&v| v as f32).collect(),
+                b: rng.laplacian_vec(d1, 0.1).iter().map(|&v| v as f32).collect(),
+            }),
+            Some(LayerParams {
+                w: rng.laplacian_vec(d1 * d2, 0.3).iter().map(|&v| v as f32).collect(),
+                b: rng.laplacian_vec(d2, 0.1).iter().map(|&v| v as f32).collect(),
+            }),
+        ];
+        let model = Model { spec, params };
+        let ratio = 1.0 + rng.next_f64() * 4.0;
+        let q = quantize(&model, &[ratio, ratio], RhoMode::Norm).unwrap();
+        for _ in 0..5 {
+            let pix: Vec<u8> = (0..d0).map(|_| rng.below(256) as u8).collect();
+            let xf = Tensor::from_vec(&[d0], pix.iter().map(|&b| b as f32).collect());
+            let xi = ITensor::from_u8(&[d0], &pix);
+            let lf = forward(&q.float_model, &xf);
+            let li = forward_int(&q.quant_model, &xi).unwrap();
+            for (a, b) in lf.iter().zip(&li.logits) {
+                let scaled = li.scale * *b as f64;
+                assert!(
+                    (scaled - *a as f64).abs() < 1e-2 * (1.0 + a.abs() as f64),
+                    "float {a} vs scaled-int {scaled} (ratio {ratio})"
+                );
+            }
+        }
+    });
+}
+
+/// Pyramid invariant + L2 preservation hold for every (n, k, distribution).
+#[test]
+fn prop_encode_invariants() {
+    check("encode-invariants", 404, 200, |id, rng| {
+        let n = 1 + rng.below(500) as usize;
+        let k = 1 + rng.below(600) as u32;
+        let v = match id % 3 {
+            0 => rng.laplacian_vec(n, 1.0),
+            1 => (0..n).map(|_| rng.next_gaussian()).collect(),
+            _ => (0..n)
+                .map(|_| if rng.next_f64() < 0.5 { 0.0 } else { rng.next_gaussian() })
+                .collect(),
+        };
+        let q = encode_fast(&v, k, RhoMode::Norm);
+        let all_zero = v.iter().all(|&x| x == 0.0);
+        if all_zero {
+            assert_eq!(q.rho, 0.0);
+            return;
+        }
+        assert!(q.is_valid(), "Σ|ŷ|={} ≠ K={k}", q.l1());
+        // norm-ρ preserves radius
+        let rv: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let dec = q.decode();
+        let rd: f64 = dec.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((rv - rd).abs() < 1e-9 * rv.max(1.0));
+    });
+}
+
+/// Coordinator under multi-client load: every request answered exactly
+/// once, no cross-client result corruption.
+#[test]
+fn prop_coordinator_exactly_once() {
+    let spec = ModelSpec {
+        name: "c".into(),
+        input_shape: vec![8],
+        layers: vec![LayerSpec::Dense { input: 8, output: 4, act: Activation::None }],
+    };
+    let mut rng = Rng::new(1);
+    let model = Model {
+        spec,
+        params: vec![Some(LayerParams {
+            w: rng.gaussian_vec_f32(32, 0.3),
+            b: vec![0.0; 4],
+        })],
+    };
+    // ground truth per input
+    let answer = |pix: &[u8]| -> usize {
+        let t = Tensor::from_vec(&[8], pix.iter().map(|&b| b as f32).collect());
+        argmax_f32(&forward(&model, &t))
+    };
+    let server = Arc::new(Server::start(
+        Engine::Float(Arc::new(model.clone())),
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(300),
+            workers: 2,
+            queue_cap: 4096,
+        },
+    ));
+    let clients = 4;
+    let per_client = 120;
+    let mut handles = Vec::new();
+    for ci in 0..clients {
+        let server = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + ci);
+            let mut results = Vec::new();
+            for _ in 0..per_client {
+                let pix: Vec<u8> = (0..8).map(|_| rng.below(256) as u8).collect();
+                let rx = server.submit(pix.clone()).unwrap();
+                results.push((pix, rx));
+            }
+            results
+                .into_iter()
+                .map(|(pix, rx)| {
+                    let r = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+                    (pix, r.class)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        for (pix, class) in h.join().unwrap() {
+            assert_eq!(class, answer(&pix), "cross-request corruption");
+            total += 1;
+        }
+    }
+    assert_eq!(total, clients * per_client);
+    let m = server.metrics();
+    assert_eq!(
+        m.responses.load(std::sync::atomic::Ordering::Relaxed),
+        (clients * per_client) as u64
+    );
+}
+
+/// bsign integer path: argmax equals a big-integer exact recomputation.
+#[test]
+fn prop_bsign_binary_engine_vs_integer() {
+    use pvqnet::nn::binary::{BinaryDense, BitVec};
+    check("binary-vs-integer", 505, 40, |_, rng| {
+        let n_in = 8 + rng.below(200) as usize;
+        let n_out = 1 + rng.below(30) as usize;
+        let v = rng.laplacian_vec(n_in * n_out + n_out, 0.4);
+        let q = encode_fast(&v, ((n_in * n_out) / 3).max(1) as u32, RhoMode::Norm);
+        let (w, b) = q.components.split_at(n_in * n_out);
+        let x: Vec<i64> =
+            (0..n_in).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+        let mut ops = pvqnet::nn::pvq_engine::OpCount::default();
+        let expect =
+            pvqnet::nn::pvq_engine::dense_i64(&x, w, b, n_in, n_out, &mut ops);
+        let bd = BinaryDense::compile(w, b, n_in, n_out);
+        let got = bd.forward(&BitVec::from_pm1(&x).unwrap());
+        assert_eq!(got, expect);
+        assert_eq!(argmax_i64(&got), argmax_i64(&expect));
+    });
+}
