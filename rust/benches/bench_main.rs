@@ -326,6 +326,89 @@ fn bench_serve() {
     }
 }
 
+/// Artifact pack/unpack throughput + compressed bytes per weight on a
+/// net-A-shaped synthetic model; emits BENCH_artifact.json next to the
+/// other bench outputs.
+fn bench_artifact() {
+    use pvqnet::artifact::{read_model, write_model};
+    use pvqnet::nn::Model;
+
+    let spec = ModelSpec::by_name("a").unwrap();
+    let model = Model::synth(&spec, 42);
+    let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
+    let path = std::env::temp_dir().join("pvqnet_bench_artifact.pvqm");
+
+    let t0 = Instant::now();
+    let manifest = write_model(&path, &q.quant_model).unwrap();
+    let pack_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let (back, _) = read_model(&path).unwrap();
+    let unpack_s = t1.elapsed().as_secs_f64();
+    assert_eq!(back.spec, q.quant_model.spec);
+
+    let n_weights: u64 = manifest.layers.iter().map(|l| l.n as u64).sum();
+    let mb = |s: f64| n_weights as f64 * 4.0 / s / 1e6;
+    println!(
+        "  pack   {} ({:.0} MB/s raw-equivalent)  unpack {} ({:.0} MB/s)",
+        fmt_t(pack_s),
+        mb(pack_s),
+        fmt_t(unpack_s),
+        mb(unpack_s)
+    );
+    println!(
+        "  {} params → {} bytes on disk, {:.3} bits/weight ({:.1}x vs f32)",
+        manifest.total_params,
+        manifest.total_compressed(),
+        manifest.bits_per_weight(),
+        manifest.total_raw() as f64 / manifest.total_compressed().max(1) as f64
+    );
+    for l in &manifest.layers {
+        println!(
+            "    {:<6} codec {:<11} {:>9} B  {:.3} bits/w",
+            l.label,
+            l.codec.name(),
+            l.compressed_bytes,
+            l.bits_per_weight()
+        );
+    }
+
+    let per_layer: Vec<String> = manifest
+        .layers
+        .iter()
+        .map(|l| {
+            format!(
+                "{{\"label\":\"{}\",\"codec\":\"{}\",\"n\":{},\"k\":{},\"compressed_bytes\":{},\"bits_per_weight\":{:.4}}}",
+                l.label,
+                l.codec.name(),
+                l.n,
+                l.k,
+                l.compressed_bytes,
+                l.bits_per_weight()
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"experiment\":\"artifact\",\"net\":\"A\",\"pack_s\":{:.6},\"unpack_s\":{:.6},\"total_params\":{},\"compressed_bytes\":{},\"raw_bytes\":{},\"bits_per_weight\":{:.4},\"layers\":[{}]}}\n",
+        pack_s,
+        unpack_s,
+        manifest.total_params,
+        manifest.total_compressed(),
+        manifest.total_raw(),
+        manifest.bits_per_weight(),
+        per_layer.join(",")
+    );
+    std::fs::write("BENCH_artifact.json", json).unwrap();
+    println!("  wrote BENCH_artifact.json");
+
+    time_it("artifact pack (net A synth)", || {
+        std::hint::black_box(write_model(&path, &q.quant_model).unwrap());
+    });
+    time_it("artifact unpack (net A synth)", || {
+        std::hint::black_box(read_model(&path).unwrap());
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
 /// PJRT vs native engines, batched (net A).
 fn bench_pjrt() {
     if !have_artifacts() {
@@ -381,6 +464,7 @@ fn main() {
         ("encode", bench_encode),
         ("engines", bench_engines),
         ("serve", bench_serve),
+        ("artifact", bench_artifact),
         ("pjrt", bench_pjrt),
     ];
     if args.iter().any(|a| a == "--list") {

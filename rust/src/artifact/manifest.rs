@@ -1,0 +1,226 @@
+//! Artifact manifest: per-layer codec choice, PVQ K/N parameters, and
+//! compression stats. Stored as the MANI section so `pvqnet inspect`
+//! reports a container without entropy-decoding a single weight.
+
+use super::ByteReader;
+use crate::compress::Codec;
+use anyhow::{bail, Context, Result};
+
+/// Stats for one packed layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerManifest {
+    /// Paper-style label, e.g. "FC0" / "CONV2".
+    pub label: String,
+    /// Index into `spec.layers`.
+    pub layer_index: usize,
+    /// Pyramid dimension N (weights + pyramid biases).
+    pub n: usize,
+    /// Pulse budget K.
+    pub k: u32,
+    /// Gain ρ.
+    pub rho: f64,
+    /// Entropy coder that won the per-layer best-of.
+    pub codec: Codec,
+    /// Compressed PVQL blob size in bytes.
+    pub compressed_bytes: u64,
+}
+
+impl LayerManifest {
+    /// f32 baseline for the same parameters.
+    pub fn raw_bytes(&self) -> u64 {
+        4 * self.n as u64
+    }
+
+    /// Achieved bits per weight.
+    pub fn bits_per_weight(&self) -> f64 {
+        8.0 * self.compressed_bytes as f64 / self.n.max(1) as f64
+    }
+
+    /// N/K ratio of the layer.
+    pub fn ratio(&self) -> f64 {
+        self.n as f64 / self.k.max(1) as f64
+    }
+}
+
+/// Whole-artifact manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactManifest {
+    /// Model name (from the spec).
+    pub model: String,
+    /// Total parameter count of the spec.
+    pub total_params: usize,
+    /// One entry per packed layer, in stream order.
+    pub layers: Vec<LayerManifest>,
+}
+
+impl ArtifactManifest {
+    /// Sum of compressed layer blobs.
+    pub fn total_compressed(&self) -> u64 {
+        self.layers.iter().map(|l| l.compressed_bytes).sum()
+    }
+
+    /// Sum of f32 baselines.
+    pub fn total_raw(&self) -> u64 {
+        self.layers.iter().map(|l| l.raw_bytes()).sum()
+    }
+
+    /// Whole-model bits per weight.
+    pub fn bits_per_weight(&self) -> f64 {
+        let n: u64 = self.layers.iter().map(|l| l.n as u64).sum();
+        8.0 * self.total_compressed() as f64 / n.max(1) as f64
+    }
+
+    /// Human-readable report (the `pvqnet inspect` body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "model {} — {} params, {} packed layers\n",
+            self.model,
+            self.total_params,
+            self.layers.len()
+        ));
+        out.push_str(&format!(
+            "{:<8} {:<11} {:>10} {:>10} {:>6} {:>12} {:>10} {:>8}\n",
+            "layer", "codec", "N", "K", "N/K", "rho", "bytes", "bits/w"
+        ));
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{:<8} {:<11} {:>10} {:>10} {:>6.2} {:>12.5e} {:>10} {:>8.3}\n",
+                l.label,
+                l.codec.name(),
+                l.n,
+                l.k,
+                l.ratio(),
+                l.rho,
+                l.compressed_bytes,
+                l.bits_per_weight()
+            ));
+        }
+        out.push_str(&format!(
+            "total: {} bytes compressed ({} raw f32) — {:.3} bits/weight, {:.1}x smaller\n",
+            self.total_compressed(),
+            self.total_raw(),
+            self.bits_per_weight(),
+            self.total_raw() as f64 / self.total_compressed().max(1) as f64
+        ));
+        out
+    }
+
+    /// Serialize to the MANI payload.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        let name = self.model.as_bytes();
+        if name.len() > u16::MAX as usize {
+            bail!("model name too long");
+        }
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&(self.total_params as u64).to_le_bytes());
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            let label = l.label.as_bytes();
+            if label.len() > u8::MAX as usize {
+                bail!("layer label too long");
+            }
+            out.push(label.len() as u8);
+            out.extend_from_slice(label);
+            if l.layer_index > u32::MAX as usize || l.n > u32::MAX as usize {
+                bail!("layer '{}' exceeds the u32 container limits", l.label);
+            }
+            out.extend_from_slice(&(l.layer_index as u32).to_le_bytes());
+            out.extend_from_slice(&(l.n as u32).to_le_bytes());
+            out.extend_from_slice(&l.k.to_le_bytes());
+            out.extend_from_slice(&l.rho.to_le_bytes());
+            out.push(l.codec.id());
+            out.extend_from_slice(&l.compressed_bytes.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    /// Deserialize a MANI payload.
+    pub fn decode(payload: &[u8]) -> Result<ArtifactManifest> {
+        let mut r = ByteReader::new(payload);
+        let name_len = r.u16()? as usize;
+        let model =
+            String::from_utf8(r.take(name_len)?.to_vec()).context("model name not utf-8")?;
+        let total_params = r.u64()? as usize;
+        let n_layers = r.u32()? as usize;
+        if n_layers > 4096 {
+            bail!("implausible manifest layer count {n_layers}");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let label_len = r.u8()? as usize;
+            let label =
+                String::from_utf8(r.take(label_len)?.to_vec()).context("label not utf-8")?;
+            let layer_index = r.u32()? as usize;
+            let n = r.u32()? as usize;
+            let k = r.u32()?;
+            let rho = r.f64()?;
+            let codec = Codec::from_id(r.u8()?)?;
+            let compressed_bytes = r.u64()?;
+            layers.push(LayerManifest { label, layer_index, n, k, rho, codec, compressed_bytes });
+        }
+        if !r.is_empty() {
+            bail!("trailing bytes after manifest");
+        }
+        Ok(ArtifactManifest { model, total_params, layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArtifactManifest {
+        ArtifactManifest {
+            model: "A".into(),
+            total_params: 669_706,
+            layers: vec![
+                LayerManifest {
+                    label: "FC0".into(),
+                    layer_index: 1,
+                    n: 401_920,
+                    k: 80_384,
+                    rho: 1.25e-3,
+                    codec: Codec::Rle,
+                    compressed_bytes: 70_000,
+                },
+                LayerManifest {
+                    label: "FC1".into(),
+                    layer_index: 3,
+                    n: 262_656,
+                    k: 52_531,
+                    rho: 2.5e-3,
+                    codec: Codec::Huffman,
+                    compressed_bytes: 46_000,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let m = sample();
+        let back = ArtifactManifest::decode(&m.encode().unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn totals_and_render() {
+        let m = sample();
+        assert_eq!(m.total_compressed(), 116_000);
+        assert_eq!(m.total_raw(), 4 * (401_920 + 262_656));
+        assert!(m.bits_per_weight() < 2.0);
+        let r = m.render();
+        assert!(r.contains("FC0") && r.contains("rle") && r.contains("bits/weight"));
+    }
+
+    #[test]
+    fn truncation_errors() {
+        let bytes = sample().encode().unwrap();
+        for cut in [0, 5, bytes.len() / 3, bytes.len() - 1] {
+            assert!(ArtifactManifest::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+}

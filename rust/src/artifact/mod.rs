@@ -1,0 +1,142 @@
+//! `.pvqm` — the compressed on-disk PVQ model container.
+//!
+//! This is the deployment unit the paper's story implies but never
+//! specifies: a PVQ-quantized network serialized with its per-layer
+//! integer weights entropy-coded (best-of over the §VI codecs), its
+//! gains/biases, and its full [`crate::nn::ModelSpec`] topology, so a
+//! model can be shipped and served without the float weights or the
+//! quantizer. Follow-up work treats exactly this compressed weight
+//! stream as the model format (PVQ-for-LLMs ships codebook indices;
+//! Liguori's bit-level-sparsity paper ships the coded stream).
+//!
+//! ## Container layout (little-endian)
+//!
+//! ```text
+//! header   magic "PVQM" · u16 version (=1) · u16 flags (=0)
+//! sections, each:
+//!     tag   [u8;4]
+//!     len   u32            payload byte length
+//!     payload
+//!     crc   u32            CRC-32/IEEE over the payload
+//! ```
+//!
+//! Section order: `SPEC` (model topology, [`spec_codec`]), one `LAYR`
+//! per weighted layer (streamable: each decodes independently), `MANI`
+//! (per-layer codec/size stats, [`manifest`]), `ENDM` (empty
+//! end-of-model marker — its absence means truncation).
+//!
+//! `LAYR` payload:
+//!
+//! ```text
+//! u32 layer_index      index into spec.layers
+//! u32 wlen             weight component count
+//! u32 blen             bias count
+//! i32 × blen           executable integer biases B = round(b̂/s)
+//! PVQL container       compress_layer(w ++ b_pyramid) — self-describing
+//!                      (codec id, N, K, ρ, entropy-coded components)
+//! ```
+//!
+//! * [`writer`] — streaming [`writer::ArtifactWriter`]: header + SPEC up
+//!   front, then one LAYR at a time (the whole model is never held in
+//!   compressed form), MANI + ENDM on `finish`.
+//! * [`reader`] — streaming [`reader::ArtifactReader`]: layers decode
+//!   one by one via `next_layer`; plus `read_model` (assemble a
+//!   [`crate::nn::QuantModel`]) and `inspect` (manifest only).
+//! * [`manifest`] — [`manifest::ArtifactManifest`]: codec choice, K/N
+//!   parameters, and compression stats per layer.
+//! * [`spec_codec`] — binary encode/decode of [`crate::nn::ModelSpec`].
+//! * [`crc`] — dependency-free CRC-32/IEEE.
+
+pub mod crc;
+pub mod manifest;
+pub mod reader;
+pub mod spec_codec;
+pub mod writer;
+
+pub use manifest::{ArtifactManifest, LayerManifest};
+pub use reader::{inspect, read_model, ArtifactReader};
+pub use writer::{write_model, ArtifactWriter};
+
+/// Container magic.
+pub const MAGIC: &[u8; 4] = b"PVQM";
+/// Current container version.
+pub const VERSION: u16 = 1;
+
+/// Section tags.
+pub const TAG_SPEC: &[u8; 4] = b"SPEC";
+/// Per-weighted-layer compressed chunk.
+pub const TAG_LAYER: &[u8; 4] = b"LAYR";
+/// Manifest (codec + compression stats per layer).
+pub const TAG_MANIFEST: &[u8; 4] = b"MANI";
+/// End-of-model marker (empty payload).
+pub const TAG_END: &[u8; 4] = b"ENDM";
+
+/// Upper bound on a single section payload — rejects implausible lengths
+/// from corrupted headers before any allocation happens.
+pub const MAX_SECTION_LEN: usize = 256 << 20;
+
+/// Bounds-checked little-endian field reader shared by the section
+/// decoders (spec, manifest, layer payloads).
+pub(crate) struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            anyhow::bail!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn i32(&mut self) -> anyhow::Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Remaining unread bytes.
+    pub(crate) fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    /// True when every byte has been consumed.
+    pub(crate) fn is_empty(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}

@@ -1,0 +1,292 @@
+//! Streaming `.pvqm` reader.
+//!
+//! [`ArtifactReader`] pulls one section at a time off any byte source:
+//! the model decodes layer-by-layer through [`ArtifactReader::next_layer`]
+//! without ever materializing the whole compressed stream, every section
+//! payload is CRC-checked before parsing, and corruption/truncation
+//! surfaces as `Err` — never a panic.
+
+use super::crc::crc32;
+use super::manifest::ArtifactManifest;
+use super::spec_codec::decode_spec;
+use super::{ByteReader, MAGIC, MAX_SECTION_LEN, TAG_END, TAG_LAYER, TAG_MANIFEST, TAG_SPEC, VERSION};
+use crate::compress::decompress_layer;
+use crate::nn::model::ModelSpec;
+use crate::nn::pvq_engine::{QuantLayer, QuantModel};
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Incremental `.pvqm` reader over any byte source.
+pub struct ArtifactReader<R: Read> {
+    inp: R,
+    /// Model topology, decoded from the SPEC section up front.
+    pub spec: ModelSpec,
+    manifest: Option<ArtifactManifest>,
+    done: bool,
+}
+
+impl ArtifactReader<std::io::BufReader<std::fs::File>> {
+    /// Open a `.pvqm` file and decode its header + SPEC section.
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Self::new(std::io::BufReader::new(f))
+            .with_context(|| format!("read {}", path.display()))
+    }
+}
+
+impl<R: Read> ArtifactReader<R> {
+    /// Decode the header + SPEC section from a byte source.
+    pub fn new(mut inp: R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        inp.read_exact(&mut magic).context("read magic")?;
+        if &magic != MAGIC {
+            bail!("bad magic {magic:?} (not a .pvqm artifact)");
+        }
+        let mut u16buf = [0u8; 2];
+        inp.read_exact(&mut u16buf)?;
+        let version = u16::from_le_bytes(u16buf);
+        if version != VERSION {
+            bail!("unsupported .pvqm version {version} (reader supports {VERSION})");
+        }
+        inp.read_exact(&mut u16buf)?; // flags, reserved
+
+        let (tag, payload) = read_section_raw(&mut inp)?;
+        if &tag != TAG_SPEC {
+            bail!("first section is {:?}, expected SPEC", tag_str(&tag));
+        }
+        let spec = decode_spec(&payload).context("decode SPEC section")?;
+        // an inconsistent topology would pass per-layer geometry checks
+        // yet panic the engines at serve time — reject it at load
+        spec.validate_shapes().context("artifact spec has inconsistent topology")?;
+        Ok(ArtifactReader { inp, spec, manifest: None, done: false })
+    }
+
+    /// The MANI section, once the stream has been consumed past it
+    /// (always available after `next_layer` returns `None`).
+    pub fn manifest(&self) -> Option<&ArtifactManifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Decode the next layer chunk. Returns `Ok(None)` once the ENDM
+    /// marker is reached; a stream that ends without ENDM is truncated
+    /// and errors instead.
+    pub fn next_layer(&mut self) -> Result<Option<(usize, QuantLayer)>> {
+        while !self.done {
+            let (tag, payload) = read_section_raw(&mut self.inp)?;
+            match &tag {
+                t if t == TAG_LAYER => {
+                    return Ok(Some(decode_layer(&self.spec, &payload)?));
+                }
+                t if t == TAG_MANIFEST => {
+                    self.manifest =
+                        Some(ArtifactManifest::decode(&payload).context("decode MANI section")?);
+                }
+                t if t == TAG_END => {
+                    self.done = true;
+                }
+                // unknown sections are skippable by design (forward compat);
+                // their payload was still CRC-verified above
+                _ => {}
+            }
+        }
+        Ok(None)
+    }
+}
+
+fn tag_str(tag: &[u8; 4]) -> String {
+    String::from_utf8_lossy(tag).into_owned()
+}
+
+/// Read one `tag + len + payload + crc` section and verify the checksum.
+fn read_section_raw<R: Read>(inp: &mut R) -> Result<([u8; 4], Vec<u8>)> {
+    let mut tag = [0u8; 4];
+    inp.read_exact(&mut tag).context("truncated: section tag")?;
+    let mut u32buf = [0u8; 4];
+    inp.read_exact(&mut u32buf).context("truncated: section length")?;
+    let len = u32::from_le_bytes(u32buf) as usize;
+    if len > MAX_SECTION_LEN {
+        bail!("implausible section length {len} for {:?}", tag_str(&tag));
+    }
+    let mut payload = vec![0u8; len];
+    inp.read_exact(&mut payload)
+        .with_context(|| format!("truncated: {:?} payload ({len} bytes)", tag_str(&tag)))?;
+    inp.read_exact(&mut u32buf).context("truncated: section crc")?;
+    let want = u32::from_le_bytes(u32buf);
+    let got = crc32(&payload);
+    if got != want {
+        bail!(
+            "crc mismatch in {:?} section: stored {want:#010x}, computed {got:#010x}",
+            tag_str(&tag)
+        );
+    }
+    Ok((tag, payload))
+}
+
+/// Decode one LAYR payload against the spec geometry.
+fn decode_layer(spec: &ModelSpec, payload: &[u8]) -> Result<(usize, QuantLayer)> {
+    let mut r = ByteReader::new(payload);
+    let layer_index = r.u32()? as usize;
+    let wlen = r.u32()? as usize;
+    let blen = r.u32()? as usize;
+
+    let layer = spec
+        .layers
+        .get(layer_index)
+        .with_context(|| format!("layer index {layer_index} out of range"))?;
+    let (want_w, want_b) = match layer.param_split() {
+        Some(s) => s,
+        None => bail!("layer {layer_index} ({}) carries no weights", layer.label()),
+    };
+    if wlen != want_w || blen != want_b {
+        bail!(
+            "layer {layer_index}: stored geometry w={wlen} b={blen} vs spec w={want_w} b={want_b}"
+        );
+    }
+
+    let mut b = Vec::with_capacity(blen);
+    for _ in 0..blen {
+        b.push(r.i32()?);
+    }
+    let pv = decompress_layer(r.rest())
+        .with_context(|| format!("decode compressed components of layer {layer_index}"))?;
+    if pv.components.len() != wlen + blen {
+        bail!(
+            "layer {layer_index}: {} decoded components vs expected {}",
+            pv.components.len(),
+            wlen + blen
+        );
+    }
+    let (w, b_pyramid) = pv.components.split_at(wlen);
+    Ok((
+        layer_index,
+        QuantLayer {
+            w: w.to_vec(),
+            b,
+            b_pyramid: b_pyramid.to_vec(),
+            rho: pv.rho,
+            k: pv.k,
+        },
+    ))
+}
+
+/// Read a whole artifact back into a [`QuantModel`] (+ its manifest),
+/// checking that every weighted layer is present exactly once.
+pub fn read_model(path: &Path) -> Result<(QuantModel, ArtifactManifest)> {
+    let mut reader = ArtifactReader::open(path)?;
+    let mut layers: Vec<Option<QuantLayer>> = vec![None; reader.spec.layers.len()];
+    while let Some((li, q)) = reader.next_layer()? {
+        if layers[li].is_some() {
+            bail!("duplicate layer {li} in {}", path.display());
+        }
+        layers[li] = Some(q);
+    }
+    for &li in &reader.spec.weighted_layers() {
+        if layers[li].is_none() {
+            bail!("artifact {} is missing weighted layer {li}", path.display());
+        }
+    }
+    let manifest = reader
+        .manifest
+        .take()
+        .with_context(|| format!("artifact {} has no manifest", path.display()))?;
+    Ok((QuantModel { spec: reader.spec, layers }, manifest))
+}
+
+/// Read the spec + manifest in one pass (CRC-verifying every section on
+/// the way, but never entropy-decoding a layer).
+pub fn inspect(path: &Path) -> Result<(ModelSpec, ArtifactManifest)> {
+    let mut reader = ArtifactReader::open(path)?;
+    while !reader.done {
+        let (tag, payload) = read_section_raw(&mut reader.inp)?;
+        match &tag {
+            t if t == TAG_MANIFEST => {
+                reader.manifest =
+                    Some(ArtifactManifest::decode(&payload).context("decode MANI section")?);
+            }
+            t if t == TAG_END => reader.done = true,
+            _ => {} // LAYR payloads are skipped undecoded
+        }
+    }
+    let manifest = reader
+        .manifest
+        .with_context(|| format!("artifact {} has no manifest", path.display()))?;
+    Ok((reader.spec, manifest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::writer::ArtifactWriter;
+    use crate::nn::layers::Model;
+    use crate::nn::model::{Activation, ModelSpec};
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+
+    fn packed_bytes(seed: u64) -> (QuantModel, Vec<u8>) {
+        let spec = ModelSpec {
+            name: "rtest".into(),
+            input_shape: vec![10],
+            layers: vec![
+                crate::nn::model::LayerSpec::Dense {
+                    input: 10,
+                    output: 8,
+                    act: Activation::Relu,
+                },
+                crate::nn::model::LayerSpec::Dense {
+                    input: 8,
+                    output: 4,
+                    act: Activation::None,
+                },
+            ],
+        };
+        let m = Model::synth(&spec, seed);
+        let qm = quantize(&m, &[2.0, 1.5], RhoMode::Norm).unwrap().quant_model;
+        let mut buf = Vec::new();
+        let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
+        for (li, l) in qm.layers.iter().enumerate() {
+            if let Some(q) = l {
+                w.write_layer(li, q).unwrap();
+            }
+        }
+        w.finish().unwrap();
+        (qm, buf)
+    }
+
+    #[test]
+    fn stream_roundtrip_bit_identical() {
+        let (qm, buf) = packed_bytes(3);
+        let mut r = ArtifactReader::new(buf.as_slice()).unwrap();
+        assert_eq!(r.spec, qm.spec);
+        let mut got: Vec<(usize, QuantLayer)> = Vec::new();
+        while let Some(pair) = r.next_layer().unwrap() {
+            got.push(pair);
+        }
+        assert_eq!(got.len(), 2);
+        for (li, q) in got {
+            assert_eq!(Some(&q), qm.layers[li].as_ref());
+        }
+        let m = r.manifest().unwrap();
+        assert_eq!(m.model, "rtest");
+        assert_eq!(m.layers.len(), 2);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let (_, mut buf) = packed_bytes(4);
+        buf[0] = b'X';
+        assert!(ArtifactReader::new(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let (_, mut buf) = packed_bytes(5);
+        buf[4] = 99;
+        assert!(ArtifactReader::new(buf.as_slice()).is_err());
+    }
+
+    // the exhaustive byte-flip corruption sweep lives in
+    // tests/artifact_roundtrip.rs (prop_corrupted_crc_errors_never_panics),
+    // which exercises the same predicate through the real file path
+}

@@ -1,0 +1,226 @@
+//! Binary encode/decode of [`ModelSpec`] for the `.pvqm` SPEC section.
+//!
+//! Layout (little-endian):
+//! ```text
+//! u16 name_len + utf-8 name
+//! u8  ndim + u32 × ndim          input shape
+//! u32 n_layers
+//! per layer: u8 tag, then
+//!   0 Dense    u32 input, u32 output, u8 act
+//!   1 Conv2d   u32 kh, u32 kw, u32 cin, u32 cout, u8 act
+//!   2 MaxPool2x2
+//!   3 Flatten
+//!   4 Dropout  f32 p
+//!   5 Scale    f32 c
+//! ```
+//! Float fields are stored as raw f32 bits, so decode(encode(spec)) is
+//! exactly `==` the input (ModelSpec derives PartialEq).
+
+use super::ByteReader;
+use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+use anyhow::{bail, Context, Result};
+
+const TAG_DENSE: u8 = 0;
+const TAG_CONV: u8 = 1;
+const TAG_MAXPOOL: u8 = 2;
+const TAG_FLATTEN: u8 = 3;
+const TAG_DROPOUT: u8 = 4;
+const TAG_SCALE: u8 = 5;
+
+/// Bound on any decoded dimension (input shape, dense in/out, conv
+/// channels). Together with [`MAX_KERNEL`] it guarantees that every
+/// size product downstream (`param_count`, `validate_shapes`,
+/// `total_params`) fits in usize with headroom — untrusted specs must
+/// never be able to overflow-wrap a geometry check.
+const MAX_DIM: usize = 65_535;
+/// Bound on conv kernel extent (kh/kw).
+const MAX_KERNEL: usize = 255;
+
+fn dim(v: u32, what: &str) -> Result<usize> {
+    let v = v as usize;
+    if v > MAX_DIM {
+        bail!("implausible {what} {v} (max {MAX_DIM})");
+    }
+    Ok(v)
+}
+
+fn kdim(v: u32, what: &str) -> Result<usize> {
+    let v = v as usize;
+    if v > MAX_KERNEL {
+        bail!("implausible {what} {v} (max {MAX_KERNEL})");
+    }
+    Ok(v)
+}
+
+/// Serialize a spec to the SPEC payload.
+pub fn encode_spec(spec: &ModelSpec) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let name = spec.name.as_bytes();
+    if name.len() > u16::MAX as usize {
+        bail!("model name too long ({} bytes)", name.len());
+    }
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name);
+    if spec.input_shape.len() > u8::MAX as usize {
+        bail!("implausible input rank {}", spec.input_shape.len());
+    }
+    out.push(spec.input_shape.len() as u8);
+    for &d in &spec.input_shape {
+        if d > MAX_DIM {
+            bail!("input dimension {d} exceeds the container limit {MAX_DIM}");
+        }
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    out.extend_from_slice(&(spec.layers.len() as u32).to_le_bytes());
+    for l in &spec.layers {
+        match l {
+            LayerSpec::Dense { input, output, act } => {
+                if *input > MAX_DIM || *output > MAX_DIM {
+                    bail!("dense {input}→{output} exceeds the container limit {MAX_DIM}");
+                }
+                out.push(TAG_DENSE);
+                out.extend_from_slice(&(*input as u32).to_le_bytes());
+                out.extend_from_slice(&(*output as u32).to_le_bytes());
+                out.push(act.to_id());
+            }
+            LayerSpec::Conv2d { kh, kw, cin, cout, act } => {
+                if *kh > MAX_KERNEL || *kw > MAX_KERNEL {
+                    bail!("kernel {kh}x{kw} exceeds the container limit {MAX_KERNEL}");
+                }
+                if *cin > MAX_DIM || *cout > MAX_DIM {
+                    bail!("conv {cin}→{cout} exceeds the container limit {MAX_DIM}");
+                }
+                out.push(TAG_CONV);
+                for d in [*kh, *kw, *cin, *cout] {
+                    out.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                out.push(act.to_id());
+            }
+            LayerSpec::MaxPool2x2 => out.push(TAG_MAXPOOL),
+            LayerSpec::Flatten => out.push(TAG_FLATTEN),
+            LayerSpec::Dropout(p) => {
+                out.push(TAG_DROPOUT);
+                out.extend_from_slice(&p.to_le_bytes());
+            }
+            LayerSpec::Scale(c) => {
+                out.push(TAG_SCALE);
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn decode_act(id: u8) -> Result<Activation> {
+    Activation::from_id(id).with_context(|| format!("unknown activation id {id}"))
+}
+
+/// Deserialize a SPEC payload.
+pub fn decode_spec(payload: &[u8]) -> Result<ModelSpec> {
+    let mut r = ByteReader::new(payload);
+    let name_len = r.u16()? as usize;
+    let name = String::from_utf8(r.take(name_len)?.to_vec()).context("model name not utf-8")?;
+    let ndim = r.u8()? as usize;
+    let mut input_shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        input_shape.push(dim(r.u32()?, "input dimension")?);
+    }
+    let n_layers = r.u32()? as usize;
+    if n_layers > 4096 {
+        bail!("implausible layer count {n_layers}");
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let tag = r.u8()?;
+        layers.push(match tag {
+            TAG_DENSE => {
+                let input = dim(r.u32()?, "dense input")?;
+                let output = dim(r.u32()?, "dense output")?;
+                let act = decode_act(r.u8()?)?;
+                LayerSpec::Dense { input, output, act }
+            }
+            TAG_CONV => {
+                let kh = kdim(r.u32()?, "kernel height")?;
+                let kw = kdim(r.u32()?, "kernel width")?;
+                let cin = dim(r.u32()?, "conv input channels")?;
+                let cout = dim(r.u32()?, "conv output channels")?;
+                let act = decode_act(r.u8()?)?;
+                LayerSpec::Conv2d { kh, kw, cin, cout, act }
+            }
+            TAG_MAXPOOL => LayerSpec::MaxPool2x2,
+            TAG_FLATTEN => LayerSpec::Flatten,
+            TAG_DROPOUT => LayerSpec::Dropout(r.f32()?),
+            TAG_SCALE => LayerSpec::Scale(r.f32()?),
+            other => bail!("unknown layer tag {other}"),
+        });
+    }
+    if !r.is_empty() {
+        bail!("trailing bytes after spec");
+    }
+    Ok(ModelSpec { name, input_shape, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_paper_nets() {
+        for n in ["a", "b", "c", "d"] {
+            let spec = ModelSpec::by_name(n).unwrap();
+            let bytes = encode_spec(&spec).unwrap();
+            let back = decode_spec(&bytes).unwrap();
+            assert_eq!(back, spec, "net {n}");
+        }
+    }
+
+    #[test]
+    fn truncation_errors() {
+        let spec = ModelSpec::by_name("b").unwrap();
+        let bytes = encode_spec(&spec).unwrap();
+        for cut in [0, 1, 3, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_spec(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let spec = ModelSpec::by_name("a").unwrap();
+        let mut bytes = encode_spec(&spec).unwrap();
+        bytes.push(0);
+        assert!(decode_spec(&bytes).is_err());
+    }
+
+    #[test]
+    fn implausible_dims_rejected_both_ways() {
+        let huge = ModelSpec {
+            name: "huge".into(),
+            input_shape: vec![1 << 20],
+            layers: vec![LayerSpec::Flatten],
+        };
+        assert!(encode_spec(&huge).is_err());
+        // hand-craft a payload with an oversized dense dimension
+        let ok = ModelSpec {
+            name: "x".into(),
+            input_shape: vec![8],
+            layers: vec![LayerSpec::Dense { input: 8, output: 4, act: Activation::None }],
+        };
+        let mut bytes = encode_spec(&ok).unwrap();
+        // dense input u32 sits right after the layer tag; overwrite with u32::MAX
+        let pos = bytes.len() - 9; // tag(1) input(4) output(4) act(1) → input at len-9
+        bytes[pos..pos + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_spec(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_tags_rejected() {
+        let spec = ModelSpec {
+            name: "t".into(),
+            input_shape: vec![4],
+            layers: vec![LayerSpec::Flatten],
+        };
+        let mut bytes = encode_spec(&spec).unwrap();
+        *bytes.last_mut().unwrap() = 200; // layer tag → unknown
+        assert!(decode_spec(&bytes).is_err());
+    }
+}

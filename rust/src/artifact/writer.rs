@@ -1,0 +1,226 @@
+//! Streaming `.pvqm` writer.
+//!
+//! Sections are emitted as they are produced — header + SPEC on
+//! construction, one LAYR per [`ArtifactWriter::write_layer`] call (each
+//! layer is entropy-coded with the best-of §VI codec and released
+//! immediately), MANI + ENDM on [`ArtifactWriter::finish`]. Peak memory
+//! is one compressed layer, never the whole model blob.
+
+use super::crc::crc32;
+use super::manifest::{ArtifactManifest, LayerManifest};
+use super::spec_codec::encode_spec;
+use super::{MAGIC, TAG_END, TAG_LAYER, TAG_MANIFEST, TAG_SPEC, VERSION};
+use crate::compress::compress_layer_best;
+use crate::nn::model::ModelSpec;
+use crate::nn::pvq_engine::{QuantLayer, QuantModel};
+use crate::pvq::PvqVector;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Emit one tagged + CRC'd section.
+fn write_section<W: Write>(out: &mut W, tag: &[u8; 4], payload: &[u8]) -> Result<()> {
+    out.write_all(tag)?;
+    out.write_all(&(payload.len() as u32).to_le_bytes())?;
+    out.write_all(payload)?;
+    out.write_all(&crc32(payload).to_le_bytes())?;
+    Ok(())
+}
+
+/// Incremental `.pvqm` writer over any byte sink.
+pub struct ArtifactWriter<W: Write> {
+    out: W,
+    spec: ModelSpec,
+    entries: Vec<LayerManifest>,
+    /// Weighted-layer indices already written (ordering + duplicate guard).
+    written: Vec<usize>,
+}
+
+impl<W: Write> ArtifactWriter<W> {
+    /// Write the header and SPEC section; the writer is then ready to
+    /// stream layers.
+    pub fn new(mut out: W, spec: &ModelSpec) -> Result<Self> {
+        // the reader rejects inconsistent topologies at open; packing one
+        // would defer that failure to deploy time — refuse it here instead
+        spec.validate_shapes().context("refusing to pack a spec with inconsistent topology")?;
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&0u16.to_le_bytes())?; // flags
+        write_section(&mut out, TAG_SPEC, &encode_spec(spec)?)?;
+        Ok(ArtifactWriter { out, spec: spec.clone(), entries: Vec::new(), written: Vec::new() })
+    }
+
+    /// Compress and append one quantized layer (`layer_index` into
+    /// `spec.layers`). Layers may arrive in any order; each is validated
+    /// against the spec geometry before writing.
+    pub fn write_layer(&mut self, layer_index: usize, q: &QuantLayer) -> Result<()> {
+        let layer = self
+            .spec
+            .layers
+            .get(layer_index)
+            .with_context(|| format!("layer index {layer_index} out of range"))?;
+        let (want_w, want_b) = match layer.param_split() {
+            Some(s) => s,
+            None => bail!("layer {layer_index} ({}) carries no weights", layer.label()),
+        };
+        // check each buffer exactly (not just the sum) — the reader
+        // enforces the same split, so a mismatched pack must fail here,
+        // not at deploy time
+        if q.w.len() != want_w || q.b_pyramid.len() != want_b || q.b.len() != want_b {
+            bail!(
+                "layer {layer_index}: got w={} b̂={} B={} vs spec w={want_w} b={want_b}",
+                q.w.len(),
+                q.b_pyramid.len(),
+                q.b.len()
+            );
+        }
+        let expected = want_w + want_b;
+        // counts are stored as u32 in both the LAYR payload and the PVQL
+        // blob header — refuse to wrap rather than pack an unreadable file
+        if expected > u32::MAX as usize {
+            bail!("layer {layer_index}: {expected} components exceed the u32 container limit");
+        }
+        if self.written.contains(&layer_index) {
+            bail!("layer {layer_index} written twice");
+        }
+
+        // entropy-code w ++ b̂ through the shared layer codec, best-of
+        let mut comps = q.w.clone();
+        comps.extend_from_slice(&q.b_pyramid);
+        let pv = PvqVector { k: q.k, components: comps, rho: q.rho };
+        let (codec, blob) = compress_layer_best(&pv);
+
+        let mut payload =
+            Vec::with_capacity(12 + 4 * q.b.len() + blob.len());
+        payload.extend_from_slice(&(layer_index as u32).to_le_bytes());
+        payload.extend_from_slice(&(q.w.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(q.b.len() as u32).to_le_bytes());
+        for &b in &q.b {
+            payload.extend_from_slice(&b.to_le_bytes());
+        }
+        payload.extend_from_slice(&blob);
+        write_section(&mut self.out, TAG_LAYER, &payload)?;
+
+        let wi = self
+            .spec
+            .weighted_layers()
+            .iter()
+            .position(|&i| i == layer_index)
+            .expect("has_params checked above");
+        self.entries.push(LayerManifest {
+            label: format!("{}{}", layer.label(), wi),
+            layer_index,
+            n: expected,
+            k: q.k,
+            rho: q.rho,
+            codec,
+            compressed_bytes: blob.len() as u64,
+        });
+        self.written.push(layer_index);
+        Ok(())
+    }
+
+    /// Write the MANI + ENDM sections and flush. Fails unless every
+    /// weighted layer of the spec has been written.
+    pub fn finish(mut self) -> Result<ArtifactManifest> {
+        let widx = self.spec.weighted_layers();
+        for &li in &widx {
+            if !self.written.contains(&li) {
+                bail!("cannot finish: weighted layer {li} never written");
+            }
+        }
+        let manifest = ArtifactManifest {
+            model: self.spec.name.clone(),
+            total_params: self.spec.total_params(),
+            layers: self.entries.clone(),
+        };
+        write_section(&mut self.out, TAG_MANIFEST, &manifest.encode()?)?;
+        write_section(&mut self.out, TAG_END, &[])?;
+        self.out.flush()?;
+        Ok(manifest)
+    }
+}
+
+/// Pack a whole [`QuantModel`] into a `.pvqm` file — the one-call bridge
+/// from `quant::apply` output to a deployable artifact.
+pub fn write_model(path: &Path, model: &QuantModel) -> Result<ArtifactManifest> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = ArtifactWriter::new(std::io::BufWriter::new(f), &model.spec)?;
+    for (li, layer) in model.layers.iter().enumerate() {
+        if let Some(q) = layer {
+            w.write_layer(li, q)
+                .with_context(|| format!("pack layer {li} of {}", model.spec.name))?;
+        }
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::Model;
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+
+    fn small_quant() -> QuantModel {
+        let spec = crate::nn::model::ModelSpec {
+            name: "wtest".into(),
+            input_shape: vec![12],
+            layers: vec![
+                crate::nn::model::LayerSpec::Dense {
+                    input: 12,
+                    output: 6,
+                    act: crate::nn::model::Activation::Relu,
+                },
+                crate::nn::model::LayerSpec::Dense {
+                    input: 6,
+                    output: 3,
+                    act: crate::nn::model::Activation::None,
+                },
+            ],
+        };
+        let m = Model::synth(&spec, 1);
+        quantize(&m, &[2.0, 2.0], RhoMode::Norm).unwrap().quant_model
+    }
+
+    #[test]
+    fn manifest_matches_layers() {
+        let qm = small_quant();
+        let mut buf = Vec::new();
+        let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
+        for (li, l) in qm.layers.iter().enumerate() {
+            if let Some(q) = l {
+                w.write_layer(li, q).unwrap();
+            }
+        }
+        let m = w.finish().unwrap();
+        assert_eq!(m.model, "wtest");
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].label, "FC0");
+        assert_eq!(m.layers[0].n, 12 * 6 + 6);
+        assert!(m.total_compressed() > 0);
+        assert!(buf.starts_with(MAGIC));
+    }
+
+    #[test]
+    fn finish_requires_all_layers() {
+        let qm = small_quant();
+        let mut buf = Vec::new();
+        let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
+        w.write_layer(0, qm.layers[0].as_ref().unwrap()).unwrap();
+        assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_geometry_and_duplicates() {
+        let qm = small_quant();
+        let mut buf = Vec::new();
+        let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
+        // geometry from layer 1 does not match slot 0
+        assert!(w.write_layer(0, qm.layers[1].as_ref().unwrap()).is_err());
+        assert!(w.write_layer(7, qm.layers[0].as_ref().unwrap()).is_err());
+        w.write_layer(0, qm.layers[0].as_ref().unwrap()).unwrap();
+        assert!(w.write_layer(0, qm.layers[0].as_ref().unwrap()).is_err());
+    }
+}

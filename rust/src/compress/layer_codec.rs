@@ -34,7 +34,12 @@ pub enum Codec {
 }
 
 impl Codec {
-    fn id(self) -> u8 {
+    /// Every codec, in id order — the candidate set for
+    /// [`compress_layer_best`].
+    pub const ALL: [Codec; 4] = [Codec::ExpGolomb, Codec::Rle, Codec::Huffman, Codec::Raw];
+
+    /// Stable on-disk id (also used by the `.pvqm` artifact manifest).
+    pub fn id(self) -> u8 {
         match self {
             Codec::ExpGolomb => 0,
             Codec::Rle => 1,
@@ -42,7 +47,9 @@ impl Codec {
             Codec::Raw => 3,
         }
     }
-    fn from_id(id: u8) -> Result<Self> {
+
+    /// Inverse of [`Codec::id`].
+    pub fn from_id(id: u8) -> Result<Self> {
         Ok(match id {
             0 => Codec::ExpGolomb,
             1 => Codec::Rle,
@@ -50,6 +57,16 @@ impl Codec {
             3 => Codec::Raw,
             _ => bail!("unknown codec id {id}"),
         })
+    }
+
+    /// Human name for manifests and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::ExpGolomb => "exp-golomb",
+            Codec::Rle => "rle",
+            Codec::Huffman => "huffman",
+            Codec::Raw => "raw",
+        }
     }
 }
 
@@ -95,6 +112,21 @@ pub fn compress_layer(q: &PvqVector, codec: Codec) -> Vec<u8> {
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&payload);
     out
+}
+
+/// Serialize with every codec and keep the smallest container — the
+/// per-layer best-of selection the `.pvqm` artifact writer uses (§VI:
+/// which coder wins depends on the layer's N/K ratio).
+pub fn compress_layer_best(q: &PvqVector) -> (Codec, Vec<u8>) {
+    let mut best: Option<(Codec, Vec<u8>)> = None;
+    for codec in Codec::ALL {
+        let bytes = compress_layer(q, codec);
+        match &best {
+            Some((_, b)) if b.len() <= bytes.len() => {}
+            _ => best = Some((codec, bytes)),
+        }
+    }
+    best.expect("Codec::ALL is non-empty")
 }
 
 /// Deserialize a layer produced by [`compress_layer`].
@@ -224,6 +256,31 @@ mod tests {
             assert!(*bpw + 1e-9 >= entropy, "{name} {bpw} under entropy {entropy}");
             assert!(*bpw <= entropy + 1.2, "{name} {bpw} way over entropy {entropy}");
         }
+    }
+
+    #[test]
+    fn best_codec_is_minimal_and_roundtrips() {
+        for (seed, ratio) in [(10u64, 1usize), (11, 2), (12, 5)] {
+            let q = sample_layer(seed, 6000, ratio);
+            let (codec, bytes) = compress_layer_best(&q);
+            for other in Codec::ALL {
+                assert!(
+                    bytes.len() <= compress_layer(&q, other).len(),
+                    "{codec:?} not minimal vs {other:?} at N/K={ratio}"
+                );
+            }
+            let back = decompress_layer(&bytes).unwrap();
+            assert_eq!(back.components, q.components);
+        }
+    }
+
+    #[test]
+    fn codec_id_roundtrip() {
+        for codec in Codec::ALL {
+            assert_eq!(Codec::from_id(codec.id()).unwrap(), codec);
+            assert!(!codec.name().is_empty());
+        }
+        assert!(Codec::from_id(99).is_err());
     }
 
     #[test]

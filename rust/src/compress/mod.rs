@@ -18,5 +18,7 @@ pub mod rle;
 pub mod stats;
 
 pub use huffman::HuffmanCodec;
-pub use layer_codec::{codec_survey, compress_layer, decompress_layer, Codec};
+pub use layer_codec::{
+    codec_survey, compress_layer, compress_layer_best, decompress_layer, Codec,
+};
 pub use stats::{entropy_bits, Distribution};

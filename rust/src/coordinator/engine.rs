@@ -2,6 +2,7 @@
 //! reference engine, the integer PVQ engine, the bit-aware binary path,
 //! or an AOT-compiled XLA graph via PJRT.
 
+use crate::nn::binary::BinaryNet;
 use crate::nn::csr_engine::CompiledQuantModel;
 use crate::nn::layers::Model;
 use crate::nn::pvq_engine::forward_int;
@@ -20,6 +21,9 @@ pub enum Engine {
     /// CSR-compiled integer PVQ engine (the optimized hot path); the
     /// second field is the sample shape for ITensor construction.
     PvqCompiled(Arc<CompiledQuantModel>, Vec<usize>),
+    /// Bit-packed binary PVQ net (popcount path, §V/Fig. 2) for bsign
+    /// MLPs.
+    Binary(Arc<BinaryNet>),
     /// AOT-lowered XLA graph on PJRT (fixed batch; padded as needed).
     Hlo(Arc<HloModel>),
 }
@@ -31,6 +35,7 @@ impl Engine {
             Engine::Float(_) => "float",
             Engine::PvqInt(_) => "pvq-int",
             Engine::PvqCompiled(..) => "pvq-csr",
+            Engine::Binary(_) => "binary",
             Engine::Hlo(_) => "hlo-pjrt",
         }
     }
@@ -41,6 +46,7 @@ impl Engine {
             Engine::Float(m) => m.spec.input_shape.iter().product(),
             Engine::PvqInt(m) => m.spec.input_shape.iter().product(),
             Engine::PvqCompiled(_, shape) => shape.iter().product(),
+            Engine::Binary(m) => m.input_len,
             Engine::Hlo(m) => m.input_len,
         }
     }
@@ -85,6 +91,7 @@ impl Engine {
                 .iter()
                 .map(|s| m.classify(&ITensor::from_u8(shape, s)))
                 .collect()),
+            Engine::Binary(m) => samples.iter().map(|s| m.classify_u8(s)).collect(),
             Engine::Hlo(m) => {
                 // pad up to the lowered batch size, run in waves
                 let mut out = Vec::with_capacity(samples.len());

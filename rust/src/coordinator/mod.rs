@@ -1,13 +1,15 @@
 //! L3 coordinator: engines, dynamic batching server, multi-model router,
-//! metrics. Python never runs on this path — engines are pure rust or
-//! AOT-compiled XLA executables.
+//! `.pvqm` artifact registry, metrics. Python never runs on this path —
+//! engines are pure rust or AOT-compiled XLA executables.
 
 pub mod engine;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod server;
 
 pub use engine::Engine;
 pub use metrics::Metrics;
+pub use registry::{EngineKind, ModelInfo, ModelRegistry};
 pub use router::Router;
 pub use server::{Response, Server, ServerConfig};

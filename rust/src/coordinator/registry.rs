@@ -1,0 +1,289 @@
+//! Multi-model registry: load `.pvqm` artifacts at startup, build the
+//! right engine per model, and serve them side by side through the
+//! batching [`Server`] — the front door that turns the single-engine
+//! coordinator into a model-zoo server (`pvqnet serve --models
+//! a.pvqm,b.pvqm`).
+//!
+//! Engine selection per artifact:
+//! * bsign MLP spec → [`Engine::Binary`] (bit-packed popcount path)
+//! * anything else  → [`Engine::PvqCompiled`] (CSR hot path)
+//! * [`EngineKind::Reference`] forces the un-compiled integer engine
+//!   (useful for A/B-ing the optimized paths).
+//!
+//! Unlike [`super::Router`], which wraps a fixed engine list built
+//! in-process, the registry owns the artifact → engine pipeline and the
+//! per-model metadata (manifest stats, engine kind, input geometry).
+
+use super::engine::Engine;
+use super::server::{Response, Server, ServerConfig};
+use crate::artifact::{read_model, ArtifactManifest};
+use crate::nn::binary::BinaryNet;
+use crate::nn::csr_engine::CompiledQuantModel;
+use crate::nn::QuantModel;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Which engine the registry should build for a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Binary popcount path for bsign MLPs, CSR otherwise.
+    Auto,
+    /// Reference integer engine (`forward_int`).
+    Reference,
+    /// CSR-compiled integer engine.
+    Csr,
+    /// Bit-packed binary engine (errors if the spec is not a bsign MLP).
+    Binary,
+}
+
+/// Metadata for one registered model.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Registry routing name.
+    pub name: String,
+    /// Engine name (`pvq-csr`, `binary`, `pvq-int`).
+    pub engine: String,
+    /// Per-sample feature count.
+    pub input_len: usize,
+    /// Parameter count of the spec.
+    pub total_params: usize,
+    /// On-disk compressed weight bytes (0 for in-memory registrations).
+    pub compressed_bytes: u64,
+}
+
+struct ModelEntry {
+    server: Server,
+    info: ModelInfo,
+}
+
+/// Named collection of running model servers.
+pub struct ModelRegistry {
+    entries: HashMap<String, ModelEntry>,
+    default_model: Option<String>,
+    cfg: ServerConfig,
+}
+
+/// Build the engine for a quantized model per `kind`.
+fn build_engine(model: QuantModel, kind: EngineKind) -> Result<Engine> {
+    match kind {
+        EngineKind::Reference => Ok(Engine::PvqInt(Arc::new(model))),
+        EngineKind::Binary => Ok(Engine::Binary(Arc::new(BinaryNet::compile(&model)?))),
+        EngineKind::Csr => {
+            let shape = model.spec.input_shape.clone();
+            Ok(Engine::PvqCompiled(Arc::new(CompiledQuantModel::compile(&model)?), shape))
+        }
+        EngineKind::Auto => match BinaryNet::compile(&model) {
+            Ok(net) => Ok(Engine::Binary(Arc::new(net))),
+            Err(_) => build_engine(model, EngineKind::Csr),
+        },
+    }
+}
+
+impl ModelRegistry {
+    /// Empty registry; models are added with the `register_*` calls.
+    pub fn new(cfg: ServerConfig) -> Self {
+        ModelRegistry { entries: HashMap::new(), default_model: None, cfg }
+    }
+
+    /// Load several artifacts (routing name = file stem); the first
+    /// becomes the default route.
+    pub fn load(paths: &[impl AsRef<Path>], cfg: ServerConfig) -> Result<Self> {
+        let mut reg = ModelRegistry::new(cfg);
+        for p in paths {
+            reg.register_artifact(p.as_ref(), EngineKind::Auto)?;
+        }
+        Ok(reg)
+    }
+
+    /// Load one `.pvqm` artifact and start serving it. The routing name
+    /// is the file stem (`models/net_a.pvqm` → `net_a`). Returns the name.
+    pub fn register_artifact(&mut self, path: &Path, kind: EngineKind) -> Result<String> {
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .with_context(|| format!("cannot derive a model name from {}", path.display()))?
+            .to_string();
+        let (model, manifest) = read_model(path)?;
+        self.register_quant(&name, model, kind, Some(&manifest))
+            .with_context(|| format!("register {}", path.display()))?;
+        Ok(name)
+    }
+
+    /// Register an in-memory quantized model under `name`.
+    pub fn register_quant(
+        &mut self,
+        name: &str,
+        model: QuantModel,
+        kind: EngineKind,
+        manifest: Option<&ArtifactManifest>,
+    ) -> Result<()> {
+        if self.entries.contains_key(name) {
+            bail!("model '{name}' already registered");
+        }
+        let total_params = model.spec.total_params();
+        let engine = build_engine(model, kind)?;
+        let info = ModelInfo {
+            name: name.to_string(),
+            engine: engine.name().to_string(),
+            input_len: engine.input_len(),
+            total_params,
+            compressed_bytes: manifest.map(|m| m.total_compressed()).unwrap_or(0),
+        };
+        let server = Server::start(engine, self.cfg.clone());
+        self.entries.insert(name.to_string(), ModelEntry { server, info });
+        if self.default_model.is_none() {
+            self.default_model = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Current default route, if any.
+    pub fn default_model(&self) -> Option<&str> {
+        self.default_model.as_deref()
+    }
+
+    /// Change the default route.
+    pub fn set_default(&mut self, name: &str) -> Result<()> {
+        if !self.entries.contains_key(name) {
+            bail!("unknown model '{name}'");
+        }
+        self.default_model = Some(name.to_string());
+        Ok(())
+    }
+
+    /// Classify on a named model (None → default) through its batching
+    /// server. Rejects wrong-sized inputs up front — a bad request must
+    /// never reach (and wedge) a worker thread.
+    pub fn classify(&self, model: Option<&str>, pixels: Vec<u8>) -> Result<Response> {
+        let name = match model.or(self.default_model.as_deref()) {
+            Some(n) => n,
+            None => bail!("registry is empty"),
+        };
+        match self.entries.get(name) {
+            Some(e) => {
+                if pixels.len() != e.info.input_len {
+                    bail!(
+                        "model '{name}' expects {} pixels, got {}",
+                        e.info.input_len,
+                        pixels.len()
+                    );
+                }
+                e.server.classify(pixels)
+            }
+            None => bail!("unknown model '{name}'"),
+        }
+    }
+
+    /// Registered models, sorted by name.
+    pub fn models(&self) -> Vec<&ModelInfo> {
+        let mut v: Vec<&ModelInfo> = self.entries.values().map(|e| &e.info).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Per-model metrics summary.
+    pub fn summary(&self) -> String {
+        let mut names: Vec<&String> = self.entries.keys().collect();
+        names.sort();
+        let mut out = String::new();
+        for name in names {
+            let e = &self.entries[name];
+            out.push_str(&format!(
+                "[{name}] engine {} · {}\n",
+                e.info.engine,
+                e.server.metrics().summary()
+            ));
+        }
+        out
+    }
+
+    /// Stop every model server.
+    pub fn shutdown(self) {
+        for (_, e) in self.entries {
+            e.server.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::Model;
+    use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+    use crate::testkit::Rng;
+
+    fn quant_mlp(act: Activation, seed: u64) -> QuantModel {
+        let spec = ModelSpec {
+            name: "reg".into(),
+            input_shape: vec![16],
+            layers: vec![
+                LayerSpec::Dense { input: 16, output: 8, act },
+                LayerSpec::Dense { input: 8, output: 4, act: Activation::None },
+            ],
+        };
+        let m = Model::synth(&spec, seed);
+        quantize(&m, &[1.5, 1.0], RhoMode::Norm).unwrap().quant_model
+    }
+
+    #[test]
+    fn auto_picks_binary_for_bsign_and_csr_for_relu() {
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        reg.register_quant("relu", quant_mlp(Activation::Relu, 1), EngineKind::Auto, None)
+            .unwrap();
+        reg.register_quant("bsign", quant_mlp(Activation::BSign, 2), EngineKind::Auto, None)
+            .unwrap();
+        let models = reg.models();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].name, "bsign");
+        assert_eq!(models[0].engine, "binary");
+        assert_eq!(models[1].engine, "pvq-csr");
+        reg.shutdown();
+    }
+
+    #[test]
+    fn routes_default_and_errors() {
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        reg.register_quant("m1", quant_mlp(Activation::Relu, 3), EngineKind::Reference, None)
+            .unwrap();
+        reg.register_quant("m2", quant_mlp(Activation::Relu, 4), EngineKind::Csr, None)
+            .unwrap();
+        let mut rng = Rng::new(5);
+        let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+        // default is the first registration
+        let a = reg.classify(None, pixels.clone()).unwrap();
+        let b = reg.classify(Some("m2"), pixels.clone()).unwrap();
+        assert!(a.class < 4 && b.class < 4);
+        assert!(reg.classify(Some("nope"), pixels.clone()).is_err());
+        // wrong-length requests are rejected before reaching a worker,
+        // and the server stays healthy afterwards
+        assert!(reg.classify(Some("m2"), vec![0u8; 5]).is_err());
+        assert!(reg.classify(Some("m2"), pixels.clone()).is_ok());
+        assert!(reg.set_default("nope").is_err());
+        reg.set_default("m2").unwrap();
+        let c = reg.classify(None, pixels).unwrap();
+        assert_eq!(c.class, b.class);
+        assert!(reg.summary().contains("[m1]"));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        reg.register_quant("m", quant_mlp(Activation::Relu, 6), EngineKind::Auto, None)
+            .unwrap();
+        assert!(reg
+            .register_quant("m", quant_mlp(Activation::Relu, 7), EngineKind::Auto, None)
+            .is_err());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn empty_registry_errors() {
+        let reg = ModelRegistry::new(ServerConfig::default());
+        assert!(reg.classify(None, vec![0u8; 16]).is_err());
+    }
+}

@@ -9,6 +9,7 @@
 //! See `DESIGN.md` for the module inventory and the paper-experiment index,
 //! and `examples/quickstart.rs` for a five-minute tour.
 
+pub mod artifact;
 pub mod compress;
 pub mod coordinator;
 pub mod data;

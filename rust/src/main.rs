@@ -6,17 +6,21 @@
 //!   eval --net a [...]           §VII before/after accuracy experiment
 //!   compress --net a [...]       §VI codec survey per layer
 //!   hwsim --net a [...]          §VIII cycle/storage report
+//!   pack --net a [...]           quantize + write a .pvqm artifact
+//!   inspect --file m.pvqm        print a .pvqm manifest
 //!   serve --net a [...]          batching inference server demo
+//!   serve --models a.pvqm,…      multi-model registry serving
 //!   info                         artifact inventory
 
 use anyhow::{bail, Context, Result};
-use pvqnet::coordinator::{Engine, Router, ServerConfig};
+use pvqnet::coordinator::{Engine, ModelRegistry, Router, ServerConfig};
 use pvqnet::data::Dataset;
 use pvqnet::hw::HwReport;
 use pvqnet::nn::weights::load_model;
-use pvqnet::nn::ModelSpec;
+use pvqnet::nn::{Model, ModelSpec};
 use pvqnet::pvq::RhoMode;
 use pvqnet::quant::{distribution_table, evaluate, quantize};
+use pvqnet::testkit::Rng;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -48,13 +52,9 @@ fn artifacts_dir(flags: &HashMap<String, String>) -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-fn load_net(flags: &HashMap<String, String>) -> Result<(ModelSpec, pvqnet::nn::Model, Dataset)> {
-    let net = flags.get("net").map(|s| s.as_str()).unwrap_or("a");
-    let spec = ModelSpec::by_name(net).with_context(|| format!("unknown net '{net}'"))?;
+fn load_net(flags: &HashMap<String, String>) -> Result<(ModelSpec, Model, Dataset)> {
+    let (spec, model) = load_or_synth(flags)?;
     let dir = artifacts_dir(flags);
-    let weights = dir.join(format!("net_{}.pvqw", net.to_ascii_lowercase()));
-    let model = load_model(&weights, &spec)
-        .with_context(|| format!("load {} (run `make artifacts` first)", weights.display()))?;
     let dataset = if spec.input_shape == vec![784] {
         Dataset::load(&dir.join("mnist_test.bin"))?
     } else {
@@ -86,7 +86,7 @@ fn cmd_tables() {
 }
 
 fn cmd_quantize(flags: &HashMap<String, String>) -> Result<()> {
-    let (spec, model, _) = load_net(flags)?;
+    let (spec, model) = load_or_synth(flags)?;
     let ratios = ratios_from_flags(flags, &spec)?;
     let q = quantize(&model, &ratios, RhoMode::Norm)?;
     println!("{}", spec.anatomy_table(&ratios));
@@ -111,7 +111,7 @@ fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
-    let (spec, model, _) = load_net(flags)?;
+    let (spec, model) = load_or_synth(flags)?;
     let ratios = ratios_from_flags(flags, &spec)?;
     let q = quantize(&model, &ratios, RhoMode::Norm)?;
     let widx = spec.weighted_layers();
@@ -129,15 +129,117 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_hwsim(flags: &HashMap<String, String>) -> Result<()> {
-    let (_, model, _) = load_net(flags)?;
-    let ratios = ratios_from_flags(flags, &model.spec.clone())?;
+    let (_, model) = load_or_synth(flags)?;
+    let ratios = ratios_from_flags(flags, &model.spec)?;
     let q = quantize(&model, &ratios, RhoMode::Norm)?;
     let rep = HwReport::from_model(&q.quant_model);
     println!("{}", rep.render());
     Ok(())
 }
 
+/// The model to quantize/pack: trained weights when available, or a
+/// deterministic synthetic (Laplacian) model with `--synth` so the whole
+/// pack → inspect → serve flow runs without `make artifacts`.
+fn load_or_synth(flags: &HashMap<String, String>) -> Result<(ModelSpec, Model)> {
+    let net = flags.get("net").map(|s| s.as_str()).unwrap_or("a");
+    let spec = ModelSpec::by_name(net).with_context(|| format!("unknown net '{net}'"))?;
+    if flags.contains_key("synth") {
+        let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+        Ok((spec.clone(), Model::synth(&spec, seed)))
+    } else {
+        let dir = artifacts_dir(flags);
+        let weights = dir.join(format!("net_{}.pvqw", net.to_ascii_lowercase()));
+        let model = load_model(&weights, &spec).with_context(|| {
+            format!("load {} (run `make artifacts`, or pass --synth)", weights.display())
+        })?;
+        Ok((spec, model))
+    }
+}
+
+fn cmd_pack(flags: &HashMap<String, String>) -> Result<()> {
+    let (spec, model) = load_or_synth(flags)?;
+    let ratios = ratios_from_flags(flags, &spec)?;
+    let q = quantize(&model, &ratios, RhoMode::Norm)?;
+    let out = flags
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("net_{}.pvqm", spec.name.to_ascii_lowercase())));
+    let manifest = pvqnet::artifact::write_model(&out, &q.quant_model)?;
+    println!("{}", manifest.render());
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let file = flags.get("file").context("inspect needs --file MODEL.pvqm")?;
+    let path = PathBuf::from(file);
+    let (spec, manifest) = pvqnet::artifact::inspect(&path)?;
+    println!("{}", manifest.render());
+    // anatomy with the ratios the artifact was actually packed at
+    let mut entries = manifest.layers.clone();
+    entries.sort_by_key(|l| l.layer_index);
+    let ratios: Vec<f64> = entries.iter().map(|l| l.ratio()).collect();
+    println!("{}", spec.anatomy_table(&ratios));
+    Ok(())
+}
+
+/// Registry serving: load every artifact, spread synthetic traffic
+/// round-robin over the models, report per-model throughput/latency.
+fn cmd_serve_models(flags: &HashMap<String, String>, models: &str) -> Result<()> {
+    let paths: Vec<PathBuf> = models.split(',').map(|s| PathBuf::from(s.trim())).collect();
+    let cfg = ServerConfig { queue_cap: 4096, ..Default::default() };
+    let mut reg = ModelRegistry::load(&paths, cfg)?;
+    if let Some(d) = flags.get("default") {
+        reg.set_default(d)?;
+    }
+    println!("registry models:");
+    for m in reg.models() {
+        println!(
+            "  {:<12} engine {:<8} input {:>5} params {:>9} compressed {:>9} B",
+            m.name, m.engine, m.input_len, m.total_params, m.compressed_bytes
+        );
+    }
+    let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
+    let names: Vec<String> = reg.models().iter().map(|m| m.name.clone()).collect();
+    let lens: Vec<usize> = reg.models().iter().map(|m| m.input_len).collect();
+    let default = reg.default_model().map(str::to_string);
+    let default_len = reg
+        .models()
+        .iter()
+        .find(|m| Some(m.name.as_str()) == default.as_deref())
+        .map(|m| m.input_len)
+        .unwrap_or(0);
+    println!("default route: {}", default.as_deref().unwrap_or("(none)"));
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_req {
+        // every 4th request exercises the default route (no model named),
+        // the rest round-robin by explicit name
+        let which = i % names.len();
+        let (route, len) = if i % 4 == 0 {
+            (None, default_len)
+        } else {
+            (Some(names[which].as_str()), lens[which])
+        };
+        let pixels: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        reg.classify(route, pixels)?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {n_req} requests across {} models in {:.2}s → {:.0} req/s",
+        names.len(),
+        dt.as_secs_f64(),
+        n_req as f64 / dt.as_secs_f64()
+    );
+    print!("{}", reg.summary());
+    reg.shutdown();
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    if let Some(models) = flags.get("models") {
+        return cmd_serve_models(flags, models);
+    }
     let (spec, model, data) = load_net(flags)?;
     let ratios = ratios_from_flags(flags, &spec)?;
     let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
@@ -201,14 +303,19 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&flags)?,
         "compress" => cmd_compress(&flags)?,
         "hwsim" => cmd_hwsim(&flags)?,
+        "pack" => cmd_pack(&flags)?,
+        "inspect" => cmd_inspect(&flags)?,
         "serve" => cmd_serve(&flags)?,
         "info" => cmd_info(&flags)?,
         "help" | "--help" | "-h" => {
             println!(
                 "pvqnet — Pyramid Vector Quantization for Deep Learning\n\
-                 usage: pvqnet <tables|quantize|eval|compress|hwsim|serve|info>\n\
+                 usage: pvqnet <tables|quantize|eval|compress|hwsim|pack|inspect|serve|info>\n\
                    common flags: --net a|b|c|d  --artifacts DIR  --ratios R[,R…]\n\
-                   eval:  --limit N      serve: --requests N"
+                   eval:    --limit N\n\
+                   pack:    --out FILE.pvqm  --synth [--seed N]   (synthetic weights)\n\
+                   inspect: --file FILE.pvqm\n\
+                   serve:   --requests N | --models a.pvqm,b.pvqm [--default NAME]"
             );
         }
         other => bail!("unknown command '{other}' (try `pvqnet help`)"),

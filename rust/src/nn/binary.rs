@@ -134,6 +134,109 @@ pub fn binary_max(bits: &[bool]) -> bool {
     bits.iter().any(|&b| b)
 }
 
+/// A whole binary PVQ net compiled to the popcount path: integer first
+/// layer (u8 pixels are not ±1), bit-packed bsign hidden layers, integer
+/// readout. This is the engine the `.pvqm` registry selects for bsign
+/// MLPs (nets C-shaped specs) — argmax-identical to
+/// [`crate::nn::pvq_engine::forward_int`] on the same [`QuantModel`].
+pub struct BinaryNet {
+    /// Per-sample feature count.
+    pub input_len: usize,
+    /// Logit count.
+    pub outputs: usize,
+    first_w: Vec<i32>,
+    first_b: Vec<i32>,
+    first_out: usize,
+    /// bsign-activated layers after the first, on the popcount path.
+    hidden: Vec<BinaryDense>,
+    /// Final linear layer (identity activation) — integer logits out.
+    last: BinaryDense,
+}
+
+impl BinaryNet {
+    /// Compile a quantized model. Errors unless the spec is a flat-input
+    /// MLP whose hidden dense layers are all bsign and whose last dense
+    /// layer is linear — the paper's "binary PVQ net" shape. Callers
+    /// (the registry) fall back to the CSR engine on error.
+    pub fn compile(m: &crate::nn::pvq_engine::QuantModel) -> Result<Self> {
+        use crate::nn::model::{Activation, LayerSpec};
+        if m.spec.input_shape.len() != 1 {
+            bail!("binary engine needs a flat input, got {:?}", m.spec.input_shape);
+        }
+        let mut dense: Vec<(usize, usize, Activation, &crate::nn::pvq_engine::QuantLayer)> =
+            Vec::new();
+        for (l, q) in m.spec.layers.iter().zip(&m.layers) {
+            match l {
+                LayerSpec::Dense { input, output, act } => {
+                    let q = match q {
+                        Some(q) => q,
+                        None => bail!("dense layer not quantized"),
+                    };
+                    dense.push((*input, *output, *act, q));
+                }
+                LayerSpec::Dropout(_) | LayerSpec::Scale(_) => {}
+                other => bail!("binary engine supports dense MLPs only, found {}", other.label()),
+            }
+        }
+        if dense.len() < 2 {
+            bail!("binary engine needs ≥2 dense layers, got {}", dense.len());
+        }
+        let (last_in, last_out, last_act, last_q) = *dense.last().unwrap();
+        if last_act != Activation::None {
+            bail!("last layer must be linear, got {last_act:?}");
+        }
+        for &(_, _, act, _) in &dense[..dense.len() - 1] {
+            if act != Activation::BSign {
+                bail!("hidden layers must be bsign, got {act:?}");
+            }
+        }
+        let (first_in, first_out, _, first_q) = dense[0];
+        let hidden = dense[1..dense.len() - 1]
+            .iter()
+            .map(|&(input, output, _, q)| BinaryDense::compile(&q.w, &q.b, input, output))
+            .collect();
+        Ok(BinaryNet {
+            input_len: first_in,
+            outputs: last_out,
+            first_w: first_q.w.clone(),
+            first_b: first_q.b.clone(),
+            first_out,
+            hidden,
+            last: BinaryDense::compile(&last_q.w, &last_q.b, last_in, last_out),
+        })
+    }
+
+    /// Integer logits for one u8 sample.
+    pub fn forward_u8(&self, pixels: &[u8]) -> Result<Vec<i64>> {
+        if pixels.len() != self.input_len {
+            bail!("expected {} pixels, got {}", self.input_len, pixels.len());
+        }
+        let x: Vec<i64> = pixels.iter().map(|&b| b as i64).collect();
+        let mut ops = crate::nn::pvq_engine::OpCount::default();
+        let mut h = crate::nn::pvq_engine::dense_i64(
+            &x,
+            &self.first_w,
+            &self.first_b,
+            self.input_len,
+            self.first_out,
+            &mut ops,
+        );
+        for v in h.iter_mut() {
+            *v = if *v >= 0 { 1 } else { -1 };
+        }
+        let mut bits = BitVec::from_pm1(&h)?;
+        for layer in &self.hidden {
+            bits = layer.forward_bsign(&bits);
+        }
+        Ok(self.last.forward(&bits))
+    }
+
+    /// Classify one u8 sample.
+    pub fn classify_u8(&self, pixels: &[u8]) -> Result<usize> {
+        Ok(crate::nn::tensor::argmax_i64(&self.forward_u8(pixels)?))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,5 +315,60 @@ mod tests {
     fn binary_max_is_or() {
         assert!(binary_max(&[false, true]));
         assert!(!binary_max(&[false, false]));
+    }
+
+    #[test]
+    fn binary_net_matches_integer_engine() {
+        use crate::nn::layers::Model;
+        use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+        use crate::nn::pvq_engine::forward_int;
+        use crate::nn::tensor::ITensor;
+        use crate::pvq::RhoMode;
+        use crate::quant::quantize;
+
+        let spec = ModelSpec {
+            name: "binc".into(),
+            input_shape: vec![24],
+            layers: vec![
+                LayerSpec::Scale(1.0 / 255.0),
+                LayerSpec::Dense { input: 24, output: 16, act: Activation::BSign },
+                LayerSpec::Dropout(0.2),
+                LayerSpec::Dense { input: 16, output: 12, act: Activation::BSign },
+                LayerSpec::Dense { input: 12, output: 5, act: Activation::None },
+            ],
+        };
+        let m = Model::synth(&spec, 11);
+        let qm = quantize(&m, &[2.0, 1.5, 1.0], RhoMode::Norm).unwrap().quant_model;
+        let net = BinaryNet::compile(&qm).unwrap();
+        assert_eq!(net.input_len, 24);
+        assert_eq!(net.outputs, 5);
+        let mut rng = Rng::new(12);
+        for _ in 0..30 {
+            let pix: Vec<u8> = (0..24).map(|_| rng.below(256) as u8).collect();
+            let want = forward_int(&qm, &ITensor::from_u8(&[24], &pix)).unwrap().logits;
+            let got = net.forward_u8(&pix).unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn binary_net_rejects_non_bsign() {
+        use crate::nn::layers::Model;
+        use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+        use crate::pvq::RhoMode;
+        use crate::quant::quantize;
+
+        let relu = ModelSpec {
+            name: "r".into(),
+            input_shape: vec![8],
+            layers: vec![
+                LayerSpec::Dense { input: 8, output: 6, act: Activation::Relu },
+                LayerSpec::Dense { input: 6, output: 3, act: Activation::None },
+            ],
+        };
+        let qm = quantize(&Model::synth(&relu, 1), &[1.0, 1.0], RhoMode::Norm)
+            .unwrap()
+            .quant_model;
+        assert!(BinaryNet::compile(&qm).is_err());
     }
 }

@@ -57,6 +57,38 @@ impl Model {
         let idx = self.spec.weighted_layers()[wi];
         self.params[idx].as_ref().unwrap()
     }
+
+    /// Deterministic synthetic model over `spec`: Laplacian weights (the
+    /// paper's §IV trained-weight surrogate) so every pipeline stage —
+    /// quantize, pack, serve — runs without `make artifacts`. Equal seeds
+    /// ⇒ equal parameters.
+    pub fn synth(spec: &ModelSpec, seed: u64) -> Model {
+        let mut rng = crate::testkit::Rng::new(seed);
+        let params = spec
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerSpec::Dense { input, output, .. } => Some(LayerParams {
+                    w: rng
+                        .laplacian_vec(input * output, 0.2)
+                        .iter()
+                        .map(|&v| v as f32)
+                        .collect(),
+                    b: rng.laplacian_vec(*output, 0.05).iter().map(|&v| v as f32).collect(),
+                }),
+                LayerSpec::Conv2d { kh, kw, cin, cout, .. } => Some(LayerParams {
+                    w: rng
+                        .laplacian_vec(kh * kw * cin * cout, 0.2)
+                        .iter()
+                        .map(|&v| v as f32)
+                        .collect(),
+                    b: rng.laplacian_vec(*cout, 0.05).iter().map(|&v| v as f32).collect(),
+                }),
+                _ => None,
+            })
+            .collect();
+        Model { spec: spec.clone(), params }
+    }
 }
 
 /// Apply activation in place.
@@ -315,6 +347,17 @@ mod tests {
         let x = Tensor::from_vec(&[8, 8, 3], rng.gaussian_vec_f32(192, 1.0));
         let out = forward(&m, &x);
         assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn synth_model_valid_and_deterministic() {
+        let spec = ModelSpec::by_name("a").unwrap();
+        let a = Model::synth(&spec, 7);
+        a.validate().unwrap();
+        let b = Model::synth(&spec, 7);
+        assert_eq!(a.weighted_params(0).w, b.weighted_params(0).w);
+        let c = Model::synth(&spec, 8);
+        assert_ne!(a.weighted_params(0).w, c.weighted_params(0).w);
     }
 
     #[test]

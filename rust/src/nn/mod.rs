@@ -9,6 +9,7 @@ pub mod pvq_engine;
 pub mod tensor;
 pub mod weights;
 
+pub use binary::{BinaryDense, BinaryNet, BitVec};
 pub use layers::{classify, forward, LayerParams, Model};
 pub use model::{Activation, LayerSpec, ModelSpec};
 pub use csr_engine::CompiledQuantModel;

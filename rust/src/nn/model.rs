@@ -1,6 +1,8 @@
 //! Model architecture descriptors — the paper's nets A, B, C, D
 //! (Tables 1–4) plus arbitrary user-defined stacks.
 
+use anyhow::{bail, Result};
+
 /// Activation applied inside a weighted layer (the paper's eq. 12 vs 16
 //  distinction: ReLU passes ρ through; bsign absorbs it).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -11,6 +13,27 @@ pub enum Activation {
     BSign,
     /// identity (output layer before argmax).
     None,
+}
+
+impl Activation {
+    /// Stable on-disk id (used by the `.pvqm` artifact spec codec).
+    pub fn to_id(self) -> u8 {
+        match self {
+            Activation::Relu => 0,
+            Activation::BSign => 1,
+            Activation::None => 2,
+        }
+    }
+
+    /// Inverse of [`Activation::to_id`].
+    pub fn from_id(id: u8) -> Option<Activation> {
+        match id {
+            0 => Some(Activation::Relu),
+            1 => Some(Activation::BSign),
+            2 => Some(Activation::None),
+            _ => None,
+        }
+    }
 }
 
 /// One layer of a sequential model.
@@ -37,16 +60,21 @@ pub enum LayerSpec {
 impl LayerSpec {
     /// Number of weights + biases (the paper's per-layer N column).
     pub fn param_count(&self) -> usize {
-        match self {
-            LayerSpec::Dense { input, output, .. } => input * output + output,
-            LayerSpec::Conv2d { kh, kw, cin, cout, .. } => kh * kw * cin * cout + cout,
-            _ => 0,
-        }
+        self.param_split().map(|(w, b)| w + b).unwrap_or(0)
     }
 
     /// True if the layer carries weights (PVQ applies to it).
     pub fn has_params(&self) -> bool {
         self.param_count() > 0
+    }
+
+    /// (weight count, bias count) for weighted layers, None otherwise.
+    pub fn param_split(&self) -> Option<(usize, usize)> {
+        match self {
+            LayerSpec::Dense { input, output, .. } => Some((input * output, *output)),
+            LayerSpec::Conv2d { kh, kw, cin, cout, .. } => Some((kh * kw * cin * cout, *cout)),
+            _ => None,
+        }
     }
 
     /// Short display name matching the paper's table labels.
@@ -150,6 +178,61 @@ impl ModelSpec {
         (0..self.layers.len()).filter(|&i| self.layers[i].has_params()).collect()
     }
 
+    /// Walk the layer stack checking that every layer's input geometry
+    /// matches what the previous layer produces; returns the final
+    /// output length. Untrusted specs (e.g. from a `.pvqm` artifact)
+    /// must pass this before an engine runs them — the engines index
+    /// buffers by these dimensions and would panic on a mismatch.
+    pub fn validate_shapes(&self) -> Result<usize> {
+        // None = flat vector of `flat` elements; Some = HWC image
+        let (mut hwc, mut flat): (Option<(usize, usize, usize)>, usize) =
+            match self.input_shape.as_slice() {
+                [n] => (None, *n),
+                [h, w, c] => (Some((*h, *w, *c)), h * w * c),
+                other => bail!("unsupported input shape {other:?}"),
+            };
+        for (i, l) in self.layers.iter().enumerate() {
+            match l {
+                LayerSpec::Dense { input, output, .. } => {
+                    if hwc.is_some() {
+                        bail!("layer {i}: dense applied to unflattened HWC input");
+                    }
+                    if flat != *input {
+                        bail!("layer {i}: dense expects {input} inputs, gets {flat}");
+                    }
+                    flat = *output;
+                }
+                LayerSpec::Conv2d { cin, cout, .. } => match hwc {
+                    Some((h, w, c)) if c == *cin => {
+                        hwc = Some((h, w, *cout));
+                        flat = h * w * cout;
+                    }
+                    Some((_, _, c)) => {
+                        bail!("layer {i}: conv expects {cin} channels, gets {c}")
+                    }
+                    None => bail!("layer {i}: conv applied to flat input"),
+                },
+                LayerSpec::MaxPool2x2 => match hwc {
+                    Some((h, w, c)) => {
+                        if h < 2 || w < 2 {
+                            bail!("layer {i}: pool on {h}x{w} image");
+                        }
+                        hwc = Some((h / 2, w / 2, c));
+                        flat = (h / 2) * (w / 2) * c;
+                    }
+                    None => bail!("layer {i}: pool applied to flat input"),
+                },
+                LayerSpec::Flatten => {
+                    if hwc.take().is_none() {
+                        bail!("layer {i}: flatten applied to already-flat input");
+                    }
+                }
+                LayerSpec::Dropout(_) | LayerSpec::Scale(_) => {}
+            }
+        }
+        Ok(flat)
+    }
+
     /// Total parameter count.
     pub fn total_params(&self) -> usize {
         self.layers.iter().map(|l| l.param_count()).sum()
@@ -242,5 +325,61 @@ mod tests {
     #[test]
     fn unknown_net_none() {
         assert!(ModelSpec::by_name("z").is_none());
+    }
+
+    #[test]
+    fn validate_shapes_accepts_paper_nets() {
+        assert_eq!(ModelSpec::by_name("a").unwrap().validate_shapes().unwrap(), 10);
+        assert_eq!(ModelSpec::by_name("b").unwrap().validate_shapes().unwrap(), 10);
+        assert_eq!(ModelSpec::by_name("c").unwrap().validate_shapes().unwrap(), 10);
+        assert_eq!(ModelSpec::by_name("d").unwrap().validate_shapes().unwrap(), 10);
+    }
+
+    #[test]
+    fn validate_shapes_rejects_inconsistent_chains() {
+        // dense chain mismatch: 16→8 followed by 12→4
+        let bad = ModelSpec {
+            name: "bad".into(),
+            input_shape: vec![16],
+            layers: vec![
+                LayerSpec::Dense { input: 16, output: 8, act: Activation::Relu },
+                LayerSpec::Dense { input: 12, output: 4, act: Activation::None },
+            ],
+        };
+        assert!(bad.validate_shapes().is_err());
+        // input shape product != first dense input
+        let bad2 = ModelSpec {
+            name: "bad2".into(),
+            input_shape: vec![10],
+            layers: vec![LayerSpec::Dense { input: 16, output: 4, act: Activation::None }],
+        };
+        assert!(bad2.validate_shapes().is_err());
+        // conv on flat input / dense on unflattened HWC / channel mismatch
+        let conv_flat = ModelSpec {
+            name: "cf".into(),
+            input_shape: vec![64],
+            layers: vec![LayerSpec::Conv2d { kh: 3, kw: 3, cin: 1, cout: 2, act: Activation::Relu }],
+        };
+        assert!(conv_flat.validate_shapes().is_err());
+        let dense_hwc = ModelSpec {
+            name: "dh".into(),
+            input_shape: vec![4, 4, 2],
+            layers: vec![LayerSpec::Dense { input: 32, output: 4, act: Activation::None }],
+        };
+        assert!(dense_hwc.validate_shapes().is_err());
+        let chan = ModelSpec {
+            name: "ch".into(),
+            input_shape: vec![4, 4, 2],
+            layers: vec![LayerSpec::Conv2d { kh: 3, kw: 3, cin: 3, cout: 2, act: Activation::Relu }],
+        };
+        assert!(chan.validate_shapes().is_err());
+    }
+
+    #[test]
+    fn activation_id_roundtrip() {
+        for act in [Activation::Relu, Activation::BSign, Activation::None] {
+            assert_eq!(Activation::from_id(act.to_id()), Some(act));
+        }
+        assert_eq!(Activation::from_id(9), None);
     }
 }

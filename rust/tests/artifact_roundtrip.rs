@@ -1,0 +1,309 @@
+//! `.pvqm` artifact properties: encode → write → read → decode must be
+//! bit-identical; truncated or corrupted inputs must error, never panic;
+//! and the multi-model registry must serve several artifacts concurrently
+//! through the batching server with per-model-correct predictions.
+
+use pvqnet::artifact::{inspect, read_model, write_model, ArtifactReader, ArtifactWriter};
+use pvqnet::coordinator::{EngineKind, ModelRegistry, ServerConfig};
+use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
+use pvqnet::nn::{forward_int, ITensor, Model, QuantModel};
+use pvqnet::pvq::RhoMode;
+use pvqnet::quant::quantize;
+use pvqnet::testkit::{check, Rng};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pvqm_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Random small MLP spec + synthetic weights, quantized at a random ratio.
+fn random_quant_mlp(rng: &mut Rng, seed: u64) -> QuantModel {
+    let d0 = 6 + rng.below(40) as usize;
+    let d1 = 4 + rng.below(24) as usize;
+    let d2 = 2 + rng.below(8) as usize;
+    let act = if rng.below(2) == 0 { Activation::Relu } else { Activation::BSign };
+    let spec = ModelSpec {
+        name: format!("rt{seed}"),
+        input_shape: vec![d0],
+        layers: vec![
+            LayerSpec::Scale(1.0 / 255.0),
+            LayerSpec::Dense { input: d0, output: d1, act },
+            LayerSpec::Dropout(0.25),
+            LayerSpec::Dense { input: d1, output: d2, act: Activation::None },
+        ],
+    };
+    let model = Model::synth(&spec, seed.wrapping_mul(0x9E37) + 1);
+    let r0 = 1.0 + 4.0 * rng.next_f64();
+    let r1 = 1.0 + 2.0 * rng.next_f64();
+    quantize(&model, &[r0, r1], RhoMode::Norm).unwrap().quant_model
+}
+
+fn assert_models_identical(a: &QuantModel, b: &QuantModel) {
+    assert_eq!(a.spec, b.spec);
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la, lb); // QuantLayer: PartialEq over w, b, b_pyramid, rho, k
+    }
+}
+
+#[test]
+fn prop_pack_unpack_bit_identical() {
+    check("pvqm-roundtrip", 2024, 25, |id, rng| {
+        let qm = random_quant_mlp(rng, id);
+        let path = tmp_path(&format!("prop_{id}.pvqm"));
+        let manifest = write_model(&path, &qm).unwrap();
+        assert_eq!(manifest.layers.len(), 2);
+        let (back, manifest2) = read_model(&path).unwrap();
+        assert_models_identical(&qm, &back);
+        assert_eq!(manifest, manifest2);
+        // the spec + manifest reachable without decoding agree too
+        let (ispec, imani) = inspect(&path).unwrap();
+        assert_eq!(ispec, qm.spec);
+        assert_eq!(imani, manifest);
+        std::fs::remove_file(&path).unwrap();
+    });
+}
+
+#[test]
+fn prop_conv_model_roundtrips() {
+    let spec = ModelSpec {
+        name: "rtconv".into(),
+        input_shape: vec![8, 8, 2],
+        layers: vec![
+            LayerSpec::Conv2d { kh: 3, kw: 3, cin: 2, cout: 4, act: Activation::Relu },
+            LayerSpec::MaxPool2x2,
+            LayerSpec::Flatten,
+            LayerSpec::Dense { input: 4 * 4 * 4, output: 5, act: Activation::None },
+        ],
+    };
+    let model = Model::synth(&spec, 99);
+    let qm = quantize(&model, &[1.0, 2.0], RhoMode::Norm).unwrap().quant_model;
+    let path = tmp_path("conv.pvqm");
+    write_model(&path, &qm).unwrap();
+    let (back, _) = read_model(&path).unwrap();
+    assert_models_identical(&qm, &back);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn prop_truncation_errors_never_panics() {
+    let mut rng = Rng::new(55);
+    let qm = random_quant_mlp(&mut rng, 55);
+    let mut buf = Vec::new();
+    let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
+    for (li, l) in qm.layers.iter().enumerate() {
+        if let Some(q) = l {
+            w.write_layer(li, q).unwrap();
+        }
+    }
+    w.finish().unwrap();
+
+    for cut in 0..buf.len() {
+        let slice = &buf[..cut];
+        let mut r = match ArtifactReader::new(slice) {
+            Ok(r) => r,
+            Err(_) => continue,
+        };
+        // header + SPEC survived the cut; draining the stream must error
+        // (the ENDM marker can never be reached on a strict prefix)
+        let err = loop {
+            match r.next_layer() {
+                Ok(Some(_)) => {}
+                Ok(None) => break false,
+                Err(_) => break true,
+            }
+        };
+        assert!(err, "truncation at {cut}/{} went undetected", buf.len());
+    }
+}
+
+#[test]
+fn prop_corrupted_crc_errors_never_panics() {
+    let mut rng = Rng::new(66);
+    let qm = random_quant_mlp(&mut rng, 66);
+    let mut buf = Vec::new();
+    let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
+    for (li, l) in qm.layers.iter().enumerate() {
+        if let Some(q) = l {
+            w.write_layer(li, q).unwrap();
+        }
+    }
+    w.finish().unwrap();
+
+    // flip a bit at every offset past the fixed header: the read must
+    // fail or come back incomplete — never panic, never silently differ
+    for pos in 8..buf.len() {
+        let mut bad = buf.clone();
+        bad[pos] ^= 0x10;
+        let mut r = match ArtifactReader::new(bad.as_slice()) {
+            Ok(r) => r,
+            Err(_) => continue,
+        };
+        let mut layers = 0;
+        let detected = loop {
+            match r.next_layer() {
+                Ok(Some(_)) => layers += 1,
+                Ok(None) => break layers < 2 || r.manifest().is_none(),
+                Err(_) => break true,
+            }
+        };
+        assert!(detected, "bit flip at {pos} went undetected");
+    }
+}
+
+#[test]
+fn unfinished_writer_leaves_detectable_truncation() {
+    let mut rng = Rng::new(77);
+    let qm = random_quant_mlp(&mut rng, 77);
+    let mut buf = Vec::new();
+    let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
+    for (li, l) in qm.layers.iter().enumerate() {
+        if let Some(q) = l {
+            w.write_layer(li, q).unwrap();
+        }
+    }
+    drop(w); // no finish(): no MANI, no ENDM
+    let mut r = ArtifactReader::new(buf.as_slice()).unwrap();
+    let err = loop {
+        match r.next_layer() {
+            Ok(Some(_)) => {}
+            Ok(None) => break false,
+            Err(_) => break true,
+        }
+    };
+    assert!(err, "missing ENDM must read as truncation");
+}
+
+/// Acceptance: two different `.pvqm` models served side by side through
+/// the batching registry, concurrently, with per-model predictions that
+/// exactly match each model's own engine run directly.
+#[test]
+fn registry_serves_two_models_concurrently_with_correct_predictions() {
+    let spec = ModelSpec {
+        name: "zoo".into(),
+        input_shape: vec![20],
+        layers: vec![
+            LayerSpec::Dense { input: 20, output: 12, act: Activation::Relu },
+            LayerSpec::Dense { input: 12, output: 6, act: Activation::None },
+        ],
+    };
+    // fixed sample set + ground truth from each model's reference engine
+    let mut rng = Rng::new(3003);
+    let samples: Vec<Vec<u8>> =
+        (0..60).map(|_| (0..20).map(|_| rng.below(256) as u8).collect()).collect();
+    let truth = |qm: &QuantModel| -> Vec<usize> {
+        samples
+            .iter()
+            .map(|s| {
+                pvqnet::nn::tensor::argmax_i64(
+                    &forward_int(qm, &ITensor::from_u8(&[20], s)).unwrap().logits,
+                )
+            })
+            .collect()
+    };
+
+    // two genuinely different models over the same topology; models are
+    // deterministic per seed, but guard against the off-chance that two
+    // random nets agree on every sample by advancing the second seed
+    let qa = quantize(&Model::synth(&spec, 1001), &[1.5, 1.0], RhoMode::Norm)
+        .unwrap()
+        .quant_model;
+    let want_a = truth(&qa);
+    let (qb, want_b) = (2002..2012)
+        .find_map(|seed| {
+            let q = quantize(&Model::synth(&spec, seed), &[1.5, 1.0], RhoMode::Norm)
+                .unwrap()
+                .quant_model;
+            let w = truth(&q);
+            (w != want_a).then_some((q, w))
+        })
+        .expect("ten random nets all predicting identically is implausible");
+
+    let pa = tmp_path("zoo_a.pvqm");
+    let pb = tmp_path("zoo_b.pvqm");
+    write_model(&pa, &qa).unwrap();
+    write_model(&pb, &qb).unwrap();
+
+    let reg = Arc::new(
+        ModelRegistry::load(
+            &[&pa, &pb],
+            ServerConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+                workers: 2,
+                queue_cap: 512,
+            },
+        )
+        .unwrap(),
+    );
+    let names: Vec<String> = reg.models().iter().map(|m| m.name.clone()).collect();
+    assert_eq!(names, vec!["zoo_a".to_string(), "zoo_b".to_string()]);
+
+    // hammer both models from concurrent clients
+    let mut handles = Vec::new();
+    for (model, want) in [("zoo_a", want_a.clone()), ("zoo_b", want_b.clone())] {
+        let reg = reg.clone();
+        let samples = samples.clone();
+        handles.push(std::thread::spawn(move || {
+            for pass in 0..3 {
+                for (i, s) in samples.iter().enumerate() {
+                    let r = reg.classify(Some(model), s.clone()).unwrap();
+                    assert_eq!(
+                        r.class, want[i],
+                        "{model} sample {i} pass {pass}: wrong prediction"
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let summary = reg.summary();
+    assert!(summary.contains("[zoo_a]") && summary.contains("[zoo_b]"));
+    match Arc::try_unwrap(reg) {
+        Ok(r) => r.shutdown(),
+        Err(_) => panic!("registry still shared after joins"),
+    }
+    std::fs::remove_file(&pa).unwrap();
+    std::fs::remove_file(&pb).unwrap();
+}
+
+/// A bsign-MLP artifact comes back up on the binary popcount engine and
+/// still agrees with the reference integer engine.
+#[test]
+fn registry_binary_engine_matches_reference() {
+    let spec = ModelSpec {
+        name: "bsrv".into(),
+        input_shape: vec![16],
+        layers: vec![
+            LayerSpec::Dense { input: 16, output: 10, act: Activation::BSign },
+            LayerSpec::Dense { input: 10, output: 4, act: Activation::None },
+        ],
+    };
+    let qm = quantize(&Model::synth(&spec, 31), &[2.0, 1.0], RhoMode::Norm)
+        .unwrap()
+        .quant_model;
+    let path = tmp_path("bsrv.pvqm");
+    write_model(&path, &qm).unwrap();
+
+    let mut reg = ModelRegistry::new(ServerConfig::default());
+    let name = reg.register_artifact(&path, EngineKind::Auto).unwrap();
+    assert_eq!(name, "bsrv");
+    assert_eq!(reg.models()[0].engine, "binary");
+
+    let mut rng = Rng::new(32);
+    for _ in 0..40 {
+        let s: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+        let want = pvqnet::nn::tensor::argmax_i64(
+            &forward_int(&qm, &ITensor::from_u8(&[16], &s)).unwrap().logits,
+        );
+        let got = reg.classify(Some("bsrv"), s).unwrap();
+        assert_eq!(got.class, want);
+    }
+    reg.shutdown();
+    std::fs::remove_file(&path).unwrap();
+}

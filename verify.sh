@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification + lint gate. Run from anywhere; executes in rust/.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "verify.sh: all green"
