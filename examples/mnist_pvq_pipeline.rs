@@ -1,4 +1,4 @@
-//! END-TO-END DRIVER (DESIGN.md §4, EXPERIMENTS.md): exercises every layer
+//! END-TO-END DRIVER (docs/ARCHITECTURE.md §4): exercises every layer
 //! of the stack on the real (synthetic-MNIST) workload:
 //!
 //!   L2/L1 artifacts → rust weight loader → PVQ quantization →

@@ -1,6 +1,6 @@
 """Synthetic datasets (no-network substitution for MNIST / CIFAR10).
 
-See DESIGN.md §3: PVQ's behaviour depends on trained weight statistics,
+See docs/ARCHITECTURE.md §3: PVQ's behaviour depends on trained weight statistics,
 not on the exact pixels, so any natural-ish classification task with the
 same shapes exercises the same code paths.
 

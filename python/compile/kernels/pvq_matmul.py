@@ -1,7 +1,7 @@
 """Pallas kernel: PVQ dense layer  y = (x @ ŵᵀ)·ρ + b.
 
-TPU adaptation of the paper's §III dot-product trick (DESIGN.md
-§Hardware-Adaptation): on a systolic-array machine the win is not
+TPU adaptation of the paper's §III dot-product trick (docs/ARCHITECTURE.md
+§2): on a systolic-array machine the win is not
 add-vs-mult — the MXU does fused MACs — but *weight bandwidth*: PVQ
 weights are tiny integers (Tables 5–8: ≥97 % in {0,±1,±2,±3}), so ŵ ships
 HBM→VMEM as int8 (4× less traffic than f32) and is upcast in-register
@@ -13,7 +13,7 @@ the BlockSpec index maps express the HBM→VMEM schedule the paper's FPGA
 designs express with serial accumulators.
 
 interpret=True everywhere: the CPU PJRT client cannot run Mosaic
-custom-calls; real-TPU perf is estimated analytically in DESIGN.md §Perf.
+custom-calls; real-TPU perf is estimated analytically in docs/ARCHITECTURE.md.
 """
 
 from __future__ import annotations
@@ -131,7 +131,7 @@ def pvq_matmul(x, w_int, b, rho, *, bm: int = DEF_BM, bn: int = DEF_BN, bk: int 
 
 
 def vmem_footprint_bytes(bm: int, bn: int, bk: int, w_dtype_bytes: int = 1) -> int:
-    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf):
+    """Analytic VMEM footprint of one grid step (docs/ARCHITECTURE.md):
     x tile (f32) + ŵ tile (int8) + out tile (f32) + bias."""
     return bm * bk * 4 + bn * bk * w_dtype_bytes + bm * bn * 4 + bn * 4
 

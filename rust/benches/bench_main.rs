@@ -5,7 +5,7 @@
 //!     cargo bench -- table5             # run one experiment
 //!     cargo bench -- --list             # list experiments
 //!
-//! One target per paper table/figure (DESIGN.md §4) plus microbenchmarks
+//! One target per paper table/figure (docs/ARCHITECTURE.md §4) plus microbenchmarks
 //! and ablations. Experiments that need trained artifacts print SKIP when
 //! `make artifacts` has not been run.
 
@@ -326,6 +326,104 @@ fn bench_serve() {
     }
 }
 
+/// Batched vs scalar inference throughput (B ∈ {1, 4, 16, 64}) for the
+/// CSR engine (synth net A) and the binary popcount engine (synth net C):
+/// the scalar loop walks the weight structure once per sample, the
+/// batch-fused `forward_block` path walks it once per micro-batch. Runs
+/// on synthetic weights (no `make artifacts` needed) and emits
+/// `BENCH_batch.json`.
+fn bench_batch() {
+    use pvqnet::nn::batch::ActivationBlock;
+    use pvqnet::nn::tensor::ITensor;
+    use pvqnet::nn::{BinaryNet, CompiledQuantModel, Model};
+
+    /// Median samples/second of `f` (which processes `samples_per_call`).
+    fn throughput<F: FnMut()>(samples_per_call: usize, mut f: F) -> f64 {
+        f(); // warmup
+        let budget = Duration::from_millis(300);
+        let mut times = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < budget || times.len() < 5 {
+            let s = Instant::now();
+            f();
+            times.push(s.elapsed().as_secs_f64());
+            if times.len() >= 100 {
+                break;
+            }
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples_per_call as f64 / times[times.len() / 2]
+    }
+
+    let mut rng = Rng::new(77);
+    let mut entries: Vec<String> = Vec::new();
+    for (net, engine_name) in [("a", "pvq-csr"), ("c", "binary")] {
+        let spec = ModelSpec::by_name(net).unwrap();
+        let model = Model::synth(&spec, 42);
+        let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
+        let input_len: usize = spec.input_shape.iter().product();
+        let samples: Vec<Vec<u8>> = (0..64)
+            .map(|_| (0..input_len).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        println!("  net {} ({engine_name}):", spec.name);
+
+        let csr = (engine_name == "pvq-csr")
+            .then(|| CompiledQuantModel::compile(&q.quant_model).unwrap());
+        let bin = (engine_name == "binary")
+            .then(|| BinaryNet::compile(&q.quant_model).unwrap());
+
+        let mut scalar_b1 = 0.0f64;
+        for b in [1usize, 4, 16, 64] {
+            let wave = &samples[..b];
+            let views: Vec<&[u8]> = wave.iter().map(|s| s.as_slice()).collect();
+            let (scalar_sps, batched_sps) = match (&csr, &bin) {
+                (Some(m), _) => {
+                    let tensors: Vec<ITensor> = wave
+                        .iter()
+                        .map(|s| ITensor::from_u8(&spec.input_shape, s))
+                        .collect();
+                    let block = ActivationBlock::from_samples_u8(&views).unwrap();
+                    (
+                        throughput(b, || {
+                            for t in &tensors {
+                                std::hint::black_box(m.forward(t));
+                            }
+                        }),
+                        throughput(b, || {
+                            std::hint::black_box(m.forward_block(&block).unwrap());
+                        }),
+                    )
+                }
+                (_, Some(m)) => (
+                    throughput(b, || {
+                        for s in &views {
+                            std::hint::black_box(m.forward_u8(s).unwrap());
+                        }
+                    }),
+                    throughput(b, || {
+                        std::hint::black_box(m.forward_block_u8(&views).unwrap());
+                    }),
+                ),
+                _ => unreachable!("one engine per net"),
+            };
+            if b == 1 {
+                scalar_b1 = scalar_sps;
+            }
+            let speedup = batched_sps / scalar_b1.max(1e-9);
+            println!(
+                "    B={b:>3}: scalar-loop {scalar_sps:>9.0} samp/s  batched {batched_sps:>9.0} samp/s  ({speedup:.2}x vs B=1 scalar)"
+            );
+            entries.push(format!(
+                "{{\"engine\":\"{engine_name}\",\"net\":\"{}\",\"batch\":{b},\"scalar_sps\":{scalar_sps:.1},\"batched_sps\":{batched_sps:.1},\"speedup_vs_b1_scalar\":{speedup:.4}}}",
+                spec.name
+            ));
+        }
+    }
+    let json = format!("{{\"experiment\":\"batch\",\"entries\":[{}]}}\n", entries.join(","));
+    std::fs::write("BENCH_batch.json", json).unwrap();
+    println!("  wrote BENCH_batch.json");
+}
+
 /// Artifact pack/unpack throughput + compressed bytes per weight on a
 /// net-A-shaped synthetic model; emits BENCH_artifact.json next to the
 /// other bench outputs.
@@ -464,6 +562,7 @@ fn main() {
         ("encode", bench_encode),
         ("engines", bench_engines),
         ("serve", bench_serve),
+        ("batch", bench_batch),
         ("artifact", bench_artifact),
         ("pjrt", bench_pjrt),
     ];

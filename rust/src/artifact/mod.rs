@@ -36,6 +36,42 @@
 //!                      (codec id, N, K, ρ, entropy-coded components)
 //! ```
 //!
+//! ## Example: pack a quantized model, read it back
+//!
+//! ```
+//! use pvqnet::artifact::{inspect, read_model, write_model};
+//! use pvqnet::nn::{Activation, LayerSpec, Model, ModelSpec};
+//! use pvqnet::pvq::RhoMode;
+//! use pvqnet::quant::quantize;
+//!
+//! let spec = ModelSpec {
+//!     name: "doc".into(),
+//!     input_shape: vec![8],
+//!     layers: vec![
+//!         LayerSpec::Dense { input: 8, output: 6, act: Activation::Relu },
+//!         LayerSpec::Dense { input: 6, output: 3, act: Activation::None },
+//!     ],
+//! };
+//! let model = Model::synth(&spec, 1); // deterministic Laplacian weights
+//! let q = quantize(&model, &[2.0, 1.5], RhoMode::Norm)?;
+//!
+//! let path = std::env::temp_dir().join("pvqnet_doc_example.pvqm");
+//! let manifest = write_model(&path, &q.quant_model)?;
+//! assert_eq!(manifest.layers.len(), 2);
+//! assert!(manifest.total_compressed() > 0);
+//!
+//! // the round trip is bit-identical…
+//! let (back, _) = read_model(&path)?;
+//! assert_eq!(back.spec, q.quant_model.spec);
+//! assert_eq!(back.layers, q.quant_model.layers);
+//! // …and `inspect` reports stats without decoding any weights
+//! let (spec_back, mani) = inspect(&path)?;
+//! assert_eq!(spec_back.name, "doc");
+//! assert_eq!(mani.total_params, spec.total_params());
+//! std::fs::remove_file(&path)?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
 //! * [`writer`] — streaming [`writer::ArtifactWriter`]: header + SPEC up
 //!   front, then one LAYR at a time (the whole model is never held in
 //!   compressed form), MANI + ENDM on `finish`.

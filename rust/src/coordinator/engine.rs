@@ -2,6 +2,7 @@
 //! reference engine, the integer PVQ engine, the bit-aware binary path,
 //! or an AOT-compiled XLA graph via PJRT.
 
+use crate::nn::batch::ActivationBlock;
 use crate::nn::binary::BinaryNet;
 use crate::nn::csr_engine::CompiledQuantModel;
 use crate::nn::layers::Model;
@@ -18,8 +19,9 @@ pub enum Engine {
     Float(Arc<Model>),
     /// Integer PVQ engine (rust, adds/subs only — §V), reference path.
     PvqInt(Arc<QuantModel>),
-    /// CSR-compiled integer PVQ engine (the optimized hot path); the
-    /// second field is the sample shape for ITensor construction.
+    /// CSR-compiled integer PVQ engine (the optimized hot path, batched
+    /// through `forward_block`); the second field is the sample shape for
+    /// sizing and single-sample ITensor construction.
     PvqCompiled(Arc<CompiledQuantModel>, Vec<usize>),
     /// Bit-packed binary PVQ net (popcount path, §V/Fig. 2) for bsign
     /// MLPs.
@@ -52,7 +54,18 @@ impl Engine {
     }
 
     /// Classify a batch of u8 samples (each `input_len` long).
+    ///
+    /// This is the coordinator's default serving path. The CSR and binary
+    /// engines execute the whole micro-batch through their batch-fused
+    /// `forward_block` kernels — one traversal of the weight structure
+    /// updates every request's accumulators — instead of looping scalar
+    /// `infer` calls; results are bitwise identical to the per-sample
+    /// paths. The reference engines (float, pvq-int) keep the scalar loop
+    /// by design: they exist for A/B-ing the optimized paths.
     pub fn classify_batch(&self, samples: &[&[u8]]) -> Result<Vec<usize>> {
+        if samples.is_empty() {
+            return Ok(Vec::new());
+        }
         match self {
             Engine::Float(m) => {
                 let flat = m.spec.input_shape.len() == 1;
@@ -87,11 +100,10 @@ impl Engine {
                     })
                     .collect()
             }
-            Engine::PvqCompiled(m, shape) => Ok(samples
-                .iter()
-                .map(|s| m.classify(&ITensor::from_u8(shape, s)))
-                .collect()),
-            Engine::Binary(m) => samples.iter().map(|s| m.classify_u8(s)).collect(),
+            Engine::PvqCompiled(m, _) => {
+                m.classify_block(&ActivationBlock::from_samples_u8(samples)?)
+            }
+            Engine::Binary(m) => m.classify_block_u8(samples),
             Engine::Hlo(m) => {
                 // pad up to the lowered batch size, run in waves
                 let mut out = Vec::with_capacity(samples.len());
@@ -134,6 +146,27 @@ mod tests {
                 b: vec![0.0; 4],
             })],
         }
+    }
+
+    #[test]
+    fn batched_csr_path_matches_scalar_classify() {
+        use crate::nn::csr_engine::CompiledQuantModel;
+        use crate::nn::tensor::ITensor;
+
+        let m = tiny_model(9);
+        let q = quantize(&m, &[1.5], RhoMode::Norm).unwrap();
+        let compiled = Arc::new(CompiledQuantModel::compile(&q.quant_model).unwrap());
+        let engine = Engine::PvqCompiled(compiled.clone(), vec![16]);
+        let mut rng = Rng::new(10);
+        let samples: Vec<Vec<u8>> = (0..13)
+            .map(|_| (0..16).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let batched = engine.classify_batch(&refs).unwrap();
+        for (s, sample) in samples.iter().enumerate() {
+            assert_eq!(batched[s], compiled.classify(&ITensor::from_u8(&[16], sample)));
+        }
+        assert!(engine.classify_batch(&[]).unwrap().is_empty());
     }
 
     #[test]

@@ -6,6 +6,9 @@ use std::time::Duration;
 /// Number of log2 latency buckets (1µs … ~1000s).
 const BUCKETS: usize = 32;
 
+/// Number of log2 batch-occupancy buckets (1 … ≥1024 samples/batch).
+const OCC_BUCKETS: usize = 11;
+
 /// Lock-free metrics sink shared across batcher/worker threads.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -22,12 +25,56 @@ pub struct Metrics {
     hist: [AtomicU64; BUCKETS],
     /// Sum of latencies in µs (for the mean).
     lat_sum_us: AtomicU64,
+    /// log2 batch-occupancy histogram: bucket b counts dispatched batches
+    /// with 2^b ≤ samples < 2^(b+1).
+    occ_hist: [AtomicU64; OCC_BUCKETS],
 }
 
 impl Metrics {
     /// Fresh zeroed metrics.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record one dispatched micro-batch of `samples` requests: bumps the
+    /// batch counters and the occupancy histogram. Called by the batcher
+    /// at dispatch time, so occupancy reflects what `forward_block`
+    /// actually executes.
+    pub fn record_batch(&self, samples: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_samples.fetch_add(samples as u64, Ordering::Relaxed);
+        let b = (63 - (samples.max(1) as u64).leading_zeros() as usize).min(OCC_BUCKETS - 1);
+        self.occ_hist[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Batch-occupancy histogram counts: entry b is the number of batches
+    /// whose sample count fell in [2^b, 2^(b+1)) (last bucket open-ended).
+    pub fn occupancy_counts(&self) -> [u64; OCC_BUCKETS] {
+        let mut out = [0u64; OCC_BUCKETS];
+        for (o, c) in out.iter_mut().zip(&self.occ_hist) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Approximate occupancy quantile: the lower edge (2^b) of the bucket
+    /// containing the q-th *smallest* batch — e.g. `occ p50 16` means the
+    /// median dispatched batch carried between 16 and 31 samples.
+    pub fn occupancy_quantile(&self, q: f64) -> u64 {
+        let counts = self.occupancy_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << b;
+            }
+        }
+        1u64 << (OCC_BUCKETS - 1)
     }
 
     /// Record one request→response latency.
@@ -80,11 +127,12 @@ impl Metrics {
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {} resp {} batches {} fill {:.1} lat mean {:.0}µs p50 {}µs p99 {}µs",
+            "req {} resp {} batches {} fill {:.1} occ p50 {} lat mean {:.0}µs p50 {}µs p99 {}µs",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_fill(),
+            self.occupancy_quantile(0.5),
             self.mean_latency_us(),
             self.latency_quantile_us(0.5),
             self.latency_quantile_us(0.99),
@@ -125,5 +173,23 @@ mod tests {
         m.batches.fetch_add(2, Ordering::Relaxed);
         m.batched_samples.fetch_add(10, Ordering::Relaxed);
         assert_eq!(m.mean_batch_fill(), 5.0);
+    }
+
+    #[test]
+    fn occupancy_histogram() {
+        let m = Metrics::new();
+        assert_eq!(m.occupancy_quantile(0.5), 0);
+        for n in [1usize, 1, 16, 16, 16, 2000] {
+            m.record_batch(n);
+        }
+        assert_eq!(m.batches.load(Ordering::Relaxed), 6);
+        assert_eq!(m.batched_samples.load(Ordering::Relaxed), 2050);
+        let counts = m.occupancy_counts();
+        assert_eq!(counts[0], 2); // the two singletons
+        assert_eq!(counts[4], 3); // the three 16s
+        assert_eq!(counts[10], 1); // 2000 clamps into the open last bucket
+        assert_eq!(m.occupancy_quantile(0.5), 16);
+        assert!(m.occupancy_quantile(1.0) >= 1024);
+        assert!(m.summary().contains("occ p50"));
     }
 }

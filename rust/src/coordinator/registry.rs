@@ -176,6 +176,38 @@ impl ModelRegistry {
         }
     }
 
+    /// Classify a whole micro-batch on a named model (None → default)
+    /// through its batching server — the registry's batched entry point.
+    /// Every sample is length-checked up front (one bad request must not
+    /// poison the batch), then the server coalesces the submissions and
+    /// the worker executes them through the engine's `forward_block`
+    /// path. Responses come back in request order.
+    pub fn classify_batch(
+        &self,
+        model: Option<&str>,
+        samples: Vec<Vec<u8>>,
+    ) -> Result<Vec<Response>> {
+        let name = match model.or(self.default_model.as_deref()) {
+            Some(n) => n,
+            None => bail!("registry is empty"),
+        };
+        match self.entries.get(name) {
+            Some(e) => {
+                for (i, s) in samples.iter().enumerate() {
+                    if s.len() != e.info.input_len {
+                        bail!(
+                            "model '{name}' expects {} pixels, sample {i} has {}",
+                            e.info.input_len,
+                            s.len()
+                        );
+                    }
+                }
+                e.server.classify_batch(samples)
+            }
+            None => bail!("unknown model '{name}'"),
+        }
+    }
+
     /// Registered models, sorted by name.
     pub fn models(&self) -> Vec<&ModelInfo> {
         let mut v: Vec<&ModelInfo> = self.entries.values().map(|e| &e.info).collect();
@@ -267,6 +299,33 @@ mod tests {
         let c = reg.classify(None, pixels).unwrap();
         assert_eq!(c.class, b.class);
         assert!(reg.summary().contains("[m1]"));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn classify_batch_routes_and_validates() {
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        reg.register_quant("csr", quant_mlp(Activation::Relu, 8), EngineKind::Csr, None)
+            .unwrap();
+        reg.register_quant("bin", quant_mlp(Activation::BSign, 9), EngineKind::Binary, None)
+            .unwrap();
+        let mut rng = Rng::new(10);
+        let samples: Vec<Vec<u8>> =
+            (0..12).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        for model in [None, Some("csr"), Some("bin")] {
+            let got = reg.classify_batch(model, samples.clone()).unwrap();
+            assert_eq!(got.len(), 12);
+            // batched and scalar serving agree per sample
+            for (s, r) in samples.iter().zip(&got) {
+                let scalar = reg.classify(model, s.clone()).unwrap();
+                assert_eq!(r.class, scalar.class);
+            }
+        }
+        // one bad length rejects the whole batch before any submission
+        let mut bad = samples.clone();
+        bad[7] = vec![0u8; 3];
+        assert!(reg.classify_batch(Some("csr"), bad).is_err());
+        assert!(reg.classify_batch(Some("nope"), samples).is_err());
         reg.shutdown();
     }
 

@@ -40,6 +40,22 @@ impl Router {
         }
     }
 
+    /// Classify a whole micro-batch on a named route (None → default).
+    /// The samples are coalesced by the route's batcher and drained
+    /// through the engine's batch-fused path in as few weight-structure
+    /// traversals as the dispatch windows allow.
+    pub fn classify_batch(
+        &self,
+        route: Option<&str>,
+        samples: Vec<Vec<u8>>,
+    ) -> Result<Vec<Response>> {
+        let name = route.unwrap_or(&self.default_route);
+        match self.routes.get(name) {
+            Some(s) => s.classify_batch(samples),
+            None => bail!("unknown route '{name}'"),
+        }
+    }
+
     /// Route names.
     pub fn routes(&self) -> Vec<&str> {
         self.routes.keys().map(|s| s.as_str()).collect()

@@ -5,6 +5,11 @@
 //! oldest has waited `max_wait`), and a worker pool executing an
 //! [`Engine`]. std::thread + mpsc (tokio is unavailable in this offline
 //! environment; the request path is CPU-bound anyway).
+//!
+//! Workers hand each dispatched micro-batch to
+//! [`Engine::classify_batch`] in one call, so the CSR and binary engines
+//! execute it through their batch-fused `forward_block` kernels — the
+//! weight structure is traversed once per batch, not once per request.
 
 use super::engine::Engine;
 use super::metrics::Metrics;
@@ -122,6 +127,40 @@ impl Server {
             .map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Submit a whole micro-batch and wait for every response, in request
+    /// order. The samples land on the admission queue back to back, so
+    /// the batcher coalesces them into full dispatch batches that the
+    /// worker drains through the engine's batch-fused `forward_block`
+    /// path in single weight-structure traversals.
+    ///
+    /// Backpressure: if the admission queue fills mid-batch (batch larger
+    /// than `queue_cap`, or racing concurrent submitters), the samples
+    /// already admitted are still awaited — never abandoned with their
+    /// results computed and discarded — before the error is returned.
+    pub fn classify_batch(&self, samples: Vec<Vec<u8>>) -> Result<Vec<Response>> {
+        let mut rxs = Vec::with_capacity(samples.len());
+        for s in samples {
+            match self.submit(s) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => {
+                    // drain what was admitted so no in-flight work is
+                    // silently thrown away, then report the admission error
+                    for rx in rxs {
+                        let _ = rx.recv();
+                    }
+                    return Err(e.context("micro-batch admission failed partway"));
+                }
+            }
+        }
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("server dropped request"))?
+                    .map_err(|e| anyhow::anyhow!(e))
+            })
+            .collect()
+    }
+
     /// Shared metrics.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
@@ -179,19 +218,13 @@ fn batcher_loop(
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
                     // flush what we have, then exit
-                    metrics.batches.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .batched_samples
-                        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    metrics.record_batch(batch.len());
                     let _ = btx.send(batch);
                     break 'outer;
                 }
             }
         }
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .batched_samples
-            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        metrics.record_batch(batch.len());
         if btx.send(batch).is_err() {
             return;
         }
@@ -316,6 +349,28 @@ mod tests {
         assert!(m.batches.load(Ordering::Relaxed) >= 10);
         // mean fill can never exceed max_batch
         assert!(m.mean_batch_fill() <= 4.0 + 1e-9);
+        server.shutdown();
+    }
+
+    #[test]
+    fn classify_batch_answers_in_order() {
+        let engine = float_engine(9);
+        let mut rng = Rng::new(10);
+        let samples: Vec<Vec<u8>> =
+            (0..23).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let direct = engine.classify_batch(&views).unwrap();
+
+        let server = Server::start(float_engine(9), ServerConfig::default());
+        let got = server.classify_batch(samples).unwrap();
+        assert_eq!(got.len(), 23);
+        for (r, &want) in got.iter().zip(&direct) {
+            assert_eq!(r.class, want);
+        }
+        // every dispatched batch lands in the occupancy histogram
+        let m = server.metrics();
+        let occ_total: u64 = m.occupancy_counts().iter().sum();
+        assert_eq!(occ_total, m.batches.load(Ordering::Relaxed));
         server.shutdown();
     }
 

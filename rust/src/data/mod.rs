@@ -108,7 +108,7 @@ impl Dataset {
 /// Synthetic glyph dataset, mirroring `python/compile/data.py`: 10
 /// digit-like 7×5 glyph templates rendered into h×w with random shift and
 /// noise. Good enough to exercise every inference/quantization code path
-/// without network access (see DESIGN.md §3 substitutions).
+/// without network access (see docs/ARCHITECTURE.md §3 substitutions).
 pub fn synth_glyphs(n: usize, h: usize, w: usize, seed: u64) -> Dataset {
     // 7x5 bitmap font for digits 0-9
     const GLYPHS: [[u8; 7]; 10] = [

@@ -2,12 +2,17 @@
 //!
 //! Full-system reproduction of V. Liguori, *"Pyramid Vector Quantization
 //! for Deep Learning"* (2017): PVQ weight quantization, integer & binary
-//! PVQ inference engines, weight compression codecs, hardware cycle
+//! PVQ inference engines with batch-fused serving kernels
+//! ([`nn::batch`]), weight compression codecs, hardware cycle
 //! simulators, and a batching inference coordinator that serves both
 //! AOT-compiled XLA graphs (via PJRT) and the pure-integer PVQ engines.
 //!
-//! See `DESIGN.md` for the module inventory and the paper-experiment index,
-//! and `examples/quickstart.rs` for a five-minute tour.
+//! See `docs/ARCHITECTURE.md` for the module inventory, data-flow
+//! diagram, and the paper-experiment index; `docs/PVQM_FORMAT.md` for
+//! the normative `.pvqm` container spec; and `examples/quickstart.rs`
+//! for a five-minute tour.
+#![warn(missing_docs)]
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod artifact;
 pub mod compress;

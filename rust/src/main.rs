@@ -55,12 +55,44 @@ fn artifacts_dir(flags: &HashMap<String, String>) -> PathBuf {
 fn load_net(flags: &HashMap<String, String>) -> Result<(ModelSpec, Model, Dataset)> {
     let (spec, model) = load_or_synth(flags)?;
     let dir = artifacts_dir(flags);
-    let dataset = if spec.input_shape == vec![784] {
-        Dataset::load(&dir.join("mnist_test.bin"))?
+    let path = if spec.input_shape == vec![784] {
+        dir.join("mnist_test.bin")
     } else {
-        Dataset::load(&dir.join("cifar_test.bin"))?
+        dir.join("cifar_test.bin")
+    };
+    let dataset = if !path.exists() && flags.contains_key("synth") {
+        // --synth extends to the dataset: a deterministic glyph set with
+        // the spec's geometry, so eval/serve run without `make artifacts`
+        synth_dataset(&spec)?
+    } else {
+        Dataset::load(&path)?
     };
     Ok((spec, model, dataset))
+}
+
+/// Deterministic synthetic dataset matching a spec's input geometry
+/// (glyph plane replicated across channels for CNN shapes).
+fn synth_dataset(spec: &ModelSpec) -> Result<Dataset> {
+    let (h, w, c) = match spec.input_shape.as_slice() {
+        [f] => {
+            let side = (*f as f64).sqrt().round() as usize;
+            if side * side != *f {
+                bail!("--synth dataset needs a square ([n²]) or [h,w,c] input, got [{f}]");
+            }
+            (side, side, 1)
+        }
+        [h, w, c] => (*h, *w, *c),
+        other => bail!("unsupported input shape {other:?}"),
+    };
+    let d = pvqnet::data::synth_glyphs(512, h, w, 99);
+    if c == 1 {
+        return Ok(d);
+    }
+    let mut pixels = Vec::with_capacity(d.pixels.len() * c);
+    for &p in &d.pixels {
+        pixels.extend(std::iter::repeat(p).take(c));
+    }
+    Ok(Dataset { c, pixels, ..d })
 }
 
 fn ratios_from_flags(flags: &HashMap<String, String>, spec: &ModelSpec) -> Result<Vec<f64>> {
@@ -156,6 +188,33 @@ fn load_or_synth(flags: &HashMap<String, String>) -> Result<(ModelSpec, Model)> 
     }
 }
 
+/// Batched-serving knobs shared by both `serve` modes: `--max-batch N`
+/// (dispatch threshold), `--max-wait-us N` (oldest-request deadline),
+/// `--workers N` (engine threads).
+fn server_cfg(flags: &HashMap<String, String>) -> Result<ServerConfig> {
+    let mut cfg = ServerConfig { queue_cap: 4096, ..Default::default() };
+    if let Some(v) = flags.get("max-batch") {
+        cfg.max_batch = v.parse().context("parse --max-batch")?;
+        if cfg.max_batch == 0 {
+            bail!("--max-batch must be ≥ 1");
+        }
+    }
+    if let Some(v) = flags.get("max-wait-us") {
+        cfg.max_wait = Duration::from_micros(v.parse().context("parse --max-wait-us")?);
+    }
+    if let Some(v) = flags.get("workers") {
+        cfg.workers = v.parse().context("parse --workers")?;
+        if cfg.workers == 0 {
+            bail!("--workers must be ≥ 1");
+        }
+    }
+    // the serve loops submit max_batch-sized waves through the bounded
+    // admission queue; keep the queue at least that deep so a large
+    // --max-batch can never trip the backpressure error mid-wave
+    cfg.queue_cap = cfg.queue_cap.max(cfg.max_batch);
+    Ok(cfg)
+}
+
 fn cmd_pack(flags: &HashMap<String, String>) -> Result<()> {
     let (spec, model) = load_or_synth(flags)?;
     let ratios = ratios_from_flags(flags, &spec)?;
@@ -184,10 +243,12 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 /// Registry serving: load every artifact, spread synthetic traffic
-/// round-robin over the models, report per-model throughput/latency.
+/// round-robin over the models in micro-batch waves (the batched default
+/// path), report per-model throughput/latency/occupancy.
 fn cmd_serve_models(flags: &HashMap<String, String>, models: &str) -> Result<()> {
     let paths: Vec<PathBuf> = models.split(',').map(|s| PathBuf::from(s.trim())).collect();
-    let cfg = ServerConfig { queue_cap: 4096, ..Default::default() };
+    let cfg = server_cfg(flags)?;
+    let wave = cfg.max_batch;
     let mut reg = ModelRegistry::load(&paths, cfg)?;
     if let Some(d) = flags.get("default") {
         reg.set_default(d)?;
@@ -212,17 +273,26 @@ fn cmd_serve_models(flags: &HashMap<String, String>, models: &str) -> Result<()>
     println!("default route: {}", default.as_deref().unwrap_or("(none)"));
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
-    for i in 0..n_req {
-        // every 4th request exercises the default route (no model named),
-        // the rest round-robin by explicit name
-        let which = i % names.len();
-        let (route, len) = if i % 4 == 0 {
+    let mut served = 0usize;
+    let mut wave_i = 0usize;
+    while served < n_req {
+        // every 4th wave exercises the default route (no model named),
+        // the rest round-robin by explicit name; each wave is submitted
+        // as one micro-batch so the batcher dispatches it to
+        // forward_block in as few traversals as possible
+        let which = wave_i % names.len();
+        let (route, len) = if wave_i % 4 == 0 {
             (None, default_len)
         } else {
             (Some(names[which].as_str()), lens[which])
         };
-        let pixels: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
-        reg.classify(route, pixels)?;
+        let n = wave.min(n_req - served);
+        let samples: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        reg.classify_batch(route, samples)?;
+        served += n;
+        wave_i += 1;
     }
     let dt = t0.elapsed();
     println!(
@@ -244,30 +314,35 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let ratios = ratios_from_flags(flags, &spec)?;
     let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
     let q = quantize(&model, &ratios, RhoMode::Norm)?;
+    let compiled = pvqnet::nn::CompiledQuantModel::compile(&q.quant_model)?;
     let engines = vec![
         ("float".to_string(), Engine::Float(Arc::new(model))),
-        ("pvq".to_string(), Engine::PvqInt(Arc::new(q.quant_model))),
+        (
+            "pvq".to_string(),
+            Engine::PvqCompiled(Arc::new(compiled), spec.input_shape.clone()),
+        ),
     ];
-    let router = Router::new(
-        engines,
-        "pvq",
-        ServerConfig {
-            max_batch: 32,
-            max_wait: Duration::from_millis(2),
-            workers: 1,
-            queue_cap: 4096,
-        },
-    )?;
+    let cfg = server_cfg(flags)?;
+    let wave = cfg.max_batch;
+    let router = Router::new(engines, "pvq", cfg)?;
     println!("serving {n_req} requests against net {} (routes: float, pvq)", spec.name);
     let t0 = std::time::Instant::now();
     let mut correct = 0usize;
-    for i in 0..n_req {
-        let s = data.sample(i % data.n).to_vec();
-        let route = if i % 4 == 0 { Some("float") } else { None };
-        let resp = router.classify(route, s)?;
-        if resp.class == data.labels[i % data.n] as usize {
-            correct += 1;
+    let mut served = 0usize;
+    let mut wave_i = 0usize;
+    while served < n_req {
+        // micro-batch waves through the batched default path
+        let n = wave.min(n_req - served);
+        let idxs: Vec<usize> = (0..n).map(|j| (served + j) % data.n).collect();
+        let samples: Vec<Vec<u8>> = idxs.iter().map(|&i| data.sample(i).to_vec()).collect();
+        let route = if wave_i % 4 == 0 { Some("float") } else { None };
+        for (&i, resp) in idxs.iter().zip(router.classify_batch(route, samples)?.iter()) {
+            if resp.class == data.labels[i] as usize {
+                correct += 1;
+            }
         }
+        served += n;
+        wave_i += 1;
     }
     let dt = t0.elapsed();
     println!(
@@ -315,7 +390,9 @@ fn main() -> Result<()> {
                    eval:    --limit N\n\
                    pack:    --out FILE.pvqm  --synth [--seed N]   (synthetic weights)\n\
                    inspect: --file FILE.pvqm\n\
-                   serve:   --requests N | --models a.pvqm,b.pvqm [--default NAME]"
+                   serve:   --requests N | --models a.pvqm,b.pvqm [--default NAME]\n\
+                            batching knobs: --max-batch N (default 32)\n\
+                            --max-wait-us N (default 2000)  --workers N (default 1)"
             );
         }
         other => bail!("unknown command '{other}' (try `pvqnet help`)"),

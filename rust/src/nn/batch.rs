@@ -1,0 +1,292 @@
+//! Batch-fused activation panels for weight-stationary inference.
+//!
+//! The paper's engines turn a dot product into adds/subs over a *fixed*
+//! weight structure (CSR pulse lists, packed sign bitplanes). Serving one
+//! request at a time walks that structure once per request, so the
+//! dominant cost — traversing the weights — is paid `B` times for a
+//! micro-batch of `B`. The batched kernels invert the loop nest: the
+//! weight structure is traversed **once** and every tap updates `B`
+//! accumulators ("weight-stationary" reuse, the same trick the follow-up
+//! PVQ serving work leans on).
+//!
+//! Two panel types carry the activations:
+//!
+//! * [`ActivationBlock`] — a column-major `B×N` integer panel: the `B`
+//!   lane values of feature `i` are contiguous, so the per-tap inner loop
+//!   `acc[s] += w · lane[s]` is a unit-stride sweep the compiler can
+//!   vectorize.
+//! * [`BitBlock`] — the ±1 counterpart for the binary popcount engine:
+//!   for each 64-bit mask word, the `B` packed activation words are
+//!   contiguous, so one weight-mask load serves `B` AND+popcounts.
+//!
+//! The batched forward passes live with their engines —
+//! [`crate::nn::csr_engine::CompiledQuantModel::forward_block`] and
+//! [`crate::nn::binary::BinaryNet::forward_block_u8`] — and are
+//! **bitwise identical** to `B` independent scalar passes: both engines
+//! accumulate in `i64` in the same per-row tap order as their scalar
+//! paths, so there is no floating-point reassociation to worry about
+//! (property-tested in `tests/batch_equivalence.rs`).
+//!
+//! # Example
+//!
+//! ```
+//! use pvqnet::nn::batch::ActivationBlock;
+//!
+//! // two samples of four features each
+//! let block = ActivationBlock::from_samples_u8(&[&[1, 2, 3, 4], &[5, 6, 7, 8]]).unwrap();
+//! assert_eq!((block.batch(), block.features()), (2, 4));
+//! // column-major: the per-feature lane holds both samples' values
+//! assert_eq!(block.lane(2), &[3, 7]);
+//! // rows recover the original samples
+//! assert_eq!(block.row(1), vec![5, 6, 7, 8]);
+//! ```
+
+use anyhow::{bail, Result};
+
+/// A column-major `B×N` panel of integer activations: `lane(i)` holds the
+/// `B` values of feature `i` contiguously. This is the batched analogue of
+/// one [`crate::nn::tensor::ITensor`] per request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActivationBlock {
+    batch: usize,
+    features: usize,
+    /// `data[i*batch + s]` = feature `i` of sample `s`.
+    pub(crate) data: Vec<i64>,
+}
+
+impl ActivationBlock {
+    /// Zero-filled panel.
+    pub fn zeros(batch: usize, features: usize) -> Self {
+        ActivationBlock { batch, features, data: vec![0; batch * features] }
+    }
+
+    /// Shared validate-and-transpose core of the row constructors.
+    fn pack_rows<T: Copy + Into<i64>, R: AsRef<[T]>>(rows: &[R]) -> Result<Self> {
+        let batch = rows.len();
+        if batch == 0 {
+            bail!("empty micro-batch");
+        }
+        let features = rows[0].as_ref().len();
+        let mut data = vec![0i64; batch * features];
+        for (s, row) in rows.iter().enumerate() {
+            let row = row.as_ref();
+            if row.len() != features {
+                bail!(
+                    "ragged micro-batch: sample {s} has {} features, expected {features}",
+                    row.len()
+                );
+            }
+            for (i, &v) in row.iter().enumerate() {
+                data[i * batch + s] = v.into();
+            }
+        }
+        Ok(ActivationBlock { batch, features, data })
+    }
+
+    /// Pack a micro-batch of u8 samples (the serving path's request
+    /// payloads). Errors on an empty batch or ragged sample lengths.
+    pub fn from_samples_u8(samples: &[&[u8]]) -> Result<Self> {
+        Self::pack_rows(samples)
+    }
+
+    /// Pack row-major i64 samples (one `Vec` per sample). Errors on an
+    /// empty batch or ragged lengths.
+    pub fn from_rows(rows: &[Vec<i64>]) -> Result<Self> {
+        Self::pack_rows(rows)
+    }
+
+    /// Samples in the panel.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Features per sample.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// The `B` contiguous values of feature `i` (one per sample).
+    pub fn lane(&self, i: usize) -> &[i64] {
+        &self.data[i * self.batch..(i + 1) * self.batch]
+    }
+
+    /// Mutable lane of feature `i`.
+    pub fn lane_mut(&mut self, i: usize) -> &mut [i64] {
+        &mut self.data[i * self.batch..(i + 1) * self.batch]
+    }
+
+    /// Extract sample `s` as a row-major vector (the scalar engines'
+    /// layout) — used to hand per-sample results back to requests.
+    pub fn row(&self, s: usize) -> Vec<i64> {
+        (0..self.features).map(|i| self.data[i * self.batch + s]).collect()
+    }
+
+    /// Per-sample argmax over the panel (logit readout for a batch).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.batch)
+            .map(|s| {
+                let mut best = 0usize;
+                for i in 1..self.features {
+                    if self.data[i * self.batch + s] > self.data[best * self.batch + s] {
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+/// A batch of ±1 activation vectors, bit-packed for the popcount engine:
+/// bit `i` of sample `s` is set ⇔ feature `i` is +1. Word-major layout —
+/// for 64-feature word `w`, the `B` sample words are contiguous at
+/// `words[w*batch + s]`, so one weight-mask load is ANDed against the
+/// whole batch. The batched analogue of [`crate::nn::binary::BitVec`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitBlock {
+    /// Logical features per sample.
+    len: usize,
+    batch: usize,
+    /// `words[w*batch + s]` = 64-bit plane `w` of sample `s`, LSB-first.
+    pub(crate) words: Vec<u64>,
+}
+
+impl BitBlock {
+    /// Pack the signs of a column-major pre-activation panel
+    /// (`vals[i*batch + s]`, `features × batch` values): bit set ⇔
+    /// value ≥ 0 — exactly the scalar engine's bsign convention.
+    pub fn from_signs(vals: &[i64], features: usize, batch: usize) -> Self {
+        assert_eq!(vals.len(), features * batch, "panel shape mismatch");
+        let nwords = features.div_ceil(64);
+        let mut words = vec![0u64; nwords * batch];
+        for i in 0..features {
+            let (w, bit) = (i / 64, i % 64);
+            for s in 0..batch {
+                if vals[i * batch + s] >= 0 {
+                    words[w * batch + s] |= 1 << bit;
+                }
+            }
+        }
+        BitBlock { len: features, batch, words }
+    }
+
+    /// Pack row-major ±1 samples. Errors on an empty batch, ragged
+    /// lengths, or any non-±1 value.
+    pub fn from_pm1_rows(rows: &[Vec<i64>]) -> Result<Self> {
+        let batch = rows.len();
+        if batch == 0 {
+            bail!("empty micro-batch");
+        }
+        let len = rows[0].len();
+        let nwords = len.div_ceil(64);
+        let mut words = vec![0u64; nwords * batch];
+        for (s, row) in rows.iter().enumerate() {
+            if row.len() != len {
+                bail!("ragged micro-batch: sample {s} has {} features, expected {len}", row.len());
+            }
+            for (i, &v) in row.iter().enumerate() {
+                match v {
+                    1 => words[(i / 64) * batch + s] |= 1 << (i % 64),
+                    -1 => {}
+                    _ => bail!("non-±1 activation {v} at sample {s} feature {i}"),
+                }
+            }
+        }
+        Ok(BitBlock { len, batch, words })
+    }
+
+    /// Samples in the block.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Features per sample.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the block has no features.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The `B` contiguous sample words of 64-bit plane `w`.
+    pub fn plane(&self, w: usize) -> &[u64] {
+        &self.words[w * self.batch..(w + 1) * self.batch]
+    }
+
+    /// Unpack sample `s` to ±1 values (test/debug readout).
+    pub fn row_pm1(&self, s: usize) -> Vec<i64> {
+        (0..self.len)
+            .map(|i| {
+                if self.words[(i / 64) * self.batch + s] >> (i % 64) & 1 == 1 {
+                    1
+                } else {
+                    -1
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_roundtrip_and_lanes() {
+        let a: &[u8] = &[10, 20, 30];
+        let b: &[u8] = &[1, 2, 3];
+        let blk = ActivationBlock::from_samples_u8(&[a, b]).unwrap();
+        assert_eq!(blk.batch(), 2);
+        assert_eq!(blk.features(), 3);
+        assert_eq!(blk.lane(0), &[10, 1]);
+        assert_eq!(blk.lane(2), &[30, 3]);
+        assert_eq!(blk.row(0), vec![10, 20, 30]);
+        assert_eq!(blk.row(1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn block_rejects_empty_and_ragged() {
+        assert!(ActivationBlock::from_samples_u8(&[]).is_err());
+        let a: &[u8] = &[1, 2];
+        let b: &[u8] = &[1, 2, 3];
+        assert!(ActivationBlock::from_samples_u8(&[a, b]).is_err());
+        assert!(ActivationBlock::from_rows(&[vec![1], vec![1, 2]]).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_matches_scalar() {
+        let blk = ActivationBlock::from_rows(&[vec![5, -1, 9], vec![7, 7, 2]]).unwrap();
+        // ties break on lowest index, like tensor::argmax_i64
+        assert_eq!(blk.argmax_rows(), vec![2, 0]);
+    }
+
+    #[test]
+    fn bitblock_pm1_roundtrip_odd_width() {
+        // 70 features: crosses a word boundary, not a multiple of 64
+        let rows: Vec<Vec<i64>> = (0..3)
+            .map(|s| (0..70).map(|i| if (i + s) % 3 == 0 { 1 } else { -1 }).collect())
+            .collect();
+        let blk = BitBlock::from_pm1_rows(&rows).unwrap();
+        assert_eq!(blk.len(), 70);
+        assert_eq!(blk.batch(), 3);
+        for (s, row) in rows.iter().enumerate() {
+            assert_eq!(&blk.row_pm1(s), row);
+        }
+    }
+
+    #[test]
+    fn bitblock_rejects_non_pm1() {
+        assert!(BitBlock::from_pm1_rows(&[vec![1, 0, -1]]).is_err());
+        assert!(BitBlock::from_pm1_rows(&[]).is_err());
+    }
+
+    #[test]
+    fn from_signs_matches_bsign_convention() {
+        // features=2, batch=2, column-major: [f0s0, f0s1, f1s0, f1s1]
+        let blk = BitBlock::from_signs(&[-3, 0, 7, -1], 2, 2);
+        assert_eq!(blk.row_pm1(0), vec![-1, 1]); // -3 < 0, 7 ≥ 0
+        assert_eq!(blk.row_pm1(1), vec![1, -1]); // 0 ≥ 0 (bsign maps 0 → +1)
+    }
+}

@@ -126,6 +126,49 @@ impl BinaryDense {
         }
         BitVec { len: self.output, words }
     }
+
+    /// Batch-fused forward: every per-value weight mask is traversed
+    /// **once**, each mask word AND/popcount-ing against the `B` packed
+    /// activation words of that 64-feature plane. Returns pre-activations
+    /// as a column-major `output×B` panel (`y[o*B + s]`). Bitwise
+    /// identical to `B` independent [`BinaryDense::forward`] calls.
+    pub fn forward_block(&self, x: &crate::nn::batch::BitBlock) -> Vec<i64> {
+        debug_assert_eq!(x.len(), self.input);
+        let b = x.batch();
+        let mut y = vec![0i64; self.output * b];
+        let mut plus = vec![0u32; b];
+        for (o, row) in self.rows.iter().enumerate() {
+            let dst = &mut y[o * b..(o + 1) * b];
+            dst.fill(row.bias as i64);
+            for (v, mask, pc) in &row.groups {
+                plus.fill(0);
+                for (w, &m) in mask.iter().enumerate() {
+                    if m == 0 {
+                        continue;
+                    }
+                    let src = x.plane(w);
+                    for (p, &xw) in plus.iter_mut().zip(src) {
+                        *p += (m & xw).count_ones();
+                    }
+                }
+                let (v, pc) = (*v as i64, *pc as i64);
+                for (acc, &p) in dst.iter_mut().zip(plus.iter()) {
+                    *acc += v * (2 * p as i64 - pc);
+                }
+            }
+        }
+        y
+    }
+
+    /// Batched [`BinaryDense::forward_bsign`]: bsign the block
+    /// pre-activations and repack for the next popcount layer.
+    pub fn forward_bsign_block(
+        &self,
+        x: &crate::nn::batch::BitBlock,
+    ) -> crate::nn::batch::BitBlock {
+        let y = self.forward_block(x);
+        crate::nn::batch::BitBlock::from_signs(&y, self.output, x.batch())
+    }
 }
 
 /// The paper's binary maxpool (eq. 20): with +1 encoded as a set bit,
@@ -234,6 +277,58 @@ impl BinaryNet {
     /// Classify one u8 sample.
     pub fn classify_u8(&self, pixels: &[u8]) -> Result<usize> {
         Ok(crate::nn::tensor::argmax_i64(&self.forward_u8(pixels)?))
+    }
+
+    /// Batch-fused forward for a whole micro-batch of u8 samples: the
+    /// first (integer) layer sweeps its dense weight rows once across a
+    /// column-major activation panel, then the bit-packed layers run on
+    /// [`crate::nn::batch::BitBlock`]s so every weight mask is loaded once
+    /// per batch. Per-sample logits are bitwise identical to
+    /// [`BinaryNet::forward_u8`] (same `i64` accumulation order;
+    /// property-tested in `tests/batch_equivalence.rs`).
+    pub fn forward_block_u8(&self, samples: &[&[u8]]) -> Result<Vec<Vec<i64>>> {
+        use crate::nn::batch::{ActivationBlock, BitBlock};
+        let block = ActivationBlock::from_samples_u8(samples)?;
+        if block.features() != self.input_len {
+            bail!("expected {} pixels per sample, got {}", self.input_len, block.features());
+        }
+        let b = block.batch();
+
+        // first layer: integer dense (u8 pixels are not ±1), weight-stationary
+        let mut h = vec![0i64; self.first_out * b];
+        for o in 0..self.first_out {
+            let dst = &mut h[o * b..(o + 1) * b];
+            dst.fill(self.first_b[o] as i64);
+            let row = &self.first_w[o * self.input_len..(o + 1) * self.input_len];
+            for (i, &wv) in row.iter().enumerate() {
+                if wv != 0 {
+                    let wv = wv as i64;
+                    let src = block.lane(i);
+                    for (acc, &x) in dst.iter_mut().zip(src) {
+                        *acc += wv * x;
+                    }
+                }
+            }
+        }
+
+        // bsign + popcount chain on packed planes
+        let mut bits = BitBlock::from_signs(&h, self.first_out, b);
+        for layer in &self.hidden {
+            bits = layer.forward_bsign_block(&bits);
+        }
+        let y = self.last.forward_block(&bits);
+        Ok((0..b)
+            .map(|s| (0..self.outputs).map(|o| y[o * b + s]).collect())
+            .collect())
+    }
+
+    /// Classify a micro-batch through [`BinaryNet::forward_block_u8`].
+    pub fn classify_block_u8(&self, samples: &[&[u8]]) -> Result<Vec<usize>> {
+        Ok(self
+            .forward_block_u8(samples)?
+            .iter()
+            .map(|logits| crate::nn::tensor::argmax_i64(logits))
+            .collect())
     }
 }
 
@@ -349,6 +444,41 @@ mod tests {
             let got = net.forward_u8(&pix).unwrap();
             assert_eq!(got, want);
         }
+    }
+
+    #[test]
+    fn binary_net_block_matches_scalar() {
+        use crate::nn::layers::Model;
+        use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+        use crate::pvq::RhoMode;
+        use crate::quant::quantize;
+
+        // 70 inputs / 65 hidden: force partial trailing bit-plane words
+        let spec = ModelSpec {
+            name: "binblk".into(),
+            input_shape: vec![70],
+            layers: vec![
+                LayerSpec::Dense { input: 70, output: 65, act: Activation::BSign },
+                LayerSpec::Dense { input: 65, output: 33, act: Activation::BSign },
+                LayerSpec::Dense { input: 33, output: 7, act: Activation::None },
+            ],
+        };
+        let m = Model::synth(&spec, 5);
+        let qm = quantize(&m, &[2.0, 1.5, 1.0], RhoMode::Norm).unwrap().quant_model;
+        let net = BinaryNet::compile(&qm).unwrap();
+        let mut rng = Rng::new(31);
+        for b in [1usize, 3, 9] {
+            let samples: Vec<Vec<u8>> =
+                (0..b).map(|_| (0..70).map(|_| rng.below(256) as u8).collect()).collect();
+            let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+            let got = net.forward_block_u8(&views).unwrap();
+            for (s, sample) in samples.iter().enumerate() {
+                assert_eq!(got[s], net.forward_u8(sample).unwrap(), "B={b} sample {s}");
+            }
+        }
+        // ragged / wrong-length batches error out
+        assert!(net.forward_block_u8(&[&[0u8; 3]]).is_err());
+        assert!(net.forward_block_u8(&[]).is_err());
     }
 
     #[test]

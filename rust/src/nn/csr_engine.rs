@@ -12,6 +12,7 @@
 //! per position; the zero-branch predicts well there) but hoist the
 //! kernel nonzero list per output channel.
 
+use super::batch::ActivationBlock;
 use super::model::{Activation, LayerSpec};
 use super::pvq_engine::{maxpool2x2_i64, QuantModel};
 use super::tensor::{argmax_i64, ITensor};
@@ -206,6 +207,127 @@ impl CompiledQuantModel {
     pub fn classify(&self, input: &ITensor) -> usize {
         argmax_i64(&self.forward(input))
     }
+
+    /// Batch-fused, weight-stationary forward pass: each CSR row's pulse
+    /// list (and each conv tap list) is traversed **once** for the whole
+    /// micro-batch, sign-adding into a `B`-wide accumulator lane with one
+    /// multiply per tap per lane. Bitwise identical to `B` independent
+    /// [`CompiledQuantModel::forward`] calls — both paths accumulate in
+    /// `i64` in the same per-row tap order (property-tested in
+    /// `tests/batch_equivalence.rs`).
+    ///
+    /// Returns the logits as a `B×outputs` panel; read per-request rows
+    /// with [`ActivationBlock::row`].
+    pub fn forward_block(&self, input: &ActivationBlock) -> Result<ActivationBlock> {
+        let expect: usize = self.input_shape.iter().product();
+        if input.features() != expect {
+            bail!("expected {expect} features per sample, got {}", input.features());
+        }
+        let b = input.batch();
+        // the panel produced by the last compute layer; the input panel is
+        // only ever read, never copied (None = still on the caller's input)
+        let mut owned: Option<ActivationBlock> = None;
+        let mut hwc: Option<(usize, usize, usize)> = match self.input_shape.as_slice() {
+            [h, w, c] => Some((*h, *w, *c)),
+            _ => None,
+        };
+        for layer in &self.layers {
+            let cur: &ActivationBlock = owned.as_ref().unwrap_or(input);
+            match layer {
+                CompiledLayer::Dense(d) => {
+                    let mut out = ActivationBlock::zeros(b, d.output);
+                    for o in 0..d.output {
+                        let lo = d.row_ptr[o] as usize;
+                        let hi = d.row_ptr[o + 1] as usize;
+                        let dst = out.lane_mut(o);
+                        dst.fill(d.bias[o]);
+                        for t in lo..hi {
+                            let wv = d.val[t] as i64;
+                            let src = cur.lane(d.idx[t] as usize);
+                            for (acc, &x) in dst.iter_mut().zip(src) {
+                                *acc += wv * x;
+                            }
+                        }
+                        for acc in dst.iter_mut() {
+                            *acc = apply_act(*acc, d.act);
+                        }
+                    }
+                    owned = Some(out);
+                }
+                CompiledLayer::Conv(cv) => {
+                    let (h, w, cin) = match hwc {
+                        Some(dims) => dims,
+                        None => bail!("conv layer reached with flat input"),
+                    };
+                    debug_assert_eq!(cin, cv.cin);
+                    let mut out = ActivationBlock::zeros(b, h * w * cv.cout);
+                    for oy in 0..h {
+                        for ox in 0..w {
+                            let obase = (oy * w + ox) * cv.cout;
+                            for co in 0..cv.cout {
+                                let dst = out.lane_mut(obase + co);
+                                dst.fill(cv.bias[co]);
+                                for &(ky, kx, ci, wv) in &cv.taps[co] {
+                                    let iy = oy as isize + ky as isize - (cv.kh / 2) as isize;
+                                    let ix = ox as isize + kx as isize - (cv.kw / 2) as isize;
+                                    if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                                        let src = cur.lane(
+                                            ((iy as usize) * w + ix as usize) * cin + ci as usize,
+                                        );
+                                        let wv = wv as i64;
+                                        for (acc, &x) in dst.iter_mut().zip(src) {
+                                            *acc += wv * x;
+                                        }
+                                    }
+                                }
+                                for acc in dst.iter_mut() {
+                                    *acc = apply_act(*acc, cv.act);
+                                }
+                            }
+                        }
+                    }
+                    owned = Some(out);
+                    hwc = Some((h, w, cv.cout));
+                }
+                CompiledLayer::MaxPool => {
+                    let (h, w, c) = match hwc {
+                        Some(dims) => dims,
+                        None => bail!("pool layer reached with flat input"),
+                    };
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut out = ActivationBlock::zeros(b, oh * ow * c);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ci in 0..c {
+                                let dst = out.lane_mut((oy * ow + ox) * c + ci);
+                                dst.fill(i64::MIN);
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let src = cur
+                                            .lane(((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ci);
+                                        for (m, &x) in dst.iter_mut().zip(src) {
+                                            *m = (*m).max(x);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    owned = Some(out);
+                    hwc = Some((oh, ow, c));
+                }
+                CompiledLayer::Flatten => hwc = None,
+                CompiledLayer::Noop => {}
+            }
+        }
+        // a model with no compute layers degenerates to the identity
+        Ok(owned.unwrap_or_else(|| input.clone()))
+    }
+
+    /// Classify a whole micro-batch through [`CompiledQuantModel::forward_block`].
+    pub fn classify_block(&self, input: &ActivationBlock) -> Result<Vec<usize>> {
+        Ok(self.forward_block(input)?.argmax_rows())
+    }
 }
 
 #[inline(always)]
@@ -270,6 +392,38 @@ mod tests {
                 assert_eq!(got, want);
             }
         });
+    }
+
+    #[test]
+    fn forward_block_matches_scalar_mlp() {
+        use crate::nn::batch::ActivationBlock;
+        let mut rng = Rng::new(17);
+        let (d0, d1, d2) = (23, 9, 4); // deliberately odd sizes
+        let spec = ModelSpec {
+            name: "blk".into(),
+            input_shape: vec![d0],
+            layers: vec![
+                LayerSpec::Dense { input: d0, output: d1, act: Activation::Relu },
+                LayerSpec::Dense { input: d1, output: d2, act: Activation::None },
+            ],
+        };
+        let model = Model::synth(&spec, 3);
+        let q = quantize(&model, &[2.0, 1.0], RhoMode::Norm).unwrap();
+        let compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+        for b in [1usize, 5, 16] {
+            let samples: Vec<Vec<u8>> =
+                (0..b).map(|_| (0..d0).map(|_| rng.below(256) as u8).collect()).collect();
+            let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+            let block = ActivationBlock::from_samples_u8(&views).unwrap();
+            let got = compiled.forward_block(&block).unwrap();
+            for (s, sample) in samples.iter().enumerate() {
+                let want = compiled.forward(&ITensor::from_u8(&[d0], sample));
+                assert_eq!(got.row(s), want, "B={b} sample {s}");
+            }
+        }
+        // wrong feature count is rejected, not mis-indexed
+        let bad = ActivationBlock::from_samples_u8(&[&[0u8; 7]]).unwrap();
+        assert!(compiled.forward_block(&bad).is_err());
     }
 
     #[test]

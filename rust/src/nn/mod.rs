@@ -1,6 +1,8 @@
 //! Neural-network substrates: float reference engine, integer PVQ engine,
-//! bit-packed binary engine, model descriptors, weight container.
+//! bit-packed binary engine, batch-fused activation panels, model
+//! descriptors, weight container.
 
+pub mod batch;
 pub mod binary;
 pub mod csr_engine;
 pub mod layers;
@@ -9,6 +11,7 @@ pub mod pvq_engine;
 pub mod tensor;
 pub mod weights;
 
+pub use batch::{ActivationBlock, BitBlock};
 pub use binary::{BinaryDense, BinaryNet, BitVec};
 pub use layers::{classify, forward, LayerParams, Model};
 pub use model::{Activation, LayerSpec, ModelSpec};

@@ -4,7 +4,7 @@
 use anyhow::{bail, Result};
 
 /// Activation applied inside a weighted layer (the paper's eq. 12 vs 16
-//  distinction: ReLU passes ρ through; bsign absorbs it).
+/// distinction: ReLU passes ρ through; bsign absorbs it).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
     /// max(0, x): f(ρx) = ρ·f(x) — ρ propagates (integer PVQ nets).

@@ -40,6 +40,20 @@ fn rho_for(v: &[f64], y: &[i32], mode: RhoMode) -> f64 {
 }
 
 /// Layer-scale PVQ encoder (scale-round-correct), paper ρ mode.
+///
+/// ```
+/// use pvqnet::pvq::{cosine, encode};
+///
+/// let v = [0.9, -0.1, 0.45, 0.0, -0.35];
+/// let q = encode(&v, 4);
+/// // the point lies on the pyramid P(N,K): Σ|ŷᵢ| = K
+/// assert!(q.is_valid());
+/// assert_eq!(q.l1(), 4);
+/// // signs follow the input, the largest component gets the most pulses
+/// assert_eq!(q.components, vec![2, 0, 1, 0, -1]);
+/// // ρ·ŷ approximates v: the quantized direction correlates strongly
+/// assert!(cosine(&v, &q) > 0.9);
+/// ```
 pub fn encode(v: &[f64], k: u32) -> PvqVector {
     encode_fast(v, k, RhoMode::Norm)
 }

@@ -8,7 +8,7 @@ pub enum RhoMode {
     Norm,
     /// Least-squares optimal gain: ρ = ⟨v,ŷ⟩ / ⟨ŷ,ŷ⟩ — minimizes
     /// ‖v − ρŷ‖₂. Strictly ≤ the Norm error; offered as an ablation
-    /// (DESIGN.md experiment `ablation_rho`).
+    /// (docs/ARCHITECTURE.md experiment `ablation_rho`).
     Lsq,
 }
 

@@ -1,0 +1,253 @@
+//! Batch/scalar equivalence properties for the batch-fused kernels.
+//!
+//! The contract of `forward_block` (CSR engine) and `forward_block_u8`
+//! (binary popcount engine) is that a `B×N` panel produces **bitwise
+//! identical** results to `B` independent scalar passes. Both engines
+//! accumulate in `i64` in the same per-row tap order as their scalar
+//! paths, so the equality is exact — stronger than the ≤1-ulp bound a
+//! float accumulator would allow. The properties sweep odd shapes on
+//! purpose: B=1, B=n_threads+1, feature counts that are not a multiple
+//! of the 64-bit bit-plane width.
+
+use pvqnet::coordinator::{Engine, EngineKind, ModelRegistry, ServerConfig};
+use pvqnet::nn::batch::{ActivationBlock, BitBlock};
+use pvqnet::nn::binary::{BinaryDense, BinaryNet, BitVec};
+use pvqnet::nn::csr_engine::CompiledQuantModel;
+use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
+use pvqnet::nn::tensor::ITensor;
+use pvqnet::nn::Model;
+use pvqnet::pvq::RhoMode;
+use pvqnet::quant::quantize;
+use pvqnet::testkit::{check, Rng};
+use std::sync::Arc;
+
+/// B = one more than the machine's thread count — the "awkward" batch
+/// size the issue calls out (never a power of two on common cores).
+fn odd_batch() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4) + 1
+}
+
+fn random_samples(rng: &mut Rng, b: usize, len: usize) -> Vec<Vec<u8>> {
+    (0..b).map(|_| (0..len).map(|_| rng.below(256) as u8).collect()).collect()
+}
+
+#[test]
+fn prop_csr_mlp_block_bitwise_identical() {
+    check("csr-mlp-batch-vs-scalar", 9001, 12, |_, rng| {
+        // deliberately odd dims: not multiples of any lane width
+        let d0 = 5 + rng.below(90) as usize;
+        let d1 = 3 + rng.below(40) as usize;
+        let d2 = 2 + rng.below(9) as usize;
+        let spec = ModelSpec {
+            name: "beq".into(),
+            input_shape: vec![d0],
+            layers: vec![
+                LayerSpec::Scale(1.0 / 255.0),
+                LayerSpec::Dense { input: d0, output: d1, act: Activation::Relu },
+                LayerSpec::Dense { input: d1, output: d2, act: Activation::None },
+            ],
+        };
+        let model = Model::synth(&spec, rng.next_u64());
+        let q = quantize(&model, &[3.0, 2.0], RhoMode::Norm).unwrap();
+        let compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+        for b in [1usize, odd_batch()] {
+            let samples = random_samples(rng, b, d0);
+            let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+            let block = ActivationBlock::from_samples_u8(&views).unwrap();
+            let got = compiled.forward_block(&block).unwrap();
+            assert_eq!(got.batch(), b);
+            for (s, sample) in samples.iter().enumerate() {
+                let want = compiled.forward(&ITensor::from_u8(&[d0], sample));
+                assert_eq!(got.row(s), want, "B={b} sample {s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn csr_cnn_block_bitwise_identical() {
+    // conv + pool + flatten + dense: the full CompiledLayer alphabet
+    let spec = ModelSpec {
+        name: "beqc".into(),
+        input_shape: vec![7, 7, 2], // odd image side → floor pool
+        layers: vec![
+            LayerSpec::Scale(1.0 / 255.0),
+            LayerSpec::Conv2d { kh: 3, kw: 3, cin: 2, cout: 5, act: Activation::Relu },
+            LayerSpec::MaxPool2x2,
+            LayerSpec::Flatten,
+            LayerSpec::Dense { input: 3 * 3 * 5, output: 4, act: Activation::None },
+        ],
+    };
+    let model = Model::synth(&spec, 7);
+    let q = quantize(&model, &[1.0, 2.0], RhoMode::Norm).unwrap();
+    let compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+    let mut rng = Rng::new(8);
+    for b in [1usize, odd_batch(), 16] {
+        let samples = random_samples(&mut rng, b, 7 * 7 * 2);
+        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let block = ActivationBlock::from_samples_u8(&views).unwrap();
+        let logits = compiled.forward_block(&block).unwrap();
+        let classes = compiled.classify_block(&block).unwrap();
+        for (s, sample) in samples.iter().enumerate() {
+            let t = ITensor::from_u8(&[7, 7, 2], sample);
+            assert_eq!(logits.row(s), compiled.forward(&t), "B={b} sample {s}");
+            assert_eq!(classes[s], compiled.classify(&t), "B={b} sample {s}");
+        }
+    }
+}
+
+#[test]
+fn prop_binary_net_block_bitwise_identical() {
+    check("binary-batch-vs-scalar", 9002, 10, |_, rng| {
+        // widths straddle the 64-bit plane boundary on purpose
+        let d0 = 40 + rng.below(60) as usize; // 40..99
+        let d1 = 50 + rng.below(40) as usize; // 50..89: hidden bit-planes
+        let d2 = 30 + rng.below(40) as usize;
+        let d3 = 2 + rng.below(8) as usize;
+        let spec = ModelSpec {
+            name: "beqb".into(),
+            input_shape: vec![d0],
+            layers: vec![
+                LayerSpec::Dense { input: d0, output: d1, act: Activation::BSign },
+                LayerSpec::Dense { input: d1, output: d2, act: Activation::BSign },
+                LayerSpec::Dense { input: d2, output: d3, act: Activation::None },
+            ],
+        };
+        let model = Model::synth(&spec, rng.next_u64());
+        let qm = quantize(&model, &[2.0, 2.0, 1.0], RhoMode::Norm).unwrap().quant_model;
+        let net = BinaryNet::compile(&qm).unwrap();
+        for b in [1usize, odd_batch()] {
+            let samples = random_samples(rng, b, d0);
+            let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+            let got = net.forward_block_u8(&views).unwrap();
+            let classes = net.classify_block_u8(&views).unwrap();
+            for (s, sample) in samples.iter().enumerate() {
+                assert_eq!(got[s], net.forward_u8(sample).unwrap(), "B={b} sample {s}");
+                assert_eq!(classes[s], net.classify_u8(sample).unwrap(), "B={b} sample {s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_binary_dense_block_matches_scalar_rows() {
+    // the layer-level kernel on its own, across ±1 inputs with partial
+    // trailing words
+    check("binary-dense-block", 9003, 15, |_, rng| {
+        let input = 1 + rng.below(200) as usize;
+        let output = 1 + rng.below(30) as usize;
+        let w: Vec<i32> = (0..input * output)
+            .map(|_| match rng.below(10) {
+                0..=5 => 0,
+                6 => 1,
+                7 => -1,
+                8 => 2,
+                _ => -3,
+            })
+            .collect();
+        let bias: Vec<i32> = (0..output).map(|_| (rng.below(5) as i32) - 2).collect();
+        let bd = BinaryDense::compile(&w, &bias, input, output);
+        let b = 1 + rng.below(12) as usize;
+        let rows: Vec<Vec<i64>> = (0..b)
+            .map(|_| (0..input).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect())
+            .collect();
+        let blk = BitBlock::from_pm1_rows(&rows).unwrap();
+        let y = bd.forward_block(&blk);
+        for (s, row) in rows.iter().enumerate() {
+            let want = bd.forward(&BitVec::from_pm1(row).unwrap());
+            let got: Vec<i64> = (0..output).map(|o| y[o * b + s]).collect();
+            assert_eq!(got, want, "sample {s}");
+        }
+        // bsign chaining matches the scalar repack too
+        let chained = bd.forward_bsign_block(&blk);
+        for (s, row) in rows.iter().enumerate() {
+            let want = bd.forward_bsign(&BitVec::from_pm1(row).unwrap()).to_pm1();
+            assert_eq!(chained.row_pm1(s), want, "sample {s}");
+        }
+    });
+}
+
+#[test]
+fn engine_batched_dispatch_matches_scalar_engines() {
+    let spec = ModelSpec {
+        name: "beqe".into(),
+        input_shape: vec![33],
+        layers: vec![
+            LayerSpec::Dense { input: 33, output: 17, act: Activation::Relu },
+            LayerSpec::Dense { input: 17, output: 6, act: Activation::None },
+        ],
+    };
+    let model = Model::synth(&spec, 21);
+    let q = quantize(&model, &[2.0, 1.0], RhoMode::Norm).unwrap();
+    let compiled = Arc::new(CompiledQuantModel::compile(&q.quant_model).unwrap());
+    let engine = Engine::PvqCompiled(compiled.clone(), vec![33]);
+    let mut rng = Rng::new(22);
+    let samples = random_samples(&mut rng, odd_batch() + 16, 33);
+    let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+    let batched = engine.classify_batch(&views).unwrap();
+    for (s, sample) in samples.iter().enumerate() {
+        assert_eq!(batched[s], compiled.classify(&ITensor::from_u8(&[33], sample)));
+    }
+
+    // binary engine dispatch
+    let bspec = ModelSpec {
+        name: "beqeb".into(),
+        input_shape: vec![70],
+        layers: vec![
+            LayerSpec::Dense { input: 70, output: 65, act: Activation::BSign },
+            LayerSpec::Dense { input: 65, output: 5, act: Activation::None },
+        ],
+    };
+    let bmodel = Model::synth(&bspec, 23);
+    let bq = quantize(&bmodel, &[2.0, 1.0], RhoMode::Norm).unwrap().quant_model;
+    let net = Arc::new(BinaryNet::compile(&bq).unwrap());
+    let bengine = Engine::Binary(net.clone());
+    let bsamples = random_samples(&mut rng, 9, 70);
+    let bviews: Vec<&[u8]> = bsamples.iter().map(|s| s.as_slice()).collect();
+    let bbatched = bengine.classify_batch(&bviews).unwrap();
+    for (s, sample) in bsamples.iter().enumerate() {
+        assert_eq!(bbatched[s], net.classify_u8(sample).unwrap());
+    }
+}
+
+#[test]
+fn registry_batched_serving_matches_direct_engines() {
+    // end to end: registry → server → batcher → worker → forward_block,
+    // answers must equal the direct (unserved) engine for both engines
+    let spec = |act, name: &str| ModelSpec {
+        name: name.into(),
+        input_shape: vec![48],
+        layers: vec![
+            LayerSpec::Dense { input: 48, output: 65, act },
+            LayerSpec::Dense { input: 65, output: 7, act: Activation::None },
+        ],
+    };
+    let relu = quantize(&Model::synth(&spec(Activation::Relu, "r"), 31), &[2.0, 1.0], RhoMode::Norm)
+        .unwrap()
+        .quant_model;
+    let bsign =
+        quantize(&Model::synth(&spec(Activation::BSign, "b"), 32), &[2.0, 1.0], RhoMode::Norm)
+            .unwrap()
+            .quant_model;
+    let compiled = CompiledQuantModel::compile(&relu).unwrap();
+    let net = BinaryNet::compile(&bsign).unwrap();
+
+    let mut reg = ModelRegistry::new(ServerConfig::default());
+    reg.register_quant("csr", relu.clone(), EngineKind::Auto, None).unwrap();
+    reg.register_quant("bin", bsign.clone(), EngineKind::Auto, None).unwrap();
+    // auto-selection picked the batched engines
+    let models = reg.models();
+    assert_eq!(models[0].name, "bin");
+    assert_eq!(models[0].engine, "binary");
+    assert_eq!(models[1].engine, "pvq-csr");
+
+    let mut rng = Rng::new(33);
+    let samples = random_samples(&mut rng, 40, 48);
+    let got_csr = reg.classify_batch(Some("csr"), samples.clone()).unwrap();
+    let got_bin = reg.classify_batch(Some("bin"), samples.clone()).unwrap();
+    for (s, sample) in samples.iter().enumerate() {
+        assert_eq!(got_csr[s].class, compiled.classify(&ITensor::from_u8(&[48], sample)));
+        assert_eq!(got_bin[s].class, net.classify_u8(sample).unwrap());
+    }
+    reg.shutdown();
+}

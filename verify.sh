@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification + lint gate. Run from anywhere; executes in rust/.
+# Tier-1 verification + doc gate + lint gate. Run from anywhere; executes in rust/.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -8,6 +8,14 @@ cargo build --release
 
 echo "== cargo test -q"
 cargo test -q
+
+echo "== cargo doc --no-deps"
+# broken intra-doc links are denied in lib.rs (rustdoc::broken_intra_doc_links)
+cargo doc --no-deps
+
+echo "== cargo test --doc -q"
+# runnable doc-examples (pvq::encode, artifact, nn::batch, …) must stay green
+cargo test --doc -q
 
 echo "== cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings
