@@ -86,6 +86,7 @@ fn main() -> anyhow::Result<()> {
                 max_wait: Duration::from_millis(2),
                 workers: 1,
                 queue_cap: 4096,
+                shards: 1,
             },
         );
         let t0 = std::time::Instant::now();

@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(2),
             workers: 1,
             queue_cap: 8192,
+            shards: 1,
         },
     )?);
 

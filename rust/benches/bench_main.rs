@@ -4,10 +4,13 @@
 //!     cargo bench                       # run everything
 //!     cargo bench -- table5             # run one experiment
 //!     cargo bench -- --list             # list experiments
+//!     cargo bench -- batch shard --smoke   # CI smoke: 1 iteration each
 //!
 //! One target per paper table/figure (docs/ARCHITECTURE.md §4) plus microbenchmarks
 //! and ablations. Experiments that need trained artifacts print SKIP when
-//! `make artifacts` has not been run.
+//! `make artifacts` has not been run. `--smoke` caps every measurement at a
+//! single iteration so CI can execute the kernel benches (and still emit
+//! their `BENCH_*.json`) without paying for stable timings.
 
 use pvqnet::compress::codec_survey;
 use pvqnet::coordinator::{Engine, Server, ServerConfig};
@@ -27,7 +30,21 @@ use std::time::{Duration, Instant};
 
 // ------------------------------------------------------------------ harness
 
+/// `--smoke`: run every measured closure exactly once (CI bit-rot gate —
+/// the numbers are meaningless, the code paths and JSON outputs are not).
+static SMOKE: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+fn smoke() -> bool {
+    SMOKE.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 fn time_it<F: FnMut()>(name: &str, mut f: F) {
+    if smoke() {
+        let t0 = Instant::now();
+        f();
+        println!("  {name:<44} smoke   {:>10}  (1 run)", fmt_t(t0.elapsed().as_secs_f64()));
+        return;
+    }
     // warmup
     f();
     let mut samples = Vec::new();
@@ -58,6 +75,30 @@ fn fmt_t(s: f64) -> String {
     } else {
         format!("{:.2}s", s)
     }
+}
+
+/// Median samples/second of `f` (which processes `samples_per_call`);
+/// a single timed run under `--smoke`.
+fn throughput<F: FnMut()>(samples_per_call: usize, mut f: F) -> f64 {
+    if smoke() {
+        let t0 = Instant::now();
+        f();
+        return samples_per_call as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    }
+    f(); // warmup
+    let budget = Duration::from_millis(300);
+    let mut times = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed() < budget || times.len() < 5 {
+        let s = Instant::now();
+        f();
+        times.push(s.elapsed().as_secs_f64());
+        if times.len() >= 100 {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples_per_call as f64 / times[times.len() / 2]
 }
 
 fn have_artifacts() -> bool {
@@ -305,6 +346,7 @@ fn bench_serve() {
                 max_wait: Duration::from_micros(500),
                 workers: 1,
                 queue_cap: 8192,
+                shards: 1,
             },
         );
         let n = 300;
@@ -336,24 +378,6 @@ fn bench_batch() {
     use pvqnet::nn::batch::ActivationBlock;
     use pvqnet::nn::tensor::ITensor;
     use pvqnet::nn::{BinaryNet, CompiledQuantModel, Model};
-
-    /// Median samples/second of `f` (which processes `samples_per_call`).
-    fn throughput<F: FnMut()>(samples_per_call: usize, mut f: F) -> f64 {
-        f(); // warmup
-        let budget = Duration::from_millis(300);
-        let mut times = Vec::new();
-        let t0 = Instant::now();
-        while t0.elapsed() < budget || times.len() < 5 {
-            let s = Instant::now();
-            f();
-            times.push(s.elapsed().as_secs_f64());
-            if times.len() >= 100 {
-                break;
-            }
-        }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        samples_per_call as f64 / times[times.len() / 2]
-    }
 
     let mut rng = Rng::new(77);
     let mut entries: Vec<String> = Vec::new();
@@ -422,6 +446,75 @@ fn bench_batch() {
     let json = format!("{{\"experiment\":\"batch\",\"entries\":[{}]}}\n", entries.join(","));
     std::fs::write("BENCH_batch.json", json).unwrap();
     println!("  wrote BENCH_batch.json");
+}
+
+/// Sharded vs single-shard `forward_block`: shards ∈ {1, 2, 4, 8} ×
+/// B ∈ {16, 64} for the CSR engine (synth net A) and the binary
+/// popcount engine (synth net C). The shard planner splits each layer's
+/// output rows over scoped worker threads; results stay bitwise
+/// identical (tests/batch_equivalence.rs), so this sweep measures pure
+/// scaling. Runs on synthetic weights and emits `BENCH_shard.json`.
+fn bench_shard() {
+    use pvqnet::nn::batch::ActivationBlock;
+    use pvqnet::nn::{BinaryNet, CompiledQuantModel, Model};
+
+    let mut rng = Rng::new(78);
+    let mut entries: Vec<String> = Vec::new();
+    println!(
+        "  host parallelism: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    for (net, engine_name) in [("a", "pvq-csr"), ("c", "binary")] {
+        let spec = ModelSpec::by_name(net).unwrap();
+        let model = Model::synth(&spec, 42);
+        let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
+        let input_len: usize = spec.input_shape.iter().product();
+        let samples: Vec<Vec<u8>> = (0..64)
+            .map(|_| (0..input_len).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        println!("  net {} ({engine_name}):", spec.name);
+        // compile once; set_shards re-plans a compiled model in place
+        let mut csr = (engine_name == "pvq-csr")
+            .then(|| CompiledQuantModel::compile(&q.quant_model).unwrap());
+        let mut bin =
+            (engine_name == "binary").then(|| BinaryNet::compile(&q.quant_model).unwrap());
+        for b in [16usize, 64] {
+            let wave = &samples[..b];
+            let views: Vec<&[u8]> = wave.iter().map(|s| s.as_slice()).collect();
+            let mut base_sps = 0.0f64;
+            for shards in [1usize, 2, 4, 8] {
+                let sps = if let Some(m) = csr.as_mut() {
+                    m.set_shards(shards);
+                    let block = ActivationBlock::from_samples_u8(&views).unwrap();
+                    let m = &*m;
+                    throughput(b, || {
+                        std::hint::black_box(m.forward_block(&block).unwrap());
+                    })
+                } else {
+                    let m = bin.as_mut().expect("one engine per net");
+                    m.set_shards(shards);
+                    let m = &*m;
+                    throughput(b, || {
+                        std::hint::black_box(m.forward_block_u8(&views).unwrap());
+                    })
+                };
+                if shards == 1 {
+                    base_sps = sps;
+                }
+                let speedup = sps / base_sps.max(1e-9);
+                println!(
+                    "    B={b:>3} shards={shards}: {sps:>9.0} samp/s  ({speedup:.2}x vs 1 shard)"
+                );
+                entries.push(format!(
+                    "{{\"engine\":\"{engine_name}\",\"net\":\"{}\",\"batch\":{b},\"shards\":{shards},\"sps\":{sps:.1},\"speedup_vs_1_shard\":{speedup:.4}}}",
+                    spec.name
+                ));
+            }
+        }
+    }
+    let json = format!("{{\"experiment\":\"shard\",\"entries\":[{}]}}\n", entries.join(","));
+    std::fs::write("BENCH_shard.json", json).unwrap();
+    println!("  wrote BENCH_shard.json");
 }
 
 /// Artifact pack/unpack throughput + compressed bytes per weight on a
@@ -563,9 +656,13 @@ fn main() {
         ("engines", bench_engines),
         ("serve", bench_serve),
         ("batch", bench_batch),
+        ("shard", bench_shard),
         ("artifact", bench_artifact),
         ("pjrt", bench_pjrt),
     ];
+    if args.iter().any(|a| a == "--smoke") {
+        SMOKE.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
     if args.iter().any(|a| a == "--list") {
         for (name, _) in &experiments {
             println!("{name}");

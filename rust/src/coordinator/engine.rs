@@ -53,6 +53,19 @@ impl Engine {
         }
     }
 
+    /// Intra-model shard count the engine's batched kernels run with
+    /// (1 for the engines that have no sharded path). Configured before
+    /// construction via `CompiledQuantModel::set_shards` /
+    /// `BinaryNet::set_shards` — the registry does this from
+    /// [`super::server::ServerConfig::shards`].
+    pub fn shards(&self) -> usize {
+        match self {
+            Engine::PvqCompiled(m, _) => m.shards(),
+            Engine::Binary(m) => m.shards(),
+            Engine::Float(_) | Engine::PvqInt(_) | Engine::Hlo(_) => 1,
+        }
+    }
+
     /// Classify a batch of u8 samples (each `input_len` long).
     ///
     /// This is the coordinator's default serving path. The CSR and binary

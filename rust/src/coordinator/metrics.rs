@@ -176,6 +176,44 @@ mod tests {
     }
 
     #[test]
+    fn occupancy_edge_cases() {
+        let m = Metrics::new();
+        // B=0: a degenerate empty dispatch clamps into the B=1 bucket
+        // (leading_zeros on 0 would otherwise index out of range) and
+        // adds nothing to the sample count
+        m.record_batch(0);
+        assert_eq!(m.occupancy_counts()[0], 1);
+        assert_eq!(m.batched_samples.load(Ordering::Relaxed), 0);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.mean_batch_fill(), 0.0);
+
+        // B=1: the smallest real batch lands in bucket 0 too
+        m.record_batch(1);
+        assert_eq!(m.occupancy_counts()[0], 2);
+        assert_eq!(m.occupancy_quantile(0.5), 1);
+
+        // B=max: the open-ended last bucket absorbs any oversized batch
+        // without indexing past the histogram
+        m.record_batch(usize::MAX);
+        let counts = m.occupancy_counts();
+        assert_eq!(counts[OCC_BUCKETS - 1], 1);
+        assert_eq!(m.occupancy_quantile(1.0), 1u64 << (OCC_BUCKETS - 1));
+
+        // exact power-of-two boundaries: 2^b is the lower edge of bucket b
+        let m2 = Metrics::new();
+        for b in 0..OCC_BUCKETS {
+            m2.record_batch(1usize << b);
+        }
+        let counts = m2.occupancy_counts();
+        assert!(counts.iter().all(|&c| c == 1), "{counts:?}");
+        // quantile(ε) returns the smallest occupied bucket's lower edge
+        assert_eq!(m2.occupancy_quantile(0.001), 1);
+
+        // empty metrics: quantile is 0, not a phantom bucket edge
+        assert_eq!(Metrics::new().occupancy_quantile(0.5), 0);
+    }
+
+    #[test]
     fn occupancy_histogram() {
         let m = Metrics::new();
         assert_eq!(m.occupancy_quantile(0.5), 0);

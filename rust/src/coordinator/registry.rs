@@ -51,6 +51,8 @@ pub struct ModelInfo {
     pub total_params: usize,
     /// On-disk compressed weight bytes (0 for in-memory registrations).
     pub compressed_bytes: u64,
+    /// Intra-model shards the engine's batched kernels run with.
+    pub shards: usize,
 }
 
 struct ModelEntry {
@@ -65,18 +67,29 @@ pub struct ModelRegistry {
     cfg: ServerConfig,
 }
 
-/// Build the engine for a quantized model per `kind`.
-fn build_engine(model: QuantModel, kind: EngineKind) -> Result<Engine> {
+/// Build the engine for a quantized model per `kind`, with the batched
+/// kernels' shard plans precomputed for `shards` worker threads (the
+/// reference engine has no sharded path and ignores the count).
+fn build_engine(model: QuantModel, kind: EngineKind, shards: usize) -> Result<Engine> {
     match kind {
         EngineKind::Reference => Ok(Engine::PvqInt(Arc::new(model))),
-        EngineKind::Binary => Ok(Engine::Binary(Arc::new(BinaryNet::compile(&model)?))),
+        EngineKind::Binary => {
+            let mut net = BinaryNet::compile(&model)?;
+            net.set_shards(shards);
+            Ok(Engine::Binary(Arc::new(net)))
+        }
         EngineKind::Csr => {
             let shape = model.spec.input_shape.clone();
-            Ok(Engine::PvqCompiled(Arc::new(CompiledQuantModel::compile(&model)?), shape))
+            let mut compiled = CompiledQuantModel::compile(&model)?;
+            compiled.set_shards(shards);
+            Ok(Engine::PvqCompiled(Arc::new(compiled), shape))
         }
         EngineKind::Auto => match BinaryNet::compile(&model) {
-            Ok(net) => Ok(Engine::Binary(Arc::new(net))),
-            Err(_) => build_engine(model, EngineKind::Csr),
+            Ok(mut net) => {
+                net.set_shards(shards);
+                Ok(Engine::Binary(Arc::new(net)))
+            }
+            Err(_) => build_engine(model, EngineKind::Csr, shards),
         },
     }
 }
@@ -123,13 +136,14 @@ impl ModelRegistry {
             bail!("model '{name}' already registered");
         }
         let total_params = model.spec.total_params();
-        let engine = build_engine(model, kind)?;
+        let engine = build_engine(model, kind, self.cfg.shards)?;
         let info = ModelInfo {
             name: name.to_string(),
             engine: engine.name().to_string(),
             input_len: engine.input_len(),
             total_params,
             compressed_bytes: manifest.map(|m| m.total_compressed()).unwrap_or(0),
+            shards: engine.shards(),
         };
         let server = Server::start(engine, self.cfg.clone());
         self.entries.insert(name.to_string(), ModelEntry { server, info });
@@ -327,6 +341,43 @@ mod tests {
         assert!(reg.classify_batch(Some("csr"), bad).is_err());
         assert!(reg.classify_batch(Some("nope"), samples).is_err());
         reg.shutdown();
+    }
+
+    #[test]
+    fn sharded_registry_matches_unsharded_serving() {
+        let sharded_cfg = ServerConfig { shards: 4, ..Default::default() };
+        let mut sharded = ModelRegistry::new(sharded_cfg);
+        sharded.register_quant("csr", quant_mlp(Activation::Relu, 14), EngineKind::Csr, None)
+            .unwrap();
+        sharded.register_quant("bin", quant_mlp(Activation::BSign, 15), EngineKind::Binary, None)
+            .unwrap();
+        sharded
+            .register_quant("ref", quant_mlp(Activation::Relu, 14), EngineKind::Reference, None)
+            .unwrap();
+        // shard count is per-engine metadata; the reference engine has
+        // no sharded path and reports 1
+        for m in sharded.models() {
+            let want = if m.engine == "pvq-int" { 1 } else { 4 };
+            assert_eq!(m.shards, want, "model {}", m.name);
+        }
+
+        let mut plain = ModelRegistry::new(ServerConfig::default());
+        plain.register_quant("csr", quant_mlp(Activation::Relu, 14), EngineKind::Csr, None)
+            .unwrap();
+        plain.register_quant("bin", quant_mlp(Activation::BSign, 15), EngineKind::Binary, None)
+            .unwrap();
+        let mut rng = Rng::new(16);
+        let samples: Vec<Vec<u8>> =
+            (0..25).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        for model in ["csr", "bin"] {
+            let got = sharded.classify_batch(Some(model), samples.clone()).unwrap();
+            let want = plain.classify_batch(Some(model), samples.clone()).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.class, w.class, "model {model}");
+            }
+        }
+        sharded.shutdown();
+        plain.shutdown();
     }
 
     #[test]

@@ -30,6 +30,13 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Bound on the admission queue (backpressure).
     pub queue_cap: usize,
+    /// Intra-model shards per `forward_block` call: the registry
+    /// configures each compiled engine's [`crate::nn::ShardPlan`]s with
+    /// this count before serving, so every dispatched micro-batch is
+    /// split across scoped worker threads (1 = single-threaded, the
+    /// default). Orthogonal to `workers`, which parallelizes across
+    /// batches.
+    pub shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -39,6 +46,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             workers: 1,
             queue_cap: 1024,
+            shards: 1,
         }
     }
 }
@@ -291,7 +299,13 @@ mod tests {
     fn every_request_answered_once() {
         let server = Server::start(
             float_engine(1),
-            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(1), workers: 2, queue_cap: 256 },
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                workers: 2,
+                queue_cap: 256,
+                shards: 1,
+            },
         );
         let mut rng = Rng::new(2);
         let mut rxs = Vec::new();
@@ -333,7 +347,13 @@ mod tests {
     fn batching_respects_max_batch() {
         let server = Server::start(
             float_engine(5),
-            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(20), workers: 1, queue_cap: 256 },
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+                workers: 1,
+                queue_cap: 256,
+                shards: 1,
+            },
         );
         let mut rng = Rng::new(6);
         let mut rxs = Vec::new();
@@ -383,5 +403,42 @@ mod tests {
             let _ = server.classify(pixels);
         }
         server.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn shutdown_while_draining_answers_every_queued_request() {
+        // fill the admission queue, then shut down immediately: every
+        // already-admitted request must still get a response (the
+        // batcher flushes the queue on disconnect, workers drain the
+        // batch channel before exiting) — none may hang or be dropped.
+        let server = Server::start(
+            float_engine(11),
+            ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(50),
+                workers: 2,
+                queue_cap: 512,
+                shards: 1,
+            },
+        );
+        let metrics = server.metrics();
+        let mut rng = Rng::new(12);
+        let mut rxs = Vec::new();
+        for _ in 0..200 {
+            let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+            rxs.push(server.submit(pixels).unwrap());
+        }
+        server.shutdown(); // joins batcher + workers
+        let mut answered = 0;
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert!(r.class < 4);
+            answered += 1;
+        }
+        assert_eq!(answered, 200);
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 200);
+        // occupancy histogram accounted for every dispatched batch
+        let occ_total: u64 = metrics.occupancy_counts().iter().sum();
+        assert_eq!(occ_total, metrics.batches.load(Ordering::Relaxed));
     }
 }

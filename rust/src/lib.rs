@@ -3,9 +3,11 @@
 //! Full-system reproduction of V. Liguori, *"Pyramid Vector Quantization
 //! for Deep Learning"* (2017): PVQ weight quantization, integer & binary
 //! PVQ inference engines with batch-fused serving kernels
-//! ([`nn::batch`]), weight compression codecs, hardware cycle
-//! simulators, and a batching inference coordinator that serves both
-//! AOT-compiled XLA graphs (via PJRT) and the pure-integer PVQ engines.
+//! ([`nn::batch`]) sharded across worker threads ([`nn::parallel`],
+//! SIMD-width inner loops in [`nn::simd`]), weight compression codecs,
+//! hardware cycle simulators, and a batching inference coordinator that
+//! serves both AOT-compiled XLA graphs (via PJRT) and the pure-integer
+//! PVQ engines.
 //!
 //! See `docs/ARCHITECTURE.md` for the module inventory, data-flow
 //! diagram, and the paper-experiment index; `docs/PVQM_FORMAT.md` for

@@ -190,7 +190,8 @@ fn load_or_synth(flags: &HashMap<String, String>) -> Result<(ModelSpec, Model)> 
 
 /// Batched-serving knobs shared by both `serve` modes: `--max-batch N`
 /// (dispatch threshold), `--max-wait-us N` (oldest-request deadline),
-/// `--workers N` (engine threads).
+/// `--workers N` (engine threads), `--shards N` (intra-model shards per
+/// `forward_block` call).
 fn server_cfg(flags: &HashMap<String, String>) -> Result<ServerConfig> {
     let mut cfg = ServerConfig { queue_cap: 4096, ..Default::default() };
     if let Some(v) = flags.get("max-batch") {
@@ -206,6 +207,12 @@ fn server_cfg(flags: &HashMap<String, String>) -> Result<ServerConfig> {
         cfg.workers = v.parse().context("parse --workers")?;
         if cfg.workers == 0 {
             bail!("--workers must be ≥ 1");
+        }
+    }
+    if let Some(v) = flags.get("shards") {
+        cfg.shards = v.parse().context("parse --shards")?;
+        if cfg.shards == 0 {
+            bail!("--shards must be ≥ 1");
         }
     }
     // the serve loops submit max_batch-sized waves through the bounded
@@ -256,8 +263,8 @@ fn cmd_serve_models(flags: &HashMap<String, String>, models: &str) -> Result<()>
     println!("registry models:");
     for m in reg.models() {
         println!(
-            "  {:<12} engine {:<8} input {:>5} params {:>9} compressed {:>9} B",
-            m.name, m.engine, m.input_len, m.total_params, m.compressed_bytes
+            "  {:<12} engine {:<8} shards {:>2} input {:>5} params {:>9} compressed {:>9} B",
+            m.name, m.engine, m.shards, m.input_len, m.total_params, m.compressed_bytes
         );
     }
     let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
@@ -314,7 +321,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let ratios = ratios_from_flags(flags, &spec)?;
     let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
     let q = quantize(&model, &ratios, RhoMode::Norm)?;
-    let compiled = pvqnet::nn::CompiledQuantModel::compile(&q.quant_model)?;
+    let cfg = server_cfg(flags)?;
+    let wave = cfg.max_batch;
+    let mut compiled = pvqnet::nn::CompiledQuantModel::compile(&q.quant_model)?;
+    compiled.set_shards(cfg.shards);
     let engines = vec![
         ("float".to_string(), Engine::Float(Arc::new(model))),
         (
@@ -322,8 +332,6 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             Engine::PvqCompiled(Arc::new(compiled), spec.input_shape.clone()),
         ),
     ];
-    let cfg = server_cfg(flags)?;
-    let wave = cfg.max_batch;
     let router = Router::new(engines, "pvq", cfg)?;
     println!("serving {n_req} requests against net {} (routes: float, pvq)", spec.name);
     let t0 = std::time::Instant::now();
@@ -392,7 +400,8 @@ fn main() -> Result<()> {
                    inspect: --file FILE.pvqm\n\
                    serve:   --requests N | --models a.pvqm,b.pvqm [--default NAME]\n\
                             batching knobs: --max-batch N (default 32)\n\
-                            --max-wait-us N (default 2000)  --workers N (default 1)"
+                            --max-wait-us N (default 2000)  --workers N (default 1)\n\
+                            --shards N (default 1; intra-model shards per batch)"
             );
         }
         other => bail!("unknown command '{other}' (try `pvqnet help`)"),

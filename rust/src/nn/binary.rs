@@ -12,7 +12,18 @@
 //! (Fig. 2) and LUT packing (Fig. 3). PVQ weight values are tiny
 //! (Tables 5–8: ≥97% in {0,±1,±2,±3}), so each row holds only a handful
 //! of masks.
+//!
+//! The batched kernels are sharded like the CSR engine's: output rows
+//! (one per-value sign-mask list each) are partitioned by a precomputed
+//! [`ShardPlan`] — balanced by nonzero mask words per row — and run on
+//! scoped worker threads ([`crate::nn::parallel`]), each shard writing
+//! a disjoint slice of the output panel. The AND+popcount inner loop
+//! goes through [`crate::nn::simd::and_popcount_lanes`], which takes
+//! the AVX2 path on hosts that have it. Both are bitwise identical to
+//! the scalar path for every shard count.
 
+use super::parallel::{for_each_shard, ShardPlan};
+use super::simd;
 use anyhow::{bail, Result};
 
 /// ±1 activations packed as a "+1 positions" bitmask.
@@ -64,6 +75,9 @@ pub struct BinaryDense {
     /// Output dimension.
     pub output: usize,
     rows: Vec<BinRow>,
+    /// Output rows partitioned across worker shards, balanced by each
+    /// row's nonzero sign-mask word count.
+    plan: ShardPlan,
 }
 
 impl BinaryDense {
@@ -93,7 +107,26 @@ impl BinaryDense {
                 .collect();
             rows.push(BinRow { groups, bias: b[o] });
         }
-        BinaryDense { input, output, rows }
+        BinaryDense { input, output, rows, plan: ShardPlan::single(output) }
+    }
+
+    /// Partition the output rows into `shards` worker shards for the
+    /// batched kernels, balanced by each row's nonzero mask-word count
+    /// (the number of AND+popcount word loads that row costs); a layer
+    /// without enough total work gets fewer shards
+    /// ([`ShardPlan::balanced_capped`]).
+    pub fn set_shards(&mut self, shards: usize) {
+        let words: Vec<u64> = self
+            .rows
+            .iter()
+            .map(|r| {
+                r.groups
+                    .iter()
+                    .map(|(_, mask, _)| mask.iter().filter(|&&m| m != 0).count() as u64)
+                    .sum()
+            })
+            .collect();
+        self.plan = ShardPlan::balanced_capped(&words, shards);
     }
 
     /// y = ŵ·x + b̂ for ±1 packed input — popcount path.
@@ -129,34 +162,41 @@ impl BinaryDense {
 
     /// Batch-fused forward: every per-value weight mask is traversed
     /// **once**, each mask word AND/popcount-ing against the `B` packed
-    /// activation words of that 64-feature plane. Returns pre-activations
+    /// activation words of that 64-feature plane (the SIMD-dispatched
+    /// [`crate::nn::simd::and_popcount_lanes`] kernel). With more than
+    /// one shard configured ([`BinaryDense::set_shards`]), the output
+    /// rows run concurrently on scoped threads, each shard owning a
+    /// disjoint slice of the output panel. Returns pre-activations
     /// as a column-major `output×B` panel (`y[o*B + s]`). Bitwise
-    /// identical to `B` independent [`BinaryDense::forward`] calls.
+    /// identical to `B` independent [`BinaryDense::forward`] calls for
+    /// every shard count.
     pub fn forward_block(&self, x: &crate::nn::batch::BitBlock) -> Vec<i64> {
         debug_assert_eq!(x.len(), self.input);
         let b = x.batch();
         let mut y = vec![0i64; self.output * b];
-        let mut plus = vec![0u32; b];
-        for (o, row) in self.rows.iter().enumerate() {
-            let dst = &mut y[o * b..(o + 1) * b];
-            dst.fill(row.bias as i64);
-            for (v, mask, pc) in &row.groups {
-                plus.fill(0);
-                for (w, &m) in mask.iter().enumerate() {
-                    if m == 0 {
-                        continue;
+        // resolve the SIMD dispatch once, not per mask word
+        let popcount = simd::popcount_kernel();
+        for_each_shard(&self.plan, &mut y, b, |rows, chunk| {
+            let mut plus = vec![0u32; b]; // per-shard scratch
+            for (ri, o) in rows.enumerate() {
+                let row = &self.rows[o];
+                let dst = &mut chunk[ri * b..(ri + 1) * b];
+                dst.fill(row.bias as i64);
+                for (v, mask, pc) in &row.groups {
+                    plus.fill(0);
+                    for (w, &m) in mask.iter().enumerate() {
+                        if m == 0 {
+                            continue;
+                        }
+                        popcount(m, x.plane(w), &mut plus);
                     }
-                    let src = x.plane(w);
-                    for (p, &xw) in plus.iter_mut().zip(src) {
-                        *p += (m & xw).count_ones();
+                    let (v, pc) = (*v as i64, *pc as i64);
+                    for (acc, &p) in dst.iter_mut().zip(plus.iter()) {
+                        *acc += v * (2 * p as i64 - pc);
                     }
-                }
-                let (v, pc) = (*v as i64, *pc as i64);
-                for (acc, &p) in dst.iter_mut().zip(plus.iter()) {
-                    *acc += v * (2 * p as i64 - pc);
                 }
             }
-        }
+        });
         y
     }
 
@@ -190,10 +230,14 @@ pub struct BinaryNet {
     first_w: Vec<i32>,
     first_b: Vec<i32>,
     first_out: usize,
+    /// First-layer output rows partitioned across worker shards,
+    /// balanced by nonzero weight count per row.
+    first_plan: ShardPlan,
     /// bsign-activated layers after the first, on the popcount path.
     hidden: Vec<BinaryDense>,
     /// Final linear layer (identity activation) — integer logits out.
     last: BinaryDense,
+    shards: usize,
 }
 
 impl BinaryNet {
@@ -244,9 +288,50 @@ impl BinaryNet {
             first_w: first_q.w.clone(),
             first_b: first_q.b.clone(),
             first_out,
+            first_plan: ShardPlan::single(first_out),
             hidden,
             last: BinaryDense::compile(&last_q.w, &last_q.b, last_in, last_out),
+            shards: 1,
         })
+    }
+
+    /// Partition every layer's output rows into `shards` worker shards
+    /// for the batched kernels (off the request path): the integer
+    /// first layer balanced by nonzero weights per row, every popcount
+    /// layer by nonzero mask words per row. `forward_block_u8` output
+    /// is bitwise identical for every shard count.
+    pub fn set_shards(&mut self, shards: usize) {
+        let shards = shards.max(1);
+        self.shards = shards;
+        let nonzeros: Vec<u64> = (0..self.first_out)
+            .map(|o| {
+                self.first_w[o * self.input_len..(o + 1) * self.input_len]
+                    .iter()
+                    .filter(|&&w| w != 0)
+                    .count() as u64
+            })
+            .collect();
+        self.first_plan = ShardPlan::balanced_capped(&nonzeros, shards);
+        for layer in &mut self.hidden {
+            layer.set_shards(shards);
+        }
+        self.last.set_shards(shards);
+    }
+
+    /// Configured shard count (1 = single-threaded).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard counts the current plans actually granted, layer by layer
+    /// (first integer layer, hidden popcount layers, readout) —
+    /// diagnostics: [`BinaryNet::set_shards`] gives a layer fewer
+    /// shards than requested when it lacks the work to feed them.
+    pub fn layer_shard_counts(&self) -> Vec<usize> {
+        let mut v = vec![self.first_plan.shard_count()];
+        v.extend(self.hidden.iter().map(|l| l.plan.shard_count()));
+        v.push(self.last.plan.shard_count());
+        v
     }
 
     /// Integer logits for one u8 sample.
@@ -283,9 +368,12 @@ impl BinaryNet {
     /// first (integer) layer sweeps its dense weight rows once across a
     /// column-major activation panel, then the bit-packed layers run on
     /// [`crate::nn::batch::BitBlock`]s so every weight mask is loaded once
-    /// per batch. Per-sample logits are bitwise identical to
-    /// [`BinaryNet::forward_u8`] (same `i64` accumulation order;
-    /// property-tested in `tests/batch_equivalence.rs`).
+    /// per batch. With [`BinaryNet::set_shards`] > 1 every layer's
+    /// output rows additionally run concurrently on scoped worker
+    /// threads. Per-sample logits are bitwise identical to
+    /// [`BinaryNet::forward_u8`] for every shard count (same `i64`
+    /// accumulation order; property-tested in
+    /// `tests/batch_equivalence.rs`).
     pub fn forward_block_u8(&self, samples: &[&[u8]]) -> Result<Vec<Vec<i64>>> {
         use crate::nn::batch::{ActivationBlock, BitBlock};
         let block = ActivationBlock::from_samples_u8(samples)?;
@@ -294,22 +382,21 @@ impl BinaryNet {
         }
         let b = block.batch();
 
-        // first layer: integer dense (u8 pixels are not ±1), weight-stationary
+        // first layer: integer dense (u8 pixels are not ±1),
+        // weight-stationary, sharded over output rows
         let mut h = vec![0i64; self.first_out * b];
-        for o in 0..self.first_out {
-            let dst = &mut h[o * b..(o + 1) * b];
-            dst.fill(self.first_b[o] as i64);
-            let row = &self.first_w[o * self.input_len..(o + 1) * self.input_len];
-            for (i, &wv) in row.iter().enumerate() {
-                if wv != 0 {
-                    let wv = wv as i64;
-                    let src = block.lane(i);
-                    for (acc, &x) in dst.iter_mut().zip(src) {
-                        *acc += wv * x;
+        for_each_shard(&self.first_plan, &mut h, b, |rows, chunk| {
+            for (ri, o) in rows.enumerate() {
+                let dst = &mut chunk[ri * b..(ri + 1) * b];
+                dst.fill(self.first_b[o] as i64);
+                let row = &self.first_w[o * self.input_len..(o + 1) * self.input_len];
+                for (i, &wv) in row.iter().enumerate() {
+                    if wv != 0 {
+                        simd::axpy_lanes(dst, block.lane(i), wv as i64);
                     }
                 }
             }
-        }
+        });
 
         // bsign + popcount chain on packed planes
         let mut bits = BitBlock::from_signs(&h, self.first_out, b);

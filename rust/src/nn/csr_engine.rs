@@ -11,10 +11,22 @@
 //! Conv layers keep the dense kernel loop (kernels are tiny and reused
 //! per position; the zero-branch predicts well there) but hoist the
 //! kernel nonzero list per output channel.
+//!
+//! The batched path ([`CompiledQuantModel::forward_block`]) is
+//! additionally **sharded**: [`CompiledQuantModel::set_shards`]
+//! precomputes a [`ShardPlan`] per layer (dense rows balanced by pulse
+//! count, conv/pool split over spatial output rows) and the scoped-
+//! thread executor in [`crate::nn::parallel`] runs the shards
+//! concurrently, each writing a disjoint slice of the output panel. The
+//! inner loops process accumulator lanes in fixed SIMD-width chunks
+//! ([`crate::nn::simd`]). All of it is bitwise identical to the scalar
+//! path for every shard count.
 
 use super::batch::ActivationBlock;
 use super::model::{Activation, LayerSpec};
+use super::parallel::{for_each_shard, ShardPlan};
 use super::pvq_engine::{maxpool2x2_i64, QuantModel};
+use super::simd;
 use super::tensor::{argmax_i64, ITensor};
 use anyhow::{bail, Result};
 
@@ -29,6 +41,9 @@ struct CsrDense {
     val: Vec<i32>,
     bias: Vec<i64>,
     act: Activation,
+    /// Output rows partitioned across worker shards, balanced by each
+    /// row's pulse count.
+    plan: ShardPlan,
 }
 
 /// Conv layer with per-output-channel nonzero kernel taps.
@@ -42,13 +57,16 @@ struct TapConv {
     taps: Vec<Vec<(u8, u8, u16, i32)>>,
     bias: Vec<i64>,
     act: Activation,
+    /// Spatial output rows (`oy`) partitioned across worker shards.
+    plan: ShardPlan,
 }
 
 #[derive(Clone, Debug)]
 enum CompiledLayer {
     Dense(CsrDense),
     Conv(TapConv),
-    MaxPool,
+    /// 2×2 maxpool; the plan partitions pooled output rows (`oy`).
+    MaxPool(ShardPlan),
     Flatten,
     Noop,
 }
@@ -60,10 +78,14 @@ pub struct CompiledQuantModel {
     input_shape: Vec<usize>,
     /// scratch-free: output class count for sizing
     pub outputs: usize,
+    shards: usize,
 }
 
 impl CompiledQuantModel {
     /// Compile a [`QuantModel`] (one-time cost, off the request path).
+    /// The compiled model starts single-sharded; call
+    /// [`CompiledQuantModel::set_shards`] to enable intra-model
+    /// parallelism.
     pub fn compile(m: &QuantModel) -> Result<Self> {
         let mut layers = Vec::new();
         let mut outputs = 0;
@@ -96,6 +118,7 @@ impl CompiledQuantModel {
                         val,
                         bias: q.b.iter().map(|&b| b as i64).collect(),
                         act: *act,
+                        plan: ShardPlan::single(*output),
                     }));
                     outputs = *output;
                 }
@@ -125,15 +148,98 @@ impl CompiledQuantModel {
                         taps,
                         bias: q.b.iter().map(|&b| b as i64).collect(),
                         act: *act,
+                        plan: ShardPlan::single(0),
                     }));
                     outputs = *cout;
                 }
-                LayerSpec::MaxPool2x2 => layers.push(CompiledLayer::MaxPool),
+                LayerSpec::MaxPool2x2 => layers.push(CompiledLayer::MaxPool(ShardPlan::single(0))),
                 LayerSpec::Flatten => layers.push(CompiledLayer::Flatten),
                 LayerSpec::Dropout(_) | LayerSpec::Scale(_) => layers.push(CompiledLayer::Noop),
             }
         }
-        Ok(CompiledQuantModel { layers, input_shape: m.spec.input_shape.clone(), outputs })
+        let mut compiled = CompiledQuantModel {
+            layers,
+            input_shape: m.spec.input_shape.clone(),
+            outputs,
+            shards: 1,
+        };
+        compiled.set_shards(1); // materialize every layer's plan
+        Ok(compiled)
+    }
+
+    /// Partition every layer's output rows into `shards` worker shards
+    /// and precompute the per-layer [`ShardPlan`]s (off the request
+    /// path). Dense rows are balanced by pulse count; conv and pool
+    /// layers split over spatial output rows weighted by per-row tap /
+    /// window work. Layers whose total work cannot feed that many
+    /// shards get fewer (`ShardPlan::balanced_capped`), so a tiny logit
+    /// layer never pays thread spawn/join. `forward_block` then runs
+    /// the shards on scoped threads; with `shards == 1` (the compile
+    /// default) it stays single-threaded with zero executor overhead.
+    /// Output is bitwise identical for every shard count.
+    pub fn set_shards(&mut self, shards: usize) {
+        let shards = shards.max(1);
+        self.shards = shards;
+        let mut hwc: Option<(usize, usize, usize)> = match self.input_shape.as_slice() {
+            [h, w, c] => Some((*h, *w, *c)),
+            _ => None,
+        };
+        for layer in &mut self.layers {
+            match layer {
+                CompiledLayer::Dense(d) => {
+                    let pulses: Vec<u64> = (0..d.output)
+                        .map(|o| (d.row_ptr[o + 1] - d.row_ptr[o]) as u64)
+                        .collect();
+                    d.plan = ShardPlan::balanced_capped(&pulses, shards);
+                }
+                CompiledLayer::Conv(cv) => match hwc {
+                    Some((h, w, _)) => {
+                        // tap applications per spatial output row
+                        let row_work: u64 = cv.taps.iter().map(|t| t.len() as u64).sum::<u64>()
+                            * w as u64;
+                        cv.plan = ShardPlan::balanced_capped(&vec![row_work; h], shards);
+                        hwc = Some((h, w, cv.cout));
+                    }
+                    // malformed spec (conv after flatten / flat input):
+                    // leave a degenerate plan — forward_block bails with
+                    // a proper error before ever consulting it
+                    None => cv.plan = ShardPlan::single(0),
+                },
+                CompiledLayer::MaxPool(plan) => match hwc {
+                    Some((h, w, c)) => {
+                        let (oh, ow) = (h / 2, w / 2);
+                        // four window loads per pooled cell per row
+                        let row_work = (ow * c * 4) as u64;
+                        *plan = ShardPlan::balanced_capped(&vec![row_work; oh], shards);
+                        hwc = Some((oh, ow, c));
+                    }
+                    None => *plan = ShardPlan::single(0),
+                },
+                CompiledLayer::Flatten => hwc = None,
+                CompiledLayer::Noop => {}
+            }
+        }
+    }
+
+    /// Configured shard count (1 = single-threaded).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard counts the current plans actually granted, one per compute
+    /// layer (dense/conv/pool, spec order) — diagnostics for tests and
+    /// tuning: [`CompiledQuantModel::set_shards`] gives a layer fewer
+    /// shards than requested when it lacks the work to feed them.
+    pub fn layer_shard_counts(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                CompiledLayer::Dense(d) => Some(d.plan.shard_count()),
+                CompiledLayer::Conv(cv) => Some(cv.plan.shard_count()),
+                CompiledLayer::MaxPool(p) => Some(p.shard_count()),
+                CompiledLayer::Flatten | CompiledLayer::Noop => None,
+            })
+            .collect()
     }
 
     /// Integer forward pass — argmax-identical to
@@ -190,7 +296,7 @@ impl CompiledQuantModel {
                     data = o;
                     hwc = Some((h, w, cv.cout));
                 }
-                CompiledLayer::MaxPool => {
+                CompiledLayer::MaxPool(_) => {
                     let dims = hwc.expect("pool needs HWC");
                     let (d, nd) = maxpool2x2_i64(&data, dims);
                     data = d;
@@ -210,11 +316,18 @@ impl CompiledQuantModel {
 
     /// Batch-fused, weight-stationary forward pass: each CSR row's pulse
     /// list (and each conv tap list) is traversed **once** for the whole
-    /// micro-batch, sign-adding into a `B`-wide accumulator lane with one
-    /// multiply per tap per lane. Bitwise identical to `B` independent
-    /// [`CompiledQuantModel::forward`] calls — both paths accumulate in
-    /// `i64` in the same per-row tap order (property-tested in
-    /// `tests/batch_equivalence.rs`).
+    /// micro-batch, sign-adding every tap into a `B`-wide accumulator
+    /// lane in fixed SIMD-width chunks ([`crate::nn::simd`]), with one
+    /// multiply per tap per lane. When [`CompiledQuantModel::set_shards`]
+    /// configured more than one shard, each layer's precomputed
+    /// [`ShardPlan`] splits its output rows across scoped worker threads
+    /// — every shard owns a disjoint slice of the output panel, so the
+    /// merge is free and deterministic.
+    ///
+    /// Bitwise identical to `B` independent
+    /// [`CompiledQuantModel::forward`] calls for every shard count —
+    /// both paths accumulate in `i64` in the same per-row tap order
+    /// (property-tested in `tests/batch_equivalence.rs`).
     ///
     /// Returns the logits as a `B×outputs` panel; read per-request rows
     /// with [`ActivationBlock::row`].
@@ -236,22 +349,20 @@ impl CompiledQuantModel {
             match layer {
                 CompiledLayer::Dense(d) => {
                     let mut out = ActivationBlock::zeros(b, d.output);
-                    for o in 0..d.output {
-                        let lo = d.row_ptr[o] as usize;
-                        let hi = d.row_ptr[o + 1] as usize;
-                        let dst = out.lane_mut(o);
-                        dst.fill(d.bias[o]);
-                        for t in lo..hi {
-                            let wv = d.val[t] as i64;
-                            let src = cur.lane(d.idx[t] as usize);
-                            for (acc, &x) in dst.iter_mut().zip(src) {
-                                *acc += wv * x;
+                    for_each_shard(&d.plan, &mut out.data, b, |rows, chunk| {
+                        for (ri, o) in rows.enumerate() {
+                            let lo = d.row_ptr[o] as usize;
+                            let hi = d.row_ptr[o + 1] as usize;
+                            let dst = &mut chunk[ri * b..(ri + 1) * b];
+                            dst.fill(d.bias[o]);
+                            for t in lo..hi {
+                                simd::axpy_lanes(dst, cur.lane(d.idx[t] as usize), d.val[t] as i64);
+                            }
+                            for acc in dst.iter_mut() {
+                                *acc = apply_act(*acc, d.act);
                             }
                         }
-                        for acc in dst.iter_mut() {
-                            *acc = apply_act(*acc, d.act);
-                        }
-                    }
+                    });
                     owned = Some(out);
                 }
                 CompiledLayer::Conv(cv) => {
@@ -260,59 +371,67 @@ impl CompiledQuantModel {
                         None => bail!("conv layer reached with flat input"),
                     };
                     debug_assert_eq!(cin, cv.cin);
+                    debug_assert_eq!(cv.plan.rows(), h);
                     let mut out = ActivationBlock::zeros(b, h * w * cv.cout);
-                    for oy in 0..h {
-                        for ox in 0..w {
-                            let obase = (oy * w + ox) * cv.cout;
-                            for co in 0..cv.cout {
-                                let dst = out.lane_mut(obase + co);
-                                dst.fill(cv.bias[co]);
-                                for &(ky, kx, ci, wv) in &cv.taps[co] {
-                                    let iy = oy as isize + ky as isize - (cv.kh / 2) as isize;
-                                    let ix = ox as isize + kx as isize - (cv.kw / 2) as isize;
-                                    if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
-                                        let src = cur.lane(
-                                            ((iy as usize) * w + ix as usize) * cin + ci as usize,
-                                        );
-                                        let wv = wv as i64;
-                                        for (acc, &x) in dst.iter_mut().zip(src) {
-                                            *acc += wv * x;
+                    for_each_shard(&cv.plan, &mut out.data, w * cv.cout * b, |rows, chunk| {
+                        for (ry, oy) in rows.enumerate() {
+                            for ox in 0..w {
+                                let obase = (ry * w + ox) * cv.cout;
+                                for co in 0..cv.cout {
+                                    let dst = &mut chunk[(obase + co) * b..(obase + co + 1) * b];
+                                    dst.fill(cv.bias[co]);
+                                    for &(ky, kx, ci, wv) in &cv.taps[co] {
+                                        let iy = oy as isize + ky as isize - (cv.kh / 2) as isize;
+                                        let ix = ox as isize + kx as isize - (cv.kw / 2) as isize;
+                                        if iy >= 0
+                                            && iy < h as isize
+                                            && ix >= 0
+                                            && ix < w as isize
+                                        {
+                                            let src = cur.lane(
+                                                ((iy as usize) * w + ix as usize) * cin
+                                                    + ci as usize,
+                                            );
+                                            simd::axpy_lanes(dst, src, wv as i64);
                                         }
                                     }
-                                }
-                                for acc in dst.iter_mut() {
-                                    *acc = apply_act(*acc, cv.act);
+                                    for acc in dst.iter_mut() {
+                                        *acc = apply_act(*acc, cv.act);
+                                    }
                                 }
                             }
                         }
-                    }
+                    });
                     owned = Some(out);
                     hwc = Some((h, w, cv.cout));
                 }
-                CompiledLayer::MaxPool => {
+                CompiledLayer::MaxPool(plan) => {
                     let (h, w, c) = match hwc {
                         Some(dims) => dims,
                         None => bail!("pool layer reached with flat input"),
                     };
                     let (oh, ow) = (h / 2, w / 2);
+                    debug_assert_eq!(plan.rows(), oh);
                     let mut out = ActivationBlock::zeros(b, oh * ow * c);
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            for ci in 0..c {
-                                let dst = out.lane_mut((oy * ow + ox) * c + ci);
-                                dst.fill(i64::MIN);
-                                for dy in 0..2 {
-                                    for dx in 0..2 {
-                                        let src = cur
-                                            .lane(((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ci);
-                                        for (m, &x) in dst.iter_mut().zip(src) {
-                                            *m = (*m).max(x);
+                    for_each_shard(plan, &mut out.data, ow * c * b, |rows, chunk| {
+                        for (ry, oy) in rows.enumerate() {
+                            for ox in 0..ow {
+                                for ci in 0..c {
+                                    let base = ((ry * ow + ox) * c + ci) * b;
+                                    let dst = &mut chunk[base..base + b];
+                                    dst.fill(i64::MIN);
+                                    for dy in 0..2 {
+                                        for dx in 0..2 {
+                                            let src = cur.lane(
+                                                ((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ci,
+                                            );
+                                            simd::max_lanes(dst, src);
                                         }
                                     }
                                 }
                             }
                         }
-                    }
+                    });
                     owned = Some(out);
                     hwc = Some((oh, ow, c));
                 }
@@ -424,6 +543,53 @@ mod tests {
         // wrong feature count is rejected, not mis-indexed
         let bad = ActivationBlock::from_samples_u8(&[&[0u8; 7]]).unwrap();
         assert!(compiled.forward_block(&bad).is_err());
+    }
+
+    #[test]
+    fn set_shards_keeps_scalar_and_block_paths_agreeing() {
+        use crate::nn::batch::ActivationBlock;
+        let mut rng = Rng::new(19);
+        let spec = ModelSpec {
+            name: "shrd".into(),
+            input_shape: vec![31],
+            layers: vec![
+                LayerSpec::Dense { input: 31, output: 13, act: Activation::Relu },
+                LayerSpec::Dense { input: 13, output: 5, act: Activation::None },
+            ],
+        };
+        let model = Model::synth(&spec, 29);
+        let q = quantize(&model, &[2.0, 1.0], RhoMode::Norm).unwrap();
+        let mut compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+        assert_eq!(compiled.shards(), 1);
+        let samples: Vec<Vec<u8>> =
+            (0..7).map(|_| (0..31).map(|_| rng.below(256) as u8).collect()).collect();
+        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let block = ActivationBlock::from_samples_u8(&views).unwrap();
+        let want = compiled.forward_block(&block).unwrap();
+        for shards in [2usize, 3, 8, 0] {
+            compiled.set_shards(shards);
+            assert_eq!(compiled.shards(), shards.max(1));
+            assert_eq!(compiled.forward_block(&block).unwrap(), want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn malformed_flat_conv_spec_compiles_but_forward_block_errors() {
+        use crate::nn::batch::ActivationBlock;
+        // conv over a flat input is a malformed spec (e.g. a crafted
+        // .pvqm): compile (which plans shards) must stay Ok, and the
+        // batched path must surface a recoverable error, not panic
+        let spec = ModelSpec {
+            name: "badc".into(),
+            input_shape: vec![9],
+            layers: vec![LayerSpec::Conv2d { kh: 3, kw: 3, cin: 1, cout: 2, act: Activation::Relu }],
+        };
+        let model = Model::synth(&spec, 1);
+        let q = quantize(&model, &[1.0], RhoMode::Norm).unwrap();
+        let mut compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+        compiled.set_shards(4); // must not panic either
+        let block = ActivationBlock::zeros(2, 9);
+        assert!(compiled.forward_block(&block).is_err());
     }
 
     #[test]

@@ -1,17 +1,21 @@
 //! Neural-network substrates: float reference engine, integer PVQ engine,
-//! bit-packed binary engine, batch-fused activation panels, model
-//! descriptors, weight container.
+//! bit-packed binary engine, batch-fused activation panels, shard
+//! planner/executor, SIMD-width lane kernels, model descriptors, weight
+//! container.
 
 pub mod batch;
 pub mod binary;
 pub mod csr_engine;
 pub mod layers;
 pub mod model;
+pub mod parallel;
 pub mod pvq_engine;
+pub mod simd;
 pub mod tensor;
 pub mod weights;
 
 pub use batch::{ActivationBlock, BitBlock};
+pub use parallel::ShardPlan;
 pub use binary::{BinaryDense, BinaryNet, BitVec};
 pub use layers::{classify, forward, LayerParams, Model};
 pub use model::{Activation, LayerSpec, ModelSpec};

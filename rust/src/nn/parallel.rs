@@ -1,0 +1,318 @@
+//! Shard planner + scoped-thread executor for intra-model parallelism.
+//!
+//! PR 2's batch-fused kernels amortize the weight-structure traversal
+//! over a micro-batch; this module adds the next scaling axis from the
+//! follow-up PVQ work (1911.10636): split one `forward_block` call over
+//! worker threads. The unit of partitioning is the **output row** — a
+//! CSR pulse list (dense), a spatial output row (conv/pool), or a
+//! per-value sign-mask row (binary) — because output rows own disjoint
+//! accumulator lanes. Each shard therefore writes a *disjoint,
+//! contiguous* slice of the column-major output panel, so the merge is
+//! free and deterministic: the sharded result is bitwise identical to
+//! the single-shard path regardless of thread scheduling (property-
+//! tested in `tests/batch_equivalence.rs` across shard counts
+//! {1,2,3,4,8}).
+//!
+//! Two pieces:
+//!
+//! * [`ShardPlan`] — precomputed contiguous row ranges, balanced by a
+//!   per-row work weight (CSR: pulses per row; binary: nonzero mask
+//!   words per row). Plans are built once when the shard count is set
+//!   (off the request path), not per call.
+//! * [`for_each_shard`] — a lightweight scoped-thread executor
+//!   (`std::thread::scope`, no dependencies): it splits the output
+//!   buffer into the plan's disjoint row slices and runs the kernel on
+//!   every shard concurrently. A single-range plan runs inline on the
+//!   calling thread — shard count 1 spawns nothing.
+//!
+//! # Example
+//!
+//! ```
+//! use pvqnet::nn::parallel::{for_each_shard, ShardPlan};
+//!
+//! // 5 rows of 2 lanes each, row weights skewed toward row 0
+//! let plan = ShardPlan::balanced(&[8, 1, 1, 1, 1], 2);
+//! assert!(plan.shard_count() <= 2);
+//! let mut out = vec![0i64; 5 * 2];
+//! for_each_shard(&plan, &mut out, 2, |rows, chunk| {
+//!     for (ri, row) in rows.enumerate() {
+//!         for lane in &mut chunk[ri * 2..(ri + 1) * 2] {
+//!             *lane = row as i64;
+//!         }
+//!     }
+//! });
+//! assert_eq!(out, vec![0, 0, 1, 1, 2, 2, 3, 3, 4, 4]);
+//! ```
+
+use std::ops::Range;
+
+/// Minimum planner weight (CSR pulses, conv tap-applications, binary
+/// mask words — each standing for one `B`-lane inner-loop pass) a
+/// shard must carry before [`ShardPlan::balanced_capped`] grants it a
+/// thread. Rough amortization heuristic: ~2k lane passes is tens of
+/// microseconds of kernel work even at small `B`, comfortably above a
+/// scoped-thread spawn+join.
+pub const MIN_SHARD_WORK: u64 = 2048;
+
+/// A partition of `0..rows` output rows into contiguous, disjoint,
+/// covering ranges — one per worker shard. Built off the request path
+/// and reused by every `forward_block` call.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Disjoint contiguous ranges; concatenated they cover `0..rows`.
+    ranges: Vec<Range<usize>>,
+    rows: usize,
+}
+
+impl ShardPlan {
+    /// The trivial plan: one shard owning every row (inline execution).
+    pub fn single(rows: usize) -> Self {
+        ShardPlan { ranges: vec![0..rows], rows }
+    }
+
+    /// Partition rows of equal cost into at most `shards` ranges.
+    pub fn uniform(rows: usize, shards: usize) -> Self {
+        Self::balanced(&vec![1u64; rows], shards)
+    }
+
+    /// Partition rows into at most `shards` contiguous ranges so that
+    /// each range carries a near-equal share of the total row weight
+    /// (e.g. CSR pulses per output row). Every row costs its weight
+    /// plus one (bias fill + activation are paid even by empty rows).
+    /// Empty ranges are never emitted, so heavily skewed weights or
+    /// `rows < shards` simply yield fewer shards.
+    pub fn balanced(weights: &[u64], shards: usize) -> Self {
+        let rows = weights.len();
+        let shards = shards.max(1);
+        if shards == 1 || rows <= 1 {
+            return ShardPlan::single(rows);
+        }
+        let total: u64 = weights.iter().map(|&w| w + 1).sum();
+        let s = shards as u64;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        let mut acc = 0u64;
+        let mut cut = 1u64;
+        for (i, &w) in weights.iter().enumerate() {
+            acc += w + 1;
+            // close the current shard once the running weight reaches
+            // its proportional target (acc/total ≥ cut/shards)
+            if cut < s && acc * s >= total * cut {
+                ranges.push(start..i + 1);
+                start = i + 1;
+                while cut < s && acc * s >= total * cut {
+                    cut += 1;
+                }
+            }
+        }
+        if start < rows {
+            ranges.push(start..rows);
+        }
+        if ranges.is_empty() {
+            return ShardPlan::single(rows);
+        }
+        ShardPlan { ranges, rows }
+    }
+
+    /// Like [`ShardPlan::balanced`], but capped so that every shard
+    /// carries at least [`MIN_SHARD_WORK`] weight: a layer whose total
+    /// work cannot feed that many shards gets fewer — down to a single
+    /// inline shard — because spawning and joining a scoped thread
+    /// (tens of microseconds) costs more than a tiny kernel recovers.
+    /// The engines' `set_shards` use this, so a `--shards 8`
+    /// configuration shards the big layers and leaves e.g. a 10-row
+    /// logit layer single-threaded.
+    pub fn balanced_capped(weights: &[u64], shards: usize) -> Self {
+        let total: u64 = weights.iter().map(|&w| w + 1).sum();
+        let cap = (total / MIN_SHARD_WORK).max(1) as usize;
+        Self::balanced(weights, shards.min(cap))
+    }
+
+    /// The planned ranges (disjoint, contiguous, covering `0..rows()`).
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// Number of shards the plan actually produced (≤ the requested
+    /// count when there is not enough work to split).
+    pub fn shard_count(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Total rows covered by the plan.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+/// Run `kernel` over every shard of `plan`, concurrently.
+///
+/// `data` is the column-major output buffer with `row_width` elements
+/// per row (for a `B`-wide activation panel, `row_width = B` per output
+/// feature). Each shard receives its absolute row range plus the
+/// mutable sub-slice of `data` holding exactly those rows, obtained by
+/// `split_at_mut` — disjointness is enforced by construction, so the
+/// merge is a no-op and the result does not depend on scheduling.
+///
+/// Plans with a single range run inline on the calling thread: the
+/// shards=1 configuration has zero threading overhead. Multi-range
+/// plans run under [`std::thread::scope`], which joins every worker
+/// before returning (panics in a shard propagate to the caller); the
+/// final shard always executes on the calling thread itself, so an
+/// N-shard plan spawns N−1 threads and no core idles at the join
+/// point.
+pub fn for_each_shard<T, F>(plan: &ShardPlan, data: &mut [T], row_width: usize, kernel: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    let rows = plan.rows();
+    debug_assert!(
+        data.len() >= rows * row_width,
+        "output buffer too small: {} < {rows}×{row_width}",
+        data.len()
+    );
+    if plan.ranges.len() <= 1 {
+        kernel(0..rows, &mut data[..rows * row_width]);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let kernel = &kernel;
+        let mut rest = &mut data[..rows * row_width];
+        let (last, spawned) = plan.ranges.split_last().expect("plans are never empty");
+        for r in spawned {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * row_width);
+            rest = tail;
+            let range = r.clone();
+            scope.spawn(move || kernel(range, chunk));
+        }
+        // the calling thread would otherwise idle at the join point —
+        // run the final shard here instead of spawning for it
+        debug_assert_eq!(rest.len(), last.len() * row_width);
+        kernel(last.clone(), rest);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    fn assert_covers(plan: &ShardPlan, rows: usize) {
+        let mut next = 0usize;
+        for r in plan.ranges() {
+            assert_eq!(r.start, next, "ranges must be contiguous");
+            assert!(r.end > r.start, "no empty ranges");
+            next = r.end;
+        }
+        assert_eq!(next, rows, "ranges must cover all rows");
+        assert_eq!(plan.rows(), rows);
+    }
+
+    #[test]
+    fn single_and_uniform_cover() {
+        assert_covers(&ShardPlan::single(7), 7);
+        assert_eq!(ShardPlan::single(7).shard_count(), 1);
+        for shards in [1usize, 2, 3, 4, 8, 100] {
+            let plan = ShardPlan::uniform(10, shards);
+            assert_covers(&plan, 10);
+            assert!(plan.shard_count() <= shards.min(10));
+        }
+    }
+
+    #[test]
+    fn uniform_splits_evenly() {
+        let plan = ShardPlan::uniform(8, 4);
+        assert_eq!(plan.shard_count(), 4);
+        for r in plan.ranges() {
+            assert_eq!(r.len(), 2);
+        }
+    }
+
+    #[test]
+    fn balanced_respects_weights() {
+        // one huge row then light rows: the heavy row gets its own shard
+        let plan = ShardPlan::balanced(&[100, 1, 1, 1, 1, 1], 2);
+        assert_covers(&plan, 6);
+        assert_eq!(plan.shard_count(), 2);
+        assert_eq!(plan.ranges()[0], 0..1);
+        assert_eq!(plan.ranges()[1], 1..6);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // zero rows
+        let plan = ShardPlan::balanced(&[], 4);
+        assert_eq!(plan.rows(), 0);
+        assert_eq!(plan.shard_count(), 1);
+        // one row cannot split
+        assert_eq!(ShardPlan::balanced(&[5], 8).shard_count(), 1);
+        // fewer rows than shards → at most one shard per row
+        let plan = ShardPlan::uniform(3, 8);
+        assert_covers(&plan, 3);
+        assert!(plan.shard_count() <= 3);
+        // all-zero weights still cover (every row costs weight+1)
+        let plan = ShardPlan::balanced(&[0, 0, 0, 0], 2);
+        assert_covers(&plan, 4);
+    }
+
+    #[test]
+    fn capped_plan_collapses_tiny_layers() {
+        // 10 rows × 10 weight = far below MIN_SHARD_WORK → one shard
+        let plan = ShardPlan::balanced_capped(&[10; 10], 8);
+        assert_eq!(plan.shard_count(), 1);
+        assert_covers(&plan, 10);
+        // enough work per shard → the requested count is honored
+        let heavy = vec![MIN_SHARD_WORK; 16];
+        let plan = ShardPlan::balanced_capped(&heavy, 4);
+        assert_eq!(plan.shard_count(), 4);
+        assert_covers(&plan, 16);
+        // in between: shard count degrades gracefully, never to zero
+        let plan = ShardPlan::balanced_capped(&[MIN_SHARD_WORK; 3], 8);
+        assert_covers(&plan, 3);
+        assert!(plan.shard_count() >= 1 && plan.shard_count() <= 3);
+    }
+
+    #[test]
+    fn prop_balanced_always_covers() {
+        check("shard-plan-cover", 4242, 30, |_, rng| {
+            let rows = rng.below(40) as usize;
+            let weights: Vec<u64> = (0..rows).map(|_| rng.below(50)).collect();
+            for shards in [1usize, 2, 3, 4, 8, 13] {
+                let plan = ShardPlan::balanced(&weights, shards);
+                assert_covers(&plan, rows);
+                assert!(plan.shard_count() <= shards.max(1));
+            }
+        });
+    }
+
+    #[test]
+    fn executor_runs_every_row_once() {
+        let mut rng = Rng::new(9);
+        for shards in [1usize, 2, 3, 5] {
+            let rows = 11;
+            let width = 3;
+            let weights: Vec<u64> = (0..rows).map(|_| rng.below(10)).collect();
+            let plan = ShardPlan::balanced(&weights, shards);
+            let mut out = vec![0i64; rows * width];
+            for_each_shard(&plan, &mut out, width, |range, chunk| {
+                for (ri, row) in range.enumerate() {
+                    for (k, lane) in chunk[ri * width..(ri + 1) * width].iter_mut().enumerate() {
+                        *lane += (row * width + k) as i64 + 1;
+                    }
+                }
+            });
+            let want: Vec<i64> = (0..rows * width).map(|i| i as i64 + 1).collect();
+            assert_eq!(out, want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn executor_zero_rows_is_noop() {
+        let plan = ShardPlan::single(0);
+        let mut out: Vec<i64> = Vec::new();
+        for_each_shard(&plan, &mut out, 4, |range, _chunk| {
+            assert!(range.is_empty());
+        });
+    }
+}

@@ -1,0 +1,211 @@
+//! SIMD-width inner-loop kernels for the batch-fused engines.
+//!
+//! The batched hot loops all reduce to the same three lane operations
+//! over a column-major `B`-wide panel: `acc[s] += w·x[s]` (CSR taps and
+//! the binary net's integer first layer), `acc[s] = max(acc[s], x[s])`
+//! (pooling), and `plus[s] += popcount(m & x[s])` (binary sign-mask
+//! rows). This module gives each a fixed-width form:
+//!
+//! * The integer kernels process lanes in fixed chunks of
+//!   [`LANE_WIDTH`] = 8 `i64`s via `chunks_exact`, so the compiler sees
+//!   a constant-trip-count inner loop it can unroll and autovectorize
+//!   (two 256-bit vectors per chunk on AVX2, four 128-bit on NEON),
+//!   with a scalar tail for the remainder.
+//! * The popcount kernel additionally has an explicit
+//!   `std::arch` AVX2 path, gated on `target_arch = "x86_64"` at
+//!   compile time and `is_x86_feature_detected!("avx2")` at runtime
+//!   (positional-popcount via the Muła nibble-LUT + `vpsadbw`
+//!   reduction). Popcount is exact, so the SIMD path is bitwise
+//!   identical to the scalar one — the batch-equivalence properties
+//!   cover it on AVX2 hosts and fall back to the portable loop
+//!   elsewhere.
+//!
+//! Integer adds are associative, so none of these change numerics:
+//! every kernel is a pure reshaping of the scalar loop.
+
+/// Fixed lane-chunk width of the integer kernels (8 × i64 = two AVX2
+/// registers); chosen so one chunk fills a cache line.
+pub const LANE_WIDTH: usize = 8;
+
+/// `dst[s] += w * src[s]` for every lane `s` — the per-tap update of
+/// the batch-fused CSR and integer-dense kernels, in [`LANE_WIDTH`]
+/// chunks.
+///
+/// ```
+/// let mut acc = vec![1i64; 11];
+/// let x: Vec<i64> = (0..11).collect();
+/// pvqnet::nn::simd::axpy_lanes(&mut acc, &x, 3);
+/// assert_eq!(acc[10], 1 + 3 * 10);
+/// ```
+#[inline]
+pub fn axpy_lanes(dst: &mut [i64], src: &[i64], w: i64) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut d = dst.chunks_exact_mut(LANE_WIDTH);
+    let mut s = src.chunks_exact(LANE_WIDTH);
+    for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+        // constant trip count: unrolled + vectorized by the compiler
+        for (acc, &x) in dc.iter_mut().zip(sc) {
+            *acc += w * x;
+        }
+    }
+    for (acc, &x) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *acc += w * x;
+    }
+}
+
+/// `dst[s] = max(dst[s], src[s])` for every lane `s` — the batched
+/// 2×2 maxpool update, in [`LANE_WIDTH`] chunks.
+#[inline]
+pub fn max_lanes(dst: &mut [i64], src: &[i64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut d = dst.chunks_exact_mut(LANE_WIDTH);
+    let mut s = src.chunks_exact(LANE_WIDTH);
+    for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+        for (m, &x) in dc.iter_mut().zip(sc) {
+            *m = (*m).max(x);
+        }
+    }
+    for (m, &x) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *m = (*m).max(x);
+    }
+}
+
+/// Signature of the AND+popcount lane kernel: `plus[s] +=
+/// popcount(m & x[s])` for every lane `s`.
+pub type PopcountFn = fn(u64, &[u64], &mut [u32]);
+
+/// Resolve the AND+popcount lane kernel for this host **once**: the
+/// AVX2 path when the CPU supports it, the portable loop otherwise.
+/// The binary engine hoists this call out of its hot loop so the
+/// feature-detection branch is not re-taken per mask word.
+pub fn popcount_kernel() -> PopcountFn {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            // SAFETY: the avx2 target feature was just detected at runtime.
+            return |m, x, plus| unsafe { x86::and_popcount_lanes_avx2(m, x, plus) };
+        }
+    }
+    and_popcount_lanes_scalar
+}
+
+/// `plus[s] += popcount(m & x[s])` for every lane `s` — one weight-mask
+/// word ANDed against the `B` packed activation words of a bit-plane
+/// (the binary engine's inner loop). Convenience wrapper around
+/// [`popcount_kernel`] that re-resolves the dispatch per call; hot
+/// loops should resolve once instead. Both paths are bitwise identical.
+#[inline]
+pub fn and_popcount_lanes(m: u64, x: &[u64], plus: &mut [u32]) {
+    debug_assert_eq!(x.len(), plus.len());
+    popcount_kernel()(m, x, plus);
+}
+
+/// Portable reference path of [`and_popcount_lanes`].
+#[inline]
+fn and_popcount_lanes_scalar(m: u64, x: &[u64], plus: &mut [u32]) {
+    for (p, &xw) in plus.iter_mut().zip(x) {
+        *p += (m & xw).count_ones();
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Muła's positional popcount: per-byte counts via a nibble LUT
+    /// (`vpshufb`), reduced to per-u64 counts with `vpsadbw` — four
+    /// packed activation words per iteration.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified that the host supports AVX2
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn and_popcount_lanes_avx2(m: u64, x: &[u64], plus: &mut [u32]) {
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let mv = _mm256_set1_epi64x(m as i64);
+        let mut i = 0usize;
+        while i + 4 <= x.len() {
+            let v = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            let v = _mm256_and_si256(v, mv);
+            let lo = _mm256_and_si256(v, low_mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+            let per_byte =
+                _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+            // sum-of-absolute-differences vs 0 = per-64-bit-lane popcount
+            let sums = _mm256_sad_epu8(per_byte, _mm256_setzero_si256());
+            let mut out = [0u64; 4];
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, sums);
+            for (p, &c) in plus[i..i + 4].iter_mut().zip(&out) {
+                *p += c as u32;
+            }
+            i += 4;
+        }
+        for (p, &xw) in plus[i..].iter_mut().zip(&x[i..]) {
+            *p += (m & xw).count_ones();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn axpy_matches_scalar_all_tail_lengths() {
+        let mut rng = Rng::new(1);
+        for len in 0..=3 * LANE_WIDTH {
+            let src: Vec<i64> = (0..len).map(|_| rng.below(1000) as i64 - 500).collect();
+            let mut dst: Vec<i64> = (0..len).map(|_| rng.below(1000) as i64 - 500).collect();
+            let w = rng.below(7) as i64 - 3;
+            let want: Vec<i64> = dst.iter().zip(&src).map(|(&d, &s)| d + w * s).collect();
+            axpy_lanes(&mut dst, &src, w);
+            assert_eq!(dst, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn max_matches_scalar_all_tail_lengths() {
+        let mut rng = Rng::new(2);
+        for len in 0..=3 * LANE_WIDTH {
+            let src: Vec<i64> = (0..len).map(|_| rng.below(1000) as i64 - 500).collect();
+            let mut dst: Vec<i64> = (0..len).map(|_| rng.below(1000) as i64 - 500).collect();
+            let want: Vec<i64> = dst.iter().zip(&src).map(|(&d, &s)| d.max(s)).collect();
+            max_lanes(&mut dst, &src);
+            assert_eq!(dst, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn prop_popcount_dispatch_matches_scalar() {
+        // exercises the AVX2 path on hosts that have it, including the
+        // ragged <4-word tail; on others this is scalar-vs-scalar
+        check("simd-popcount", 4243, 20, |_, rng| {
+            let b = 1 + rng.below(19) as usize;
+            let m = rng.next_u64();
+            let x: Vec<u64> = (0..b).map(|_| rng.next_u64()).collect();
+            let base: Vec<u32> = (0..b).map(|_| rng.below(100) as u32).collect();
+            let mut got = base.clone();
+            and_popcount_lanes(m, &x, &mut got);
+            let mut want = base.clone();
+            and_popcount_lanes_scalar(m, &x, &mut want);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn popcount_known_values() {
+        let mut plus = vec![0u32; 6];
+        let x = vec![u64::MAX, 0, 1, 0xff00, u64::MAX, 0b1010];
+        and_popcount_lanes(u64::MAX, &x, &mut plus);
+        assert_eq!(plus, vec![64, 0, 1, 8, 64, 2]);
+        and_popcount_lanes(0, &x, &mut plus);
+        assert_eq!(plus, vec![64, 0, 1, 8, 64, 2]); // mask 0 adds nothing
+    }
+}

@@ -235,6 +235,7 @@ fn registry_serves_two_models_concurrently_with_correct_predictions() {
                 max_wait: std::time::Duration::from_millis(1),
                 workers: 2,
                 queue_cap: 512,
+                shards: 2,
             },
         )
         .unwrap(),

@@ -8,6 +8,13 @@
 //! float accumulator would allow. The properties sweep odd shapes on
 //! purpose: B=1, B=n_threads+1, feature counts that are not a multiple
 //! of the 64-bit bit-plane width.
+//!
+//! The same contract extends to sharding (`set_shards`): each shard
+//! writes a disjoint slice of the output panel, so for every shard
+//! count in {1, 2, 3, 4, 8} — including counts exceeding the row count
+//! — the sharded output must equal the single-shard output bit for bit.
+//! The shard sweeps below enforce this for both engines, layer kinds
+//! (dense/conv/pool), and the end-to-end registry serving path.
 
 use pvqnet::coordinator::{Engine, EngineKind, ModelRegistry, ServerConfig};
 use pvqnet::nn::batch::{ActivationBlock, BitBlock};
@@ -167,6 +174,248 @@ fn prop_binary_dense_block_matches_scalar_rows() {
     });
 }
 
+/// The acceptance sweep: shard counts {1, 2, 3, 4, 8} (3 never divides
+/// power-of-two row counts evenly; 8 usually exceeds the layer widths
+/// here, exercising the fewer-shards-than-requested fallback).
+const SHARD_SWEEP: [usize; 5] = [1, 2, 3, 4, 8];
+
+#[test]
+fn prop_csr_sharded_bitwise_identical() {
+    check("csr-shard-sweep", 9101, 8, |_, rng| {
+        // odd dims: row counts never divisible by the shard counts
+        let d0 = 5 + rng.below(90) as usize;
+        let d1 = 3 + rng.below(40) as usize;
+        let d2 = 2 + rng.below(9) as usize;
+        let spec = ModelSpec {
+            name: "shq".into(),
+            input_shape: vec![d0],
+            layers: vec![
+                LayerSpec::Dense { input: d0, output: d1, act: Activation::Relu },
+                LayerSpec::Dense { input: d1, output: d2, act: Activation::None },
+            ],
+        };
+        let model = Model::synth(&spec, rng.next_u64());
+        let q = quantize(&model, &[3.0, 2.0], RhoMode::Norm).unwrap();
+        let mut compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+        for b in [1usize, odd_batch()] {
+            let samples = random_samples(rng, b, d0);
+            let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+            let block = ActivationBlock::from_samples_u8(&views).unwrap();
+            compiled.set_shards(1);
+            let want = compiled.forward_block(&block).unwrap();
+            // single-shard block path equals the scalar path…
+            for (s, sample) in samples.iter().enumerate() {
+                let scalar = compiled.forward(&ITensor::from_u8(&[d0], sample));
+                assert_eq!(want.row(s), scalar, "B={b} sample {s}");
+            }
+            // …and every sharded run equals it bit for bit
+            for shards in SHARD_SWEEP {
+                compiled.set_shards(shards);
+                let got = compiled.forward_block(&block).unwrap();
+                assert_eq!(got, want, "B={b} shards={shards}");
+            }
+        }
+    });
+}
+
+#[test]
+fn csr_cnn_sharded_bitwise_identical() {
+    // conv + pool + flatten + dense with an odd 7×7 image: the conv
+    // plan splits 7 rows, the pool plan 3 — neither divisible by the
+    // even shard counts
+    let spec = ModelSpec {
+        name: "shqc".into(),
+        input_shape: vec![7, 7, 2],
+        layers: vec![
+            LayerSpec::Scale(1.0 / 255.0),
+            LayerSpec::Conv2d { kh: 3, kw: 3, cin: 2, cout: 5, act: Activation::Relu },
+            LayerSpec::MaxPool2x2,
+            LayerSpec::Flatten,
+            LayerSpec::Dense { input: 3 * 3 * 5, output: 4, act: Activation::None },
+        ],
+    };
+    let model = Model::synth(&spec, 41);
+    let q = quantize(&model, &[1.0, 2.0], RhoMode::Norm).unwrap();
+    let mut compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+    let mut rng = Rng::new(42);
+    for b in [1usize, odd_batch(), 16] {
+        let samples = random_samples(&mut rng, b, 7 * 7 * 2);
+        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let block = ActivationBlock::from_samples_u8(&views).unwrap();
+        compiled.set_shards(1);
+        let want = compiled.forward_block(&block).unwrap();
+        for shards in SHARD_SWEEP {
+            compiled.set_shards(shards);
+            assert_eq!(compiled.forward_block(&block).unwrap(), want, "B={b} shards={shards}");
+            assert_eq!(
+                compiled.classify_block(&block).unwrap(),
+                want.argmax_rows(),
+                "B={b} shards={shards}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_binary_sharded_bitwise_identical() {
+    check("binary-shard-sweep", 9102, 6, |_, rng| {
+        // widths straddle the 64-bit plane boundary on purpose
+        let d0 = 40 + rng.below(60) as usize;
+        let d1 = 50 + rng.below(40) as usize;
+        let d2 = 30 + rng.below(40) as usize;
+        let d3 = 2 + rng.below(8) as usize;
+        let spec = ModelSpec {
+            name: "shqb".into(),
+            input_shape: vec![d0],
+            layers: vec![
+                LayerSpec::Dense { input: d0, output: d1, act: Activation::BSign },
+                LayerSpec::Dense { input: d1, output: d2, act: Activation::BSign },
+                LayerSpec::Dense { input: d2, output: d3, act: Activation::None },
+            ],
+        };
+        let model = Model::synth(&spec, rng.next_u64());
+        let qm = quantize(&model, &[2.0, 2.0, 1.0], RhoMode::Norm).unwrap().quant_model;
+        let mut net = BinaryNet::compile(&qm).unwrap();
+        for b in [1usize, odd_batch()] {
+            let samples = random_samples(rng, b, d0);
+            let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+            net.set_shards(1);
+            let want = net.forward_block_u8(&views).unwrap();
+            for (s, sample) in samples.iter().enumerate() {
+                assert_eq!(want[s], net.forward_u8(sample).unwrap(), "B={b} sample {s}");
+            }
+            for shards in SHARD_SWEEP {
+                net.set_shards(shards);
+                assert_eq!(net.forward_block_u8(&views).unwrap(), want, "B={b} shards={shards}");
+            }
+        }
+    });
+}
+
+/// The small models above are below the planner's per-shard work floor,
+/// so their plans collapse to one range. This test uses layers big
+/// enough that `set_shards(8)` provably grants multiple ranges — the
+/// only way to exercise the relative-vs-absolute row indexing inside
+/// the sharded kernels — and re-checks bitwise identity there.
+#[test]
+fn large_layers_get_multi_range_plans_and_stay_bitwise_identical() {
+    let mut rng = Rng::new(51);
+
+    // dense MLP: ~12k pulses in the first layer
+    let spec = ModelSpec {
+        name: "shbig".into(),
+        input_shape: vec![256],
+        layers: vec![
+            LayerSpec::Dense { input: 256, output: 96, act: Activation::Relu },
+            LayerSpec::Dense { input: 96, output: 10, act: Activation::None },
+        ],
+    };
+    let q = quantize(&Model::synth(&spec, 50), &[2.0, 1.0], RhoMode::Norm).unwrap();
+    let mut compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+    compiled.set_shards(8);
+    let granted = compiled.layer_shard_counts();
+    assert!(granted.iter().any(|&c| c > 1), "expected multi-range plans, got {granted:?}");
+    let samples = random_samples(&mut rng, 5, 256);
+    let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+    let block = ActivationBlock::from_samples_u8(&views).unwrap();
+    compiled.set_shards(1);
+    let want = compiled.forward_block(&block).unwrap();
+    for (s, sample) in samples.iter().enumerate() {
+        assert_eq!(want.row(s), compiled.forward(&ITensor::from_u8(&[256], sample)), "sample {s}");
+    }
+    for shards in SHARD_SWEEP {
+        compiled.set_shards(shards);
+        assert_eq!(compiled.forward_block(&block).unwrap(), want, "shards={shards}");
+    }
+
+    // CNN: 32×32×4 so conv, pool, and the readout dense all clear the
+    // work floor (K=N keeps every conv tap nonzero)
+    let cnn = ModelSpec {
+        name: "shbigc".into(),
+        input_shape: vec![32, 32, 4],
+        layers: vec![
+            LayerSpec::Conv2d { kh: 3, kw: 3, cin: 4, cout: 4, act: Activation::Relu },
+            LayerSpec::MaxPool2x2,
+            LayerSpec::Flatten,
+            LayerSpec::Dense { input: 16 * 16 * 4, output: 7, act: Activation::None },
+        ],
+    };
+    let q = quantize(&Model::synth(&cnn, 52), &[1.0, 1.0], RhoMode::Norm).unwrap();
+    let mut compiled = CompiledQuantModel::compile(&q.quant_model).unwrap();
+    compiled.set_shards(8);
+    let granted = compiled.layer_shard_counts();
+    assert!(
+        granted.iter().filter(|&&c| c > 1).count() >= 2,
+        "expected conv and pool multi-range plans, got {granted:?}"
+    );
+    let samples = random_samples(&mut rng, 5, 32 * 32 * 4);
+    let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+    let block = ActivationBlock::from_samples_u8(&views).unwrap();
+    compiled.set_shards(1);
+    let want = compiled.forward_block(&block).unwrap();
+    for shards in SHARD_SWEEP {
+        compiled.set_shards(shards);
+        assert_eq!(compiled.forward_block(&block).unwrap(), want, "cnn shards={shards}");
+    }
+
+    // binary net: the 512×256 integer first layer clears the floor
+    let bspec = ModelSpec {
+        name: "shbigb".into(),
+        input_shape: vec![512],
+        layers: vec![
+            LayerSpec::Dense { input: 512, output: 256, act: Activation::BSign },
+            LayerSpec::Dense { input: 256, output: 64, act: Activation::BSign },
+            LayerSpec::Dense { input: 64, output: 10, act: Activation::None },
+        ],
+    };
+    let qm = quantize(&Model::synth(&bspec, 53), &[2.0, 2.0, 1.0], RhoMode::Norm)
+        .unwrap()
+        .quant_model;
+    let mut net = BinaryNet::compile(&qm).unwrap();
+    net.set_shards(8);
+    let granted = net.layer_shard_counts();
+    assert!(granted.iter().any(|&c| c > 1), "expected multi-range plans, got {granted:?}");
+    let bsamples = random_samples(&mut rng, 3, 512);
+    let bviews: Vec<&[u8]> = bsamples.iter().map(|s| s.as_slice()).collect();
+    net.set_shards(1);
+    let bwant = net.forward_block_u8(&bviews).unwrap();
+    for (s, sample) in bsamples.iter().enumerate() {
+        assert_eq!(bwant[s], net.forward_u8(sample).unwrap(), "sample {s}");
+    }
+    for shards in SHARD_SWEEP {
+        net.set_shards(shards);
+        assert_eq!(net.forward_block_u8(&bviews).unwrap(), bwant, "binary shards={shards}");
+    }
+}
+
+#[test]
+fn binary_dense_layer_sharded_matches() {
+    // the popcount layer kernel on its own: shard counts beyond the row
+    // count, partial trailing words, and a shard-count sweep per batch
+    let mut rng = Rng::new(43);
+    let (input, output) = (130, 11); // 3 mask words per row, 11 rows
+    let w: Vec<i32> = (0..input * output)
+        .map(|_| match rng.below(10) {
+            0..=5 => 0,
+            6 => 1,
+            7 => -1,
+            8 => 2,
+            _ => -3,
+        })
+        .collect();
+    let bias: Vec<i32> = (0..output).map(|_| (rng.below(5) as i32) - 2).collect();
+    let mut bd = BinaryDense::compile(&w, &bias, input, output);
+    let rows: Vec<Vec<i64>> = (0..5)
+        .map(|_| (0..input).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect())
+        .collect();
+    let blk = BitBlock::from_pm1_rows(&rows).unwrap();
+    let want = bd.forward_block(&blk);
+    for shards in SHARD_SWEEP.into_iter().chain([64]) {
+        bd.set_shards(shards);
+        assert_eq!(bd.forward_block(&blk), want, "shards={shards}");
+    }
+}
+
 #[test]
 fn engine_batched_dispatch_matches_scalar_engines() {
     let spec = ModelSpec {
@@ -212,8 +461,9 @@ fn engine_batched_dispatch_matches_scalar_engines() {
 
 #[test]
 fn registry_batched_serving_matches_direct_engines() {
-    // end to end: registry → server → batcher → worker → forward_block,
-    // answers must equal the direct (unserved) engine for both engines
+    // end to end: registry → server → batcher → worker → sharded
+    // forward_block (shards=3 via ServerConfig), answers must equal the
+    // direct (unserved, single-shard) engine for both engines
     let spec = |act, name: &str| ModelSpec {
         name: name.into(),
         input_shape: vec![48],
@@ -232,14 +482,15 @@ fn registry_batched_serving_matches_direct_engines() {
     let compiled = CompiledQuantModel::compile(&relu).unwrap();
     let net = BinaryNet::compile(&bsign).unwrap();
 
-    let mut reg = ModelRegistry::new(ServerConfig::default());
+    let mut reg = ModelRegistry::new(ServerConfig { shards: 3, ..Default::default() });
     reg.register_quant("csr", relu.clone(), EngineKind::Auto, None).unwrap();
     reg.register_quant("bin", bsign.clone(), EngineKind::Auto, None).unwrap();
-    // auto-selection picked the batched engines
+    // auto-selection picked the batched engines, sharded per the config
     let models = reg.models();
     assert_eq!(models[0].name, "bin");
     assert_eq!(models[0].engine, "binary");
     assert_eq!(models[1].engine, "pvq-csr");
+    assert!(models.iter().all(|m| m.shards == 3));
 
     let mut rng = Rng::new(33);
     let samples = random_samples(&mut rng, 40, 48);

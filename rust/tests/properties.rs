@@ -158,6 +158,7 @@ fn prop_coordinator_exactly_once() {
             max_wait: Duration::from_micros(300),
             workers: 2,
             queue_cap: 4096,
+            shards: 1,
         },
     ));
     let clients = 4;

@@ -1,7 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 verification + doc gate + lint gate. Run from anywhere; executes in rust/.
+# The repository's single verification entrypoint: fmt gate + tier-1
+# build/tests + doc gate + lint gate. Run from anywhere; executes in
+# rust/. CI (.github/workflows/ci.yml) invokes this same script, so the
+# local gate and the CI gate cannot drift.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+echo "== cargo fmt --check"
+cargo fmt --all -- --check
 
 echo "== cargo build --release"
 cargo build --release
@@ -14,7 +20,7 @@ echo "== cargo doc --no-deps"
 cargo doc --no-deps
 
 echo "== cargo test --doc -q"
-# runnable doc-examples (pvq::encode, artifact, nn::batch, …) must stay green
+# runnable doc-examples (pvq::encode, artifact, nn::batch, nn::parallel, …)
 cargo test --doc -q
 
 echo "== cargo clippy --all-targets -- -D warnings"
