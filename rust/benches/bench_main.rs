@@ -4,7 +4,7 @@
 //!     cargo bench                       # run everything
 //!     cargo bench -- table5             # run one experiment
 //!     cargo bench -- --list             # list experiments
-//!     cargo bench -- batch shard --smoke   # CI smoke: 1 iteration each
+//!     cargo bench -- batch shard http --smoke   # CI smoke: 1 iteration each
 //!
 //! One target per paper table/figure (docs/ARCHITECTURE.md §4) plus microbenchmarks
 //! and ablations. Experiments that need trained artifacts print SKIP when
@@ -368,6 +368,111 @@ fn bench_serve() {
     }
 }
 
+/// Read and discard one `Content-Length`-framed HTTP response off
+/// `stream`, asserting a 200; `buf` carries keep-alive leftovers.
+fn read_http_response(stream: &mut std::net::TcpStream, buf: &mut Vec<u8>) {
+    use std::io::Read;
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read http head");
+        assert!(n > 0, "server closed mid-response");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).unwrap();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (name, v) = l.split_once(':')?;
+            name.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
+        })
+        .expect("content-length header");
+    let total = head_end + 4 + len;
+    while buf.len() < total {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read http body");
+        assert!(n > 0, "server closed mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    *buf = buf.split_off(total);
+}
+
+/// HTTP front-end latency sweep: concurrent keep-alive loopback clients
+/// hammer `POST /v1/classify` (synth net A through the registry's auto
+/// engine) at client counts {1, 4, 16}; per-request latency p50/p99 and
+/// aggregate req/s land in `BENCH_http.json`. Under `--smoke` each
+/// client sends a single request (CI bit-rot gate).
+fn bench_http() {
+    use pvqnet::coordinator::{EngineKind, HttpConfig, HttpServer, ModelRegistry};
+    use std::io::Write;
+    use std::net::TcpStream;
+
+    let spec = ModelSpec::by_name("a").unwrap();
+    let model = pvqnet::nn::Model::synth(&spec, 42);
+    let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
+    let mut reg = ModelRegistry::new(ServerConfig { queue_cap: 8192, ..Default::default() });
+    reg.register_quant("net_a", q.quant_model, EngineKind::Auto, None).unwrap();
+    // one connection worker per client at the top of the sweep — the
+    // sweep measures serving latency, not connection-pool starvation
+    let http_cfg = HttpConfig { conn_workers: 16, ..Default::default() };
+    let server = HttpServer::start(reg, http_cfg, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let input_len: usize = spec.input_shape.iter().product();
+
+    let mut entries: Vec<String> = Vec::new();
+    for clients in [1usize, 4, 16] {
+        let per_client = if smoke() { 1 } else { 50 };
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for ci in 0..clients {
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(900 + ci as u64);
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut buf = Vec::new();
+                let mut lat_us = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let pixels: Vec<String> =
+                        (0..input_len).map(|_| rng.below(256).to_string()).collect();
+                    let body = format!("{{\"pixels\":[{}]}}", pixels.join(","));
+                    let raw = format!(
+                        "POST /v1/classify HTTP/1.1\r\nContent-Length: {}\r\n\
+                         Connection: keep-alive\r\n\r\n{body}",
+                        body.len()
+                    );
+                    let t = Instant::now();
+                    stream.write_all(raw.as_bytes()).unwrap();
+                    read_http_response(&mut stream, &mut buf);
+                    lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                lat_us
+            }));
+        }
+        let mut lats: Vec<f64> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = lats.len();
+        let p50 = lats[n / 2];
+        let p99 = lats[(n * 99 / 100).min(n - 1)];
+        let rps = n as f64 / wall.max(1e-12);
+        println!(
+            "  clients={clients:>3}: {rps:>8.0} req/s  p50 {p50:>8.0}µs  p99 {p99:>8.0}µs  ({n} requests)"
+        );
+        entries.push(format!(
+            "{{\"clients\":{clients},\"requests\":{n},\"rps\":{rps:.1},\"p50_us\":{p50:.1},\"p99_us\":{p99:.1}}}"
+        ));
+    }
+    let json = format!("{{\"experiment\":\"http\",\"entries\":[{}]}}\n", entries.join(","));
+    std::fs::write("BENCH_http.json", json).unwrap();
+    println!("  wrote BENCH_http.json");
+    println!("  [{}]", server.summary().trim_end().replace('\n', "; "));
+    server.shutdown();
+}
+
 /// Batched vs scalar inference throughput (B ∈ {1, 4, 16, 64}) for the
 /// CSR engine (synth net A) and the binary popcount engine (synth net C):
 /// the scalar loop walks the weight structure once per sample, the
@@ -655,6 +760,7 @@ fn main() {
         ("encode", bench_encode),
         ("engines", bench_engines),
         ("serve", bench_serve),
+        ("http", bench_http),
         ("batch", bench_batch),
         ("shard", bench_shard),
         ("artifact", bench_artifact),

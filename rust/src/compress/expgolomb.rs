@@ -85,12 +85,15 @@ pub fn encode_slice(values: &[i32]) -> (Vec<u8>, u64) {
     (w.finish(), bits)
 }
 
-/// Decode `n` signed values from a se() stream.
+/// Decode `n` signed values from a se() stream. Returns `None` on a
+/// truncated stream *and* on any decoded value outside `i32` range — a
+/// corrupt or adversarial stream must read as an error, never silently
+/// truncate into a wrong-but-plausible weight.
 pub fn decode_slice(bytes: &[u8], n: usize) -> Option<Vec<i32>> {
     let mut r = BitReader::new(bytes);
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
-        out.push(read_se(&mut r)? as i32);
+        out.push(i32::try_from(read_se(&mut r)?).ok()?);
     }
     Some(out)
 }
@@ -173,6 +176,30 @@ mod tests {
         b.truncate(1);
         let mut r = BitReader::new(&b);
         assert_eq!(read_se(&mut r), None);
+    }
+
+    #[test]
+    fn overflow_payload_rejected_not_truncated() {
+        // a crafted stream can encode se() values far outside i32 range;
+        // decode_slice used to `as i32`-truncate them into wrong weights
+        for v in [
+            i32::MAX as i64 + 1,
+            i32::MIN as i64 - 1,
+            1i64 << 40,
+            -(1i64 << 40),
+        ] {
+            let mut w = BitWriter::new();
+            write_se(&mut w, v);
+            write_se(&mut w, 0); // trailing valid value must not rescue it
+            let bytes = w.finish();
+            assert_eq!(decode_slice(&bytes, 2), None, "accepted out-of-range {v}");
+        }
+        // the exact i32 boundaries still decode
+        let mut w = BitWriter::new();
+        write_se(&mut w, i32::MAX as i64);
+        write_se(&mut w, i32::MIN as i64);
+        let bytes = w.finish();
+        assert_eq!(decode_slice(&bytes, 2), Some(vec![i32::MAX, i32::MIN]));
     }
 
     #[test]

@@ -1,0 +1,584 @@
+//! Dependency-free HTTP/1.1 serving front end with admission control.
+//!
+//! The network front door the paper's cheap PVQ dot products deserve: a
+//! [`std::net::TcpListener`] acceptor plus a fixed pool of connection
+//! workers, serving keep-alive HTTP/1.1 with the hand-rolled request
+//! parser and JSON codec from [`super::net`]. Routing goes through the
+//! multi-model [`ModelRegistry`], so one listener serves every loaded
+//! `.pvqm` artifact.
+//!
+//! Endpoints:
+//!
+//! | route               | method | body / result |
+//! |---------------------|--------|---------------|
+//! | `/v1/classify`      | POST   | `{"pixels":[u8…]}` or `{"samples":[[u8…]…]}`, optional `"model"` → class + latency per sample |
+//! | `/v1/models`        | GET    | registered models + default route |
+//! | `/metrics`          | GET    | Prometheus text exposition ([`super::metrics::prometheus_text`]) |
+//! | `/healthz`          | GET    | `200 ok` / `503 draining` |
+//!
+//! Admission control is layered, and every saturation answer is
+//! explicit — the server never hangs and never silently drops:
+//!
+//! 1. accepted connections queue on a bounded channel
+//!    ([`HttpConfig::max_pending_conns`]); overflow is answered `429`
+//!    with `Retry-After` straight from the acceptor;
+//! 2. concurrent classify requests are capped
+//!    ([`HttpConfig::max_inflight`]); overflow → `429 Retry-After`;
+//! 3. a full per-model batching queue ([`AdmitError::QueueFull`])
+//!    → `429 Retry-After`; and
+//! 4. while draining (shutdown started), classify and health answer
+//!    `503` and connections close after their in-flight response.
+//!
+//! Graceful shutdown stops the acceptor, lets every connection worker
+//! finish the request it is serving, then shuts the registry's batching
+//! servers down — which completes all dispatched batches — so every
+//! admitted request is answered before the listener dies.
+
+use super::metrics::{prometheus_text, Metrics};
+use super::net::{self, HttpConn, HttpRequest, Json, RecvError};
+use super::registry::ModelRegistry;
+use super::server::AdmitError;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Front-end tuning knobs (the per-model batching knobs live in
+/// [`super::ServerConfig`], which the [`ModelRegistry`] carries).
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Connection worker threads (each owns one connection at a time).
+    pub conn_workers: usize,
+    /// Accepted-but-unserviced connection budget; overflow → `429`.
+    pub max_pending_conns: usize,
+    /// Concurrent classify requests past admission; overflow → `429`.
+    pub max_inflight: usize,
+    /// Largest accepted request body in bytes; overflow → `413`.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            conn_workers: 4,
+            max_pending_conns: 64,
+            max_inflight: 256,
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
+/// State shared by the acceptor and every connection worker.
+struct Shared {
+    registry: ModelRegistry,
+    metrics: Arc<Metrics>,
+    inflight: AtomicUsize,
+    cfg: HttpConfig,
+}
+
+/// Handle to a running HTTP front end; [`HttpServer::shutdown`] (or
+/// drop) drains gracefully.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    shared: Option<Arc<Shared>>,
+}
+
+impl HttpServer {
+    /// Bind `listen` (e.g. `127.0.0.1:8080`, port `0` for ephemeral)
+    /// and start serving `registry` on it.
+    pub fn start(registry: ModelRegistry, cfg: HttpConfig, listen: &str) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(Shared {
+            registry,
+            metrics: Arc::new(Metrics::new()),
+            inflight: AtomicUsize::new(0),
+            cfg: cfg.clone(),
+        });
+
+        let (ctx, crx) = sync_channel::<TcpStream>(cfg.max_pending_conns.max(1));
+        let crx = Arc::new(Mutex::new(crx));
+        let mut threads = Vec::new();
+
+        let stop_a = stop.clone();
+        let shared_a = shared.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("pvq-http-accept".into())
+                .spawn(move || acceptor_loop(listener, ctx, shared_a, stop_a))
+                .expect("spawn acceptor"),
+        );
+        for wi in 0..cfg.conn_workers.max(1) {
+            let crx = crx.clone();
+            let shared = shared.clone();
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pvq-http-conn-{wi}"))
+                    .spawn(move || {
+                        loop {
+                            let stream = {
+                                let guard = crx.lock().unwrap();
+                                match guard.recv() {
+                                    Ok(s) => s,
+                                    Err(_) => return, // acceptor gone, queue drained
+                                }
+                            };
+                            serve_connection(stream, &shared, &stop);
+                        }
+                    })
+                    .expect("spawn conn worker"),
+            );
+        }
+        Ok(HttpServer { addr, stop, threads, shared: Some(shared) })
+    }
+
+    /// The bound address (resolves port `0` to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// HTTP-level metrics (admitted/rejected/error counters).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.as_ref().expect("server running").metrics.clone()
+    }
+
+    /// Per-model metrics summary (delegates to the registry).
+    pub fn summary(&self) -> String {
+        self.shared.as_ref().expect("server running").registry.summary()
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight requests, then
+    /// shut the per-model batching servers down (completing dispatched
+    /// batches). Equivalent to dropping the handle, but explicit.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // all HTTP workers are done → no request references the
+        // registry anymore; this unwrap therefore cannot fail, and the
+        // registry drain completes every batch already dispatched
+        if let Some(shared) = self.shared.take() {
+            if let Ok(s) = Arc::try_unwrap(shared) {
+                s.registry.shutdown();
+            }
+        }
+    }
+}
+
+/// Accept loop: non-blocking accept + stop polling; hands sockets to
+/// the worker pool and busy-rejects (`429`) when the pending budget is
+/// exhausted, so a saturated server answers instead of timing out.
+fn acceptor_loop(
+    listener: TcpListener,
+    ctx: std::sync::mpsc::SyncSender<TcpStream>,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => match ctx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(mut stream)) => {
+                    shared.metrics.http_rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                    let _ = net::write_response(
+                        &mut stream,
+                        429,
+                        "application/json",
+                        b"{\"error\":\"server busy, connection budget exhausted\"}",
+                        &[("Retry-After", "1")],
+                        false,
+                    );
+                    // without this the close RSTs the 429 away whenever
+                    // the client already sent request bytes
+                    net::reject_linger(stream);
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Best-effort terminal error response on a connection being closed.
+fn respond_final(conn: &mut HttpConn, shared: &Shared, status: u16, msg: &str) {
+    shared.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+    let body = error_body(msg);
+    let _ = net::write_response(conn.stream(), status, "application/json", &body, &[], false);
+    conn.drain_linger();
+}
+
+/// Serve one connection's keep-alive request loop until the peer (or a
+/// drain) closes it.
+fn serve_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
+    let mut conn = match HttpConn::new(stream) {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    loop {
+        match conn.next_request(shared.cfg.max_body_bytes, stop) {
+            Ok(req) => {
+                // drain started: answer this request, then close
+                let keep = req.keep_alive && !stop.load(Ordering::SeqCst);
+                let reply = handle_request(shared, &req, stop);
+                if reply.status >= 400 {
+                    let rejected = reply.status == 429 || reply.status == 503;
+                    let counter = if rejected {
+                        &shared.metrics.http_rejected
+                    } else {
+                        &shared.metrics.http_errors
+                    };
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+                let retry: &[(&str, &str)] =
+                    if reply.retry_after { &[("Retry-After", "1")] } else { &[] };
+                let wrote = net::write_response(
+                    conn.stream(),
+                    reply.status,
+                    reply.content_type,
+                    &reply.body,
+                    retry,
+                    keep,
+                );
+                if wrote.is_err() || !keep {
+                    return;
+                }
+            }
+            Err(RecvError::Closed) => return,
+            Err(RecvError::Malformed(msg)) => {
+                respond_final(&mut conn, shared, 400, &msg);
+                return;
+            }
+            Err(RecvError::BodyTooLarge) => {
+                respond_final(&mut conn, shared, 413, "request body too large");
+                return;
+            }
+            Err(RecvError::TimedOut) => {
+                respond_final(&mut conn, shared, 408, "timed out reading request");
+                return;
+            }
+            Err(RecvError::Io(_)) => return,
+        }
+    }
+}
+
+/// A routed response about to be written.
+struct Reply {
+    status: u16,
+    content_type: &'static str,
+    body: Vec<u8>,
+    retry_after: bool,
+}
+
+impl Reply {
+    fn json(status: u16, v: &Json) -> Reply {
+        Reply {
+            status,
+            content_type: "application/json",
+            body: v.render().into_bytes(),
+            retry_after: false,
+        }
+    }
+
+    fn error(status: u16, msg: &str) -> Reply {
+        Reply {
+            status,
+            content_type: "application/json",
+            body: error_body(msg),
+            retry_after: status == 429,
+        }
+    }
+}
+
+fn error_body(msg: &str) -> Vec<u8> {
+    Json::Obj(vec![("error".into(), Json::Str(msg.into()))]).render().into_bytes()
+}
+
+/// RAII slot in the in-flight classify budget; `None` when saturated.
+struct InflightGuard<'a> {
+    counter: &'a AtomicUsize,
+}
+
+impl<'a> InflightGuard<'a> {
+    fn admit(counter: &'a AtomicUsize, max: usize) -> Option<InflightGuard<'a>> {
+        if counter.fetch_add(1, Ordering::SeqCst) >= max {
+            counter.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(InflightGuard { counter })
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Route one parsed request to its handler.
+fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Reply {
+    let draining = stop.load(Ordering::SeqCst);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if draining {
+                Reply::json(
+                    503,
+                    &Json::Obj(vec![("status".into(), Json::Str("draining".into()))]),
+                )
+            } else {
+                Reply::json(200, &Json::Obj(vec![("status".into(), Json::Str("ok".into()))]))
+            }
+        }
+        ("GET", "/v1/models") => {
+            let models: Vec<Json> = shared
+                .registry
+                .models()
+                .iter()
+                .map(|m| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(m.name.clone())),
+                        ("engine".into(), Json::Str(m.engine.clone())),
+                        ("input_len".into(), Json::Num(m.input_len as f64)),
+                        ("total_params".into(), Json::Num(m.total_params as f64)),
+                        ("compressed_bytes".into(), Json::Num(m.compressed_bytes as f64)),
+                        ("shards".into(), Json::Num(m.shards as f64)),
+                    ])
+                })
+                .collect();
+            let default = match shared.registry.default_model() {
+                Some(n) => Json::Str(n.to_string()),
+                None => Json::Null,
+            };
+            Reply::json(
+                200,
+                &Json::Obj(vec![
+                    ("models".into(), Json::Arr(models)),
+                    ("default".into(), default),
+                ]),
+            )
+        }
+        ("GET", "/metrics") => {
+            let handles = shared.registry.model_metrics();
+            let series: Vec<(&str, &Metrics)> =
+                handles.iter().map(|(n, m)| (n.as_str(), m.as_ref())).collect();
+            Reply {
+                status: 200,
+                content_type: "text/plain; version=0.0.4",
+                body: prometheus_text(&shared.metrics, &series).into_bytes(),
+                retry_after: false,
+            }
+        }
+        ("POST", "/v1/classify") => {
+            if draining {
+                return Reply::error(503, "server draining");
+            }
+            let slot = InflightGuard::admit(&shared.inflight, shared.cfg.max_inflight);
+            if slot.is_none() {
+                return Reply::error(429, "too many in-flight requests");
+            }
+            shared.metrics.http_admitted.fetch_add(1, Ordering::Relaxed);
+            handle_classify(shared, &req.body)
+        }
+        (_, "/healthz" | "/v1/models" | "/metrics" | "/v1/classify") => {
+            Reply::error(405, "method not allowed")
+        }
+        _ => Reply::error(404, "no such route"),
+    }
+}
+
+/// `POST /v1/classify`: single (`pixels`) or batch (`samples`) body,
+/// optional `model` route, answered through the registry's batching
+/// servers.
+fn handle_classify(shared: &Shared, body: &[u8]) -> Reply {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Reply::error(400, "body is not UTF-8"),
+    };
+    let doc = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return Reply::error(400, &format!("bad JSON: {e}")),
+    };
+    let model = match doc.get("model") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.as_str()),
+        Some(_) => return Reply::error(400, "\"model\" must be a string"),
+    };
+    let (samples, batched) = match (doc.get("pixels"), doc.get("samples")) {
+        (Some(p), None) => match parse_pixels(p) {
+            Ok(v) => (vec![v], false),
+            Err(e) => return Reply::error(400, &e),
+        },
+        (None, Some(s)) => {
+            let Some(rows) = s.as_array() else {
+                return Reply::error(400, "\"samples\" must be an array of pixel arrays");
+            };
+            if rows.is_empty() {
+                return Reply::error(400, "\"samples\" is empty");
+            }
+            let mut out = Vec::with_capacity(rows.len());
+            for (i, row) in rows.iter().enumerate() {
+                match parse_pixels(row) {
+                    Ok(v) => out.push(v),
+                    Err(e) => return Reply::error(400, &format!("sample {i}: {e}")),
+                }
+            }
+            (out, true)
+        }
+        _ => return Reply::error(400, "body needs exactly one of \"pixels\" or \"samples\""),
+    };
+    let Some(info) = shared.registry.resolve(model) else {
+        return Reply::error(404, &format!("unknown model '{}'", model.unwrap_or("(default)")));
+    };
+    let model_name = info.name.clone();
+    for (i, s) in samples.iter().enumerate() {
+        if s.len() != info.input_len {
+            return Reply::error(
+                400,
+                &format!(
+                    "model '{model_name}' expects {} pixels, sample {i} has {}",
+                    info.input_len,
+                    s.len()
+                ),
+            );
+        }
+    }
+    match shared.registry.classify_batch(Some(&model_name), samples) {
+        Ok(responses) => {
+            let result = |r: &super::Response| {
+                Json::Obj(vec![
+                    ("class".into(), Json::Num(r.class as f64)),
+                    ("latency_us".into(), Json::Num(r.latency.as_micros() as f64)),
+                ])
+            };
+            let payload = if batched {
+                Json::Obj(vec![
+                    ("model".into(), Json::Str(model_name)),
+                    ("results".into(), Json::Arr(responses.iter().map(result).collect())),
+                ])
+            } else {
+                let r = &responses[0];
+                Json::Obj(vec![
+                    ("model".into(), Json::Str(model_name)),
+                    ("class".into(), Json::Num(r.class as f64)),
+                    ("latency_us".into(), Json::Num(r.latency.as_micros() as f64)),
+                ])
+            };
+            Reply::json(200, &payload)
+        }
+        Err(e) => match e.downcast_ref::<AdmitError>() {
+            Some(AdmitError::QueueFull) => Reply::error(429, "batching queue saturated"),
+            Some(AdmitError::Closed) => Reply::error(503, "model server stopped"),
+            None => Reply::error(500, &format!("engine error: {e}")),
+        },
+    }
+}
+
+/// One pixel row: a JSON array of integers in `0..=255`.
+fn parse_pixels(v: &Json) -> Result<Vec<u8>, String> {
+    let Some(items) = v.as_array() else {
+        return Err("pixels must be an array of integers in 0..=255".into());
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        match item.as_pixel() {
+            Some(p) => out.push(p),
+            None => return Err(format!("pixel {i} is not an integer in 0..=255")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::EngineKind;
+    use crate::coordinator::ServerConfig;
+    use crate::nn::layers::Model;
+    use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+    use std::io::{Read, Write};
+
+    fn tiny_registry() -> ModelRegistry {
+        let spec = ModelSpec {
+            name: "h".into(),
+            input_shape: vec![16],
+            layers: vec![
+                LayerSpec::Dense { input: 16, output: 8, act: Activation::Relu },
+                LayerSpec::Dense { input: 8, output: 4, act: Activation::None },
+            ],
+        };
+        let m = Model::synth(&spec, 5);
+        let q = quantize(&m, &[1.5, 1.0], RhoMode::Norm).unwrap().quant_model;
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        reg.register_quant("tiny", q, EngineKind::Auto, None).unwrap();
+        reg
+    }
+
+    fn roundtrip(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        s.flush().unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn routes_health_models_metrics_and_404() {
+        let server =
+            HttpServer::start(tiny_registry(), HttpConfig::default(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let health = roundtrip(addr, "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 200 OK"), "{health}");
+        assert!(health.contains("{\"status\":\"ok\"}"));
+        let models = roundtrip(addr, "GET /v1/models HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(models.contains("\"name\":\"tiny\""));
+        assert!(models.contains("\"default\":\"tiny\""));
+        let metrics = roundtrip(addr, "GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(metrics.contains("pvqnet_http_admitted_total"), "{metrics}");
+        assert!(metrics.contains("pvqnet_requests_total{model=\"tiny\"}"));
+        let missing = roundtrip(addr, "GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        let bad_method =
+            roundtrip(addr, "PUT /v1/classify HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(bad_method.starts_with("HTTP/1.1 405"), "{bad_method}");
+        assert!(server.metrics().http_errors.load(Ordering::Relaxed) >= 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn inflight_budget_zero_rejects_with_retry_after() {
+        let cfg = HttpConfig { max_inflight: 0, ..Default::default() };
+        let server = HttpServer::start(tiny_registry(), cfg, "127.0.0.1:0").unwrap();
+        let body = "{\"pixels\":[0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0]}";
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let resp = roundtrip(server.addr(), &raw);
+        assert!(resp.starts_with("HTTP/1.1 429"), "{resp}");
+        assert!(resp.contains("Retry-After: 1"));
+        assert_eq!(server.metrics().http_rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(server.metrics().http_admitted.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+}

@@ -18,9 +18,18 @@ pub struct Metrics {
     pub responses: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
-    /// Total samples across executed batches (≤ requests if padding is
-    /// excluded; padding is not counted).
+    /// Total samples across dispatched batches. Every admitted request
+    /// is dispatched exactly once and batches carry no padding, so this
+    /// equals the number of dispatched requests — it lags `requests`
+    /// only by those still waiting on the admission queue, and catches
+    /// up to it at drain.
     pub batched_samples: AtomicU64,
+    /// HTTP requests admitted past admission control.
+    pub http_admitted: AtomicU64,
+    /// HTTP requests rejected by admission control (429/503).
+    pub http_rejected: AtomicU64,
+    /// HTTP requests answered with an error status (4xx/5xx).
+    pub http_errors: AtomicU64,
     /// log2 µs latency histogram.
     hist: [AtomicU64; BUCKETS],
     /// Sum of latencies in µs (for the mean).
@@ -124,6 +133,71 @@ impl Metrics {
         }
     }
 
+    /// Append one model's `pvqnet_request_latency_seconds` histogram
+    /// series (cumulative buckets, sum, count) for [`prometheus_text`].
+    fn latency_series_into(&self, out: &mut String, label: &str) {
+        use std::fmt::Write;
+        let mut cum = 0u64;
+        // the final bucket is clamped (record_latency caps the index),
+        // so it holds observations with no finite upper bound — it must
+        // fold into +Inf rather than claim an edge it does not honor
+        let last = self.hist.len() - 1;
+        for (b, c) in self.hist[..last].iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            // log2-µs bucket b holds [2^b, 2^(b+1)) µs, so the exact
+            // cumulative upper edge in seconds is (2^(b+1)-1)/1e6
+            let le = ((1u128 << (b + 1)) - 1) as f64 / 1e6;
+            let _ = writeln!(
+                out,
+                "pvqnet_request_latency_seconds_bucket{{model=\"{label}\",le=\"{le}\"}} {cum}"
+            );
+        }
+        cum += self.hist[last].load(Ordering::Relaxed);
+        let _ = writeln!(
+            out,
+            "pvqnet_request_latency_seconds_bucket{{model=\"{label}\",le=\"+Inf\"}} {cum}"
+        );
+        let _ = writeln!(
+            out,
+            "pvqnet_request_latency_seconds_sum{{model=\"{label}\"}} {}",
+            self.lat_sum_us.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(
+            out,
+            "pvqnet_request_latency_seconds_count{{model=\"{label}\"}} {cum}"
+        );
+    }
+
+    /// Append one model's `pvqnet_batch_occupancy` histogram series
+    /// (cumulative buckets, sum, count) for [`prometheus_text`].
+    fn occupancy_series_into(&self, out: &mut String, label: &str) {
+        use std::fmt::Write;
+        let mut cum = 0u64;
+        // last bucket is clamped open-ended (≥ 2^(OCC_BUCKETS-1)): +Inf
+        let last = self.occ_hist.len() - 1;
+        for (b, c) in self.occ_hist[..last].iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            // occupancy bucket b holds batches of [2^b, 2^(b+1))
+            // samples; integer sizes make 2^(b+1)-1 the exact edge
+            let le = (1u64 << (b + 1)) - 1;
+            let _ = writeln!(
+                out,
+                "pvqnet_batch_occupancy_bucket{{model=\"{label}\",le=\"{le}\"}} {cum}"
+            );
+        }
+        cum += self.occ_hist[last].load(Ordering::Relaxed);
+        let _ = writeln!(
+            out,
+            "pvqnet_batch_occupancy_bucket{{model=\"{label}\",le=\"+Inf\"}} {cum}"
+        );
+        let _ = writeln!(
+            out,
+            "pvqnet_batch_occupancy_sum{{model=\"{label}\"}} {}",
+            self.batched_samples.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "pvqnet_batch_occupancy_count{{model=\"{label}\"}} {cum}");
+    }
+
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
@@ -138,6 +212,96 @@ impl Metrics {
             self.latency_quantile_us(0.99),
         )
     }
+}
+
+/// Escape a label value per the Prometheus exposition format
+/// (backslash, double quote, newline) — model names come from `.pvqm`
+/// file stems, which the format does not constrain.
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a full Prometheus text exposition: the HTTP front end's
+/// admission counters from `http`, then every per-model serving family
+/// (requests/responses/batches/occupancy/latency) with one series per
+/// `(model_label, metrics)` entry. `# HELP`/`# TYPE` headers appear
+/// exactly once per family, as the exposition format requires; label
+/// values are escaped.
+pub fn prometheus_text(http: &Metrics, models: &[(&str, &Metrics)]) -> String {
+    use std::fmt::Write;
+    let models: Vec<(String, &Metrics)> =
+        models.iter().map(|(l, m)| (escape_label(l), *m)).collect();
+    let mut out = String::new();
+    let http_counters = [
+        (
+            "pvqnet_http_admitted_total",
+            "HTTP requests admitted past admission control",
+            http.http_admitted.load(Ordering::Relaxed),
+        ),
+        (
+            "pvqnet_http_rejected_total",
+            "HTTP requests rejected by admission control (429/503)",
+            http.http_rejected.load(Ordering::Relaxed),
+        ),
+        (
+            "pvqnet_http_errors_total",
+            "HTTP requests answered with an error status (4xx/5xx)",
+            http.http_errors.load(Ordering::Relaxed),
+        ),
+    ];
+    for (name, help, v) in http_counters {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    // per-model counter families: header once, then one series per model
+    type Get = fn(&Metrics) -> u64;
+    let counter_families: [(&str, &str, Get); 4] = [
+        (
+            "pvqnet_requests_total",
+            "Requests admitted to the batching queue",
+            |m| m.requests.load(Ordering::Relaxed),
+        ),
+        ("pvqnet_responses_total", "Responses delivered", |m| {
+            m.responses.load(Ordering::Relaxed)
+        }),
+        ("pvqnet_batches_total", "Micro-batches dispatched to the engine", |m| {
+            m.batches.load(Ordering::Relaxed)
+        }),
+        ("pvqnet_batched_samples_total", "Samples across dispatched micro-batches", |m| {
+            m.batched_samples.load(Ordering::Relaxed)
+        }),
+    ];
+    for (name, help, get) in counter_families {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (label, m) in &models {
+            let _ = writeln!(out, "{name}{{model=\"{label}\"}} {}", get(m));
+        }
+    }
+    let _ = writeln!(
+        out,
+        "# HELP pvqnet_request_latency_seconds Queue plus execute latency per request"
+    );
+    let _ = writeln!(out, "# TYPE pvqnet_request_latency_seconds histogram");
+    for (label, m) in &models {
+        m.latency_series_into(&mut out, label);
+    }
+    let _ = writeln!(out, "# HELP pvqnet_batch_occupancy Samples per dispatched micro-batch");
+    let _ = writeln!(out, "# TYPE pvqnet_batch_occupancy histogram");
+    for (label, m) in &models {
+        m.occupancy_series_into(&mut out, label);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -211,6 +375,54 @@ mod tests {
 
         // empty metrics: quantile is 0, not a phantom bucket edge
         assert_eq!(Metrics::new().occupancy_quantile(0.5), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let http = Metrics::new();
+        http.http_admitted.fetch_add(5, Ordering::Relaxed);
+        http.http_rejected.fetch_add(2, Ordering::Relaxed);
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(3);
+        m.record_latency(Duration::from_micros(100));
+        let text = prometheus_text(&http, &[("net_a", &m)]);
+        assert!(text.contains("pvqnet_http_admitted_total 5"));
+        assert!(text.contains("pvqnet_http_rejected_total 2"));
+        assert!(text.contains("pvqnet_http_errors_total 0"));
+        assert!(text.contains("pvqnet_requests_total{model=\"net_a\"} 3"));
+        assert!(text.contains("pvqnet_batches_total{model=\"net_a\"} 1"));
+        assert!(text
+            .contains("pvqnet_request_latency_seconds_bucket{model=\"net_a\",le=\"+Inf\"} 1"));
+        assert!(text.contains("pvqnet_request_latency_seconds_count{model=\"net_a\"} 1"));
+        assert!(text.contains("pvqnet_batch_occupancy_sum{model=\"net_a\"} 3"));
+        // exposition well-formedness: exactly one HELP/TYPE per family
+        for fam in [
+            "pvqnet_requests_total",
+            "pvqnet_request_latency_seconds",
+            "pvqnet_batch_occupancy",
+            "pvqnet_http_admitted_total",
+        ] {
+            let help = format!("# HELP {fam} ");
+            assert_eq!(text.matches(&help).count(), 1, "family {fam}");
+        }
+        // every non-comment line has exactly one space between name and value
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad series line: {line}");
+        }
+
+        // the clamped top bucket folds into +Inf: an oversized batch
+        // must never sit under a finite `le` smaller than itself
+        let m3 = Metrics::new();
+        m3.record_batch(4096);
+        let t3 = prometheus_text(&http, &[("m3", &m3)]);
+        assert!(t3.contains("pvqnet_batch_occupancy_bucket{model=\"m3\",le=\"+Inf\"} 1"));
+        assert!(t3.contains("pvqnet_batch_occupancy_bucket{model=\"m3\",le=\"1023\"} 0"));
+        assert!(!t3.contains("le=\"2047\""), "clamped bucket leaked a finite edge");
+
+        // label values are escaped per the exposition format
+        let tq = prometheus_text(&http, &[("a\"b", &m)]);
+        assert!(tq.contains("pvqnet_requests_total{model=\"a\\\"b\"} 3"), "{tq}");
     }
 
     #[test]

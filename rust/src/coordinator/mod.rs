@@ -1,15 +1,19 @@
 //! L3 coordinator: engines, dynamic batching server, multi-model router,
-//! `.pvqm` artifact registry, metrics. Python never runs on this path —
-//! engines are pure rust or AOT-compiled XLA executables.
+//! `.pvqm` artifact registry, metrics, and the dependency-free HTTP/1.1
+//! front end ([`http`] over the [`net`] plumbing). Python never runs on
+//! this path — engines are pure rust or AOT-compiled XLA executables.
 
 pub mod engine;
+pub mod http;
 pub mod metrics;
+pub mod net;
 pub mod registry;
 pub mod router;
 pub mod server;
 
 pub use engine::Engine;
-pub use metrics::Metrics;
+pub use http::{HttpConfig, HttpServer};
+pub use metrics::{prometheus_text, Metrics};
 pub use registry::{EngineKind, ModelInfo, ModelRegistry};
 pub use router::Router;
-pub use server::{Response, Server, ServerConfig};
+pub use server::{AdmitError, Response, Server, ServerConfig};

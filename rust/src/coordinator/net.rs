@@ -1,0 +1,833 @@
+//! Dependency-free HTTP/1.1 and JSON plumbing for the serving front end.
+//!
+//! Everything the offline environment denies us (hyper, serde) is
+//! hand-rolled here at the scale this server needs: a buffered,
+//! keep-alive-aware request reader over [`std::net::TcpStream`], a
+//! status-line/header response writer, and a small JSON value type with
+//! a recursive-descent parser and renderer. [`super::http`] composes
+//! these into the actual server; this module knows nothing about
+//! models or routing.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Cap on request-head bytes (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Socket read timeout: how often a blocked reader rechecks the stop
+/// flag. Short enough that drain is responsive, long enough to idle.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// A request that has started arriving must finish within this window
+/// (slow-client guard; also bounds how long drain waits mid-request).
+const REQUEST_READ_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Write timeout so a stuck client cannot wedge a connection worker.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Bounded lingering close for a connection rejected *before* any
+/// request was read (the acceptor's busy `429`): signal end-of-stream,
+/// then briefly consume whatever the peer already sent, so closing the
+/// socket with unread bytes does not RST the just-written rejection out
+/// of the kernel's send queue. Hard-bounded (≈50ms) so the acceptor can
+/// never stall on a slow peer.
+pub fn reject_linger(mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut sink = [0u8; 4096];
+    for _ in 0..5 {
+        match stream.read(&mut sink) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- requests
+
+/// One parsed HTTP/1.1 request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Method verb, as sent (`GET`, `POST`, …).
+    pub method: String,
+    /// Request path with any `?query` suffix stripped.
+    pub path: String,
+    /// Headers with lowercased names and trimmed values.
+    pub headers: Vec<(String, String)>,
+    /// Request body (`Content-Length` bytes; empty when absent).
+    pub body: Vec<u8>,
+    /// Whether the connection may serve another request afterwards
+    /// (HTTP/1.1 default unless `Connection: close`).
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// First header value with the given lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why [`HttpConn::next_request`] produced no request.
+#[derive(Debug)]
+pub enum RecvError {
+    /// Clean end: the peer closed (or the server is draining) at a
+    /// request boundary. Not an error — just close the connection.
+    Closed,
+    /// The bytes on the wire are not a well-formed request (→ 400).
+    Malformed(String),
+    /// Declared `Content-Length` exceeds the configured cap (→ 413).
+    BodyTooLarge,
+    /// The request started arriving but did not complete in time.
+    TimedOut,
+    /// Transport failure reading the socket.
+    Io(std::io::Error),
+}
+
+/// A client connection: the stream plus any bytes already read past the
+/// previous request's end (keep-alive pipelining carry-over).
+pub struct HttpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpConn {
+    /// Wrap an accepted stream, arming the poll/write timeouts.
+    pub fn new(stream: TcpStream) -> std::io::Result<HttpConn> {
+        stream.set_read_timeout(Some(READ_POLL))?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+        Ok(HttpConn { stream, buf: Vec::new() })
+    }
+
+    /// The underlying stream (for writing responses).
+    pub fn stream(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// Best-effort lingering close: signal end-of-stream, then consume
+    /// whatever the peer already sent. Closing a socket with unread
+    /// receive-buffer data makes the kernel RST the connection, which
+    /// can discard a final error response (e.g. the `413` for a body we
+    /// refused to read) out of the send queue before the client sees it.
+    pub fn drain_linger(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Write);
+        let mut sink = [0u8; 4096];
+        for _ in 0..64 {
+            match self.stream.read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                // WouldBlock after one poll window: the buffered excess
+                // is consumed, which is all the RST guard needs
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Block until the next full request arrives, `stop` is raised while
+    /// the connection is idle, or the peer goes away. `max_body` bounds
+    /// the accepted `Content-Length`.
+    pub fn next_request(
+        &mut self,
+        max_body: usize,
+        stop: &AtomicBool,
+    ) -> Result<HttpRequest, RecvError> {
+        // leftover pipelined bytes count as a request already arriving:
+        // the deadline must arm, or a client that sent a partial head
+        // and went silent would wedge this worker forever (and block
+        // graceful shutdown with it)
+        let mut started: Option<Instant> =
+            if self.buf.is_empty() { None } else { Some(Instant::now()) };
+        loop {
+            if let Some(head_end) = find_head_end(&self.buf) {
+                return self.finish_request(head_end, max_body, started);
+            }
+            if self.buf.len() > MAX_HEAD_BYTES {
+                return Err(RecvError::Malformed("request head too large".into()));
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Err(RecvError::Closed)
+                    } else {
+                        Err(RecvError::Malformed("connection closed mid-request".into()))
+                    };
+                }
+                Ok(n) => {
+                    started.get_or_insert_with(Instant::now);
+                    self.buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // idle poll tick: drain-aware at request boundaries,
+                    // deadline-bound once a request has started arriving
+                    if self.buf.is_empty() && stop.load(Ordering::SeqCst) {
+                        return Err(RecvError::Closed);
+                    }
+                    if let Some(t0) = started {
+                        if t0.elapsed() > REQUEST_READ_DEADLINE {
+                            return Err(RecvError::TimedOut);
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(RecvError::Io(e)),
+            }
+        }
+    }
+
+    /// The head is fully buffered at `head_end`; parse it, then read the
+    /// declared body to completion and pop both off the carry buffer.
+    fn finish_request(
+        &mut self,
+        head_end: usize,
+        max_body: usize,
+        started: Option<Instant>,
+    ) -> Result<HttpRequest, RecvError> {
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| RecvError::Malformed("non-UTF-8 request head".into()))?;
+        let (method, path, keep_alive_default) = parse_request_line(head)?;
+        let headers = parse_headers(head)?;
+        let find = |name: &str| {
+            headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+        };
+        if find("transfer-encoding").is_some() {
+            return Err(RecvError::Malformed("chunked bodies not supported".into()));
+        }
+        let content_len = match find("content-length") {
+            None => 0usize,
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| RecvError::Malformed("bad content-length".into()))?,
+        };
+        if content_len > max_body {
+            return Err(RecvError::BodyTooLarge);
+        }
+        let keep_alive = match find("connection").map(str::to_ascii_lowercase) {
+            Some(c) if c.contains("close") => false,
+            Some(c) if c.contains("keep-alive") => true,
+            _ => keep_alive_default,
+        };
+        let body_start = head_end + 4;
+        let t0 = started.unwrap_or_else(Instant::now);
+        while self.buf.len() < body_start + content_len {
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(RecvError::Malformed("connection closed mid-body".into()))
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if t0.elapsed() > REQUEST_READ_DEADLINE {
+                        return Err(RecvError::TimedOut);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(RecvError::Io(e)),
+            }
+        }
+        let rest = self.buf.split_off(body_start + content_len);
+        let mut head_and_body = std::mem::replace(&mut self.buf, rest);
+        let body = head_and_body.split_off(body_start);
+        Ok(HttpRequest { method, path, headers, body, keep_alive })
+    }
+}
+
+/// Index of `\r\n\r\n` terminating the request head, if buffered.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse `METHOD SP target SP HTTP/x.y`; returns (method, path without
+/// query, keep-alive default for that HTTP version).
+fn parse_request_line(head: &str) -> Result<(String, String, bool), RecvError> {
+    let line = head.lines().next().unwrap_or("");
+    let mut parts = line.split(' ').filter(|s| !s.is_empty());
+    let method = parts
+        .next()
+        .ok_or_else(|| RecvError::Malformed("empty request line".into()))?;
+    let target = parts
+        .next()
+        .ok_or_else(|| RecvError::Malformed("missing request target".into()))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| RecvError::Malformed("missing HTTP version".into()))?;
+    let keep_alive_default = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(RecvError::Malformed(format!("unsupported version {version}"))),
+    };
+    let path = target.split('?').next().unwrap_or(target);
+    Ok((method.to_string(), path.to_string(), keep_alive_default))
+}
+
+/// Parse header lines (everything after the request line) into
+/// lowercase-name/trimmed-value pairs.
+fn parse_headers(head: &str) -> Result<Vec<(String, String)>, RecvError> {
+    let mut out = Vec::new();
+    for line in head.lines().skip(1) {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| RecvError::Malformed(format!("bad header line: {line}")))?;
+        out.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------- responses
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// Write one complete response: status line, `Content-Type`/`Length`,
+/// a `Connection` header matching `keep_alive`, any `extra` headers,
+/// then the body.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    extra: &[(&str, &str)],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
+        reason(status),
+        body.len()
+    );
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+// -------------------------------------------------------------------- JSON
+
+/// Nesting depth cap for the parser (adversarial `[[[[…` guard).
+const MAX_JSON_DEPTH: usize = 32;
+
+/// A JSON value. Objects keep insertion order (no map dependency, and
+/// deterministic rendering for tests).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number (parsed as `f64`).
+    Num(f64),
+    /// A string (escapes decoded).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object as ordered key/value pairs.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document; trailing non-whitespace is an
+    /// error.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing bytes at offset {pos}"));
+        }
+        Ok(v)
+    }
+
+    /// Render to compact JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        render_into(self, &mut out);
+        out
+    }
+
+    /// Object field lookup (first match); `None` for non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// This number as a `u8` pixel, if it is an integer in `0..=255`.
+    pub fn as_pixel(&self) -> Option<u8> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && (0.0..=255.0).contains(n) => Some(*n as u8),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\r' | b'\n') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    if depth > MAX_JSON_DEPTH {
+        return Err("nesting too deep".into());
+    }
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {pos}")),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b'"') {
+                    return Err(format!("expected object key at offset {pos}"));
+                }
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at offset {pos}"));
+                }
+                *pos += 1;
+                let value = parse_value(b, pos, depth + 1)?;
+                fields.push((key, value));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {pos}")),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at offset {pos}"))
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).expect("ASCII number bytes");
+    let n: f64 = s.parse().map_err(|_| format!("bad number '{s}' at offset {start}"))?;
+    if !n.is_finite() {
+        return Err(format!("non-finite number '{s}'"));
+    }
+    Ok(Json::Num(n))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    *pos += 1; // opening quote
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".into()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hi = parse_u16_hex(b, pos)?;
+                        let cp = if (0xD800..0xDC00).contains(&hi) {
+                            // surrogate pair: expect \uXXXX low half
+                            if b.get(*pos + 1) != Some(&b'\\') || b.get(*pos + 2) != Some(&b'u')
+                            {
+                                return Err("lone high surrogate".into());
+                            }
+                            *pos += 2;
+                            let lo = parse_u16_hex(b, pos)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err("bad low surrogate".into());
+                            }
+                            0x10000 + (((hi - 0xD800) as u32) << 10) + (lo - 0xDC00) as u32
+                        } else {
+                            hi as u32
+                        };
+                        out.push(
+                            char::from_u32(cp).ok_or_else(|| "bad unicode escape".to_string())?,
+                        );
+                    }
+                    _ => return Err(format!("bad escape at offset {pos}")),
+                }
+                *pos += 1;
+            }
+            Some(&c) if c < 0x20 => return Err("raw control byte in string".into()),
+            Some(_) => {
+                // copy one UTF-8 scalar (input is a &str, so boundaries
+                // are valid; find the char covering this byte)
+                let s = std::str::from_utf8(&b[*pos..]).map_err(|_| "bad UTF-8".to_string())?;
+                let ch = s.chars().next().expect("non-empty");
+                out.push(ch);
+                *pos += ch.len_utf8();
+            }
+        }
+    }
+}
+
+/// Parse the `XXXX` of a `\uXXXX` escape; `pos` is on the `u` and ends
+/// on the last hex digit.
+fn parse_u16_hex(b: &[u8], pos: &mut usize) -> Result<u16, String> {
+    let hex = b
+        .get(*pos + 1..*pos + 5)
+        .ok_or_else(|| "truncated unicode escape".to_string())?;
+    let s = std::str::from_utf8(hex).map_err(|_| "bad unicode escape".to_string())?;
+    let v = u16::from_str_radix(s, 16).map_err(|_| "bad unicode escape".to_string())?;
+    *pos += 4;
+    Ok(v)
+}
+
+fn render_into(v: &Json, out: &mut String) {
+    use std::fmt::Write;
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => {
+            // integers render without a trailing `.0` (class indices,
+            // counts); anything else uses the shortest f64 form
+            if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Json::Str(s) => render_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render_into(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(fields) => {
+            out.push('{');
+            for (i, (k, val)) in fields.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render_string(k, out);
+                out.push(':');
+                render_into(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    use std::fmt::Write;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_values() {
+        let cases = [
+            "null",
+            "true",
+            "false",
+            "0",
+            "-17",
+            "3.25",
+            "\"hi\"",
+            "[]",
+            "[1,2,3]",
+            "{}",
+            "{\"a\":1,\"b\":[true,null],\"c\":{\"d\":\"e\"}}",
+        ];
+        for c in cases {
+            let v = Json::parse(c).unwrap();
+            assert_eq!(v.render(), c, "roundtrip {c}");
+            // render → parse is also a fixpoint
+            assert_eq!(Json::parse(&v.render()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn json_whitespace_and_accessors() {
+        let v = Json::parse(" { \"pixels\" : [ 0 , 255 ] , \"model\" : \"a\" } ").unwrap();
+        assert_eq!(v.get("model").and_then(Json::as_str), Some("a"));
+        let px: Vec<u8> = v
+            .get("pixels")
+            .and_then(Json::as_array)
+            .unwrap()
+            .iter()
+            .map(|p| p.as_pixel().unwrap())
+            .collect();
+        assert_eq!(px, vec![0, 255]);
+        assert_eq!(v.get("missing"), None);
+        // pixel range/integrality guards
+        assert_eq!(Json::parse("256").unwrap().as_pixel(), None);
+        assert_eq!(Json::parse("-1").unwrap().as_pixel(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_pixel(), None);
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        let v = Json::parse(r#""a\"b\\c\n\t\u0041\u00e9\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\c\n\tAé😀");
+        let rendered = Json::Str("x\ny\"z\u{1}".into()).render();
+        assert_eq!(Json::parse(&rendered).unwrap().as_str().unwrap(), "x\ny\"z\u{1}");
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\"}",
+            "{\"a\":}",
+            "tru",
+            "\"unterminated",
+            "1 2",
+            "{\"a\":1,}",
+            "[01x]",
+            "\"\\u12\"",
+            "\"\\ud800x\"",
+            "nan",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted malformed {bad:?}");
+        }
+        // depth bomb is rejected, not a stack overflow
+        let bomb = "[".repeat(4000) + &"]".repeat(4000);
+        assert!(Json::parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn request_parsing_over_loopback() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"POST /v1/classify?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 4\r\n\r\nabcdGET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n",
+            )
+            .unwrap();
+            s.flush().unwrap();
+            // hold the socket open until the server side is done parsing
+            let mut sink = Vec::new();
+            let _ = s.read_to_end(&mut sink);
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = HttpConn::new(stream).unwrap();
+        let stop = AtomicBool::new(false);
+        let r1 = conn.next_request(1024, &stop).unwrap();
+        assert_eq!(r1.method, "POST");
+        assert_eq!(r1.path, "/v1/classify");
+        assert_eq!(r1.body, b"abcd");
+        assert!(r1.keep_alive);
+        assert_eq!(r1.header("host"), Some("h"));
+        // second pipelined request comes out of the carry buffer
+        let r2 = conn.next_request(1024, &stop).unwrap();
+        assert_eq!(r2.method, "GET");
+        assert_eq!(r2.path, "/healthz");
+        assert!(!r2.keep_alive);
+        assert!(r2.body.is_empty());
+        drop(conn);
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn request_limits_and_errors() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\n").unwrap();
+            s.flush().unwrap();
+            let mut sink = Vec::new();
+            let _ = s.read_to_end(&mut sink);
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = HttpConn::new(stream).unwrap();
+        let stop = AtomicBool::new(false);
+        // declared body larger than the cap → BodyTooLarge before any read
+        match conn.next_request(10, &stop) {
+            Err(RecvError::BodyTooLarge) => {}
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+        drop(conn);
+        client.join().unwrap();
+
+        for (raw, what) in [
+            (&b"BROKEN\r\n\r\n"[..], "missing target"),
+            (&b"GET / HTTP/2.0\r\n\r\n"[..], "bad version"),
+            (&b"GET / HTTP/1.1\r\nNoColonHere\r\n\r\n"[..], "bad header"),
+        ] {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let raw = raw.to_vec();
+            let client = std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.write_all(&raw).unwrap();
+                s.flush().unwrap();
+                let mut sink = Vec::new();
+                let _ = s.read_to_end(&mut sink);
+            });
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = HttpConn::new(stream).unwrap();
+            match conn.next_request(1024, &stop) {
+                Err(RecvError::Malformed(_)) => {}
+                other => panic!("{what}: expected Malformed, got {other:?}"),
+            }
+            drop(conn);
+            client.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn response_writer_shape() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            write_response(
+                &mut stream,
+                429,
+                "application/json",
+                b"{\"error\":\"busy\"}",
+                &[("Retry-After", "1")],
+                false,
+            )
+            .unwrap();
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        server.join().unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: 16\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("{\"error\":\"busy\"}"));
+    }
+}

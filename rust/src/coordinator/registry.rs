@@ -222,6 +222,26 @@ impl ModelRegistry {
         }
     }
 
+    /// Resolve a route to its model metadata: `None` → the default
+    /// route. Returns `None` for an unknown name or an empty registry —
+    /// the HTTP front end maps that to `404` before submitting anything.
+    pub fn resolve(&self, model: Option<&str>) -> Option<&ModelInfo> {
+        let name = model.or(self.default_model.as_deref())?;
+        self.entries.get(name).map(|e| &e.info)
+    }
+
+    /// Per-model metrics handles, sorted by name — the `/metrics`
+    /// endpoint renders these as labelled Prometheus series.
+    pub fn model_metrics(&self) -> Vec<(String, Arc<super::Metrics>)> {
+        let mut v: Vec<(String, Arc<super::Metrics>)> = self
+            .entries
+            .iter()
+            .map(|(name, e)| (name.clone(), e.server.metrics()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
     /// Registered models, sorted by name.
     pub fn models(&self) -> Vec<&ModelInfo> {
         let mut v: Vec<&ModelInfo> = self.entries.values().map(|e| &e.info).collect();

@@ -15,9 +15,32 @@ use super::engine::Engine;
 use super::metrics::Metrics;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Why a request could not be admitted. Typed (rather than a stringly
+/// anyhow error) so front ends can map saturation to a retryable status
+/// — the HTTP layer turns `QueueFull` into `429 Retry-After` and
+/// `Closed` into `503`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The bounded admission queue is full (backpressure); retry later.
+    QueueFull,
+    /// The server is stopped or draining; the request was not enqueued.
+    Closed,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull => write!(f, "admission queue full"),
+            AdmitError::Closed => write!(f, "server stopped"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
@@ -113,18 +136,25 @@ impl Server {
         Server { tx: Some(tx), metrics, stop, threads }
     }
 
-    /// Submit a request; returns the response channel. Errors if the
-    /// admission queue is full (backpressure) or the server is stopped.
-    pub fn submit(&self, pixels: Vec<u8>) -> Result<Receiver<Result<Response, String>>> {
+    /// Submit a request; returns the response channel. Errors with
+    /// [`AdmitError::QueueFull`] when the bounded admission queue is
+    /// full (backpressure) and [`AdmitError::Closed`] when the server
+    /// is stopped.
+    pub fn submit(
+        &self,
+        pixels: Vec<u8>,
+    ) -> Result<Receiver<Result<Response, String>>, AdmitError> {
+        use std::sync::mpsc::TrySendError;
         let (rtx, rrx) = sync_channel(1);
         let req = Request { pixels, enqueued: Instant::now(), resp: rtx };
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .try_send(req)
-            .map_err(|e| anyhow::anyhow!("queue full or closed: {e}"))?;
-        Ok(rrx)
+        match self.tx.as_ref().expect("server running").try_send(req) {
+            Ok(()) => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                Ok(rrx)
+            }
+            Err(TrySendError::Full(_)) => Err(AdmitError::QueueFull),
+            Err(TrySendError::Disconnected(_)) => Err(AdmitError::Closed),
+        }
     }
 
     /// Submit and wait.
@@ -156,7 +186,9 @@ impl Server {
                     for rx in rxs {
                         let _ = rx.recv();
                     }
-                    return Err(e.context("micro-batch admission failed partway"));
+                    return Err(
+                        anyhow::Error::new(e).context("micro-batch admission failed partway")
+                    );
                 }
             }
         }
@@ -194,6 +226,24 @@ impl Drop for Server {
     }
 }
 
+/// Reply an explicit error to every request in `reqs`. Used on the
+/// teardown paths (worker pool gone, shutdown mid-drain) so a caller
+/// blocked on its response channel gets an error instead of waiting for
+/// its own timeout on a silently dropped request.
+fn fail_requests(reqs: Vec<Request>, msg: &str) {
+    for r in reqs {
+        let _ = r.resp.send(Err(msg.to_string()));
+    }
+}
+
+/// Drain everything still sitting on the admission queue and error-reply
+/// it; called when batches can no longer reach the workers.
+fn fail_queued(rx: &Receiver<Request>, msg: &str) {
+    while let Ok(r) = rx.try_recv() {
+        let _ = r.resp.send(Err(msg.to_string()));
+    }
+}
+
 fn batcher_loop(
     rx: Receiver<Request>,
     btx: SyncSender<Vec<Request>>,
@@ -202,7 +252,8 @@ fn batcher_loop(
     max_batch: usize,
     max_wait: Duration,
 ) {
-    'outer: loop {
+    const WORKERS_GONE: &str = "server worker pool shut down before the batch ran";
+    loop {
         // block for the first request of a batch
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(r) => r,
@@ -214,26 +265,52 @@ fn batcher_loop(
             }
             Err(RecvTimeoutError::Disconnected) => return,
         };
-        let deadline = first.enqueued + max_wait;
         let mut batch = vec![first];
+        let mut disconnected = false;
+        // Backlog first: greedily drain already-queued requests up to
+        // max_batch *before* arming any deadline. Under queue pressure
+        // the oldest request's `enqueued + max_wait` is already in the
+        // past at pickup; keying the wait off it collapsed every batch
+        // to one sample exactly when load was highest.
         while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
+            match rx.try_recv() {
                 Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    // flush what we have, then exit
-                    metrics.record_batch(batch.len());
-                    let _ = btx.send(batch);
-                    break 'outer;
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if !disconnected && batch.len() < max_batch {
+            // queue ran dry below a full batch: wait out the residual
+            // window, measured from now — not from the first request's
+            // enqueue time
+            let deadline = Instant::now() + max_wait;
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
                 }
             }
         }
         metrics.record_batch(batch.len());
-        if btx.send(batch).is_err() {
+        if let Err(send_err) = btx.send(batch) {
+            // worker pool is gone: error-reply this batch and everything
+            // still queued instead of dropping the requests on the floor
+            fail_requests(send_err.0, WORKERS_GONE);
+            fail_queued(&rx, WORKERS_GONE);
+            return;
+        }
+        if disconnected {
             return;
         }
     }
@@ -262,10 +339,8 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                let msg = format!("engine error: {e}");
-                for req in batch {
-                    let _ = req.resp.send(Err(msg.clone()));
-                }
+                // a failing engine must answer, not strand, its batch
+                fail_requests(batch, &format!("engine error: {e}"));
             }
         }
     }
@@ -391,6 +466,114 @@ mod tests {
         let m = server.metrics();
         let occ_total: u64 = m.occupancy_counts().iter().sum();
         assert_eq!(occ_total, m.batches.load(Ordering::Relaxed));
+        server.shutdown();
+    }
+
+    /// A float engine big enough that one dispatched batch takes real
+    /// time, so the admission queue backs up while the worker chews.
+    fn slow_float_engine(seed: u64) -> Engine {
+        let spec = ModelSpec {
+            name: "slow".into(),
+            input_shape: vec![256],
+            layers: vec![
+                LayerSpec::Dense { input: 256, output: 256, act: Activation::Relu },
+                LayerSpec::Dense { input: 256, output: 10, act: Activation::None },
+            ],
+        };
+        let mut rng = Rng::new(seed);
+        Engine::Float(StdArc::new(Model {
+            spec,
+            params: vec![
+                Some(LayerParams {
+                    w: rng.gaussian_vec_f32(256 * 256, 0.05),
+                    b: vec![0.0; 256],
+                }),
+                Some(LayerParams {
+                    w: rng.gaussian_vec_f32(256 * 10, 0.05),
+                    b: vec![0.0; 10],
+                }),
+            ],
+        }))
+    }
+
+    #[test]
+    fn backlog_batches_do_not_collapse() {
+        // Regression for the deadline bug: with the deadline keyed off
+        // the first request's enqueue time, a backed-up queue made every
+        // deadline already-past at pickup and every batch degenerated to
+        // 1 sample. Pre-queue requests faster than the single worker
+        // drains and assert the median dispatched batch stays at least
+        // half full.
+        let max_batch = 16;
+        let server = Server::start(
+            slow_float_engine(21),
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                workers: 1,
+                queue_cap: 2048,
+                shards: 1,
+            },
+        );
+        let mut rng = Rng::new(22);
+        let mut rxs = Vec::new();
+        for _ in 0..400 {
+            let pixels: Vec<u8> = (0..256).map(|_| rng.below(256) as u8).collect();
+            rxs.push(server.submit(pixels).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
+        }
+        let m = server.metrics();
+        let p50 = m.occupancy_quantile(0.5);
+        assert!(
+            p50 >= (max_batch / 2) as u64,
+            "batches collapsed under backlog: occupancy p50 {p50} < {}",
+            max_batch / 2
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn broken_worker_pool_errors_instead_of_dropping() {
+        // With zero workers the batch channel has no receiver, so the
+        // batcher's dispatch fails. Every submitted request must still
+        // get an explicit answer (an error) — never a silent drop that
+        // leaves the caller waiting out its own timeout.
+        let server = Server::start(
+            float_engine(31),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                workers: 0,
+                queue_cap: 256,
+                shards: 1,
+            },
+        );
+        let mut rng = Rng::new(32);
+        let mut rxs = Vec::new();
+        for _ in 0..50 {
+            let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+            match server.submit(pixels) {
+                Ok(rx) => rxs.push(rx),
+                // the batcher may already have torn down the queue —
+                // a typed admission error is an acceptable answer too
+                Err(AdmitError::Closed) => {}
+                Err(e) => panic!("unexpected admission error: {e}"),
+            }
+        }
+        for rx in rxs {
+            // answered, with an error — not a recv timeout
+            let r = rx.recv_timeout(Duration::from_secs(5));
+            match r {
+                Ok(resp) => assert!(resp.is_err(), "no worker could have produced {resp:?}"),
+                // batcher dropped the queue after replying to what it
+                // had drained; a disconnected response channel is still
+                // an explicit terminal outcome, not a hang
+                Err(RecvTimeoutError::Disconnected) => {}
+                Err(RecvTimeoutError::Timeout) => panic!("request silently dropped"),
+            }
+        }
         server.shutdown();
     }
 

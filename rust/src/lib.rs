@@ -7,7 +7,9 @@
 //! SIMD-width inner loops in [`nn::simd`]), weight compression codecs,
 //! hardware cycle simulators, and a batching inference coordinator that
 //! serves both AOT-compiled XLA graphs (via PJRT) and the pure-integer
-//! PVQ engines.
+//! PVQ engines — fronted by a dependency-free, admission-controlled
+//! HTTP/1.1 server ([`coordinator::http`]) speaking hand-rolled JSON
+//! and Prometheus text ([`coordinator::net`], [`coordinator::metrics`]).
 //!
 //! See `docs/ARCHITECTURE.md` for the module inventory, data-flow
 //! diagram, and the paper-experiment index; `docs/PVQM_FORMAT.md` for

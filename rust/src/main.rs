@@ -10,10 +10,13 @@
 //!   inspect --file m.pvqm        print a .pvqm manifest
 //!   serve --net a [...]          batching inference server demo
 //!   serve --models a.pvqm,…      multi-model registry serving
+//!   serve --listen host:port     HTTP/1.1 front end (admission-controlled)
 //!   info                         artifact inventory
 
 use anyhow::{bail, Context, Result};
-use pvqnet::coordinator::{Engine, ModelRegistry, Router, ServerConfig};
+use pvqnet::coordinator::{
+    Engine, EngineKind, HttpConfig, HttpServer, ModelRegistry, Router, ServerConfig,
+};
 use pvqnet::data::Dataset;
 use pvqnet::hw::HwReport;
 use pvqnet::nn::weights::load_model;
@@ -313,7 +316,63 @@ fn cmd_serve_models(flags: &HashMap<String, String>, models: &str) -> Result<()>
     Ok(())
 }
 
+/// `serve --listen ADDR`: expose the model registry over the
+/// dependency-free HTTP/1.1 front end (`POST /v1/classify`,
+/// `GET /v1/models`, `GET /metrics`, `GET /healthz`) with admission
+/// control. Models come from `--models a.pvqm,…` or, with `--synth`,
+/// an in-memory quantized synthetic net (`--net`). `--duration-s N`
+/// serves for N seconds then drains gracefully; the default is to
+/// serve until the process is killed.
+fn cmd_serve_http(flags: &HashMap<String, String>, listen: &str) -> Result<()> {
+    let cfg = server_cfg(flags)?;
+    let mut reg = if let Some(models) = flags.get("models") {
+        let paths: Vec<PathBuf> =
+            models.split(',').map(|s| PathBuf::from(s.trim())).collect();
+        ModelRegistry::load(&paths, cfg)?
+    } else {
+        let (spec, model) = load_or_synth(flags)?;
+        let ratios = ratios_from_flags(flags, &spec)?;
+        let q = quantize(&model, &ratios, RhoMode::Norm)?;
+        let mut reg = ModelRegistry::new(cfg);
+        let name = format!("net_{}", spec.name.to_ascii_lowercase());
+        reg.register_quant(&name, q.quant_model, EngineKind::Auto, None)?;
+        reg
+    };
+    if let Some(d) = flags.get("default") {
+        reg.set_default(d)?;
+    }
+    let mut http_cfg = HttpConfig::default();
+    if let Some(v) = flags.get("http-workers") {
+        http_cfg.conn_workers = v.parse().context("parse --http-workers")?;
+        if http_cfg.conn_workers == 0 {
+            bail!("--http-workers must be ≥ 1");
+        }
+    }
+    if let Some(v) = flags.get("max-inflight") {
+        http_cfg.max_inflight = v.parse().context("parse --max-inflight")?;
+    }
+    let server = HttpServer::start(reg, http_cfg, listen)?;
+    println!("listening on http://{}", server.addr());
+    println!("  POST /v1/classify   GET /v1/models   GET /metrics   GET /healthz");
+    match flags.get("duration-s") {
+        Some(v) => {
+            let secs: u64 = v.parse().context("parse --duration-s")?;
+            std::thread::sleep(Duration::from_secs(secs));
+            println!("draining after {secs}s");
+            print!("{}", server.summary());
+            server.shutdown();
+        }
+        None => loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        },
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    if let Some(listen) = flags.get("listen") {
+        return cmd_serve_http(flags, listen);
+    }
     if let Some(models) = flags.get("models") {
         return cmd_serve_models(flags, models);
     }
@@ -401,7 +460,11 @@ fn main() -> Result<()> {
                    serve:   --requests N | --models a.pvqm,b.pvqm [--default NAME]\n\
                             batching knobs: --max-batch N (default 32)\n\
                             --max-wait-us N (default 2000)  --workers N (default 1)\n\
-                            --shards N (default 1; intra-model shards per batch)"
+                            --shards N (default 1; intra-model shards per batch)\n\
+                            --listen HOST:PORT  expose the registry over HTTP/1.1\n\
+                            (POST /v1/classify, GET /v1/models, /metrics, /healthz)\n\
+                            with --http-workers N (default 4)  --max-inflight N\n\
+                            (default 256)  --duration-s N (default: run until killed)"
             );
         }
         other => bail!("unknown command '{other}' (try `pvqnet help`)"),

@@ -43,8 +43,11 @@ pub fn ratio_sweep(
 }
 
 /// Find the coarsest uniform ratio whose accuracy stays within
-/// `max_drop` of `baseline` (binary search over a ratio grid). Returns
-/// the chosen ratio. This automates the paper's manual iteration.
+/// `max_drop` of `baseline`: a linear fine-to-coarse scan over a fixed
+/// ratio grid that stops at the first point exceeding the budget (the
+/// accuracy/ratio curve is not reliably monotone, so no bisection is
+/// attempted). Returns the chosen ratio. This automates the paper's
+/// manual iteration.
 pub fn tune_ratio(
     model: &Model,
     data: &Dataset,

@@ -1,0 +1,345 @@
+//! End-to-end socket tests for the HTTP/1.1 serving front end
+//! (`coordinator::http`): raw loopback TCP clients against a live
+//! `HttpServer`, verifying classify correctness against a direct
+//! registry, every error-path status code, admission-control `429`s,
+//! concurrent keep-alive connections, and graceful shutdown that
+//! answers (never strands) in-flight requests. Loopback sockets only —
+//! no external network.
+
+use pvqnet::coordinator::{EngineKind, HttpConfig, HttpServer, ModelRegistry, ServerConfig};
+use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
+use pvqnet::nn::{Model, QuantModel};
+use pvqnet::pvq::RhoMode;
+use pvqnet::quant::quantize;
+use pvqnet::testkit::Rng;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+const INPUT: usize = 16;
+
+fn quant_mlp(seed: u64) -> QuantModel {
+    let spec = ModelSpec {
+        name: "e2e".into(),
+        input_shape: vec![INPUT],
+        layers: vec![
+            LayerSpec::Dense { input: INPUT, output: 8, act: Activation::Relu },
+            LayerSpec::Dense { input: 8, output: 4, act: Activation::None },
+        ],
+    };
+    let m = Model::synth(&spec, seed);
+    quantize(&m, &[1.5, 1.0], RhoMode::Norm).unwrap().quant_model
+}
+
+fn registry(seed: u64) -> ModelRegistry {
+    let mut reg = ModelRegistry::new(ServerConfig::default());
+    reg.register_quant("m", quant_mlp(seed), EngineKind::Auto, None).unwrap();
+    reg
+}
+
+fn start(seed: u64, cfg: HttpConfig) -> HttpServer {
+    HttpServer::start(registry(seed), cfg, "127.0.0.1:0").unwrap()
+}
+
+fn random_pixels(rng: &mut Rng) -> Vec<u8> {
+    (0..INPUT).map(|_| rng.below(256) as u8).collect()
+}
+
+fn pixels_json(p: &[u8]) -> String {
+    let nums: Vec<String> = p.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", nums.join(","))
+}
+
+/// Minimal keep-alive HTTP client: sends requests and reads exactly one
+/// `Content-Length`-framed response per call.
+struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client { stream, buf: Vec::new() }
+    }
+
+    fn send(&mut self, raw: &str) {
+        self.stream.write_all(raw.as_bytes()).unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    /// Read one response. `Err(true)` means the connection died *mid*
+    /// response (a half-written answer — always a bug), `Err(false)` a
+    /// clean close before any response byte (e.g. server drained).
+    fn try_read_response(&mut self) -> Result<(u16, String, String), bool> {
+        let mut got_bytes = !self.buf.is_empty();
+        let head_end = loop {
+            if let Some(i) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) | Err(_) => return Err(got_bytes),
+                Ok(n) => {
+                    got_bytes = true;
+                    self.buf.extend_from_slice(&chunk[..n]);
+                }
+            }
+        };
+        let head = String::from_utf8(self.buf[..head_end].to_vec()).unwrap();
+        let status: u16 = head
+            .split(' ')
+            .nth(1)
+            .expect("status code in status line")
+            .parse()
+            .expect("numeric status");
+        let content_len: usize = head
+            .lines()
+            .find_map(|l| {
+                let (name, v) = l.split_once(':')?;
+                name.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
+            })
+            .expect("Content-Length header");
+        let body_start = head_end + 4;
+        while self.buf.len() < body_start + content_len {
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) | Err(_) => return Err(true),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+            }
+        }
+        let rest = self.buf.split_off(body_start + content_len);
+        let body = String::from_utf8(self.buf[body_start..].to_vec()).unwrap();
+        self.buf = rest;
+        Ok((status, head, body))
+    }
+
+    /// Read one response; panics if the connection closes instead.
+    fn read_response(&mut self) -> (u16, String, String) {
+        self.try_read_response().expect("complete response before close")
+    }
+
+    fn post_classify(&mut self, body: &str, keep_alive: bool) -> (u16, String, String) {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+            body.len()
+        );
+        self.send(&raw);
+        self.read_response()
+    }
+
+    fn get(&mut self, path: &str) -> (u16, String, String) {
+        let raw = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n");
+        self.send(&raw);
+        self.read_response()
+    }
+}
+
+/// Pull `"class":N` values out of a response body in order.
+fn classes_in(body: &str) -> Vec<usize> {
+    body.match_indices("\"class\":")
+        .map(|(i, pat)| {
+            let digits: String = body[i + pat.len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            digits.parse().unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn classify_roundtrip_matches_direct_registry() {
+    // same seed → same quantized model on both sides of the wire
+    let direct = registry(41);
+    let server = start(41, HttpConfig::default());
+    let mut client = Client::connect(server.addr());
+    let mut rng = Rng::new(7);
+
+    // single-sample bodies, once routed by name and once by default
+    for model_field in ["", "\"model\":\"m\","] {
+        let p = random_pixels(&mut rng);
+        let want = direct.classify(None, p.clone()).unwrap().class;
+        let body = format!("{{{model_field}\"pixels\":{}}}", pixels_json(&p));
+        let (status, _, resp) = client.post_classify(&body, true);
+        assert_eq!(status, 200, "{resp}");
+        assert_eq!(classes_in(&resp), vec![want], "{resp}");
+        assert!(resp.contains("\"model\":\"m\""));
+        assert!(resp.contains("\"latency_us\":"));
+    }
+
+    // batch body answers in request order
+    let samples: Vec<Vec<u8>> = (0..9).map(|_| random_pixels(&mut rng)).collect();
+    let want: Vec<usize> = direct
+        .classify_batch(None, samples.clone())
+        .unwrap()
+        .iter()
+        .map(|r| r.class)
+        .collect();
+    let rows: Vec<String> = samples.iter().map(|p| pixels_json(p)).collect();
+    let body = format!("{{\"samples\":[{}]}}", rows.join(","));
+    let (status, _, resp) = client.post_classify(&body, false);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(classes_in(&resp), want, "{resp}");
+
+    // the front end counted what it admitted
+    assert_eq!(server.metrics().http_admitted.load(std::sync::atomic::Ordering::Relaxed), 3);
+    direct.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn error_status_codes() {
+    let server = start(43, HttpConfig { max_body_bytes: 4096, ..Default::default() });
+    let mut c = Client::connect(server.addr());
+    let ok_pixels = pixels_json(&vec![0u8; INPUT]);
+
+    // unknown route
+    let (status, _, _) = c.get("/v1/nope");
+    assert_eq!(status, 404);
+    // wrong method on a known route
+    c.send("DELETE /metrics HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n");
+    let (status, _, _) = c.read_response();
+    assert_eq!(status, 405);
+    // malformed JSON
+    let (status, _, body) = c.post_classify("{\"pixels\":[1,", true);
+    assert_eq!(status, 400, "{body}");
+    // neither pixels nor samples
+    let (status, _, _) = c.post_classify("{\"x\":1}", true);
+    assert_eq!(status, 400);
+    // non-pixel values
+    let (status, _, _) = c.post_classify("{\"pixels\":[1,2,999]}", true);
+    assert_eq!(status, 400);
+    // wrong pixel count
+    let (status, _, body) = c.post_classify("{\"pixels\":[1,2,3]}", true);
+    assert_eq!(status, 400);
+    assert!(body.contains("expects 16 pixels"), "{body}");
+    // unknown model name
+    let body = format!("{{\"model\":\"ghost\",\"pixels\":{ok_pixels}}}");
+    let (status, _, resp) = c.post_classify(&body, true);
+    assert_eq!(status, 404, "{resp}");
+    // oversized declared body → 413 and the connection closes
+    let (status, _, _) = c.post_classify(&format!("{{\"pixels\":[{}]}}", "0,".repeat(4000)), true);
+    assert_eq!(status, 413);
+
+    let m = server.metrics();
+    assert!(m.http_errors.load(std::sync::atomic::Ordering::Relaxed) >= 8);
+    server.shutdown();
+}
+
+#[test]
+fn saturation_answers_429_with_retry_after() {
+    // max_inflight 0: every classify is over budget — the deterministic
+    // stand-in for "the batching queue is saturated"; the request is
+    // answered immediately, never hung or dropped
+    let server = start(45, HttpConfig { max_inflight: 0, ..Default::default() });
+    let mut c = Client::connect(server.addr());
+    let body = format!("{{\"pixels\":{}}}", pixels_json(&vec![1u8; INPUT]));
+    for _ in 0..3 {
+        let (status, head, _) = c.post_classify(&body, true);
+        assert_eq!(status, 429);
+        assert!(head.contains("Retry-After: 1"), "{head}");
+    }
+    // health and metrics still answer while classify is saturated
+    let (status, _, body) = c.get("/healthz");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\""));
+    let (status, _, body) = c.get("/metrics");
+    assert_eq!(status, 200);
+    assert!(body.contains("pvqnet_http_rejected_total 3"), "{body}");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_keepalive_connections() {
+    let direct = registry(47);
+    // one connection worker per client so all 8 keep-alive connections
+    // are genuinely served concurrently
+    let server = start(47, HttpConfig { conn_workers: 8, ..Default::default() });
+    let addr = server.addr();
+    let clients: u64 = 8;
+    let per_client: u64 = 10;
+    let mut handles = Vec::new();
+    for ci in 0..clients {
+        let direct_want: Vec<(Vec<u8>, usize)> = {
+            let mut rng = Rng::new(100 + ci);
+            (0..per_client)
+                .map(|_| {
+                    let p = random_pixels(&mut rng);
+                    let want = direct.classify(None, p.clone()).unwrap().class;
+                    (p, want)
+                })
+                .collect()
+        };
+        handles.push(std::thread::spawn(move || {
+            // one persistent connection per client, requests in series
+            let mut c = Client::connect(addr);
+            for (p, want) in direct_want {
+                let body = format!("{{\"pixels\":{}}}", pixels_json(&p));
+                let (status, _, resp) = c.post_classify(&body, true);
+                assert_eq!(status, 200, "{resp}");
+                assert_eq!(classes_in(&resp), vec![want], "{resp}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.metrics();
+    let admitted = m.http_admitted.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(admitted, clients * per_client);
+    direct.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_answers_every_inflight_request() {
+    let server = start(49, HttpConfig::default());
+    let addr = server.addr();
+    let mut handles = Vec::new();
+    for ci in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(200 + ci);
+            let mut c = Client::connect(addr);
+            let mut outcomes = Vec::new();
+            loop {
+                let body = format!("{{\"pixels\":{}}}", pixels_json(&random_pixels(&mut rng)));
+                let raw = format!(
+                    "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+                     Connection: keep-alive\r\n\r\n{body}",
+                    body.len()
+                );
+                // once the listener dies mid-drain the write or read
+                // errors — that is the loop's clean exit; what must
+                // never happen is a hang or a half-written response
+                if c.stream.write_all(raw.as_bytes()).is_err() {
+                    break;
+                }
+                match c.try_read_response() {
+                    Ok((s, _, _)) => outcomes.push(s),
+                    // clean close between responses: explicit end
+                    Err(false) => break,
+                    Err(true) => panic!("connection died mid-response during drain"),
+                }
+            }
+            outcomes
+        }));
+    }
+    // let the clients get some requests in flight, then drain
+    std::thread::sleep(Duration::from_millis(150));
+    server.shutdown();
+    let mut total = 0usize;
+    for h in handles {
+        let outcomes = h.join().expect("client thread must terminate after drain");
+        for &s in &outcomes {
+            // every completed exchange carries a definitive status:
+            // success, or an explicit drain/saturation answer
+            assert!(matches!(s, 200 | 429 | 503), "unexpected status {s}");
+        }
+        total += outcomes.len();
+    }
+    assert!(total > 0, "shutdown raced ahead of every client");
+}
