@@ -368,38 +368,6 @@ fn bench_serve() {
     }
 }
 
-/// Read and discard one `Content-Length`-framed HTTP response off
-/// `stream`, asserting a 200; `buf` carries keep-alive leftovers.
-fn read_http_response(stream: &mut std::net::TcpStream, buf: &mut Vec<u8>) {
-    use std::io::Read;
-    let head_end = loop {
-        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
-            break i;
-        }
-        let mut chunk = [0u8; 4096];
-        let n = stream.read(&mut chunk).expect("read http head");
-        assert!(n > 0, "server closed mid-response");
-        buf.extend_from_slice(&chunk[..n]);
-    };
-    let head = std::str::from_utf8(&buf[..head_end]).unwrap();
-    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
-    let len: usize = head
-        .lines()
-        .find_map(|l| {
-            let (name, v) = l.split_once(':')?;
-            name.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
-        })
-        .expect("content-length header");
-    let total = head_end + 4 + len;
-    while buf.len() < total {
-        let mut chunk = [0u8; 4096];
-        let n = stream.read(&mut chunk).expect("read http body");
-        assert!(n > 0, "server closed mid-body");
-        buf.extend_from_slice(&chunk[..n]);
-    }
-    *buf = buf.split_off(total);
-}
-
 /// HTTP front-end latency sweep: concurrent keep-alive loopback clients
 /// hammer `POST /v1/classify` (synth net A through the registry's auto
 /// engine) at client counts {1, 4, 16}; per-request latency p50/p99 and
@@ -407,8 +375,7 @@ fn read_http_response(stream: &mut std::net::TcpStream, buf: &mut Vec<u8>) {
 /// client sends a single request (CI bit-rot gate).
 fn bench_http() {
     use pvqnet::coordinator::{EngineKind, HttpConfig, HttpServer, ModelRegistry};
-    use std::io::Write;
-    use std::net::TcpStream;
+    use pvqnet::testkit::http::HttpTestClient;
 
     let spec = ModelSpec::by_name("a").unwrap();
     let model = pvqnet::nn::Model::synth(&spec, 42);
@@ -430,22 +397,15 @@ fn bench_http() {
         for ci in 0..clients {
             handles.push(std::thread::spawn(move || {
                 let mut rng = Rng::new(900 + ci as u64);
-                let mut stream = TcpStream::connect(addr).unwrap();
-                stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-                let mut buf = Vec::new();
+                let mut client = HttpTestClient::connect(addr).unwrap();
                 let mut lat_us = Vec::with_capacity(per_client);
                 for _ in 0..per_client {
                     let pixels: Vec<String> =
                         (0..input_len).map(|_| rng.below(256).to_string()).collect();
                     let body = format!("{{\"pixels\":[{}]}}", pixels.join(","));
-                    let raw = format!(
-                        "POST /v1/classify HTTP/1.1\r\nContent-Length: {}\r\n\
-                         Connection: keep-alive\r\n\r\n{body}",
-                        body.len()
-                    );
                     let t = Instant::now();
-                    stream.write_all(raw.as_bytes()).unwrap();
-                    read_http_response(&mut stream, &mut buf);
+                    let resp = client.post_classify(&body, true);
+                    assert_eq!(resp.status, 200, "{}", resp.body);
                     lat_us.push(t.elapsed().as_secs_f64() * 1e6);
                 }
                 lat_us
@@ -622,6 +582,29 @@ fn bench_shard() {
     println!("  wrote BENCH_shard.json");
 }
 
+/// Closed-loop `loadgen` harness run: seeded traffic + fault schedule
+/// against both the HTTP and in-process paths, every success checked
+/// by the bitwise oracle; emits `BENCH_load.json`. Under `--smoke` the
+/// request count shrinks to a few dozen (the CI loadtest job runs the
+/// CLI variant with drain-mid-flight on top).
+fn bench_loadgen() {
+    use pvqnet::loadgen::{run, LoadConfig, TrafficShape};
+
+    let cfg = LoadConfig {
+        seed: 42,
+        requests: if smoke() { 48 } else { 240 },
+        shape: TrafficShape::Closed { clients: 4 },
+        fault_every: 6,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let report = run(&cfg).expect("loadgen run");
+    print!("{}", report.render().replace('\n', "\n  "));
+    std::fs::write("BENCH_load.json", report.to_json()).unwrap();
+    println!("\n  wrote BENCH_load.json ({} total)", fmt_t(t0.elapsed().as_secs_f64()));
+    assert!(report.passed(), "loadgen bench failed its own oracle/accounting gate");
+}
+
 /// Artifact pack/unpack throughput + compressed bytes per weight on a
 /// net-A-shaped synthetic model; emits BENCH_artifact.json next to the
 /// other bench outputs.
@@ -763,6 +746,7 @@ fn main() {
         ("http", bench_http),
         ("batch", bench_batch),
         ("shard", bench_shard),
+        ("loadgen", bench_loadgen),
         ("artifact", bench_artifact),
         ("pjrt", bench_pjrt),
     ];

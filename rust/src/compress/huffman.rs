@@ -35,7 +35,9 @@ impl HuffmanCodec {
         let nsym = 2 * v_max as usize + 2;
         let mut freq = vec![0u64; nsym];
         for &v in values {
-            if v.abs() <= v_max {
+            // unsigned_abs: i32::MIN is a legal escape value, and plain
+            // abs() would overflow-panic on it in debug builds
+            if v.unsigned_abs() <= v_max as u32 {
                 freq[(v + v_max) as usize] += 1;
             } else {
                 freq[Self::escape_sym(v_max)] += 1;
@@ -122,7 +124,7 @@ impl HuffmanCodec {
 
     /// Bits to code value `v` under this table.
     pub fn value_len(&self, v: i32) -> u32 {
-        if v.abs() <= self.v_max {
+        if v.unsigned_abs() <= self.v_max as u32 {
             self.lengths[(v + self.v_max) as usize]
         } else {
             self.lengths[Self::escape_sym(self.v_max)] + ESCAPE_RAW_BITS
@@ -135,7 +137,7 @@ impl HuffmanCodec {
     pub fn encode_slice(&self, values: &[i32]) -> (Vec<u8>, u64) {
         let mut w = BitWriter::new();
         for &v in values {
-            if v.abs() <= self.v_max {
+            if v.unsigned_abs() <= self.v_max as u32 {
                 let s = (v + self.v_max) as usize;
                 assert!(self.lengths[s] > 0, "value {v} has no codeword");
                 w.put_bits(self.codes[s], self.lengths[s]);
@@ -212,6 +214,16 @@ mod tests {
     fn escape_path() {
         let vals = vec![0, 0, 100, -5000, 0, 1];
         let codec = HuffmanCodec::from_values(&vals, 2);
+        let (bytes, _) = codec.encode_slice(&vals);
+        assert_eq!(codec.decode_slice(&bytes, vals.len()).unwrap(), vals);
+    }
+
+    #[test]
+    fn i32_extremes_escape_and_roundtrip() {
+        // i32::MIN used to overflow-panic in the |v| ≤ V classification
+        let vals = vec![0, i32::MIN, 3, i32::MAX, -1];
+        let codec = HuffmanCodec::from_values(&vals, 3);
+        assert_eq!(codec.value_len(i32::MIN), codec.value_len(i32::MAX));
         let (bytes, _) = codec.encode_slice(&vals);
         assert_eq!(codec.decode_slice(&bytes, vals.len()).unwrap(), vals);
     }

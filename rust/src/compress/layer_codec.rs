@@ -90,7 +90,8 @@ pub fn compress_layer(q: &PvqVector, codec: Codec) -> Vec<u8> {
             let nsym = 2 * HUFF_V_MAX as usize + 2;
             let mut freq = vec![0u32; nsym];
             for &v in &q.components {
-                if v.abs() <= HUFF_V_MAX {
+                // unsigned_abs: i32::MIN escapes; abs() would panic
+                if v.unsigned_abs() <= HUFF_V_MAX as u32 {
                     freq[(v + HUFF_V_MAX) as usize] += 1;
                 } else {
                     freq[nsym - 1] += 1;

@@ -22,11 +22,15 @@ fn pack_nonzero(v: i32) -> i64 {
     }
 }
 
-fn unpack_nonzero(p: i64) -> i32 {
+/// Inverse of [`pack_nonzero`], rejecting packed values whose unpacked
+/// form leaves `i32` — a corrupt or adversarial stream must read as an
+/// error, never truncate into a wrong-but-plausible weight (and
+/// `p + 1` on `i64::MAX` must not overflow either).
+fn unpack_nonzero(p: i64) -> Option<i32> {
     if p >= 0 {
-        (p + 1) as i32
+        p.checked_add(1).and_then(|v| i32::try_from(v).ok())
     } else {
-        p as i32
+        i32::try_from(p).ok()
     }
 }
 
@@ -53,17 +57,21 @@ pub fn decode_slice(bytes: &[u8], n: usize) -> Option<Vec<i32>> {
     let mut r = BitReader::new(bytes);
     let mut out: Vec<i32> = Vec::with_capacity(n);
     while out.len() < n {
-        let run = read_ue(&mut r)? as usize;
-        if out.len() + run > n {
+        let run = read_ue(&mut r)?;
+        // compare in u64 before any usize arithmetic: a corrupt stream
+        // can claim a run near u64::MAX, and `out.len() + run` would
+        // overflow (panicking in debug builds) instead of rejecting
+        if run > (n - out.len()) as u64 {
             return None;
         }
+        let run = run as usize;
         out.extend(std::iter::repeat(0).take(run));
         if out.len() == n {
             // the final ue was the tail run; done
             return Some(out);
         }
         let v = read_se(&mut r)?;
-        out.push(unpack_nonzero(v));
+        out.push(unpack_nonzero(v)?);
     }
     // n nonzero-terminated: still need to consume the tail run marker
     let _ = read_ue(&mut r)?;
@@ -164,5 +172,40 @@ mod tests {
         let (bytes, _) = encode_slice(&vals);
         // ask for more symbols than encoded
         assert!(decode_slice(&bytes, 400).is_none());
+    }
+
+    #[test]
+    fn boundary_values_roundtrip() {
+        let vals = vec![i32::MAX, 0, i32::MIN, -1, 1];
+        let (bytes, _) = encode_slice(&vals);
+        assert_eq!(decode_slice(&bytes, vals.len()).unwrap(), vals);
+    }
+
+    #[test]
+    fn crafted_overflow_values_rejected_not_truncated() {
+        use super::super::bitio::BitWriter;
+        use super::super::expgolomb::zigzag;
+        // a crafted stream can pack values whose unpacked form leaves
+        // i32 — including p = i64::MAX, where the old `p + 1` overflowed
+        // (debug panic) before the `as i32` truncation even ran
+        for ue_payload in [
+            u64::MAX - 2, // unzigzags to i64::MAX → p+1 overflow
+            zigzag(i32::MAX as i64 + 1),
+            zigzag(i32::MIN as i64 - 1),
+        ] {
+            let mut w = BitWriter::new();
+            write_ue(&mut w, 0); // run of zero zeros
+            write_ue(&mut w, ue_payload); // the se′ value, written raw
+            write_ue(&mut w, 0); // tail run
+            let bytes = w.finish();
+            assert_eq!(decode_slice(&bytes, 1), None, "accepted ue {ue_payload}");
+        }
+        // the boundaries themselves still decode (pack_nonzero image)
+        let mut w = BitWriter::new();
+        write_ue(&mut w, 0);
+        write_se(&mut w, i32::MAX as i64 - 1); // pack_nonzero(i32::MAX)
+        write_ue(&mut w, 0);
+        let bytes = w.finish();
+        assert_eq!(decode_slice(&bytes, 1), Some(vec![i32::MAX]));
     }
 }

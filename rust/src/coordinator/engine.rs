@@ -66,6 +66,47 @@ impl Engine {
         }
     }
 
+    /// Tensor shape of one sample: multi-axis engines keep their spec
+    /// shape, flat engines normalize to `[input_len]` (the spec may
+    /// record a flat shape whose product, not first element, is the
+    /// feature count). One definition shared by the scalar and batched
+    /// paths so they cannot drift.
+    fn sample_shape(&self) -> Vec<usize> {
+        let spec_shape: &[usize] = match self {
+            Engine::Float(m) => &m.spec.input_shape,
+            Engine::PvqInt(m) => &m.spec.input_shape,
+            Engine::PvqCompiled(_, shape) => shape,
+            Engine::Binary(m) => return vec![m.input_len],
+            Engine::Hlo(m) => return vec![m.input_len],
+        };
+        if spec_shape.len() == 1 {
+            vec![self.input_len()]
+        } else {
+            spec_shape.to_vec()
+        }
+    }
+
+    /// Integer logits for one sample on the engines whose arithmetic is
+    /// exact — `pvq-int`, `pvq-csr`, and `binary` all accumulate in
+    /// `i64` add/sub chains, so their scores (not just the argmax) are
+    /// bitwise-reproducible. Returns `None` for the float and PJRT
+    /// engines, whose scores are not integer-exact. The load harness's
+    /// oracle ([`crate::loadgen::Oracle`]) uses this to cross-check the
+    /// scalar score path against the batch-fused classify path.
+    pub fn logits(&self, sample: &[u8]) -> Result<Option<Vec<i64>>> {
+        match self {
+            Engine::PvqInt(m) => {
+                let t = ITensor::from_u8(&self.sample_shape(), sample);
+                Ok(Some(forward_int(m, &t)?.logits))
+            }
+            Engine::PvqCompiled(m, _) => {
+                Ok(Some(m.forward(&ITensor::from_u8(&self.sample_shape(), sample))))
+            }
+            Engine::Binary(m) => Ok(Some(m.forward_u8(sample)?)),
+            Engine::Float(_) | Engine::Hlo(_) => Ok(None),
+        }
+    }
+
     /// Classify a batch of u8 samples (each `input_len` long).
     ///
     /// This is the coordinator's default serving path. The CSR and binary
@@ -81,12 +122,7 @@ impl Engine {
         }
         match self {
             Engine::Float(m) => {
-                let flat = m.spec.input_shape.len() == 1;
-                let shape: Vec<usize> = if flat {
-                    vec![self.input_len()]
-                } else {
-                    m.spec.input_shape.clone()
-                };
+                let shape = self.sample_shape();
                 Ok(samples
                     .iter()
                     .map(|s| {
@@ -99,12 +135,7 @@ impl Engine {
                     .collect())
             }
             Engine::PvqInt(m) => {
-                let flat = m.spec.input_shape.len() == 1;
-                let shape: Vec<usize> = if flat {
-                    vec![self.input_len()]
-                } else {
-                    m.spec.input_shape.clone()
-                };
+                let shape = self.sample_shape();
                 samples
                     .iter()
                     .map(|s| {

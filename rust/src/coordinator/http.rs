@@ -57,6 +57,12 @@ pub struct HttpConfig {
     pub max_inflight: usize,
     /// Largest accepted request body in bytes; overflow → `413`.
     pub max_body_bytes: usize,
+    /// Slow-client guard: a request that has started arriving must
+    /// complete within this window, or it is answered `408` and the
+    /// connection closed. The default (5s) suits production; the
+    /// fault-injection harness ([`crate::loadgen`]) shortens it so
+    /// deliberately slow clients resolve in milliseconds.
+    pub read_deadline: Duration,
 }
 
 impl Default for HttpConfig {
@@ -66,6 +72,7 @@ impl Default for HttpConfig {
             max_pending_conns: 64,
             max_inflight: 256,
             max_body_bytes: 1 << 20,
+            read_deadline: Duration::from_secs(5),
         }
     }
 }
@@ -233,6 +240,7 @@ fn serve_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
         Ok(c) => c,
         Err(_) => return,
     };
+    conn.set_read_deadline(shared.cfg.read_deadline);
     loop {
         match conn.next_request(shared.cfg.max_body_bytes, stop) {
             Ok(req) => {

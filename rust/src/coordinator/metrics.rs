@@ -113,6 +113,19 @@ impl Metrics {
         1u64 << BUCKETS
     }
 
+    /// p50/p90/p99/p999 latency in µs (upper bucket edges, like
+    /// [`Metrics::latency_quantile_us`]) — the server-side view the load
+    /// harness embeds next to its client-side HDR histogram so the two
+    /// can be compared in one report.
+    pub fn latency_percentiles_us(&self) -> [u64; 4] {
+        [
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.9),
+            self.latency_quantile_us(0.99),
+            self.latency_quantile_us(0.999),
+        ]
+    }
+
     /// Mean latency in µs.
     pub fn mean_latency_us(&self) -> f64 {
         let n = self.responses.load(Ordering::Relaxed);

@@ -20,8 +20,10 @@ pub const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// flag. Short enough that drain is responsive, long enough to idle.
 const READ_POLL: Duration = Duration::from_millis(50);
 
-/// A request that has started arriving must finish within this window
-/// (slow-client guard; also bounds how long drain waits mid-request).
+/// Default request-read deadline: a request that has started arriving
+/// must finish within this window (slow-client guard; also bounds how
+/// long drain waits mid-request). Overridable per connection via
+/// [`HttpConn::set_read_deadline`].
 const REQUEST_READ_DEADLINE: Duration = Duration::from_secs(5);
 
 /// Write timeout so a stuck client cannot wedge a connection worker.
@@ -93,6 +95,7 @@ pub enum RecvError {
 pub struct HttpConn {
     stream: TcpStream,
     buf: Vec<u8>,
+    read_deadline: Duration,
 }
 
 impl HttpConn {
@@ -100,7 +103,15 @@ impl HttpConn {
     pub fn new(stream: TcpStream) -> std::io::Result<HttpConn> {
         stream.set_read_timeout(Some(READ_POLL))?;
         stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
-        Ok(HttpConn { stream, buf: Vec::new() })
+        Ok(HttpConn { stream, buf: Vec::new(), read_deadline: REQUEST_READ_DEADLINE })
+    }
+
+    /// Override the slow-client request-read deadline (default 5s).
+    /// Injectable clock hook: the fault-injection harness
+    /// ([`crate::loadgen`]) shortens it so deliberately slow clients
+    /// trip the `408` path in milliseconds instead of seconds.
+    pub fn set_read_deadline(&mut self, deadline: Duration) {
+        self.read_deadline = deadline;
     }
 
     /// The underlying stream (for writing responses).
@@ -172,7 +183,7 @@ impl HttpConn {
                         return Err(RecvError::Closed);
                     }
                     if let Some(t0) = started {
-                        if t0.elapsed() > REQUEST_READ_DEADLINE {
+                        if t0.elapsed() > self.read_deadline {
                             return Err(RecvError::TimedOut);
                         }
                     }
@@ -229,7 +240,7 @@ impl HttpConn {
                     if e.kind() == std::io::ErrorKind::WouldBlock
                         || e.kind() == std::io::ErrorKind::TimedOut =>
                 {
-                    if t0.elapsed() > REQUEST_READ_DEADLINE {
+                    if t0.elapsed() > self.read_deadline {
                         return Err(RecvError::TimedOut);
                     }
                 }

@@ -58,6 +58,10 @@ pub struct ModelInfo {
 struct ModelEntry {
     server: Server,
     info: ModelInfo,
+    /// The same engine instance the batching server executes — shared so
+    /// [`ModelRegistry::engine`] can hand out a direct (un-batched) path
+    /// to it for oracle-style verification.
+    engine: Arc<Engine>,
 }
 
 /// Named collection of running model servers.
@@ -136,7 +140,7 @@ impl ModelRegistry {
             bail!("model '{name}' already registered");
         }
         let total_params = model.spec.total_params();
-        let engine = build_engine(model, kind, self.cfg.shards)?;
+        let engine = Arc::new(build_engine(model, kind, self.cfg.shards)?);
         let info = ModelInfo {
             name: name.to_string(),
             engine: engine.name().to_string(),
@@ -145,8 +149,8 @@ impl ModelRegistry {
             compressed_bytes: manifest.map(|m| m.total_compressed()).unwrap_or(0),
             shards: engine.shards(),
         };
-        let server = Server::start(engine, self.cfg.clone());
-        self.entries.insert(name.to_string(), ModelEntry { server, info });
+        let server = Server::start(engine.clone(), self.cfg.clone());
+        self.entries.insert(name.to_string(), ModelEntry { server, info, engine });
         if self.default_model.is_none() {
             self.default_model = Some(name.to_string());
         }
@@ -228,6 +232,16 @@ impl ModelRegistry {
     pub fn resolve(&self, model: Option<&str>) -> Option<&ModelInfo> {
         let name = model.or(self.default_model.as_deref())?;
         self.entries.get(name).map(|e| &e.info)
+    }
+
+    /// Direct (un-batched) handle to a route's engine: `None` route →
+    /// the default model. This is the oracle path of the load harness
+    /// ([`crate::loadgen`]): it is the *same* `Arc<Engine>` instance the
+    /// batching server executes, so a direct `classify_batch` on it is
+    /// the bitwise ground truth for every response this registry serves.
+    pub fn engine(&self, model: Option<&str>) -> Option<Arc<Engine>> {
+        let name = model.or(self.default_model.as_deref())?;
+        self.entries.get(name).map(|e| e.engine.clone())
     }
 
     /// Per-model metrics handles, sorted by name — the `/metrics`

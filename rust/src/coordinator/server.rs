@@ -99,14 +99,17 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start batcher + workers over `engine`.
-    pub fn start(engine: Engine, cfg: ServerConfig) -> Server {
+    /// Start batcher + workers over `engine`. Accepts either a bare
+    /// [`Engine`] or an `Arc<Engine>` — the registry passes a shared
+    /// handle so the same engine instance can also be called directly
+    /// (the load harness's bitwise oracle path).
+    pub fn start(engine: impl Into<Arc<Engine>>, cfg: ServerConfig) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_cap);
         let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
         let brx = Arc::new(Mutex::new(brx));
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
-        let engine = Arc::new(engine);
+        let engine: Arc<Engine> = engine.into();
 
         // batcher thread
         let m = metrics.clone();

@@ -9,7 +9,10 @@
 //! serves both AOT-compiled XLA graphs (via PJRT) and the pure-integer
 //! PVQ engines — fronted by a dependency-free, admission-controlled
 //! HTTP/1.1 server ([`coordinator::http`]) speaking hand-rolled JSON
-//! and Prometheus text ([`coordinator::net`], [`coordinator::metrics`]).
+//! and Prometheus text ([`coordinator::net`], [`coordinator::metrics`]),
+//! and machine-checked under adversarial load by a seeded
+//! load-generation + fault-injection harness with a bitwise
+//! correctness oracle ([`loadgen`], `pvqnet loadtest`).
 //!
 //! See `docs/ARCHITECTURE.md` for the module inventory, data-flow
 //! diagram, and the paper-experiment index; `docs/PVQM_FORMAT.md` for
@@ -23,6 +26,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod hw;
+pub mod loadgen;
 pub mod nn;
 pub mod pvq;
 pub mod quant;

@@ -1,0 +1,232 @@
+//! Fault-injecting loopback HTTP client for the load harness.
+//!
+//! Executes one [`PlannedRequest`] at a time over a keep-alive
+//! connection (reconnecting whenever the server closes it), injecting
+//! the request's scheduled wire-level fault, and classifying what came
+//! back into an explicit [`Outcome`]. The classification is strict on
+//! purpose: the only outcome that is ever acceptable *zero* times is
+//! [`Outcome::Unanswered`] — a request the server swallowed without a
+//! response, a clean close, or a refused connect.
+
+use super::plan::{FaultKind, PlannedRequest};
+use crate::testkit::http::{classes_in, classify_request, HttpTestClient, RecvFailure};
+use std::io::Write;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+/// The explicit terminal state of one executed request.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// The server answered with a complete, framed response.
+    Answered {
+        /// HTTP status code.
+        status: u16,
+        /// Classes parsed from a 200 body (empty otherwise).
+        classes: Vec<usize>,
+        /// First-request-byte → last-response-byte wall time.
+        latency_us: u64,
+    },
+    /// The connect itself failed (listener gone — e.g. after drain).
+    Refused,
+    /// The connection closed cleanly before any response byte (an
+    /// explicit end, e.g. the server drained between requests).
+    ClosedClean,
+    /// The client aborted on purpose (disconnect-mid-body fault); no
+    /// response is expected.
+    Aborted,
+    /// The request vanished: mid-response death or a silent read
+    /// timeout. Always a serving bug — the harness fails on any.
+    Unanswered,
+}
+
+/// One load client: owns (at most) one keep-alive connection.
+pub struct HttpClient {
+    addr: SocketAddr,
+    conn: Option<HttpTestClient>,
+    read_timeout: Duration,
+    /// Pause between slow-client body chunks; the runner sizes it so
+    /// the total write time exceeds the server's read deadline.
+    slow_gap: Duration,
+    /// Body cap the server was configured with (drives the oversized
+    /// fault's declared Content-Length).
+    max_body_bytes: usize,
+}
+
+impl HttpClient {
+    /// New client for a server at `addr`.
+    pub fn new(
+        addr: SocketAddr,
+        read_timeout: Duration,
+        slow_gap: Duration,
+        max_body_bytes: usize,
+    ) -> HttpClient {
+        HttpClient { addr, conn: None, read_timeout, slow_gap, max_body_bytes }
+    }
+
+    fn connect(&mut self) -> bool {
+        if self.conn.is_none() {
+            match HttpTestClient::connect_timeout(self.addr, self.read_timeout) {
+                Ok(c) => self.conn = Some(c),
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+
+    /// Read one response and classify it; drops the connection when the
+    /// server signalled close (or anything went wrong).
+    fn read_outcome(&mut self, t0: Instant) -> Outcome {
+        let conn = self.conn.as_mut().expect("connection present");
+        match conn.try_read_response() {
+            Ok(resp) => {
+                let latency_us = t0.elapsed().as_micros() as u64;
+                let classes =
+                    if resp.status == 200 { classes_in(&resp.body) } else { Vec::new() };
+                if resp.connection_close() {
+                    self.conn = None;
+                }
+                Outcome::Answered { status: resp.status, classes, latency_us }
+            }
+            Err(RecvFailure::Closed) => {
+                self.conn = None;
+                Outcome::ClosedClean
+            }
+            Err(RecvFailure::TimedOut) | Err(RecvFailure::MidResponse) => {
+                self.conn = None;
+                Outcome::Unanswered
+            }
+        }
+    }
+
+    /// Execute one planned request, injecting its fault (if any), and
+    /// return its explicit terminal outcome.
+    pub fn execute(&mut self, req: &PlannedRequest) -> Outcome {
+        if !self.connect() {
+            return Outcome::Refused;
+        }
+        let body = req.body();
+        let t0 = Instant::now();
+        let write_result: std::io::Result<()> = match req.fault {
+            None | Some(FaultKind::ModelMiss) => {
+                let raw = classify_request(&body, true);
+                self.conn.as_mut().unwrap().send(raw.as_bytes())
+            }
+            Some(FaultKind::CorruptJson) => {
+                let raw = classify_request(&corrupt_body(&body), true);
+                self.conn.as_mut().unwrap().send(raw.as_bytes())
+            }
+            Some(FaultKind::TruncatedJson) => {
+                // well-framed HTTP, JSON cut mid-way: a valid prefix the
+                // parser must reject without panicking
+                let cut = &body[..body.len() / 2];
+                let raw = classify_request(cut, true);
+                self.conn.as_mut().unwrap().send(raw.as_bytes())
+            }
+            Some(FaultKind::Oversized) => {
+                // declare a body over the cap; the server answers 413
+                // from the declaration alone, so no body is sent
+                let raw = format!(
+                    "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+                     Connection: keep-alive\r\n\r\n",
+                    self.max_body_bytes + 1
+                );
+                self.conn.as_mut().unwrap().send(raw.as_bytes())
+            }
+            Some(FaultKind::SlowClient) => self.write_slowly(&body),
+            Some(FaultKind::DisconnectMidBody) => {
+                let raw = classify_request(&body, true);
+                let half = raw.len() - body.len() / 2;
+                let conn = self.conn.as_mut().unwrap();
+                let _ = conn.send(raw[..half].as_bytes());
+                let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+                self.conn = None;
+                return Outcome::Aborted;
+            }
+        };
+        match write_result {
+            Ok(()) => self.read_outcome(t0),
+            Err(_) => {
+                // the write failed — the server may have closed the
+                // connection *after* queueing an answer (408 to a slow
+                // client, drain mid-exchange); whatever is readable
+                // decides the outcome, a bare write error is a close
+                match self.conn.as_mut().unwrap().try_read_response() {
+                    Ok(resp) => {
+                        let latency_us = t0.elapsed().as_micros() as u64;
+                        let classes = if resp.status == 200 {
+                            classes_in(&resp.body)
+                        } else {
+                            Vec::new()
+                        };
+                        self.conn = None;
+                        Outcome::Answered { status: resp.status, classes, latency_us }
+                    }
+                    Err(RecvFailure::MidResponse) => {
+                        self.conn = None;
+                        Outcome::Unanswered
+                    }
+                    Err(_) => {
+                        self.conn = None;
+                        Outcome::ClosedClean
+                    }
+                }
+            }
+        }
+    }
+
+    /// Slow-client fault: head immediately, then the body one chunk at
+    /// a time with [`HttpClient::slow_gap`] pauses. If the total write
+    /// time exceeds the server's read deadline it answers `408`; the
+    /// server closing mid-write surfaces as a write error handled by
+    /// the caller.
+    fn write_slowly(&mut self, body: &str) -> std::io::Result<()> {
+        let head = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        let conn = self.conn.as_mut().expect("connection present");
+        conn.send(head.as_bytes())?;
+        let bytes = body.as_bytes();
+        let chunk = (bytes.len() / 4).max(1);
+        for piece in bytes.chunks(chunk) {
+            std::thread::sleep(self.slow_gap);
+            conn.stream.write_all(piece)?;
+            conn.stream.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// Replace the first pixel digit with `x`, guaranteeing a JSON parse
+/// error — never a silently different (but valid) sample the oracle
+/// would then rightly flag.
+fn corrupt_body(body: &str) -> String {
+    let mut out = body.to_string();
+    let arr = out.find(":[").map(|i| i + 2).unwrap_or(0);
+    if let Some(pos) = out[arr..].find(|c: char| c.is_ascii_digit()) {
+        out.replace_range(arr + pos..arr + pos + 1, "x");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corrupt_body_breaks_json_parse() {
+        for body in [
+            "{\"pixels\":[12,3,4]}",
+            "{\"model\":\"m0\",\"pixels\":[0]}",
+            "{\"samples\":[[5,6],[7,8]]}",
+        ] {
+            let bad = corrupt_body(body);
+            assert_ne!(bad, body);
+            assert!(
+                crate::coordinator::net::Json::parse(&bad).is_err(),
+                "mutation left valid JSON: {bad}"
+            );
+        }
+    }
+}

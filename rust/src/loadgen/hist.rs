@@ -1,0 +1,207 @@
+//! HDR-style log-linear latency histogram.
+//!
+//! The serving metrics ([`crate::coordinator::Metrics`]) use plain log2
+//! buckets — fine for a summary line, too coarse for load-test tail
+//! percentiles (each bucket spans 2×). This histogram subdivides every
+//! power of two into 16 linear sub-buckets, bounding the relative
+//! quantile error at ~6% across the whole range (1µs … ~2^32µs), the
+//! classic HdrHistogram layout at precision 4 bits. Single-writer (each
+//! load client owns one and they are merged at the end), so plain `u64`
+//! counters — no atomics.
+
+/// Linear sub-buckets per power of two (precision bits = 4).
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+
+/// Supported magnitude range: values clamp at 2^(4 + MAJORS) µs.
+const MAJORS: usize = 28;
+
+/// Total bucket count: exact values 0..16, then 16 sub-buckets for each
+/// of the 28 majors above.
+const NBUCKETS: usize = SUB + MAJORS * SUB;
+
+/// Log-linear histogram over `u64` microsecond values.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+/// Bucket index for a value: values below 16 are exact; for a value
+/// with leading bit `major ≥ 4`, the 4 bits after the leading one
+/// select a linear sub-bucket within that power of two.
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let major = 63 - v.leading_zeros() as usize; // ≥ 4
+    // v >> (major-4) ∈ [16, 32); masking the low 4 bits yields the
+    // linear sub-bucket within [2^major, 2^(major+1))
+    let sub = ((v >> (major as u32 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    (SUB + (major - SUB_BITS as usize) * SUB + sub).min(NBUCKETS - 1)
+}
+
+/// Lower edge of a bucket (its reported quantile value).
+fn edge_of(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    let major = (idx - SUB) / SUB + SUB_BITS as usize;
+    let sub = ((idx - SUB) % SUB) as u64;
+    (SUB as u64 + sub) << (major as u32 - SUB_BITS)
+}
+
+impl Histogram {
+    /// Fresh empty histogram.
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; NBUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Record one value in microseconds.
+    pub fn record_us(&mut self, us: u64) {
+        self.counts[bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(us);
+        self.max = self.max.max(us);
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Largest recorded value (exact, not bucketed).
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean in µs.
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The q-quantile in µs (lower edge of the bucket holding the q-th
+    /// smallest sample; 0 when empty).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return edge_of(idx);
+            }
+        }
+        self.max
+    }
+
+    /// `[p50, p90, p99, p999]` in µs.
+    pub fn percentiles_us(&self) -> [u64; 4] {
+        [
+            self.quantile_us(0.5),
+            self.quantile_us(0.9),
+            self.quantile_us(0.99),
+            self.quantile_us(0.999),
+        ]
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_consistent() {
+        // every value maps to a bucket whose edge is ≤ the value and
+        // within ~1/16 relative error
+        for v in (0u64..5000).chain([1 << 20, (1 << 20) + 12345, 1 << 40]) {
+            let e = edge_of(bucket_of(v));
+            assert!(e <= v, "edge {e} > value {v}");
+            if v >= SUB as u64 && v < 1u64 << 32 {
+                assert!(
+                    (v - e) as f64 <= v as f64 / SUB as f64 + 1.0,
+                    "value {v} edge {e}: resolution worse than 1/{SUB}"
+                );
+            }
+        }
+        // exact below 16
+        for v in 0u64..16 {
+            assert_eq!(edge_of(bucket_of(v)), v);
+        }
+        // power-of-two boundaries land on themselves
+        for p in 4..31u32 {
+            assert_eq!(edge_of(bucket_of(1u64 << p)), 1u64 << p);
+        }
+    }
+
+    #[test]
+    fn quantiles_on_known_distribution() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record_us(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max_us(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1e-9);
+        let [p50, p90, p99, p999] = h.percentiles_us();
+        // lower bucket edges: within 1/16 below the true quantile
+        assert!((469..=500).contains(&p50), "p50 {p50}");
+        assert!((848..=900).contains(&p90), "p90 {p90}");
+        assert!((928..=990).contains(&p99), "p99 {p99}");
+        assert!(p999 <= 1000 && p999 >= 936, "p999 {p999}");
+        assert!(p50 <= p90 && p90 <= p99 && p99 <= p999);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for v in [3u64, 17, 900, 40_000, 1_000_000] {
+            a.record_us(v);
+            whole.record_us(v);
+        }
+        for v in [5u64, 120, 7_777] {
+            b.record_us(v);
+            whole.record_us(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.max_us(), whole.max_us());
+        assert_eq!(a.percentiles_us(), whole.percentiles_us());
+    }
+
+    #[test]
+    fn empty_and_huge() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        h.record_us(u64::MAX); // clamps into the last bucket, no panic
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_us(), u64::MAX);
+    }
+}

@@ -1,0 +1,44 @@
+//! Deterministic load-generation + fault-injection harness with a
+//! bitwise correctness oracle (`pvqnet loadtest`).
+//!
+//! The serving stack (batcher → shards → HTTP front end) makes claims
+//! — "no silent drops", "batches don't collapse under backlog",
+//! "admission control always answers" — that unit tests exercise one
+//! at a time. This subsystem checks them *together*, under sustained,
+//! adversarial, reproducible load:
+//!
+//! * **Deterministic**: one `u64` seed derives the entire request
+//!   stream (arrivals, routes, payloads, batch shapes) and the fault
+//!   schedule ([`plan`]). A failing run replays exactly with
+//!   `pvqnet loadtest --seed S`.
+//! * **Both paths**: traffic drives the in-process
+//!   [`crate::coordinator::ModelRegistry`] and the HTTP/1.1 front end
+//!   over loopback sockets ([`runner`]).
+//! * **Fault injection**: slow-writing clients, mid-body disconnects,
+//!   truncated/corrupt JSON, oversized payloads, model-routing misses,
+//!   and shutdown-mid-flight ([`plan::FaultKind`], [`client`]).
+//! * **Bitwise oracle**: the paper's integer add/sub inference makes
+//!   every response exactly reproducible, so each successful answer is
+//!   re-derived on the direct engine and compared bitwise — argmax
+//!   against the batch-fused path, scores against the scalar path
+//!   ([`oracle`]).
+//! * **Accounting**: every request must end in an explicit outcome;
+//!   any swallowed request, oracle mismatch, unpredicted status, or
+//!   (outside a deliberate drain) refused/silently-closed request
+//!   fails the run ([`report::PathReport::clean`]). Latency lands in
+//!   an HDR-style log-linear histogram ([`hist`]), and the whole run
+//!   serializes to `BENCH_load.json`.
+
+pub mod client;
+pub mod hist;
+pub mod oracle;
+pub mod plan;
+pub mod report;
+pub mod runner;
+
+pub use client::{HttpClient, Outcome};
+pub use hist::Histogram;
+pub use oracle::Oracle;
+pub use plan::{ArrivalLaw, FaultKind, LoadPlan, PlanConfig, PlannedRequest, TrafficShape};
+pub use report::{LoadReport, ModelServerStats, PathReport};
+pub use runner::{build_registry, run, LoadConfig, INPUT_LEN};

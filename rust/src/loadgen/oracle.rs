@@ -1,0 +1,186 @@
+//! Bitwise correctness oracle for served classifications.
+//!
+//! The paper's core guarantee makes this possible: PVQ dot products are
+//! exact integer add/sub chains, so for the integer engines every
+//! response has a *bitwise-reproducible* ground truth — not a tolerance
+//! band. The oracle holds the **same** `Arc<Engine>` instances the
+//! registry's batching servers execute
+//! ([`crate::coordinator::ModelRegistry::engine`]) and, for every
+//! successful response, recomputes the answer on two independent direct
+//! paths:
+//!
+//! 1. the batch-fused path (`Engine::classify_batch`, the serving hot
+//!    path) — its argmax must equal the served class exactly;
+//! 2. the scalar score path (`Engine::logits` + argmax) — its full
+//!    integer logits must argmax to the same class, pinning the
+//!    batched/scalar bitwise-equivalence end to end under live load.
+//!
+//! Any disagreement is a correctness bug in the serving stack (batcher
+//! reordering, panel packing, shard merge, response routing), reported
+//! with the request index and replay seed.
+
+use crate::coordinator::{Engine, ModelRegistry};
+use crate::nn::argmax_i64;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Direct-path ground truth for every model a run serves.
+pub struct Oracle {
+    engines: HashMap<String, Arc<Engine>>,
+    default_model: String,
+}
+
+impl Oracle {
+    /// Capture direct engine handles from a registry (call before the
+    /// registry moves into an `HttpServer`). The handles stay valid —
+    /// and stay the same instances the servers execute — for the life
+    /// of the run.
+    pub fn from_registry(reg: &ModelRegistry) -> Result<Oracle> {
+        let default_model = reg
+            .default_model()
+            .context("oracle needs a non-empty registry")?
+            .to_string();
+        let mut engines = HashMap::new();
+        for info in reg.models() {
+            let engine = reg
+                .engine(Some(&info.name))
+                .with_context(|| format!("engine for '{}'", info.name))?;
+            engines.insert(info.name.clone(), engine);
+        }
+        Ok(Oracle { engines, default_model })
+    }
+
+    fn engine(&self, model: Option<&str>) -> Result<&Arc<Engine>> {
+        let name = model.unwrap_or(&self.default_model);
+        self.engines
+            .get(name)
+            .with_context(|| format!("oracle has no engine for '{name}'"))
+    }
+
+    /// Ground-truth classes for `samples` on a route, recomputed on the
+    /// batch-fused direct path and cross-checked against the scalar
+    /// score path where the engine's scores are integer-exact.
+    pub fn expected(&self, model: Option<&str>, samples: &[Vec<u8>]) -> Result<Vec<usize>> {
+        let engine = self.engine(model)?;
+        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let batched = engine.classify_batch(&views)?;
+        for (i, view) in views.iter().enumerate() {
+            if let Some(logits) = engine.logits(view)? {
+                let scalar = argmax_i64(&logits);
+                if scalar != batched[i] {
+                    bail!(
+                        "engine self-disagreement on sample {i}: batched path \
+                         class {} vs scalar score path class {scalar} \
+                         (logits {logits:?})",
+                        batched[i]
+                    );
+                }
+            }
+        }
+        Ok(batched)
+    }
+
+    /// Verify one served answer bitwise. `Ok(())` means every class
+    /// matches the direct ground truth; `Err` describes the first
+    /// mismatch (with enough context to replay).
+    pub fn verify(
+        &self,
+        request_index: usize,
+        model: Option<&str>,
+        samples: &[Vec<u8>],
+        served: &[usize],
+    ) -> Result<()> {
+        let want = self.expected(model, samples)?;
+        if served.len() != want.len() {
+            bail!(
+                "request {request_index}: served {} classes for {} samples",
+                served.len(),
+                want.len()
+            );
+        }
+        for (i, (&got, &expect)) in served.iter().zip(&want).enumerate() {
+            if got != expect {
+                bail!(
+                    "request {request_index} sample {i} (model {}): served class \
+                     {got}, direct engine says {expect}",
+                    model.unwrap_or("(default)")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineKind, ServerConfig};
+    use crate::nn::{Activation, LayerSpec, Model, ModelSpec};
+    use crate::pvq::RhoMode;
+    use crate::quant::quantize;
+    use crate::testkit::Rng;
+
+    fn registry() -> ModelRegistry {
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        for (name, act, seed) in
+            [("csr", Activation::Relu, 1u64), ("bin", Activation::BSign, 2)]
+        {
+            let spec = ModelSpec {
+                name: name.into(),
+                input_shape: vec![16],
+                layers: vec![
+                    LayerSpec::Dense { input: 16, output: 8, act },
+                    LayerSpec::Dense { input: 8, output: 4, act: Activation::None },
+                ],
+            };
+            let m = Model::synth(&spec, seed);
+            let q = quantize(&m, &[1.5, 1.0], RhoMode::Norm).unwrap().quant_model;
+            reg.register_quant(name, q, EngineKind::Auto, None).unwrap();
+        }
+        reg
+    }
+
+    #[test]
+    fn oracle_agrees_with_served_registry_answers() {
+        let reg = registry();
+        let oracle = Oracle::from_registry(&reg).unwrap();
+        let mut rng = Rng::new(3);
+        let samples: Vec<Vec<u8>> =
+            (0..9).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        for route in [None, Some("csr"), Some("bin")] {
+            let served: Vec<usize> = reg
+                .classify_batch(route, samples.clone())
+                .unwrap()
+                .iter()
+                .map(|r| r.class)
+                .collect();
+            oracle.verify(0, route, &samples, &served).unwrap();
+        }
+        reg.shutdown();
+    }
+
+    #[test]
+    fn oracle_flags_a_wrong_class() {
+        let reg = registry();
+        let oracle = Oracle::from_registry(&reg).unwrap();
+        let mut rng = Rng::new(4);
+        let samples: Vec<Vec<u8>> =
+            (0..3).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        let mut served: Vec<usize> = reg
+            .classify_batch(Some("csr"), samples.clone())
+            .unwrap()
+            .iter()
+            .map(|r| r.class)
+            .collect();
+        served[1] = (served[1] + 1) % 4; // corrupt one answer
+        let err = oracle.verify(7, Some("csr"), &samples, &served).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("request 7 sample 1"), "{msg}");
+        // wrong count is flagged too
+        assert!(oracle.verify(8, Some("csr"), &samples, &served[..2]).is_err());
+        // unknown route is an oracle error, not a panic
+        assert!(oracle.expected(Some("ghost"), &samples).is_err());
+        reg.shutdown();
+    }
+}

@@ -1,0 +1,334 @@
+//! Deterministic, seeded request-stream and fault-schedule planning.
+//!
+//! Everything a load run does on the wire is derived here, up front,
+//! from one `u64` seed: arrival offsets, model routing, single/batch
+//! shape, pixel payloads, and which requests carry which injected
+//! fault. The plan is pure data (no sockets, no clocks), so two runs
+//! with the same seed and config produce byte-identical request streams
+//! — a failing run replays exactly with `pvqnet loadtest --seed S`.
+//!
+//! Per-request determinism is position-keyed, not stream-keyed: request
+//! `i` draws from `Rng::new(seed ⊕ mix(i))`, so its bytes do not depend
+//! on how many draws earlier requests made or on which thread executes
+//! it.
+
+use crate::testkit::http::pixels_json;
+use crate::testkit::Rng;
+
+/// How traffic is offered to the system under test.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TrafficShape {
+    /// N concurrent clients, each issuing its next request as soon as
+    /// the previous one resolves (throughput-seeking).
+    Closed {
+        /// Concurrent client connections.
+        clients: usize,
+    },
+    /// Target request rate with seeded inter-arrival gaps, decoupled
+    /// from response latency (latency-seeking).
+    Open {
+        /// Target requests per second.
+        rps: f64,
+        /// Inter-arrival law.
+        arrivals: ArrivalLaw,
+    },
+}
+
+/// Inter-arrival law for open-loop traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalLaw {
+    /// Exponential gaps (memoryless Poisson process) — bursty, the
+    /// realistic default.
+    Poisson,
+    /// Constant gaps `1/rps` — the smoothest offered load.
+    Uniform,
+}
+
+/// A wire-level fault injected into one planned request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Body written in small chunks with long pauses — exercises the
+    /// server's request-read deadline (`408`).
+    SlowClient,
+    /// Connection dropped halfway through the body; no response is
+    /// expected (the client aborts on purpose).
+    DisconnectMidBody,
+    /// Well-framed HTTP whose JSON body is cut short (`400`).
+    TruncatedJson,
+    /// One byte inside the pixel array replaced with `x`, guaranteeing
+    /// a JSON parse error (`400`) — never a silently wrong sample.
+    CorruptJson,
+    /// Declared `Content-Length` above the server's body cap (`413`).
+    Oversized,
+    /// Routed to a model name that does not exist (`404`).
+    ModelMiss,
+}
+
+impl FaultKind {
+    /// Every fault kind, in schedule order.
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::SlowClient,
+        FaultKind::DisconnectMidBody,
+        FaultKind::TruncatedJson,
+        FaultKind::CorruptJson,
+        FaultKind::Oversized,
+        FaultKind::ModelMiss,
+    ];
+
+    /// Stable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::SlowClient => "slow_client",
+            FaultKind::DisconnectMidBody => "disconnect_mid_body",
+            FaultKind::TruncatedJson => "truncated_json",
+            FaultKind::CorruptJson => "corrupt_json",
+            FaultKind::Oversized => "oversized",
+            FaultKind::ModelMiss => "model_miss",
+        }
+    }
+
+    /// Status codes that count as the server answering this fault
+    /// correctly (the slow client may still win its race and get 200).
+    pub fn expected_statuses(self) -> &'static [u16] {
+        match self {
+            FaultKind::SlowClient => &[408, 200],
+            FaultKind::DisconnectMidBody => &[],
+            FaultKind::TruncatedJson | FaultKind::CorruptJson => &[400],
+            FaultKind::Oversized => &[413],
+            FaultKind::ModelMiss => &[404],
+        }
+    }
+}
+
+/// One planned request: everything needed to put it on the wire (or
+/// submit it in-process) and to oracle-check its answer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedRequest {
+    /// Position in the plan (also the replay key).
+    pub index: usize,
+    /// Arrival offset from the start of the run, µs (0 under closed
+    /// loop, where pacing is response-driven).
+    pub arrival_us: u64,
+    /// Model route; `None` exercises the default route.
+    pub model: Option<String>,
+    /// Pixel payloads — one row for a single request, several for a
+    /// batch (`samples` body).
+    pub samples: Vec<Vec<u8>>,
+    /// Whether the body uses the batch (`samples`) form.
+    pub batched: bool,
+    /// Wire-level fault to inject, if any.
+    pub fault: Option<FaultKind>,
+}
+
+impl PlannedRequest {
+    /// Render the JSON classify body for this request (before any
+    /// fault mutation).
+    pub fn body(&self) -> String {
+        let route = match &self.model {
+            Some(m) => format!("\"model\":\"{m}\","),
+            None => String::new(),
+        };
+        if self.batched {
+            let rows: Vec<String> =
+                self.samples.iter().map(|s| pixels_json(s)).collect();
+            format!("{{{route}\"samples\":[{}]}}", rows.join(","))
+        } else {
+            format!("{{{route}\"pixels\":{}}}", pixels_json(&self.samples[0]))
+        }
+    }
+}
+
+/// Plan-generation knobs (the runner fills these from [`super::LoadConfig`]).
+#[derive(Clone, Debug)]
+pub struct PlanConfig {
+    /// Number of requests to plan.
+    pub requests: usize,
+    /// Pixels per sample (every model in the harness shares one input
+    /// geometry).
+    pub input_len: usize,
+    /// Routable model names (round-robined; every 5th request uses the
+    /// default route instead).
+    pub models: Vec<String>,
+    /// Inject a fault into every `fault_every`-th request (0 = none),
+    /// cycling through [`FaultKind::ALL`].
+    pub fault_every: usize,
+    /// Largest batch size for `samples` bodies.
+    pub max_batch_body: usize,
+    /// Traffic shape (drives arrival offsets for the open loop).
+    pub shape: TrafficShape,
+}
+
+/// The full deterministic plan for one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadPlan {
+    /// Seed the plan was derived from.
+    pub seed: u64,
+    /// Planned requests, in arrival order.
+    pub requests: Vec<PlannedRequest>,
+}
+
+/// Position-keyed per-request RNG: independent of sibling requests.
+fn request_rng(seed: u64, index: usize) -> Rng {
+    Rng::new(seed ^ (index as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93).wrapping_add(1))
+}
+
+impl LoadPlan {
+    /// Derive the complete request stream + fault schedule from `seed`.
+    pub fn generate(seed: u64, cfg: &PlanConfig) -> LoadPlan {
+        let mut requests = Vec::with_capacity(cfg.requests);
+        let mut arrival_us = 0u64;
+        for index in 0..cfg.requests {
+            let mut rng = request_rng(seed, index);
+            // open-loop arrival offsets accumulate seeded gaps
+            if let TrafficShape::Open { rps, arrivals } = cfg.shape {
+                let gap_s = match arrivals {
+                    ArrivalLaw::Uniform => 1.0 / rps.max(1e-9),
+                    ArrivalLaw::Poisson => {
+                        -(1.0 - rng.next_f64()).ln() / rps.max(1e-9)
+                    }
+                };
+                arrival_us += (gap_s * 1e6) as u64;
+            }
+            let fault = if cfg.fault_every > 0
+                && index % cfg.fault_every == cfg.fault_every - 1
+            {
+                let which = (index / cfg.fault_every) % FaultKind::ALL.len();
+                Some(FaultKind::ALL[which])
+            } else {
+                None
+            };
+            let model = if matches!(fault, Some(FaultKind::ModelMiss)) {
+                Some(format!("ghost_{}", rng.below(1000)))
+            } else if index % 5 == 0 || cfg.models.is_empty() {
+                None
+            } else {
+                Some(cfg.models[index % cfg.models.len()].clone())
+            };
+            // ~1 in 4 requests use the batch body form
+            let batched = rng.below(4) == 0;
+            let b = if batched {
+                2 + rng.below(cfg.max_batch_body.max(3) as u64 - 1) as usize
+            } else {
+                1
+            };
+            let samples: Vec<Vec<u8>> = (0..b)
+                .map(|_| (0..cfg.input_len).map(|_| rng.below(256) as u8).collect())
+                .collect();
+            requests.push(PlannedRequest {
+                index,
+                arrival_us,
+                model,
+                samples,
+                batched,
+                fault,
+            });
+        }
+        LoadPlan { seed, requests }
+    }
+
+    /// How many planned requests carry each fault kind.
+    pub fn fault_counts(&self) -> Vec<(&'static str, u64)> {
+        FaultKind::ALL
+            .iter()
+            .map(|&k| {
+                let n =
+                    self.requests.iter().filter(|r| r.fault == Some(k)).count() as u64;
+                (k.name(), n)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(shape: TrafficShape) -> PlanConfig {
+        PlanConfig {
+            requests: 120,
+            input_len: 16,
+            models: vec!["m0".into(), "m1".into()],
+            fault_every: 6,
+            max_batch_body: 6,
+            shape,
+        }
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let shape = TrafficShape::Open { rps: 500.0, arrivals: ArrivalLaw::Poisson };
+        let a = LoadPlan::generate(7, &cfg(shape));
+        let b = LoadPlan::generate(7, &cfg(shape));
+        assert_eq!(a, b);
+        // bodies (the actual wire bytes) are identical too
+        for (ra, rb) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(ra.body(), rb.body());
+        }
+    }
+
+    #[test]
+    fn different_seed_different_payloads() {
+        let shape = TrafficShape::Closed { clients: 4 };
+        let a = LoadPlan::generate(1, &cfg(shape));
+        let b = LoadPlan::generate(2, &cfg(shape));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn fault_schedule_cycles_all_kinds() {
+        let plan = LoadPlan::generate(3, &cfg(TrafficShape::Closed { clients: 1 }));
+        let counts = plan.fault_counts();
+        assert_eq!(counts.len(), FaultKind::ALL.len());
+        for (name, n) in &counts {
+            assert!(*n > 0, "fault {name} never scheduled in 120 requests");
+        }
+        let faulted: u64 = counts.iter().map(|(_, n)| n).sum();
+        assert_eq!(faulted, 120 / 6);
+        // fault positions are exactly every 6th request
+        for r in &plan.requests {
+            assert_eq!(r.fault.is_some(), r.index % 6 == 5, "index {}", r.index);
+        }
+    }
+
+    #[test]
+    fn open_loop_arrivals_monotone_and_near_target_rate() {
+        let shape = TrafficShape::Open { rps: 1000.0, arrivals: ArrivalLaw::Poisson };
+        let plan = LoadPlan::generate(11, &cfg(shape));
+        let mut prev = 0;
+        for r in &plan.requests {
+            assert!(r.arrival_us >= prev);
+            prev = r.arrival_us;
+        }
+        // 120 requests at 1000 rps ≈ 120ms span (Poisson: generous band)
+        assert!((40_000..400_000).contains(&prev), "span {prev}µs");
+        // uniform arrivals are exact
+        let ushape = TrafficShape::Open { rps: 1000.0, arrivals: ArrivalLaw::Uniform };
+        let uplan = LoadPlan::generate(11, &cfg(ushape));
+        assert_eq!(uplan.requests.last().unwrap().arrival_us, 120 * 1000);
+    }
+
+    #[test]
+    fn bodies_are_well_formed_and_route_correctly() {
+        let plan = LoadPlan::generate(5, &cfg(TrafficShape::Closed { clients: 2 }));
+        for r in &plan.requests {
+            let body = r.body();
+            if r.batched {
+                assert!(r.samples.len() >= 2);
+                assert!(body.contains("\"samples\":[["), "{body}");
+            } else {
+                assert_eq!(r.samples.len(), 1);
+                assert!(body.contains("\"pixels\":["), "{body}");
+            }
+            for s in &r.samples {
+                assert_eq!(s.len(), 16);
+            }
+            match (&r.model, r.fault) {
+                (Some(m), Some(FaultKind::ModelMiss)) => {
+                    assert!(m.starts_with("ghost_"))
+                }
+                (Some(m), _) => assert!(m == "m0" || m == "m1"),
+                (None, _) => {}
+            }
+        }
+    }
+}

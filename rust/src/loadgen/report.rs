@@ -1,0 +1,539 @@
+//! Load-run accounting: outcome tallies, latency percentiles, oracle
+//! verdicts, and the `BENCH_load.json` / human-summary renderers.
+//!
+//! The accounting invariant the whole harness exists to check: every
+//! planned request ends in exactly one *explicit* outcome bucket, and
+//! the gate ([`PathReport::clean`], rolled up by [`LoadReport::passed`])
+//! fails the run on any swallowed request, oracle mismatch, unpredicted
+//! status, or — outside a deliberate mid-flight drain — any refused or
+//! silently-closed request.
+
+use super::client::Outcome;
+use super::hist::Histogram;
+use super::plan::{FaultKind, PlannedRequest};
+use crate::coordinator::net::Json;
+use crate::coordinator::Metrics;
+
+/// Server-side per-model counters captured at the end of a run (from
+/// the same [`Metrics`] instances the model servers record into).
+#[derive(Clone, Debug)]
+pub struct ModelServerStats {
+    /// Model route name.
+    pub name: String,
+    /// Requests admitted to its batching queue.
+    pub requests: u64,
+    /// Responses it delivered.
+    pub responses: u64,
+    /// Micro-batches dispatched.
+    pub batches: u64,
+    /// Median dispatched batch occupancy.
+    pub occ_p50: u64,
+    /// Server-side latency p50/p90/p99/p999 (µs).
+    pub latency_us: [u64; 4],
+}
+
+impl ModelServerStats {
+    /// Snapshot one model's counters.
+    pub fn capture(name: &str, m: &Metrics) -> ModelServerStats {
+        use std::sync::atomic::Ordering;
+        ModelServerStats {
+            name: name.to_string(),
+            requests: m.requests.load(Ordering::Relaxed),
+            responses: m.responses.load(Ordering::Relaxed),
+            batches: m.batches.load(Ordering::Relaxed),
+            occ_p50: m.occupancy_quantile(0.5),
+            latency_us: m.latency_percentiles_us(),
+        }
+    }
+}
+
+/// Accounting for one driven path (`http` or `inproc`).
+#[derive(Clone, Debug)]
+pub struct PathReport {
+    /// Path label (`http` / `inproc`).
+    pub label: String,
+    /// Requests the plan assigned to this path.
+    pub planned: usize,
+    /// Requests actually attempted (== planned unless the run stopped).
+    pub sent: u64,
+    /// Fault-free `200` answers.
+    pub ok: u64,
+    /// Explicit saturation/drain answers (`429`/`503`).
+    pub rejected: u64,
+    /// Connects refused (listener gone after drain).
+    pub refused: u64,
+    /// Clean closes before a response (drain between requests).
+    pub closed_clean: u64,
+    /// Injected faults answered with their expected status.
+    pub fault_answered: u64,
+    /// Intentional client-side aborts (disconnect-mid-body).
+    pub aborted: u64,
+    /// Answers with a status nothing predicted (e.g. a `500`).
+    pub unexpected_status: u64,
+    /// Requests that vanished without any terminal signal — must be 0.
+    pub unanswered: u64,
+    /// Successful answers the oracle re-derived.
+    pub oracle_checked: u64,
+    /// Oracle disagreements — must be 0.
+    pub oracle_mismatches: u64,
+    /// First few mismatch descriptions (replay context).
+    pub mismatch_examples: Vec<String>,
+    /// Faults injected, per kind.
+    pub faults_injected: Vec<(String, u64)>,
+    /// Client-observed latency histogram over fault-free `200`s.
+    pub hist: Histogram,
+    /// Whether this run deliberately drained the server mid-flight —
+    /// only then are refused connects and clean closes legitimate.
+    pub drain_enabled: bool,
+    /// Wall-clock duration of the path's drive phase (seconds).
+    pub wall_s: f64,
+    /// HTTP front-end admission counters (zeros for `inproc`).
+    pub http_admitted: u64,
+    /// HTTP requests rejected by admission control.
+    pub http_rejected: u64,
+    /// HTTP error answers (4xx/5xx).
+    pub http_errors: u64,
+    /// Per-model server-side counters.
+    pub model_stats: Vec<ModelServerStats>,
+}
+
+impl PathReport {
+    /// Empty report for a path expecting `planned` requests.
+    pub fn new(label: &str, planned: usize) -> PathReport {
+        PathReport {
+            label: label.to_string(),
+            planned,
+            sent: 0,
+            ok: 0,
+            rejected: 0,
+            refused: 0,
+            closed_clean: 0,
+            fault_answered: 0,
+            aborted: 0,
+            unexpected_status: 0,
+            unanswered: 0,
+            oracle_checked: 0,
+            oracle_mismatches: 0,
+            mismatch_examples: Vec::new(),
+            faults_injected: Vec::new(),
+            hist: Histogram::new(),
+            drain_enabled: false,
+            wall_s: 0.0,
+            http_admitted: 0,
+            http_rejected: 0,
+            http_errors: 0,
+            model_stats: Vec::new(),
+        }
+    }
+
+    /// Classify one executed request into its outcome bucket. Returns
+    /// `true` when the answer is a fault-free (or slow-client) `200`
+    /// whose classes the caller should hand to the oracle.
+    pub fn record_outcome(&mut self, req: &PlannedRequest, outcome: &Outcome) -> bool {
+        self.sent += 1;
+        match outcome {
+            Outcome::Answered { status, .. } => {
+                let expected_for_fault = req
+                    .fault
+                    .map(|f| f.expected_statuses().contains(status))
+                    .unwrap_or(false);
+                match (*status, req.fault, expected_for_fault) {
+                    (200, None, _) => {
+                        self.ok += 1;
+                        true
+                    }
+                    (200, Some(FaultKind::SlowClient), _) => {
+                        // the slow client won its race — still a real,
+                        // oracle-checkable answer
+                        self.fault_answered += 1;
+                        true
+                    }
+                    (429 | 503, _, _) => {
+                        self.rejected += 1;
+                        false
+                    }
+                    (_, Some(_), true) => {
+                        self.fault_answered += 1;
+                        false
+                    }
+                    _ => {
+                        self.unexpected_status += 1;
+                        false
+                    }
+                }
+            }
+            Outcome::Refused => {
+                self.refused += 1;
+                false
+            }
+            Outcome::ClosedClean => {
+                self.closed_clean += 1;
+                false
+            }
+            Outcome::Aborted => {
+                self.aborted += 1;
+                false
+            }
+            Outcome::Unanswered => {
+                self.unanswered += 1;
+                false
+            }
+        }
+    }
+
+    /// Record one oracle verdict (capping stored examples).
+    pub fn record_oracle(&mut self, verdict: Result<(), String>) {
+        self.oracle_checked += 1;
+        if let Err(msg) = verdict {
+            self.oracle_mismatches += 1;
+            if self.mismatch_examples.len() < 5 {
+                self.mismatch_examples.push(msg);
+            }
+        }
+    }
+
+    /// Fold a per-thread tally into this one.
+    pub fn merge(&mut self, other: &PathReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.rejected += other.rejected;
+        self.refused += other.refused;
+        self.closed_clean += other.closed_clean;
+        self.fault_answered += other.fault_answered;
+        self.aborted += other.aborted;
+        self.unexpected_status += other.unexpected_status;
+        self.unanswered += other.unanswered;
+        self.oracle_checked += other.oracle_checked;
+        self.oracle_mismatches += other.oracle_mismatches;
+        for m in &other.mismatch_examples {
+            if self.mismatch_examples.len() < 5 {
+                self.mismatch_examples.push(m.clone());
+            }
+        }
+        self.hist.merge(&other.hist);
+    }
+
+    /// The path's acceptance gate. Strictly what the harness promises:
+    /// no swallowed requests, no oracle disagreements, no statuses
+    /// nothing predicted (a `500` is a serving bug, not noise), and —
+    /// unless this run deliberately drained mid-flight — no refused
+    /// connects and no clean closes either, because a healthy server
+    /// that is not draining never hangs up without a response (that is
+    /// precisely the silent-drop bug class this harness hunts).
+    pub fn clean(&self) -> bool {
+        self.unanswered == 0
+            && self.oracle_mismatches == 0
+            && self.unexpected_status == 0
+            && (self.drain_enabled || (self.closed_clean == 0 && self.refused == 0))
+    }
+
+    /// Every attempted request landed in an explicit bucket.
+    pub fn accounted(&self) -> u64 {
+        self.ok
+            + self.rejected
+            + self.refused
+            + self.closed_clean
+            + self.fault_answered
+            + self.aborted
+            + self.unexpected_status
+            + self.unanswered
+    }
+
+    /// Fault-free successes per second of drive time.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.ok as f64 / self.wall_s
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let [p50, p90, p99, p999] = self.hist.percentiles_us();
+        let faults = Json::Obj(
+            self.faults_injected
+                .iter()
+                .map(|(k, v)| (k.clone(), num(*v)))
+                .collect(),
+        );
+        let models = Json::Arr(
+            self.model_stats
+                .iter()
+                .map(|m| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(m.name.clone())),
+                        ("requests".into(), num(m.requests)),
+                        ("responses".into(), num(m.responses)),
+                        ("batches".into(), num(m.batches)),
+                        ("occ_p50".into(), num(m.occ_p50)),
+                        ("latency_p50_us".into(), num(m.latency_us[0])),
+                        ("latency_p99_us".into(), num(m.latency_us[2])),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("planned".into(), num(self.planned as u64)),
+            ("sent".into(), num(self.sent)),
+            ("ok".into(), num(self.ok)),
+            ("rejected".into(), num(self.rejected)),
+            ("refused".into(), num(self.refused)),
+            ("closed_clean".into(), num(self.closed_clean)),
+            ("fault_answered".into(), num(self.fault_answered)),
+            ("aborted".into(), num(self.aborted)),
+            ("unexpected_status".into(), num(self.unexpected_status)),
+            ("unanswered".into(), num(self.unanswered)),
+            ("faults_injected".into(), faults),
+            (
+                "oracle".into(),
+                Json::Obj(vec![
+                    ("checked".into(), num(self.oracle_checked)),
+                    ("mismatches".into(), num(self.oracle_mismatches)),
+                ]),
+            ),
+            (
+                "latency_us".into(),
+                Json::Obj(vec![
+                    ("p50".into(), num(p50)),
+                    ("p90".into(), num(p90)),
+                    ("p99".into(), num(p99)),
+                    ("p999".into(), num(p999)),
+                    ("mean".into(), Json::Num(self.hist.mean_us())),
+                    ("max".into(), num(self.hist.max_us())),
+                ]),
+            ),
+            ("drain_enabled".into(), Json::Bool(self.drain_enabled)),
+            ("clean".into(), Json::Bool(self.clean())),
+            ("wall_s".into(), Json::Num(self.wall_s)),
+            ("throughput_rps".into(), Json::Num(self.throughput_rps())),
+            (
+                "http_admission".into(),
+                Json::Obj(vec![
+                    ("admitted".into(), num(self.http_admitted)),
+                    ("rejected".into(), num(self.http_rejected)),
+                    ("errors".into(), num(self.http_errors)),
+                ]),
+            ),
+            ("models".into(), models),
+        ])
+    }
+
+    fn render(&self) -> String {
+        let [p50, p90, p99, p999] = self.hist.percentiles_us();
+        let mut out = format!(
+            "[{}] {} planned, {} sent: {} ok, {} rejected, {} fault-answered, \
+             {} aborted, {} refused, {} closed, {} unexpected, {} UNANSWERED\n\
+                  oracle: {}/{} checked bitwise-equal, {} MISMATCHES\n\
+                  latency: p50 {}µs  p90 {}µs  p99 {}µs  p999 {}µs  \
+             (mean {:.0}µs, max {}µs) · {:.0} ok-req/s over {:.2}s\n",
+            self.label,
+            self.planned,
+            self.sent,
+            self.ok,
+            self.rejected,
+            self.fault_answered,
+            self.aborted,
+            self.refused,
+            self.closed_clean,
+            self.unexpected_status,
+            self.unanswered,
+            self.oracle_checked - self.oracle_mismatches,
+            self.oracle_checked,
+            self.oracle_mismatches,
+            p50,
+            p90,
+            p99,
+            p999,
+            self.hist.mean_us(),
+            self.hist.max_us(),
+            self.throughput_rps(),
+            self.wall_s,
+        );
+        if !self.faults_injected.is_empty() {
+            let parts: Vec<String> = self
+                .faults_injected
+                .iter()
+                .map(|(k, v)| format!("{k} {v}"))
+                .collect();
+            out.push_str(&format!("     faults injected: {}\n", parts.join(", ")));
+        }
+        for m in &self.model_stats {
+            out.push_str(&format!(
+                "     server[{}]: req {} resp {} batches {} occ p50 {} lat p50 {}µs p99 {}µs\n",
+                m.name, m.requests, m.responses, m.batches, m.occ_p50,
+                m.latency_us[0], m.latency_us[2]
+            ));
+        }
+        for e in &self.mismatch_examples {
+            out.push_str(&format!("     MISMATCH: {e}\n"));
+        }
+        out
+    }
+}
+
+/// The full run report (one or both paths), serialized to
+/// `BENCH_load.json` and rendered for humans.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Seed the run replays from.
+    pub seed: u64,
+    /// Human description of the traffic shape/config.
+    pub shape: String,
+    /// HTTP front-end path, when driven.
+    pub http: Option<PathReport>,
+    /// In-process registry path, when driven.
+    pub inproc: Option<PathReport>,
+}
+
+impl LoadReport {
+    /// Acceptance gate: every driven path is [`PathReport::clean`] —
+    /// zero unanswered requests, zero oracle mismatches, zero
+    /// unpredicted statuses, and (outside a deliberate drain) zero
+    /// refused/silently-closed requests.
+    pub fn passed(&self) -> bool {
+        self.http.iter().chain(self.inproc.iter()).all(PathReport::clean)
+    }
+
+    /// JSON document for `BENCH_load.json`.
+    pub fn to_json(&self) -> String {
+        let mut fields = vec![
+            ("experiment".into(), Json::Str("loadtest".into())),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("shape".into(), Json::Str(self.shape.clone())),
+            ("passed".into(), Json::Bool(self.passed())),
+        ];
+        if let Some(h) = &self.http {
+            fields.push(("http".into(), h.to_json()));
+        }
+        if let Some(i) = &self.inproc {
+            fields.push(("inproc".into(), i.to_json()));
+        }
+        let mut text = Json::Obj(fields).render();
+        text.push('\n');
+        text
+    }
+
+    /// Human summary.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "loadtest seed {} ({}) — replay with `pvqnet loadtest --seed {}`\n",
+            self.seed, self.shape, self.seed
+        );
+        for p in self.http.iter().chain(self.inproc.iter()) {
+            out.push_str(&p.render());
+        }
+        out.push_str(if self.passed() {
+            "PASS: every request explicitly answered, every checked response bitwise-correct\n"
+        } else {
+            "FAIL: unanswered/unexpected/silently-closed requests or oracle mismatches \
+             (see above)\n"
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::plan::{LoadPlan, PlanConfig, TrafficShape};
+
+    fn plan() -> LoadPlan {
+        LoadPlan::generate(
+            1,
+            &PlanConfig {
+                requests: 24,
+                input_len: 4,
+                models: vec!["m0".into()],
+                fault_every: 6,
+                max_batch_body: 4,
+                shape: TrafficShape::Closed { clients: 1 },
+            },
+        )
+    }
+
+    #[test]
+    fn outcome_buckets_and_accounting() {
+        let plan = plan();
+        let mut rep = PathReport::new("http", plan.requests.len());
+        let normal = plan.requests.iter().find(|r| r.fault.is_none()).unwrap();
+        assert!(rep.record_outcome(
+            normal,
+            &Outcome::Answered { status: 200, classes: vec![1], latency_us: 50 }
+        ));
+        assert!(!rep.record_outcome(
+            normal,
+            &Outcome::Answered { status: 429, classes: vec![], latency_us: 10 }
+        ));
+        assert!(!rep.record_outcome(normal, &Outcome::Unanswered));
+        assert!(!rep.record_outcome(normal, &Outcome::Refused));
+        let faulted = plan.requests.iter().find(|r| r.fault.is_some()).unwrap();
+        let status = faulted.fault.unwrap().expected_statuses().first().copied();
+        if let Some(status) = status {
+            assert!(!rep.record_outcome(
+                faulted,
+                &Outcome::Answered { status, classes: vec![], latency_us: 10 }
+            ));
+            assert_eq!(rep.fault_answered, 1);
+        }
+        // a 500 nothing predicted
+        assert!(!rep.record_outcome(
+            normal,
+            &Outcome::Answered { status: 500, classes: vec![], latency_us: 10 }
+        ));
+        assert_eq!(rep.unexpected_status, 1);
+        assert_eq!(rep.unanswered, 1);
+        assert_eq!(rep.accounted(), rep.sent);
+    }
+
+    #[test]
+    fn pass_fail_gate() {
+        let mut ok = PathReport::new("http", 1);
+        ok.ok = 1;
+        ok.sent = 1;
+        let report =
+            LoadReport { seed: 9, shape: "closed".into(), http: Some(ok.clone()), inproc: None };
+        assert!(report.passed());
+        assert!(report.render().contains("PASS"));
+        let mut bad = ok.clone();
+        bad.record_oracle(Err("request 0 sample 0: served class 1, direct engine says 2".into()));
+        let report = LoadReport { seed: 9, shape: "closed".into(), http: Some(bad), inproc: None };
+        assert!(!report.passed());
+        assert!(report.render().contains("FAIL"));
+        let json = report.to_json();
+        assert!(json.contains("\"experiment\":\"loadtest\""), "{json}");
+        assert!(json.contains("\"passed\":false"));
+        assert!(json.contains("\"mismatches\":1"));
+        // the JSON is parseable by the in-tree parser
+        assert!(crate::coordinator::net::Json::parse(json.trim()).is_ok());
+    }
+
+    #[test]
+    fn clean_gate_catches_silent_closes_and_unexpected_statuses() {
+        let mut p = PathReport::new("http", 2);
+        p.ok = 2;
+        p.sent = 2;
+        assert!(p.clean());
+        // a clean close without a drain is exactly the silent-drop bug
+        // class this harness hunts — it must fail the gate
+        p.closed_clean = 1;
+        assert!(!p.clean());
+        // …but is legitimate when the run drained mid-flight
+        p.drain_enabled = true;
+        assert!(p.clean());
+        // a refused connect follows the same rule
+        p.refused = 1;
+        assert!(p.clean());
+        p.drain_enabled = false;
+        assert!(!p.clean());
+        // an unpredicted status (e.g. a 500) always fails
+        let mut q = PathReport::new("inproc", 1);
+        q.unexpected_status = 1;
+        assert!(!q.clean());
+        // an unanswered request always fails
+        let mut r = PathReport::new("http", 1);
+        r.unanswered = 1;
+        r.drain_enabled = true;
+        assert!(!r.clean());
+    }
+}

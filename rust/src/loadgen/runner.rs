@@ -1,0 +1,418 @@
+//! Load-run orchestration: build the registry, start the front end,
+//! drive the plan, collect the report.
+//!
+//! Two drive paths share one seeded [`LoadPlan`]:
+//!
+//! * **http** — real loopback sockets against a live
+//!   [`HttpServer`], with every wire-level fault in the schedule
+//!   injected, and (optionally) a shutdown-mid-flight: the server
+//!   drains gracefully while clients are still sending, and every
+//!   request must still end in an explicit outcome.
+//! * **inproc** — the same request stream submitted straight to the
+//!   [`ModelRegistry`]'s batching servers (wire faults don't apply and
+//!   are executed as normal requests; model-routing misses do apply).
+//!
+//! Both paths oracle-check every successful answer bitwise against the
+//! direct engine ([`super::Oracle`]).
+
+use super::client::{HttpClient, Outcome};
+use super::oracle::Oracle;
+use super::plan::{FaultKind, LoadPlan, PlanConfig, PlannedRequest, TrafficShape};
+use super::report::{LoadReport, ModelServerStats, PathReport};
+use crate::coordinator::{
+    AdmitError, EngineKind, HttpConfig, HttpServer, ModelRegistry, ServerConfig,
+};
+use crate::nn::{Activation, LayerSpec, Model, ModelSpec};
+use crate::pvq::RhoMode;
+use crate::quant::quantize;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Pixels per sample for the harness's built-in models.
+pub const INPUT_LEN: usize = 16;
+
+/// Worker-pool size for open-loop sends (bounds concurrent
+/// connections; arrivals faster than the pool drains simply queue).
+const OPEN_POOL: usize = 8;
+
+/// Full configuration of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Master seed: request stream, payloads, and fault schedule all
+    /// derive from it. Same seed + same config → identical run.
+    pub seed: u64,
+    /// Requests per driven path.
+    pub requests: usize,
+    /// Traffic shape (closed- or open-loop).
+    pub shape: TrafficShape,
+    /// Drive the HTTP front end over loopback.
+    pub drive_http: bool,
+    /// Drive the in-process registry path.
+    pub drive_inproc: bool,
+    /// Inject a fault into every Nth request (0 = faults off).
+    pub fault_every: usize,
+    /// Shutdown-mid-flight: gracefully drain the HTTP server after
+    /// this fraction of requests has been sent (`None` = serve to the
+    /// end). Every request must still get an explicit outcome.
+    pub drain_after: Option<f64>,
+    /// Per-model batching-server knobs.
+    pub server: ServerConfig,
+    /// HTTP front-end knobs (the read deadline is shortened
+    /// automatically when faults are on, so slow-client faults resolve
+    /// in milliseconds).
+    pub http: HttpConfig,
+    /// Client-side read timeout — the detector for swallowed requests.
+    pub read_timeout: Duration,
+    /// Seed for the synthetic model weights (separate from the traffic
+    /// seed so sweeps vary load against fixed models).
+    pub model_seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            seed: 42,
+            requests: 240,
+            shape: TrafficShape::Closed { clients: 4 },
+            drive_http: true,
+            drive_inproc: true,
+            fault_every: 6,
+            drain_after: None,
+            server: ServerConfig::default(),
+            http: HttpConfig::default(),
+            read_timeout: Duration::from_secs(30),
+            model_seed: 42,
+        }
+    }
+}
+
+impl LoadConfig {
+    /// Route names the harness registers (a CSR-engine MLP and a
+    /// binary-popcount bsign twin, so both serving hot paths are under
+    /// oracle watch).
+    pub fn model_names() -> Vec<String> {
+        vec!["m0".into(), "m1".into()]
+    }
+
+    fn plan_config(&self) -> PlanConfig {
+        PlanConfig {
+            requests: self.requests,
+            input_len: INPUT_LEN,
+            models: Self::model_names(),
+            fault_every: self.fault_every,
+            max_batch_body: 6,
+            shape: self.shape,
+        }
+    }
+
+    fn shape_desc(&self) -> String {
+        match self.shape {
+            TrafficShape::Closed { clients } => format!("closed-loop, {clients} clients"),
+            TrafficShape::Open { rps, arrivals } => {
+                format!("open-loop, {rps:.0} rps, {arrivals:?} arrivals")
+            }
+        }
+    }
+}
+
+/// Build the harness registry: `m0` (ReLU MLP → CSR engine) and `m1`
+/// (bsign MLP → binary popcount engine), deterministic from
+/// `model_seed`.
+pub fn build_registry(cfg: &LoadConfig) -> Result<ModelRegistry> {
+    let mut reg = ModelRegistry::new(cfg.server.clone());
+    for (i, (name, act)) in
+        [("m0", Activation::Relu), ("m1", Activation::BSign)].iter().enumerate()
+    {
+        let spec = ModelSpec {
+            name: (*name).into(),
+            input_shape: vec![INPUT_LEN],
+            layers: vec![
+                LayerSpec::Dense { input: INPUT_LEN, output: 12, act: *act },
+                LayerSpec::Dense { input: 12, output: 4, act: Activation::None },
+            ],
+        };
+        let m = Model::synth(&spec, cfg.model_seed.wrapping_add(i as u64));
+        let q = quantize(&m, &[1.5, 1.0], RhoMode::Norm)
+            .with_context(|| format!("quantize {name}"))?
+            .quant_model;
+        reg.register_quant(name, q, EngineKind::Auto, None)?;
+    }
+    Ok(reg)
+}
+
+/// Execute one request on `client` and fold everything it produced
+/// (outcome bucket, oracle verdict, latency) into `tally`.
+fn execute_one(
+    client: &mut HttpClient,
+    req: &PlannedRequest,
+    oracle: &Oracle,
+    tally: &mut PathReport,
+    sent: &AtomicUsize,
+) {
+    let outcome = client.execute(req);
+    sent.fetch_add(1, Ordering::SeqCst);
+    let check = tally.record_outcome(req, &outcome);
+    if let Outcome::Answered { status: 200, classes, latency_us } = &outcome {
+        if check {
+            let verdict = oracle
+                .verify(req.index, req.model.as_deref(), &req.samples, classes)
+                .map_err(|e| format!("{e:#}"));
+            tally.record_oracle(verdict);
+            if req.fault.is_none() {
+                tally.hist.record_us(*latency_us);
+            }
+        }
+    }
+}
+
+/// Drive the HTTP front end with the plan.
+fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
+    let reg = build_registry(cfg)?;
+    let oracle = Arc::new(Oracle::from_registry(&reg)?);
+    let model_metrics = reg.model_metrics();
+    let workers = match cfg.shape {
+        TrafficShape::Closed { clients } => clients.max(1),
+        TrafficShape::Open { .. } => OPEN_POOL,
+    };
+    let mut http_cfg = cfg.http.clone();
+    if cfg.fault_every > 0 {
+        http_cfg.read_deadline = Duration::from_millis(300);
+    }
+    // one connection worker per concurrent load client: a keep-alive
+    // connection pins its worker for the connection's lifetime, so a
+    // smaller pool would starve the surplus clients into read timeouts
+    // — the harness measures serving behavior, not pool starvation
+    http_cfg.conn_workers = http_cfg.conn_workers.max(workers);
+    // 4 chunks × gap must overshoot the deadline, so a slow client
+    // reliably trips the 408 path instead of racing it
+    let slow_gap = http_cfg.read_deadline / 2;
+    let max_body = http_cfg.max_body_bytes;
+    let server = HttpServer::start(reg, http_cfg, "127.0.0.1:0")?;
+    let addr = server.addr();
+    let http_metrics = server.metrics();
+    let server_cell = Mutex::new(Some(server));
+    let sent = AtomicUsize::new(0);
+    let total = plan.requests.len();
+    let drain_threshold = cfg
+        .drain_after
+        .map(|f| ((f * total as f64) as usize).clamp(1, total));
+
+    let t0 = Instant::now();
+    let mut tally = PathReport::new("http", total);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        if let Some(threshold) = drain_threshold {
+            // shutdown-mid-flight: drain gracefully while clients are
+            // still sending; the remaining requests must resolve as
+            // explicit refusals/closes, never hangs
+            let sent = &sent;
+            let server_cell = &server_cell;
+            s.spawn(move || {
+                while sent.load(Ordering::SeqCst) < threshold {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                if let Some(srv) = server_cell.lock().unwrap().take() {
+                    srv.shutdown();
+                }
+            });
+        }
+        match cfg.shape {
+            TrafficShape::Closed { .. } => {
+                for w in 0..workers {
+                    let oracle = oracle.clone();
+                    let sent = &sent;
+                    let reqs: Vec<&PlannedRequest> = plan
+                        .requests
+                        .iter()
+                        .filter(|r| r.index % workers == w)
+                        .collect();
+                    handles.push(s.spawn(move || {
+                        let mut client =
+                            HttpClient::new(addr, cfg.read_timeout, slow_gap, max_body);
+                        let mut tally = PathReport::new("http", 0);
+                        for req in reqs {
+                            execute_one(&mut client, req, &oracle, &mut tally, sent);
+                        }
+                        tally
+                    }));
+                }
+            }
+            TrafficShape::Open { .. } => {
+                let (tx, rx) = std::sync::mpsc::channel::<&PlannedRequest>();
+                let rx = Arc::new(Mutex::new(rx));
+                for _ in 0..workers {
+                    let oracle = oracle.clone();
+                    let sent = &sent;
+                    let rx = rx.clone();
+                    handles.push(s.spawn(move || {
+                        let mut client =
+                            HttpClient::new(addr, cfg.read_timeout, slow_gap, max_body);
+                        let mut tally = PathReport::new("http", 0);
+                        loop {
+                            let req = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match req {
+                                Ok(r) => {
+                                    execute_one(&mut client, r, &oracle, &mut tally, sent)
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                        tally
+                    }));
+                }
+                // pacing dispatcher: release each request at its
+                // seeded arrival offset (sends decoupled from replies)
+                let start = Instant::now();
+                for req in &plan.requests {
+                    let at = Duration::from_micros(req.arrival_us);
+                    let now = start.elapsed();
+                    if at > now {
+                        std::thread::sleep(at - now);
+                    }
+                    if tx.send(req).is_err() {
+                        break;
+                    }
+                }
+                drop(tx);
+            }
+        }
+        for h in handles {
+            let t = h.join().expect("load client thread");
+            tally.merge(&t);
+        }
+    });
+    if let Some(srv) = server_cell.lock().unwrap().take() {
+        srv.shutdown();
+    }
+    tally.wall_s = t0.elapsed().as_secs_f64();
+    tally.drain_enabled = drain_threshold.is_some();
+    tally.faults_injected = plan
+        .fault_counts()
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect();
+    tally.http_admitted = http_metrics.http_admitted.load(Ordering::Relaxed);
+    tally.http_rejected = http_metrics.http_rejected.load(Ordering::Relaxed);
+    tally.http_errors = http_metrics.http_errors.load(Ordering::Relaxed);
+    tally.model_stats = model_metrics
+        .iter()
+        .map(|(name, m)| ModelServerStats::capture(name, m))
+        .collect();
+    Ok(tally)
+}
+
+/// Drive the in-process registry path with the same plan. Wire-level
+/// faults don't exist here: those requests run as normal traffic (same
+/// payloads), while model-routing misses still apply.
+fn drive_inproc(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
+    let reg = Arc::new(build_registry(cfg)?);
+    let oracle = Arc::new(Oracle::from_registry(&reg)?);
+    let model_metrics = reg.model_metrics();
+    let workers = match cfg.shape {
+        TrafficShape::Closed { clients } => clients.max(1),
+        TrafficShape::Open { .. } => OPEN_POOL,
+    };
+    let total = plan.requests.len();
+    let t0 = Instant::now();
+    let mut tally = PathReport::new("inproc", total);
+    let sent = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let reg = reg.clone();
+            let oracle = oracle.clone();
+            let sent = &sent;
+            let reqs: Vec<&PlannedRequest> =
+                plan.requests.iter().filter(|r| r.index % workers == w).collect();
+            handles.push(s.spawn(move || {
+                let mut tally = PathReport::new("inproc", 0);
+                for req in reqs {
+                    execute_inproc(&reg, req, &oracle, &mut tally);
+                    sent.fetch_add(1, Ordering::SeqCst);
+                }
+                tally
+            }));
+        }
+        for h in handles {
+            let t = h.join().expect("inproc client thread");
+            tally.merge(&t);
+        }
+    });
+    tally.wall_s = t0.elapsed().as_secs_f64();
+    tally.faults_injected = vec![(
+        FaultKind::ModelMiss.name().to_string(),
+        plan.requests
+            .iter()
+            .filter(|r| r.fault == Some(FaultKind::ModelMiss))
+            .count() as u64,
+    )];
+    tally.model_stats = model_metrics
+        .iter()
+        .map(|(name, m)| ModelServerStats::capture(name, m))
+        .collect();
+    drop(oracle);
+    if let Ok(reg) = Arc::try_unwrap(reg) {
+        reg.shutdown();
+    }
+    Ok(tally)
+}
+
+/// One in-process request: classify through the batching server, map
+/// the result onto the same outcome buckets the HTTP path uses.
+fn execute_inproc(
+    reg: &ModelRegistry,
+    req: &PlannedRequest,
+    oracle: &Oracle,
+    tally: &mut PathReport,
+) {
+    // wire faults can't exist in-process: run those requests as normal
+    // traffic so the two paths stay sample-for-sample comparable
+    let effective = match req.fault {
+        None | Some(FaultKind::ModelMiss) => req.clone(),
+        Some(_) => PlannedRequest { fault: None, ..req.clone() },
+    };
+    let t = Instant::now();
+    let outcome = match reg
+        .classify_batch(effective.model.as_deref(), effective.samples.clone())
+    {
+        Ok(responses) => Outcome::Answered {
+            status: 200,
+            classes: responses.iter().map(|r| r.class).collect(),
+            latency_us: t.elapsed().as_micros() as u64,
+        },
+        Err(e) => {
+            let status = match e.downcast_ref::<AdmitError>() {
+                Some(AdmitError::QueueFull) => 429,
+                Some(AdmitError::Closed) => 503,
+                None if effective.fault == Some(FaultKind::ModelMiss) => 404,
+                None => 500,
+            };
+            Outcome::Answered { status, classes: Vec::new(), latency_us: 0 }
+        }
+    };
+    let check = tally.record_outcome(&effective, &outcome);
+    if let Outcome::Answered { status: 200, classes, latency_us } = &outcome {
+        if check {
+            let verdict = oracle
+                .verify(req.index, effective.model.as_deref(), &effective.samples, classes)
+                .map_err(|e| format!("{e:#}"));
+            tally.record_oracle(verdict);
+            tally.hist.record_us(*latency_us);
+        }
+    }
+}
+
+/// Run the whole harness per `cfg` and return the report. The caller
+/// decides what to do with a failed gate ([`LoadReport::passed`]) —
+/// the CLI exits nonzero, CI fails the job.
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
+    let plan = LoadPlan::generate(cfg.seed, &cfg.plan_config());
+    let http = if cfg.drive_http { Some(drive_http(cfg, &plan)?) } else { None };
+    let inproc = if cfg.drive_inproc { Some(drive_inproc(cfg, &plan)?) } else { None };
+    Ok(LoadReport { seed: cfg.seed, shape: cfg.shape_desc(), http, inproc })
+}

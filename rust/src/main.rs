@@ -11,6 +11,7 @@
 //!   serve --net a [...]          batching inference server demo
 //!   serve --models a.pvqm,…      multi-model registry serving
 //!   serve --listen host:port     HTTP/1.1 front end (admission-controlled)
+//!   loadtest --seed N [...]      seeded load + fault harness with bitwise oracle
 //!   info                         artifact inventory
 
 use anyhow::{bail, Context, Result};
@@ -423,6 +424,80 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `loadtest`: the seeded load-generation + fault-injection harness
+/// (`pvqnet::loadgen`). One seed derives the whole request stream and
+/// fault schedule, every successful response is bitwise-verified
+/// against the direct engine, and the run fails (nonzero exit) on any
+/// oracle mismatch or any request dropped without a reply. Writes
+/// `BENCH_load.json` (`--out` to change) plus a human summary.
+fn cmd_loadtest(flags: &HashMap<String, String>) -> Result<()> {
+    use pvqnet::loadgen::{ArrivalLaw, LoadConfig, TrafficShape};
+
+    let smoke = flags.contains_key("smoke");
+    let mut cfg = LoadConfig {
+        server: server_cfg(flags)?,
+        ..Default::default()
+    };
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse().context("parse --seed")?;
+    }
+    cfg.requests = match flags.get("requests") {
+        Some(v) => v.parse().context("parse --requests")?,
+        None if smoke => 96,
+        None => 240,
+    };
+    let clients: usize = flags
+        .get("clients")
+        .map(|v| v.parse().context("parse --clients"))
+        .transpose()?
+        .unwrap_or(4);
+    cfg.shape = match flags.get("shape").map(String::as_str) {
+        None | Some("closed") => TrafficShape::Closed { clients },
+        Some("open") => {
+            let rps: f64 = flags
+                .get("rps")
+                .map(|v| v.parse().context("parse --rps"))
+                .transpose()?
+                .unwrap_or(300.0);
+            let arrivals = match flags.get("arrivals").map(String::as_str) {
+                None | Some("poisson") => ArrivalLaw::Poisson,
+                Some("uniform") => ArrivalLaw::Uniform,
+                Some(other) => bail!("unknown --arrivals '{other}' (poisson|uniform)"),
+            };
+            TrafficShape::Open { rps, arrivals }
+        }
+        Some(other) => bail!("unknown --shape '{other}' (closed|open)"),
+    };
+    match flags.get("mode").map(String::as_str) {
+        None | Some("both") => {}
+        Some("http") => cfg.drive_inproc = false,
+        Some("inproc") => cfg.drive_http = false,
+        Some(other) => bail!("unknown --mode '{other}' (http|inproc|both)"),
+    }
+    if flags.contains_key("no-faults") {
+        cfg.fault_every = 0;
+    } else if let Some(v) = flags.get("fault-every") {
+        cfg.fault_every = v.parse().context("parse --fault-every")?;
+    }
+    // shutdown-mid-flight rides with the fault schedule unless opted out
+    if cfg.fault_every > 0 && !flags.contains_key("no-drain") {
+        cfg.drain_after = Some(0.7);
+    }
+    if smoke {
+        cfg.read_timeout = Duration::from_secs(10);
+    }
+    let report = pvqnet::loadgen::run(&cfg)?;
+    print!("{}", report.render());
+    let out = flags.get("out").map(String::as_str).unwrap_or("BENCH_load.json");
+    std::fs::write(out, report.to_json())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
+    if !report.passed() {
+        bail!("loadtest FAILED: unanswered requests or oracle mismatches (seed {})", cfg.seed);
+    }
+    Ok(())
+}
+
 fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
     let dir = artifacts_dir(flags);
     println!("artifacts dir: {}", dir.display());
@@ -448,6 +523,7 @@ fn main() -> Result<()> {
         "pack" => cmd_pack(&flags)?,
         "inspect" => cmd_inspect(&flags)?,
         "serve" => cmd_serve(&flags)?,
+        "loadtest" => cmd_loadtest(&flags)?,
         "info" => cmd_info(&flags)?,
         "help" | "--help" | "-h" => {
             println!(
@@ -464,7 +540,15 @@ fn main() -> Result<()> {
                             --listen HOST:PORT  expose the registry over HTTP/1.1\n\
                             (POST /v1/classify, GET /v1/models, /metrics, /healthz)\n\
                             with --http-workers N (default 4)  --max-inflight N\n\
-                            (default 256)  --duration-s N (default: run until killed)"
+                            (default 256)  --duration-s N (default: run until killed)\n\
+                   loadtest: seeded load + fault harness, bitwise oracle, exits\n\
+                            nonzero on any mismatch or silently dropped request:\n\
+                            --seed N (default 42; same seed replays the identical\n\
+                            run)  --requests N  --clients N  --shape closed|open\n\
+                            [--rps N --arrivals poisson|uniform]\n\
+                            --mode both|http|inproc  --fault-every N | --no-faults\n\
+                            --no-drain (skip shutdown-mid-flight)  --smoke\n\
+                            --out FILE (default BENCH_load.json)"
             );
         }
         other => bail!("unknown command '{other}' (try `pvqnet help`)"),

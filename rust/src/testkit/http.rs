@@ -1,0 +1,264 @@
+//! Loopback HTTP/1.1 test-client helpers.
+//!
+//! A minimal keep-alive client over [`std::net::TcpStream`] that reads
+//! exactly one `Content-Length`-framed response per call, plus small
+//! JSON-shaping helpers for classify bodies. Promoted out of
+//! `tests/http_e2e.rs` so the e2e tests, the bench harness
+//! (`benches/bench_main.rs`), and the load/fault harness
+//! ([`crate::loadgen`]) share one implementation. Loopback sockets only
+//! — nothing here touches an external network.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// One complete HTTP response as read off the wire.
+#[derive(Debug)]
+pub struct HttpResponse {
+    /// Status code from the status line.
+    pub status: u16,
+    /// Raw head (status line + headers, without the terminating CRLFCRLF).
+    pub head: String,
+    /// Body (`Content-Length` bytes, decoded as UTF-8).
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Whether the server asked to close the connection after this
+    /// response (`Connection: close` — the response writer always emits
+    /// an explicit `Connection` header).
+    pub fn connection_close(&self) -> bool {
+        self.head
+            .lines()
+            .any(|l| l.to_ascii_lowercase().starts_with("connection:") && l.contains("close"))
+    }
+}
+
+/// How a connection ended instead of yielding a complete response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvFailure {
+    /// Clean close (or reset) before any byte of the next response —
+    /// e.g. the server drained between requests. Not a bug.
+    Closed,
+    /// The connection died (or the read timed out) *mid* response — a
+    /// half-written answer, always a server bug.
+    MidResponse,
+    /// The read timed out with no response bytes at all: the request
+    /// was swallowed without an answer.
+    TimedOut,
+}
+
+/// Minimal keep-alive HTTP client for loopback tests: raw request in,
+/// one `Content-Length`-framed response out, with pipelining carry-over.
+pub struct HttpTestClient {
+    /// The underlying stream — public so fault-injecting callers can
+    /// write partial/slow/corrupt request bytes directly.
+    pub stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpTestClient {
+    /// Connect with a 30s read timeout (generous; tests that need a
+    /// tighter bound use [`HttpTestClient::connect_timeout`]).
+    pub fn connect(addr: SocketAddr) -> std::io::Result<HttpTestClient> {
+        Self::connect_timeout(addr, Duration::from_secs(30))
+    }
+
+    /// Connect with an explicit read timeout.
+    pub fn connect_timeout(
+        addr: SocketAddr,
+        read_timeout: Duration,
+    ) -> std::io::Result<HttpTestClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(read_timeout))?;
+        Ok(HttpTestClient { stream, buf: Vec::new() })
+    }
+
+    /// Write raw request bytes (and flush).
+    pub fn send(&mut self, raw: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(raw)?;
+        self.stream.flush()
+    }
+
+    /// Read one response, or report how the connection ended instead.
+    pub fn try_read_response(&mut self) -> Result<HttpResponse, RecvFailure> {
+        let mut got_bytes = !self.buf.is_empty();
+        let fail = |got: bool, timeout: bool| {
+            if got {
+                RecvFailure::MidResponse
+            } else if timeout {
+                RecvFailure::TimedOut
+            } else {
+                RecvFailure::Closed
+            }
+        };
+        let head_end = loop {
+            if let Some(i) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(fail(got_bytes, false)),
+                Ok(n) => {
+                    got_bytes = true;
+                    self.buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(fail(got_bytes, true));
+                }
+                Err(_) => return Err(fail(got_bytes, false)),
+            }
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).to_string();
+        let status: u16 = head
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("numeric status code in status line");
+        let content_len: usize = head
+            .lines()
+            .find_map(|l| {
+                let (name, v) = l.split_once(':')?;
+                name.eq_ignore_ascii_case("content-length")
+                    .then(|| v.trim().parse().expect("numeric Content-Length"))
+            })
+            .expect("Content-Length header");
+        let body_start = head_end + 4;
+        while self.buf.len() < body_start + content_len {
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(RecvFailure::MidResponse),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return Err(RecvFailure::MidResponse),
+            }
+        }
+        let rest = self.buf.split_off(body_start + content_len);
+        let body = String::from_utf8_lossy(&self.buf[body_start..]).to_string();
+        self.buf = rest;
+        Ok(HttpResponse { status, head, body })
+    }
+
+    /// Read one response; panics if the connection closes instead.
+    pub fn read_response(&mut self) -> HttpResponse {
+        self.try_read_response().expect("complete response before close")
+    }
+
+    /// POST a classify body and read the response (panics on transport
+    /// failure — the convenience path for tests; fault-injecting callers
+    /// use [`HttpTestClient::send`] + [`HttpTestClient::try_read_response`]).
+    pub fn post_classify(&mut self, body: &str, keep_alive: bool) -> HttpResponse {
+        let raw = classify_request(body, keep_alive);
+        self.send(raw.as_bytes()).expect("write classify request");
+        self.read_response()
+    }
+
+    /// GET a path over keep-alive and read the response.
+    pub fn get(&mut self, path: &str) -> HttpResponse {
+        let raw =
+            format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n");
+        self.send(raw.as_bytes()).expect("write GET request");
+        self.read_response()
+    }
+}
+
+/// Render a complete `POST /v1/classify` request for `body`.
+pub fn classify_request(body: &str, keep_alive: bool) -> String {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Render a pixel row as a JSON array (`[1,2,3]`).
+pub fn pixels_json(p: &[u8]) -> String {
+    let nums: Vec<String> = p.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", nums.join(","))
+}
+
+/// Pull `"class":N` values out of a response body, in order.
+pub fn classes_in(body: &str) -> Vec<usize> {
+    body.match_indices("\"class\":")
+        .map(|(i, pat)| {
+            let digits: String = body[i + pat.len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            digits.parse().expect("digits after \"class\":")
+        })
+        .collect()
+}
+
+/// A connected loopback socket pair (client end, server end) — for
+/// tests that drive [`crate::coordinator::net::HttpConn`] directly.
+pub fn loopback_pair() -> (TcpStream, TcpStream) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let client = TcpStream::connect(addr).expect("connect loopback");
+    let (server, _) = listener.accept().expect("accept loopback");
+    (client, server)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixels_and_classes_helpers() {
+        assert_eq!(pixels_json(&[0, 255, 7]), "[0,255,7]");
+        assert_eq!(pixels_json(&[]), "[]");
+        assert_eq!(
+            classes_in("{\"class\":3,\"x\":[{\"class\":11}]}"),
+            vec![3, 11]
+        );
+        assert!(classes_in("{}").is_empty());
+    }
+
+    #[test]
+    fn reads_framed_responses_over_loopback() {
+        let (client, mut server) = loopback_pair();
+        let mut c = HttpTestClient { stream: client, buf: Vec::new() };
+        c.stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // two pipelined responses in one write, then a clean close
+        server
+            .write_all(
+                b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\nConnection: keep-alive\r\n\r\nok\
+                  HTTP/1.1 429 Too Many Requests\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+            )
+            .unwrap();
+        drop(server);
+        let r1 = c.read_response();
+        assert_eq!((r1.status, r1.body.as_str()), (200, "ok"));
+        assert!(!r1.connection_close());
+        let r2 = c.read_response();
+        assert_eq!(r2.status, 429);
+        assert!(r2.connection_close());
+        assert_eq!(c.try_read_response().unwrap_err(), RecvFailure::Closed);
+    }
+
+    #[test]
+    fn mid_response_death_is_distinguished() {
+        let (client, mut server) = loopback_pair();
+        let mut c = HttpTestClient { stream: client, buf: Vec::new() };
+        c.stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        server
+            .write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 10\r\n\r\nhal")
+            .unwrap();
+        drop(server); // body cut short
+        assert_eq!(c.try_read_response().unwrap_err(), RecvFailure::MidResponse);
+    }
+
+    #[test]
+    fn silent_timeout_is_distinguished() {
+        let (client, _server) = loopback_pair();
+        let mut c = HttpTestClient { stream: client, buf: Vec::new() };
+        c.stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        assert_eq!(c.try_read_response().unwrap_err(), RecvFailure::TimedOut);
+    }
+}

@@ -6,6 +6,13 @@
 //! the paper's whole premise is that trained NN weights are approximately
 //! Laplacian, §IV) and a `check` driver that runs a property over many
 //! seeded cases and reports the failing seed for reproduction.
+//!
+//! The [`http`] submodule holds the loopback HTTP/1.1 client helpers
+//! shared by the e2e tests, the bench harness, and the `loadgen`
+//! subsystem (promoted out of `tests/http_e2e.rs` so there is exactly
+//! one Content-Length-framed response reader in the tree).
+
+pub mod http;
 
 /// SplitMix64 PRNG — tiny, fast, splittable, good enough for tests and for
 /// the synthetic workload generators in the benches.

@@ -1,0 +1,145 @@
+//! Property tests sweeping every PVQL codec across the K/N grid,
+//! including the i32-boundary values from the PR 4 exp-Golomb fix, plus
+//! mutation fuzz on the layer-container decoder (corrupt bytes must
+//! read as errors, never panics).
+
+use pvqnet::compress::{compress_layer, compress_layer_best, decompress_layer, Codec};
+use pvqnet::pvq::{encode_fast, PvqVector, RhoMode};
+use pvqnet::testkit::{check, Rng};
+
+/// PVQ-encode a Laplacian layer at dimension `n`, ratio `n/k_ratio`.
+fn sample_layer(rng: &mut Rng, n: usize, ratio: usize) -> PvqVector {
+    let v = rng.laplacian_vec(n, 0.8);
+    encode_fast(&v, (n / ratio).max(1) as u32, RhoMode::Norm)
+}
+
+#[test]
+fn all_codecs_roundtrip_across_the_kn_grid() {
+    check("codec × K/N grid roundtrip", 0x6001D, 3, |_, rng| {
+        for n in [1usize, 7, 64, 500] {
+            for ratio in [1usize, 2, 5, 10] {
+                let q = sample_layer(rng, n, ratio);
+                for codec in Codec::ALL {
+                    let bytes = compress_layer(&q, codec);
+                    let back = decompress_layer(&bytes)
+                        .unwrap_or_else(|e| panic!("{codec:?} N={n} N/K={ratio}: {e}"));
+                    assert_eq!(back.components, q.components, "{codec:?} N={n} N/K={ratio}");
+                    assert_eq!(back.k, q.k);
+                    assert_eq!(back.rho.to_bits(), q.rho.to_bits(), "rho must be bit-exact");
+                }
+                // the best-of container the .pvqm writer uses roundtrips too
+                let (_, best) = compress_layer_best(&q);
+                assert_eq!(decompress_layer(&best).unwrap().components, q.components);
+            }
+        }
+    });
+}
+
+#[test]
+fn i32_boundary_components_roundtrip_every_codec() {
+    // the PR 4 fix made exp-Golomb reject values outside i32 instead of
+    // truncating; the exact boundaries are legal and must survive every
+    // codec (Huffman routes them through its 32-bit escape)
+    let boundary_layers = [
+        // lone extremes: Σ|c| fits u32 (|i32::MIN| = 2^31 < 2^32)
+        PvqVector { k: i32::MAX as u32, components: vec![i32::MAX], rho: 1.0 },
+        PvqVector { k: 1u32 << 31, components: vec![i32::MIN], rho: 0.5 },
+        // extremes mixed with ordinary values and zeros
+        PvqVector {
+            k: (1u32 << 31) + 4,
+            components: vec![0, i32::MIN, 0, 2, -1, 1, 0],
+            rho: 0.25,
+        },
+        // Σ|c| = (2^31 − 1) + 2^31 = u32::MAX: the largest legal K
+        PvqVector { k: u32::MAX, components: vec![i32::MAX, 0, i32::MIN, 0], rho: 2.0 },
+    ];
+    for q in &boundary_layers {
+        assert!(q.is_valid(), "test vector must satisfy Σ|c| = K: {q:?}");
+        for codec in Codec::ALL {
+            let bytes = compress_layer(q, codec);
+            let back = decompress_layer(&bytes)
+                .unwrap_or_else(|e| panic!("{codec:?} on {q:?}: {e}"));
+            assert_eq!(back.components, q.components, "{codec:?}");
+            assert_eq!(back.k, q.k, "{codec:?}");
+        }
+    }
+}
+
+#[test]
+fn null_vector_and_degenerate_shapes_roundtrip() {
+    for q in [
+        // K = 0 encodes the null vector (rho 0): legal per the spec
+        PvqVector { k: 0, components: vec![0; 32], rho: 0.0 },
+        PvqVector { k: 0, components: vec![], rho: 0.0 },
+        // single-pulse layers
+        PvqVector { k: 1, components: vec![-1], rho: 3.5 },
+        PvqVector { k: 1, components: vec![0, 0, 1, 0], rho: 0.125 },
+    ] {
+        for codec in Codec::ALL {
+            let bytes = compress_layer(&q, codec);
+            let back = decompress_layer(&bytes).unwrap();
+            assert_eq!(back.components, q.components, "{codec:?} {q:?}");
+        }
+    }
+}
+
+#[test]
+fn mutated_containers_error_never_panic() {
+    check("layer container mutation safety", 0xDEAD, 30, |_, rng| {
+        let n = 16 + rng.below(200) as usize;
+        let ratio = [1usize, 2, 5][rng.below(3) as usize];
+        let q = sample_layer(rng, n, ratio);
+        let codec = Codec::ALL[rng.below(4) as usize];
+        let mut bytes = compress_layer(&q, codec);
+        match rng.below(3) {
+            // single byte flip anywhere (header, freq table, payload)
+            0 => {
+                let at = rng.below(bytes.len() as u64) as usize;
+                bytes[at] ^= 1 << rng.below(8);
+            }
+            // truncation
+            1 => bytes.truncate(rng.below(bytes.len() as u64) as usize),
+            // garbage tail
+            _ => bytes.extend((0..rng.below(16)).map(|_| rng.below(256) as u8)),
+        }
+        // Ok or Err, never a panic; a mutation that survives decode
+        // must still yield a valid pyramid point (Σ|c| = K is the
+        // decoder's last gate)
+        if let Ok(back) = decompress_layer(&bytes) {
+            assert!(back.is_valid() || back.k == 0);
+        }
+    });
+}
+
+/// Hand-build a PVQL container around a raw RLE payload.
+fn rle_container(n: u32, k: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"PVQL");
+    out.push(Codec::Rle.id());
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(&k.to_le_bytes());
+    out.extend_from_slice(&1.0f64.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn crafted_rle_payloads_are_rejected_not_panics() {
+    use pvqnet::compress::bitio::BitWriter;
+
+    // a zero-run near u64::MAX used to overflow `out.len() + run` in
+    // the decoder (debug panic); all-zero bits decode as a huge ue
+    let mut zeros = vec![0u8; 20];
+    zeros.push(0xFF);
+    assert!(decompress_layer(&rle_container(4, 2, &zeros)).is_err());
+
+    // a packed nonzero of i64::MAX used to overflow `p + 1` before the
+    // old `as i32` truncation even ran
+    let mut w = BitWriter::new();
+    pvqnet::compress::expgolomb::write_ue(&mut w, 0); // run 0
+    pvqnet::compress::expgolomb::write_ue(&mut w, u64::MAX - 2); // p = i64::MAX
+    pvqnet::compress::expgolomb::write_ue(&mut w, 0); // tail
+    let payload = w.finish();
+    assert!(decompress_layer(&rle_container(1, 1, &payload)).is_err());
+}

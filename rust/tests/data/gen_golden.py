@@ -1,0 +1,222 @@
+#!/usr/bin/env python3
+"""Generate the golden PVQL conformance vectors in this directory.
+
+This is an *independent* implementation of the PVQL compressed-layer
+blob, written from the normative spec (docs/PVQM_FORMAT.md §4), not
+from the Rust code. The checked-in `golden_*.pvql` files it produces
+are the conformance contract: `rust/tests/pvqm_conformance.rs` asserts
+that the Rust codecs re-encode the canonical vectors to these exact
+bytes and decode them back bitwise-equal. If either implementation
+drifts from the spec, the conformance test goes red.
+
+Run from this directory:  python3 gen_golden.py
+"""
+
+import struct
+
+# ------------------------------------------------------------- bit I/O
+# MSB-first bit order (§4.2: JPEG/H.264 convention).
+
+
+class BitWriter:
+    def __init__(self):
+        self.buf = bytearray()
+        self.bit_pos = 0
+
+    def put_bit(self, bit):
+        if self.bit_pos == 0:
+            self.buf.append(0)
+        if bit:
+            self.buf[-1] |= 1 << (7 - self.bit_pos)
+        self.bit_pos = (self.bit_pos + 1) % 8
+
+    def put_bits(self, v, n):
+        for i in range(n - 1, -1, -1):
+            self.put_bit(((v >> i) & 1) == 1)
+
+    def finish(self):
+        return bytes(self.buf)
+
+
+# ------------------------------------------------- §4.2 exp-Golomb
+
+
+def zigzag(v):
+    # codeNum = 2|v| − [v > 0]
+    return 2 * v - 1 if v > 0 else -2 * v
+
+
+def write_ue(w, m):
+    x = m + 1
+    nbits = x.bit_length()
+    w.put_bits(0, nbits - 1)
+    w.put_bits(x, nbits)
+
+
+def write_se(w, v):
+    write_ue(w, zigzag(v))
+
+
+def eg_encode(values):
+    w = BitWriter()
+    for v in values:
+        write_se(w, v)
+    return w.finish()
+
+
+# ------------------------------------------------------ §4.3 zero-RLE
+
+
+def rle_encode(values):
+    w = BitWriter()
+    run = 0
+    for v in values:
+        if v == 0:
+            run += 1
+        else:
+            write_ue(w, run)
+            # se′: v > 0 codes se(v − 1), v < 0 codes se(v)
+            write_se(w, v - 1 if v > 0 else v)
+            run = 0
+    write_ue(w, run)  # tail run
+    return w.finish()
+
+
+# ---------------------------------------------------------- §4.4 raw
+
+
+def raw_encode(values):
+    return b"".join(struct.pack("<i", v) for v in values)
+
+
+# ------------------------------------- §4.5 canonical Huffman, V = 7
+
+V = 7
+NSYM = 2 * V + 2  # {−V..V} ∪ {ESCAPE}; symbol s = v+V, ESCAPE = 2V+1
+
+
+def huff_lengths(freq):
+    """Huffman code lengths via a min-heap ordered by (weight, tie),
+    tie = smallest symbol index in the subtree (spec §4.5 step 1)."""
+    import heapq
+
+    present = [s for s in range(NSYM) if freq[s] > 0]
+    lengths = [0] * NSYM
+    if not present:
+        return lengths
+    if len(present) == 1:
+        lengths[present[0]] = 1
+        return lengths
+    parent = list(range(2 * NSYM))
+    heap = [(freq[s], s, s) for s in present]  # (weight, tie, node id)
+    heapq.heapify(heap)
+    next_id = NSYM
+    while len(heap) > 1:
+        wa, ta, ia = heapq.heappop(heap)
+        wb, tb, ib = heapq.heappop(heap)
+        parent[ia] = next_id
+        parent[ib] = next_id
+        parent[next_id] = next_id
+        heapq.heappush(heap, (wa + wb, min(ta, tb), next_id))
+        next_id += 1
+    root = heap[0][2]
+    for s in present:
+        d, n = 0, s
+        while n != root:
+            n = parent[n]
+            d += 1
+        lengths[s] = d
+    return lengths
+
+
+def huff_codes(lengths):
+    """Canonicalization (spec §4.5 step 2): sort present symbols by
+    (length, symbol), assign increasing codes, shift on length change."""
+    order = sorted(
+        (s for s in range(NSYM) if lengths[s] > 0), key=lambda s: (lengths[s], s)
+    )
+    codes = [0] * NSYM
+    code, prev = 0, 0
+    for s in order:
+        code <<= lengths[s] - prev
+        codes[s] = code
+        code += 1
+        prev = lengths[s]
+    return codes
+
+
+def huff_encode(values):
+    freq = [0] * NSYM
+    for v in values:
+        freq[v + V if abs(v) <= V else NSYM - 1] += 1
+    lengths = huff_lengths(freq)
+    codes = huff_codes(lengths)
+    w = BitWriter()
+    for v in values:
+        if abs(v) <= V:
+            w.put_bits(codes[v + V], lengths[v + V])
+        else:
+            esc = NSYM - 1
+            w.put_bits(codes[esc], lengths[esc])
+            w.put_bits(v & 0xFFFFFFFF, 32)  # raw 32-bit two's complement
+    return freq, w.finish()
+
+
+# ------------------------------------------------- §4 container frame
+
+
+def container(codec_id, components, k, rho, payload, extra=b""):
+    out = bytearray(b"PVQL")
+    out.append(codec_id)
+    out += struct.pack("<I", len(components))
+    out += struct.pack("<I", k)
+    out += struct.pack("<d", rho)
+    out += extra
+    out += struct.pack("<I", len(payload))
+    out += payload
+    return bytes(out)
+
+
+# --------------------------------------------------------- self-tests
+
+_w = BitWriter()
+_w.put_bits(0b101, 3)
+assert _w.finish() == b"\xa0", "MSB-first layout"
+assert eg_encode([0]) == b"\x80", "se(0) is the single bit 1"
+# §4.2 code lengths: 0→1 bit, ±1→3, ±2/±3→5, ±4..±7→7
+for v, bits in [(0, 1), (1, 3), (-1, 3), (2, 5), (-3, 5), (4, 7), (-7, 7)]:
+    w = BitWriter()
+    write_se(w, v)
+    assert len(w.buf) * 8 - (8 - w.bit_pos) % 8 >= 0
+    total = (len(w.buf) - 1) * 8 + (w.bit_pos or 8)
+    assert total == bits, (v, total, bits)
+# degenerate single-symbol table: 1 bit per symbol
+freq, payload = huff_encode([0] * 50)
+assert len(payload) == (50 + 7) // 8
+
+# ------------------------------------------------- canonical vectors
+
+# One vector shared by exp-Golomb / RLE / raw (zeros, ±1, ±2, a 3):
+SHARED = [0, 0, 3, 0, -1, 1, 0, 0, -2, 0, 0, 1]
+SHARED_K = sum(abs(v) for v in SHARED)  # 8
+SHARED_RHO = 0.75  # exact in binary
+
+# Huffman's vector adds escape values (|v| > 7):
+HUFF = [0, 9, 0, -1, 1, 0, 0, -2, 0, 0, -9, 1]
+HUFF_K = sum(abs(v) for v in HUFF)  # 23
+HUFF_RHO = 0.5
+
+golden = {
+    "golden_expgolomb.pvql": container(0, SHARED, SHARED_K, SHARED_RHO, eg_encode(SHARED)),
+    "golden_rle.pvql": container(1, SHARED, SHARED_K, SHARED_RHO, rle_encode(SHARED)),
+    "golden_raw.pvql": container(3, SHARED, SHARED_K, SHARED_RHO, raw_encode(SHARED)),
+}
+freq, payload = huff_encode(HUFF)
+extra = b"".join(struct.pack("<I", f) for f in freq)
+golden["golden_huffman.pvql"] = container(2, HUFF, HUFF_K, HUFF_RHO, payload, extra)
+
+if __name__ == "__main__":
+    for name, data in golden.items():
+        with open(name, "wb") as f:
+            f.write(data)
+        print(f"{name}: {len(data)} bytes  {data.hex()}")

@@ -3,17 +3,19 @@
 //! `HttpServer`, verifying classify correctness against a direct
 //! registry, every error-path status code, admission-control `429`s,
 //! concurrent keep-alive connections, and graceful shutdown that
-//! answers (never strands) in-flight requests. Loopback sockets only —
-//! no external network.
+//! answers (never strands) in-flight requests. The client plumbing
+//! (Content-Length-framed reader, classify body shaping) lives in
+//! `pvqnet::testkit::http`, shared with the bench harness and the
+//! `loadgen` subsystem. Loopback sockets only — no external network.
 
 use pvqnet::coordinator::{EngineKind, HttpConfig, HttpServer, ModelRegistry, ServerConfig};
 use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
 use pvqnet::nn::{Model, QuantModel};
 use pvqnet::pvq::RhoMode;
 use pvqnet::quant::quantize;
+use pvqnet::testkit::http::{classes_in, pixels_json, HttpTestClient, RecvFailure};
 use pvqnet::testkit::Rng;
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::io::Write;
 use std::time::Duration;
 
 const INPUT: usize = 16;
@@ -45,118 +47,12 @@ fn random_pixels(rng: &mut Rng) -> Vec<u8> {
     (0..INPUT).map(|_| rng.below(256) as u8).collect()
 }
 
-fn pixels_json(p: &[u8]) -> String {
-    let nums: Vec<String> = p.iter().map(|v| v.to_string()).collect();
-    format!("[{}]", nums.join(","))
-}
-
-/// Minimal keep-alive HTTP client: sends requests and reads exactly one
-/// `Content-Length`-framed response per call.
-struct Client {
-    stream: TcpStream,
-    buf: Vec<u8>,
-}
-
-impl Client {
-    fn connect(addr: SocketAddr) -> Client {
-        let stream = TcpStream::connect(addr).unwrap();
-        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-        Client { stream, buf: Vec::new() }
-    }
-
-    fn send(&mut self, raw: &str) {
-        self.stream.write_all(raw.as_bytes()).unwrap();
-        self.stream.flush().unwrap();
-    }
-
-    /// Read one response. `Err(true)` means the connection died *mid*
-    /// response (a half-written answer — always a bug), `Err(false)` a
-    /// clean close before any response byte (e.g. server drained).
-    fn try_read_response(&mut self) -> Result<(u16, String, String), bool> {
-        let mut got_bytes = !self.buf.is_empty();
-        let head_end = loop {
-            if let Some(i) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
-                break i;
-            }
-            let mut chunk = [0u8; 4096];
-            match self.stream.read(&mut chunk) {
-                Ok(0) | Err(_) => return Err(got_bytes),
-                Ok(n) => {
-                    got_bytes = true;
-                    self.buf.extend_from_slice(&chunk[..n]);
-                }
-            }
-        };
-        let head = String::from_utf8(self.buf[..head_end].to_vec()).unwrap();
-        let status: u16 = head
-            .split(' ')
-            .nth(1)
-            .expect("status code in status line")
-            .parse()
-            .expect("numeric status");
-        let content_len: usize = head
-            .lines()
-            .find_map(|l| {
-                let (name, v) = l.split_once(':')?;
-                name.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
-            })
-            .expect("Content-Length header");
-        let body_start = head_end + 4;
-        while self.buf.len() < body_start + content_len {
-            let mut chunk = [0u8; 4096];
-            match self.stream.read(&mut chunk) {
-                Ok(0) | Err(_) => return Err(true),
-                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
-            }
-        }
-        let rest = self.buf.split_off(body_start + content_len);
-        let body = String::from_utf8(self.buf[body_start..].to_vec()).unwrap();
-        self.buf = rest;
-        Ok((status, head, body))
-    }
-
-    /// Read one response; panics if the connection closes instead.
-    fn read_response(&mut self) -> (u16, String, String) {
-        self.try_read_response().expect("complete response before close")
-    }
-
-    fn post_classify(&mut self, body: &str, keep_alive: bool) -> (u16, String, String) {
-        let conn = if keep_alive { "keep-alive" } else { "close" };
-        let raw = format!(
-            "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
-            body.len()
-        );
-        self.send(&raw);
-        self.read_response()
-    }
-
-    fn get(&mut self, path: &str) -> (u16, String, String) {
-        let raw = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n");
-        self.send(&raw);
-        self.read_response()
-    }
-}
-
-/// Pull `"class":N` values out of a response body in order.
-fn classes_in(body: &str) -> Vec<usize> {
-    body.match_indices("\"class\":")
-        .map(|(i, pat)| {
-            let digits: String = body[i + pat.len()..]
-                .chars()
-                .take_while(|c| c.is_ascii_digit())
-                .collect();
-            digits.parse().unwrap()
-        })
-        .collect()
-}
-
 #[test]
 fn classify_roundtrip_matches_direct_registry() {
     // same seed → same quantized model on both sides of the wire
     let direct = registry(41);
     let server = start(41, HttpConfig::default());
-    let mut client = Client::connect(server.addr());
+    let mut client = HttpTestClient::connect(server.addr()).unwrap();
     let mut rng = Rng::new(7);
 
     // single-sample bodies, once routed by name and once by default
@@ -164,11 +60,11 @@ fn classify_roundtrip_matches_direct_registry() {
         let p = random_pixels(&mut rng);
         let want = direct.classify(None, p.clone()).unwrap().class;
         let body = format!("{{{model_field}\"pixels\":{}}}", pixels_json(&p));
-        let (status, _, resp) = client.post_classify(&body, true);
-        assert_eq!(status, 200, "{resp}");
-        assert_eq!(classes_in(&resp), vec![want], "{resp}");
-        assert!(resp.contains("\"model\":\"m\""));
-        assert!(resp.contains("\"latency_us\":"));
+        let resp = client.post_classify(&body, true);
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert_eq!(classes_in(&resp.body), vec![want], "{}", resp.body);
+        assert!(resp.body.contains("\"model\":\"m\""));
+        assert!(resp.body.contains("\"latency_us\":"));
     }
 
     // batch body answers in request order
@@ -181,9 +77,9 @@ fn classify_roundtrip_matches_direct_registry() {
         .collect();
     let rows: Vec<String> = samples.iter().map(|p| pixels_json(p)).collect();
     let body = format!("{{\"samples\":[{}]}}", rows.join(","));
-    let (status, _, resp) = client.post_classify(&body, false);
-    assert_eq!(status, 200, "{resp}");
-    assert_eq!(classes_in(&resp), want, "{resp}");
+    let resp = client.post_classify(&body, false);
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(classes_in(&resp.body), want, "{}", resp.body);
 
     // the front end counted what it admitted
     assert_eq!(server.metrics().http_admitted.load(std::sync::atomic::Ordering::Relaxed), 3);
@@ -194,39 +90,63 @@ fn classify_roundtrip_matches_direct_registry() {
 #[test]
 fn error_status_codes() {
     let server = start(43, HttpConfig { max_body_bytes: 4096, ..Default::default() });
-    let mut c = Client::connect(server.addr());
+    let mut c = HttpTestClient::connect(server.addr()).unwrap();
     let ok_pixels = pixels_json(&vec![0u8; INPUT]);
 
     // unknown route
-    let (status, _, _) = c.get("/v1/nope");
-    assert_eq!(status, 404);
+    assert_eq!(c.get("/v1/nope").status, 404);
     // wrong method on a known route
-    c.send("DELETE /metrics HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n");
-    let (status, _, _) = c.read_response();
-    assert_eq!(status, 405);
+    c.send(b"DELETE /metrics HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n")
+        .unwrap();
+    assert_eq!(c.read_response().status, 405);
     // malformed JSON
-    let (status, _, body) = c.post_classify("{\"pixels\":[1,", true);
-    assert_eq!(status, 400, "{body}");
+    let resp = c.post_classify("{\"pixels\":[1,", true);
+    assert_eq!(resp.status, 400, "{}", resp.body);
     // neither pixels nor samples
-    let (status, _, _) = c.post_classify("{\"x\":1}", true);
-    assert_eq!(status, 400);
+    assert_eq!(c.post_classify("{\"x\":1}", true).status, 400);
     // non-pixel values
-    let (status, _, _) = c.post_classify("{\"pixels\":[1,2,999]}", true);
-    assert_eq!(status, 400);
+    assert_eq!(c.post_classify("{\"pixels\":[1,2,999]}", true).status, 400);
     // wrong pixel count
-    let (status, _, body) = c.post_classify("{\"pixels\":[1,2,3]}", true);
-    assert_eq!(status, 400);
-    assert!(body.contains("expects 16 pixels"), "{body}");
+    let resp = c.post_classify("{\"pixels\":[1,2,3]}", true);
+    assert_eq!(resp.status, 400);
+    assert!(resp.body.contains("expects 16 pixels"), "{}", resp.body);
     // unknown model name
     let body = format!("{{\"model\":\"ghost\",\"pixels\":{ok_pixels}}}");
-    let (status, _, resp) = c.post_classify(&body, true);
-    assert_eq!(status, 404, "{resp}");
+    let resp = c.post_classify(&body, true);
+    assert_eq!(resp.status, 404, "{}", resp.body);
     // oversized declared body → 413 and the connection closes
-    let (status, _, _) = c.post_classify(&format!("{{\"pixels\":[{}]}}", "0,".repeat(4000)), true);
-    assert_eq!(status, 413);
+    let resp = c.post_classify(&format!("{{\"pixels\":[{}]}}", "0,".repeat(4000)), true);
+    assert_eq!(resp.status, 413);
+    assert!(resp.connection_close());
 
     let m = server.metrics();
     assert!(m.http_errors.load(std::sync::atomic::Ordering::Relaxed) >= 8);
+    server.shutdown();
+}
+
+#[test]
+fn slow_request_times_out_with_408() {
+    // the injectable read deadline (HttpConfig::read_deadline → net's
+    // HttpConn) turns a wedged-slow client into a fast explicit 408
+    let server = start(
+        53,
+        HttpConfig { read_deadline: Duration::from_millis(150), ..Default::default() },
+    );
+    let mut c = HttpTestClient::connect(server.addr()).unwrap();
+    let body = format!("{{\"pixels\":{}}}", pixels_json(&vec![3u8; INPUT]));
+    let head = format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    c.send(head.as_bytes()).unwrap();
+    // dribble a few body bytes, then stall past the deadline
+    c.send(&body.as_bytes()[..4]).unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    let resp = match c.try_read_response() {
+        Ok(r) => r,
+        Err(e) => panic!("expected an explicit 408, connection just {e:?}"),
+    };
+    assert_eq!(resp.status, 408, "{}", resp.body);
     server.shutdown();
 }
 
@@ -236,20 +156,20 @@ fn saturation_answers_429_with_retry_after() {
     // stand-in for "the batching queue is saturated"; the request is
     // answered immediately, never hung or dropped
     let server = start(45, HttpConfig { max_inflight: 0, ..Default::default() });
-    let mut c = Client::connect(server.addr());
+    let mut c = HttpTestClient::connect(server.addr()).unwrap();
     let body = format!("{{\"pixels\":{}}}", pixels_json(&vec![1u8; INPUT]));
     for _ in 0..3 {
-        let (status, head, _) = c.post_classify(&body, true);
-        assert_eq!(status, 429);
-        assert!(head.contains("Retry-After: 1"), "{head}");
+        let resp = c.post_classify(&body, true);
+        assert_eq!(resp.status, 429);
+        assert!(resp.head.contains("Retry-After: 1"), "{}", resp.head);
     }
     // health and metrics still answer while classify is saturated
-    let (status, _, body) = c.get("/healthz");
-    assert_eq!(status, 200);
-    assert!(body.contains("\"ok\""));
-    let (status, _, body) = c.get("/metrics");
-    assert_eq!(status, 200);
-    assert!(body.contains("pvqnet_http_rejected_total 3"), "{body}");
+    let resp = c.get("/healthz");
+    assert_eq!(resp.status, 200);
+    assert!(resp.body.contains("\"ok\""));
+    let resp = c.get("/metrics");
+    assert_eq!(resp.status, 200);
+    assert!(resp.body.contains("pvqnet_http_rejected_total 3"), "{}", resp.body);
     server.shutdown();
 }
 
@@ -276,12 +196,12 @@ fn concurrent_keepalive_connections() {
         };
         handles.push(std::thread::spawn(move || {
             // one persistent connection per client, requests in series
-            let mut c = Client::connect(addr);
+            let mut c = HttpTestClient::connect(addr).unwrap();
             for (p, want) in direct_want {
                 let body = format!("{{\"pixels\":{}}}", pixels_json(&p));
-                let (status, _, resp) = c.post_classify(&body, true);
-                assert_eq!(status, 200, "{resp}");
-                assert_eq!(classes_in(&resp), vec![want], "{resp}");
+                let resp = c.post_classify(&body, true);
+                assert_eq!(resp.status, 200, "{}", resp.body);
+                assert_eq!(classes_in(&resp.body), vec![want], "{}", resp.body);
             }
         }));
     }
@@ -303,7 +223,7 @@ fn graceful_shutdown_answers_every_inflight_request() {
     for ci in 0..4 {
         handles.push(std::thread::spawn(move || {
             let mut rng = Rng::new(200 + ci);
-            let mut c = Client::connect(addr);
+            let mut c = HttpTestClient::connect(addr).unwrap();
             let mut outcomes = Vec::new();
             loop {
                 let body = format!("{{\"pixels\":{}}}", pixels_json(&random_pixels(&mut rng)));
@@ -319,10 +239,15 @@ fn graceful_shutdown_answers_every_inflight_request() {
                     break;
                 }
                 match c.try_read_response() {
-                    Ok((s, _, _)) => outcomes.push(s),
+                    Ok(r) => outcomes.push(r.status),
                     // clean close between responses: explicit end
-                    Err(false) => break,
-                    Err(true) => panic!("connection died mid-response during drain"),
+                    Err(RecvFailure::Closed) => break,
+                    Err(RecvFailure::MidResponse) => {
+                        panic!("connection died mid-response during drain")
+                    }
+                    Err(RecvFailure::TimedOut) => {
+                        panic!("request swallowed without an answer during drain")
+                    }
                 }
             }
             outcomes

@@ -1,0 +1,158 @@
+//! End-to-end tests for the `loadgen` harness: seeded reproducibility,
+//! zero-unanswered accounting under faults and shutdown-mid-flight,
+//! and the bitwise oracle over both drive paths. Loopback sockets only.
+
+use pvqnet::coordinator::{HttpConfig, ServerConfig};
+use pvqnet::loadgen::{
+    build_registry, run, ArrivalLaw, LoadConfig, LoadPlan, Oracle, TrafficShape,
+};
+use std::time::Duration;
+
+/// A small, fast config shared by the e2e runs.
+fn base_cfg(seed: u64) -> LoadConfig {
+    LoadConfig {
+        seed,
+        requests: 72,
+        shape: TrafficShape::Closed { clients: 3 },
+        drive_http: true,
+        drive_inproc: true,
+        fault_every: 6,
+        drain_after: None,
+        server: ServerConfig::default(),
+        http: HttpConfig::default(),
+        read_timeout: Duration::from_secs(10),
+        model_seed: 42,
+    }
+}
+
+#[test]
+fn same_seed_reproduces_the_exact_request_stream() {
+    let cfg = base_cfg(1234);
+    let plan_cfg = pvqnet::loadgen::PlanConfig {
+        requests: cfg.requests,
+        input_len: pvqnet::loadgen::INPUT_LEN,
+        models: LoadConfig::model_names(),
+        fault_every: cfg.fault_every,
+        max_batch_body: 6,
+        shape: cfg.shape,
+    };
+    let a = LoadPlan::generate(cfg.seed, &plan_cfg);
+    let b = LoadPlan::generate(cfg.seed, &plan_cfg);
+    assert_eq!(a, b, "same seed must derive the identical plan");
+    for (ra, rb) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(ra.body(), rb.body(), "request {} bytes differ", ra.index);
+        assert_eq!(ra.fault, rb.fault);
+    }
+    let c = LoadPlan::generate(cfg.seed + 1, &plan_cfg);
+    assert_ne!(a, c, "different seeds must differ");
+}
+
+#[test]
+fn faulted_http_run_answers_everything_and_verifies_bitwise() {
+    let report = run(&base_cfg(7)).unwrap();
+    let http = report.http.as_ref().expect("http path driven");
+    let inproc = report.inproc.as_ref().expect("inproc path driven");
+
+    for p in [http, inproc] {
+        assert_eq!(p.sent as usize, p.planned, "[{}] every request attempted", p.label);
+        assert_eq!(p.accounted(), p.sent, "[{}] outcome buckets must sum to sent", p.label);
+        assert_eq!(p.unanswered, 0, "[{}] swallowed requests: {}", p.label, p.unanswered);
+        assert_eq!(
+            p.oracle_mismatches, 0,
+            "[{}] oracle mismatches: {:?}",
+            p.label, p.mismatch_examples
+        );
+        assert!(p.oracle_checked > 0, "[{}] oracle never ran", p.label);
+        assert!(p.ok > 0, "[{}] no successful requests", p.label);
+    }
+    // the fault schedule actually ran on the wire and got its answers
+    assert!(http.fault_answered > 0, "no injected fault was answered");
+    assert!(http.aborted > 0, "disconnect-mid-body faults never aborted");
+    assert!(report.passed());
+    // latency histogram saw every fault-free 200
+    assert_eq!(http.hist.count(), http.ok);
+    // server-side accounting is visible in the report
+    assert!(http.http_admitted > 0);
+    assert_eq!(http.model_stats.len(), 2);
+    // JSON output is well-formed for the CI artifact
+    let json = report.to_json();
+    assert!(pvqnet::coordinator::net::Json::parse(json.trim()).is_ok(), "{json}");
+    assert!(json.contains("\"passed\":true"));
+}
+
+#[test]
+fn shutdown_mid_flight_still_accounts_for_every_request() {
+    let cfg = LoadConfig {
+        drain_after: Some(0.5),
+        drive_inproc: false,
+        ..base_cfg(11)
+    };
+    let report = run(&cfg).unwrap();
+    let http = report.http.as_ref().unwrap();
+    assert_eq!(http.sent as usize, http.planned);
+    assert_eq!(http.accounted(), http.sent);
+    assert_eq!(http.unanswered, 0, "drain swallowed requests");
+    assert_eq!(http.oracle_mismatches, 0, "{:?}", http.mismatch_examples);
+    // the drain actually interrupted the run: some requests resolved as
+    // explicit refusals / clean closes / drain rejections
+    assert!(
+        http.refused + http.closed_clean + http.rejected > 0,
+        "drain never interfered: {http:?}"
+    );
+    assert!(report.passed());
+}
+
+#[test]
+fn open_loop_poisson_run_paces_and_verifies() {
+    let cfg = LoadConfig {
+        requests: 48,
+        shape: TrafficShape::Open { rps: 400.0, arrivals: ArrivalLaw::Poisson },
+        drive_inproc: false,
+        fault_every: 8,
+        ..base_cfg(21)
+    };
+    let report = run(&cfg).unwrap();
+    let http = report.http.as_ref().unwrap();
+    assert_eq!(http.sent as usize, http.planned);
+    assert_eq!(http.unanswered, 0);
+    assert_eq!(http.oracle_mismatches, 0, "{:?}", http.mismatch_examples);
+    // 48 arrivals at 400rps ≈ 120ms of pacing: wall time reflects it
+    assert!(http.wall_s >= 0.08, "open loop did not pace: {}s", http.wall_s);
+    assert!(report.passed());
+}
+
+#[test]
+fn oracle_engines_are_the_served_instances() {
+    // the oracle must hold the same Arc'd engines the registry serves —
+    // pointer equality, not just value agreement
+    let cfg = base_cfg(31);
+    let reg = build_registry(&cfg).unwrap();
+    let direct = reg.engine(Some("m0")).unwrap();
+    let again = reg.engine(Some("m0")).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&direct, &again));
+    let by_default = reg.engine(None).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&direct, &by_default), "default route is m0");
+    assert!(reg.engine(Some("ghost")).is_none());
+    let _oracle = Oracle::from_registry(&reg).unwrap();
+    reg.shutdown();
+}
+
+#[test]
+fn no_fault_run_is_clean_and_fast() {
+    let cfg = LoadConfig {
+        fault_every: 0,
+        requests: 40,
+        shape: TrafficShape::Closed { clients: 2 },
+        drive_http: false,
+        ..base_cfg(51)
+    };
+    let report = run(&cfg).unwrap();
+    assert!(report.http.is_none());
+    let inproc = report.inproc.as_ref().unwrap();
+    assert_eq!(inproc.sent, 40);
+    assert_eq!(inproc.ok + inproc.fault_answered, 40, "{inproc:?}");
+    assert_eq!(inproc.unanswered, 0);
+    assert_eq!(inproc.oracle_checked, inproc.ok);
+    assert_eq!(inproc.oracle_mismatches, 0);
+    assert!(report.passed());
+}
