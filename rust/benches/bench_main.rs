@@ -605,6 +605,69 @@ fn bench_loadgen() {
     assert!(report.passed(), "loadgen bench failed its own oracle/accounting gate");
 }
 
+/// Tracing overhead: the disabled-path hook cost (the overhead contract
+/// — one relaxed atomic load, see docs/ARCHITECTURE.md §Observability)
+/// and end-to-end batched classify throughput with tracing off vs on
+/// (sampling 1-in-1, every span recorded). Emits `BENCH_trace.json`.
+fn bench_trace() {
+    use pvqnet::coordinator::{EngineKind, ModelRegistry};
+    use pvqnet::obs;
+
+    // hook microbench: current_ctx() is the hook the hot path calls on
+    // every request/shard; with tracing off it is one relaxed load
+    obs::set_enabled(false);
+    time_it("obs hook ×1000, tracing off", || {
+        for _ in 0..1000 {
+            std::hint::black_box(obs::current_ctx());
+        }
+    });
+    obs::set_enabled(true);
+    obs::set_sampling(1);
+    time_it("obs hook ×1000, tracing on", || {
+        for _ in 0..1000 {
+            std::hint::black_box(obs::current_ctx());
+        }
+    });
+    obs::set_enabled(false);
+
+    // end-to-end: batched registry classify waves, tracing off vs on
+    // (on = every request sampled, full span chain recorded)
+    let spec = ModelSpec::by_name("a").unwrap();
+    let model = pvqnet::nn::Model::synth(&spec, 42);
+    let input_len: usize = spec.input_shape.iter().product();
+    let mut rng = Rng::new(81);
+    let wave: Vec<Vec<u8>> = (0..16)
+        .map(|_| (0..input_len).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let mut entries: Vec<String> = Vec::new();
+    for (label, on) in [("off", false), ("on", true)] {
+        let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
+        let mut reg =
+            ModelRegistry::new(ServerConfig { queue_cap: 8192, ..Default::default() });
+        reg.register_quant("net_a", q.quant_model, EngineKind::Auto, None).unwrap();
+        obs::set_enabled(on);
+        let waves = if smoke() { 2 } else { 60 };
+        let t0 = Instant::now();
+        for _ in 0..waves {
+            let ctx = obs::request_ctx();
+            obs::with_ctx(ctx, || reg.classify_batch(None, wave.clone())).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        obs::set_enabled(false);
+        reg.shutdown();
+        let n = waves * wave.len();
+        let rps = n as f64 / wall.max(1e-12);
+        println!("  tracing {label:<3}: {rps:>9.0} samp/s  ({n} samples)");
+        entries.push(format!(
+            "{{\"tracing\":\"{label}\",\"samples\":{n},\"sps\":{rps:.1}}}"
+        ));
+    }
+    let json =
+        format!("{{\"experiment\":\"trace\",\"entries\":[{}]}}\n", entries.join(","));
+    std::fs::write("BENCH_trace.json", json).unwrap();
+    println!("  wrote BENCH_trace.json");
+}
+
 /// Artifact pack/unpack throughput + compressed bytes per weight on a
 /// net-A-shaped synthetic model; emits BENCH_artifact.json next to the
 /// other bench outputs.
@@ -747,6 +810,7 @@ fn main() {
         ("batch", bench_batch),
         ("shard", bench_shard),
         ("loadgen", bench_loadgen),
+        ("trace", bench_trace),
         ("artifact", bench_artifact),
         ("pjrt", bench_pjrt),
     ];

@@ -13,8 +13,9 @@
 //! |---------------------|--------|---------------|
 //! | `/v1/classify`      | POST   | `{"pixels":[u8…]}` or `{"samples":[[u8…]…]}`, optional `"model"` → class + latency per sample |
 //! | `/v1/models`        | GET    | registered models + default route |
-//! | `/metrics`          | GET    | Prometheus text exposition ([`super::metrics::prometheus_text`]) |
-//! | `/healthz`          | GET    | `200 ok` / `503 draining` |
+//! | `/v1/trace`         | GET    | Chrome trace-event JSON of recorded spans ([`crate::obs`]) |
+//! | `/metrics`          | GET    | Prometheus text exposition ([`super::metrics::prometheus_text_full`]) |
+//! | `/healthz`          | GET    | `200` + version/uptime / `503 draining` |
 //!
 //! Admission control is layered, and every saturation answer is
 //! explicit — the server never hangs and never silently drops:
@@ -34,16 +35,17 @@
 //! servers down — which completes all dispatched batches — so every
 //! admitted request is answered before the listener dies.
 
-use super::metrics::{prometheus_text, Metrics};
+use super::metrics::{prometheus_text_full, FrontendStatus, Metrics};
 use super::net::{self, HttpConn, HttpRequest, Json, RecvError};
 use super::registry::ModelRegistry;
 use super::server::AdmitError;
+use crate::obs::{self, Stage, TraceCtx};
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Front-end tuning knobs (the per-model batching knobs live in
 /// [`super::ServerConfig`], which the [`ModelRegistry`] carries).
@@ -63,6 +65,12 @@ pub struct HttpConfig {
     /// fault-injection harness ([`crate::loadgen`]) shortens it so
     /// deliberately slow clients resolve in milliseconds.
     pub read_deadline: Duration,
+    /// Slow-request log threshold (`pvqnet serve --slow-ms N`): a
+    /// classify request whose wire-read + handle + write total exceeds
+    /// this many milliseconds emits one structured stderr line with its
+    /// request id, model, per-stage times, and batch occupancy. `None`
+    /// (default) disables the log.
+    pub slow_ms: Option<u64>,
 }
 
 impl Default for HttpConfig {
@@ -73,6 +81,7 @@ impl Default for HttpConfig {
             max_inflight: 256,
             max_body_bytes: 1 << 20,
             read_deadline: Duration::from_secs(5),
+            slow_ms: None,
         }
     }
 }
@@ -83,6 +92,8 @@ struct Shared {
     metrics: Arc<Metrics>,
     inflight: AtomicUsize,
     cfg: HttpConfig,
+    /// Server start time, for `/healthz` uptime and `/metrics` gauges.
+    started: Instant,
 }
 
 /// Handle to a running HTTP front end; [`HttpServer::shutdown`] (or
@@ -108,6 +119,7 @@ impl HttpServer {
             metrics: Arc::new(Metrics::new()),
             inflight: AtomicUsize::new(0),
             cfg: cfg.clone(),
+            started: Instant::now(),
         });
 
         let (ctx, crx) = sync_channel::<TcpStream>(cfg.max_pending_conns.max(1));
@@ -246,6 +258,7 @@ fn serve_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
             Ok(req) => {
                 // drain started: answer this request, then close
                 let keep = req.keep_alive && !stop.load(Ordering::SeqCst);
+                let t_handle = Instant::now();
                 let reply = handle_request(shared, &req, stop);
                 if reply.status >= 400 {
                     let rejected = reply.status == 429 || reply.status == 503;
@@ -258,6 +271,7 @@ fn serve_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
                 }
                 let retry: &[(&str, &str)] =
                     if reply.retry_after { &[("Retry-After", "1")] } else { &[] };
+                let t_write = Instant::now();
                 let wrote = net::write_response(
                     conn.stream(),
                     reply.status,
@@ -266,6 +280,41 @@ fn serve_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
                     retry,
                     keep,
                 );
+                let write_d = t_write.elapsed();
+                if reply.slow.is_some() {
+                    shared.metrics.record_stage(Stage::Write, write_d);
+                }
+                if reply.trace.sampled {
+                    obs::record_span_at(
+                        reply.trace,
+                        Stage::Write,
+                        obs::us_since(t_write),
+                        write_d.as_micros() as u64,
+                        0,
+                        [reply.body.len() as u64, 0, 0],
+                    );
+                }
+                if let (Some(limit_ms), Some(info)) = (shared.cfg.slow_ms, &reply.slow) {
+                    let write_us = write_d.as_micros() as u64;
+                    let handle_us =
+                        t_write.duration_since(t_handle).as_micros() as u64;
+                    let total_us = req.recv_us + handle_us + write_us;
+                    if total_us > limit_ms.saturating_mul(1000) {
+                        eprintln!(
+                            "pvqnet slow-request id={} model={} total_us={total_us} \
+                             recv_us={} parse_us={} queue_us={} compute_us={} \
+                             write_us={write_us} batch={} samples={}",
+                            reply.trace.id,
+                            info.model,
+                            req.recv_us,
+                            info.parse_us,
+                            info.queue_us,
+                            info.compute_us,
+                            info.batch,
+                            info.samples,
+                        );
+                    }
+                }
                 if wrote.is_err() || !keep {
                     return;
                 }
@@ -288,12 +337,29 @@ fn serve_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
     }
 }
 
+/// Stage timings a successful classify hands back to the connection
+/// loop for the `--slow-ms` structured log.
+struct SlowInfo {
+    model: String,
+    parse_us: u64,
+    queue_us: u64,
+    compute_us: u64,
+    batch: usize,
+    samples: usize,
+}
+
 /// A routed response about to be written.
 struct Reply {
     status: u16,
     content_type: &'static str,
     body: Vec<u8>,
     retry_after: bool,
+    /// Trace context of the request this answers (OFF for non-classify
+    /// routes and when tracing is disabled) — the connection loop emits
+    /// the write span against it.
+    trace: TraceCtx,
+    /// Present on successful classifies: per-stage timings for slow-log.
+    slow: Option<SlowInfo>,
 }
 
 impl Reply {
@@ -303,6 +369,8 @@ impl Reply {
             content_type: "application/json",
             body: v.render().into_bytes(),
             retry_after: false,
+            trace: TraceCtx::OFF,
+            slow: None,
         }
     }
 
@@ -312,6 +380,8 @@ impl Reply {
             content_type: "application/json",
             body: error_body(msg),
             retry_after: status == 429,
+            trace: TraceCtx::OFF,
+            slow: None,
         }
     }
 }
@@ -352,7 +422,20 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
                     &Json::Obj(vec![("status".into(), Json::Str("draining".into()))]),
                 )
             } else {
-                Reply::json(200, &Json::Obj(vec![("status".into(), Json::Str("ok".into()))]))
+                Reply::json(
+                    200,
+                    &Json::Obj(vec![
+                        ("status".into(), Json::Str("ok".into())),
+                        (
+                            "version".into(),
+                            Json::Str(env!("CARGO_PKG_VERSION").into()),
+                        ),
+                        (
+                            "uptime_s".into(),
+                            Json::Num(shared.started.elapsed().as_secs_f64()),
+                        ),
+                    ]),
+                )
             }
         }
         ("GET", "/v1/models") => {
@@ -387,13 +470,29 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
             let handles = shared.registry.model_metrics();
             let series: Vec<(&str, &Metrics)> =
                 handles.iter().map(|(n, m)| (n.as_str(), m.as_ref())).collect();
+            let status = FrontendStatus {
+                inflight: shared.inflight.load(Ordering::SeqCst) as u64,
+                uptime_s: shared.started.elapsed().as_secs_f64(),
+                version: env!("CARGO_PKG_VERSION"),
+            };
             Reply {
                 status: 200,
                 content_type: "text/plain; version=0.0.4",
-                body: prometheus_text(&shared.metrics, &series).into_bytes(),
+                body: prometheus_text_full(&shared.metrics, &series, Some(&status))
+                    .into_bytes(),
                 retry_after: false,
+                trace: TraceCtx::OFF,
+                slow: None,
             }
         }
+        ("GET", "/v1/trace") => Reply {
+            status: 200,
+            content_type: "application/json",
+            body: obs::export_global().into_bytes(),
+            retry_after: false,
+            trace: TraceCtx::OFF,
+            slow: None,
+        },
         ("POST", "/v1/classify") => {
             if draining {
                 return Reply::error(503, "server draining");
@@ -403,9 +502,23 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
                 return Reply::error(429, "too many in-flight requests");
             }
             shared.metrics.http_admitted.fetch_add(1, Ordering::Relaxed);
-            handle_classify(shared, &req.body)
+            let ctx = obs::request_ctx();
+            if ctx.sampled {
+                // accept span, reconstructed backwards over the wire read
+                let now = obs::now_us();
+                obs::record_span_at(
+                    ctx,
+                    Stage::Accept,
+                    now.saturating_sub(req.recv_us),
+                    req.recv_us,
+                    0,
+                    [req.body.len() as u64, 0, 0],
+                );
+                obs::record_span_at(ctx, Stage::Admit, now, 0, 0, [0, 0, 0]);
+            }
+            handle_classify(shared, &req.body, ctx)
         }
-        (_, "/healthz" | "/v1/models" | "/metrics" | "/v1/classify") => {
+        (_, "/healthz" | "/v1/models" | "/metrics" | "/v1/classify" | "/v1/trace") => {
             Reply::error(405, "method not allowed")
         }
         _ => Reply::error(404, "no such route"),
@@ -414,8 +527,11 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
 
 /// `POST /v1/classify`: single (`pixels`) or batch (`samples`) body,
 /// optional `model` route, answered through the registry's batching
-/// servers.
-fn handle_classify(shared: &Shared, body: &[u8]) -> Reply {
+/// servers. `ctx` is the request's trace context: parse / serialize
+/// spans are emitted against it, the batching layer picks it up via
+/// [`obs::with_ctx`], and successful bodies echo it as `request_id`.
+fn handle_classify(shared: &Shared, body: &[u8], ctx: TraceCtx) -> Reply {
+    let t_parse = Instant::now();
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
         Err(_) => return Reply::error(400, "body is not UTF-8"),
@@ -452,6 +568,18 @@ fn handle_classify(shared: &Shared, body: &[u8]) -> Reply {
         }
         _ => return Reply::error(400, "body needs exactly one of \"pixels\" or \"samples\""),
     };
+    let parse_d = t_parse.elapsed();
+    shared.metrics.record_stage(Stage::Parse, parse_d);
+    if ctx.sampled {
+        obs::record_span_at(
+            ctx,
+            Stage::Parse,
+            obs::us_since(t_parse),
+            parse_d.as_micros() as u64,
+            0,
+            [0, 0, 0],
+        );
+    }
     let Some(info) = shared.registry.resolve(model) else {
         return Reply::error(404, &format!("unknown model '{}'", model.unwrap_or("(default)")));
     };
@@ -468,7 +596,13 @@ fn handle_classify(shared: &Shared, body: &[u8]) -> Reply {
             );
         }
     }
-    match shared.registry.classify_batch(Some(&model_name), samples) {
+    let n_samples = samples.len();
+    let classified = if ctx.id != 0 {
+        obs::with_ctx(ctx, || shared.registry.classify_batch(Some(&model_name), samples))
+    } else {
+        shared.registry.classify_batch(Some(&model_name), samples)
+    };
+    match classified {
         Ok(responses) => {
             let result = |r: &super::Response| {
                 Json::Obj(vec![
@@ -476,20 +610,59 @@ fn handle_classify(shared: &Shared, body: &[u8]) -> Reply {
                     ("latency_us".into(), Json::Num(r.latency.as_micros() as f64)),
                 ])
             };
-            let payload = if batched {
-                Json::Obj(vec![
-                    ("model".into(), Json::Str(model_name)),
-                    ("results".into(), Json::Arr(responses.iter().map(result).collect())),
-                ])
+            let t_ser = Instant::now();
+            let mut fields = vec![("model".into(), Json::Str(model_name.clone()))];
+            if ctx.id != 0 {
+                fields.push(("request_id".into(), Json::Num(ctx.id as f64)));
+            }
+            if batched {
+                fields.push((
+                    "results".into(),
+                    Json::Arr(responses.iter().map(result).collect()),
+                ));
             } else {
                 let r = &responses[0];
-                Json::Obj(vec![
-                    ("model".into(), Json::Str(model_name)),
-                    ("class".into(), Json::Num(r.class as f64)),
-                    ("latency_us".into(), Json::Num(r.latency.as_micros() as f64)),
-                ])
+                fields.push(("class".into(), Json::Num(r.class as f64)));
+                fields.push((
+                    "latency_us".into(),
+                    Json::Num(r.latency.as_micros() as f64),
+                ));
+            }
+            let body = Json::Obj(fields).render().into_bytes();
+            if ctx.sampled {
+                obs::record_span_at(
+                    ctx,
+                    Stage::Serialize,
+                    obs::us_since(t_ser),
+                    t_ser.elapsed().as_micros() as u64,
+                    0,
+                    [body.len() as u64, 0, 0],
+                );
+            }
+            let slow = SlowInfo {
+                model: model_name,
+                parse_us: parse_d.as_micros() as u64,
+                queue_us: responses
+                    .iter()
+                    .map(|r| r.queue.as_micros() as u64)
+                    .max()
+                    .unwrap_or(0),
+                compute_us: responses
+                    .iter()
+                    .map(|r| r.compute.as_micros() as u64)
+                    .max()
+                    .unwrap_or(0),
+                batch: responses.iter().map(|r| r.batch).max().unwrap_or(0),
+                samples: n_samples,
             };
-            Reply::json(200, &payload)
+            Reply {
+                status: 200,
+                content_type: "application/json",
+                body,
+                retry_after: false,
+                trace: ctx,
+                slow: Some(slow),
+            }
         }
         Err(e) => match e.downcast_ref::<AdmitError>() {
             Some(AdmitError::QueueFull) => Reply::error(429, "batching queue saturated"),
@@ -557,13 +730,21 @@ mod tests {
         let addr = server.addr();
         let health = roundtrip(addr, "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
         assert!(health.starts_with("HTTP/1.1 200 OK"), "{health}");
-        assert!(health.contains("{\"status\":\"ok\"}"));
+        assert!(health.contains("\"status\":\"ok\""));
+        assert!(health.contains(&format!("\"version\":\"{}\"", env!("CARGO_PKG_VERSION"))));
+        assert!(health.contains("\"uptime_s\":"));
+        let trace = roundtrip(addr, "GET /v1/trace HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(trace.starts_with("HTTP/1.1 200 OK"), "{trace}");
+        assert!(trace.contains("\"traceEvents\""));
         let models = roundtrip(addr, "GET /v1/models HTTP/1.1\r\nConnection: close\r\n\r\n");
         assert!(models.contains("\"name\":\"tiny\""));
         assert!(models.contains("\"default\":\"tiny\""));
         let metrics = roundtrip(addr, "GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
         assert!(metrics.contains("pvqnet_http_admitted_total"), "{metrics}");
         assert!(metrics.contains("pvqnet_requests_total{model=\"tiny\"}"));
+        assert!(metrics.contains("pvqnet_build_info{version="), "{metrics}");
+        assert!(metrics.contains("pvqnet_uptime_seconds "), "{metrics}");
+        assert!(metrics.contains("pvqnet_queue_depth{model=\"tiny\"}"), "{metrics}");
         let missing = roundtrip(addr, "GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n");
         assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
         let bad_method =

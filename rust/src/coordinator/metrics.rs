@@ -1,5 +1,7 @@
-//! Serving metrics: counters + log-bucketed latency histogram.
+//! Serving metrics: counters, log-bucketed latency histograms
+//! (end-to-end and per-stage), and sampled gauges.
 
+use crate::obs::Stage;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -8,6 +10,72 @@ const BUCKETS: usize = 32;
 
 /// Number of log2 batch-occupancy buckets (1 … ≥1024 samples/batch).
 const OCC_BUCKETS: usize = 11;
+
+/// One per-stage latency histogram: same log2-µs bucketing as the
+/// end-to-end histogram, plus sum and count. Always on — recording is
+/// a clock read and two relaxed adds, independent of trace sampling.
+#[derive(Debug, Default)]
+struct StageHist {
+    hist: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl StageHist {
+    fn record_us(&self, us: u64) {
+        let us = us.max(1);
+        let b = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.hist[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, c) in self.hist.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (b + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Append this stage's `pvqnet_stage_latency_seconds` series
+    /// (cumulative buckets, sum, count) for [`prometheus_text_full`].
+    fn series_into(&self, out: &mut String, model: &str, stage: &str) {
+        use std::fmt::Write;
+        let mut cum = 0u64;
+        let last = self.hist.len() - 1;
+        for (b, c) in self.hist[..last].iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            let le = ((1u128 << (b + 1)) - 1) as f64 / 1e6;
+            let _ = writeln!(
+                out,
+                "pvqnet_stage_latency_seconds_bucket{{model=\"{model}\",stage=\"{stage}\",le=\"{le}\"}} {cum}"
+            );
+        }
+        cum += self.hist[last].load(Ordering::Relaxed);
+        let _ = writeln!(
+            out,
+            "pvqnet_stage_latency_seconds_bucket{{model=\"{model}\",stage=\"{stage}\",le=\"+Inf\"}} {cum}"
+        );
+        let _ = writeln!(
+            out,
+            "pvqnet_stage_latency_seconds_sum{{model=\"{model}\",stage=\"{stage}\"}} {}",
+            self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(
+            out,
+            "pvqnet_stage_latency_seconds_count{{model=\"{model}\",stage=\"{stage}\"}} {cum}"
+        );
+    }
+}
 
 /// Lock-free metrics sink shared across batcher/worker threads.
 #[derive(Debug, Default)]
@@ -37,6 +105,12 @@ pub struct Metrics {
     /// log2 batch-occupancy histogram: bucket b counts dispatched batches
     /// with 2^b ≤ samples < 2^(b+1).
     occ_hist: [AtomicU64; OCC_BUCKETS],
+    /// Per-stage latency histograms, indexed by [`Stage::hist_index`].
+    stages: [StageHist; 5],
+    /// Queue depth sampled at each batch dispatch (gauge, last value).
+    queue_depth_last: AtomicU64,
+    /// Peak sampled queue depth since start.
+    queue_depth_peak: AtomicU64,
 }
 
 impl Metrics {
@@ -134,6 +208,42 @@ impl Metrics {
         } else {
             self.lat_sum_us.load(Ordering::Relaxed) as f64 / n as f64
         }
+    }
+
+    /// Record one stage latency. No-op for stages without a histogram
+    /// ([`Stage::hist_index`] returns `None`).
+    pub fn record_stage(&self, stage: Stage, d: Duration) {
+        if let Some(i) = stage.hist_index() {
+            self.stages[i].record_us(d.as_micros() as u64);
+        }
+    }
+
+    /// Observations recorded for a stage (0 for untracked stages).
+    pub fn stage_count(&self, stage: Stage) -> u64 {
+        stage
+            .hist_index()
+            .map(|i| self.stages[i].count.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Approximate stage-latency quantile in µs (upper bucket edge,
+    /// like [`Metrics::latency_quantile_us`]); 0 when unobserved.
+    pub fn stage_quantile_us(&self, stage: Stage, q: f64) -> u64 {
+        stage.hist_index().map(|i| self.stages[i].quantile_us(q)).unwrap_or(0)
+    }
+
+    /// Record the admission-queue depth sampled at a batch dispatch.
+    pub fn record_queue_depth(&self, depth: u64) {
+        self.queue_depth_last.store(depth, Ordering::Relaxed);
+        self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Sampled queue depth: (last observed, peak since start).
+    pub fn queue_depth(&self) -> (u64, u64) {
+        (
+            self.queue_depth_last.load(Ordering::Relaxed),
+            self.queue_depth_peak.load(Ordering::Relaxed),
+        )
     }
 
     /// Mean batch fill (samples per executed batch).
@@ -243,13 +353,43 @@ fn escape_label(s: &str) -> String {
     out
 }
 
+/// Front-end identity/liveness snapshot for the exposition's build-info
+/// and gauge families (the HTTP server passes one; library callers that
+/// only want the counter/histogram families pass `None` via
+/// [`prometheus_text`]).
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendStatus {
+    /// Requests currently inside the HTTP front end (admitted, not yet
+    /// answered).
+    pub inflight: u64,
+    /// Seconds since the front end started.
+    pub uptime_s: f64,
+    /// Crate version (`CARGO_PKG_VERSION`).
+    pub version: &'static str,
+}
+
 /// Render a full Prometheus text exposition: the HTTP front end's
 /// admission counters from `http`, then every per-model serving family
 /// (requests/responses/batches/occupancy/latency) with one series per
 /// `(model_label, metrics)` entry. `# HELP`/`# TYPE` headers appear
 /// exactly once per family, as the exposition format requires; label
-/// values are escaped.
+/// values are escaped. Equivalent to [`prometheus_text_full`] without
+/// the build-info/uptime/in-flight families.
 pub fn prometheus_text(http: &Metrics, models: &[(&str, &Metrics)]) -> String {
+    prometheus_text_full(http, models, None)
+}
+
+/// [`prometheus_text`] plus, when `frontend` is given, the fleet
+/// families: `pvqnet_build_info`, `pvqnet_uptime_seconds`,
+/// `pvqnet_inflight_requests`, per-model queue-depth gauges, and the
+/// per-stage latency histogram family (stage series appear only once
+/// observed; the front end's own parse/write stages use
+/// `model="http"`).
+pub fn prometheus_text_full(
+    http: &Metrics,
+    models: &[(&str, &Metrics)],
+    frontend: Option<&FrontendStatus>,
+) -> String {
     use std::fmt::Write;
     let models: Vec<(String, &Metrics)> =
         models.iter().map(|(l, m)| (escape_label(l), *m)).collect();
@@ -313,6 +453,54 @@ pub fn prometheus_text(http: &Metrics, models: &[(&str, &Metrics)]) -> String {
     let _ = writeln!(out, "# TYPE pvqnet_batch_occupancy histogram");
     for (label, m) in &models {
         m.occupancy_series_into(&mut out, label);
+    }
+    // per-stage latency histograms: the front end's own stages (parse,
+    // write) under model="http", then each model's queue/batch/compute;
+    // unobserved stages emit nothing
+    let _ = writeln!(
+        out,
+        "# HELP pvqnet_stage_latency_seconds Per-stage request latency (parse/queue/batch_form/compute/write)"
+    );
+    let _ = writeln!(out, "# TYPE pvqnet_stage_latency_seconds histogram");
+    let mut staged: Vec<(&str, &Metrics)> = vec![("http", http)];
+    staged.extend(models.iter().map(|(l, m)| (l.as_str(), *m)));
+    for (label, m) in &staged {
+        for stage in Stage::METERED {
+            let i = stage.hist_index().expect("metered stages have an index");
+            if m.stages[i].count.load(Ordering::Relaxed) > 0 {
+                m.stages[i].series_into(&mut out, label, stage.name());
+            }
+        }
+    }
+    // queue-depth gauges, sampled at batch dispatch
+    let _ = writeln!(
+        out,
+        "# HELP pvqnet_queue_depth Admission-queue depth sampled at batch dispatch"
+    );
+    let _ = writeln!(out, "# TYPE pvqnet_queue_depth gauge");
+    for (label, m) in &models {
+        let _ = writeln!(out, "pvqnet_queue_depth{{model=\"{label}\"}} {}", m.queue_depth().0);
+    }
+    let _ = writeln!(out, "# HELP pvqnet_queue_depth_peak Peak sampled admission-queue depth");
+    let _ = writeln!(out, "# TYPE pvqnet_queue_depth_peak gauge");
+    for (label, m) in &models {
+        let _ =
+            writeln!(out, "pvqnet_queue_depth_peak{{model=\"{label}\"}} {}", m.queue_depth().1);
+    }
+    if let Some(fs) = frontend {
+        let _ = writeln!(out, "# HELP pvqnet_build_info Build/version info (constant 1)");
+        let _ = writeln!(out, "# TYPE pvqnet_build_info gauge");
+        let _ =
+            writeln!(out, "pvqnet_build_info{{version=\"{}\"}} 1", escape_label(fs.version));
+        let _ = writeln!(out, "# HELP pvqnet_uptime_seconds Seconds since the front end started");
+        let _ = writeln!(out, "# TYPE pvqnet_uptime_seconds gauge");
+        let _ = writeln!(out, "pvqnet_uptime_seconds {}", fs.uptime_s);
+        let _ = writeln!(
+            out,
+            "# HELP pvqnet_inflight_requests Requests currently inside the HTTP front end"
+        );
+        let _ = writeln!(out, "# TYPE pvqnet_inflight_requests gauge");
+        let _ = writeln!(out, "pvqnet_inflight_requests {}", fs.inflight);
     }
     out
 }
@@ -436,6 +624,81 @@ mod tests {
         // label values are escaped per the exposition format
         let tq = prometheus_text(&http, &[("a\"b", &m)]);
         assert!(tq.contains("pvqnet_requests_total{model=\"a\\\"b\"} 3"), "{tq}");
+    }
+
+    #[test]
+    fn stage_histograms_record_and_quantile() {
+        let m = Metrics::new();
+        // untracked stage: no-op, never panics
+        m.record_stage(Stage::Accept, Duration::from_micros(10));
+        assert_eq!(m.stage_count(Stage::Accept), 0);
+        for us in [10u64, 20, 40, 80] {
+            m.record_stage(Stage::Queue, Duration::from_micros(us));
+        }
+        m.record_stage(Stage::Compute, Duration::from_micros(500));
+        assert_eq!(m.stage_count(Stage::Queue), 4);
+        assert_eq!(m.stage_count(Stage::Compute), 1);
+        assert_eq!(m.stage_count(Stage::Parse), 0);
+        let p50 = m.stage_quantile_us(Stage::Queue, 0.5);
+        assert!((16..=64).contains(&p50), "p50 {p50}");
+        assert_eq!(m.stage_quantile_us(Stage::Parse, 0.5), 0);
+        assert_eq!(m.stage_quantile_us(Stage::Accept, 0.5), 0);
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_last_and_peak() {
+        let m = Metrics::new();
+        assert_eq!(m.queue_depth(), (0, 0));
+        m.record_queue_depth(5);
+        m.record_queue_depth(9);
+        m.record_queue_depth(2);
+        assert_eq!(m.queue_depth(), (2, 9));
+    }
+
+    #[test]
+    fn full_exposition_adds_stage_and_fleet_families() {
+        let http = Metrics::new();
+        http.record_stage(Stage::Parse, Duration::from_micros(30));
+        http.record_stage(Stage::Write, Duration::from_micros(15));
+        let m = Metrics::new();
+        m.record_stage(Stage::Queue, Duration::from_micros(100));
+        m.record_queue_depth(7);
+        let fs = FrontendStatus { inflight: 3, uptime_s: 1.5, version: "9.9.9-test" };
+        let text = prometheus_text_full(&http, &[("m0", &m)], Some(&fs));
+        assert!(text.contains("pvqnet_build_info{version=\"9.9.9-test\"} 1"), "{text}");
+        assert!(text.contains("pvqnet_uptime_seconds 1.5"));
+        assert!(text.contains("pvqnet_inflight_requests 3"));
+        assert!(text.contains("pvqnet_queue_depth{model=\"m0\"} 7"));
+        assert!(text.contains("pvqnet_queue_depth_peak{model=\"m0\"} 7"));
+        assert!(text.contains(
+            "pvqnet_stage_latency_seconds_count{model=\"http\",stage=\"parse\"} 1"
+        ));
+        assert!(text.contains(
+            "pvqnet_stage_latency_seconds_count{model=\"m0\",stage=\"queue\"} 1"
+        ));
+        // unobserved stages emit no series
+        assert!(!text.contains("stage=\"compute\""));
+        // exposition well-formedness still holds with the new families
+        for fam in [
+            "pvqnet_stage_latency_seconds",
+            "pvqnet_queue_depth",
+            "pvqnet_queue_depth_peak",
+            "pvqnet_build_info",
+            "pvqnet_uptime_seconds",
+            "pvqnet_inflight_requests",
+        ] {
+            let help = format!("# HELP {fam} ");
+            assert_eq!(text.matches(&help).count(), 1, "family {fam}");
+        }
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad series line: {line}");
+        }
+        // the bare exposition stays backward compatible: no fleet families
+        let bare = prometheus_text(&http, &[("m0", &m)]);
+        assert!(!bare.contains("pvqnet_build_info"));
+        assert!(!bare.contains("pvqnet_uptime_seconds"));
+        // but stage/queue-depth families (model-scoped) are always there
+        assert!(bare.contains("pvqnet_queue_depth{model=\"m0\"} 7"));
     }
 
     #[test]

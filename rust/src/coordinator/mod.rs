@@ -13,7 +13,7 @@ pub mod server;
 
 pub use engine::Engine;
 pub use http::{HttpConfig, HttpServer};
-pub use metrics::{prometheus_text, Metrics};
+pub use metrics::{prometheus_text, prometheus_text_full, FrontendStatus, Metrics};
 pub use registry::{EngineKind, ModelInfo, ModelRegistry};
 pub use router::Router;
 pub use server::{AdmitError, Response, Server, ServerConfig};

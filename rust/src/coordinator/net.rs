@@ -65,6 +65,10 @@ pub struct HttpRequest {
     /// Whether the connection may serve another request afterwards
     /// (HTTP/1.1 default unless `Connection: close`).
     pub keep_alive: bool,
+    /// Wire-read time in microseconds: first byte of this request (or
+    /// pipelined carry-over) to the last body byte. Excludes keep-alive
+    /// idle time before the request started arriving.
+    pub recv_us: u64,
 }
 
 impl HttpRequest {
@@ -251,7 +255,8 @@ impl HttpConn {
         let rest = self.buf.split_off(body_start + content_len);
         let mut head_and_body = std::mem::replace(&mut self.buf, rest);
         let body = head_and_body.split_off(body_start);
-        Ok(HttpRequest { method, path, headers, body, keep_alive })
+        let recv_us = started.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
+        Ok(HttpRequest { method, path, headers, body, keep_alive, recv_us })
     }
 }
 

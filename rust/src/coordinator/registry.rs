@@ -17,6 +17,7 @@
 use super::engine::Engine;
 use super::server::{Response, Server, ServerConfig};
 use crate::artifact::{read_model, ArtifactManifest};
+use crate::hw::HwReport;
 use crate::nn::binary::BinaryNet;
 use crate::nn::csr_engine::CompiledQuantModel;
 use crate::nn::QuantModel;
@@ -140,6 +141,9 @@ impl ModelRegistry {
             bail!("model '{name}' already registered");
         }
         let total_params = model.spec.total_params();
+        // static cost model (§VIII) taken before the engine consumes the
+        // model; traced compute spans carry it next to measured wall time
+        let cost = HwReport::from_model(&model).inference_cost();
         let engine = Arc::new(build_engine(model, kind, self.cfg.shards)?);
         let info = ModelInfo {
             name: name.to_string(),
@@ -149,7 +153,7 @@ impl ModelRegistry {
             compressed_bytes: manifest.map(|m| m.total_compressed()).unwrap_or(0),
             shards: engine.shards(),
         };
-        let server = Server::start(engine.clone(), self.cfg.clone());
+        let server = Server::start_named(engine.clone(), self.cfg.clone(), name, Some(cost));
         self.entries.insert(name.to_string(), ModelEntry { server, info, engine });
         if self.default_model.is_none() {
             self.default_model = Some(name.to_string());

@@ -13,6 +13,8 @@
 
 use super::engine::Engine;
 use super::metrics::Metrics;
+use crate::hw::InferenceCost;
+use crate::obs::{self, Stage, TraceCtx};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
@@ -81,11 +83,21 @@ pub struct Response {
     pub class: usize,
     /// Queue+execute latency.
     pub latency: Duration,
+    /// Admission-to-dispatch wait (queue + batch-form).
+    pub queue: Duration,
+    /// Engine compute time of the batch this request rode in.
+    pub compute: Duration,
+    /// Size of the dispatched batch this request rode in.
+    pub batch: usize,
 }
 
 struct Request {
     pixels: Vec<u8>,
     enqueued: Instant,
+    /// Trace context captured at admission ([`obs::current_ctx`]).
+    trace: TraceCtx,
+    /// Stamped by the batcher at dispatch: admission-to-dispatch wait.
+    queue: Duration,
     resp: SyncSender<Result<Response, String>>,
 }
 
@@ -104,12 +116,28 @@ impl Server {
     /// handle so the same engine instance can also be called directly
     /// (the load harness's bitwise oracle path).
     pub fn start(engine: impl Into<Arc<Engine>>, cfg: ServerConfig) -> Server {
+        Server::start_named(engine, cfg, "", None)
+    }
+
+    /// [`Server::start`] with a model name for span labelling and an
+    /// optional static [`InferenceCost`] from the hardware cost model:
+    /// when present, every traced compute span carries the predicted
+    /// add-only cycles and dot count per inference next to the measured
+    /// wall time, so a trace viewer shows model-vs-machine side by side.
+    pub fn start_named(
+        engine: impl Into<Arc<Engine>>,
+        cfg: ServerConfig,
+        name: &str,
+        cost: Option<InferenceCost>,
+    ) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_cap);
         let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
         let brx = Arc::new(Mutex::new(brx));
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
         let engine: Arc<Engine> = engine.into();
+        let model_id = obs::intern_model(name);
+        let cost = cost.unwrap_or_default();
 
         // batcher thread
         let m = metrics.clone();
@@ -119,7 +147,7 @@ impl Server {
         let batcher = std::thread::Builder::new()
             .name("pvq-batcher".into())
             .spawn(move || {
-                batcher_loop(rx, btx, m, stop_b, max_batch, max_wait);
+                batcher_loop(rx, btx, m, stop_b, max_batch, max_wait, model_id);
             })
             .expect("spawn batcher");
 
@@ -131,7 +159,7 @@ impl Server {
             let m = metrics.clone();
             let t = std::thread::Builder::new()
                 .name(format!("pvq-worker-{wi}"))
-                .spawn(move || worker_loop(brx, engine, m))
+                .spawn(move || worker_loop(brx, engine, m, model_id, cost))
                 .expect("spawn worker");
             threads.push(t);
         }
@@ -149,7 +177,13 @@ impl Server {
     ) -> Result<Receiver<Result<Response, String>>, AdmitError> {
         use std::sync::mpsc::TrySendError;
         let (rtx, rrx) = sync_channel(1);
-        let req = Request { pixels, enqueued: Instant::now(), resp: rtx };
+        let req = Request {
+            pixels,
+            enqueued: Instant::now(),
+            trace: obs::current_ctx(),
+            queue: Duration::ZERO,
+            resp: rtx,
+        };
         match self.tx.as_ref().expect("server running").try_send(req) {
             Ok(()) => {
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
@@ -254,6 +288,7 @@ fn batcher_loop(
     stop: Arc<AtomicBool>,
     max_batch: usize,
     max_wait: Duration,
+    model_id: u32,
 ) {
     const WORKERS_GONE: &str = "server worker pool shut down before the batch ran";
     loop {
@@ -268,6 +303,8 @@ fn batcher_loop(
             }
             Err(RecvTimeoutError::Disconnected) => return,
         };
+        // batch-form window opens when its first request is picked up
+        let t_open = Instant::now();
         let mut batch = vec![first];
         let mut disconnected = false;
         // Backlog first: greedily drain already-queued requests up to
@@ -305,6 +342,46 @@ fn batcher_loop(
                 }
             }
         }
+        let dispatch = Instant::now();
+        // queue depth at dispatch: admitted minus already-dispatched
+        // minus this batch (both counters are monotone, so the gap is
+        // exactly what still sits on the admission queue, modulo races)
+        let depth = metrics
+            .requests
+            .load(Ordering::Relaxed)
+            .saturating_sub(metrics.batched_samples.load(Ordering::Relaxed))
+            .saturating_sub(batch.len() as u64);
+        metrics.record_queue_depth(depth);
+        let traced = obs::enabled();
+        for r in batch.iter_mut() {
+            // a request either waited on the queue before this window
+            // opened (queue = enqueue→open) or arrived inside it
+            // (queue = 0); either way it then rode the window to dispatch
+            let join = r.enqueued.max(t_open);
+            let queue = join.duration_since(r.enqueued);
+            let form = dispatch.duration_since(join);
+            r.queue = queue + form;
+            metrics.record_stage(Stage::Queue, queue);
+            metrics.record_stage(Stage::BatchForm, form);
+            if traced && r.trace.sampled {
+                obs::record_span_at(
+                    r.trace,
+                    Stage::Queue,
+                    obs::us_since(r.enqueued),
+                    queue.as_micros() as u64,
+                    model_id,
+                    [depth, 0, 0],
+                );
+                obs::record_span_at(
+                    r.trace,
+                    Stage::BatchForm,
+                    obs::us_since(join),
+                    form.as_micros() as u64,
+                    model_id,
+                    [batch.len() as u64, 0, 0],
+                );
+            }
+        }
         metrics.record_batch(batch.len());
         if let Err(send_err) = btx.send(batch) {
             // worker pool is gone: error-reply this batch and everything
@@ -323,6 +400,8 @@ fn worker_loop(
     brx: Arc<Mutex<Receiver<Vec<Request>>>>,
     engine: Arc<Engine>,
     metrics: Arc<Metrics>,
+    model_id: u32,
+    cost: InferenceCost,
 ) {
     loop {
         let batch = {
@@ -333,12 +412,44 @@ fn worker_loop(
             }
         };
         let views: Vec<&[u8]> = batch.iter().map(|r| r.pixels.as_slice()).collect();
-        match engine.classify_batch(&views) {
+        // adopt one sampled request's context for the whole batch, so
+        // shard spans emitted inside the engine land on a real trace
+        let batch_ctx = if obs::enabled() {
+            batch.iter().map(|r| r.trace).find(|c| c.sampled).unwrap_or(TraceCtx::OFF)
+        } else {
+            TraceCtx::OFF
+        };
+        let t0 = Instant::now();
+        let result = if batch_ctx.sampled {
+            engine.classify_batch_traced(&views, batch_ctx)
+        } else {
+            engine.classify_batch(&views)
+        };
+        let compute = t0.elapsed();
+        let batch_len = batch.len();
+        match result {
             Ok(classes) => {
                 for (req, class) in batch.into_iter().zip(classes) {
                     let latency = req.enqueued.elapsed();
                     metrics.record_latency(latency);
-                    let _ = req.resp.send(Ok(Response { class, latency }));
+                    metrics.record_stage(Stage::Compute, compute);
+                    if req.trace.sampled {
+                        obs::record_span_at(
+                            req.trace,
+                            Stage::Compute,
+                            obs::us_since(t0),
+                            compute.as_micros() as u64,
+                            model_id,
+                            [batch_len as u64, cost.cycles_addonly, cost.dots],
+                        );
+                    }
+                    let _ = req.resp.send(Ok(Response {
+                        class,
+                        latency,
+                        queue: req.queue,
+                        compute,
+                        batch: batch_len,
+                    }));
                 }
             }
             Err(e) => {

@@ -6,4 +6,4 @@ pub mod report;
 
 pub use dot_sim::{add_only_arch, bin_accum_arch, bin_counter_arch, layer_cycles, mult_arch, SimResult};
 pub use lut_sim::{LutCost, LutRow};
-pub use report::{HwReport, LayerHwReport};
+pub use report::{HwReport, InferenceCost, LayerHwReport};

@@ -29,6 +29,21 @@ pub struct HwReport {
     pub layers: Vec<LayerHwReport>,
 }
 
+/// Whole-net predicted cost of *one* inference, condensed from a
+/// [`HwReport`] for the live serving path: the compute span of every
+/// traced request carries these next to measured wall time (the
+/// "operations actually performed" hook — multiply by batch size for a
+/// batch's total).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InferenceCost {
+    /// Dot products per inference.
+    pub dots: u64,
+    /// Predicted cycles on the multiplier architecture (1 PE).
+    pub cycles_mult: u64,
+    /// Predicted cycles on the add-only architecture (1 PE).
+    pub cycles_addonly: u64,
+}
+
 impl HwReport {
     /// Build from a quantized model. `image_hw` supplies the input
     /// geometry for conv nets (taken from the spec).
@@ -113,6 +128,18 @@ impl HwReport {
             }
         }
         HwReport { layers }
+    }
+
+    /// Condense the report into the per-inference cost triple the
+    /// serving stack attaches to compute spans.
+    pub fn inference_cost(&self) -> InferenceCost {
+        let mut c = InferenceCost::default();
+        for l in &self.layers {
+            c.dots += l.dots;
+            c.cycles_mult += l.cycles_mult;
+            c.cycles_addonly += l.cycles_addonly;
+        }
+        c
     }
 
     /// Totals: (cycles mult-arch, cycles add-only, storage EG bits, storage f32 bits).
@@ -204,6 +231,18 @@ mod tests {
             assert_eq!(l.cycles_addonly, r.k as u64, "{}", l.label);
             assert!(l.cycles_mult <= l.cycles_addonly);
         }
+    }
+
+    #[test]
+    fn inference_cost_matches_totals() {
+        let q = quantized_mlp(4, 2.0);
+        let rep = HwReport::from_model(&q.quant_model);
+        let cost = rep.inference_cost();
+        let (cm, ca, _, _) = rep.totals();
+        assert_eq!(cost.cycles_mult, cm);
+        assert_eq!(cost.cycles_addonly, ca);
+        assert_eq!(cost.dots, rep.layers.iter().map(|l| l.dots).sum::<u64>());
+        assert!(cost.dots > 0 && cost.cycles_addonly > 0);
     }
 
     #[test]

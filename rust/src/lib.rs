@@ -12,7 +12,9 @@
 //! and Prometheus text ([`coordinator::net`], [`coordinator::metrics`]),
 //! and machine-checked under adversarial load by a seeded
 //! load-generation + fault-injection harness with a bitwise
-//! correctness oracle ([`loadgen`], `pvqnet loadtest`).
+//! correctness oracle ([`loadgen`], `pvqnet loadtest`). End-to-end
+//! request tracing ([`obs`]) records per-stage spans into lock-free
+//! ring buffers and exports Chrome trace-event JSON (`GET /v1/trace`).
 //!
 //! See `docs/ARCHITECTURE.md` for the module inventory, data-flow
 //! diagram, and the paper-experiment index; `docs/PVQM_FORMAT.md` for
@@ -28,6 +30,7 @@ pub mod data;
 pub mod hw;
 pub mod loadgen;
 pub mod nn;
+pub mod obs;
 pub mod pvq;
 pub mod quant;
 pub mod runtime;

@@ -9,7 +9,9 @@
 //! response, a clean close, or a refused connect.
 
 use super::plan::{FaultKind, PlannedRequest};
-use crate::testkit::http::{classes_in, classify_request, HttpTestClient, RecvFailure};
+use crate::testkit::http::{
+    classes_in, classify_request, request_id_in, HttpTestClient, RecvFailure,
+};
 use std::io::Write;
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
@@ -25,6 +27,9 @@ pub enum Outcome {
         classes: Vec<usize>,
         /// First-request-byte → last-response-byte wall time.
         latency_us: u64,
+        /// Server-assigned trace request id from a 200 body (0 when
+        /// absent — tracing disabled, or a non-200 answer).
+        req_id: u64,
     },
     /// The connect itself failed (listener gone — e.g. after drain).
     Refused,
@@ -82,10 +87,12 @@ impl HttpClient {
                 let latency_us = t0.elapsed().as_micros() as u64;
                 let classes =
                     if resp.status == 200 { classes_in(&resp.body) } else { Vec::new() };
+                let req_id =
+                    if resp.status == 200 { request_id_in(&resp.body) } else { 0 };
                 if resp.connection_close() {
                     self.conn = None;
                 }
-                Outcome::Answered { status: resp.status, classes, latency_us }
+                Outcome::Answered { status: resp.status, classes, latency_us, req_id }
             }
             Err(RecvFailure::Closed) => {
                 self.conn = None;
@@ -158,8 +165,10 @@ impl HttpClient {
                         } else {
                             Vec::new()
                         };
+                        let req_id =
+                            if resp.status == 200 { request_id_in(&resp.body) } else { 0 };
                         self.conn = None;
-                        Outcome::Answered { status: resp.status, classes, latency_us }
+                        Outcome::Answered { status: resp.status, classes, latency_us, req_id }
                     }
                     Err(RecvFailure::MidResponse) => {
                         self.conn = None;

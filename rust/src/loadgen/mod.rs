@@ -40,5 +40,5 @@ pub use client::{HttpClient, Outcome};
 pub use hist::Histogram;
 pub use oracle::Oracle;
 pub use plan::{ArrivalLaw, FaultKind, LoadPlan, PlanConfig, PlannedRequest, TrafficShape};
-pub use report::{LoadReport, ModelServerStats, PathReport};
+pub use report::{LoadReport, ModelServerStats, PathReport, TraceCheck};
 pub use runner::{build_registry, run, LoadConfig, INPUT_LEN};

@@ -13,6 +13,7 @@ use super::hist::Histogram;
 use super::plan::{FaultKind, PlannedRequest};
 use crate::coordinator::net::Json;
 use crate::coordinator::Metrics;
+use crate::obs::Stage;
 
 /// Server-side per-model counters captured at the end of a run (from
 /// the same [`Metrics`] instances the model servers record into).
@@ -30,12 +31,27 @@ pub struct ModelServerStats {
     pub occ_p50: u64,
     /// Server-side latency p50/p90/p99/p999 (µs).
     pub latency_us: [u64; 4],
+    /// Per-stage `(name, p50_us, p99_us)` for every observed pipeline
+    /// stage (queue/batch_form/compute on model servers; parse/write on
+    /// the HTTP front end's `"http"` pseudo-model).
+    pub stages: Vec<(String, u64, u64)>,
 }
 
 impl ModelServerStats {
     /// Snapshot one model's counters.
     pub fn capture(name: &str, m: &Metrics) -> ModelServerStats {
         use std::sync::atomic::Ordering;
+        let stages = Stage::METERED
+            .iter()
+            .filter(|s| m.stage_count(**s) > 0)
+            .map(|s| {
+                (
+                    s.name().to_string(),
+                    m.stage_quantile_us(*s, 0.5),
+                    m.stage_quantile_us(*s, 0.99),
+                )
+            })
+            .collect();
         ModelServerStats {
             name: name.to_string(),
             requests: m.requests.load(Ordering::Relaxed),
@@ -43,8 +59,21 @@ impl ModelServerStats {
             batches: m.batches.load(Ordering::Relaxed),
             occ_p50: m.occupancy_quantile(0.5),
             latency_us: m.latency_percentiles_us(),
+            stages,
         }
     }
+}
+
+/// Span-chain completeness over the requests a traced run answered with
+/// `200` (each body echoes the server-assigned `request_id`).
+#[derive(Clone, Debug, Default)]
+pub struct TraceCheck {
+    /// Request ids the clients collected from `200` bodies.
+    pub checked: u64,
+    /// Ids whose span chain covered every required stage.
+    pub complete: u64,
+    /// First few incomplete chains (`id: missing stage…`).
+    pub missing_examples: Vec<String>,
 }
 
 /// Accounting for one driven path (`http` or `inproc`).
@@ -95,6 +124,8 @@ pub struct PathReport {
     pub http_errors: u64,
     /// Per-model server-side counters.
     pub model_stats: Vec<ModelServerStats>,
+    /// Span-chain completeness, when the run drove with tracing on.
+    pub trace: Option<TraceCheck>,
 }
 
 impl PathReport {
@@ -123,6 +154,7 @@ impl PathReport {
             http_rejected: 0,
             http_errors: 0,
             model_stats: Vec::new(),
+            trace: None,
         }
     }
 
@@ -219,12 +251,15 @@ impl PathReport {
     /// unless this run deliberately drained mid-flight — no refused
     /// connects and no clean closes either, because a healthy server
     /// that is not draining never hangs up without a response (that is
-    /// precisely the silent-drop bug class this harness hunts).
+    /// precisely the silent-drop bug class this harness hunts). A traced
+    /// run additionally requires a complete span chain for every `200`
+    /// the clients collected a request id from.
     pub fn clean(&self) -> bool {
         self.unanswered == 0
             && self.oracle_mismatches == 0
             && self.unexpected_status == 0
             && (self.drain_enabled || (self.closed_clean == 0 && self.refused == 0))
+            && self.trace.as_ref().map(|t| t.complete == t.checked).unwrap_or(true)
     }
 
     /// Every attempted request landed in an explicit bucket.
@@ -261,6 +296,20 @@ impl PathReport {
             self.model_stats
                 .iter()
                 .map(|m| {
+                    let stages = Json::Obj(
+                        m.stages
+                            .iter()
+                            .map(|(name, p50, p99)| {
+                                (
+                                    name.clone(),
+                                    Json::Obj(vec![
+                                        ("p50_us".into(), num(*p50)),
+                                        ("p99_us".into(), num(*p99)),
+                                    ]),
+                                )
+                            })
+                            .collect(),
+                    );
                     Json::Obj(vec![
                         ("name".into(), Json::Str(m.name.clone())),
                         ("requests".into(), num(m.requests)),
@@ -269,6 +318,7 @@ impl PathReport {
                         ("occ_p50".into(), num(m.occ_p50)),
                         ("latency_p50_us".into(), num(m.latency_us[0])),
                         ("latency_p99_us".into(), num(m.latency_us[2])),
+                        ("stages".into(), stages),
                     ])
                 })
                 .collect(),
@@ -316,6 +366,16 @@ impl PathReport {
                 ]),
             ),
             ("models".into(), models),
+            (
+                "trace".into(),
+                match &self.trace {
+                    None => Json::Null,
+                    Some(t) => Json::Obj(vec![
+                        ("checked".into(), num(t.checked)),
+                        ("complete".into(), num(t.complete)),
+                    ]),
+                },
+            ),
         ])
     }
 
@@ -364,6 +424,25 @@ impl PathReport {
                 m.name, m.requests, m.responses, m.batches, m.occ_p50,
                 m.latency_us[0], m.latency_us[2]
             ));
+            if !m.stages.is_empty() {
+                let parts: Vec<String> = m
+                    .stages
+                    .iter()
+                    .map(|(n, p50, p99)| format!("{n} p50 {p50}µs p99 {p99}µs"))
+                    .collect();
+                out.push_str(&format!("       stages: {}\n", parts.join(" · ")));
+            }
+        }
+        if let Some(t) = &self.trace {
+            out.push_str(&format!(
+                "     trace: {}/{} span chains complete{}\n",
+                t.complete,
+                t.checked,
+                if t.complete == t.checked { "" } else { " — INCOMPLETE" }
+            ));
+            for e in &t.missing_examples {
+                out.push_str(&format!("       INCOMPLETE CHAIN: {e}\n"));
+            }
         }
         for e in &self.mismatch_examples {
             out.push_str(&format!("     MISMATCH: {e}\n"));
@@ -459,11 +538,11 @@ mod tests {
         let normal = plan.requests.iter().find(|r| r.fault.is_none()).unwrap();
         assert!(rep.record_outcome(
             normal,
-            &Outcome::Answered { status: 200, classes: vec![1], latency_us: 50 }
+            &Outcome::Answered { status: 200, classes: vec![1], latency_us: 50, req_id: 0 }
         ));
         assert!(!rep.record_outcome(
             normal,
-            &Outcome::Answered { status: 429, classes: vec![], latency_us: 10 }
+            &Outcome::Answered { status: 429, classes: vec![], latency_us: 10, req_id: 0 }
         ));
         assert!(!rep.record_outcome(normal, &Outcome::Unanswered));
         assert!(!rep.record_outcome(normal, &Outcome::Refused));
@@ -472,14 +551,14 @@ mod tests {
         if let Some(status) = status {
             assert!(!rep.record_outcome(
                 faulted,
-                &Outcome::Answered { status, classes: vec![], latency_us: 10 }
+                &Outcome::Answered { status, classes: vec![], latency_us: 10, req_id: 0 }
             ));
             assert_eq!(rep.fault_answered, 1);
         }
         // a 500 nothing predicted
         assert!(!rep.record_outcome(
             normal,
-            &Outcome::Answered { status: 500, classes: vec![], latency_us: 10 }
+            &Outcome::Answered { status: 500, classes: vec![], latency_us: 10, req_id: 0 }
         ));
         assert_eq!(rep.unexpected_status, 1);
         assert_eq!(rep.unanswered, 1);
@@ -535,5 +614,17 @@ mod tests {
         r.unanswered = 1;
         r.drain_enabled = true;
         assert!(!r.clean());
+        // an incomplete span chain fails a traced run
+        let mut t = PathReport::new("http", 1);
+        t.ok = 1;
+        t.sent = 1;
+        t.trace = Some(TraceCheck { checked: 3, complete: 3, missing_examples: vec![] });
+        assert!(t.clean());
+        t.trace = Some(TraceCheck {
+            checked: 3,
+            complete: 2,
+            missing_examples: vec!["id 7: missing compute".into()],
+        });
+        assert!(!t.clean());
     }
 }

@@ -18,14 +18,16 @@
 use super::client::{HttpClient, Outcome};
 use super::oracle::Oracle;
 use super::plan::{FaultKind, LoadPlan, PlanConfig, PlannedRequest, TrafficShape};
-use super::report::{LoadReport, ModelServerStats, PathReport};
+use super::report::{LoadReport, ModelServerStats, PathReport, TraceCheck};
 use crate::coordinator::{
     AdmitError, EngineKind, HttpConfig, HttpServer, ModelRegistry, ServerConfig,
 };
 use crate::nn::{Activation, LayerSpec, Model, ModelSpec};
+use crate::obs::{self, Stage};
 use crate::pvq::RhoMode;
 use crate::quant::quantize;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -68,6 +70,10 @@ pub struct LoadConfig {
     /// Seed for the synthetic model weights (separate from the traffic
     /// seed so sweeps vary load against fixed models).
     pub model_seed: u64,
+    /// Trace the HTTP path: enable span recording (sampling 1-in-1)
+    /// for the run and gate the report on every answered `200` having
+    /// a complete accept→write span chain ([`TraceCheck`]).
+    pub trace: bool,
 }
 
 impl Default for LoadConfig {
@@ -84,6 +90,7 @@ impl Default for LoadConfig {
             http: HttpConfig::default(),
             read_timeout: Duration::from_secs(30),
             model_seed: 42,
+            trace: false,
         }
     }
 }
@@ -143,18 +150,23 @@ pub fn build_registry(cfg: &LoadConfig) -> Result<ModelRegistry> {
 }
 
 /// Execute one request on `client` and fold everything it produced
-/// (outcome bucket, oracle verdict, latency) into `tally`.
+/// (outcome bucket, oracle verdict, latency, trace request id) into
+/// `tally` / `trace_ids`.
 fn execute_one(
     client: &mut HttpClient,
     req: &PlannedRequest,
     oracle: &Oracle,
     tally: &mut PathReport,
+    trace_ids: &mut Vec<u64>,
     sent: &AtomicUsize,
 ) {
     let outcome = client.execute(req);
     sent.fetch_add(1, Ordering::SeqCst);
     let check = tally.record_outcome(req, &outcome);
-    if let Outcome::Answered { status: 200, classes, latency_us } = &outcome {
+    if let Outcome::Answered { status: 200, classes, latency_us, req_id } = &outcome {
+        if *req_id != 0 {
+            trace_ids.push(*req_id);
+        }
         if check {
             let verdict = oracle
                 .verify(req.index, req.model.as_deref(), &req.samples, classes)
@@ -169,6 +181,10 @@ fn execute_one(
 
 /// Drive the HTTP front end with the plan.
 fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
+    if cfg.trace {
+        obs::set_sampling(1);
+        obs::set_enabled(true);
+    }
     let reg = build_registry(cfg)?;
     let oracle = Arc::new(Oracle::from_registry(&reg)?);
     let model_metrics = reg.model_metrics();
@@ -201,6 +217,7 @@ fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
 
     let t0 = Instant::now();
     let mut tally = PathReport::new("http", total);
+    let mut trace_ids: Vec<u64> = Vec::new();
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         if let Some(threshold) = drain_threshold {
@@ -232,10 +249,11 @@ fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
                         let mut client =
                             HttpClient::new(addr, cfg.read_timeout, slow_gap, max_body);
                         let mut tally = PathReport::new("http", 0);
+                        let mut ids = Vec::new();
                         for req in reqs {
-                            execute_one(&mut client, req, &oracle, &mut tally, sent);
+                            execute_one(&mut client, req, &oracle, &mut tally, &mut ids, sent);
                         }
-                        tally
+                        (tally, ids)
                     }));
                 }
             }
@@ -250,19 +268,20 @@ fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
                         let mut client =
                             HttpClient::new(addr, cfg.read_timeout, slow_gap, max_body);
                         let mut tally = PathReport::new("http", 0);
+                        let mut ids = Vec::new();
                         loop {
                             let req = {
                                 let guard = rx.lock().unwrap();
                                 guard.recv()
                             };
                             match req {
-                                Ok(r) => {
-                                    execute_one(&mut client, r, &oracle, &mut tally, sent)
-                                }
+                                Ok(r) => execute_one(
+                                    &mut client, r, &oracle, &mut tally, &mut ids, sent,
+                                ),
                                 Err(_) => break,
                             }
                         }
-                        tally
+                        (tally, ids)
                     }));
                 }
                 // pacing dispatcher: release each request at its
@@ -282,8 +301,9 @@ fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
             }
         }
         for h in handles {
-            let t = h.join().expect("load client thread");
+            let (t, mut ids) = h.join().expect("load client thread");
             tally.merge(&t);
+            trace_ids.append(&mut ids);
         }
     });
     if let Some(srv) = server_cell.lock().unwrap().take() {
@@ -303,7 +323,55 @@ fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
         .iter()
         .map(|(name, m)| ModelServerStats::capture(name, m))
         .collect();
+    // front-end stage percentiles (parse/write) ride along as a
+    // pseudo-model entry, keyed "http"
+    tally.model_stats.push(ModelServerStats::capture("http", &http_metrics));
+    if cfg.trace {
+        // the server is fully shut down here, so every span the run
+        // will ever produce has been published
+        tally.trace = Some(check_span_chains(&trace_ids));
+        obs::set_enabled(false);
+    }
     Ok(tally)
+}
+
+/// The span chain every answered-`200` request must have recorded.
+/// `Shard` is deliberately absent: single-shard engines inline the
+/// work and legitimately emit none.
+const REQUIRED_CHAIN: [Stage; 8] = [
+    Stage::Accept,
+    Stage::Parse,
+    Stage::Admit,
+    Stage::Queue,
+    Stage::BatchForm,
+    Stage::Compute,
+    Stage::Serialize,
+    Stage::Write,
+];
+
+/// Validate that each request id in `ids` has a complete
+/// [`REQUIRED_CHAIN`] in the global recorder's snapshot.
+fn check_span_chains(ids: &[u64]) -> TraceCheck {
+    let mut stages_by_id: HashMap<u64, u16> = HashMap::new();
+    for span in crate::obs::Recorder::global().snapshot() {
+        *stages_by_id.entry(span.trace_id).or_insert(0) |= 1u16 << (span.stage as u8);
+    }
+    let mut check = TraceCheck::default();
+    for &id in ids {
+        check.checked += 1;
+        let mask = stages_by_id.get(&id).copied().unwrap_or(0);
+        let missing: Vec<&str> = REQUIRED_CHAIN
+            .iter()
+            .filter(|s| mask & (1u16 << (**s as u8)) == 0)
+            .map(|s| s.name())
+            .collect();
+        if missing.is_empty() {
+            check.complete += 1;
+        } else if check.missing_examples.len() < 5 {
+            check.missing_examples.push(format!("id {id}: missing {}", missing.join(", ")));
+        }
+    }
+    check
 }
 
 /// Drive the in-process registry path with the same plan. Wire-level
@@ -384,6 +452,7 @@ fn execute_inproc(
             status: 200,
             classes: responses.iter().map(|r| r.class).collect(),
             latency_us: t.elapsed().as_micros() as u64,
+            req_id: 0,
         },
         Err(e) => {
             let status = match e.downcast_ref::<AdmitError>() {
@@ -392,11 +461,11 @@ fn execute_inproc(
                 None if effective.fault == Some(FaultKind::ModelMiss) => 404,
                 None => 500,
             };
-            Outcome::Answered { status, classes: Vec::new(), latency_us: 0 }
+            Outcome::Answered { status, classes: Vec::new(), latency_us: 0, req_id: 0 }
         }
     };
     let check = tally.record_outcome(&effective, &outcome);
-    if let Outcome::Answered { status: 200, classes, latency_us } = &outcome {
+    if let Outcome::Answered { status: 200, classes, latency_us, .. } = &outcome {
         if check {
             let verdict = oracle
                 .verify(req.index, effective.model.as_deref(), &effective.samples, classes)

@@ -352,9 +352,25 @@ fn cmd_serve_http(flags: &HashMap<String, String>, listen: &str) -> Result<()> {
     if let Some(v) = flags.get("max-inflight") {
         http_cfg.max_inflight = v.parse().context("parse --max-inflight")?;
     }
+    if let Some(v) = flags.get("slow-ms") {
+        http_cfg.slow_ms = Some(v.parse().context("parse --slow-ms")?);
+    }
+    let trace_out = flags.get("trace-out").map(PathBuf::from);
+    if flags.contains_key("trace") || trace_out.is_some() {
+        let every: u64 = flags
+            .get("trace-sample")
+            .map(|v| v.parse().context("parse --trace-sample"))
+            .transpose()?
+            .unwrap_or(1);
+        pvqnet::obs::set_sampling(every);
+        pvqnet::obs::set_enabled(true);
+        println!("tracing on (1-in-{every} sampling) — GET /v1/trace for a live dump");
+    }
     let server = HttpServer::start(reg, http_cfg, listen)?;
     println!("listening on http://{}", server.addr());
-    println!("  POST /v1/classify   GET /v1/models   GET /metrics   GET /healthz");
+    println!(
+        "  POST /v1/classify   GET /v1/models   GET /metrics   GET /healthz   GET /v1/trace"
+    );
     match flags.get("duration-s") {
         Some(v) => {
             let secs: u64 = v.parse().context("parse --duration-s")?;
@@ -362,6 +378,14 @@ fn cmd_serve_http(flags: &HashMap<String, String>, listen: &str) -> Result<()> {
             println!("draining after {secs}s");
             print!("{}", server.summary());
             server.shutdown();
+            if let Some(path) = &trace_out {
+                std::fs::write(path, pvqnet::obs::export_global())
+                    .with_context(|| format!("write {}", path.display()))?;
+                println!(
+                    "wrote {} (open in chrome://tracing or https://ui.perfetto.dev)",
+                    path.display()
+                );
+            }
         }
         None => loop {
             std::thread::sleep(Duration::from_secs(3600));
@@ -486,12 +510,22 @@ fn cmd_loadtest(flags: &HashMap<String, String>) -> Result<()> {
     if smoke {
         cfg.read_timeout = Duration::from_secs(10);
     }
+    let trace_out = flags.get("trace-out").map(PathBuf::from);
+    cfg.trace = flags.contains_key("trace") || trace_out.is_some();
     let report = pvqnet::loadgen::run(&cfg)?;
     print!("{}", report.render());
     let out = flags.get("out").map(String::as_str).unwrap_or("BENCH_load.json");
     std::fs::write(out, report.to_json())
         .with_context(|| format!("write {out}"))?;
     println!("wrote {out}");
+    if let Some(path) = &trace_out {
+        std::fs::write(path, pvqnet::obs::export_global())
+            .with_context(|| format!("write {}", path.display()))?;
+        println!(
+            "wrote {} (open in chrome://tracing or https://ui.perfetto.dev)",
+            path.display()
+        );
+    }
     if !report.passed() {
         bail!("loadtest FAILED: unanswered requests or oracle mismatches (seed {})", cfg.seed);
     }
@@ -538,9 +572,12 @@ fn main() -> Result<()> {
                             --max-wait-us N (default 2000)  --workers N (default 1)\n\
                             --shards N (default 1; intra-model shards per batch)\n\
                             --listen HOST:PORT  expose the registry over HTTP/1.1\n\
-                            (POST /v1/classify, GET /v1/models, /metrics, /healthz)\n\
-                            with --http-workers N (default 4)  --max-inflight N\n\
-                            (default 256)  --duration-s N (default: run until killed)\n\
+                            (POST /v1/classify, GET /v1/models, /metrics, /healthz,\n\
+                            /v1/trace)  with --http-workers N (default 4)\n\
+                            --max-inflight N (default 256)  --duration-s N\n\
+                            (default: run until killed)  --slow-ms N (log slow\n\
+                            requests to stderr)  --trace [--trace-sample N]\n\
+                            --trace-out FILE (dump Chrome trace JSON on drain)\n\
                    loadtest: seeded load + fault harness, bitwise oracle, exits\n\
                             nonzero on any mismatch or silently dropped request:\n\
                             --seed N (default 42; same seed replays the identical\n\
@@ -548,7 +585,9 @@ fn main() -> Result<()> {
                             [--rps N --arrivals poisson|uniform]\n\
                             --mode both|http|inproc  --fault-every N | --no-faults\n\
                             --no-drain (skip shutdown-mid-flight)  --smoke\n\
-                            --out FILE (default BENCH_load.json)"
+                            --out FILE (default BENCH_load.json)\n\
+                            --trace (gate on complete span chains)\n\
+                            --trace-out FILE (write the run's Chrome trace)"
             );
         }
         other => bail!("unknown command '{other}' (try `pvqnet help`)"),

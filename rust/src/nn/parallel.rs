@@ -45,6 +45,7 @@
 //! ```
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Minimum planner weight (CSR pulses, conv tap-applications, binary
 /// mask words — each standing for one `B`-lane inner-loop pass) a
@@ -61,13 +62,18 @@ pub const MIN_SHARD_WORK: u64 = 2048;
 pub struct ShardPlan {
     /// Disjoint contiguous ranges; concatenated they cover `0..rows`.
     ranges: Vec<Range<usize>>,
+    /// Planner work estimate per range: the sum of `weight + 1` over
+    /// its rows (aligned with `ranges`; tracing tags shard spans with
+    /// it so a timeline shows estimate next to measured wall time).
+    range_weights: Vec<u64>,
     rows: usize,
 }
 
 impl ShardPlan {
     /// The trivial plan: one shard owning every row (inline execution).
+    /// Rows are costed uniformly (weight estimate = row count).
     pub fn single(rows: usize) -> Self {
-        ShardPlan { ranges: vec![0..rows], rows }
+        ShardPlan { ranges: vec![0..rows], range_weights: vec![rows as u64], rows }
     }
 
     /// Partition rows of equal cost into at most `shards` ranges.
@@ -84,14 +90,16 @@ impl ShardPlan {
     pub fn balanced(weights: &[u64], shards: usize) -> Self {
         let rows = weights.len();
         let shards = shards.max(1);
-        if shards == 1 || rows <= 1 {
-            return ShardPlan::single(rows);
-        }
         let total: u64 = weights.iter().map(|&w| w + 1).sum();
+        if shards == 1 || rows <= 1 {
+            return ShardPlan { ranges: vec![0..rows], range_weights: vec![total], rows };
+        }
         let s = shards as u64;
         let mut ranges = Vec::with_capacity(shards);
+        let mut range_weights = Vec::with_capacity(shards);
         let mut start = 0usize;
         let mut acc = 0u64;
+        let mut closed = 0u64;
         let mut cut = 1u64;
         for (i, &w) in weights.iter().enumerate() {
             acc += w + 1;
@@ -99,6 +107,8 @@ impl ShardPlan {
             // its proportional target (acc/total ≥ cut/shards)
             if cut < s && acc * s >= total * cut {
                 ranges.push(start..i + 1);
+                range_weights.push(acc - closed);
+                closed = acc;
                 start = i + 1;
                 while cut < s && acc * s >= total * cut {
                     cut += 1;
@@ -107,11 +117,12 @@ impl ShardPlan {
         }
         if start < rows {
             ranges.push(start..rows);
+            range_weights.push(total - closed);
         }
         if ranges.is_empty() {
-            return ShardPlan::single(rows);
+            return ShardPlan { ranges: vec![0..rows], range_weights: vec![total], rows };
         }
-        ShardPlan { ranges, rows }
+        ShardPlan { ranges, range_weights, rows }
     }
 
     /// Like [`ShardPlan::balanced`], but capped so that every shard
@@ -131,6 +142,12 @@ impl ShardPlan {
     /// The planned ranges (disjoint, contiguous, covering `0..rows()`).
     pub fn ranges(&self) -> &[Range<usize>] {
         &self.ranges
+    }
+
+    /// Planner work estimate per range (sum of row `weight + 1`),
+    /// aligned with [`ShardPlan::ranges`]. Shard spans carry it.
+    pub fn range_weights(&self) -> &[u64] {
+        &self.range_weights
     }
 
     /// Number of shards the plan actually produced (≤ the requested
@@ -161,10 +178,54 @@ impl ShardPlan {
 /// final shard always executes on the calling thread itself, so an
 /// N-shard plan spawns N−1 threads and no core idles at the join
 /// point.
+///
+/// When the ambient trace context ([`crate::obs::current_ctx`]) is
+/// sampled, every shard's wall time is captured (into pre-allocated
+/// atomics — the ephemeral scoped threads never touch the span
+/// recorder) and the *calling* thread emits one `shard` span per range
+/// after the join, tagged with the plan's work estimate. With tracing
+/// off the only added cost is one relaxed atomic load.
 pub fn for_each_shard<T, F>(plan: &ShardPlan, data: &mut [T], row_width: usize, kernel: F)
 where
     T: Send,
     F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    let ctx = crate::obs::current_ctx();
+    if !ctx.sampled {
+        run_shards(plan, data, row_width, &|_, range, chunk| kernel(range, chunk));
+        return;
+    }
+    let timings: Vec<(AtomicU64, AtomicU64)> = (0..plan.shard_count())
+        .map(|_| (AtomicU64::new(0), AtomicU64::new(0)))
+        .collect();
+    {
+        let timings = &timings;
+        run_shards(plan, data, row_width, &|i, range, chunk| {
+            let start_us = crate::obs::now_us();
+            let t0 = std::time::Instant::now();
+            kernel(range, chunk);
+            timings[i].0.store(start_us, Ordering::Relaxed);
+            timings[i].1.store(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        });
+    }
+    for (i, range) in plan.ranges().iter().enumerate() {
+        crate::obs::record_span_at(
+            ctx,
+            crate::obs::Stage::Shard,
+            timings[i].0.load(Ordering::Relaxed),
+            timings[i].1.load(Ordering::Relaxed),
+            0,
+            [i as u64, range.len() as u64, plan.range_weights[i]],
+        );
+    }
+}
+
+/// The untimed executor body shared by both tracing modes; `kernel`
+/// additionally receives the shard index (for the timing table).
+fn run_shards<T, F>(plan: &ShardPlan, data: &mut [T], row_width: usize, kernel: &F)
+where
+    T: Send,
+    F: Fn(usize, Range<usize>, &mut [T]) + Sync,
 {
     let rows = plan.rows();
     debug_assert!(
@@ -173,23 +234,22 @@ where
         data.len()
     );
     if plan.ranges.len() <= 1 {
-        kernel(0..rows, &mut data[..rows * row_width]);
+        kernel(0, 0..rows, &mut data[..rows * row_width]);
         return;
     }
     std::thread::scope(|scope| {
-        let kernel = &kernel;
         let mut rest = &mut data[..rows * row_width];
         let (last, spawned) = plan.ranges.split_last().expect("plans are never empty");
-        for r in spawned {
+        for (i, r) in spawned.iter().enumerate() {
             let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * row_width);
             rest = tail;
             let range = r.clone();
-            scope.spawn(move || kernel(range, chunk));
+            scope.spawn(move || kernel(i, range, chunk));
         }
         // the calling thread would otherwise idle at the join point —
         // run the final shard here instead of spawning for it
         debug_assert_eq!(rest.len(), last.len() * row_width);
-        kernel(last.clone(), rest);
+        kernel(plan.ranges.len() - 1, last.clone(), rest);
     });
 }
 
@@ -237,6 +297,26 @@ mod tests {
         assert_eq!(plan.shard_count(), 2);
         assert_eq!(plan.ranges()[0], 0..1);
         assert_eq!(plan.ranges()[1], 1..6);
+    }
+
+    #[test]
+    fn range_weights_align_and_sum() {
+        for (weights, shards) in [
+            (vec![100u64, 1, 1, 1, 1, 1], 2usize),
+            (vec![3; 10], 4),
+            (vec![0; 7], 3),
+            (vec![5], 8),
+            (vec![], 4),
+        ] {
+            let plan = ShardPlan::balanced(&weights, shards);
+            assert_eq!(plan.range_weights().len(), plan.shard_count());
+            let total: u64 = weights.iter().map(|&w| w + 1).sum();
+            assert_eq!(plan.range_weights().iter().sum::<u64>(), total);
+            for (r, &w) in plan.ranges().iter().zip(plan.range_weights()) {
+                let want: u64 = weights[r.clone()].iter().map(|&x| x + 1).sum();
+                assert_eq!(w, want, "range {r:?}");
+            }
+        }
     }
 
     #[test]

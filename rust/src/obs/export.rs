@@ -1,0 +1,79 @@
+//! Chrome `trace_event` JSON exporter.
+//!
+//! Renders a [`Recorder`] snapshot as the JSON Object Format of the
+//! Chrome trace-event spec: a `traceEvents` array of complete (`"X"`)
+//! events plus `"M"` thread-name metadata, loadable directly in
+//! `chrome://tracing` or <https://ui.perfetto.dev>. Tracks map to the
+//! recording threads (one ring per thread), so the timeline shows the
+//! real pipeline concurrency: accept/parse on connection workers,
+//! queue/batch-form on the batcher, compute/shard on engine workers.
+
+use super::ring::Recorder;
+use super::span::Stage;
+use crate::coordinator::net::Json;
+
+/// Render every consistent span in `rec` as Chrome trace-event JSON.
+pub fn chrome_trace(rec: &Recorder) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    for (track, name) in rec.tracks() {
+        events.push(Json::Obj(vec![
+            ("name".into(), Json::Str("thread_name".into())),
+            ("ph".into(), Json::Str("M".into())),
+            ("pid".into(), Json::Num(1.0)),
+            ("tid".into(), Json::Num(f64::from(track))),
+            (
+                "args".into(),
+                Json::Obj(vec![("name".into(), Json::Str(name))]),
+            ),
+        ]));
+    }
+    for span in rec.snapshot() {
+        let mut args: Vec<(String, Json)> = vec![(
+            "request_id".into(),
+            Json::Num(span.trace_id as f64),
+        )];
+        if span.model != 0 {
+            args.push(("model".into(), Json::Str(rec.label(span.model))));
+        }
+        match span.stage {
+            Stage::Accept | Stage::Serialize | Stage::Write => {
+                args.push(("bytes".into(), Json::Num(span.arg_a as f64)));
+            }
+            Stage::Queue => {
+                args.push(("queue_depth".into(), Json::Num(span.arg_a as f64)));
+            }
+            Stage::BatchForm => {
+                args.push(("batch".into(), Json::Num(span.arg_a as f64)));
+            }
+            Stage::Compute => {
+                args.push(("batch".into(), Json::Num(span.arg_a as f64)));
+                args.push((
+                    "predicted_cycles_addonly".into(),
+                    Json::Num(span.arg_b as f64),
+                ));
+                args.push(("predicted_dots".into(), Json::Num(span.arg_c as f64)));
+            }
+            Stage::Shard => {
+                args.push(("shard".into(), Json::Num(span.arg_a as f64)));
+                args.push(("rows".into(), Json::Num(span.arg_b as f64)));
+                args.push(("work_estimate".into(), Json::Num(span.arg_c as f64)));
+            }
+            Stage::Parse | Stage::Admit => {}
+        }
+        events.push(Json::Obj(vec![
+            ("name".into(), Json::Str(span.stage.name().into())),
+            ("cat".into(), Json::Str("pvqnet".into())),
+            ("ph".into(), Json::Str("X".into())),
+            ("ts".into(), Json::Num(span.start_us as f64)),
+            ("dur".into(), Json::Num(span.dur_us as f64)),
+            ("pid".into(), Json::Num(1.0)),
+            ("tid".into(), Json::Num(f64::from(span.track))),
+            ("args".into(), Json::Obj(args)),
+        ]));
+    }
+    Json::Obj(vec![
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+        ("traceEvents".into(), Json::Arr(events)),
+    ])
+    .render()
+}

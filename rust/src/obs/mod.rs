@@ -1,0 +1,231 @@
+//! Observability: request tracing with bounded-memory, lock-free span
+//! recording and a Chrome `trace_event` exporter.
+//!
+//! The serving stack threads a [`TraceCtx`] (request id + sampling
+//! decision) through the whole request lifecycle and records one
+//! [`SpanRecord`] per stage into per-thread ring buffers
+//! ([`Recorder`]); `GET /v1/trace` (and `pvqnet serve --trace-out`)
+//! export them as trace-event JSON for `chrome://tracing` / Perfetto.
+//!
+//! **Overhead contract.** Tracing is *off* by default. Every hot-path
+//! hook is gated so the disabled path is exactly one relaxed load of a
+//! process-global `AtomicBool` ([`enabled`]) — no allocation, no TLS
+//! write, no clock read (`benches/bench_main.rs` `trace` experiment
+//! measures both sides). When enabled, span recording is further gated
+//! by 1-in-N request sampling ([`set_sampling`]); per-stage latency
+//! *metrics* ([`crate::coordinator::Metrics`]) are independent of this
+//! module and always on.
+//!
+//! Context propagation is by value where the code already passes
+//! request state, and by a thread-local ([`with_ctx`] / [`current_ctx`])
+//! across the two API boundaries that must not change shape for
+//! existing callers (`Server::submit`, `for_each_shard`).
+
+mod export;
+mod ring;
+mod span;
+
+pub use export::chrome_trace;
+pub use ring::{Recorder, SpanRing, DEFAULT_MAX_RINGS, DEFAULT_RING_CAP};
+pub use span::{SpanRecord, Stage, TraceCtx};
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Master switch. Relaxed is sufficient: a stale read merely records
+/// or skips a span near the toggle edge.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Record spans for 1 request in N (by request id). 1 = every request.
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(1);
+
+/// Process-wide request id allocator (ids start at 1; 0 = untraced).
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Ambient trace context for the two propagation points that keep
+    /// their public signatures (`Server::submit`, `for_each_shard`).
+    static CURRENT: Cell<TraceCtx> = const { Cell::new(TraceCtx::OFF) };
+    /// This thread's ring in the global recorder (`None` until first
+    /// span; stays `None` if the recorder's ring cap refused us).
+    static RING: RefCell<Option<Arc<SpanRing>>> = const { RefCell::new(None) };
+    /// Whether registration was already attempted (avoids re-locking
+    /// the registry per span after a refusal).
+    static RING_TRIED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether tracing is enabled — one relaxed atomic load; this is the
+/// entire cost of every hook when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Record spans for 1 request in `every` (clamped to ≥ 1).
+pub fn set_sampling(every: u64) {
+    SAMPLE_EVERY.store(every.max(1), Ordering::Relaxed);
+}
+
+/// Allocate a trace context for a new request: a fresh id plus the
+/// sampling decision. Returns [`TraceCtx::OFF`] when tracing is off.
+pub fn request_ctx() -> TraceCtx {
+    if !enabled() {
+        return TraceCtx::OFF;
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let every = SAMPLE_EVERY.load(Ordering::Relaxed).max(1);
+    TraceCtx { id, sampled: id % every == 0 }
+}
+
+/// The ambient trace context set by [`with_ctx`], or [`TraceCtx::OFF`]
+/// when tracing is off (checked first: the off path is one relaxed
+/// load, no TLS access).
+pub fn current_ctx() -> TraceCtx {
+    if !enabled() {
+        return TraceCtx::OFF;
+    }
+    CURRENT.with(Cell::get)
+}
+
+/// Run `f` with `ctx` as the ambient trace context, restoring the
+/// previous context afterwards (nesting-safe).
+pub fn with_ctx<R>(ctx: TraceCtx, f: impl FnOnce() -> R) -> R {
+    CURRENT.with(|c| {
+        let prev = c.replace(ctx);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+/// Microseconds since the global recorder's epoch.
+pub fn now_us() -> u64 {
+    Recorder::global().now_us()
+}
+
+/// Microseconds between the global recorder's epoch and `t` (a past
+/// [`Instant`]), for retroactive span starts. Saturates to 0 if `t`
+/// predates the epoch.
+pub fn us_since(t: Instant) -> u64 {
+    Recorder::global().us_since_epoch(t)
+}
+
+/// Intern `model` in the global recorder, returning its label id for
+/// span records (0 for the empty string).
+pub fn intern_model(model: &str) -> u32 {
+    if model.is_empty() {
+        return 0;
+    }
+    Recorder::global().intern_label(model)
+}
+
+fn with_thread_ring(f: impl FnOnce(&SpanRing)) {
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        if r.is_none() && !RING_TRIED.with(|t| t.replace(true)) {
+            let name = std::thread::current().name().unwrap_or("unnamed").to_string();
+            *r = Recorder::global().register(&name);
+        }
+        if let Some(ring) = r.as_ref() {
+            f(ring);
+        }
+    });
+}
+
+/// Record a span with explicit epoch-relative timestamps into the
+/// calling thread's ring of the global recorder. No-op unless tracing
+/// is enabled and `ctx` is sampled.
+pub fn record_span_at(
+    ctx: TraceCtx,
+    stage: Stage,
+    start_us: u64,
+    dur_us: u64,
+    model: u32,
+    args: [u64; 3],
+) {
+    if !enabled() || !ctx.sampled {
+        return;
+    }
+    with_thread_ring(|ring| {
+        ring.record(&SpanRecord {
+            trace_id: ctx.id,
+            stage,
+            start_us,
+            dur_us,
+            track: ring.track(),
+            model,
+            arg_a: args[0],
+            arg_b: args[1],
+            arg_c: args[2],
+        });
+    });
+}
+
+/// Record a span that started at instant `start` and ends now. No-op
+/// unless tracing is enabled and `ctx` is sampled.
+pub fn span_since(ctx: TraceCtx, stage: Stage, start: Instant, model: u32, args: [u64; 3]) {
+    if !enabled() || !ctx.sampled {
+        return;
+    }
+    let rec = Recorder::global();
+    let start_us = rec.us_since_epoch(start);
+    let dur_us = rec.now_us().saturating_sub(start_us);
+    record_span_at(ctx, stage, start_us, dur_us, model, args);
+}
+
+/// Export the global recorder as Chrome trace-event JSON.
+pub fn export_global() -> String {
+    chrome_trace(Recorder::global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_ctx_allocates_and_samples() {
+        // off → OFF ctx, no ids burned
+        set_enabled(false);
+        assert_eq!(request_ctx(), TraceCtx::OFF);
+        set_enabled(true);
+        set_sampling(1);
+        let a = request_ctx();
+        let b = request_ctx();
+        assert!(a.id != 0 && b.id != 0 && a.id != b.id);
+        assert!(a.sampled && b.sampled);
+        set_enabled(false);
+        set_sampling(1);
+    }
+
+    #[test]
+    fn with_ctx_restores_previous() {
+        let outer = TraceCtx { id: 7, sampled: true };
+        let inner = TraceCtx { id: 8, sampled: false };
+        with_ctx(outer, || {
+            assert_eq!(CURRENT.with(Cell::get), outer);
+            with_ctx(inner, || assert_eq!(CURRENT.with(Cell::get), inner));
+            assert_eq!(CURRENT.with(Cell::get), outer);
+        });
+        assert_eq!(CURRENT.with(Cell::get), TraceCtx::OFF);
+    }
+
+    #[test]
+    fn stage_names_and_indices_are_stable() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_u8(s as u8), Some(s));
+            assert!(!s.name().is_empty());
+        }
+        for (i, s) in Stage::METERED.into_iter().enumerate() {
+            assert_eq!(s.hist_index(), Some(i));
+        }
+        assert_eq!(Stage::Accept.hist_index(), None);
+        assert_eq!(Stage::Shard.hist_index(), None);
+    }
+}

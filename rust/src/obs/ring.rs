@@ -1,0 +1,306 @@
+//! Lock-free span recorder: per-thread ring buffers with bounded
+//! memory, drained by a checksum-validated seqlock snapshot.
+//!
+//! Design constraints (from the overhead contract in
+//! `docs/ARCHITECTURE.md` §Observability):
+//!
+//! * **Writers never block.** Each recording thread owns one
+//!   [`SpanRing`]; a record is nine atomic stores, no locks, no
+//!   allocation. The registry of rings is behind a `Mutex`, but it is
+//!   touched once per thread (registration), never per span.
+//! * **Memory is bounded.** A ring holds a fixed number of slots
+//!   (oldest spans are overwritten) and the recorder caps how many
+//!   rings exist; threads beyond the cap record nothing and bump a
+//!   `dropped` counter instead of allocating.
+//! * **Readers never produce torn records.** Every slot field is an
+//!   individual `AtomicU64`, so a mixed read can interleave *whole
+//!   fields* but never tear one. A per-slot sequence word (seqlock:
+//!   odd = write in progress) plus a generation-keyed checksum over all
+//!   payload fields rejects any snapshot that mixed fields from
+//!   different generations — a record either comes out exactly as
+//!   written or not at all.
+
+use super::span::{SpanRecord, Stage};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Slots per ring (per recording thread). 4096 spans ≈ 500 traced
+/// requests of history per thread at ~8 spans each.
+pub const DEFAULT_RING_CAP: usize = 4096;
+
+/// Max rings (≈ recording threads) per recorder. Total span memory is
+/// hard-bounded at `max_rings × cap × 72 B`; rings are allocated lazily
+/// per recording thread, so a typical server (< 20 recording threads)
+/// stays far below the bound.
+pub const DEFAULT_MAX_RINGS: usize = 256;
+
+/// Mixer for the generation-keyed slot checksum.
+const CHECK_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One ring slot: a seqlock word plus the span payload, each field its
+/// own atomic so no read can ever tear inside a field.
+struct Slot {
+    /// `0` = never written; `2h+1` = generation-`h` write in progress;
+    /// `2h+2` = generation-`h` record published. Strictly increasing
+    /// per slot (`h` advances by the ring capacity each wrap), so a
+    /// reader can never confuse two generations (no ABA).
+    seq: AtomicU64,
+    trace: AtomicU64,
+    start: AtomicU64,
+    dur: AtomicU64,
+    /// Packed `stage | model << 8 | track << 40`.
+    meta: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    c: AtomicU64,
+    /// XOR of all payload fields and the generation seed; lets the
+    /// reader reject a snapshot that mixed generations even in the
+    /// theoretical window the seqlock re-check cannot order.
+    check: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            start: AtomicU64::new(0),
+            dur: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+            c: AtomicU64::new(0),
+            check: AtomicU64::new(0),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn checksum(
+    generation: u64,
+    trace: u64,
+    start: u64,
+    dur: u64,
+    meta: u64,
+    a: u64,
+    b: u64,
+    c: u64,
+) -> u64 {
+    generation.wrapping_mul(CHECK_SEED) ^ trace ^ start ^ dur ^ meta ^ a ^ b ^ c
+}
+
+/// A single-writer span ring. The registering thread is the only
+/// intended writer ([`SpanRing::record`] takes `&self` and is safe to
+/// misuse — concurrent writers can only cause records to be dropped by
+/// the checksum, never torn — but one writer per ring is the
+/// performance contract). Any thread may snapshot concurrently.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Records ever written (monotone); `head % cap` is the next slot.
+    head: AtomicU64,
+    /// Track id (= registration index) stamped into every record.
+    track: u32,
+    /// Name of the registering thread, for trace thread labels.
+    thread: String,
+}
+
+impl SpanRing {
+    fn new(cap: usize, track: u32, thread: String) -> SpanRing {
+        let slots: Vec<Slot> = (0..cap.max(1)).map(|_| Slot::new()).collect();
+        SpanRing { slots: slots.into_boxed_slice(), head: AtomicU64::new(0), track, thread }
+    }
+
+    /// This ring's track id (exported as the trace thread id).
+    pub fn track(&self) -> u32 {
+        self.track
+    }
+
+    /// Name of the thread that registered this ring.
+    pub fn thread_name(&self) -> &str {
+        &self.thread
+    }
+
+    /// Slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one span (intended single-writer; see type docs). The
+    /// record's `track` field is overwritten with this ring's track.
+    pub fn record(&self, r: &SpanRecord) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % self.slots.len() as u64) as usize];
+        let meta = (r.stage as u64)
+            | (u64::from(r.model) << 8)
+            | (u64::from(self.track) << 40);
+        slot.seq.store(2 * h + 1, Ordering::Release); // write in progress
+        slot.trace.store(r.trace_id, Ordering::Relaxed);
+        slot.start.store(r.start_us, Ordering::Relaxed);
+        slot.dur.store(r.dur_us, Ordering::Relaxed);
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.a.store(r.arg_a, Ordering::Relaxed);
+        slot.b.store(r.arg_b, Ordering::Relaxed);
+        slot.c.store(r.arg_c, Ordering::Relaxed);
+        slot.check.store(
+            checksum(h, r.trace_id, r.start_us, r.dur_us, meta, r.arg_a, r.arg_b, r.arg_c),
+            Ordering::Relaxed,
+        );
+        slot.seq.store(2 * h + 2, Ordering::Release); // published
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out every consistently-published record (any order). Safe
+    /// to call while the owner keeps recording: a slot being rewritten
+    /// is simply skipped this pass.
+    pub fn drain_into(&self, out: &mut Vec<SpanRecord>) {
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue; // never written, or mid-write
+            }
+            let trace = slot.trace.load(Ordering::Relaxed);
+            let start = slot.start.load(Ordering::Relaxed);
+            let dur = slot.dur.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let a = slot.a.load(Ordering::Relaxed);
+            let b = slot.b.load(Ordering::Relaxed);
+            let c = slot.c.load(Ordering::Relaxed);
+            let check = slot.check.load(Ordering::Relaxed);
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // overwritten while reading
+            }
+            // generation-keyed integrity check: rejects mixed reads the
+            // seq re-check alone cannot rule out
+            let generation = s1 / 2 - 1;
+            if check != checksum(generation, trace, start, dur, meta, a, b, c) {
+                continue;
+            }
+            let Some(stage) = Stage::from_u8((meta & 0xFF) as u8) else { continue };
+            out.push(SpanRecord {
+                trace_id: trace,
+                stage,
+                start_us: start,
+                dur_us: dur,
+                track: ((meta >> 40) & 0xFF_FFFF) as u32,
+                model: ((meta >> 8) & 0xFFFF_FFFF) as u32,
+                arg_a: a,
+                arg_b: b,
+                arg_c: c,
+            });
+        }
+    }
+}
+
+/// A set of per-thread span rings plus the label intern table and the
+/// shared time epoch. One process-global instance backs the serving
+/// stack ([`Recorder::global`]); tests build private ones.
+pub struct Recorder {
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    /// Interned model labels; id `i+1` → `labels[i]` (`0` = none).
+    labels: Mutex<Vec<String>>,
+    epoch: Instant,
+    cap: usize,
+    max_rings: usize,
+    dropped: AtomicU64,
+}
+
+impl Recorder {
+    /// New recorder with `cap` slots per ring and the default ring cap.
+    pub fn new(cap: usize) -> Recorder {
+        Recorder::with_limits(cap, DEFAULT_MAX_RINGS)
+    }
+
+    /// New recorder with explicit per-ring and ring-count bounds.
+    pub fn with_limits(cap: usize, max_rings: usize) -> Recorder {
+        Recorder {
+            rings: Mutex::new(Vec::new()),
+            labels: Mutex::new(Vec::new()),
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            max_rings: max_rings.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-global recorder backing the serving stack.
+    pub fn global() -> &'static Recorder {
+        static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+        GLOBAL.get_or_init(|| Recorder::new(DEFAULT_RING_CAP))
+    }
+
+    /// Register a new ring for the calling thread. Returns `None` (and
+    /// counts a drop) once the ring cap is reached — the memory bound
+    /// wins over completeness for pathological thread churn.
+    pub fn register(&self, thread_name: &str) -> Option<Arc<SpanRing>> {
+        let mut rings = self.rings.lock().expect("ring registry poisoned");
+        if rings.len() >= self.max_rings {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let ring =
+            Arc::new(SpanRing::new(self.cap, rings.len() as u32, thread_name.to_string()));
+        rings.push(ring.clone());
+        Some(ring)
+    }
+
+    /// Microseconds elapsed since this recorder's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Microseconds from the epoch to `t` (0 if `t` predates it).
+    pub fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Intern a model label, returning its stable nonzero id.
+    pub fn intern_label(&self, label: &str) -> u32 {
+        let mut labels = self.labels.lock().expect("label table poisoned");
+        if let Some(i) = labels.iter().position(|l| l == label) {
+            return (i + 1) as u32;
+        }
+        labels.push(label.to_string());
+        labels.len() as u32
+    }
+
+    /// Resolve an interned label id (empty string for 0 / unknown).
+    pub fn label(&self, id: u32) -> String {
+        if id == 0 {
+            return String::new();
+        }
+        let labels = self.labels.lock().expect("label table poisoned");
+        labels.get((id - 1) as usize).cloned().unwrap_or_default()
+    }
+
+    /// Registered (track, thread-name) pairs, in track order.
+    pub fn tracks(&self) -> Vec<(u32, String)> {
+        let rings = self.rings.lock().expect("ring registry poisoned");
+        rings.iter().map(|r| (r.track(), r.thread_name().to_string())).collect()
+    }
+
+    /// Threads that wanted to record but were refused by the ring cap.
+    pub fn dropped_threads(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Number of registered rings.
+    pub fn ring_count(&self) -> usize {
+        self.rings.lock().expect("ring registry poisoned").len()
+    }
+
+    /// Copy out every consistent record across all rings, sorted by
+    /// `(start_us, trace_id, stage)` so exports are deterministic for
+    /// a quiesced recorder.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let rings: Vec<Arc<SpanRing>> =
+            self.rings.lock().expect("ring registry poisoned").clone();
+        let mut out = Vec::new();
+        for ring in &rings {
+            ring.drain_into(&mut out);
+        }
+        out.sort_by_key(|r| (r.start_us, r.trace_id, r.stage as u8));
+        out
+    }
+}

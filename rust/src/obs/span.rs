@@ -1,0 +1,133 @@
+//! Span model: pipeline stages, per-request trace context, and the
+//! fixed-size span record the ring buffer stores.
+//!
+//! A *span* is one timed interval of one request's journey through the
+//! serving stack. Records are plain-old-data (`Copy`, nine 64-bit-or-
+//! smaller fields) so the recorder can publish them field-by-field
+//! through atomics without ever taking a lock on the hot path.
+
+/// One stage of the request lifecycle. The full chain for an admitted
+/// classify request is
+/// `Accept → Parse → Admit → Queue → BatchForm → Compute → Serialize →
+/// Write`, with `Shard` spans nested inside `Compute` (one per shard of
+/// the batch's [`crate::nn::parallel::ShardPlan`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    /// Reading the request off the wire (socket bytes → parsed HTTP).
+    Accept = 0,
+    /// Parsing + validating the JSON body into pixel samples.
+    Parse = 1,
+    /// Admission: model resolution plus the bounded-queue `try_send`.
+    Admit = 2,
+    /// Waiting in the per-model server queue for the batcher.
+    Queue = 3,
+    /// Batch formation: from joining an open batch to its dispatch.
+    BatchForm = 4,
+    /// Engine compute for the whole batch this request rode in.
+    Compute = 5,
+    /// One shard of the batch compute (nested inside `Compute`).
+    Shard = 6,
+    /// Serializing the response body.
+    Serialize = 7,
+    /// Writing the response bytes to the socket.
+    Write = 8,
+}
+
+impl Stage {
+    /// Every stage, in lifecycle order.
+    pub const ALL: [Stage; 9] = [
+        Stage::Accept,
+        Stage::Parse,
+        Stage::Admit,
+        Stage::Queue,
+        Stage::BatchForm,
+        Stage::Compute,
+        Stage::Shard,
+        Stage::Serialize,
+        Stage::Write,
+    ];
+
+    /// Stable lowercase name (used in trace events and metric labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Parse => "parse",
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::BatchForm => "batch_form",
+            Stage::Compute => "compute",
+            Stage::Shard => "shard",
+            Stage::Serialize => "serialize",
+            Stage::Write => "write",
+        }
+    }
+
+    /// Decode the `repr(u8)` discriminant (ring slots store it packed).
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|s| *s as u8 == v)
+    }
+
+    /// Index into the per-stage latency histograms
+    /// ([`crate::coordinator::Metrics`] keeps one per *metered* stage:
+    /// parse, queue, batch-form, compute, write). Stages that are only
+    /// traced, never histogrammed, return `None`.
+    pub fn hist_index(self) -> Option<usize> {
+        match self {
+            Stage::Parse => Some(0),
+            Stage::Queue => Some(1),
+            Stage::BatchForm => Some(2),
+            Stage::Compute => Some(3),
+            Stage::Write => Some(4),
+            _ => None,
+        }
+    }
+
+    /// The metered stages, ordered by [`Stage::hist_index`].
+    pub const METERED: [Stage; 5] =
+        [Stage::Parse, Stage::Queue, Stage::BatchForm, Stage::Compute, Stage::Write];
+}
+
+/// Per-request trace context, allocated at the front door and carried
+/// (by value — it is two words) through the whole lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Process-unique request id (`0` = tracing was off at admission).
+    pub id: u64,
+    /// Whether this request's spans are recorded (1-in-N sampling).
+    pub sampled: bool,
+}
+
+impl TraceCtx {
+    /// The "tracing off" context: id 0, nothing recorded.
+    pub const OFF: TraceCtx = TraceCtx { id: 0, sampled: false };
+}
+
+/// One recorded span. All timestamps are microseconds relative to the
+/// owning [`super::Recorder`]'s epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Request id this span belongs to.
+    pub trace_id: u64,
+    /// Which lifecycle stage the span measures.
+    pub stage: Stage,
+    /// Start, µs since the recorder epoch.
+    pub start_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Recorder track (= ring index) the span was written on; exported
+    /// as the trace's thread id.
+    pub track: u32,
+    /// Interned model-label id (`0` = no model association).
+    pub model: u32,
+    /// Stage-specific argument A. Accept/Serialize/Write: body bytes;
+    /// Queue: queue depth at dispatch; BatchForm/Compute: batch size;
+    /// Shard: shard index.
+    pub arg_a: u64,
+    /// Stage-specific argument B. Compute: predicted add-only cycles
+    /// per inference (hw cost model); Shard: rows in the shard.
+    pub arg_b: u64,
+    /// Stage-specific argument C. Compute: predicted dot products per
+    /// inference; Shard: planner work estimate for the shard.
+    pub arg_c: u64,
+}

@@ -195,6 +195,20 @@ pub fn classes_in(body: &str) -> Vec<usize> {
         .collect()
 }
 
+/// Pull the `"request_id":N` out of a classify response body, or 0 when
+/// absent (tracing disabled on the server).
+pub fn request_id_in(body: &str) -> u64 {
+    body.find("\"request_id\":")
+        .map(|i| {
+            let digits: String = body[i + "\"request_id\":".len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            digits.parse().expect("digits after \"request_id\":")
+        })
+        .unwrap_or(0)
+}
+
 /// A connected loopback socket pair (client end, server end) — for
 /// tests that drive [`crate::coordinator::net::HttpConn`] directly.
 pub fn loopback_pair() -> (TcpStream, TcpStream) {
@@ -218,6 +232,8 @@ mod tests {
             vec![3, 11]
         );
         assert!(classes_in("{}").is_empty());
+        assert_eq!(request_id_in("{\"request_id\":42,\"class\":1}"), 42);
+        assert_eq!(request_id_in("{\"class\":1}"), 0);
     }
 
     #[test]

@@ -22,6 +22,7 @@ fn base_cfg(seed: u64) -> LoadConfig {
         http: HttpConfig::default(),
         read_timeout: Duration::from_secs(10),
         model_seed: 42,
+        trace: false,
     }
 }
 
@@ -73,7 +74,9 @@ fn faulted_http_run_answers_everything_and_verifies_bitwise() {
     assert_eq!(http.hist.count(), http.ok);
     // server-side accounting is visible in the report
     assert!(http.http_admitted > 0);
-    assert_eq!(http.model_stats.len(), 2);
+    // two model servers plus the "http" front-end pseudo-entry
+    assert_eq!(http.model_stats.len(), 3);
+    assert!(http.model_stats.iter().any(|m| m.name == "http"));
     // JSON output is well-formed for the CI artifact
     let json = report.to_json();
     assert!(pvqnet::coordinator::net::Json::parse(json.trim()).is_ok(), "{json}");
@@ -119,6 +122,42 @@ fn open_loop_poisson_run_paces_and_verifies() {
     // 48 arrivals at 400rps ≈ 120ms of pacing: wall time reflects it
     assert!(http.wall_s >= 0.08, "open loop did not pace: {}s", http.wall_s);
     assert!(report.passed());
+}
+
+#[test]
+fn traced_run_has_complete_span_chains_under_faults_and_drain() {
+    // faults + shutdown-mid-flight + tracing: every answered 200 must
+    // still carry a complete accept→write span chain
+    let cfg = LoadConfig {
+        trace: true,
+        drain_after: Some(0.7),
+        drive_inproc: false,
+        ..base_cfg(61)
+    };
+    let report = run(&cfg).unwrap();
+    let http = report.http.as_ref().unwrap();
+    assert_eq!(http.unanswered, 0);
+    assert_eq!(http.oracle_mismatches, 0, "{:?}", http.mismatch_examples);
+    let trace = http.trace.as_ref().expect("traced run must carry a TraceCheck");
+    assert!(trace.checked > 0, "no request ids reached the clients — tracing never engaged");
+    assert_eq!(
+        trace.complete, trace.checked,
+        "incomplete span chains: {:?}",
+        trace.missing_examples
+    );
+    assert!(report.passed());
+    // the run's trace exports as valid Chrome trace-event JSON
+    let doc = pvqnet::coordinator::net::Json::parse(&pvqnet::obs::export_global())
+        .expect("chrome trace must parse");
+    assert!(doc.get("traceEvents").is_some());
+    // front-end stage percentiles ride along as the "http" pseudo-model
+    assert!(
+        http.model_stats.iter().any(|m| m.name == "http" && !m.stages.is_empty()),
+        "front-end parse/write stage stats missing: {:?}",
+        http.model_stats
+    );
+    // the oracle-checked 200s are in the trace gate's denominator
+    assert!(trace.checked >= http.ok, "{} checked < {} ok", trace.checked, http.ok);
 }
 
 #[test]

@@ -1,0 +1,203 @@
+//! Observability subsystem tests: concurrent ring-buffer integrity,
+//! Chrome trace-event exporter validity, and shard-span attachment.
+//!
+//! The ring test drains *while* writers are recording, so it exercises
+//! the seqlock + generation-checksum path that the overhead contract
+//! depends on: a snapshot may miss in-flight records but must never
+//! yield a torn one.
+
+use pvqnet::coordinator::net::Json;
+use pvqnet::nn::parallel::{for_each_shard, ShardPlan};
+use pvqnet::obs::{self, chrome_trace, Recorder, SpanRecord, Stage};
+
+/// Records for writer `i` are pure functions of `(i, n)`, so any mix of
+/// fields from two different writes breaks at least one equation.
+fn record_for(i: u64, n: u64) -> SpanRecord {
+    let t = ((i + 1) << 32) | n;
+    SpanRecord {
+        trace_id: t,
+        stage: Stage::ALL[(n % 9) as usize],
+        start_us: n * 3,
+        dur_us: n + 7,
+        track: 0, // overwritten by the ring
+        model: i as u32 + 1,
+        arg_a: t ^ 0xDEAD_BEEF,
+        arg_b: n * 11,
+        arg_c: t.wrapping_mul(3),
+    }
+}
+
+/// Every field of a drained record must satisfy the writer's invariant.
+fn assert_intact(r: &SpanRecord, max_tracks: u32, writes_per_thread: u64) {
+    let i = (r.trace_id >> 32) - 1;
+    let n = r.trace_id & 0xFFFF_FFFF;
+    assert!(n < writes_per_thread, "unknown write index {n}");
+    let want = record_for(i, n);
+    assert_eq!(r.stage, want.stage, "torn stage in {r:?}");
+    assert_eq!(r.start_us, want.start_us, "torn start in {r:?}");
+    assert_eq!(r.dur_us, want.dur_us, "torn dur in {r:?}");
+    assert_eq!(r.model, want.model, "torn model in {r:?}");
+    assert_eq!(r.arg_a, want.arg_a, "torn arg_a in {r:?}");
+    assert_eq!(r.arg_b, want.arg_b, "torn arg_b in {r:?}");
+    assert_eq!(r.arg_c, want.arg_c, "torn arg_c in {r:?}");
+    assert!(r.track < max_tracks, "track {} out of range", r.track);
+}
+
+#[test]
+fn ring_concurrent_writers_no_torn_records_bounded_memory() {
+    const CAP: usize = 64;
+    const MAX_RINGS: usize = 4;
+    const THREADS: u64 = 6;
+    const WRITES: u64 = 500;
+    let rec = Recorder::with_limits(CAP, MAX_RINGS);
+    std::thread::scope(|s| {
+        for i in 0..THREADS {
+            let rec = &rec;
+            s.spawn(move || {
+                // only MAX_RINGS threads win a ring; the rest must be
+                // refused (bounded memory beats completeness)
+                let Some(ring) = rec.register(&format!("writer-{i}")) else {
+                    return;
+                };
+                assert_eq!(ring.capacity(), CAP);
+                for n in 0..WRITES {
+                    ring.record(&record_for(i, n));
+                }
+            });
+        }
+        // drain while the writers hammer their rings: every record that
+        // comes out must be exactly one that went in
+        for _ in 0..50 {
+            for r in rec.snapshot() {
+                assert_intact(&r, MAX_RINGS as u32, WRITES);
+            }
+        }
+    });
+    // quiesced: still intact, and memory stayed bounded despite each
+    // writer producing WRITES >> CAP records (old spans overwritten)
+    let finals = rec.snapshot();
+    assert!(!finals.is_empty());
+    assert!(finals.len() <= MAX_RINGS * CAP, "{} records escaped the bound", finals.len());
+    for r in &finals {
+        assert_intact(r, MAX_RINGS as u32, WRITES);
+        // the final CAP writes of each surviving ring are the newest
+        assert!((r.trace_id & 0xFFFF_FFFF) >= WRITES - CAP as u64);
+    }
+    assert_eq!(rec.ring_count(), MAX_RINGS);
+    assert_eq!(rec.dropped_threads(), THREADS - MAX_RINGS as u64);
+}
+
+#[test]
+fn exporter_emits_valid_chrome_trace_json() {
+    let rec = Recorder::with_limits(32, 2);
+    let ring = rec.register("conn-0").expect("first ring");
+    let model = rec.intern_label("net_a");
+    let spans = [
+        (Stage::Accept, [96u64, 0, 0]),
+        (Stage::Parse, [0, 0, 0]),
+        (Stage::Queue, [3, 0, 0]),
+        (Stage::Compute, [4, 123_456, 789]),
+        (Stage::Shard, [1, 12, 40]),
+        (Stage::Write, [210, 0, 0]),
+    ];
+    for (k, (stage, args)) in spans.iter().enumerate() {
+        ring.record(&SpanRecord {
+            trace_id: 7,
+            stage: *stage,
+            start_us: 100 * k as u64,
+            dur_us: 50,
+            track: 0,
+            model,
+            arg_a: args[0],
+            arg_b: args[1],
+            arg_c: args[2],
+        });
+    }
+    let text = chrome_trace(&rec);
+    let doc = Json::parse(&text).expect("exporter output must be valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_array)
+        .expect("traceEvents array");
+    // one thread_name metadata event + one X event per span
+    let meta: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+        .collect();
+    assert_eq!(meta.len(), 1);
+    assert_eq!(
+        meta[0].get("args").and_then(|a| a.get("name")).and_then(Json::as_str),
+        Some("conn-0")
+    );
+    let xs: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .collect();
+    assert_eq!(xs.len(), spans.len());
+    for e in &xs {
+        assert_eq!(e.get("cat").and_then(Json::as_str), Some("pvqnet"));
+        for key in ["name", "ts", "dur", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "X event missing {key}: {}", e.render());
+        }
+        let args = e.get("args").expect("args object");
+        assert_eq!(args.get("request_id"), Some(&Json::Num(7.0)));
+        assert_eq!(args.get("model").and_then(Json::as_str), Some("net_a"));
+    }
+    // stage-specific args survive the round trip
+    let by_name = |n: &str| {
+        xs.iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some(n))
+            .unwrap_or_else(|| panic!("no {n} event"))
+            .get("args")
+            .unwrap()
+    };
+    assert_eq!(by_name("accept").get("bytes"), Some(&Json::Num(96.0)));
+    assert_eq!(by_name("queue").get("queue_depth"), Some(&Json::Num(3.0)));
+    let compute = by_name("compute");
+    assert_eq!(compute.get("batch"), Some(&Json::Num(4.0)));
+    assert_eq!(compute.get("predicted_cycles_addonly"), Some(&Json::Num(123_456.0)));
+    assert_eq!(compute.get("predicted_dots"), Some(&Json::Num(789.0)));
+    let shard = by_name("shard");
+    assert_eq!(shard.get("rows"), Some(&Json::Num(12.0)));
+    assert_eq!(shard.get("work_estimate"), Some(&Json::Num(40.0)));
+}
+
+#[test]
+fn shard_spans_attach_to_ambient_request_ctx() {
+    // global state: this is the only test in this binary that enables
+    // tracing, so no cross-test interference inside the process
+    obs::set_sampling(1);
+    obs::set_enabled(true);
+    let ctx = obs::request_ctx();
+    assert!(ctx.sampled && ctx.id != 0);
+    let plan = ShardPlan::balanced(&[10; 8], 2);
+    assert_eq!(plan.shard_count(), 2);
+    let mut out = vec![0i64; 8 * 2];
+    obs::with_ctx(ctx, || {
+        for_each_shard(&plan, &mut out, 2, |range, chunk| {
+            for (ri, row) in range.enumerate() {
+                chunk[ri * 2] = row as i64;
+            }
+        });
+    });
+    obs::set_enabled(false);
+    let shards: Vec<_> = Recorder::global()
+        .snapshot()
+        .into_iter()
+        .filter(|r| r.trace_id == ctx.id && r.stage == Stage::Shard)
+        .collect();
+    assert_eq!(shards.len(), plan.shard_count(), "one shard span per range");
+    for (i, range) in plan.ranges().iter().enumerate() {
+        let span = shards
+            .iter()
+            .find(|r| r.arg_a == i as u64)
+            .unwrap_or_else(|| panic!("no span for shard {i}"));
+        assert_eq!(span.arg_b, range.len() as u64);
+        assert_eq!(span.arg_c, plan.range_weights()[i]);
+    }
+    // kernel results are untouched by tracing
+    for (row, pair) in out.chunks(2).enumerate() {
+        assert_eq!(pair[0], row as i64);
+    }
+}
