@@ -1,17 +1,26 @@
 //! Benchmark & reproduction harness (criterion is unavailable offline —
-//! this is a self-contained harness with warmup + repeated timing).
+//! this is a self-contained harness on the measured protocol in
+//! `pvqnet::bench`: fixed warmup + K timed iterations, outlier-aware
+//! `mean ± ci95` summaries, platform-stamped JSON).
 //!
 //!     cargo bench                       # run everything
 //!     cargo bench -- table5             # run one experiment
 //!     cargo bench -- --list             # list experiments
 //!     cargo bench -- batch shard http --smoke   # CI smoke: 1 iteration each
+//!     cargo bench -- batch shard http loadgen --baseline-out candidate.json
 //!
-//! One target per paper table/figure (docs/ARCHITECTURE.md §4) plus microbenchmarks
-//! and ablations. Experiments that need trained artifacts print SKIP when
-//! `make artifacts` has not been run. `--smoke` caps every measurement at a
-//! single iteration so CI can execute the kernel benches (and still emit
-//! their `BENCH_*.json`) without paying for stable timings.
+//! One target per paper table/figure (docs/ARCHITECTURE.md §4) plus
+//! microbenchmarks and ablations. Experiments that need trained
+//! artifacts print SKIP when `make artifacts` has not been run.
+//! `--smoke` swaps the measured protocol for a single untimed-warmup
+//! iteration so CI can execute the kernel benches (and still emit their
+//! `BENCH_*.json`, with `iterations: 1` marking the numbers as
+//! statistically void) without paying for stable timings. Every metric
+//! recorded by the JSON-emitting experiments (batch, shard, http,
+//! loadgen, trace, artifact) also lands in the merged `--baseline-out`
+//! document, which `pvqnet bench-compare` consumes.
 
+use pvqnet::bench::{fmt_secs as fmt_t, BenchDoc, Measurement, Metric, Platform, Protocol};
 use pvqnet::compress::codec_survey;
 use pvqnet::coordinator::{Engine, Server, ServerConfig};
 use pvqnet::data::Dataset;
@@ -25,7 +34,7 @@ use pvqnet::pvq::{
 use pvqnet::quant::{distribution_table, evaluate, quantize};
 use pvqnet::testkit::Rng;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 // ------------------------------------------------------------------ harness
@@ -38,67 +47,101 @@ fn smoke() -> bool {
     SMOKE.load(std::sync::atomic::Ordering::Relaxed)
 }
 
-fn time_it<F: FnMut()>(name: &str, mut f: F) {
+/// Microbenchmark protocol for this invocation (single-shot under
+/// `--smoke`).
+fn proto() -> Protocol {
     if smoke() {
-        let t0 = Instant::now();
-        f();
-        println!("  {name:<44} smoke   {:>10}  (1 run)", fmt_t(t0.elapsed().as_secs_f64()));
-        return;
-    }
-    // warmup
-    f();
-    let mut samples = Vec::new();
-    let budget = Duration::from_millis(900);
-    let t0 = Instant::now();
-    while t0.elapsed() < budget || samples.len() < 5 {
-        let s = Instant::now();
-        f();
-        samples.push(s.elapsed().as_secs_f64());
-        if samples.len() >= 200 {
-            break;
-        }
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let med = samples[samples.len() / 2];
-    let lo = samples[samples.len() / 20];
-    let hi = samples[samples.len() * 19 / 20];
-    println!("  {name:<44} median {:>10}  [{} … {}]  ({} runs)", fmt_t(med), fmt_t(lo), fmt_t(hi), samples.len());
-}
-
-fn fmt_t(s: f64) -> String {
-    if s < 1e-6 {
-        format!("{:.1}ns", s * 1e9)
-    } else if s < 1e-3 {
-        format!("{:.1}µs", s * 1e6)
-    } else if s < 1.0 {
-        format!("{:.2}ms", s * 1e3)
+        Protocol::SMOKE
     } else {
-        format!("{:.2}s", s)
+        Protocol::MICRO
     }
 }
 
-/// Median samples/second of `f` (which processes `samples_per_call`);
-/// a single timed run under `--smoke`.
-fn throughput<F: FnMut()>(samples_per_call: usize, mut f: F) -> f64 {
+/// Macro-experiment protocol (whole sweeps / load runs per iteration).
+fn proto_macro() -> Protocol {
     if smoke() {
-        let t0 = Instant::now();
-        f();
-        return samples_per_call as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        Protocol::SMOKE
+    } else {
+        Protocol::MACRO
     }
-    f(); // warmup
-    let budget = Duration::from_millis(300);
-    let mut times = Vec::new();
-    let t0 = Instant::now();
-    while t0.elapsed() < budget || times.len() < 5 {
-        let s = Instant::now();
-        f();
-        times.push(s.elapsed().as_secs_f64());
-        if times.len() >= 100 {
-            break;
-        }
-    }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    samples_per_call as f64 / times[times.len() / 2]
+}
+
+/// Platform captured once per invocation; stamped into every JSON doc.
+fn platform() -> Platform {
+    static PLATFORM: OnceLock<Platform> = OnceLock::new();
+    PLATFORM.get_or_init(Platform::capture).clone()
+}
+
+/// Metrics recorded by the JSON experiments this invocation (also the
+/// source for the merged `--baseline-out` document).
+static RECORDED: Mutex<Vec<Metric>> = Mutex::new(Vec::new());
+
+/// Record one measured metric under `experiment`.
+fn record(experiment: &str, name: &str, unit: &str, hib: bool, gate: bool, m: &Measurement) {
+    RECORDED.lock().unwrap().push(Metric {
+        experiment: experiment.to_string(),
+        name: name.to_string(),
+        unit: unit.to_string(),
+        higher_is_better: hib,
+        gate,
+        mean: m.mean(),
+        ci95: m.ci95(),
+        std: m.summary.std,
+        iterations: m.n(),
+        warmup: m.warmup as u64,
+    });
+}
+
+/// Record a deterministic single-shot scalar (bits/weight and friends):
+/// `iterations: 1`, never gated — the comparison layer reports these as
+/// "insufficient" rather than pretending significance.
+fn record_scalar(experiment: &str, name: &str, unit: &str, hib: bool, value: f64) {
+    RECORDED.lock().unwrap().push(Metric {
+        experiment: experiment.to_string(),
+        name: name.to_string(),
+        unit: unit.to_string(),
+        higher_is_better: hib,
+        gate: false,
+        mean: value,
+        ci95: 0.0,
+        std: 0.0,
+        iterations: 1,
+        warmup: 0,
+    });
+}
+
+/// Write `BENCH_<experiment>.json` from the metrics recorded so far
+/// under that experiment name.
+fn write_doc(experiment: &str) {
+    let metrics: Vec<Metric> = RECORDED
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|m| m.experiment == experiment)
+        .cloned()
+        .collect();
+    let doc = BenchDoc {
+        experiment: Some(experiment.to_string()),
+        advisory: false,
+        note: None,
+        platform: Some(platform()),
+        metrics,
+    };
+    let path = format!("BENCH_{experiment}.json");
+    doc.save(Path::new(&path)).unwrap();
+    println!("  wrote {path}");
+}
+
+/// Time a closure under the current protocol and print `mean ± ci`.
+fn time_it<F: FnMut()>(name: &str, f: F) {
+    let m = proto().measure(f);
+    println!("  {name:<44} {}", m.format_time());
+}
+
+/// Samples/second of `f` (which processes `samples_per_call`) under the
+/// current protocol.
+fn throughput<F: FnMut()>(samples_per_call: usize, f: F) -> Measurement {
+    proto().measure_rate(samples_per_call as f64, f)
 }
 
 fn have_artifacts() -> bool {
@@ -370,9 +413,11 @@ fn bench_serve() {
 
 /// HTTP front-end latency sweep: concurrent keep-alive loopback clients
 /// hammer `POST /v1/classify` (synth net A through the registry's auto
-/// engine) at client counts {1, 4, 16}; per-request latency p50/p99 and
-/// aggregate req/s land in `BENCH_http.json`. Under `--smoke` each
-/// client sends a single request (CI bit-rot gate).
+/// engine) at client counts {1, 4, 16}. Each protocol iteration is one
+/// full wave (clients × per-client requests, fixed seeds); the
+/// per-iteration p50/p99/req/s samples condense into `mean ± ci`
+/// metrics in `BENCH_http.json` — `p99_us` is a gated hot path. Under
+/// `--smoke` each client sends a single request (CI bit-rot gate).
 fn bench_http() {
     use pvqnet::coordinator::{EngineKind, HttpConfig, HttpServer, ModelRegistry};
     use pvqnet::testkit::http::HttpTestClient;
@@ -389,46 +434,65 @@ fn bench_http() {
     let addr = server.addr();
     let input_len: usize = spec.input_shape.iter().product();
 
-    let mut entries: Vec<String> = Vec::new();
+    let p = proto_macro();
     for clients in [1usize, 4, 16] {
         let per_client = if smoke() { 1 } else { 50 };
-        let t0 = Instant::now();
-        let mut handles = Vec::new();
-        for ci in 0..clients {
-            handles.push(std::thread::spawn(move || {
-                let mut rng = Rng::new(900 + ci as u64);
-                let mut client = HttpTestClient::connect(addr).unwrap();
-                let mut lat_us = Vec::with_capacity(per_client);
-                for _ in 0..per_client {
-                    let pixels: Vec<String> =
-                        (0..input_len).map(|_| rng.below(256).to_string()).collect();
-                    let body = format!("{{\"pixels\":[{}]}}", pixels.join(","));
-                    let t = Instant::now();
-                    let resp = client.post_classify(&body, true);
-                    assert_eq!(resp.status, 200, "{}", resp.body);
-                    lat_us.push(t.elapsed().as_secs_f64() * 1e6);
-                }
-                lat_us
-            }));
+        // one wave = the full client sweep; returns (p50µs, p99µs, req/s)
+        let run_wave = || -> (f64, f64, f64) {
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for ci in 0..clients {
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(900 + ci as u64);
+                    let mut client = HttpTestClient::connect(addr).unwrap();
+                    let mut lat_us = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let pixels: Vec<String> =
+                            (0..input_len).map(|_| rng.below(256).to_string()).collect();
+                        let body = format!("{{\"pixels\":[{}]}}", pixels.join(","));
+                        let t = Instant::now();
+                        let resp = client.post_classify(&body, true);
+                        assert_eq!(resp.status, 200, "{}", resp.body);
+                        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                    }
+                    lat_us
+                }));
+            }
+            let mut lats: Vec<f64> =
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            let wall = t0.elapsed().as_secs_f64();
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = lats.len();
+            (lats[n / 2], lats[(n * 99 / 100).min(n - 1)], n as f64 / wall.max(1e-12))
+        };
+        for _ in 0..p.warmup {
+            run_wave();
         }
-        let mut lats: Vec<f64> =
-            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
-        let wall = t0.elapsed().as_secs_f64();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = lats.len();
-        let p50 = lats[n / 2];
-        let p99 = lats[(n * 99 / 100).min(n - 1)];
-        let rps = n as f64 / wall.max(1e-12);
+        let (mut p50s, mut p99s, mut rpss) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..p.iters.max(1) {
+            let (p50, p99, rps) = run_wave();
+            p50s.push(p50);
+            p99s.push(p99);
+            rpss.push(rps);
+        }
+        let m50 = Measurement::from_values(p50s, p.warmup);
+        let m99 = Measurement::from_values(p99s, p.warmup);
+        let mrps = Measurement::from_values(rpss, p.warmup);
         println!(
-            "  clients={clients:>3}: {rps:>8.0} req/s  p50 {p50:>8.0}µs  p99 {p99:>8.0}µs  ({n} requests)"
+            "  clients={clients:>3}: {}  p50 {:>8.0} ±{:.0}µs  p99 {:>8.0} ±{:.0}µs  \
+             ({} requests/wave)",
+            mrps.format_rate("req/s"),
+            m50.mean(),
+            m50.ci95(),
+            m99.mean(),
+            m99.ci95(),
+            clients * per_client
         );
-        entries.push(format!(
-            "{{\"clients\":{clients},\"requests\":{n},\"rps\":{rps:.1},\"p50_us\":{p50:.1},\"p99_us\":{p99:.1}}}"
-        ));
+        record("http", &format!("c{clients}/p50_us"), "us", false, false, &m50);
+        record("http", &format!("c{clients}/p99_us"), "us", false, true, &m99);
+        record("http", &format!("c{clients}/rps"), "req/s", true, false, &mrps);
     }
-    let json = format!("{{\"experiment\":\"http\",\"entries\":[{}]}}\n", entries.join(","));
-    std::fs::write("BENCH_http.json", json).unwrap();
-    println!("  wrote BENCH_http.json");
+    write_doc("http");
     println!("  [{}]", server.summary().trim_end().replace('\n', "; "));
     server.shutdown();
 }
@@ -438,14 +502,13 @@ fn bench_http() {
 /// the scalar loop walks the weight structure once per sample, the
 /// batch-fused `forward_block` path walks it once per micro-batch. Runs
 /// on synthetic weights (no `make artifacts` needed) and emits
-/// `BENCH_batch.json`.
+/// `BENCH_batch.json`; `batched_sps` is a gated hot path.
 fn bench_batch() {
     use pvqnet::nn::batch::ActivationBlock;
     use pvqnet::nn::tensor::ITensor;
     use pvqnet::nn::{BinaryNet, CompiledQuantModel, Model};
 
     let mut rng = Rng::new(77);
-    let mut entries: Vec<String> = Vec::new();
     for (net, engine_name) in [("a", "pvq-csr"), ("c", "binary")] {
         let spec = ModelSpec::by_name(net).unwrap();
         let model = Model::synth(&spec, 42);
@@ -496,21 +559,33 @@ fn bench_batch() {
                 _ => unreachable!("one engine per net"),
             };
             if b == 1 {
-                scalar_b1 = scalar_sps;
+                scalar_b1 = scalar_sps.mean();
             }
-            let speedup = batched_sps / scalar_b1.max(1e-9);
+            let speedup = batched_sps.mean() / scalar_b1.max(1e-9);
             println!(
-                "    B={b:>3}: scalar-loop {scalar_sps:>9.0} samp/s  batched {batched_sps:>9.0} samp/s  ({speedup:.2}x vs B=1 scalar)"
+                "    B={b:>3}: scalar-loop {}  batched {}  ({speedup:.2}x vs B=1 scalar)",
+                scalar_sps.format_rate("samp/s"),
+                batched_sps.format_rate("samp/s")
             );
-            entries.push(format!(
-                "{{\"engine\":\"{engine_name}\",\"net\":\"{}\",\"batch\":{b},\"scalar_sps\":{scalar_sps:.1},\"batched_sps\":{batched_sps:.1},\"speedup_vs_b1_scalar\":{speedup:.4}}}",
-                spec.name
-            ));
+            record(
+                "batch",
+                &format!("{engine_name}/b{b}/scalar_sps"),
+                "samples/s",
+                true,
+                false,
+                &scalar_sps,
+            );
+            record(
+                "batch",
+                &format!("{engine_name}/b{b}/batched_sps"),
+                "samples/s",
+                true,
+                true,
+                &batched_sps,
+            );
         }
     }
-    let json = format!("{{\"experiment\":\"batch\",\"entries\":[{}]}}\n", entries.join(","));
-    std::fs::write("BENCH_batch.json", json).unwrap();
-    println!("  wrote BENCH_batch.json");
+    write_doc("batch");
 }
 
 /// Sharded vs single-shard `forward_block`: shards ∈ {1, 2, 4, 8} ×
@@ -518,13 +593,13 @@ fn bench_batch() {
 /// popcount engine (synth net C). The shard planner splits each layer's
 /// output rows over scoped worker threads; results stay bitwise
 /// identical (tests/batch_equivalence.rs), so this sweep measures pure
-/// scaling. Runs on synthetic weights and emits `BENCH_shard.json`.
+/// scaling. Runs on synthetic weights and emits `BENCH_shard.json`;
+/// every `sps` point is a gated hot path.
 fn bench_shard() {
     use pvqnet::nn::batch::ActivationBlock;
     use pvqnet::nn::{BinaryNet, CompiledQuantModel, Model};
 
     let mut rng = Rng::new(78);
-    let mut entries: Vec<String> = Vec::new();
     println!(
         "  host parallelism: {}",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -548,7 +623,7 @@ fn bench_shard() {
             let views: Vec<&[u8]> = wave.iter().map(|s| s.as_slice()).collect();
             let mut base_sps = 0.0f64;
             for shards in [1usize, 2, 4, 8] {
-                let sps = if let Some(m) = csr.as_mut() {
+                let m = if let Some(m) = csr.as_mut() {
                     m.set_shards(shards);
                     let block = ActivationBlock::from_samples_u8(&views).unwrap();
                     let m = &*m;
@@ -564,29 +639,34 @@ fn bench_shard() {
                     })
                 };
                 if shards == 1 {
-                    base_sps = sps;
+                    base_sps = m.mean();
                 }
-                let speedup = sps / base_sps.max(1e-9);
+                let speedup = m.mean() / base_sps.max(1e-9);
                 println!(
-                    "    B={b:>3} shards={shards}: {sps:>9.0} samp/s  ({speedup:.2}x vs 1 shard)"
+                    "    B={b:>3} shards={shards}: {}  ({speedup:.2}x vs 1 shard)",
+                    m.format_rate("samp/s")
                 );
-                entries.push(format!(
-                    "{{\"engine\":\"{engine_name}\",\"net\":\"{}\",\"batch\":{b},\"shards\":{shards},\"sps\":{sps:.1},\"speedup_vs_1_shard\":{speedup:.4}}}",
-                    spec.name
-                ));
+                record(
+                    "shard",
+                    &format!("{engine_name}/b{b}/s{shards}/sps"),
+                    "samples/s",
+                    true,
+                    true,
+                    &m,
+                );
             }
         }
     }
-    let json = format!("{{\"experiment\":\"shard\",\"entries\":[{}]}}\n", entries.join(","));
-    std::fs::write("BENCH_shard.json", json).unwrap();
-    println!("  wrote BENCH_shard.json");
+    write_doc("shard");
 }
 
-/// Closed-loop `loadgen` harness run: seeded traffic + fault schedule
-/// against both the HTTP and in-process paths, every success checked
-/// by the bitwise oracle; emits `BENCH_load.json`. Under `--smoke` the
-/// request count shrinks to a few dozen (the CI loadtest job runs the
-/// CLI variant with drain-mid-flight on top).
+/// Closed-loop `loadgen` harness runs: seeded traffic + fault schedule
+/// against both the HTTP and in-process paths, every success checked by
+/// the bitwise oracle, repeated under the macro protocol so the p99s
+/// carry confidence intervals; emits `BENCH_loadgen.json` (both p99
+/// metrics are gated hot paths). Under `--smoke` a single small run
+/// (the CI loadtest job runs the CLI variant with drain-mid-flight on
+/// top, which writes the richer `BENCH_load.json` report).
 fn bench_loadgen() {
     use pvqnet::loadgen::{run, LoadConfig, TrafficShape};
 
@@ -597,38 +677,80 @@ fn bench_loadgen() {
         fault_every: 6,
         ..Default::default()
     };
+    let p = proto_macro();
     let t0 = Instant::now();
-    let report = run(&cfg).expect("loadgen run");
-    print!("{}", report.render().replace('\n', "\n  "));
-    std::fs::write("BENCH_load.json", report.to_json()).unwrap();
-    println!("\n  wrote BENCH_load.json ({} total)", fmt_t(t0.elapsed().as_secs_f64()));
-    assert!(report.passed(), "loadgen bench failed its own oracle/accounting gate");
+    let (mut http_p99, mut inproc_p99, mut http_rps) = (Vec::new(), Vec::new(), Vec::new());
+    let mut last = None;
+    for i in 0..p.warmup + p.iters.max(1) {
+        let report = run(&cfg).expect("loadgen run");
+        assert!(report.passed(), "loadgen bench failed its own oracle/accounting gate");
+        if i >= p.warmup {
+            if let Some(h) = &report.http {
+                http_p99.push(h.hist.quantile_us(0.99) as f64);
+                http_rps.push(h.throughput_rps());
+            }
+            if let Some(ip) = &report.inproc {
+                inproc_p99.push(ip.hist.quantile_us(0.99) as f64);
+            }
+        }
+        last = Some(report);
+    }
+    if let Some(report) = &last {
+        print!("{}", report.render().replace('\n', "\n  "));
+    }
+    let m_http = Measurement::from_values(http_p99, p.warmup);
+    let m_inproc = Measurement::from_values(inproc_p99, p.warmup);
+    let m_rps = Measurement::from_values(http_rps, p.warmup);
+    println!(
+        "\n  over {} run(s): http p99 {:.0} ±{:.0}µs · inproc p99 {:.0} ±{:.0}µs · \
+         http {:.0} ±{:.0} ok-req/s ({} total)",
+        m_http.n(),
+        m_http.mean(),
+        m_http.ci95(),
+        m_inproc.mean(),
+        m_inproc.ci95(),
+        m_rps.mean(),
+        m_rps.ci95(),
+        fmt_t(t0.elapsed().as_secs_f64())
+    );
+    record("loadgen", "http/p99_us", "us", false, true, &m_http);
+    record("loadgen", "inproc/p99_us", "us", false, true, &m_inproc);
+    record("loadgen", "http/rps", "req/s", true, false, &m_rps);
+    write_doc("loadgen");
 }
 
 /// Tracing overhead: the disabled-path hook cost (the overhead contract
 /// — one relaxed atomic load, see docs/ARCHITECTURE.md §Observability)
 /// and end-to-end batched classify throughput with tracing off vs on
-/// (sampling 1-in-1, every span recorded). Emits `BENCH_trace.json`.
+/// (sampling 1-in-1, every span recorded). Emits `BENCH_trace.json`
+/// (informational — not gated).
 fn bench_trace() {
     use pvqnet::coordinator::{EngineKind, ModelRegistry};
     use pvqnet::obs;
 
     // hook microbench: current_ctx() is the hook the hot path calls on
     // every request/shard; with tracing off it is one relaxed load
-    obs::set_enabled(false);
-    time_it("obs hook ×1000, tracing off", || {
-        for _ in 0..1000 {
-            std::hint::black_box(obs::current_ctx());
-        }
-    });
-    obs::set_enabled(true);
+    let hook = |label: &str, on: bool| {
+        obs::set_enabled(on);
+        let m = proto()
+            .measure(|| {
+                for _ in 0..1000 {
+                    std::hint::black_box(obs::current_ctx());
+                }
+            })
+            .scaled(1e9 / 1000.0);
+        obs::set_enabled(false);
+        println!(
+            "  obs hook, tracing {label:<3}: {:>7.2} ±{:.2} ns/call (n={})",
+            m.mean(),
+            m.ci95(),
+            m.n()
+        );
+        record("trace", &format!("hook_{label}_ns"), "ns/hook", false, false, &m);
+    };
+    hook("off", false);
     obs::set_sampling(1);
-    time_it("obs hook ×1000, tracing on", || {
-        for _ in 0..1000 {
-            std::hint::black_box(obs::current_ctx());
-        }
-    });
-    obs::set_enabled(false);
+    hook("on", true);
 
     // end-to-end: batched registry classify waves, tracing off vs on
     // (on = every request sampled, full span chain recorded)
@@ -639,38 +761,28 @@ fn bench_trace() {
     let wave: Vec<Vec<u8>> = (0..16)
         .map(|_| (0..input_len).map(|_| rng.below(256) as u8).collect())
         .collect();
-    let mut entries: Vec<String> = Vec::new();
     for (label, on) in [("off", false), ("on", true)] {
         let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
         let mut reg =
             ModelRegistry::new(ServerConfig { queue_cap: 8192, ..Default::default() });
         reg.register_quant("net_a", q.quant_model, EngineKind::Auto, None).unwrap();
         obs::set_enabled(on);
-        let waves = if smoke() { 2 } else { 60 };
-        let t0 = Instant::now();
-        for _ in 0..waves {
+        let m = throughput(wave.len(), || {
             let ctx = obs::request_ctx();
             obs::with_ctx(ctx, || reg.classify_batch(None, wave.clone())).unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
+        });
         obs::set_enabled(false);
         reg.shutdown();
-        let n = waves * wave.len();
-        let rps = n as f64 / wall.max(1e-12);
-        println!("  tracing {label:<3}: {rps:>9.0} samp/s  ({n} samples)");
-        entries.push(format!(
-            "{{\"tracing\":\"{label}\",\"samples\":{n},\"sps\":{rps:.1}}}"
-        ));
+        println!("  tracing {label:<3}: {}", m.format_rate("samp/s"));
+        record("trace", &format!("e2e_{label}_sps"), "samples/s", true, false, &m);
     }
-    let json =
-        format!("{{\"experiment\":\"trace\",\"entries\":[{}]}}\n", entries.join(","));
-    std::fs::write("BENCH_trace.json", json).unwrap();
-    println!("  wrote BENCH_trace.json");
+    write_doc("trace");
 }
 
-/// Artifact pack/unpack throughput + compressed bytes per weight on a
-/// net-A-shaped synthetic model; emits BENCH_artifact.json next to the
-/// other bench outputs.
+/// Artifact pack/unpack timing + compressed bytes per weight on a
+/// net-A-shaped synthetic model; emits `BENCH_artifact.json` (size
+/// metrics are deterministic single-shot scalars, timings carry CIs;
+/// not gated).
 fn bench_artifact() {
     use pvqnet::artifact::{read_model, write_model};
     use pvqnet::nn::Model;
@@ -680,23 +792,10 @@ fn bench_artifact() {
     let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
     let path = std::env::temp_dir().join("pvqnet_bench_artifact.pvqm");
 
-    let t0 = Instant::now();
     let manifest = write_model(&path, &q.quant_model).unwrap();
-    let pack_s = t0.elapsed().as_secs_f64();
-    let t1 = Instant::now();
     let (back, _) = read_model(&path).unwrap();
-    let unpack_s = t1.elapsed().as_secs_f64();
     assert_eq!(back.spec, q.quant_model.spec);
 
-    let n_weights: u64 = manifest.layers.iter().map(|l| l.n as u64).sum();
-    let mb = |s: f64| n_weights as f64 * 4.0 / s / 1e6;
-    println!(
-        "  pack   {} ({:.0} MB/s raw-equivalent)  unpack {} ({:.0} MB/s)",
-        fmt_t(pack_s),
-        mb(pack_s),
-        fmt_t(unpack_s),
-        mb(unpack_s)
-    );
     println!(
         "  {} params → {} bytes on disk, {:.3} bits/weight ({:.1}x vs f32)",
         manifest.total_params,
@@ -713,41 +812,26 @@ fn bench_artifact() {
             l.bits_per_weight()
         );
     }
-
-    let per_layer: Vec<String> = manifest
-        .layers
-        .iter()
-        .map(|l| {
-            format!(
-                "{{\"label\":\"{}\",\"codec\":\"{}\",\"n\":{},\"k\":{},\"compressed_bytes\":{},\"bits_per_weight\":{:.4}}}",
-                l.label,
-                l.codec.name(),
-                l.n,
-                l.k,
-                l.compressed_bytes,
-                l.bits_per_weight()
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\"experiment\":\"artifact\",\"net\":\"A\",\"pack_s\":{:.6},\"unpack_s\":{:.6},\"total_params\":{},\"compressed_bytes\":{},\"raw_bytes\":{},\"bits_per_weight\":{:.4},\"layers\":[{}]}}\n",
-        pack_s,
-        unpack_s,
-        manifest.total_params,
-        manifest.total_compressed(),
-        manifest.total_raw(),
-        manifest.bits_per_weight(),
-        per_layer.join(",")
+    record_scalar("artifact", "bits_per_weight", "bits", false, manifest.bits_per_weight());
+    record_scalar(
+        "artifact",
+        "compressed_bytes",
+        "bytes",
+        false,
+        manifest.total_compressed() as f64,
     );
-    std::fs::write("BENCH_artifact.json", json).unwrap();
-    println!("  wrote BENCH_artifact.json");
 
-    time_it("artifact pack (net A synth)", || {
+    let m_pack = proto().measure(|| {
         std::hint::black_box(write_model(&path, &q.quant_model).unwrap());
     });
-    time_it("artifact unpack (net A synth)", || {
+    println!("  {:<44} {}", "artifact pack (net A synth)", m_pack.format_time());
+    record("artifact", "pack_ms", "ms", false, false, &m_pack.clone().scaled(1e3));
+    let m_unpack = proto().measure(|| {
         std::hint::black_box(read_model(&path).unwrap());
     });
+    println!("  {:<44} {}", "artifact unpack (net A synth)", m_unpack.format_time());
+    record("artifact", "unpack_ms", "ms", false, false, &m_unpack.clone().scaled(1e3));
+    write_doc("artifact");
     let _ = std::fs::remove_file(&path);
 }
 
@@ -781,7 +865,17 @@ fn bench_pjrt() {
 // ------------------------------------------------------------------- main
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // --baseline-out FILE: merge every recorded metric into one
+    // platform-stamped document (the bench-compare candidate); strip
+    // the flag and its value before treating positionals as filters
+    let mut baseline_out: Option<String> = None;
+    if let Some(i) = args.iter().position(|a| a == "--baseline-out") {
+        if i + 1 < args.len() {
+            baseline_out = Some(args.remove(i + 1));
+        }
+        args.remove(i);
+    }
     let filter: Vec<&String> = args.iter().filter(|a| !a.starts_with('-')).collect();
     let experiments: Vec<(&str, fn())> = vec![
         ("table1", || bench_tables("a")),
@@ -823,10 +917,41 @@ fn main() {
         }
         return;
     }
+    let plat = platform();
+    println!("platform: {}", plat.render());
+    for w in &plat.warnings {
+        println!("  warning: {w}");
+    }
+    if smoke() {
+        println!("mode: --smoke (single iteration, numbers are statistically void)");
+    } else {
+        println!(
+            "protocol: micro {}w+{}i · macro {}w+{}i (Tukey-filtered, Student-t 95% CIs)",
+            Protocol::MICRO.warmup,
+            Protocol::MICRO.iters,
+            Protocol::MACRO.warmup,
+            Protocol::MACRO.iters
+        );
+    }
     for (name, f) in experiments {
         if filter.is_empty() || filter.iter().any(|f2| name.contains(f2.as_str())) {
             println!("\n=== {name} ===");
             f();
         }
+    }
+    if let Some(out) = baseline_out {
+        let metrics = RECORDED.lock().unwrap().clone();
+        let doc = BenchDoc {
+            experiment: None,
+            advisory: false,
+            note: Some(format!(
+                "recorded by `cargo bench -- --baseline-out` ({} metrics)",
+                metrics.len()
+            )),
+            platform: Some(platform()),
+            metrics,
+        };
+        doc.save(Path::new(&out)).unwrap();
+        println!("\nwrote merged baseline candidate {out}");
     }
 }

@@ -1,0 +1,509 @@
+//! Baseline snapshots and the regression verdict: persistent metric
+//! documents (`BENCH_<experiment>.json`, `bench/BASELINE.json`), and
+//! the comparison that turns *baseline vs current* into a per-metric
+//! verdict table with a statistically gated pass/fail.
+//!
+//! A **metric** is one measured scalar (`mean ± ci95` over the
+//! protocol's K iterations, plus the sample std and count that make
+//! Welch's t-test possible later). A **document** is a platform-stamped
+//! set of metrics. The **baseline** is a committed document; comparing
+//! current documents against it yields [`Verdict`]s:
+//!
+//! * `Improved` / `Regressed` — Welch-significant at 95% *and* the
+//!   relative effect exceeds the `min_effect_pct` floor (statistical
+//!   significance alone flags microscopic-but-real shifts; the floor
+//!   keeps the gate about regressions that matter).
+//! * `Unchanged` — comparable, but not significant or below the floor.
+//! * `PlatformSkip` — the platform fingerprints differ; numbers from
+//!   different machines are not comparable and are never gated.
+//! * `NoBaseline` — a new metric; recorded, not judged.
+//! * `Insufficient` — degenerate statistics (n < 2 or zero variance),
+//!   surfaced explicitly instead of as a `NaN` verdict.
+//!
+//! Only metrics marked `gate` (the hot paths: batch kernel throughput,
+//! shard scaling, HTTP p99, loadgen latency) can fail the gate, and an
+//! `advisory` baseline (committed before any reference numbers were
+//! recorded) disarms it entirely.
+
+use super::env::Platform;
+use super::stats::{welch_t_test, StatError, Summary};
+use crate::coordinator::net::Json;
+use std::path::Path;
+
+/// One persisted measurement: identity, direction, gate flag, and the
+/// summary statistics needed to compare it against another run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    /// Experiment the metric belongs to (`batch`, `shard`, `http`, …).
+    pub experiment: String,
+    /// Stable metric key within the experiment (baseline matching is
+    /// by `(experiment, name)` — renaming a metric orphans its
+    /// baseline entry).
+    pub name: String,
+    /// Human unit (`samples/s`, `us`, `ns/hook`, …).
+    pub unit: String,
+    /// Whether larger values are better (throughput) or worse
+    /// (latency).
+    pub higher_is_better: bool,
+    /// Hot-path marker: only gated metrics can fail `bench-compare`.
+    pub gate: bool,
+    /// Mean over the kept (outlier-filtered) iterations.
+    pub mean: f64,
+    /// Student-t 95% CI half-width (0 when `iterations < 2`).
+    pub ci95: f64,
+    /// Unbiased sample standard deviation (0 when `iterations < 2`).
+    pub std: f64,
+    /// Kept measured iterations.
+    pub iterations: u64,
+    /// Warmup invocations that preceded measurement.
+    pub warmup: u64,
+}
+
+impl Metric {
+    /// The summary view Welch's test consumes.
+    fn summary(&self) -> Summary {
+        Summary { n: self.iterations, mean: self.mean, std: self.std, min: self.mean, max: self.mean }
+    }
+
+    /// Serialize one metric.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("experiment".into(), Json::Str(self.experiment.clone())),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("unit".into(), Json::Str(self.unit.clone())),
+            ("higher_is_better".into(), Json::Bool(self.higher_is_better)),
+            ("gate".into(), Json::Bool(self.gate)),
+            ("mean".into(), Json::Num(self.mean)),
+            ("ci95".into(), Json::Num(self.ci95)),
+            ("std".into(), Json::Num(self.std)),
+            ("iterations".into(), Json::Num(self.iterations as f64)),
+            ("warmup".into(), Json::Num(self.warmup as f64)),
+        ])
+    }
+
+    /// Parse one metric; the error names the missing/mistyped field.
+    pub fn from_json(v: &Json) -> Result<Metric, String> {
+        let text = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("metric missing string field '{key}'"))
+        };
+        let num = |key: &str| match v.get(key) {
+            Some(Json::Num(n)) => Ok(*n),
+            _ => Err(format!("metric missing numeric field '{key}'")),
+        };
+        let flag = |key: &str| match v.get(key) {
+            Some(Json::Bool(b)) => Ok(*b),
+            _ => Err(format!("metric missing boolean field '{key}'")),
+        };
+        Ok(Metric {
+            experiment: text("experiment")?,
+            name: text("name")?,
+            unit: text("unit")?,
+            higher_is_better: flag("higher_is_better")?,
+            gate: flag("gate")?,
+            mean: num("mean")?,
+            ci95: num("ci95")?,
+            std: num("std")?,
+            iterations: num("iterations")?.max(0.0) as u64,
+            warmup: num("warmup")?.max(0.0) as u64,
+        })
+    }
+}
+
+/// A platform-stamped set of metrics: the shape of every
+/// `BENCH_<experiment>.json`, of the merged `--baseline-out` candidate,
+/// and of the committed `bench/BASELINE.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchDoc {
+    /// Experiment name for single-experiment docs; `None` for merged
+    /// baseline documents.
+    pub experiment: Option<String>,
+    /// An advisory baseline carries no recorded reference numbers yet
+    /// (or was explicitly marked informational): comparisons render,
+    /// the gate never fails. Recording a real baseline clears it.
+    pub advisory: bool,
+    /// Free-form provenance note.
+    pub note: Option<String>,
+    /// Machine that produced the numbers.
+    pub platform: Option<Platform>,
+    /// The measurements.
+    pub metrics: Vec<Metric>,
+}
+
+impl BenchDoc {
+    /// Serialize to a JSON document (newline-terminated).
+    pub fn to_json_string(&self) -> String {
+        let mut fields = vec![("version".to_string(), Json::Num(1.0))];
+        if let Some(e) = &self.experiment {
+            fields.push(("experiment".into(), Json::Str(e.clone())));
+        }
+        fields.push(("advisory".into(), Json::Bool(self.advisory)));
+        if let Some(n) = &self.note {
+            fields.push(("note".into(), Json::Str(n.clone())));
+        }
+        fields.push((
+            "platform".into(),
+            self.platform.as_ref().map(Platform::to_json).unwrap_or(Json::Null),
+        ));
+        fields
+            .push(("metrics".into(), Json::Arr(self.metrics.iter().map(Metric::to_json).collect())));
+        let mut text = Json::Obj(fields).render();
+        text.push('\n');
+        text
+    }
+
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<BenchDoc, String> {
+        let v = Json::parse(text.trim())?;
+        let metrics = match v.get("metrics") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .enumerate()
+                .map(|(i, m)| Metric::from_json(m).map_err(|e| format!("metrics[{i}]: {e}")))
+                .collect::<Result<Vec<_>, _>>()?,
+            Some(_) => return Err("'metrics' is not an array".into()),
+            None => Vec::new(),
+        };
+        Ok(BenchDoc {
+            experiment: v.get("experiment").and_then(Json::as_str).map(str::to_string),
+            advisory: matches!(v.get("advisory"), Some(Json::Bool(true))),
+            note: v.get("note").and_then(Json::as_str).map(str::to_string),
+            platform: v.get("platform").and_then(Platform::from_json),
+            metrics,
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<BenchDoc, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        BenchDoc::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_string())
+    }
+}
+
+/// Per-metric comparison outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Significant, in the good direction, above the effect floor.
+    Improved,
+    /// Comparable; no significant shift above the floor.
+    Unchanged,
+    /// Significant, in the bad direction, above the effect floor.
+    Regressed,
+    /// No baseline entry with this `(experiment, name)`.
+    NoBaseline,
+    /// Platform fingerprints differ — not comparable, never gated.
+    PlatformSkip,
+    /// Statistics too degenerate for a verdict (the payload says why).
+    Insufficient(StatError),
+}
+
+impl Verdict {
+    /// Fixed-width-friendly label for the verdict table.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Improved => "IMPROVED",
+            Verdict::Unchanged => "unchanged",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::NoBaseline => "new (no baseline)",
+            Verdict::PlatformSkip => "SKIP (platform)",
+            Verdict::Insufficient(StatError::TooFewSamples) => "insufficient (n<2)",
+            Verdict::Insufficient(StatError::ZeroVariance) => "insufficient (zero variance)",
+        }
+    }
+}
+
+/// One row of the verdict table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Experiment key.
+    pub experiment: String,
+    /// Metric key.
+    pub name: String,
+    /// Gate flag (from the *current* metric — the code being shipped
+    /// decides what its hot paths are).
+    pub gate: bool,
+    /// Baseline `(mean, ci95)`, when an entry exists.
+    pub base: Option<(f64, f64)>,
+    /// Current `(mean, ci95)`.
+    pub cur: (f64, f64),
+    /// Relative change in percent, when comparable.
+    pub delta_pct: Option<f64>,
+    /// Welch t statistic, when computed.
+    pub t: Option<f64>,
+    /// The outcome.
+    pub verdict: Verdict,
+}
+
+/// The full baseline-vs-current comparison.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Per-metric rows, in current-document order.
+    pub rows: Vec<Row>,
+    /// Whether the baseline was advisory (gate disarmed).
+    pub advisory: bool,
+    /// Effect-size floor (percent) used for Improved/Regressed calls.
+    pub min_effect_pct: f64,
+}
+
+/// Compare current documents against a baseline. `min_effect_pct` is
+/// the relative-change floor below which significant shifts still
+/// count as `Unchanged`.
+pub fn compare(baseline: &BenchDoc, currents: &[BenchDoc], min_effect_pct: f64) -> Comparison {
+    let base_fp = baseline.platform.as_ref().map(Platform::fingerprint);
+    let mut rows = Vec::new();
+    for doc in currents {
+        let cur_fp = doc.platform.as_ref().map(Platform::fingerprint);
+        for m in &doc.metrics {
+            let base_m = baseline
+                .metrics
+                .iter()
+                .find(|b| b.experiment == m.experiment && b.name == m.name);
+            let mut row = Row {
+                experiment: m.experiment.clone(),
+                name: m.name.clone(),
+                gate: m.gate,
+                base: base_m.map(|b| (b.mean, b.ci95)),
+                cur: (m.mean, m.ci95),
+                delta_pct: None,
+                t: None,
+                verdict: Verdict::NoBaseline,
+            };
+            if let Some(b) = base_m {
+                if base_fp.is_none() || base_fp != cur_fp {
+                    row.verdict = Verdict::PlatformSkip;
+                } else {
+                    if b.mean != 0.0 {
+                        row.delta_pct = Some((m.mean - b.mean) / b.mean.abs() * 100.0);
+                    }
+                    row.verdict = match welch_t_test(&b.summary(), &m.summary()) {
+                        Ok(w) => {
+                            row.t = Some(w.t);
+                            let delta = row.delta_pct.unwrap_or(0.0);
+                            let worse = if m.higher_is_better {
+                                m.mean < b.mean
+                            } else {
+                                m.mean > b.mean
+                            };
+                            if w.significant && delta.abs() >= min_effect_pct {
+                                if worse {
+                                    Verdict::Regressed
+                                } else {
+                                    Verdict::Improved
+                                }
+                            } else {
+                                Verdict::Unchanged
+                            }
+                        }
+                        // a deterministic metric that reproduced exactly
+                        // is unchanged, not a statistics failure
+                        Err(StatError::ZeroVariance) if m.mean == b.mean => Verdict::Unchanged,
+                        Err(e) => Verdict::Insufficient(e),
+                    };
+                }
+            }
+            rows.push(row);
+        }
+    }
+    Comparison { rows, advisory: baseline.advisory, min_effect_pct }
+}
+
+impl Comparison {
+    /// `true` when a non-advisory baseline shows a statistically
+    /// significant regression on a gated (hot-path) metric — the
+    /// condition under which `pvqnet bench-compare` exits nonzero.
+    pub fn gate_failed(&self) -> bool {
+        !self.advisory && self.gated_regressions() > 0
+    }
+
+    /// Gated rows whose verdict is `Regressed`.
+    pub fn gated_regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.gate && r.verdict == Verdict::Regressed).count()
+    }
+
+    fn count(&self, v: Verdict) -> usize {
+        self.rows.iter().filter(|r| r.verdict == v).count()
+    }
+
+    /// Render the verdict table plus the summary and gate lines.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "bench-compare: {} metric(s), min effect {:.1}%, two-sided Welch 95%\n",
+            self.rows.len(),
+            self.min_effect_pct
+        );
+        if self.advisory {
+            out.push_str(
+                "  baseline is ADVISORY (no recorded reference) — verdicts are informational, \
+                 the gate is disarmed\n",
+            );
+        }
+        out.push_str(&format!(
+            "  {:<10} {:<30} {:<4} {:>16} {:>16} {:>8} {:>8}  {}\n",
+            "experiment", "metric", "gate", "baseline", "current", "Δ%", "t", "verdict"
+        ));
+        for r in &self.rows {
+            let base_cell = match r.base {
+                Some((m, c)) => format!("{m:.1} ±{c:.1}"),
+                None => "-".to_string(),
+            };
+            let cur_cell = format!("{:.1} ±{:.1}", r.cur.0, r.cur.1);
+            let delta_cell =
+                r.delta_pct.map(|d| format!("{d:+.1}%")).unwrap_or_else(|| "-".to_string());
+            let t_cell = r.t.map(|t| format!("{t:.2}")).unwrap_or_else(|| "-".to_string());
+            out.push_str(&format!(
+                "  {:<10} {:<30} {:<4} {:>16} {:>16} {:>8} {:>8}  {}\n",
+                r.experiment,
+                r.name,
+                if r.gate { "yes" } else { "-" },
+                base_cell,
+                cur_cell,
+                delta_cell,
+                t_cell,
+                r.verdict.label()
+            ));
+        }
+        let insufficient = self
+            .rows
+            .iter()
+            .filter(|r| matches!(r.verdict, Verdict::Insufficient(_)))
+            .count();
+        out.push_str(&format!(
+            "  improved {} · unchanged {} · regressed {} · platform-skip {} · \
+             insufficient {} · new {}\n",
+            self.count(Verdict::Improved),
+            self.count(Verdict::Unchanged),
+            self.count(Verdict::Regressed),
+            self.count(Verdict::PlatformSkip),
+            insufficient,
+            self.count(Verdict::NoBaseline),
+        ));
+        if self.gate_failed() {
+            out.push_str(&format!(
+                "  GATE: FAIL — {} gated hot-path metric(s) statistically regressed\n",
+                self.gated_regressions()
+            ));
+        } else {
+            out.push_str("  GATE: ok\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metric(name: &str, mean: f64, std: f64, n: u64, hib: bool, gate: bool) -> Metric {
+        Metric {
+            experiment: "x".into(),
+            name: name.into(),
+            unit: "u".into(),
+            higher_is_better: hib,
+            gate,
+            mean,
+            ci95: 1.0,
+            std,
+            iterations: n,
+            warmup: 3,
+        }
+    }
+
+    fn doc(metrics: Vec<Metric>) -> BenchDoc {
+        BenchDoc {
+            experiment: None,
+            advisory: false,
+            note: None,
+            platform: Some(Platform::capture()),
+            metrics,
+        }
+    }
+
+    #[test]
+    fn doc_json_roundtrip() {
+        let d = doc(vec![metric("a/b", 123.5, 4.25, 20, true, true)]);
+        let back = BenchDoc::parse(&d.to_json_string()).unwrap();
+        assert_eq!(back, d);
+        // files round-trip too
+        let path = std::env::temp_dir().join("pvqnet_benchdoc_test.json");
+        d.save(&path).unwrap();
+        assert_eq!(BenchDoc::load(&path).unwrap(), d);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn gate_fires_only_on_gated_significant_regressions() {
+        let base = doc(vec![
+            metric("tput", 1000.0, 10.0, 20, true, true),
+            metric("aux", 1000.0, 10.0, 20, true, false),
+        ]);
+        // both drop 20% — clearly significant — but only `tput` gates
+        let cur = doc(vec![
+            metric("tput", 800.0, 10.0, 20, true, true),
+            metric("aux", 800.0, 10.0, 20, true, false),
+        ]);
+        let cmp = compare(&base, &[cur.clone()], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Regressed);
+        assert_eq!(cmp.rows[1].verdict, Verdict::Regressed);
+        assert_eq!(cmp.gated_regressions(), 1);
+        assert!(cmp.gate_failed());
+        // an advisory baseline disarms the gate but keeps the verdicts
+        let mut advisory = base.clone();
+        advisory.advisory = true;
+        let cmp = compare(&advisory, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Regressed);
+        assert!(!cmp.gate_failed());
+        assert!(cmp.render().contains("ADVISORY"));
+    }
+
+    #[test]
+    fn direction_and_effect_floor() {
+        let base = doc(vec![metric("p99", 800.0, 10.0, 20, false, true)]);
+        // latency *down* 12.5% is an improvement for lower-is-better
+        let cur = doc(vec![metric("p99", 700.0, 10.0, 20, false, true)]);
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Improved);
+        assert!(!cmp.gate_failed());
+        // a significant-but-tiny shift stays Unchanged under the floor
+        let cur = doc(vec![metric("p99", 808.0, 0.5, 20, false, true)]);
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Unchanged);
+    }
+
+    #[test]
+    fn degenerate_and_unknown_metrics_never_gate() {
+        let base = doc(vec![
+            metric("one_shot", 100.0, 0.0, 1, true, true),
+            metric("exact", 42.0, 0.0, 20, true, true),
+        ]);
+        let cur = doc(vec![
+            metric("one_shot", 50.0, 0.0, 1, true, true),
+            metric("exact", 42.0, 0.0, 20, true, true),
+            metric("brand_new", 7.0, 0.1, 20, true, true),
+        ]);
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Insufficient(StatError::TooFewSamples));
+        assert_eq!(cmp.rows[1].verdict, Verdict::Unchanged, "exact reproduction is unchanged");
+        assert_eq!(cmp.rows[2].verdict, Verdict::NoBaseline);
+        assert!(!cmp.gate_failed());
+    }
+
+    #[test]
+    fn platform_mismatch_skips() {
+        let base = doc(vec![metric("tput", 1000.0, 10.0, 20, true, true)]);
+        let mut cur = doc(vec![metric("tput", 500.0, 10.0, 20, true, true)]);
+        if let Some(p) = cur.platform.as_mut() {
+            p.arch = "wasm32".into();
+        }
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::PlatformSkip);
+        assert!(!cmp.gate_failed());
+    }
+}

@@ -1,0 +1,193 @@
+//! Platform metadata capture and environment sanity checks for bench
+//! runs: what hardware/toolchain produced a set of numbers, a coarse
+//! fingerprint for baseline matching, and warnings when the machine
+//! looks unfit for timing (frequency-scaling governor, background
+//! load).
+
+use crate::coordinator::net::Json;
+use crate::hw;
+
+/// Where a bench result came from. Persisted into every `BENCH_*.json`
+/// and into the baseline snapshot; the [`Platform::fingerprint`] is
+/// deliberately coarse (os/arch/SIMD class, not exact CPU model) so a
+/// baseline recorded on one CI runner generation still matches the
+/// next.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Platform {
+    /// Operating system (`std::env::consts::OS`).
+    pub os: String,
+    /// CPU architecture (`std::env::consts::ARCH`).
+    pub arch: String,
+    /// CPU model string from `/proc/cpuinfo` ("unknown" elsewhere).
+    pub cpu_model: String,
+    /// Logical core count.
+    pub cores: usize,
+    /// Runtime AVX2 availability (the popcount kernels dispatch on
+    /// this — see [`crate::hw::avx2_available`]).
+    pub avx2: bool,
+    /// `rustc --version` of the toolchain on `PATH` ("unknown" when
+    /// unavailable).
+    pub rustc: String,
+    /// Environment sanity warnings captured at bench time (governor
+    /// not `performance`, high 1-minute load). Informational: they
+    /// ride the JSON so noisy runs are explainable after the fact.
+    pub warnings: Vec<String>,
+}
+
+impl Platform {
+    /// Capture the current machine.
+    pub fn capture() -> Platform {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut warnings = Vec::new();
+        if let Some(gov) = read_first_line("/sys/devices/system/cpu/cpu0/cpufreq/scaling_governor")
+        {
+            if gov != "performance" {
+                warnings.push(format!(
+                    "cpu frequency governor is '{gov}' (not 'performance') — timings may drift"
+                ));
+            }
+        }
+        if let Some(line) = read_first_line("/proc/loadavg") {
+            if let Some(load1) = line.split_whitespace().next().and_then(|f| f.parse::<f64>().ok())
+            {
+                if load1 > cores as f64 * 0.5 {
+                    warnings.push(format!(
+                        "1-minute load {load1:.2} on {cores} cores — competing work may \
+                         inflate variance"
+                    ));
+                }
+            }
+        }
+        Platform {
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            cpu_model: cpu_model(),
+            cores,
+            avx2: hw::avx2_available(),
+            rustc: rustc_version(),
+            warnings,
+        }
+    }
+
+    /// Coarse identity used to decide whether two result sets are
+    /// comparable: `os/arch/avx2|noavx2`. Exact CPU model and rustc
+    /// stay out on purpose — they describe, but routine runner or
+    /// toolchain refreshes should not orphan the baseline.
+    pub fn fingerprint(&self) -> String {
+        format!("{}/{}/{}", self.os, self.arch, if self.avx2 { "avx2" } else { "noavx2" })
+    }
+
+    /// Serialize for `BENCH_*.json` / `BASELINE.json`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("os".into(), Json::Str(self.os.clone())),
+            ("arch".into(), Json::Str(self.arch.clone())),
+            ("cpu_model".into(), Json::Str(self.cpu_model.clone())),
+            ("cores".into(), Json::Num(self.cores as f64)),
+            ("avx2".into(), Json::Bool(self.avx2)),
+            ("rustc".into(), Json::Str(self.rustc.clone())),
+            ("fingerprint".into(), Json::Str(self.fingerprint())),
+            (
+                "warnings".into(),
+                Json::Arr(self.warnings.iter().map(|w| Json::Str(w.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Parse back from JSON (the `fingerprint` field is derived and
+    /// ignored on read). `None` when required fields are missing.
+    pub fn from_json(v: &Json) -> Option<Platform> {
+        let num = |key: &str| match v.get(key) {
+            Some(Json::Num(n)) => Some(*n),
+            _ => None,
+        };
+        let flag = |key: &str| match v.get(key) {
+            Some(Json::Bool(b)) => Some(*b),
+            _ => None,
+        };
+        Some(Platform {
+            os: v.get("os")?.as_str()?.to_string(),
+            arch: v.get("arch")?.as_str()?.to_string(),
+            cpu_model: v.get("cpu_model")?.as_str()?.to_string(),
+            cores: num("cores")? as usize,
+            avx2: flag("avx2")?,
+            rustc: v.get("rustc")?.as_str()?.to_string(),
+            warnings: v
+                .get("warnings")
+                .and_then(Json::as_array)
+                .map(|ws| ws.iter().filter_map(|w| w.as_str().map(str::to_string)).collect())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// One-line human rendering for bench headers.
+    pub fn render(&self) -> String {
+        format!(
+            "{} · {} cores · avx2={} · {} · {}",
+            self.cpu_model,
+            self.cores,
+            self.avx2,
+            self.rustc,
+            self.fingerprint()
+        )
+    }
+}
+
+fn read_first_line(path: &str) -> Option<String> {
+    std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| s.lines().next().map(|l| l.trim().to_string()))
+}
+
+fn cpu_model() -> String {
+    if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in info.lines() {
+            if let Some(rest) = line.strip_prefix("model name") {
+                if let Some((_, model)) = rest.split_once(':') {
+                    return model.trim().to_string();
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+fn rustc_version() -> String {
+    std::process::Command::new("rustc")
+        .arg("--version")
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_and_roundtrip() {
+        let p = Platform::capture();
+        assert!(!p.os.is_empty() && !p.arch.is_empty());
+        assert!(p.cores >= 1);
+        let fp = p.fingerprint();
+        assert!(fp.contains(&p.os) && fp.contains(&p.arch));
+        let back = Platform::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // parseable by the in-tree parser after a render round-trip
+        let reparsed = Json::parse(&p.to_json().render()).unwrap();
+        assert_eq!(Platform::from_json(&reparsed).unwrap(), p);
+    }
+
+    #[test]
+    fn fingerprint_tracks_simd_class() {
+        let mut p = Platform::capture();
+        p.avx2 = true;
+        assert!(p.fingerprint().ends_with("/avx2"));
+        p.avx2 = false;
+        assert!(p.fingerprint().ends_with("/noavx2"));
+    }
+}

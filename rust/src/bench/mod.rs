@@ -1,0 +1,32 @@
+//! Statistically rigorous bench harness (ROADMAP item: measured bench
+//! protocol + perf regression gate).
+//!
+//! Four layers, bottom-up:
+//!
+//! * [`stats`] — Welford moments, Student-t 95% CIs, Welch's
+//!   unequal-variance t-test, Tukey outlier fences. Deterministic,
+//!   golden-testable; degenerate inputs are explicit [`StatError`]s.
+//! * [`protocol`] — warmup + K measured iterations per experiment
+//!   ([`Protocol::MICRO`] / [`Protocol::MACRO`] / [`Protocol::SMOKE`]),
+//!   auto-calibrated inner repeats for fast closures, condensed into a
+//!   [`Measurement`] (`mean ± ci95`).
+//! * [`env`] — [`Platform`] capture (CPU model, cores, AVX2 class,
+//!   rustc, governor/load warnings) and the coarse fingerprint that
+//!   decides whether two result sets are comparable.
+//! * [`baseline`] — [`BenchDoc`] persistence (`BENCH_*.json`,
+//!   `bench/BASELINE.json`) and [`compare`]: the per-metric verdict
+//!   table behind `pvqnet bench-compare`, whose gated hot-path
+//!   regressions fail CI.
+//!
+//! `benches/bench_main.rs` drives the protocol and records metrics;
+//! this module owns everything that must be unit- and golden-testable.
+
+pub mod baseline;
+pub mod env;
+pub mod protocol;
+pub mod stats;
+
+pub use baseline::{compare, BenchDoc, Comparison, Metric, Row, Verdict};
+pub use env::Platform;
+pub use protocol::{fmt_secs, Measurement, Protocol};
+pub use stats::{t_crit_95, tukey_filter, welch_t_test, StatError, Summary, WelchResult, Welford};

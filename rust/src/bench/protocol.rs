@@ -1,0 +1,258 @@
+//! The measured bench protocol: per-experiment warmup invocations,
+//! then K timed iterations, condensed into an outlier-aware
+//! [`Measurement`] (`mean ± ci95`).
+//!
+//! The protocol replaces the old time-budgeted sampling ("run until
+//! 900 ms elapsed") with a *fixed* iteration count, so every run of an
+//! experiment produces the same sample size — which is what makes
+//! Welch's t-test against a baseline snapshot well-posed. Very fast
+//! closures are auto-calibrated to an inner repeat count so a single
+//! iteration is long enough (≥ [`MIN_ITER_SECS`]) for the OS timer to
+//! resolve; the reported value is still per-call.
+
+use super::stats::{tukey_filter, Summary};
+use std::time::Instant;
+
+/// Calibration floor: one timed iteration must take at least this long
+/// (inner repeats are added for faster closures).
+pub const MIN_ITER_SECS: f64 = 100e-6;
+
+/// Cap on calibrated inner repeats (guards against a degenerate
+/// zero-cost closure spinning forever).
+pub const MAX_REPS: u32 = 1 << 16;
+
+/// Warmup + measured-iteration counts for one experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Protocol {
+    /// Untimed invocations before measurement (cache/branch warmup,
+    /// lazy-init, page faults).
+    pub warmup: usize,
+    /// Timed iterations contributing samples.
+    pub iters: usize,
+}
+
+impl Protocol {
+    /// Microbenchmarks: kernels, codecs, single forwards.
+    pub const MICRO: Protocol = Protocol { warmup: 3, iters: 20 };
+    /// Macro experiments where one iteration is a whole sweep or load
+    /// run (HTTP client sweeps, loadgen runs).
+    pub const MACRO: Protocol = Protocol { warmup: 1, iters: 5 };
+    /// CI bit-rot smoke: no warmup, a single iteration. Summaries come
+    /// out with `n = 1`, so the comparison layer reports "insufficient
+    /// data" instead of pretending significance.
+    pub const SMOKE: Protocol = Protocol { warmup: 0, iters: 1 };
+
+    /// Run the protocol over a closure that produces one scalar sample
+    /// per invocation (any unit — seconds, req/s, µs). Warmup results
+    /// are discarded.
+    pub fn run<F: FnMut() -> f64>(&self, mut iter: F) -> Measurement {
+        for _ in 0..self.warmup {
+            iter();
+        }
+        let raw: Vec<f64> = (0..self.iters.max(1)).map(|_| iter()).collect();
+        Measurement::from_values(raw, self.warmup)
+    }
+
+    /// Time `f`, reporting **seconds per call**. Fast closures are
+    /// inner-batched (see [`MIN_ITER_SECS`]); the calibration call also
+    /// serves as the first warmup.
+    pub fn measure<F: FnMut()>(&self, mut f: F) -> Measurement {
+        let reps = self.calibrate(&mut f);
+        self.run(|| {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        })
+    }
+
+    /// Time `f`, reporting **units per second** where each call of `f`
+    /// processes `units_per_call` units (e.g. samples in a batch).
+    pub fn measure_rate<F: FnMut()>(&self, units_per_call: f64, mut f: F) -> Measurement {
+        let reps = self.calibrate(&mut f);
+        self.run(|| {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                f();
+            }
+            let per_call = t0.elapsed().as_secs_f64() / reps as f64;
+            units_per_call / per_call.max(1e-12)
+        })
+    }
+
+    /// Inner-repeat count so one timed iteration meets the floor; the
+    /// smoke protocol (no warmup, one iteration) skips calibration so
+    /// the closure truly runs once.
+    fn calibrate<F: FnMut()>(&self, f: &mut F) -> u32 {
+        if self.warmup == 0 && self.iters <= 1 {
+            return 1;
+        }
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= MIN_ITER_SECS {
+            1
+        } else {
+            ((MIN_ITER_SECS / dt.max(1e-9)).ceil() as u32).clamp(1, MAX_REPS)
+        }
+    }
+}
+
+/// One protocol run: the raw per-iteration samples, the outlier-aware
+/// summary over the kept samples, and the protocol bookkeeping that
+/// gets persisted next to every metric.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Raw per-iteration samples, in execution order.
+    pub raw: Vec<f64>,
+    /// Summary over the Tukey-filtered samples (equals the raw summary
+    /// when nothing was dropped). Zeroed when `raw` is empty.
+    pub summary: Summary,
+    /// Samples outside the Tukey fences, excluded from `summary`.
+    pub outliers_dropped: usize,
+    /// Warmup invocations that preceded measurement.
+    pub warmup: usize,
+}
+
+impl Measurement {
+    /// Build from pre-collected per-iteration values (used directly by
+    /// experiments whose iterations produce several scalars at once).
+    pub fn from_values(raw: Vec<f64>, warmup: usize) -> Measurement {
+        let (kept, outliers_dropped) = tukey_filter(&raw);
+        let summary = Summary::from_samples(&kept)
+            .unwrap_or(Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 });
+        Measurement { raw, summary, outliers_dropped, warmup }
+    }
+
+    /// Mean over kept samples.
+    pub fn mean(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// Student-t 95% CI half-width; 0.0 when fewer than two samples
+    /// (the stored `n` lets consumers tell the two cases apart).
+    pub fn ci95(&self) -> f64 {
+        self.summary.ci95_half().unwrap_or(0.0)
+    }
+
+    /// Kept-sample count.
+    pub fn n(&self) -> u64 {
+        self.summary.n
+    }
+
+    /// Scale every sample (and the summary) by a positive factor —
+    /// e.g. seconds → nanoseconds-per-op via `1e9 / ops_per_call`.
+    pub fn scaled(mut self, factor: f64) -> Measurement {
+        for v in &mut self.raw {
+            *v *= factor;
+        }
+        self.summary.mean *= factor;
+        self.summary.std *= factor.abs();
+        self.summary.min *= factor;
+        self.summary.max *= factor;
+        if factor < 0.0 {
+            std::mem::swap(&mut self.summary.min, &mut self.summary.max);
+        }
+        self
+    }
+
+    /// `mean ±ci (n=K)` with time units auto-picked from the mean.
+    pub fn format_time(&self) -> String {
+        format!(
+            "{:>10} ±{} (n={}{})",
+            fmt_secs(self.mean()),
+            fmt_secs(self.ci95()),
+            self.n(),
+            if self.outliers_dropped > 0 {
+                format!(", {} outliers", self.outliers_dropped)
+            } else {
+                String::new()
+            }
+        )
+    }
+
+    /// `mean ±ci unit (n=K)` for rate-style measurements.
+    pub fn format_rate(&self, unit: &str) -> String {
+        format!(
+            "{:>9.0} ±{:.0} {unit} (n={}{})",
+            self.mean(),
+            self.ci95(),
+            self.n(),
+            if self.outliers_dropped > 0 {
+                format!(", {} outliers", self.outliers_dropped)
+            } else {
+                String::new()
+            }
+        )
+    }
+}
+
+/// Human time formatting (ns/µs/ms/s by magnitude).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_exactly_once() {
+        let mut calls = 0;
+        let m = Protocol::SMOKE.measure(|| calls += 1);
+        assert_eq!(calls, 1);
+        assert_eq!(m.n(), 1);
+        assert_eq!(m.warmup, 0);
+        assert_eq!(m.ci95(), 0.0, "n=1 has no CI");
+    }
+
+    #[test]
+    fn measured_protocol_collects_k_samples() {
+        let mut calls = 0u64;
+        let p = Protocol { warmup: 2, iters: 6 };
+        let m = p.run(|| {
+            calls += 1;
+            calls as f64
+        });
+        // 2 warmup + 6 measured; samples are 3..=8
+        assert_eq!(calls, 8);
+        assert_eq!(m.raw, vec![3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(m.warmup, 2);
+        assert!((m.mean() - 5.5).abs() < 1e-12);
+        assert!(m.ci95() > 0.0);
+    }
+
+    #[test]
+    fn rate_is_inverse_time() {
+        let m = Protocol { warmup: 1, iters: 3 }.measure_rate(10.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        // 10 units / ~2ms ≈ 5000/s, generously bounded
+        assert!(m.mean() > 500.0 && m.mean() < 50_000.0, "{}", m.mean());
+    }
+
+    #[test]
+    fn scaled_rescales_summary_and_raw() {
+        let m = Measurement::from_values(vec![1.0, 2.0, 3.0], 0).scaled(1000.0);
+        assert_eq!(m.raw, vec![1000.0, 2000.0, 3000.0]);
+        assert!((m.mean() - 2000.0).abs() < 1e-9);
+        assert_eq!(m.summary.min, 1000.0);
+        assert_eq!(m.summary.max, 3000.0);
+    }
+
+    #[test]
+    fn from_values_survives_empty() {
+        let m = Measurement::from_values(Vec::new(), 0);
+        assert_eq!(m.n(), 0);
+        assert_eq!(m.mean(), 0.0);
+    }
+}

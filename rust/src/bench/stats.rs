@@ -1,0 +1,314 @@
+//! Statistics core for the measured bench protocol: online moments
+//! (Welford), Student-t confidence intervals, Welch's unequal-variance
+//! t-test for baseline comparison, and a Tukey-fence outlier filter.
+//!
+//! Everything here is exact-arithmetic-deterministic (no RNG, no
+//! clocks) so the comparison layer can be golden-tested byte-for-byte.
+//! Degenerate inputs (empty, n = 1, zero variance) surface as explicit
+//! [`StatError`] values — never as `NaN` verdicts.
+
+use std::fmt;
+
+/// Online mean/variance accumulator (Welford's algorithm): numerically
+/// stable single-pass moments, O(1) memory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    /// Fresh empty accumulator.
+    pub fn new() -> Welford {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Fold one sample in.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Samples seen so far.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Unbiased sample variance; `None` below two samples.
+    pub fn sample_variance(&self) -> Option<f64> {
+        if self.n < 2 {
+            None
+        } else {
+            Some((self.m2 / (self.n - 1) as f64).max(0.0))
+        }
+    }
+
+    /// Condense into a [`Summary`]; `None` when empty.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.n == 0 {
+            return None;
+        }
+        Some(Summary {
+            n: self.n,
+            mean: self.mean,
+            std: self.sample_variance().map(f64::sqrt).unwrap_or(0.0),
+            min: self.min,
+            max: self.max,
+        })
+    }
+}
+
+/// Five-number condensation of a sample set. `std` is the *sample*
+/// standard deviation (n−1 denominator); it is 0 when `n < 2`, and
+/// [`Summary::ci95_half`] reports that case as `None` rather than a
+/// fake zero-width interval.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    /// Sample count.
+    pub n: u64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Unbiased sample standard deviation (0 when `n < 2`).
+    pub std: f64,
+    /// Smallest sample.
+    pub min: f64,
+    /// Largest sample.
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize a slice; `None` when empty.
+    pub fn from_samples(xs: &[f64]) -> Option<Summary> {
+        let mut w = Welford::new();
+        for &x in xs {
+            w.push(x);
+        }
+        w.summary()
+    }
+
+    /// Standard error of the mean; `None` below two samples.
+    pub fn sem(&self) -> Option<f64> {
+        if self.n < 2 {
+            None
+        } else {
+            Some(self.std / (self.n as f64).sqrt())
+        }
+    }
+
+    /// Half-width of the Student-t 95% confidence interval for the
+    /// mean (`mean ± ci95_half`); `None` below two samples.
+    pub fn ci95_half(&self) -> Option<f64> {
+        self.sem().map(|se| t_crit_95((self.n - 1) as f64) * se)
+    }
+}
+
+/// Two-sided 95% Student-t critical values (the 0.975 quantile) for
+/// df 1–30, then 40/60/120; beyond that the normal limit 1.960.
+const T_TABLE: [(f64, f64); 34] = [
+    (1.0, 12.706),
+    (2.0, 4.303),
+    (3.0, 3.182),
+    (4.0, 2.776),
+    (5.0, 2.571),
+    (6.0, 2.447),
+    (7.0, 2.365),
+    (8.0, 2.306),
+    (9.0, 2.262),
+    (10.0, 2.228),
+    (11.0, 2.201),
+    (12.0, 2.179),
+    (13.0, 2.160),
+    (14.0, 2.145),
+    (15.0, 2.131),
+    (16.0, 2.120),
+    (17.0, 2.110),
+    (18.0, 2.101),
+    (19.0, 2.093),
+    (20.0, 2.086),
+    (21.0, 2.080),
+    (22.0, 2.074),
+    (23.0, 2.069),
+    (24.0, 2.064),
+    (25.0, 2.060),
+    (26.0, 2.056),
+    (27.0, 2.052),
+    (28.0, 2.048),
+    (29.0, 2.045),
+    (30.0, 2.042),
+    (40.0, 2.021),
+    (60.0, 2.000),
+    (120.0, 1.980),
+    (f64::INFINITY, 1.960),
+];
+
+/// Two-sided 95% Student-t critical value for (possibly fractional,
+/// per Welch–Satterthwaite) degrees of freedom, linearly interpolated
+/// between tabulated rows; df below 1 clamps to the df = 1 value.
+pub fn t_crit_95(df: f64) -> f64 {
+    if !df.is_finite() {
+        return 1.960;
+    }
+    if df <= T_TABLE[0].0 {
+        return T_TABLE[0].1;
+    }
+    for pair in T_TABLE.windows(2) {
+        let (d0, t0) = pair[0];
+        let (d1, t1) = pair[1];
+        if df <= d1 {
+            if !d1.is_finite() {
+                // beyond 120: decay toward the normal limit
+                return t1.max(t0 - (t0 - t1) * (df - d0) / d0);
+            }
+            return t0 + (t1 - t0) * (df - d0) / (d1 - d0);
+        }
+    }
+    1.960
+}
+
+/// Why a statistical verdict could not be computed. These are explicit
+/// outcomes, not errors to hide: the comparison layer renders them as
+/// "insufficient data" rows and never gates on them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatError {
+    /// One side has fewer than two samples — no variance estimate.
+    TooFewSamples,
+    /// Both sides have zero variance — the t statistic is undefined.
+    ZeroVariance,
+}
+
+impl fmt::Display for StatError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StatError::TooFewSamples => write!(f, "insufficient data (fewer than 2 samples)"),
+            StatError::ZeroVariance => write!(f, "insufficient data (zero variance)"),
+        }
+    }
+}
+
+/// Outcome of a Welch test: the statistic, its Welch–Satterthwaite
+/// degrees of freedom, the critical value used, and the two-sided 95%
+/// significance call.
+#[derive(Clone, Copy, Debug)]
+pub struct WelchResult {
+    /// t statistic, signed as `(b.mean − a.mean) / se`.
+    pub t: f64,
+    /// Welch–Satterthwaite effective degrees of freedom.
+    pub df: f64,
+    /// Two-sided 95% critical value at `df`.
+    pub t_crit: f64,
+    /// `|t| > t_crit`.
+    pub significant: bool,
+}
+
+/// Welch's unequal-variance t-test between two summaries (`a` is the
+/// baseline, `b` the candidate; `t > 0` means `b`'s mean is larger).
+///
+/// Degenerate inputs return [`StatError`] instead of `NaN`: either
+/// side below two samples, or zero variance on both sides.
+pub fn welch_t_test(a: &Summary, b: &Summary) -> Result<WelchResult, StatError> {
+    if a.n < 2 || b.n < 2 {
+        return Err(StatError::TooFewSamples);
+    }
+    let va = a.std * a.std / a.n as f64;
+    let vb = b.std * b.std / b.n as f64;
+    let se2 = va + vb;
+    if se2 <= 0.0 {
+        return Err(StatError::ZeroVariance);
+    }
+    let t = (b.mean - a.mean) / se2.sqrt();
+    let denom = va * va / (a.n - 1) as f64 + vb * vb / (b.n - 1) as f64;
+    let df = if denom > 0.0 { se2 * se2 / denom } else { (a.n + b.n - 2) as f64 };
+    let t_crit = t_crit_95(df);
+    Ok(WelchResult { t, df, t_crit, significant: t.abs() > t_crit })
+}
+
+/// Linearly interpolated quantile of a **sorted** slice (rank
+/// `p · (n−1)`, the common "type 7" estimator).
+fn quantile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = p.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Tukey-fence outlier filter: drop samples outside
+/// `[q1 − 1.5·IQR, q3 + 1.5·IQR]`. Returns the kept samples (original
+/// order) and the number dropped. Slices shorter than 4 pass through
+/// unfiltered — quartiles are meaningless there.
+pub fn tukey_filter(xs: &[f64]) -> (Vec<f64>, usize) {
+    if xs.len() < 4 {
+        return (xs.to_vec(), 0);
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q1 = quantile_sorted(&sorted, 0.25);
+    let q3 = quantile_sorted(&sorted, 0.75);
+    let iqr = q3 - q1;
+    let (lo, hi) = (q1 - 1.5 * iqr, q3 + 1.5 * iqr);
+    let kept: Vec<f64> = xs.iter().copied().filter(|&x| (lo..=hi).contains(&x)).collect();
+    let dropped = xs.len() - kept.len();
+    (kept, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let s = Summary::from_samples(&xs).unwrap();
+        assert_eq!(s.n, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        // sample variance = 32/7
+        assert!((s.std * s.std - 32.0 / 7.0).abs() < 1e-12, "std {}", s.std);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn t_table_endpoints_and_interpolation() {
+        assert!((t_crit_95(1.0) - 12.706).abs() < 1e-9);
+        assert!((t_crit_95(19.0) - 2.093).abs() < 1e-9);
+        assert!((t_crit_95(30.0) - 2.042).abs() < 1e-9);
+        // interpolated between df 30 (2.042) and df 40 (2.021)
+        let t35 = t_crit_95(35.0);
+        assert!(t35 < 2.042 && t35 > 2.021, "{t35}");
+        assert!((t_crit_95(1e9) - 1.960).abs() < 1e-6);
+        assert!((t_crit_95(0.3) - 12.706).abs() < 1e-9, "sub-1 df clamps");
+    }
+
+    #[test]
+    fn tukey_drops_the_far_point() {
+        let mut xs: Vec<f64> = (1..=10).map(|v| v as f64).collect();
+        xs.push(1000.0);
+        let (kept, dropped) = tukey_filter(&xs);
+        assert_eq!(dropped, 1);
+        assert_eq!(kept.len(), 10);
+        assert!(!kept.contains(&1000.0));
+        // tiny slices pass through
+        let (kept, dropped) = tukey_filter(&[1.0, 1e9]);
+        assert_eq!((kept.len(), dropped), (2, 0));
+    }
+}

@@ -7,3 +7,17 @@ pub mod report;
 pub use dot_sim::{add_only_arch, bin_accum_arch, bin_counter_arch, layer_cycles, mult_arch, SimResult};
 pub use lut_sim::{LutCost, LutRow};
 pub use report::{HwReport, InferenceCost, LayerHwReport};
+
+/// Runtime AVX2 availability on this host. This is the same predicate
+/// [`crate::nn::simd::popcount_kernel`] dispatches on, exposed so the
+/// bench platform fingerprint records which kernel class produced a
+/// set of numbers. Always `false` off x86-64.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return true;
+        }
+    }
+    false
+}

@@ -15,6 +15,9 @@
 //! correctness oracle ([`loadgen`], `pvqnet loadtest`). End-to-end
 //! request tracing ([`obs`]) records per-stage spans into lock-free
 //! ring buffers and exports Chrome trace-event JSON (`GET /v1/trace`).
+//! Performance is tracked by a measured bench protocol with committed
+//! baselines and a statistical regression gate ([`bench`],
+//! `pvqnet bench-compare`).
 //!
 //! See `docs/ARCHITECTURE.md` for the module inventory, data-flow
 //! diagram, and the paper-experiment index; `docs/PVQM_FORMAT.md` for
@@ -24,6 +27,7 @@
 #![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod artifact;
+pub mod bench;
 pub mod compress;
 pub mod coordinator;
 pub mod data;

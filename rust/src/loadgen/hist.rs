@@ -26,6 +26,9 @@ pub struct Histogram {
     counts: Vec<u64>,
     count: u64,
     sum: u64,
+    /// Sum of squared values (f64: u64 would overflow at ~4M samples of
+    /// 2-second latencies), for the sample std the bench metrics need.
+    sum_sq: f64,
     max: u64,
 }
 
@@ -56,7 +59,7 @@ fn edge_of(idx: usize) -> u64 {
 impl Histogram {
     /// Fresh empty histogram.
     pub fn new() -> Self {
-        Histogram { counts: vec![0; NBUCKETS], count: 0, sum: 0, max: 0 }
+        Histogram { counts: vec![0; NBUCKETS], count: 0, sum: 0, sum_sq: 0.0, max: 0 }
     }
 
     /// Record one value in microseconds.
@@ -64,6 +67,7 @@ impl Histogram {
         self.counts[bucket_of(us)] += 1;
         self.count += 1;
         self.sum = self.sum.saturating_add(us);
+        self.sum_sq += (us as f64) * (us as f64);
         self.max = self.max.max(us);
     }
 
@@ -74,6 +78,7 @@ impl Histogram {
         }
         self.count += other.count;
         self.sum = self.sum.saturating_add(other.sum);
+        self.sum_sq += other.sum_sq;
         self.max = self.max.max(other.max);
     }
 
@@ -94,6 +99,18 @@ impl Histogram {
         } else {
             self.sum as f64 / self.count as f64
         }
+    }
+
+    /// Unbiased sample standard deviation in µs (0 below two samples) —
+    /// what lets the loadtest latency metrics participate in Welch's
+    /// t-test against a baseline.
+    pub fn std_us(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let var = (self.sum_sq - (self.sum as f64) * (self.sum as f64) / n) / (n - 1.0);
+        var.max(0.0).sqrt()
     }
 
     /// The q-quantile in µs (lower edge of the bucket holding the q-th
@@ -167,6 +184,8 @@ mod tests {
         assert_eq!(h.count(), 1000);
         assert_eq!(h.max_us(), 1000);
         assert!((h.mean_us() - 500.5).abs() < 1e-9);
+        // sample std of 1..=1000 = sqrt(83333250/999) ≈ 288.8194
+        assert!((h.std_us() - 288.8194).abs() < 1e-3, "std {}", h.std_us());
         let [p50, p90, p99, p999] = h.percentiles_us();
         // lower bucket edges: within 1/16 below the true quantile
         assert!((469..=500).contains(&p50), "p50 {p50}");
@@ -193,6 +212,8 @@ mod tests {
         assert_eq!(a.count(), whole.count());
         assert_eq!(a.max_us(), whole.max_us());
         assert_eq!(a.percentiles_us(), whole.percentiles_us());
+        assert!((a.std_us() - whole.std_us()).abs() < 1e-9);
+        assert!((a.mean_us() - whole.mean_us()).abs() < 1e-9);
     }
 
     #[test]
@@ -200,6 +221,7 @@ mod tests {
         let mut h = Histogram::new();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.std_us(), 0.0, "n<2 has no sample std");
         h.record_us(u64::MAX); // clamps into the last bucket, no panic
         assert_eq!(h.count(), 1);
         assert_eq!(h.max_us(), u64::MAX);

@@ -474,13 +474,65 @@ impl LoadReport {
         self.http.iter().chain(self.inproc.iter()).all(PathReport::clean)
     }
 
-    /// JSON document for `BENCH_load.json`.
+    /// This run's latency/throughput figures in the bench metric shape
+    /// (`{mean, ci95, std, iterations, …}`), one set per driven path.
+    /// The mean carries the per-request sample count and std from the
+    /// latency histogram, so it is Welch-comparable across runs; the
+    /// p99/rps figures are single derived values (`iterations: 1`).
+    /// None are gated — the gated loadgen latency metrics come from the
+    /// bench harness, which repeats whole runs under the macro protocol.
+    pub fn bench_metrics(&self) -> Vec<crate::bench::Metric> {
+        use crate::bench::{Metric, Summary};
+        let mut out = Vec::new();
+        for p in self.http.iter().chain(self.inproc.iter()) {
+            let n = p.hist.count();
+            let (mean, std) = (p.hist.mean_us(), p.hist.std_us());
+            let ci95 = Summary { n, mean, std, min: 0.0, max: 0.0 }
+                .ci95_half()
+                .unwrap_or(0.0);
+            let scalar = |name: &str, unit: &str, hib: bool, value: f64| Metric {
+                experiment: "loadtest".to_string(),
+                name: format!("{}/{name}", p.label),
+                unit: unit.to_string(),
+                higher_is_better: hib,
+                gate: false,
+                mean: value,
+                ci95: 0.0,
+                std: 0.0,
+                iterations: 1,
+                warmup: 0,
+            };
+            out.push(Metric {
+                experiment: "loadtest".to_string(),
+                name: format!("{}/latency_mean_us", p.label),
+                unit: "us".to_string(),
+                higher_is_better: false,
+                gate: false,
+                mean,
+                ci95,
+                std,
+                iterations: n,
+                warmup: 0,
+            });
+            out.push(scalar("p99_us", "us", false, p.hist.quantile_us(0.99) as f64));
+            out.push(scalar("rps", "req/s", true, p.throughput_rps()));
+        }
+        out
+    }
+
+    /// JSON document for `BENCH_load.json` (platform-stamped, with the
+    /// [`LoadReport::bench_metrics`] array alongside the full report).
     pub fn to_json(&self) -> String {
         let mut fields = vec![
             ("experiment".into(), Json::Str("loadtest".into())),
             ("seed".into(), Json::Num(self.seed as f64)),
             ("shape".into(), Json::Str(self.shape.clone())),
             ("passed".into(), Json::Bool(self.passed())),
+            ("platform".into(), crate::bench::Platform::capture().to_json()),
+            (
+                "metrics".into(),
+                Json::Arr(self.bench_metrics().iter().map(crate::bench::Metric::to_json).collect()),
+            ),
         ];
         if let Some(h) = &self.http {
             fields.push(("http".into(), h.to_json()));
@@ -585,6 +637,15 @@ mod tests {
         assert!(json.contains("\"mismatches\":1"));
         // the JSON is parseable by the in-tree parser
         assert!(crate::coordinator::net::Json::parse(json.trim()).is_ok());
+        // platform-stamped, with bench metrics — the document doubles as
+        // a (non-gated) BenchDoc for `pvqnet bench-compare`
+        assert!(json.contains("\"platform\""), "{json}");
+        assert!(json.contains("\"http/latency_mean_us\""), "{json}");
+        let doc = crate::bench::BenchDoc::parse(&json).unwrap();
+        assert_eq!(doc.experiment.as_deref(), Some("loadtest"));
+        assert_eq!(doc.metrics.len(), 3, "mean/p99/rps per driven path");
+        assert!(doc.platform.is_some());
+        assert!(doc.metrics.iter().all(|m| !m.gate));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!   serve --models a.pvqm,…      multi-model registry serving
 //!   serve --listen host:port     HTTP/1.1 front end (admission-controlled)
 //!   loadtest --seed N [...]      seeded load + fault harness with bitwise oracle
+//!   bench-compare BASE CUR [...] statistical perf verdicts vs a recorded baseline
 //!   info                         artifact inventory
 
 use anyhow::{bail, Context, Result};
@@ -26,7 +27,7 @@ use pvqnet::pvq::RhoMode;
 use pvqnet::quant::{distribution_table, evaluate, quantize};
 use pvqnet::testkit::Rng;
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -43,6 +44,26 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
                 i += 1;
             }
         } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Positional (non-flag) arguments, skipping every `--flag` and its
+/// value with the same lookahead rule [`parse_flags`] uses.
+fn parse_positionals(args: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i].starts_with("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else {
+            out.push(args[i].clone());
             i += 1;
         }
     }
@@ -532,6 +553,46 @@ fn cmd_loadtest(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `bench-compare <BASELINE.json> <CURRENT.json>…`: Welch-test every
+/// current metric against the recorded baseline and render the verdict
+/// table (IMPROVED / unchanged / REGRESSED / SKIP, with effect size and
+/// t statistic). Exits nonzero when a **gated** hot-path metric — batch
+/// kernel throughput, shard scaling, HTTP p99, loadgen latency — shows
+/// a statistically significant regression above the `--min-effect`
+/// floor (percent, default 5.0). An advisory baseline (no recorded
+/// reference numbers yet) renders verdicts but never fails.
+fn cmd_bench_compare(flags: &HashMap<String, String>, paths: &[String]) -> Result<()> {
+    use pvqnet::bench::{compare, BenchDoc};
+
+    if paths.len() < 2 {
+        bail!(
+            "bench-compare needs <BASELINE.json> <CURRENT.json>… (got {} path(s); \
+             record a baseline with `cargo bench -- --baseline-out FILE`)",
+            paths.len()
+        );
+    }
+    let min_effect: f64 = flags
+        .get("min-effect")
+        .map(|v| v.parse().context("parse --min-effect"))
+        .transpose()?
+        .unwrap_or(5.0);
+    let baseline = BenchDoc::load(Path::new(&paths[0])).map_err(anyhow::Error::msg)?;
+    let mut currents = Vec::new();
+    for p in &paths[1..] {
+        currents.push(BenchDoc::load(Path::new(p)).map_err(anyhow::Error::msg)?);
+    }
+    let cmp = compare(&baseline, &currents, min_effect);
+    print!("{}", cmp.render());
+    if cmp.gate_failed() {
+        bail!(
+            "bench-compare: {} gated hot-path metric(s) statistically regressed \
+             (re-baseline with `cargo bench -- --baseline-out` if intentional)",
+            cmp.gated_regressions()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
     let dir = artifacts_dir(flags);
     println!("artifacts dir: {}", dir.display());
@@ -558,6 +619,7 @@ fn main() -> Result<()> {
         "inspect" => cmd_inspect(&flags)?,
         "serve" => cmd_serve(&flags)?,
         "loadtest" => cmd_loadtest(&flags)?,
+        "bench-compare" => cmd_bench_compare(&flags, &parse_positionals(&args[1..]))?,
         "info" => cmd_info(&flags)?,
         "help" | "--help" | "-h" => {
             println!(
@@ -587,7 +649,13 @@ fn main() -> Result<()> {
                             --no-drain (skip shutdown-mid-flight)  --smoke\n\
                             --out FILE (default BENCH_load.json)\n\
                             --trace (gate on complete span chains)\n\
-                            --trace-out FILE (write the run's Chrome trace)"
+                            --trace-out FILE (write the run's Chrome trace)\n\
+                   bench-compare: <BASELINE.json> <CURRENT.json>… — Welch-test\n\
+                            verdict table vs a recorded baseline; exits nonzero\n\
+                            when a gated hot-path metric regressed significantly.\n\
+                            --min-effect PCT (default 5.0) sets the effect-size\n\
+                            floor. Record baselines with\n\
+                            `cargo bench -- --baseline-out FILE`."
             );
         }
         other => bail!("unknown command '{other}' (try `pvqnet help`)"),

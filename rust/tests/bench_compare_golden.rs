@@ -1,0 +1,100 @@
+//! Golden test for `pvqnet bench-compare`: a checked-in baseline /
+//! current fixture pair whose verdict table is pinned byte-for-byte —
+//! one improved metric, one unchanged, one gated regression, and one
+//! platform-mismatch skip. Any change to the table layout, the verdict
+//! wording, or the statistics that feed them shows up as a diff here.
+
+use pvqnet::bench::{compare, BenchDoc, Verdict};
+use std::path::Path;
+
+const BASELINE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/bench_baseline.json");
+const CURRENT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/bench_current.json");
+const OTHER: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/bench_current_other.json");
+const GOLDEN_TABLE: &str = include_str!("data/bench_verdicts.txt");
+
+fn load_fixtures() -> (BenchDoc, Vec<BenchDoc>) {
+    let baseline = BenchDoc::load(Path::new(BASELINE)).unwrap();
+    let currents = vec![
+        BenchDoc::load(Path::new(CURRENT)).unwrap(),
+        BenchDoc::load(Path::new(OTHER)).unwrap(),
+    ];
+    (baseline, currents)
+}
+
+#[test]
+fn fixtures_parse_as_expected() {
+    let (baseline, currents) = load_fixtures();
+    assert!(!baseline.advisory);
+    assert_eq!(baseline.metrics.len(), 4);
+    let fp = baseline.platform.as_ref().unwrap().fingerprint();
+    assert_eq!(fp, "linux/x86_64/avx2");
+    // same machine class as the baseline…
+    assert_eq!(currents[0].platform.as_ref().unwrap().fingerprint(), fp);
+    // …and a deliberately different one
+    assert_eq!(currents[1].platform.as_ref().unwrap().fingerprint(), "linux/aarch64/noavx2");
+}
+
+#[test]
+fn verdict_table_matches_golden_bytes() {
+    let (baseline, currents) = load_fixtures();
+    let cmp = compare(&baseline, &currents, 5.0);
+    let rendered = cmp.render();
+    assert!(
+        rendered == GOLDEN_TABLE,
+        "verdict table drifted from tests/data/bench_verdicts.txt\n\
+         --- expected ---\n{GOLDEN_TABLE}--- got ---\n{rendered}"
+    );
+}
+
+#[test]
+fn verdicts_and_gate_behind_the_golden_table() {
+    let (baseline, currents) = load_fixtures();
+    let cmp = compare(&baseline, &currents, 5.0);
+    let verdicts: Vec<(&str, Verdict)> =
+        cmp.rows.iter().map(|r| (r.name.as_str(), r.verdict)).collect();
+    assert_eq!(
+        verdicts,
+        vec![
+            ("kernel_sps", Verdict::Improved),
+            ("scale_sps", Verdict::Unchanged),
+            ("p99_us", Verdict::Regressed),
+            ("hook_ns", Verdict::PlatformSkip),
+        ]
+    );
+    // exactly one gated hot-path regression → the gate fails…
+    assert_eq!(cmp.gated_regressions(), 1);
+    assert!(cmp.gate_failed());
+    // …unless the baseline is advisory, which keeps the verdicts but
+    // disarms the gate
+    let mut advisory = baseline.clone();
+    advisory.advisory = true;
+    let cmp = compare(&advisory, &currents, 5.0);
+    assert_eq!(cmp.rows[2].verdict, Verdict::Regressed);
+    assert!(!cmp.gate_failed());
+    assert!(cmp.render().contains("ADVISORY"));
+    assert!(cmp.render().contains("GATE: ok"));
+}
+
+#[test]
+fn effect_floor_is_live_in_the_fixture() {
+    // the shard row shifts +0.2%: with the floor dropped to zero it is
+    // still not significant (t ≈ 0.16), so the verdict holds — the
+    // floor only matters for significant-but-tiny shifts
+    let (baseline, currents) = load_fixtures();
+    let cmp = compare(&baseline, &currents, 0.0);
+    assert_eq!(cmp.rows[1].verdict, Verdict::Unchanged);
+    // while a floor above every effect size mutes all calls
+    let cmp = compare(&baseline, &currents, 50.0);
+    assert_eq!(cmp.rows[0].verdict, Verdict::Unchanged);
+    assert_eq!(cmp.rows[2].verdict, Verdict::Unchanged);
+    assert!(!cmp.gate_failed());
+}
+
+#[test]
+fn fixture_docs_roundtrip_through_the_serializer() {
+    let (baseline, currents) = load_fixtures();
+    for doc in std::iter::once(&baseline).chain(&currents) {
+        let back = BenchDoc::parse(&doc.to_json_string()).unwrap();
+        assert_eq!(&back, doc);
+    }
+}

@@ -1,0 +1,161 @@
+//! Statistics-core unit tests against hand-computed fixtures: Welford
+//! moments, Student-t CIs, Welch's t-test on textbook-style cases, and
+//! the degenerate-input contract (n = 1, zero variance, empty inputs
+//! surface as explicit "insufficient data", never as NaN verdicts).
+
+use pvqnet::bench::{
+    t_crit_95, tukey_filter, welch_t_test, Measurement, Protocol, StatError, Summary, Welford,
+};
+
+// ------------------------------------------------------- moments and CIs
+
+#[test]
+fn welford_matches_hand_computed_moments() {
+    // the classic Welford example: mean 5, sample variance 32/7
+    let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+    let mut w = Welford::new();
+    for &x in &xs {
+        w.push(x);
+    }
+    let s = w.summary().unwrap();
+    assert_eq!(s.n, 8);
+    assert!((s.mean - 5.0).abs() < 1e-12);
+    assert!((s.std * s.std - 32.0 / 7.0).abs() < 1e-12);
+    assert_eq!((s.min, s.max), (2.0, 9.0));
+    // single-pass == slice constructor
+    assert_eq!(Summary::from_samples(&xs).unwrap(), s);
+}
+
+#[test]
+fn ci95_on_a_known_sample() {
+    // xs = 10,12,14,16,18: mean 14, sample std √10, sem √2,
+    // t(df=4) = 2.776 → half-width 2.776·√2
+    let s = Summary::from_samples(&[10.0, 12.0, 14.0, 16.0, 18.0]).unwrap();
+    assert!((s.mean - 14.0).abs() < 1e-12);
+    assert!((s.std - 10f64.sqrt()).abs() < 1e-12);
+    assert!((s.sem().unwrap() - 2f64.sqrt()).abs() < 1e-12);
+    let ci = s.ci95_half().unwrap();
+    assert!((ci - 2.776 * 2f64.sqrt()).abs() < 1e-9, "ci {ci}");
+}
+
+#[test]
+fn t_table_lookup_and_interpolation() {
+    assert!((t_crit_95(1.0) - 12.706).abs() < 1e-9);
+    assert!((t_crit_95(4.0) - 2.776).abs() < 1e-9);
+    assert!((t_crit_95(25.0) - 2.060).abs() < 1e-9);
+    // fractional df (Welch–Satterthwaite) interpolates between rows
+    assert!((t_crit_95(2.5) - (4.303 + 3.182) / 2.0).abs() < 1e-9);
+    // large df decays to the two-sided normal limit
+    assert!((t_crit_95(1e12) - 1.960).abs() < 1e-6);
+    assert!(t_crit_95(f64::INFINITY) == 1.960);
+    // monotone non-increasing over a sweep
+    let mut prev = f64::INFINITY;
+    for df in 1..300 {
+        let t = t_crit_95(df as f64);
+        assert!(t <= prev + 1e-12, "t_crit not monotone at df {df}");
+        prev = t;
+    }
+}
+
+// --------------------------------------------------------------- Welch
+
+#[test]
+fn welch_equal_means_is_no_regression() {
+    let a = Summary { n: 20, mean: 1000.0, std: 10.0, min: 0.0, max: 0.0 };
+    let w = welch_t_test(&a, &a).unwrap();
+    assert_eq!(w.t, 0.0);
+    assert!(!w.significant, "identical summaries must not flag");
+}
+
+#[test]
+fn welch_shifted_means_textbook_case() {
+    // equal n and std: se² = 2·(10²/20) = 10, t = 100/√10 ≈ 31.62,
+    // Welch–Satterthwaite df = 2(n−1) = 38 exactly
+    let a = Summary { n: 20, mean: 1000.0, std: 10.0, min: 0.0, max: 0.0 };
+    let b = Summary { n: 20, mean: 1100.0, std: 10.0, min: 0.0, max: 0.0 };
+    let w = welch_t_test(&a, &b).unwrap();
+    assert!((w.t - 100.0 / 10f64.sqrt()).abs() < 1e-9, "t {}", w.t);
+    assert!((w.df - 38.0).abs() < 1e-9, "df {}", w.df);
+    assert!(w.significant);
+    // direction is signed: swapping the sides flips t
+    let back = welch_t_test(&b, &a).unwrap();
+    assert!((back.t + w.t).abs() < 1e-12);
+}
+
+#[test]
+fn welch_unequal_variances_unequal_n() {
+    // a: n=15 mean 20 std 2 (va = 4/15); b: n=10 mean 22 std 5
+    // (vb = 2.5): t = 2/√2.7667 ≈ 1.202, df ≈ 10.94 — a small shift
+    // under big variance is NOT significant
+    let a = Summary { n: 15, mean: 20.0, std: 2.0, min: 0.0, max: 0.0 };
+    let b = Summary { n: 10, mean: 22.0, std: 5.0, min: 0.0, max: 0.0 };
+    let w = welch_t_test(&a, &b).unwrap();
+    assert!(w.t > 1.20 && w.t < 1.21, "t {}", w.t);
+    assert!(w.df > 10.9 && w.df < 11.0, "df {}", w.df);
+    assert!(!w.significant, "t {} vs crit {}", w.t, w.t_crit);
+    // the same shift with tight variance IS significant
+    let tight = Summary { n: 10, mean: 22.0, std: 0.5, min: 0.0, max: 0.0 };
+    assert!(welch_t_test(&a, &tight).unwrap().significant);
+}
+
+// ----------------------------------------------- degenerate inputs
+
+#[test]
+fn degenerate_inputs_are_explicit_not_nan() {
+    let one = Summary { n: 1, mean: 5.0, std: 0.0, min: 5.0, max: 5.0 };
+    let many = Summary { n: 20, mean: 5.0, std: 1.0, min: 0.0, max: 0.0 };
+    // n = 1 on either side
+    assert!(matches!(welch_t_test(&one, &many), Err(StatError::TooFewSamples)));
+    assert!(matches!(welch_t_test(&many, &one), Err(StatError::TooFewSamples)));
+    // zero variance on both sides
+    let flat = Summary { n: 20, mean: 5.0, std: 0.0, min: 5.0, max: 5.0 };
+    assert!(matches!(welch_t_test(&flat, &flat), Err(StatError::ZeroVariance)));
+    // the messages say "insufficient data", the words the verdict
+    // table renders instead of a NaN
+    assert_eq!(StatError::TooFewSamples.to_string(), "insufficient data (fewer than 2 samples)");
+    assert_eq!(StatError::ZeroVariance.to_string(), "insufficient data (zero variance)");
+    // empty sample sets never produce a summary at all
+    assert!(Summary::from_samples(&[]).is_none());
+    assert!(Welford::new().summary().is_none());
+    assert_eq!(Welford::new().mean(), 0.0);
+    assert!(Welford::new().sample_variance().is_none());
+    // n = 1 has a mean but no variance/sem/CI
+    let s = Summary::from_samples(&[7.5]).unwrap();
+    assert_eq!((s.n, s.mean), (1, 7.5));
+    assert!(s.sem().is_none());
+    assert!(s.ci95_half().is_none());
+    // none of the paths above manufactured a NaN
+    assert!(!s.mean.is_nan() && !s.std.is_nan());
+}
+
+#[test]
+fn single_iteration_measurement_reports_no_ci() {
+    let m = Measurement::from_values(vec![3.25], 0);
+    assert_eq!(m.n(), 1);
+    assert_eq!(m.mean(), 3.25);
+    assert_eq!(m.ci95(), 0.0, "n=1: zero half-width, n tells the story");
+    // and the smoke protocol is exactly that shape
+    let m = Protocol::SMOKE.run(|| 9.0);
+    assert_eq!((m.n(), m.warmup), (1, 0));
+}
+
+// ---------------------------------------------------------- outliers
+
+#[test]
+fn tukey_fences_drop_only_outliers() {
+    // uniform 1..=20 plus one wild point
+    let mut xs: Vec<f64> = (1..=20).map(|v| v as f64).collect();
+    xs.push(500.0);
+    let (kept, dropped) = tukey_filter(&xs);
+    assert_eq!(dropped, 1);
+    assert!(!kept.contains(&500.0));
+    assert_eq!(kept.len(), 20);
+    // a clean sample passes through untouched, order preserved
+    let clean = [5.0, 1.0, 4.0, 2.0, 3.0];
+    let (kept, dropped) = tukey_filter(&clean);
+    assert_eq!(dropped, 0);
+    assert_eq!(kept, clean);
+    // fewer than 4 samples: quartiles are meaningless, keep everything
+    let (kept, dropped) = tukey_filter(&[1.0, 1e12, -1e12]);
+    assert_eq!((kept.len(), dropped), (3, 0));
+}

@@ -1,0 +1,117 @@
+//! Property tests for the log-linear latency histogram
+//! (`loadgen::hist`): quantiles vs an exact sorted-samples reference
+//! across seeded distributions (uniform, bimodal, heavy-tail), bounding
+//! the relative bucket error at the documented 1/16, plus the
+//! merge-then-query == query-then-merge invariant the per-client
+//! histograms rely on.
+
+use pvqnet::loadgen::Histogram;
+use pvqnet::testkit::{check, Rng};
+
+const QS: [f64; 5] = [0.25, 0.5, 0.9, 0.99, 0.999];
+
+/// One seeded sample from distribution family `dist` (clamped below
+/// 2³¹µs — inside the histogram's documented full-resolution range).
+fn draw(dist: usize, rng: &mut Rng) -> u64 {
+    let v = match dist {
+        // uniform: the whole range matters equally
+        0 => rng.below(100_000),
+        // bimodal: a fast mode and a slow mode, nothing in between
+        // (the shape that makes coarse log2 buckets lie about p50)
+        1 => {
+            if rng.next_u64() & 1 == 0 {
+                200 + rng.below(100)
+            } else {
+                50_000 + rng.below(20_000)
+            }
+        }
+        // heavy tail: Pareto-ish 100/(1−u)², the p999-dominating shape
+        _ => {
+            let u = rng.next_f64().min(0.999_999);
+            (100.0 / ((1.0 - u) * (1.0 - u))) as u64
+        }
+    };
+    v.min(1 << 31)
+}
+
+/// Exact reference with the histogram's own rank semantics: the
+/// `ceil(q·n)`-th smallest sample (1-indexed, clamped into range).
+fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+    let n = sorted.len();
+    let target = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[target - 1]
+}
+
+#[test]
+fn quantiles_match_sorted_reference_within_bucket_error() {
+    check("hist quantile error bound", 0xB0C4, 60, |id, rng| {
+        let dist = (id % 3) as usize;
+        let n = 50 + rng.below(2000) as usize;
+        let samples: Vec<u64> = (0..n).map(|_| draw(dist, rng)).collect();
+        let mut h = Histogram::new();
+        for &v in &samples {
+            h.record_us(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for q in QS {
+            let exact = exact_quantile(&sorted, q);
+            let approx = h.quantile_us(q);
+            // the histogram reports the lower edge of the bucket
+            // holding the rank-q sample: never above the exact value,
+            // never further below than one 1/16 sub-bucket (+1 for
+            // integer edges)
+            assert!(
+                approx <= exact,
+                "dist {dist} n {n} q {q}: approx {approx} > exact {exact}"
+            );
+            assert!(
+                (exact - approx) as f64 <= exact as f64 / 16.0 + 1.0,
+                "dist {dist} n {n} q {q}: approx {approx} vs exact {exact} \
+                 breaks the 1/16 relative bound"
+            );
+        }
+        // quantiles are monotone in q
+        let qs: Vec<u64> = QS.iter().map(|&q| h.quantile_us(q)).collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]), "{qs:?}");
+        // count/max/mean agree with the raw samples exactly
+        assert_eq!(h.count(), n as u64);
+        assert_eq!(h.max_us(), *sorted.last().unwrap());
+        let mean = samples.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        assert!((h.mean_us() - mean).abs() < 1e-6 * mean.max(1.0));
+    });
+}
+
+#[test]
+fn merge_then_query_equals_query_then_merge() {
+    check("hist merge invariant", 0x536C, 40, |id, rng| {
+        let dist = (id % 3) as usize;
+        let n = 20 + rng.below(1500) as usize;
+        let shards = 1 + rng.below(7) as usize;
+        let samples: Vec<u64> = (0..n).map(|_| draw(dist, rng)).collect();
+
+        // record everything into one histogram…
+        let mut whole = Histogram::new();
+        for &v in &samples {
+            whole.record_us(v);
+        }
+        // …and the same stream sharded round-robin then merged
+        let mut parts: Vec<Histogram> = (0..shards).map(|_| Histogram::new()).collect();
+        for (i, &v) in samples.iter().enumerate() {
+            parts[i % shards].record_us(v);
+        }
+        let mut merged = Histogram::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.max_us(), whole.max_us());
+        assert_eq!(merged.percentiles_us(), whole.percentiles_us());
+        for q in QS {
+            assert_eq!(merged.quantile_us(q), whole.quantile_us(q), "q {q}");
+        }
+        assert!((merged.mean_us() - whole.mean_us()).abs() < 1e-9);
+        assert!((merged.std_us() - whole.std_us()).abs() < 1e-9);
+    });
+}

@@ -15,6 +15,11 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+echo "== cargo bench --no-run"
+# the bench harness (measured protocol + BENCH_*.json emitters) must
+# always compile, even though verify never runs a measured sweep
+cargo bench --no-run
+
 echo "== cargo doc --no-deps"
 # broken intra-doc links are denied in lib.rs (rustdoc::broken_intra_doc_links)
 cargo doc --no-deps
