@@ -416,8 +416,12 @@ fn bench_serve() {
 /// engine) at client counts {1, 4, 16}. Each protocol iteration is one
 /// full wave (clients × per-client requests, fixed seeds); the
 /// per-iteration p50/p99/req/s samples condense into `mean ± ci`
-/// metrics in `BENCH_http.json` — `p99_us` is a gated hot path. Under
-/// `--smoke` each client sends a single request (CI bit-rot gate).
+/// metrics in `BENCH_http.json` — `p99_us` is a gated hot path. A
+/// second, connection-scaling sweep holds {64, 512, 2048} keep-alive
+/// connections open simultaneously against the epoll loops (bounded
+/// driver threads, one request per connection per wave) and records the
+/// `conns{N}/p99_us` (gated) and `conns{N}/rps` families. Under
+/// `--smoke` each sweep runs a single cheap wave (CI bit-rot gate).
 fn bench_http() {
     use pvqnet::coordinator::{EngineKind, HttpConfig, HttpServer, ModelRegistry};
     use pvqnet::testkit::http::HttpTestClient;
@@ -427,9 +431,9 @@ fn bench_http() {
     let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
     let mut reg = ModelRegistry::new(ServerConfig { queue_cap: 8192, ..Default::default() });
     reg.register_quant("net_a", q.quant_model, EngineKind::Auto, None).unwrap();
-    // one connection worker per client at the top of the sweep — the
-    // sweep measures serving latency, not connection-pool starvation
-    let http_cfg = HttpConfig { conn_workers: 16, ..Default::default() };
+    // the epoll front end multiplexes every client; the default budgets
+    // (4096 connections) cover both sweeps below
+    let http_cfg = HttpConfig::default();
     let server = HttpServer::start(reg, http_cfg, "127.0.0.1:0").unwrap();
     let addr = server.addr();
     let input_len: usize = spec.input_shape.iter().product();
@@ -491,6 +495,80 @@ fn bench_http() {
         record("http", &format!("c{clients}/p50_us"), "us", false, false, &m50);
         record("http", &format!("c{clients}/p99_us"), "us", false, true, &m99);
         record("http", &format!("c{clients}/rps"), "req/s", true, false, &mrps);
+    }
+
+    // connection-scaling sweep: N keep-alive connections all open at
+    // once against the event loops. A bounded driver-thread pool owns
+    // the sockets (connections ÷ threads apiece) and sends one request
+    // per connection per wave, so the in-flight request count stays
+    // small while the *open-socket* count — the thing the epoll front
+    // end claims to scale in — is exactly N.
+    for conns in [64usize, 512, 2048] {
+        let threads = conns.min(8);
+        let lat_bucket: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let start = std::sync::Barrier::new(threads + 1);
+        let done = std::sync::Barrier::new(threads + 1);
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let waves = p.warmup + p.iters.max(1);
+        let (mut p99s, mut rpss) = (Vec::new(), Vec::new());
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let lat_bucket = &lat_bucket;
+                let (start, done, stop) = (&start, &done, &stop);
+                s.spawn(move || {
+                    let mut rng = Rng::new(3000 + t as u64);
+                    let n_conns = conns / threads + usize::from(t < conns % threads);
+                    let mut clients: Vec<HttpTestClient> = (0..n_conns)
+                        .map(|_| HttpTestClient::connect(addr).unwrap())
+                        .collect();
+                    loop {
+                        start.wait();
+                        if stop.load(std::sync::atomic::Ordering::SeqCst) {
+                            break;
+                        }
+                        let mut lats = Vec::with_capacity(clients.len());
+                        for c in clients.iter_mut() {
+                            let pixels: Vec<String> = (0..input_len)
+                                .map(|_| rng.below(256).to_string())
+                                .collect();
+                            let body = format!("{{\"pixels\":[{}]}}", pixels.join(","));
+                            let t0 = Instant::now();
+                            let resp = c.post_classify(&body, true);
+                            assert_eq!(resp.status, 200, "{}", resp.body);
+                            lats.push(t0.elapsed().as_secs_f64() * 1e6);
+                        }
+                        lat_bucket.lock().unwrap().extend(lats);
+                        done.wait();
+                    }
+                });
+            }
+            for w in 0..waves {
+                let t0 = Instant::now();
+                start.wait();
+                done.wait();
+                let wall = t0.elapsed().as_secs_f64();
+                let mut lats = std::mem::take(&mut *lat_bucket.lock().unwrap());
+                if w < p.warmup {
+                    continue;
+                }
+                lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = lats.len();
+                p99s.push(lats[(n * 99 / 100).min(n - 1)]);
+                rpss.push(n as f64 / wall.max(1e-12));
+            }
+            stop.store(true, std::sync::atomic::Ordering::SeqCst);
+            start.wait();
+        });
+        let m99 = Measurement::from_values(p99s, p.warmup);
+        let mrps = Measurement::from_values(rpss, p.warmup);
+        println!(
+            "  conns={conns:>5}: {}  p99 {:>8.0} ±{:.0}µs  (1 req/conn/wave, {threads} driver threads)",
+            mrps.format_rate("req/s"),
+            m99.mean(),
+            m99.ci95(),
+        );
+        record("http", &format!("conns{conns}/p99_us"), "us", false, true, &m99);
+        record("http", &format!("conns{conns}/rps"), "req/s", true, false, &mrps);
     }
     write_doc("http");
     println!("  [{}]", server.summary().trim_end().replace('\n', "; "));
@@ -725,7 +803,7 @@ fn bench_loadgen() {
 /// (sampling 1-in-1, every span recorded). Emits `BENCH_trace.json`
 /// (informational — not gated).
 fn bench_trace() {
-    use pvqnet::coordinator::{EngineKind, ModelRegistry};
+    use pvqnet::coordinator::{Classify, ClassifyRequest, EngineKind, ModelRegistry};
     use pvqnet::obs;
 
     // hook microbench: current_ctx() is the hook the hot path calls on
@@ -769,7 +847,7 @@ fn bench_trace() {
         obs::set_enabled(on);
         let m = throughput(wave.len(), || {
             let ctx = obs::request_ctx();
-            obs::with_ctx(ctx, || reg.classify_batch(None, wave.clone())).unwrap();
+            reg.submit(ClassifyRequest::batch(wave.clone()).with_trace(ctx)).unwrap();
         });
         obs::set_enabled(false);
         reg.shutdown();

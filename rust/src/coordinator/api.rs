@@ -1,0 +1,127 @@
+//! The unified classify API shared by every layer of the serving stack.
+//!
+//! Before this module, `classify` / `classify_batch` /
+//! `classify_batch_traced` were triplicated across [`super::Server`],
+//! [`super::Router`], [`super::ModelRegistry`], and [`super::Engine`],
+//! each with slightly different signatures. Every layer now implements
+//! one trait, [`Classify`], over one request/reply pair:
+//!
+//! ```text
+//! ClassifyRequest { samples, model, trace_ctx }  →  ClassifyReply { model, results }
+//! ```
+//!
+//! The old entry points survive as thin `#[deprecated]` shims so
+//! out-of-tree callers migrate gradually.
+//!
+//! The module also hosts [`ConfigError`], the typed validation error
+//! returned by the builder-style constructors
+//! ([`super::ServerConfig::builder`], [`super::HttpConfig::builder`])
+//! that replaced the knob-by-knob config structs.
+
+use crate::coordinator::server::Response;
+use crate::obs::TraceCtx;
+use anyhow::Result;
+
+/// One classification request, uniform across every serving layer.
+///
+/// `samples` always carries a batch — a single classification is a
+/// batch of one (see [`ClassifyRequest::single`]). `model` selects a
+/// route where the layer routes (registry, router) and is ignored by
+/// single-engine layers ([`super::Server`], [`super::Engine`]).
+/// `trace_ctx` propagates the request's trace identity;
+/// [`TraceCtx::OFF`] (the default) lets the layer fall back to the
+/// ambient [`crate::obs::current_ctx`].
+#[derive(Debug, Clone)]
+pub struct ClassifyRequest {
+    /// Input samples, one `Vec<u8>` of pixels per classification.
+    pub samples: Vec<Vec<u8>>,
+    /// Route name; `None` = the layer's default route.
+    pub model: Option<String>,
+    /// Trace identity to attribute spans to; `TraceCtx::OFF` = ambient.
+    pub trace_ctx: TraceCtx,
+}
+
+impl ClassifyRequest {
+    /// A batch-of-one request for `pixels`.
+    pub fn single(pixels: Vec<u8>) -> ClassifyRequest {
+        ClassifyRequest::batch(vec![pixels])
+    }
+
+    /// A batch request for `samples` (classified in order).
+    pub fn batch(samples: Vec<Vec<u8>>) -> ClassifyRequest {
+        ClassifyRequest {
+            samples,
+            model: None,
+            trace_ctx: TraceCtx::OFF,
+        }
+    }
+
+    /// Route the request to `model` instead of the default route.
+    pub fn with_model(mut self, model: impl Into<String>) -> ClassifyRequest {
+        self.model = Some(model.into());
+        self
+    }
+
+    /// Attribute all spans emitted for this request to `ctx`.
+    pub fn with_trace(mut self, ctx: TraceCtx) -> ClassifyRequest {
+        self.trace_ctx = ctx;
+        self
+    }
+}
+
+/// The reply to a [`ClassifyRequest`]: per-sample results in request
+/// order, plus the resolved route that served them.
+#[derive(Debug, Clone)]
+pub struct ClassifyReply {
+    /// The route (model name) that actually served the request.
+    pub model: String,
+    /// One [`Response`] per input sample, in request order.
+    pub results: Vec<Response>,
+}
+
+/// Completion callback for the asynchronous submit path
+/// ([`super::Server::submit_async`], [`super::ModelRegistry::submit_async`]).
+/// Invoked exactly once, possibly on a model-server worker thread.
+pub type ReplyCallback = Box<dyn FnOnce(Result<ClassifyReply>) + Send + 'static>;
+
+/// The single classify entry point implemented by every serving layer
+/// ([`super::Engine`], [`super::Server`], [`super::ModelRegistry`],
+/// [`super::Router`]).
+///
+/// Blocking: returns once every sample in the request has a result.
+/// Admission failures surface as [`super::AdmitError`] inside the
+/// `anyhow` error (downcast to map them to HTTP 429/503); routing
+/// misses and engine failures surface as plain errors.
+pub trait Classify {
+    /// Classify every sample in `req`, blocking until done.
+    fn submit(&self, req: ClassifyRequest) -> Result<ClassifyReply>;
+}
+
+/// A config value rejected by a builder-style constructor
+/// ([`super::ServerConfig::builder`] / [`super::HttpConfig::builder`]):
+/// which field, and why. Returned at `build()` time instead of
+/// panicking or silently clamping at first use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    /// The offending builder field.
+    pub field: &'static str,
+    /// Human-readable constraint violation.
+    pub reason: String,
+}
+
+impl ConfigError {
+    pub(crate) fn new(field: &'static str, reason: impl Into<String>) -> ConfigError {
+        ConfigError {
+            field,
+            reason: reason.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid config: {}: {}", self.field, self.reason)
+    }
+}
+
+impl std::error::Error for ConfigError {}

@@ -2,6 +2,8 @@
 //! reference engine, the integer PVQ engine, the bit-aware binary path,
 //! or an AOT-compiled XLA graph via PJRT.
 
+use super::api::{Classify, ClassifyReply, ClassifyRequest};
+use super::server::Response;
 use crate::nn::batch::ActivationBlock;
 use crate::nn::binary::BinaryNet;
 use crate::nn::csr_engine::CompiledQuantModel;
@@ -12,6 +14,7 @@ use crate::nn::QuantModel;
 use crate::runtime::HloModel;
 use anyhow::Result;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// A classification engine over u8-pixel samples.
 pub enum Engine {
@@ -170,12 +173,49 @@ impl Engine {
     /// shard spans emitted by the engine's sharded kernels (see
     /// [`crate::nn::parallel::for_each_shard`]) attach to `ctx`'s request instead
     /// of being dropped. Results are identical to `classify_batch`.
+    #[deprecated(
+        note = "use the unified `Classify::submit` with `ClassifyRequest::with_trace`, \
+                or wrap `classify_batch` in `obs::with_ctx`"
+    )]
     pub fn classify_batch_traced(
         &self,
         samples: &[&[u8]],
         ctx: crate::obs::TraceCtx,
     ) -> Result<Vec<usize>> {
         crate::obs::with_ctx(ctx, || self.classify_batch(samples))
+    }
+}
+
+impl Classify for Engine {
+    /// Direct (un-batched, un-queued) unified submit: the whole request
+    /// runs as one synchronous [`Engine::classify_batch`] call on the
+    /// caller's thread, under the request's trace context when sampled.
+    /// `queue` is zero and `latency == compute` by construction; `model`
+    /// ignores routing (an engine *is* one model) and reports the engine
+    /// name.
+    fn submit(&self, req: ClassifyRequest) -> Result<ClassifyReply> {
+        let views: Vec<&[u8]> = req.samples.iter().map(|s| s.as_slice()).collect();
+        let t0 = Instant::now();
+        let classes = if req.trace_ctx.sampled {
+            crate::obs::with_ctx(req.trace_ctx, || self.classify_batch(&views))?
+        } else {
+            self.classify_batch(&views)?
+        };
+        let elapsed = t0.elapsed();
+        let batch = req.samples.len();
+        Ok(ClassifyReply {
+            model: self.name().to_string(),
+            results: classes
+                .into_iter()
+                .map(|class| Response {
+                    class,
+                    latency: elapsed,
+                    queue: Duration::ZERO,
+                    compute: elapsed,
+                    batch,
+                })
+                .collect(),
+        })
     }
 }
 

@@ -1,11 +1,12 @@
-//! Dependency-free HTTP/1.1 serving front end with admission control.
+//! Event-driven HTTP/1.1 serving front end with admission control.
 //!
-//! The network front door the paper's cheap PVQ dot products deserve: a
-//! [`std::net::TcpListener`] acceptor plus a fixed pool of connection
-//! workers, serving keep-alive HTTP/1.1 with the hand-rolled request
-//! parser and JSON codec from [`super::net`]. Routing goes through the
-//! multi-model [`ModelRegistry`], so one listener serves every loaded
-//! `.pvqm` artifact.
+//! The network front door the paper's cheap PVQ dot products deserve:
+//! a nonblocking acceptor plus a small set of epoll event loops
+//! ([`super::poll`]), each multiplexing thousands of keep-alive
+//! connections through per-connection state machines driving the
+//! resumable request parser ([`super::net::parse_step`]). Routing goes
+//! through the multi-model [`ModelRegistry`], so one listener serves
+//! every loaded `.pvqm` artifact.
 //!
 //! Endpoints:
 //!
@@ -17,12 +18,37 @@
 //! | `/metrics`          | GET    | Prometheus text exposition ([`super::metrics::prometheus_text_full`]) |
 //! | `/healthz`          | GET    | `200` + version/uptime / `503 draining` |
 //!
+//! # Architecture
+//!
+//! Accepted sockets are set nonblocking and handed round-robin to the
+//! event loops ([`HttpConfig::event_loops`]). Each loop runs one
+//! [`Poller`] and drives every connection through a four-state machine:
+//!
+//! ```text
+//! Reading ──parse complete──▶ Handling ──completion──▶ Writing ──keep-alive──▶ Reading
+//!    │                        (classify in the model         │
+//!    └──GET / error──────────▶ servers' lanes)               └──close / error──▶ Closing
+//! ```
+//!
+//! `GET` routes and error replies are answered inline (`Reading` →
+//! `Writing`). Classifies are submitted asynchronously to the
+//! registry's continuous batcher ([`super::registry::ModelRegistry::submit_async`]);
+//! the completion callback runs on a model-server lane thread, pushes
+//! the rendered reply onto the owning loop's completion queue, and
+//! wakes its poller — the loop thread never blocks on compute.
+//!
+//! Read timeouts use a coarse [`DeadlineWheel`] instead of per-thread
+//! socket timeouts: a request that started arriving must complete
+//! within [`HttpConfig::read_deadline`] or it is answered `408` and
+//! the connection closed. Idle keep-alive connections carry no
+//! deadline and cost nothing but their registration.
+//!
 //! Admission control is layered, and every saturation answer is
 //! explicit — the server never hangs and never silently drops:
 //!
-//! 1. accepted connections queue on a bounded channel
-//!    ([`HttpConfig::max_pending_conns`]); overflow is answered `429`
-//!    with `Retry-After` straight from the acceptor;
+//! 1. open connections are capped ([`HttpConfig::max_conns`]);
+//!    overflow is answered `429` with `Retry-After` straight from the
+//!    acceptor;
 //! 2. concurrent classify requests are capped
 //!    ([`HttpConfig::max_inflight`]); overflow → `429 Retry-After`;
 //! 3. a full per-model batching queue ([`AdmitError::QueueFull`])
@@ -30,31 +56,56 @@
 //! 4. while draining (shutdown started), classify and health answer
 //!    `503` and connections close after their in-flight response.
 //!
-//! Graceful shutdown stops the acceptor, lets every connection worker
-//! finish the request it is serving, then shuts the registry's batching
-//! servers down — which completes all dispatched batches — so every
-//! admitted request is answered before the listener dies.
+//! Graceful shutdown closes the listener and idle connections, lets
+//! every in-flight request finish (mid-read requests keep their 408
+//! deadline), then shuts the registry's batching servers down — which
+//! completes all dispatched batches — so every admitted request is
+//! answered before the listener dies.
 
+use super::api::{ClassifyReply, ClassifyRequest, ConfigError, ReplyCallback};
 use super::metrics::{prometheus_text_full, FrontendStatus, Metrics};
-use super::net::{self, HttpConn, HttpRequest, Json, RecvError};
+use super::net::{self, HttpRequest, Json, RecvError};
+use super::poll::{DeadlineWheel, Event, Interest, Poller, WakeReceiver, Waker};
 use super::registry::ModelRegistry;
 use super::server::AdmitError;
 use crate::obs::{self, Stage, TraceCtx};
 use anyhow::{Context, Result};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Poller token of the listening socket (event loop 0 only).
+const LISTENER_TOKEN: u64 = 0;
+/// Poller token of the loop's cross-thread wakeup receiver.
+const WAKER_TOKEN: u64 = 1;
+/// First token handed to an accepted connection.
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Upper bound on one `Poller::wait`, so stop flags and queues are
+/// polled even when no deadline is armed.
+const IDLE_WAIT: Duration = Duration::from_millis(100);
+/// A blocked response write must drain within this window.
+const WRITE_DEADLINE: Duration = Duration::from_secs(5);
+/// How long an error-closed connection lingers half-shut so the peer
+/// can read the final response before the socket RSTs it away.
+const CLOSE_LINGER: Duration = Duration::from_millis(250);
+/// Per-`read` chunk size in the connection read path.
+const READ_CHUNK: usize = 16 * 1024;
+
 /// Front-end tuning knobs (the per-model batching knobs live in
 /// [`super::ServerConfig`], which the [`ModelRegistry`] carries).
+/// Prefer [`HttpConfig::builder`], which validates.
 #[derive(Clone, Debug)]
 pub struct HttpConfig {
-    /// Connection worker threads (each owns one connection at a time).
-    pub conn_workers: usize,
-    /// Accepted-but-unserviced connection budget; overflow → `429`.
-    pub max_pending_conns: usize,
+    /// Epoll event-loop threads. Each loop multiplexes its share of
+    /// the open connections; two suffice far beyond the batching
+    /// servers' compute throughput.
+    pub event_loops: usize,
+    /// Concurrently open connection budget; overflow → `429`.
+    pub max_conns: usize,
     /// Concurrent classify requests past admission; overflow → `429`.
     pub max_inflight: usize,
     /// Largest accepted request body in bytes; overflow → `413`.
@@ -76,8 +127,8 @@ pub struct HttpConfig {
 impl Default for HttpConfig {
     fn default() -> Self {
         HttpConfig {
-            conn_workers: 4,
-            max_pending_conns: 64,
+            event_loops: 2,
+            max_conns: 4096,
             max_inflight: 256,
             max_body_bytes: 1 << 20,
             read_deadline: Duration::from_secs(5),
@@ -86,14 +137,108 @@ impl Default for HttpConfig {
     }
 }
 
-/// State shared by the acceptor and every connection worker.
+impl HttpConfig {
+    /// Start building a validated config from the defaults.
+    pub fn builder() -> HttpConfigBuilder {
+        HttpConfigBuilder {
+            cfg: HttpConfig::default(),
+        }
+    }
+}
+
+/// Builder for [`HttpConfig`]; [`HttpConfigBuilder::build`] validates
+/// every knob and returns a typed [`ConfigError`] instead of letting a
+/// zero budget wedge the front end at first use.
+#[derive(Clone, Debug)]
+pub struct HttpConfigBuilder {
+    cfg: HttpConfig,
+}
+
+impl HttpConfigBuilder {
+    /// Number of epoll event-loop threads (must be ≥ 1).
+    pub fn event_loops(mut self, n: usize) -> Self {
+        self.cfg.event_loops = n;
+        self
+    }
+
+    /// Concurrently open connection budget (must be ≥ 1).
+    pub fn max_conns(mut self, n: usize) -> Self {
+        self.cfg.max_conns = n;
+        self
+    }
+
+    /// Concurrent classify budget (0 is allowed: reject everything).
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.cfg.max_inflight = n;
+        self
+    }
+
+    /// Largest accepted request body in bytes (must be ≥ 1).
+    pub fn max_body_bytes(mut self, n: usize) -> Self {
+        self.cfg.max_body_bytes = n;
+        self
+    }
+
+    /// Slow-client read deadline (must be nonzero).
+    pub fn read_deadline(mut self, d: Duration) -> Self {
+        self.cfg.read_deadline = d;
+        self
+    }
+
+    /// Slow-request log threshold in milliseconds (`None` disables).
+    pub fn slow_ms(mut self, ms: Option<u64>) -> Self {
+        self.cfg.slow_ms = ms;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<HttpConfig, ConfigError> {
+        let c = &self.cfg;
+        if c.event_loops == 0 {
+            return Err(ConfigError::new("event_loops", "must be >= 1"));
+        }
+        if c.max_conns == 0 {
+            return Err(ConfigError::new("max_conns", "must be >= 1"));
+        }
+        if c.max_body_bytes == 0 {
+            return Err(ConfigError::new("max_body_bytes", "must be >= 1"));
+        }
+        if c.read_deadline.is_zero() {
+            return Err(ConfigError::new("read_deadline", "must be nonzero"));
+        }
+        Ok(self.cfg)
+    }
+}
+
+/// State shared by every event loop and completion callback.
 struct Shared {
     registry: ModelRegistry,
     metrics: Arc<Metrics>,
     inflight: AtomicUsize,
+    /// Connections currently open across all event loops.
+    open_conns: AtomicUsize,
+    /// Peak of `open_conns` since start.
+    conns_peak: AtomicUsize,
     cfg: HttpConfig,
     /// Server start time, for `/healthz` uptime and `/metrics` gauges.
     started: Instant,
+}
+
+/// Per-event-loop mailbox: the acceptor hands new sockets over
+/// `incoming`, completion callbacks hand finished replies over
+/// `completions`, and `waker` interrupts the loop's poller after
+/// either push.
+struct LoopHandle {
+    incoming: Mutex<VecDeque<TcpStream>>,
+    completions: Mutex<VecDeque<Completion>>,
+    waker: Waker,
+}
+
+/// A finished classify on its way back to the connection that asked.
+struct Completion {
+    token: u64,
+    reply: Reply,
+    keep: bool,
 }
 
 /// Handle to a running HTTP front end; [`HttpServer::shutdown`] (or
@@ -103,60 +248,69 @@ pub struct HttpServer {
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
     shared: Option<Arc<Shared>>,
+    wakers: Vec<Waker>,
 }
 
 impl HttpServer {
     /// Bind `listen` (e.g. `127.0.0.1:8080`, port `0` for ephemeral)
     /// and start serving `registry` on it.
     pub fn start(registry: ModelRegistry, cfg: HttpConfig, listen: &str) -> Result<HttpServer> {
-        let listener =
-            TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
         let addr = listener.local_addr().context("local_addr")?;
         listener.set_nonblocking(true).context("set_nonblocking")?;
+        // thousands of concurrent sockets need more than the usual 1024
+        let _ = net::raise_nofile_limit();
         let stop = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(Shared {
             registry,
             metrics: Arc::new(Metrics::new()),
             inflight: AtomicUsize::new(0),
+            open_conns: AtomicUsize::new(0),
+            conns_peak: AtomicUsize::new(0),
             cfg: cfg.clone(),
             started: Instant::now(),
         });
 
-        let (ctx, crx) = sync_channel::<TcpStream>(cfg.max_pending_conns.max(1));
-        let crx = Arc::new(Mutex::new(crx));
-        let mut threads = Vec::new();
+        let n_loops = cfg.event_loops.max(1);
+        let mut handles = Vec::with_capacity(n_loops);
+        let mut receivers = Vec::with_capacity(n_loops);
+        for _ in 0..n_loops {
+            let (waker, wake_rx) = super::poll::wake_pair().context("wake pair")?;
+            handles.push(Arc::new(LoopHandle {
+                incoming: Mutex::new(VecDeque::new()),
+                completions: Mutex::new(VecDeque::new()),
+                waker,
+            }));
+            receivers.push(wake_rx);
+        }
+        let wakers: Vec<Waker> = handles.iter().map(|h| h.waker.clone()).collect();
 
-        let stop_a = stop.clone();
-        let shared_a = shared.clone();
-        threads.push(
-            std::thread::Builder::new()
-                .name("pvq-http-accept".into())
-                .spawn(move || acceptor_loop(listener, ctx, shared_a, stop_a))
-                .expect("spawn acceptor"),
-        );
-        for wi in 0..cfg.conn_workers.max(1) {
-            let crx = crx.clone();
-            let shared = shared.clone();
-            let stop = stop.clone();
+        let mut threads = Vec::new();
+        let mut listener = Some(listener);
+        for (idx, wake_rx) in receivers.into_iter().enumerate() {
+            let el = EventLoop::new(
+                idx,
+                listener.take().filter(|_| idx == 0),
+                wake_rx,
+                handles[idx].clone(),
+                handles.clone(),
+                shared.clone(),
+                stop.clone(),
+            )?;
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("pvq-http-conn-{wi}"))
-                    .spawn(move || {
-                        loop {
-                            let stream = {
-                                let guard = crx.lock().unwrap();
-                                match guard.recv() {
-                                    Ok(s) => s,
-                                    Err(_) => return, // acceptor gone, queue drained
-                                }
-                            };
-                            serve_connection(stream, &shared, &stop);
-                        }
-                    })
-                    .expect("spawn conn worker"),
+                    .name(format!("pvq-http-loop-{idx}"))
+                    .spawn(move || el.run())
+                    .expect("spawn http event loop"),
             );
         }
-        Ok(HttpServer { addr, stop, threads, shared: Some(shared) })
+        Ok(HttpServer {
+            addr,
+            stop,
+            threads,
+            shared: Some(shared),
+            wakers,
+        })
     }
 
     /// The bound address (resolves port `0` to the real ephemeral port).
@@ -185,12 +339,16 @@ impl HttpServer {
 impl Drop for HttpServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        for w in &self.wakers {
+            w.wake();
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        // all HTTP workers are done → no request references the
-        // registry anymore; this unwrap therefore cannot fail, and the
-        // registry drain completes every batch already dispatched
+        // the event loops are done → no connection references the
+        // registry anymore (a completion callback for an abandoned
+        // connection may still hold a clone for a moment; in that case
+        // the registry drains when the last clone drops)
         if let Some(shared) = self.shared.take() {
             if let Ok(s) = Arc::try_unwrap(shared) {
                 s.registry.shutdown();
@@ -199,142 +357,666 @@ impl Drop for HttpServer {
     }
 }
 
-/// Accept loop: non-blocking accept + stop polling; hands sockets to
-/// the worker pool and busy-rejects (`429`) when the pending budget is
-/// exhausted, so a saturated server answers instead of timing out.
-fn acceptor_loop(
-    listener: TcpListener,
-    ctx: std::sync::mpsc::SyncSender<TcpStream>,
-    shared: Arc<Shared>,
-    stop: Arc<AtomicBool>,
-) {
-    while !stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((stream, _peer)) => match ctx.try_send(stream) {
-                Ok(()) => {}
-                Err(TrySendError::Full(mut stream)) => {
-                    shared.metrics.http_rejected.fetch_add(1, Ordering::Relaxed);
-                    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-                    let _ = net::write_response(
-                        &mut stream,
-                        429,
-                        "application/json",
-                        b"{\"error\":\"server busy, connection budget exhausted\"}",
-                        &[("Retry-After", "1")],
-                        false,
-                    );
-                    // without this the close RSTs the 429 away whenever
-                    // the client already sent request bytes
-                    net::reject_linger(stream);
-                }
-                Err(TrySendError::Disconnected(_)) => return,
-            },
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+/// The fd the poller watches for a socket.
+#[cfg(unix)]
+fn fd_of<T: std::os::fd::AsRawFd>(t: &T) -> super::poll::Fd {
+    t.as_raw_fd()
+}
+
+/// Non-unix fallback: the tick backend ignores the fd entirely.
+#[cfg(not(unix))]
+fn fd_of<T>(_t: &T) -> super::poll::Fd {
+    -1
+}
+
+/// Connection state-machine phase (see the module docs diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ConnState {
+    /// Accumulating request bytes; the resumable parser runs on every
+    /// readable event.
+    Reading,
+    /// A classify is in flight in the model servers; the connection is
+    /// parked until its completion arrives.
+    Handling,
+    /// Draining the rendered response through the nonblocking socket.
+    Writing,
+    /// Response written, socket half-shut; lingering briefly so the
+    /// peer can read the final bytes before full close.
+    Closing,
+}
+
+/// One nonblocking connection owned by an event loop.
+struct Conn {
+    stream: TcpStream,
+    fd: super::poll::Fd,
+    token: u64,
+    state: ConnState,
+    /// Read carry buffer (bytes past the previous request's end).
+    buf: Vec<u8>,
+    /// First-byte instant of the request currently being read.
+    started: Option<Instant>,
+    /// Pending response bytes and how many are already written.
+    out: Vec<u8>,
+    written: usize,
+    /// Serve another request after the current response?
+    keep_after_write: bool,
+    /// Error path: half-shut + linger after the current response.
+    close_after_write: bool,
+    /// Record the Write stage metric for the pending response
+    /// (successful classifies only, matching the span chain).
+    write_is_classify: bool,
+    /// Trace identity of the pending response (OFF when unsampled).
+    write_ctx: TraceCtx,
+    /// When the pending response was queued (Write span start).
+    write_start: Option<Instant>,
+    /// Response body length, for the Write span args.
+    body_len: usize,
+    /// Slow-log info of the pending response.
+    slow: Option<SlowInfo>,
+    /// When routing of the current request began (slow-log handle time).
+    t_handle: Instant,
+    /// Wire-read time of the current request (slow log).
+    recv_us: u64,
+    /// Armed deadline, validated against wheel entries by generation.
+    deadline: Option<Instant>,
+    deadline_gen: u64,
+    /// Current poller interest set.
+    interest: Interest,
+    /// Peer sent EOF (half or full close).
+    peer_eof: bool,
+    /// Transport error observed; the connection is torn down at the
+    /// next state-machine step.
+    io_error: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, fd: super::poll::Fd, token: u64) -> Conn {
+        Conn {
+            stream,
+            fd,
+            token,
+            state: ConnState::Reading,
+            buf: Vec::new(),
+            started: None,
+            out: Vec::new(),
+            written: 0,
+            keep_after_write: false,
+            close_after_write: false,
+            write_is_classify: false,
+            write_ctx: TraceCtx::OFF,
+            write_start: None,
+            body_len: 0,
+            slow: None,
+            t_handle: Instant::now(),
+            recv_us: 0,
+            deadline: None,
+            deadline_gen: 0,
+            interest: Interest::READABLE,
+            peer_eof: false,
+            io_error: false,
         }
     }
 }
 
-/// Best-effort terminal error response on a connection being closed.
-fn respond_final(conn: &mut HttpConn, shared: &Shared, status: u16, msg: &str) {
-    shared.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-    let body = error_body(msg);
-    let _ = net::write_response(conn.stream(), status, "application/json", &body, &[], false);
-    conn.drain_linger();
+/// Outcome of one nonblocking write pass.
+enum WriteStep {
+    Done,
+    Blocked,
+    Failed,
 }
 
-/// Serve one connection's keep-alive request loop until the peer (or a
-/// drain) closes it.
-fn serve_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
-    let mut conn = match HttpConn::new(stream) {
-        Ok(c) => c,
-        Err(_) => return,
-    };
-    conn.set_read_deadline(shared.cfg.read_deadline);
-    loop {
-        match conn.next_request(shared.cfg.max_body_bytes, stop) {
-            Ok(req) => {
-                // drain started: answer this request, then close
-                let keep = req.keep_alive && !stop.load(Ordering::SeqCst);
-                let t_handle = Instant::now();
-                let reply = handle_request(shared, &req, stop);
-                if reply.status >= 400 {
-                    let rejected = reply.status == 429 || reply.status == 503;
-                    let counter = if rejected {
-                        &shared.metrics.http_rejected
-                    } else {
-                        &shared.metrics.http_errors
-                    };
-                    counter.fetch_add(1, Ordering::Relaxed);
+/// One epoll event loop: listener (loop 0), wakeups, and its share of
+/// the connections.
+struct EventLoop {
+    idx: usize,
+    listener: Option<TcpListener>,
+    wake_rx: WakeReceiver,
+    my: Arc<LoopHandle>,
+    handles: Vec<Arc<LoopHandle>>,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    poller: Poller,
+    conns: HashMap<u64, Conn>,
+    wheel: DeadlineWheel,
+    next_token: u64,
+    /// Round-robin cursor for handing accepted sockets to loops.
+    rr: usize,
+    /// Flow-control cap on a connection's carry buffer while it is not
+    /// actively reading a request (pipelining flood guard).
+    carry_cap: usize,
+}
+
+impl EventLoop {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        idx: usize,
+        listener: Option<TcpListener>,
+        wake_rx: WakeReceiver,
+        my: Arc<LoopHandle>,
+        handles: Vec<Arc<LoopHandle>>,
+        shared: Arc<Shared>,
+        stop: Arc<AtomicBool>,
+    ) -> Result<EventLoop> {
+        let poller = Poller::new().context("create poller")?;
+        if let Some(l) = &listener {
+            poller
+                .register(fd_of(l), LISTENER_TOKEN, Interest::READABLE)
+                .context("register listener")?;
+        }
+        if let Some(fd) = wake_rx.fd() {
+            poller
+                .register(fd, WAKER_TOKEN, Interest::READABLE)
+                .context("register waker")?;
+        }
+        let carry_cap = shared.cfg.max_body_bytes + 2 * net::MAX_HEAD_BYTES;
+        Ok(EventLoop {
+            idx,
+            listener,
+            wake_rx,
+            my,
+            handles,
+            shared,
+            stop,
+            poller,
+            conns: HashMap::new(),
+            wheel: DeadlineWheel::new(Instant::now()),
+            next_token: FIRST_CONN_TOKEN,
+            rr: 0,
+            carry_cap,
+        })
+    }
+
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut draining = false;
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                if !draining {
+                    draining = true;
+                    self.begin_drain();
                 }
-                let retry: &[(&str, &str)] =
-                    if reply.retry_after { &[("Retry-After", "1")] } else { &[] };
-                let t_write = Instant::now();
-                let wrote = net::write_response(
-                    conn.stream(),
-                    reply.status,
-                    reply.content_type,
-                    &reply.body,
-                    retry,
-                    keep,
-                );
-                let write_d = t_write.elapsed();
-                if reply.slow.is_some() {
-                    shared.metrics.record_stage(Stage::Write, write_d);
-                }
-                if reply.trace.sampled {
-                    obs::record_span_at(
-                        reply.trace,
-                        Stage::Write,
-                        obs::us_since(t_write),
-                        write_d.as_micros() as u64,
-                        0,
-                        [reply.body.len() as u64, 0, 0],
-                    );
-                }
-                if let (Some(limit_ms), Some(info)) = (shared.cfg.slow_ms, &reply.slow) {
-                    let write_us = write_d.as_micros() as u64;
-                    let handle_us =
-                        t_write.duration_since(t_handle).as_micros() as u64;
-                    let total_us = req.recv_us + handle_us + write_us;
-                    if total_us > limit_ms.saturating_mul(1000) {
-                        eprintln!(
-                            "pvqnet slow-request id={} model={} total_us={total_us} \
-                             recv_us={} parse_us={} queue_us={} compute_us={} \
-                             write_us={write_us} batch={} samples={}",
-                            reply.trace.id,
-                            info.model,
-                            req.recv_us,
-                            info.parse_us,
-                            info.queue_us,
-                            info.compute_us,
-                            info.batch,
-                            info.samples,
-                        );
-                    }
-                }
-                if wrote.is_err() || !keep {
+                let queues_empty = self.my.incoming.lock().unwrap().is_empty()
+                    && self.my.completions.lock().unwrap().is_empty();
+                if self.conns.is_empty() && queues_empty {
                     return;
                 }
             }
-            Err(RecvError::Closed) => return,
-            Err(RecvError::Malformed(msg)) => {
-                respond_final(&mut conn, shared, 400, &msg);
-                return;
+            let now = Instant::now();
+            let timeout = self.wheel.next_timeout(now).map_or(IDLE_WAIT, |t| t.min(IDLE_WAIT));
+            events.clear();
+            if let Err(e) = self.poller.wait(&mut events, Some(timeout)) {
+                // should not happen; avoid a hot error loop if it does
+                eprintln!("pvqnet http: poll wait failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
             }
-            Err(RecvError::BodyTooLarge) => {
-                respond_final(&mut conn, shared, 413, "request body too large");
-                return;
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    LISTENER_TOKEN => self.accept_ready(),
+                    WAKER_TOKEN => self.wake_rx.drain(),
+                    token => self.conn_event(token, ev),
+                }
             }
-            Err(RecvError::TimedOut) => {
-                respond_final(&mut conn, shared, 408, "timed out reading request");
-                return;
-            }
-            Err(RecvError::Io(_)) => return,
+            self.drain_incoming();
+            self.drain_completions();
+            self.tick_deadlines();
         }
     }
+
+    /// Drain started: close the listener and every idle connection;
+    /// in-flight requests and responses run to completion.
+    fn begin_drain(&mut self) {
+        if let Some(l) = self.listener.take() {
+            let _ = self.poller.deregister(fd_of(&l), LISTENER_TOKEN);
+        }
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                matches!(c.state, ConnState::Closing)
+                    || (matches!(c.state, ConnState::Reading)
+                        && c.buf.is_empty()
+                        && c.started.is_none())
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        for t in idle {
+            if let Some(c) = self.conns.remove(&t) {
+                self.close(c);
+            }
+        }
+    }
+
+    /// Accept until the listener would block (level-triggered).
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _peer)) => self.on_accept(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Admit one accepted socket: budget check, then round-robin
+    /// handoff to an event loop.
+    fn on_accept(&mut self, mut stream: TcpStream) {
+        let open = self.shared.open_conns.fetch_add(1, Ordering::SeqCst);
+        if open >= self.shared.cfg.max_conns {
+            self.shared.open_conns.fetch_sub(1, Ordering::SeqCst);
+            self.shared.metrics.http_rejected.fetch_add(1, Ordering::Relaxed);
+            // accepted sockets are blocking (no O_NONBLOCK inheritance),
+            // so bound the courtesy write
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+            let _ = net::write_response(
+                &mut stream,
+                429,
+                "application/json",
+                b"{\"error\":\"server busy, connection budget exhausted\"}",
+                &[("Retry-After", "1")],
+                false,
+            );
+            // without this the close RSTs the 429 away whenever the
+            // client already sent request bytes
+            net::reject_linger(stream);
+            return;
+        }
+        self.shared.conns_peak.fetch_max(open + 1, Ordering::SeqCst);
+        let target = self.rr % self.handles.len();
+        self.rr = self.rr.wrapping_add(1);
+        if target == self.idx {
+            self.adopt(stream);
+        } else {
+            self.handles[target].incoming.lock().unwrap().push_back(stream);
+            self.handles[target].waker.wake();
+        }
+    }
+
+    /// Take ownership of an accepted socket on this loop.
+    fn adopt(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            self.shared.open_conns.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let fd = fd_of(&stream);
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.register(fd, token, Interest::READABLE).is_err() {
+            self.shared.open_conns.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        self.conns.insert(token, Conn::new(stream, fd, token));
+    }
+
+    fn drain_incoming(&mut self) {
+        loop {
+            let stream = self.my.incoming.lock().unwrap().pop_front();
+            match stream {
+                Some(s) => self.adopt(s),
+                None => return,
+            }
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        loop {
+            let c = self.my.completions.lock().unwrap().pop_front();
+            let Some(c) = c else { return };
+            let Some(mut conn) = self.conns.remove(&c.token) else {
+                // connection torn down while its classify ran
+                continue;
+            };
+            if conn.io_error {
+                self.close(conn);
+                continue;
+            }
+            // peer_eof alone is survivable: a half-closed client can
+            // still read its response
+            conn.state = ConnState::Writing;
+            let keep = c.keep && !self.stop.load(Ordering::SeqCst);
+            self.queue_reply(&mut conn, c.reply, keep);
+            self.pump(c.token, conn);
+        }
+    }
+
+    fn tick_deadlines(&mut self) {
+        let now = Instant::now();
+        for (token, gen) in self.wheel.tick(now) {
+            let (stale, dl) = match self.conns.get(&token) {
+                None => continue,
+                Some(c) => (c.deadline_gen != gen, c.deadline),
+            };
+            if stale {
+                continue; // re-armed since this entry; drop it
+            }
+            let Some(dl) = dl else { continue }; // disarmed
+            if now < dl {
+                // the wheel wrapped or fired a slot early: re-validate
+                self.wheel.insert(token, gen, dl);
+                continue;
+            }
+            let mut conn = self.conns.remove(&token).expect("checked above");
+            conn.deadline = None;
+            match conn.state {
+                ConnState::Reading if conn.started.is_some() => {
+                    conn.close_after_write = true;
+                    self.queue_reply(
+                        &mut conn,
+                        Reply::error(408, "timed out reading request"),
+                        false,
+                    );
+                    self.pump(token, conn);
+                }
+                ConnState::Writing | ConnState::Closing => self.close(conn),
+                _ => self.park(token, conn), // stale: nothing was pending
+            }
+        }
+    }
+
+    /// Readiness event for one connection: ingest bytes, then advance
+    /// the state machine.
+    fn conn_event(&mut self, token: u64, ev: Event) {
+        let Some(mut conn) = self.conns.remove(&token) else { return };
+        if ev.error {
+            conn.io_error = true;
+        }
+        if ev.readable || ev.hup {
+            self.fill_buf(&mut conn);
+        }
+        self.pump(token, conn);
+    }
+
+    /// Read until `WouldBlock`, appending to the carry buffer (or
+    /// discarding during the lingering close).
+    fn fill_buf(&mut self, conn: &mut Conn) {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            if !matches!(conn.state, ConnState::Reading | ConnState::Closing)
+                && conn.buf.len() > self.carry_cap
+            {
+                // flow control: a client pipelining ahead of its
+                // in-flight classify stops being read (and, via park,
+                // watched) until the pipeline drains
+                return;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.peer_eof = true;
+                    return;
+                }
+                Ok(n) => {
+                    if matches!(conn.state, ConnState::Closing) {
+                        continue; // lingering close: discard
+                    }
+                    conn.buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.io_error = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Drive the connection's state machine until it parks (waiting on
+    /// I/O or a completion) or closes.
+    fn pump(&mut self, token: u64, mut conn: Conn) {
+        loop {
+            if conn.io_error {
+                return self.close(conn);
+            }
+            match conn.state {
+                ConnState::Reading => {
+                    if conn.buf.is_empty() {
+                        if conn.peer_eof {
+                            return self.close(conn); // clean close between requests
+                        }
+                        return self.park(token, conn);
+                    }
+                    if conn.started.is_none() {
+                        // first byte of a request: the read clock starts
+                        conn.started = Some(Instant::now());
+                        let dl = Instant::now() + self.shared.cfg.read_deadline;
+                        self.arm_deadline(&mut conn, token, dl);
+                    }
+                    let recv_us = conn.started.map_or(0, |s| s.elapsed().as_micros() as u64);
+                    match net::parse_step(&mut conn.buf, self.shared.cfg.max_body_bytes, recv_us)
+                    {
+                        net::ParseStep::Partial => {
+                            if conn.peer_eof {
+                                // disconnect mid-request: best-effort 400
+                                conn.close_after_write = true;
+                                self.queue_reply(
+                                    &mut conn,
+                                    Reply::error(400, "connection closed mid-request"),
+                                    false,
+                                );
+                                continue;
+                            }
+                            return self.park(token, conn);
+                        }
+                        net::ParseStep::Complete(req) => {
+                            conn.started = None;
+                            conn.deadline = None; // lazy-cancel the read deadline
+                            let draining = self.stop.load(Ordering::SeqCst);
+                            match route(&self.shared, draining, &req, &mut conn) {
+                                Routed::Reply(reply, keep) => {
+                                    self.queue_reply(&mut conn, reply, keep);
+                                    continue;
+                                }
+                                Routed::Submit(creq, meta) => {
+                                    conn.state = ConnState::Handling;
+                                    self.park(token, conn);
+                                    self.submit(token, creq, meta);
+                                    return;
+                                }
+                            }
+                        }
+                        net::ParseStep::Fail(err) => {
+                            let (status, msg) = match err {
+                                RecvError::Malformed(m) => (400, m),
+                                RecvError::BodyTooLarge => {
+                                    (413, "request body too large".to_string())
+                                }
+                                // parse_step never yields transport errors
+                                _ => return self.close(conn),
+                            };
+                            conn.close_after_write = true;
+                            self.queue_reply(&mut conn, Reply::error(status, &msg), false);
+                            continue;
+                        }
+                    }
+                }
+                ConnState::Handling => return self.park(token, conn),
+                ConnState::Writing => match write_some(&mut conn) {
+                    WriteStep::Done => {
+                        self.finish_write(&mut conn);
+                        conn.deadline = None; // lazy-cancel any write deadline
+                        if conn.close_after_write {
+                            let _ = conn.stream.shutdown(Shutdown::Write);
+                            conn.state = ConnState::Closing;
+                            conn.buf.clear();
+                            let dl = Instant::now() + CLOSE_LINGER;
+                            self.arm_deadline(&mut conn, token, dl);
+                            continue;
+                        }
+                        if !conn.keep_after_write {
+                            return self.close(conn);
+                        }
+                        conn.state = ConnState::Reading;
+                        conn.out = Vec::new();
+                        conn.written = 0;
+                        // loop: the carry buffer may already hold a
+                        // pipelined request
+                    }
+                    WriteStep::Blocked => {
+                        if conn.deadline.is_none() {
+                            let dl = Instant::now() + WRITE_DEADLINE;
+                            self.arm_deadline(&mut conn, token, dl);
+                        }
+                        return self.park(token, conn);
+                    }
+                    WriteStep::Failed => return self.close(conn),
+                },
+                ConnState::Closing => {
+                    if conn.peer_eof {
+                        return self.close(conn);
+                    }
+                    return self.park(token, conn);
+                }
+            }
+        }
+    }
+
+    /// Queue one rendered response for writing and account its status.
+    fn queue_reply(&self, conn: &mut Conn, reply: Reply, keep: bool) {
+        if reply.status >= 400 {
+            let rejected = reply.status == 429 || reply.status == 503;
+            let counter = if rejected {
+                &self.shared.metrics.http_rejected
+            } else {
+                &self.shared.metrics.http_errors
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+        }
+        let keep = keep && !conn.close_after_write;
+        let retry: &[(&str, &str)] = if reply.retry_after { &[("Retry-After", "1")] } else { &[] };
+        conn.out = net::render_response(reply.status, reply.content_type, &reply.body, retry, keep);
+        conn.written = 0;
+        conn.keep_after_write = keep;
+        conn.write_is_classify = reply.slow.is_some();
+        conn.write_ctx = reply.trace;
+        conn.write_start = Some(Instant::now());
+        conn.body_len = reply.body.len();
+        conn.slow = reply.slow;
+        conn.deadline = None;
+        conn.state = ConnState::Writing;
+    }
+
+    /// Response fully written: Write span/stage metric + slow log.
+    fn finish_write(&self, conn: &mut Conn) {
+        let Some(start) = conn.write_start.take() else { return };
+        let write_d = start.elapsed();
+        if conn.write_is_classify {
+            self.shared.metrics.record_stage(Stage::Write, write_d);
+        }
+        if conn.write_ctx.sampled {
+            obs::record_span_at(
+                conn.write_ctx,
+                Stage::Write,
+                obs::us_since(start),
+                write_d.as_micros() as u64,
+                0,
+                [conn.body_len as u64, 0, 0],
+            );
+        }
+        if let (Some(limit_ms), Some(info)) = (self.shared.cfg.slow_ms, conn.slow.take()) {
+            let write_us = write_d.as_micros() as u64;
+            let handle_us = start.duration_since(conn.t_handle).as_micros() as u64;
+            let total_us = conn.recv_us + handle_us + write_us;
+            if total_us > limit_ms.saturating_mul(1000) {
+                eprintln!(
+                    "pvqnet slow-request id={} model={} total_us={total_us} \
+                     recv_us={} parse_us={} queue_us={} compute_us={} \
+                     write_us={write_us} batch={} samples={}",
+                    conn.write_ctx.id,
+                    info.model,
+                    conn.recv_us,
+                    info.parse_us,
+                    info.queue_us,
+                    info.compute_us,
+                    info.batch,
+                    info.samples,
+                );
+            }
+        }
+        conn.slow = None;
+        conn.write_ctx = TraceCtx::OFF;
+        conn.write_is_classify = false;
+    }
+
+    /// Hand a classify to the registry's continuous batcher. The
+    /// completion callback runs on a model-server lane thread.
+    fn submit(&self, token: u64, creq: ClassifyRequest, meta: ClassifyMeta) {
+        let shared = self.shared.clone();
+        let handle = self.my.clone();
+        let done: ReplyCallback = Box::new(move |result| {
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            let keep = meta.keep;
+            let reply = finish_classify(result, &meta);
+            handle.completions.lock().unwrap().push_back(Completion { token, reply, keep });
+            handle.waker.wake();
+        });
+        self.shared.registry.submit_async(creq, done);
+    }
+
+    fn arm_deadline(&mut self, conn: &mut Conn, token: u64, deadline: Instant) {
+        conn.deadline_gen = conn.deadline_gen.wrapping_add(1);
+        conn.deadline = Some(deadline);
+        self.wheel.insert(token, conn.deadline_gen, deadline);
+    }
+
+    /// Reinsert the connection, adjusting poller interest to what its
+    /// state can make progress on.
+    fn park(&mut self, token: u64, mut conn: Conn) {
+        let over_cap = conn.buf.len() > self.carry_cap;
+        let want = match conn.state {
+            ConnState::Reading | ConnState::Closing => Interest::READABLE,
+            ConnState::Handling => {
+                if over_cap {
+                    // flow control: stop watching readable until the
+                    // in-flight classify completes and the carry drains
+                    Interest { readable: false, writable: false }
+                } else {
+                    Interest::READABLE
+                }
+            }
+            ConnState::Writing => {
+                if over_cap {
+                    Interest::WRITABLE
+                } else {
+                    Interest::BOTH
+                }
+            }
+        };
+        if want != conn.interest {
+            if self.poller.reregister(conn.fd, token, want).is_err() {
+                return self.close(conn);
+            }
+            conn.interest = want;
+        }
+        self.conns.insert(token, conn);
+    }
+
+    /// Tear the connection down and release its budget slot.
+    fn close(&mut self, conn: Conn) {
+        let _ = self.poller.deregister(conn.fd, conn.token);
+        self.shared.open_conns.fetch_sub(1, Ordering::SeqCst);
+        // dropping the stream closes the socket
+    }
+}
+
+/// Write as much of the pending response as the socket accepts.
+fn write_some(conn: &mut Conn) -> WriteStep {
+    while conn.written < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.written..]) {
+            Ok(0) => return WriteStep::Failed,
+            Ok(n) => conn.written += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return WriteStep::Blocked,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return WriteStep::Failed,
+        }
+    }
+    let _ = conn.stream.flush();
+    WriteStep::Done
 }
 
 /// Stage timings a successful classify hands back to the connection
@@ -355,8 +1037,8 @@ struct Reply {
     body: Vec<u8>,
     retry_after: bool,
     /// Trace context of the request this answers (OFF for non-classify
-    /// routes and when tracing is disabled) — the connection loop emits
-    /// the write span against it.
+    /// routes and when tracing is disabled) — the event loop emits the
+    /// write span against it.
     trace: TraceCtx,
     /// Present on successful classifies: per-stage timings for slow-log.
     slow: Option<SlowInfo>,
@@ -390,30 +1072,83 @@ fn error_body(msg: &str) -> Vec<u8> {
     Json::Obj(vec![("error".into(), Json::Str(msg.into()))]).render().into_bytes()
 }
 
-/// RAII slot in the in-flight classify budget; `None` when saturated.
-struct InflightGuard<'a> {
-    counter: &'a AtomicUsize,
+/// What routing decided to do with one parsed request.
+enum Routed {
+    /// Answer inline (GET routes and every error path).
+    Reply(Reply, bool),
+    /// Submit to the batching servers; the reply arrives via the
+    /// loop's completion queue.
+    Submit(ClassifyRequest, ClassifyMeta),
 }
 
-impl<'a> InflightGuard<'a> {
-    fn admit(counter: &'a AtomicUsize, max: usize) -> Option<InflightGuard<'a>> {
-        if counter.fetch_add(1, Ordering::SeqCst) >= max {
-            counter.fetch_sub(1, Ordering::SeqCst);
-            return None;
+/// Everything needed to render a classify reply once its results
+/// arrive from the model servers.
+struct ClassifyMeta {
+    ctx: TraceCtx,
+    model: String,
+    batched: bool,
+    parse_us: u64,
+    n_samples: usize,
+    keep: bool,
+}
+
+/// Route one parsed request: classify goes async, everything else is
+/// answered inline. Returns the reply (or submission) plus keep-alive.
+fn route(shared: &Shared, draining: bool, req: &HttpRequest, conn: &mut Conn) -> Routed {
+    let keep = req.keep_alive && !draining;
+    conn.t_handle = Instant::now();
+    conn.recv_us = req.recv_us;
+    if (req.method.as_str(), req.path.as_str()) != ("POST", "/v1/classify") {
+        return Routed::Reply(handle_plain(shared, req, draining), keep);
+    }
+    if draining {
+        return Routed::Reply(Reply::error(503, "server draining"), keep);
+    }
+    if shared.inflight.fetch_add(1, Ordering::SeqCst) >= shared.cfg.max_inflight {
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        return Routed::Reply(Reply::error(429, "too many in-flight requests"), keep);
+    }
+    shared.metrics.http_admitted.fetch_add(1, Ordering::Relaxed);
+    let ctx = obs::request_ctx();
+    if ctx.sampled {
+        // accept span, reconstructed backwards over the wire read
+        let now = obs::now_us();
+        obs::record_span_at(
+            ctx,
+            Stage::Accept,
+            now.saturating_sub(req.recv_us),
+            req.recv_us,
+            0,
+            [req.body.len() as u64, 0, 0],
+        );
+        obs::record_span_at(ctx, Stage::Admit, now, 0, 0, [0, 0, 0]);
+    }
+    match prepare_classify(shared, &req.body, ctx) {
+        Ok(p) => {
+            let n_samples = p.samples.len();
+            let creq = ClassifyRequest::batch(p.samples)
+                .with_model(p.model.clone())
+                .with_trace(ctx);
+            let meta = ClassifyMeta {
+                ctx,
+                model: p.model,
+                batched: p.batched,
+                parse_us: p.parse_us,
+                n_samples,
+                keep,
+            };
+            Routed::Submit(creq, meta)
         }
-        Some(InflightGuard { counter })
+        Err(reply) => {
+            // admission was counted; release the slot on the error path
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            Routed::Reply(reply, keep)
+        }
     }
 }
 
-impl Drop for InflightGuard<'_> {
-    fn drop(&mut self) {
-        self.counter.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-/// Route one parsed request to its handler.
-fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Reply {
-    let draining = stop.load(Ordering::SeqCst);
+/// Routes answered inline on the event loop (everything but classify).
+fn handle_plain(shared: &Shared, req: &HttpRequest, draining: bool) -> Reply {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             if draining {
@@ -426,10 +1161,7 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
                     200,
                     &Json::Obj(vec![
                         ("status".into(), Json::Str("ok".into())),
-                        (
-                            "version".into(),
-                            Json::Str(env!("CARGO_PKG_VERSION").into()),
-                        ),
+                        ("version".into(), Json::Str(env!("CARGO_PKG_VERSION").into())),
                         (
                             "uptime_s".into(),
                             Json::Num(shared.started.elapsed().as_secs_f64()),
@@ -474,12 +1206,13 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
                 inflight: shared.inflight.load(Ordering::SeqCst) as u64,
                 uptime_s: shared.started.elapsed().as_secs_f64(),
                 version: env!("CARGO_PKG_VERSION"),
+                conns_open: shared.open_conns.load(Ordering::SeqCst) as u64,
+                conns_peak: shared.conns_peak.load(Ordering::SeqCst) as u64,
             };
             Reply {
                 status: 200,
                 content_type: "text/plain; version=0.0.4",
-                body: prometheus_text_full(&shared.metrics, &series, Some(&status))
-                    .into_bytes(),
+                body: prometheus_text_full(&shared.metrics, &series, Some(&status)).into_bytes(),
                 retry_after: false,
                 trace: TraceCtx::OFF,
                 slow: None,
@@ -493,31 +1226,6 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
             trace: TraceCtx::OFF,
             slow: None,
         },
-        ("POST", "/v1/classify") => {
-            if draining {
-                return Reply::error(503, "server draining");
-            }
-            let slot = InflightGuard::admit(&shared.inflight, shared.cfg.max_inflight);
-            if slot.is_none() {
-                return Reply::error(429, "too many in-flight requests");
-            }
-            shared.metrics.http_admitted.fetch_add(1, Ordering::Relaxed);
-            let ctx = obs::request_ctx();
-            if ctx.sampled {
-                // accept span, reconstructed backwards over the wire read
-                let now = obs::now_us();
-                obs::record_span_at(
-                    ctx,
-                    Stage::Accept,
-                    now.saturating_sub(req.recv_us),
-                    req.recv_us,
-                    0,
-                    [req.body.len() as u64, 0, 0],
-                );
-                obs::record_span_at(ctx, Stage::Admit, now, 0, 0, [0, 0, 0]);
-            }
-            handle_classify(shared, &req.body, ctx)
-        }
         (_, "/healthz" | "/v1/models" | "/metrics" | "/v1/classify" | "/v1/trace") => {
             Reply::error(405, "method not allowed")
         }
@@ -525,48 +1233,55 @@ fn handle_request(shared: &Shared, req: &HttpRequest, stop: &AtomicBool) -> Repl
     }
 }
 
-/// `POST /v1/classify`: single (`pixels`) or batch (`samples`) body,
-/// optional `model` route, answered through the registry's batching
-/// servers. `ctx` is the request's trace context: parse / serialize
-/// spans are emitted against it, the batching layer picks it up via
-/// [`obs::with_ctx`], and successful bodies echo it as `request_id`.
-fn handle_classify(shared: &Shared, body: &[u8], ctx: TraceCtx) -> Reply {
+/// A classify body parsed and validated, ready for submission.
+struct PreparedClassify {
+    samples: Vec<Vec<u8>>,
+    batched: bool,
+    model: String,
+    parse_us: u64,
+}
+
+/// `POST /v1/classify` front half: parse the JSON body (single
+/// `pixels` or batch `samples`, optional `model` route), resolve the
+/// model, and validate sample lengths. Emits the Parse stage metric
+/// and span against `ctx`.
+fn prepare_classify(shared: &Shared, body: &[u8], ctx: TraceCtx) -> Result<PreparedClassify, Reply> {
     let t_parse = Instant::now();
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return Reply::error(400, "body is not UTF-8"),
+        Err(_) => return Err(Reply::error(400, "body is not UTF-8")),
     };
     let doc = match Json::parse(text) {
         Ok(v) => v,
-        Err(e) => return Reply::error(400, &format!("bad JSON: {e}")),
+        Err(e) => return Err(Reply::error(400, &format!("bad JSON: {e}"))),
     };
     let model = match doc.get("model") {
         None | Some(Json::Null) => None,
         Some(Json::Str(s)) => Some(s.as_str()),
-        Some(_) => return Reply::error(400, "\"model\" must be a string"),
+        Some(_) => return Err(Reply::error(400, "\"model\" must be a string")),
     };
     let (samples, batched) = match (doc.get("pixels"), doc.get("samples")) {
         (Some(p), None) => match parse_pixels(p) {
             Ok(v) => (vec![v], false),
-            Err(e) => return Reply::error(400, &e),
+            Err(e) => return Err(Reply::error(400, &e)),
         },
         (None, Some(s)) => {
             let Some(rows) = s.as_array() else {
-                return Reply::error(400, "\"samples\" must be an array of pixel arrays");
+                return Err(Reply::error(400, "\"samples\" must be an array of pixel arrays"));
             };
             if rows.is_empty() {
-                return Reply::error(400, "\"samples\" is empty");
+                return Err(Reply::error(400, "\"samples\" is empty"));
             }
             let mut out = Vec::with_capacity(rows.len());
             for (i, row) in rows.iter().enumerate() {
                 match parse_pixels(row) {
                     Ok(v) => out.push(v),
-                    Err(e) => return Reply::error(400, &format!("sample {i}: {e}")),
+                    Err(e) => return Err(Reply::error(400, &format!("sample {i}: {e}"))),
                 }
             }
             (out, true)
         }
-        _ => return Reply::error(400, "body needs exactly one of \"pixels\" or \"samples\""),
+        _ => return Err(Reply::error(400, "body needs exactly one of \"pixels\" or \"samples\"")),
     };
     let parse_d = t_parse.elapsed();
     shared.metrics.record_stage(Stage::Parse, parse_d);
@@ -581,94 +1296,92 @@ fn handle_classify(shared: &Shared, body: &[u8], ctx: TraceCtx) -> Reply {
         );
     }
     let Some(info) = shared.registry.resolve(model) else {
-        return Reply::error(404, &format!("unknown model '{}'", model.unwrap_or("(default)")));
+        return Err(Reply::error(
+            404,
+            &format!("unknown model '{}'", model.unwrap_or("(default)")),
+        ));
     };
     let model_name = info.name.clone();
     for (i, s) in samples.iter().enumerate() {
         if s.len() != info.input_len {
-            return Reply::error(
+            return Err(Reply::error(
                 400,
                 &format!(
                     "model '{model_name}' expects {} pixels, sample {i} has {}",
                     info.input_len,
                     s.len()
                 ),
-            );
+            ));
         }
     }
-    let n_samples = samples.len();
-    let classified = if ctx.id != 0 {
-        obs::with_ctx(ctx, || shared.registry.classify_batch(Some(&model_name), samples))
-    } else {
-        shared.registry.classify_batch(Some(&model_name), samples)
-    };
-    match classified {
-        Ok(responses) => {
-            let result = |r: &super::Response| {
-                Json::Obj(vec![
-                    ("class".into(), Json::Num(r.class as f64)),
-                    ("latency_us".into(), Json::Num(r.latency.as_micros() as f64)),
-                ])
-            };
-            let t_ser = Instant::now();
-            let mut fields = vec![("model".into(), Json::Str(model_name.clone()))];
-            if ctx.id != 0 {
-                fields.push(("request_id".into(), Json::Num(ctx.id as f64)));
-            }
-            if batched {
-                fields.push((
-                    "results".into(),
-                    Json::Arr(responses.iter().map(result).collect()),
-                ));
-            } else {
-                let r = &responses[0];
-                fields.push(("class".into(), Json::Num(r.class as f64)));
-                fields.push((
-                    "latency_us".into(),
-                    Json::Num(r.latency.as_micros() as f64),
-                ));
-            }
-            let body = Json::Obj(fields).render().into_bytes();
-            if ctx.sampled {
-                obs::record_span_at(
-                    ctx,
-                    Stage::Serialize,
-                    obs::us_since(t_ser),
-                    t_ser.elapsed().as_micros() as u64,
-                    0,
-                    [body.len() as u64, 0, 0],
-                );
-            }
-            let slow = SlowInfo {
-                model: model_name,
-                parse_us: parse_d.as_micros() as u64,
-                queue_us: responses
-                    .iter()
-                    .map(|r| r.queue.as_micros() as u64)
-                    .max()
-                    .unwrap_or(0),
-                compute_us: responses
-                    .iter()
-                    .map(|r| r.compute.as_micros() as u64)
-                    .max()
-                    .unwrap_or(0),
-                batch: responses.iter().map(|r| r.batch).max().unwrap_or(0),
-                samples: n_samples,
-            };
-            Reply {
-                status: 200,
-                content_type: "application/json",
-                body,
-                retry_after: false,
-                trace: ctx,
-                slow: Some(slow),
+    Ok(PreparedClassify {
+        samples,
+        batched,
+        model: model_name,
+        parse_us: parse_d.as_micros() as u64,
+    })
+}
+
+/// `POST /v1/classify` back half, run in the completion callback:
+/// render the results (or map the error to 429/503/500), emitting the
+/// Serialize span against the request's trace context.
+fn finish_classify(result: Result<ClassifyReply>, meta: &ClassifyMeta) -> Reply {
+    let classified = match result {
+        Ok(r) => r,
+        Err(e) => {
+            return match e.downcast_ref::<AdmitError>() {
+                Some(AdmitError::QueueFull) => Reply::error(429, "batching queue saturated"),
+                Some(AdmitError::Closed) => Reply::error(503, "model server stopped"),
+                None => Reply::error(500, &format!("engine error: {e}")),
             }
         }
-        Err(e) => match e.downcast_ref::<AdmitError>() {
-            Some(AdmitError::QueueFull) => Reply::error(429, "batching queue saturated"),
-            Some(AdmitError::Closed) => Reply::error(503, "model server stopped"),
-            None => Reply::error(500, &format!("engine error: {e}")),
-        },
+    };
+    let responses = classified.results;
+    let ctx = meta.ctx;
+    let result_json = |r: &super::Response| {
+        Json::Obj(vec![
+            ("class".into(), Json::Num(r.class as f64)),
+            ("latency_us".into(), Json::Num(r.latency.as_micros() as f64)),
+        ])
+    };
+    let t_ser = Instant::now();
+    let mut fields = vec![("model".into(), Json::Str(meta.model.clone()))];
+    if ctx.id != 0 {
+        fields.push(("request_id".into(), Json::Num(ctx.id as f64)));
+    }
+    if meta.batched {
+        fields.push(("results".into(), Json::Arr(responses.iter().map(result_json).collect())));
+    } else {
+        let r = &responses[0];
+        fields.push(("class".into(), Json::Num(r.class as f64)));
+        fields.push(("latency_us".into(), Json::Num(r.latency.as_micros() as f64)));
+    }
+    let body = Json::Obj(fields).render().into_bytes();
+    if ctx.sampled {
+        obs::record_span_at(
+            ctx,
+            Stage::Serialize,
+            obs::us_since(t_ser),
+            t_ser.elapsed().as_micros() as u64,
+            0,
+            [body.len() as u64, 0, 0],
+        );
+    }
+    let slow = SlowInfo {
+        model: meta.model.clone(),
+        parse_us: meta.parse_us,
+        queue_us: responses.iter().map(|r| r.queue.as_micros() as u64).max().unwrap_or(0),
+        compute_us: responses.iter().map(|r| r.compute.as_micros() as u64).max().unwrap_or(0),
+        batch: responses.iter().map(|r| r.batch).max().unwrap_or(0),
+        samples: meta.n_samples,
+    };
+    Reply {
+        status: 200,
+        content_type: "application/json",
+        body,
+        retry_after: false,
+        trace: ctx,
+        slow: Some(slow),
     }
 }
 
@@ -716,6 +1429,7 @@ mod tests {
 
     fn roundtrip(addr: SocketAddr, raw: &str) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
         s.write_all(raw.as_bytes()).unwrap();
         s.flush().unwrap();
         let mut out = String::new();
@@ -745,6 +1459,9 @@ mod tests {
         assert!(metrics.contains("pvqnet_build_info{version="), "{metrics}");
         assert!(metrics.contains("pvqnet_uptime_seconds "), "{metrics}");
         assert!(metrics.contains("pvqnet_queue_depth{model=\"tiny\"}"), "{metrics}");
+        // the metrics request itself holds a connection open
+        assert!(metrics.contains("pvqnet_open_connections 1"), "{metrics}");
+        assert!(metrics.contains("pvqnet_open_connections_peak"), "{metrics}");
         let missing = roundtrip(addr, "GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n");
         assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
         let bad_method =
@@ -769,5 +1486,94 @@ mod tests {
         assert_eq!(server.metrics().http_rejected.load(Ordering::Relaxed), 1);
         assert_eq!(server.metrics().http_admitted.load(Ordering::Relaxed), 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_on_one_connection() {
+        let server =
+            HttpServer::start(tiny_registry(), HttpConfig::default(), "127.0.0.1:0").unwrap();
+        let body = "{\"pixels\":[0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0]}";
+        // classify (keep-alive) + health (close) in ONE tcp segment: the
+        // state machine must answer both, in order, on the same socket
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}\
+             GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        let resp = roundtrip(server.addr(), &raw);
+        assert_eq!(resp.matches("HTTP/1.1 200 OK").count(), 2, "{resp}");
+        assert!(resp.contains("\"class\":"), "{resp}");
+        assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+        // first response keeps the connection, the second closes it
+        assert!(resp.contains("Connection: keep-alive"), "{resp}");
+        assert!(resp.contains("Connection: close"), "{resp}");
+        assert_eq!(server.metrics().http_admitted.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn slow_client_times_out_with_408() {
+        let cfg = HttpConfig::builder()
+            .read_deadline(Duration::from_millis(100))
+            .build()
+            .unwrap();
+        let server = HttpServer::start(tiny_registry(), cfg, "127.0.0.1:0").unwrap();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // head complete, body never arrives → the deadline wheel fires
+        s.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
+            .unwrap();
+        s.flush().unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 408"), "{out}");
+        assert!(out.contains("timed out reading request"), "{out}");
+        assert!(server.metrics().http_errors.load(Ordering::Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn connection_budget_rejects_with_429() {
+        let cfg = HttpConfig::builder().max_conns(1).build().unwrap();
+        let server = HttpServer::start(tiny_registry(), cfg, "127.0.0.1:0").unwrap();
+        // first connection occupies the whole budget while idle
+        let first = TcpStream::connect(server.addr()).unwrap();
+        // second is rejected straight from the acceptor
+        let resp = roundtrip(
+            server.addr(),
+            "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 429"), "{resp}");
+        assert!(resp.contains("connection budget exhausted"), "{resp}");
+        assert!(resp.contains("Retry-After: 1"));
+        assert!(server.metrics().http_rejected.load(Ordering::Relaxed) >= 1);
+        drop(first);
+        server.shutdown();
+    }
+
+    #[test]
+    fn builder_validates_front_end_knobs() {
+        assert!(HttpConfig::builder().event_loops(0).build().is_err());
+        assert!(HttpConfig::builder().max_conns(0).build().is_err());
+        assert!(HttpConfig::builder().max_body_bytes(0).build().is_err());
+        assert!(HttpConfig::builder().read_deadline(Duration::ZERO).build().is_err());
+        let err = HttpConfig::builder().event_loops(0).build().unwrap_err();
+        assert_eq!(err.field, "event_loops");
+        assert!(err.to_string().contains("event_loops"));
+        let ok = HttpConfig::builder()
+            .event_loops(3)
+            .max_conns(128)
+            .max_inflight(0)
+            .max_body_bytes(4096)
+            .read_deadline(Duration::from_millis(250))
+            .slow_ms(Some(5))
+            .build()
+            .unwrap();
+        assert_eq!(ok.event_loops, 3);
+        assert_eq!(ok.max_conns, 128);
+        assert_eq!(ok.max_inflight, 0);
+        assert_eq!(ok.max_body_bytes, 4096);
+        assert_eq!(ok.read_deadline, Duration::from_millis(250));
+        assert_eq!(ok.slow_ms, Some(5));
     }
 }

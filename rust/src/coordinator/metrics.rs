@@ -366,6 +366,11 @@ pub struct FrontendStatus {
     pub uptime_s: f64,
     /// Crate version (`CARGO_PKG_VERSION`).
     pub version: &'static str,
+    /// Connections currently open in the event loops (accepted, not yet
+    /// closed) — the population the epoll front end is multiplexing.
+    pub conns_open: u64,
+    /// Peak concurrently-open connections since the front end started.
+    pub conns_peak: u64,
 }
 
 /// Render a full Prometheus text exposition: the HTTP front end's
@@ -501,6 +506,18 @@ pub fn prometheus_text_full(
         );
         let _ = writeln!(out, "# TYPE pvqnet_inflight_requests gauge");
         let _ = writeln!(out, "pvqnet_inflight_requests {}", fs.inflight);
+        let _ = writeln!(
+            out,
+            "# HELP pvqnet_open_connections Connections currently open in the HTTP event loops"
+        );
+        let _ = writeln!(out, "# TYPE pvqnet_open_connections gauge");
+        let _ = writeln!(out, "pvqnet_open_connections {}", fs.conns_open);
+        let _ = writeln!(
+            out,
+            "# HELP pvqnet_open_connections_peak Peak concurrently-open connections since start"
+        );
+        let _ = writeln!(out, "# TYPE pvqnet_open_connections_peak gauge");
+        let _ = writeln!(out, "pvqnet_open_connections_peak {}", fs.conns_peak);
     }
     out
 }
@@ -663,11 +680,19 @@ mod tests {
         let m = Metrics::new();
         m.record_stage(Stage::Queue, Duration::from_micros(100));
         m.record_queue_depth(7);
-        let fs = FrontendStatus { inflight: 3, uptime_s: 1.5, version: "9.9.9-test" };
+        let fs = FrontendStatus {
+            inflight: 3,
+            uptime_s: 1.5,
+            version: "9.9.9-test",
+            conns_open: 11,
+            conns_peak: 42,
+        };
         let text = prometheus_text_full(&http, &[("m0", &m)], Some(&fs));
         assert!(text.contains("pvqnet_build_info{version=\"9.9.9-test\"} 1"), "{text}");
         assert!(text.contains("pvqnet_uptime_seconds 1.5"));
         assert!(text.contains("pvqnet_inflight_requests 3"));
+        assert!(text.contains("pvqnet_open_connections 11"));
+        assert!(text.contains("pvqnet_open_connections_peak 42"));
         assert!(text.contains("pvqnet_queue_depth{model=\"m0\"} 7"));
         assert!(text.contains("pvqnet_queue_depth_peak{model=\"m0\"} 7"));
         assert!(text.contains(
@@ -686,6 +711,8 @@ mod tests {
             "pvqnet_build_info",
             "pvqnet_uptime_seconds",
             "pvqnet_inflight_requests",
+            "pvqnet_open_connections",
+            "pvqnet_open_connections_peak",
         ] {
             let help = format!("# HELP {fam} ");
             assert_eq!(text.matches(&help).count(), 1, "family {fam}");

@@ -3,14 +3,17 @@
 //! front end ([`http`] over the [`net`] plumbing). Python never runs on
 //! this path — engines are pure rust or AOT-compiled XLA executables.
 
+pub mod api;
 pub mod engine;
 pub mod http;
 pub mod metrics;
 pub mod net;
+pub mod poll;
 pub mod registry;
 pub mod router;
 pub mod server;
 
+pub use api::{Classify, ClassifyReply, ClassifyRequest, ConfigError, ReplyCallback};
 pub use engine::Engine;
 pub use http::{HttpConfig, HttpServer};
 pub use metrics::{prometheus_text, prometheus_text_full, FrontendStatus, Metrics};

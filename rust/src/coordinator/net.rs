@@ -1,10 +1,12 @@
 //! Dependency-free HTTP/1.1 and JSON plumbing for the serving front end.
 //!
 //! Everything the offline environment denies us (hyper, serde) is
-//! hand-rolled here at the scale this server needs: a buffered,
-//! keep-alive-aware request reader over [`std::net::TcpStream`], a
-//! status-line/header response writer, and a small JSON value type with
-//! a recursive-descent parser and renderer. [`super::http`] composes
+//! hand-rolled here at the scale this server needs: a resumable
+//! buffer-in/request-out parser core ([`parse_step`]) shared by the
+//! blocking keep-alive reader ([`HttpConn`]) and the event loop's
+//! nonblocking per-connection state machines, a status-line/header
+//! response renderer/writer, and a small JSON value type with a
+//! recursive-descent parser and renderer. [`super::http`] composes
 //! these into the actual server; this module knows nothing about
 //! models or routing.
 
@@ -35,6 +37,49 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 /// socket with unread bytes does not RST the just-written rejection out
 /// of the kernel's send queue. Hard-bounded (≈50ms) so the acceptor can
 /// never stall on a slow peer.
+/// Raise the process's open-file soft limit (`RLIMIT_NOFILE`) to its
+/// hard limit, returning the resulting soft limit. High-connection
+/// serving and the connection-scaling bench/loadtest hold two fds per
+/// open connection (client + server side over loopback), and distro
+/// soft defaults (often 1024) sit far below the hard cap. Best-effort:
+/// on failure the limit is left unchanged and the current soft limit is
+/// returned; non-Linux platforms report `u64::MAX` (no-op).
+pub fn raise_nofile_limit() -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        const RLIMIT_NOFILE: i32 = 7;
+        #[repr(C)]
+        struct RLimit {
+            cur: u64,
+            max: u64,
+        }
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+            fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+        }
+        unsafe {
+            let mut rl = RLimit { cur: 0, max: 0 };
+            if getrlimit(RLIMIT_NOFILE, &mut rl) != 0 {
+                return 0;
+            }
+            if rl.cur < rl.max {
+                let want = RLimit {
+                    cur: rl.max,
+                    max: rl.max,
+                };
+                if setrlimit(RLIMIT_NOFILE, &want) == 0 {
+                    return rl.max;
+                }
+            }
+            rl.cur
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        u64::MAX
+    }
+}
+
 pub fn reject_linger(mut stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
     let _ = stream.shutdown(std::net::Shutdown::Write);
@@ -94,6 +139,79 @@ pub enum RecvError {
     Io(std::io::Error),
 }
 
+/// One step of the resumable request parser.
+#[derive(Debug)]
+pub enum ParseStep {
+    /// The buffer does not yet hold a complete request; feed more bytes.
+    Partial,
+    /// One complete request, popped off the front of the buffer (any
+    /// pipelined remainder stays behind in the buffer).
+    Complete(HttpRequest),
+    /// The buffered bytes are irrecoverably not a request this server
+    /// accepts; answer (400/413) and close the connection.
+    Fail(RecvError),
+}
+
+/// Advance the resumable request parser over a connection's carry
+/// buffer. Pure buffer-in/request-out — no socket I/O, no blocking —
+/// so the same core drives both the blocking [`HttpConn`] reader and
+/// the nonblocking per-connection state machines of the epoll event
+/// loop in [`super::http`]. Call after appending newly read bytes;
+/// `Partial` means wait for more, and after `Complete` call again (the
+/// buffer may already hold the next pipelined request). `recv_us` is
+/// stamped into the returned request (wire-read time measured by the
+/// caller, who owns the clock).
+pub fn parse_step(buf: &mut Vec<u8>, max_body: usize, recv_us: u64) -> ParseStep {
+    let head_end = match find_head_end(buf) {
+        Some(i) => i,
+        None => {
+            if buf.len() > MAX_HEAD_BYTES {
+                return ParseStep::Fail(RecvError::Malformed("request head too large".into()));
+            }
+            return ParseStep::Partial;
+        }
+    };
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return ParseStep::Fail(RecvError::Malformed("non-UTF-8 request head".into())),
+    };
+    let (method, path, keep_alive_default) = match parse_request_line(head) {
+        Ok(t) => t,
+        Err(e) => return ParseStep::Fail(e),
+    };
+    let headers = match parse_headers(head) {
+        Ok(h) => h,
+        Err(e) => return ParseStep::Fail(e),
+    };
+    let find = |name: &str| headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str());
+    if find("transfer-encoding").is_some() {
+        return ParseStep::Fail(RecvError::Malformed("chunked bodies not supported".into()));
+    }
+    let content_len = match find("content-length") {
+        None => 0usize,
+        Some(v) => match v.trim().parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return ParseStep::Fail(RecvError::Malformed("bad content-length".into())),
+        },
+    };
+    if content_len > max_body {
+        return ParseStep::Fail(RecvError::BodyTooLarge);
+    }
+    let keep_alive = match find("connection").map(str::to_ascii_lowercase) {
+        Some(c) if c.contains("close") => false,
+        Some(c) if c.contains("keep-alive") => true,
+        _ => keep_alive_default,
+    };
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_len {
+        return ParseStep::Partial;
+    }
+    let rest = buf.split_off(body_start + content_len);
+    let mut head_and_body = std::mem::replace(buf, rest);
+    let body = head_and_body.split_off(body_start);
+    ParseStep::Complete(HttpRequest { method, path, headers, body, keep_alive, recv_us })
+}
+
 /// A client connection: the stream plus any bytes already read past the
 /// previous request's end (keep-alive pipelining carry-over).
 pub struct HttpConn {
@@ -145,7 +263,8 @@ impl HttpConn {
 
     /// Block until the next full request arrives, `stop` is raised while
     /// the connection is idle, or the peer goes away. `max_body` bounds
-    /// the accepted `Content-Length`.
+    /// the accepted `Content-Length`. A thin blocking driver around the
+    /// shared resumable core, [`parse_step`].
     pub fn next_request(
         &mut self,
         max_body: usize,
@@ -158,17 +277,22 @@ impl HttpConn {
         let mut started: Option<Instant> =
             if self.buf.is_empty() { None } else { Some(Instant::now()) };
         loop {
-            if let Some(head_end) = find_head_end(&self.buf) {
-                return self.finish_request(head_end, max_body, started);
-            }
-            if self.buf.len() > MAX_HEAD_BYTES {
-                return Err(RecvError::Malformed("request head too large".into()));
+            if !self.buf.is_empty() {
+                let t0 = *started.get_or_insert_with(Instant::now);
+                let recv_us = t0.elapsed().as_micros() as u64;
+                match parse_step(&mut self.buf, max_body, recv_us) {
+                    ParseStep::Complete(req) => return Ok(req),
+                    ParseStep::Fail(e) => return Err(e),
+                    ParseStep::Partial => {}
+                }
             }
             let mut chunk = [0u8; 4096];
             match self.stream.read(&mut chunk) {
                 Ok(0) => {
                     return if self.buf.is_empty() {
                         Err(RecvError::Closed)
+                    } else if find_head_end(&self.buf).is_some() {
+                        Err(RecvError::Malformed("connection closed mid-body".into()))
                     } else {
                         Err(RecvError::Malformed("connection closed mid-request".into()))
                     };
@@ -196,67 +320,6 @@ impl HttpConn {
                 Err(e) => return Err(RecvError::Io(e)),
             }
         }
-    }
-
-    /// The head is fully buffered at `head_end`; parse it, then read the
-    /// declared body to completion and pop both off the carry buffer.
-    fn finish_request(
-        &mut self,
-        head_end: usize,
-        max_body: usize,
-        started: Option<Instant>,
-    ) -> Result<HttpRequest, RecvError> {
-        let head = std::str::from_utf8(&self.buf[..head_end])
-            .map_err(|_| RecvError::Malformed("non-UTF-8 request head".into()))?;
-        let (method, path, keep_alive_default) = parse_request_line(head)?;
-        let headers = parse_headers(head)?;
-        let find = |name: &str| {
-            headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
-        };
-        if find("transfer-encoding").is_some() {
-            return Err(RecvError::Malformed("chunked bodies not supported".into()));
-        }
-        let content_len = match find("content-length") {
-            None => 0usize,
-            Some(v) => v
-                .trim()
-                .parse::<usize>()
-                .map_err(|_| RecvError::Malformed("bad content-length".into()))?,
-        };
-        if content_len > max_body {
-            return Err(RecvError::BodyTooLarge);
-        }
-        let keep_alive = match find("connection").map(str::to_ascii_lowercase) {
-            Some(c) if c.contains("close") => false,
-            Some(c) if c.contains("keep-alive") => true,
-            _ => keep_alive_default,
-        };
-        let body_start = head_end + 4;
-        let t0 = started.unwrap_or_else(Instant::now);
-        while self.buf.len() < body_start + content_len {
-            let mut chunk = [0u8; 4096];
-            match self.stream.read(&mut chunk) {
-                Ok(0) => {
-                    return Err(RecvError::Malformed("connection closed mid-body".into()))
-                }
-                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    if t0.elapsed() > self.read_deadline {
-                        return Err(RecvError::TimedOut);
-                    }
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                Err(e) => return Err(RecvError::Io(e)),
-            }
-        }
-        let rest = self.buf.split_off(body_start + content_len);
-        let mut head_and_body = std::mem::replace(&mut self.buf, rest);
-        let body = head_and_body.split_off(body_start);
-        let recv_us = started.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
-        Ok(HttpRequest { method, path, headers, body, keep_alive, recv_us })
     }
 }
 
@@ -322,17 +385,19 @@ pub fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Write one complete response: status line, `Content-Type`/`Length`,
-/// a `Connection` header matching `keep_alive`, any `extra` headers,
-/// then the body.
-pub fn write_response(
-    stream: &mut TcpStream,
+/// Serialize one complete response — status line,
+/// `Content-Type`/`Length`, a `Connection` header matching
+/// `keep_alive`, any `extra` headers, then the body — into one byte
+/// buffer. The event loop queues these bytes and writes them as the
+/// socket accepts them; [`write_response`] writes them in one blocking
+/// call.
+pub fn render_response(
     status: u16,
     content_type: &str,
     body: &[u8],
     extra: &[(&str, &str)],
     keep_alive: bool,
-) -> std::io::Result<()> {
+) -> Vec<u8> {
     let mut head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
         reason(status),
@@ -349,8 +414,23 @@ pub fn write_response(
     } else {
         "Connection: close\r\n\r\n"
     });
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Write one complete response: [`render_response`] in one blocking
+/// write.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    extra: &[(&str, &str)],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let bytes = render_response(status, content_type, body, extra, keep_alive);
+    stream.write_all(&bytes)?;
     stream.flush()
 }
 
@@ -736,6 +816,68 @@ mod tests {
         // depth bomb is rejected, not a stack overflow
         let bomb = "[".repeat(4000) + &"]".repeat(4000);
         assert!(Json::parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn parse_step_resumes_across_arbitrary_chunk_boundaries() {
+        let raw = b"POST /v1/classify?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 4\r\n\r\nabcdGET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        for chunk in [1usize, 2, 3, 5, 7, 13, raw.len()] {
+            let mut buf = Vec::new();
+            let mut got = Vec::new();
+            for piece in raw.chunks(chunk) {
+                buf.extend_from_slice(piece);
+                loop {
+                    match parse_step(&mut buf, 1024, 5) {
+                        ParseStep::Complete(r) => got.push(r),
+                        ParseStep::Partial => break,
+                        ParseStep::Fail(e) => panic!("chunk size {chunk}: {e:?}"),
+                    }
+                }
+            }
+            assert_eq!(got.len(), 2, "chunk size {chunk}");
+            assert_eq!(got[0].method, "POST");
+            assert_eq!(got[0].path, "/v1/classify");
+            assert_eq!(got[0].body, b"abcd");
+            assert!(got[0].keep_alive);
+            assert_eq!(got[0].recv_us, 5);
+            assert_eq!(got[1].method, "GET");
+            assert_eq!(got[1].path, "/healthz");
+            assert!(!got[1].keep_alive);
+            assert!(got[1].body.is_empty());
+            assert!(buf.is_empty(), "chunk size {chunk}: leftover {buf:?}");
+        }
+    }
+
+    #[test]
+    fn parse_step_failure_modes() {
+        // declared body larger than the cap → BodyTooLarge at head-complete
+        let mut buf = b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\n".to_vec();
+        assert!(matches!(
+            parse_step(&mut buf, 10, 0),
+            ParseStep::Fail(RecvError::BodyTooLarge)
+        ));
+        // bad version
+        let mut buf = b"GET / HTTP/9.9\r\n\r\n".to_vec();
+        assert!(matches!(
+            parse_step(&mut buf, 10, 0),
+            ParseStep::Fail(RecvError::Malformed(_))
+        ));
+        // an endless head is Partial until it exceeds the cap, then fails
+        let mut buf = vec![b'x'; MAX_HEAD_BYTES];
+        assert!(matches!(parse_step(&mut buf, 10, 0), ParseStep::Partial));
+        buf.push(b'x');
+        assert!(matches!(
+            parse_step(&mut buf, 10, 0),
+            ParseStep::Fail(RecvError::Malformed(_))
+        ));
+        // a held-back body byte keeps the request Partial
+        let mut buf = b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\na".to_vec();
+        assert!(matches!(parse_step(&mut buf, 10, 0), ParseStep::Partial));
+        buf.push(b'b');
+        match parse_step(&mut buf, 10, 0) {
+            ParseStep::Complete(r) => assert_eq!(r.body, b"ab"),
+            other => panic!("expected Complete, got {other:?}"),
+        }
     }
 
     #[test]

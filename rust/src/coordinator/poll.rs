@@ -1,0 +1,793 @@
+//! Dependency-free readiness polling for the event-driven HTTP front end.
+//!
+//! The serving event loop ([`super::http`]) needs to watch thousands of
+//! nonblocking sockets for readability/writability without parking a
+//! thread per connection. On Linux this module wraps the raw
+//! `epoll_create1` / `epoll_ctl` / `epoll_wait` syscalls directly
+//! (declared `extern "C"` against the libc the binary already links —
+//! no crate dependency). Everywhere else a portable *tick* backend keeps
+//! the same API compiling: it reports every registered token as ready on
+//! a short cadence, degrading the event loop into a polling loop over
+//! nonblocking sockets. Both backends are **level-triggered** and both
+//! may report **spurious readiness** — consumers must treat
+//! `WouldBlock` from a subsequent read/write as "not actually ready"
+//! and simply wait for the next event (unit-tested below).
+//!
+//! The module also provides the two companions the event loop needs:
+//!
+//! * [`wake_pair`] — a cross-thread wakeup handle so completion
+//!   callbacks (running on model-server worker threads) can interrupt a
+//!   blocked [`Poller::wait`].
+//! * [`DeadlineWheel`] — a coarse hashed timer wheel that replaces the
+//!   old per-thread `SO_RCVTIMEO` read timeouts: thousands of armed
+//!   request-read deadlines cost one bucket entry each, and the wheel's
+//!   [`DeadlineWheel::next_timeout`] bounds how long the loop may sleep.
+
+use std::io;
+use std::time::{Duration, Instant};
+
+/// Raw file-descriptor type used by the poll API (matches `RawFd` on
+/// unix; a dummy on platforms where the tick backend ignores it).
+pub type Fd = i32;
+
+/// Which readiness conditions a registration wants to be told about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    /// Wake when the fd is readable (or the peer hung up).
+    pub readable: bool,
+    /// Wake when the fd is writable.
+    pub writable: bool,
+}
+
+impl Interest {
+    /// Readable only.
+    pub const READABLE: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    /// Writable only.
+    pub const WRITABLE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+    /// Readable and writable.
+    pub const BOTH: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+/// One readiness event delivered by [`Poller::wait`].
+///
+/// `hup` / `error` may be reported even when not asked for (epoll
+/// semantics); a consumer should attempt its pending I/O and let the
+/// resulting `Ok(0)` / `Err` drive the connection state machine.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token supplied at registration time.
+    pub token: u64,
+    /// Readable (data, incoming connection, or EOF pending).
+    pub readable: bool,
+    /// Writable without blocking.
+    pub writable: bool,
+    /// Peer hung up (EPOLLHUP/EPOLLRDHUP).
+    pub hup: bool,
+    /// Error condition on the fd (EPOLLERR).
+    pub error: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Raw epoll FFI. `epoll_event` is packed on x86-64 (kernel ABI).
+    use super::{Event, Fd, Interest};
+    use std::io;
+    use std::time::Duration;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// Epoll-backed poller: one epoll instance per event loop.
+    pub struct Backend {
+        epfd: i32,
+    }
+
+    fn mask_of(interest: Interest) -> u32 {
+        let mut m = 0;
+        if interest.readable {
+            m |= EPOLLIN | EPOLLRDHUP;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<Backend> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Backend { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: mask_of(interest),
+                data: token,
+            };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn reregister(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: Fd, _token: u64) -> io::Result<()> {
+            // The event pointer is ignored for DEL on every kernel this
+            // code targets (>= 2.6.9), but must be non-null on older
+            // ones, so pass a zeroed event unconditionally.
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            const MAX_EVENTS: usize = 256;
+            let mut raw = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let timeout_ms: i32 = match timeout {
+                None => -1,
+                Some(d) => {
+                    // Round up so a 100µs deadline does not spin at 0ms.
+                    let ms = d.as_millis();
+                    let ms = if ms == 0 && !d.is_zero() { 1 } else { ms };
+                    ms.min(i32::MAX as u128) as i32
+                }
+            };
+            let n = loop {
+                let rc = unsafe {
+                    epoll_wait(self.epfd, raw.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms)
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(err);
+            };
+            for ev in raw.iter().take(n) {
+                // Copy fields out of the (possibly packed) struct.
+                let bits = ev.events;
+                let token = ev.data;
+                out.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hup: bits & (EPOLLHUP | EPOLLRDHUP) != 0,
+                    error: bits & EPOLLERR != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Backend {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! Portable fallback: a *tick* backend that reports every registered
+    //! token as ready each time it is polled (after sleeping up to a
+    //! short tick). Correct — consumers must tolerate spurious readiness
+    //! anyway — just not scalable; non-Linux builds get a working server
+    //! that burns one short wakeup per tick instead of true readiness.
+    use super::{Event, Fd, Interest};
+    use std::io;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    const TICK: Duration = Duration::from_millis(5);
+
+    pub struct Backend {
+        registered: Mutex<Vec<(Fd, u64, Interest)>>,
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<Backend> {
+            Ok(Backend {
+                registered: Mutex::new(Vec::new()),
+            })
+        }
+
+        pub fn register(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut reg = self.registered.lock().unwrap();
+            if reg.iter().any(|&(_, t, _)| t == token) {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    "token already registered",
+                ));
+            }
+            reg.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn reregister(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut reg = self.registered.lock().unwrap();
+            for slot in reg.iter_mut() {
+                if slot.1 == token {
+                    *slot = (fd, token, interest);
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                "token not registered",
+            ))
+        }
+
+        pub fn deregister(&self, _fd: Fd, token: u64) -> io::Result<()> {
+            let mut reg = self.registered.lock().unwrap();
+            let before = reg.len();
+            reg.retain(|&(_, t, _)| t != token);
+            if reg.len() == before {
+                return Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    "token not registered",
+                ));
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let nap = match timeout {
+                None => TICK,
+                Some(d) => d.min(TICK),
+            };
+            if !nap.is_zero() {
+                std::thread::sleep(nap);
+            }
+            let reg = self.registered.lock().unwrap();
+            for &(_, token, interest) in reg.iter() {
+                out.push(Event {
+                    token,
+                    readable: interest.readable,
+                    writable: interest.writable,
+                    hup: false,
+                    error: false,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+/// A readiness poller over nonblocking file descriptors.
+///
+/// Level-triggered: a condition that remains true is re-reported on
+/// every [`Poller::wait`]. Registrations are keyed by caller-chosen
+/// `u64` tokens, echoed back in [`Event::token`].
+pub struct Poller {
+    backend: sys::Backend,
+}
+
+impl Poller {
+    /// Create a new poller (one `epoll` instance on Linux).
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            backend: sys::Backend::new()?,
+        })
+    }
+
+    /// Start watching `fd`, reporting events under `token`.
+    pub fn register(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+        self.backend.register(fd, token, interest)
+    }
+
+    /// Change the interest set of an existing registration.
+    pub fn reregister(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+        self.backend.reregister(fd, token, interest)
+    }
+
+    /// Stop watching `fd`. Must be called before the fd is closed.
+    pub fn deregister(&self, fd: Fd, token: u64) -> io::Result<()> {
+        self.backend.deregister(fd, token)
+    }
+
+    /// Block until at least one event is ready or `timeout` elapses
+    /// (`None` = wait indefinitely), appending events to `out`.
+    ///
+    /// May return with `out` unchanged (timeout, or a spurious wakeup);
+    /// may also report readiness that a subsequent read/write contradicts
+    /// with `WouldBlock` — both are normal and must be tolerated.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        self.backend.wait(out, timeout)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-thread wakeup
+// ---------------------------------------------------------------------------
+
+/// Sending half of a [`wake_pair`]: interrupts a blocked
+/// [`Poller::wait`] from any thread. Cheap to clone.
+#[derive(Clone)]
+pub struct Waker {
+    #[cfg(unix)]
+    tx: std::sync::Arc<std::os::unix::net::UnixStream>,
+    #[cfg(not(unix))]
+    _nothing: (),
+}
+
+impl Waker {
+    /// Wake the paired [`WakeReceiver`]'s poller. Never blocks; if a
+    /// wakeup is already pending the call is a no-op.
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Write;
+            let _ = (&*self.tx).write(&[1u8]);
+        }
+    }
+}
+
+/// Receiving half of a [`wake_pair`]: owned by the event loop, which
+/// registers [`WakeReceiver::fd`] for readability and calls
+/// [`WakeReceiver::drain`] whenever its token fires.
+pub struct WakeReceiver {
+    #[cfg(unix)]
+    rx: std::os::unix::net::UnixStream,
+    #[cfg(not(unix))]
+    _nothing: (),
+}
+
+impl WakeReceiver {
+    /// The fd to register in the poller, or `None` on platforms where
+    /// the tick backend makes an explicit wakeup channel unnecessary.
+    pub fn fd(&self) -> Option<Fd> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            Some(self.rx.as_raw_fd())
+        }
+        #[cfg(not(unix))]
+        {
+            None
+        }
+    }
+
+    /// Consume all pending wakeup bytes so level-triggered polling does
+    /// not spin on an already-delivered wakeup.
+    pub fn drain(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Read;
+            let mut sink = [0u8; 64];
+            while let Ok(n) = (&self.rx).read(&mut sink) {
+                if n == 0 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Create a connected wakeup pair (a nonblocking socketpair on unix).
+pub fn wake_pair() -> io::Result<(Waker, WakeReceiver)> {
+    #[cfg(unix)]
+    {
+        let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((
+            Waker {
+                tx: std::sync::Arc::new(tx),
+            },
+            WakeReceiver { rx },
+        ))
+    }
+    #[cfg(not(unix))]
+    {
+        Ok((Waker { _nothing: () }, WakeReceiver { _nothing: () }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deadline wheel
+// ---------------------------------------------------------------------------
+
+/// Number of slots in a [`DeadlineWheel`]. With the default 25ms
+/// granularity the wheel spans 6.4s before wrapping; deadlines beyond
+/// the horizon simply fire early and are re-armed by the caller's
+/// validation (see [`DeadlineWheel::tick`]).
+const WHEEL_SLOTS: usize = 256;
+
+/// Default wheel granularity. Coarse on purpose: request-read deadlines
+/// are hundreds of milliseconds to seconds, and a 25ms-late 408 is
+/// indistinguishable from scheduling jitter.
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(25);
+
+/// A coarse hashed timer wheel holding `(token, generation)` entries.
+///
+/// The wheel never *cancels* an entry — cancellation is lazy. Callers
+/// keep the authoritative `(deadline, generation)` per connection and
+/// validate every entry [`tick`](DeadlineWheel::tick) hands back:
+///
+/// * stale generation → the deadline was disarmed or re-armed; drop it;
+/// * deadline still in the future → the wheel wrapped (horizon) or the
+///   entry landed a slot early; re-[`insert`](DeadlineWheel::insert);
+/// * otherwise → genuinely expired; act on it.
+///
+/// This keeps insert/cancel O(1) with zero allocation on the cancel
+/// path, which matters because every keep-alive request arms and
+/// disarms a deadline.
+pub struct DeadlineWheel {
+    buckets: Vec<Vec<(u64, u64)>>,
+    granularity: Duration,
+    started: Instant,
+    /// Absolute slot index the wheel has ticked up to (inclusive).
+    cursor: u64,
+    len: usize,
+}
+
+impl DeadlineWheel {
+    /// New wheel with the default granularity, origin `now`.
+    pub fn new(now: Instant) -> DeadlineWheel {
+        DeadlineWheel::with_granularity(now, WHEEL_GRANULARITY)
+    }
+
+    /// New wheel with an explicit granularity (tests use a fine one).
+    pub fn with_granularity(now: Instant, granularity: Duration) -> DeadlineWheel {
+        DeadlineWheel {
+            buckets: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            granularity,
+            started: now,
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    fn slot_of(&self, at: Instant) -> u64 {
+        let since = at.saturating_duration_since(self.started);
+        // Round up: an entry must never expire before its deadline.
+        let g = self.granularity.as_nanos().max(1);
+        since.as_nanos().div_ceil(g) as u64
+    }
+
+    /// Arm `(token, generation)` to be handed back once `deadline` has
+    /// passed (possibly earlier if the wheel wraps — see type docs).
+    pub fn insert(&mut self, token: u64, generation: u64, deadline: Instant) {
+        let slot = self.slot_of(deadline).max(self.cursor + 1);
+        let idx = (slot % WHEEL_SLOTS as u64) as usize;
+        self.buckets[idx].push((token, generation));
+        self.len += 1;
+    }
+
+    /// Number of armed (possibly stale) entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no entries are armed.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Advance the wheel to `now` and return every entry whose slot has
+    /// passed. Entries are *candidates*: the caller must validate
+    /// generation and deadline (see type docs).
+    pub fn tick(&mut self, now: Instant) -> Vec<(u64, u64)> {
+        let target = self.slot_of(now);
+        if target <= self.cursor || self.len == 0 {
+            // Still advance the cursor so a long-idle wheel does not
+            // replay the whole wrap distance on its next entry.
+            self.cursor = self.cursor.max(target);
+            return Vec::new();
+        }
+        let mut expired = Vec::new();
+        // Draining more than a full revolution visits each slot once.
+        let steps = (target - self.cursor).min(WHEEL_SLOTS as u64);
+        for s in 1..=steps {
+            let idx = ((self.cursor + s) % WHEEL_SLOTS as u64) as usize;
+            expired.append(&mut self.buckets[idx]);
+        }
+        self.cursor = target;
+        self.len -= expired.len();
+        expired
+    }
+
+    /// How long until the next armed slot fires, measured from `now`.
+    /// `None` when the wheel is empty.
+    pub fn next_timeout(&self, now: Instant) -> Option<Duration> {
+        if self.len == 0 {
+            return None;
+        }
+        for step in 1..=WHEEL_SLOTS as u64 {
+            let idx = ((self.cursor + step) % WHEEL_SLOTS as u64) as usize;
+            if !self.buckets[idx].is_empty() {
+                let fire_slot = self.cursor + step;
+                let fire_at = self.started + self.granularity * (fire_slot as u32);
+                return Some(fire_at.saturating_duration_since(now));
+            }
+        }
+        // len > 0 but every bucket scanned empty cannot happen; be safe.
+        Some(self.granularity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::{Duration, Instant};
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[cfg(unix)]
+    fn fd_of(s: &TcpStream) -> Fd {
+        use std::os::unix::io::AsRawFd;
+        s.as_raw_fd()
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn readable_only_after_data_arrives() {
+        let (client, server) = loopback_pair();
+        server.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller
+            .register(fd_of(&server), 7, Interest::READABLE)
+            .unwrap();
+
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        #[cfg(target_os = "linux")]
+        assert!(
+            events.is_empty(),
+            "no data written yet, epoll must not report readable: {events:?}"
+        );
+
+        (&client).write_all(b"ping").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        events.clear();
+        while events.is_empty() && Instant::now() < deadline {
+            poller
+                .wait(&mut events, Some(Duration::from_millis(100)))
+                .unwrap();
+        }
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+        poller.deregister(fd_of(&server), 7).unwrap();
+    }
+
+    /// The contract the event loop relies on: readiness is a *hint*.
+    /// After consuming all buffered bytes, the same level-triggered
+    /// registration stops firing, and an extra read must come back
+    /// `WouldBlock` rather than blocking or erroring — i.e. a spurious
+    /// or stale wakeup is always survivable by retrying later.
+    #[cfg(unix)]
+    #[test]
+    fn spurious_wakeup_resolves_to_would_block() {
+        let (client, mut server) = loopback_pair();
+        server.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller
+            .register(fd_of(&server), 1, Interest::READABLE)
+            .unwrap();
+
+        (&client).write_all(b"x").unwrap();
+        let mut events = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while events.is_empty() && Instant::now() < deadline {
+            poller
+                .wait(&mut events, Some(Duration::from_millis(100)))
+                .unwrap();
+        }
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+
+        // Consume everything the readiness event promised.
+        let mut buf = [0u8; 16];
+        assert_eq!(server.read(&mut buf).unwrap(), 1);
+
+        // Treat the next poll as if it were a spurious wakeup: whether
+        // or not an event is reported (the tick backend always reports
+        // one), the read must resolve to WouldBlock, not a hang.
+        events.clear();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        #[cfg(target_os = "linux")]
+        assert!(
+            events.is_empty(),
+            "drained level-triggered fd re-reported: {events:?}"
+        );
+        let err = server.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+        poller.deregister(fd_of(&server), 1).unwrap();
+    }
+
+    /// EPOLLHUP/EPOLLRDHUP edge: when the peer closes, the poller must
+    /// report the fd (readable and/or hup) so the state machine can run
+    /// its read and observe the clean EOF (`Ok(0)`) instead of the
+    /// connection idling forever.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn peer_close_reports_hup_and_reads_eof() {
+        let (client, mut server) = loopback_pair();
+        server.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller
+            .register(fd_of(&server), 9, Interest::READABLE)
+            .unwrap();
+
+        drop(client); // full close → EPOLLRDHUP (and usually EPOLLHUP)
+
+        let mut events = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while events.is_empty() && Instant::now() < deadline {
+            poller
+                .wait(&mut events, Some(Duration::from_millis(100)))
+                .unwrap();
+        }
+        let ev = events.iter().find(|e| e.token == 9).expect("no event");
+        assert!(
+            ev.hup || ev.readable,
+            "peer close must surface as hup or readable: {ev:?}"
+        );
+        let mut buf = [0u8; 8];
+        assert_eq!(server.read(&mut buf).unwrap(), 0, "expected clean EOF");
+        poller.deregister(fd_of(&server), 9).unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn waker_interrupts_a_blocked_wait() {
+        let poller = Poller::new().unwrap();
+        let (waker, rx) = wake_pair().unwrap();
+        if let Some(fd) = rx.fd() {
+            poller.register(fd, 2, Interest::READABLE).unwrap();
+        }
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            waker.wake();
+            waker.wake(); // double-wake must coalesce, not wedge
+        });
+        let mut events = Vec::new();
+        let start = Instant::now();
+        let deadline = start + Duration::from_secs(5);
+        while events.is_empty() && Instant::now() < deadline {
+            poller
+                .wait(&mut events, Some(Duration::from_millis(200)))
+                .unwrap();
+        }
+        assert!(events.iter().any(|e| e.token == 2 && e.readable));
+        rx.drain();
+        t.join().unwrap();
+        // After draining, the wakeup must not re-fire (level-triggered).
+        #[cfg(target_os = "linux")]
+        {
+            events.clear();
+            poller
+                .wait(&mut events, Some(Duration::from_millis(20)))
+                .unwrap();
+            assert!(events.is_empty(), "drained waker re-fired: {events:?}");
+        }
+    }
+
+    #[test]
+    fn wheel_fires_after_deadline_not_before() {
+        let t0 = Instant::now();
+        let mut wheel = DeadlineWheel::with_granularity(t0, Duration::from_millis(1));
+        let dl = t0 + Duration::from_millis(10);
+        wheel.insert(41, 1, dl);
+        assert_eq!(wheel.len(), 1);
+        assert!(wheel.tick(t0 + Duration::from_millis(3)).is_empty());
+        let fired = wheel.tick(t0 + Duration::from_millis(30));
+        assert_eq!(fired, vec![(41, 1)]);
+        assert!(wheel.is_empty());
+    }
+
+    #[test]
+    fn wheel_next_timeout_tracks_earliest_entry() {
+        let t0 = Instant::now();
+        let mut wheel = DeadlineWheel::with_granularity(t0, Duration::from_millis(1));
+        assert!(wheel.next_timeout(t0).is_none());
+        wheel.insert(1, 1, t0 + Duration::from_millis(50));
+        wheel.insert(2, 1, t0 + Duration::from_millis(8));
+        let hint = wheel.next_timeout(t0).unwrap();
+        assert!(
+            hint <= Duration::from_millis(9) && hint >= Duration::from_millis(7),
+            "hint {hint:?} should be ≈8ms"
+        );
+    }
+
+    #[test]
+    fn wheel_beyond_horizon_fires_early_for_revalidation() {
+        let t0 = Instant::now();
+        let mut wheel = DeadlineWheel::with_granularity(t0, Duration::from_millis(1));
+        // 1ms × 256 slots = 256ms horizon; 400ms wraps.
+        let dl = t0 + Duration::from_millis(400);
+        wheel.insert(5, 3, dl);
+        let mut fired = Vec::new();
+        let mut now = t0;
+        // Walk simulated time; a wrapped entry fires early at least once
+        // and the caller re-inserts until the true deadline passes.
+        while fired.is_empty() {
+            now += Duration::from_millis(100);
+            assert!(
+                now <= t0 + Duration::from_secs(2),
+                "entry never fired at all"
+            );
+            for (tok, gen) in wheel.tick(now) {
+                if now >= dl {
+                    fired.push((tok, gen));
+                } else {
+                    wheel.insert(tok, gen, dl); // caller-side revalidation
+                }
+            }
+        }
+        assert_eq!(fired, vec![(5, 3)]);
+    }
+
+    #[test]
+    fn wheel_stale_generation_is_handed_back_for_caller_filtering() {
+        let t0 = Instant::now();
+        let mut wheel = DeadlineWheel::with_granularity(t0, Duration::from_millis(1));
+        wheel.insert(7, 1, t0 + Duration::from_millis(5));
+        // Re-arm the same token under a newer generation (keep-alive
+        // request completed, next request started a fresh deadline).
+        wheel.insert(7, 2, t0 + Duration::from_millis(10));
+        let fired = wheel.tick(t0 + Duration::from_millis(20));
+        assert_eq!(fired.len(), 2, "lazy cancellation returns both");
+        assert!(fired.contains(&(7, 1)) && fired.contains(&(7, 2)));
+    }
+}

@@ -14,6 +14,7 @@
 //! in-process, the registry owns the artifact → engine pipeline and the
 //! per-model metadata (manifest stats, engine kind, input geometry).
 
+use super::api::{Classify, ClassifyReply, ClassifyRequest, ReplyCallback};
 use super::engine::Engine;
 use super::server::{Response, Server, ServerConfig};
 use crate::artifact::{read_model, ArtifactManifest};
@@ -21,7 +22,7 @@ use crate::hw::HwReport;
 use crate::nn::binary::BinaryNet;
 use crate::nn::csr_engine::CompiledQuantModel;
 use crate::nn::QuantModel;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -175,59 +176,63 @@ impl ModelRegistry {
         Ok(())
     }
 
-    /// Classify on a named model (None → default) through its batching
-    /// server. Rejects wrong-sized inputs up front — a bad request must
-    /// never reach (and wedge) a worker thread.
-    pub fn classify(&self, model: Option<&str>, pixels: Vec<u8>) -> Result<Response> {
-        let name = match model.or(self.default_model.as_deref()) {
+    /// Resolve a request's route to its entry, validating every sample
+    /// length up front — a bad request must never reach (and wedge) a
+    /// lane thread, and one bad sample must not poison the batch.
+    fn route(&self, req: &ClassifyRequest) -> Result<&ModelEntry> {
+        let name = match req.model.as_deref().or(self.default_model.as_deref()) {
             Some(n) => n,
             None => bail!("registry is empty"),
         };
-        match self.entries.get(name) {
-            Some(e) => {
-                if pixels.len() != e.info.input_len {
-                    bail!(
-                        "model '{name}' expects {} pixels, got {}",
-                        e.info.input_len,
-                        pixels.len()
-                    );
-                }
-                e.server.classify(pixels)
-            }
+        let entry = match self.entries.get(name) {
+            Some(e) => e,
             None => bail!("unknown model '{name}'"),
+        };
+        for (i, s) in req.samples.iter().enumerate() {
+            if s.len() != entry.info.input_len {
+                bail!(
+                    "model '{name}' expects {} pixels, sample {i} has {}",
+                    entry.info.input_len,
+                    s.len()
+                );
+            }
+        }
+        Ok(entry)
+    }
+
+    /// Asynchronous unified submit: resolve and validate on the caller's
+    /// thread, then hand the request to the route's batching server.
+    /// `done` fires exactly once — immediately on routing/validation
+    /// failure, otherwise on a lane thread when the last sample lands.
+    /// This is the event-driven HTTP front end's entry point.
+    pub fn submit_async(&self, req: ClassifyRequest, done: ReplyCallback) {
+        match self.route(&req) {
+            Ok(entry) => entry.server.submit_async(req, done),
+            Err(e) => done(Err(e)),
         }
     }
 
+    /// Classify on a named model (None → default) through its batching
+    /// server.
+    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::single`")]
+    pub fn classify(&self, model: Option<&str>, pixels: Vec<u8>) -> Result<Response> {
+        let mut req = ClassifyRequest::single(pixels);
+        req.model = model.map(str::to_string);
+        let mut reply = Classify::submit(self, req)?;
+        reply.results.pop().ok_or_else(|| anyhow!("empty reply"))
+    }
+
     /// Classify a whole micro-batch on a named model (None → default)
-    /// through its batching server — the registry's batched entry point.
-    /// Every sample is length-checked up front (one bad request must not
-    /// poison the batch), then the server coalesces the submissions and
-    /// the worker executes them through the engine's `forward_block`
-    /// path. Responses come back in request order.
+    /// through its batching server.
+    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::batch`")]
     pub fn classify_batch(
         &self,
         model: Option<&str>,
         samples: Vec<Vec<u8>>,
     ) -> Result<Vec<Response>> {
-        let name = match model.or(self.default_model.as_deref()) {
-            Some(n) => n,
-            None => bail!("registry is empty"),
-        };
-        match self.entries.get(name) {
-            Some(e) => {
-                for (i, s) in samples.iter().enumerate() {
-                    if s.len() != e.info.input_len {
-                        bail!(
-                            "model '{name}' expects {} pixels, sample {i} has {}",
-                            e.info.input_len,
-                            s.len()
-                        );
-                    }
-                }
-                e.server.classify_batch(samples)
-            }
-            None => bail!("unknown model '{name}'"),
-        }
+        let mut req = ClassifyRequest::batch(samples);
+        req.model = model.map(str::to_string);
+        Ok(Classify::submit(self, req)?.results)
     }
 
     /// Resolve a route to its model metadata: `None` → the default
@@ -291,6 +296,18 @@ impl ModelRegistry {
     }
 }
 
+impl Classify for ModelRegistry {
+    /// Blocking unified submit: resolve the route (`req.model`, `None` →
+    /// default), length-check every sample, then submit through the
+    /// route's batching server. The reply's `model` is the resolved
+    /// route name. Admission failures carry a typed
+    /// [`super::AdmitError`] (downcast to map saturation to 429/503);
+    /// routing misses and bad lengths surface as plain errors.
+    fn submit(&self, req: ClassifyRequest) -> Result<ClassifyReply> {
+        self.route(&req)?.server.submit(req)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,6 +328,27 @@ mod tests {
         };
         let m = Model::synth(&spec, seed);
         quantize(&m, &[1.5, 1.0], RhoMode::Norm).unwrap().quant_model
+    }
+
+    fn classify_one(
+        reg: &ModelRegistry,
+        model: Option<&str>,
+        pixels: Vec<u8>,
+    ) -> Result<Response> {
+        let mut req = ClassifyRequest::single(pixels);
+        req.model = model.map(str::to_string);
+        let mut reply = reg.submit(req)?;
+        reply.results.pop().ok_or_else(|| anyhow!("empty reply"))
+    }
+
+    fn classify_many(
+        reg: &ModelRegistry,
+        model: Option<&str>,
+        samples: Vec<Vec<u8>>,
+    ) -> Result<Vec<Response>> {
+        let mut req = ClassifyRequest::batch(samples);
+        req.model = model.map(str::to_string);
+        Ok(reg.submit(req)?.results)
     }
 
     #[test]
@@ -338,17 +376,17 @@ mod tests {
         let mut rng = Rng::new(5);
         let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
         // default is the first registration
-        let a = reg.classify(None, pixels.clone()).unwrap();
-        let b = reg.classify(Some("m2"), pixels.clone()).unwrap();
+        let a = classify_one(&reg, None, pixels.clone()).unwrap();
+        let b = classify_one(&reg, Some("m2"), pixels.clone()).unwrap();
         assert!(a.class < 4 && b.class < 4);
-        assert!(reg.classify(Some("nope"), pixels.clone()).is_err());
+        assert!(classify_one(&reg, Some("nope"), pixels.clone()).is_err());
         // wrong-length requests are rejected before reaching a worker,
         // and the server stays healthy afterwards
-        assert!(reg.classify(Some("m2"), vec![0u8; 5]).is_err());
-        assert!(reg.classify(Some("m2"), pixels.clone()).is_ok());
+        assert!(classify_one(&reg, Some("m2"), vec![0u8; 5]).is_err());
+        assert!(classify_one(&reg, Some("m2"), pixels.clone()).is_ok());
         assert!(reg.set_default("nope").is_err());
         reg.set_default("m2").unwrap();
-        let c = reg.classify(None, pixels).unwrap();
+        let c = classify_one(&reg, None, pixels).unwrap();
         assert_eq!(c.class, b.class);
         assert!(reg.summary().contains("[m1]"));
         reg.shutdown();
@@ -365,19 +403,37 @@ mod tests {
         let samples: Vec<Vec<u8>> =
             (0..12).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
         for model in [None, Some("csr"), Some("bin")] {
-            let got = reg.classify_batch(model, samples.clone()).unwrap();
-            assert_eq!(got.len(), 12);
+            let mut req = ClassifyRequest::batch(samples.clone());
+            req.model = model.map(str::to_string);
+            let reply = reg.submit(req).unwrap();
+            // the reply names the route that actually served it
+            assert_eq!(reply.model, model.unwrap_or("csr"));
+            assert_eq!(reply.results.len(), 12);
             // batched and scalar serving agree per sample
-            for (s, r) in samples.iter().zip(&got) {
-                let scalar = reg.classify(model, s.clone()).unwrap();
+            for (s, r) in samples.iter().zip(&reply.results) {
+                let scalar = classify_one(&reg, model, s.clone()).unwrap();
                 assert_eq!(r.class, scalar.class);
             }
         }
         // one bad length rejects the whole batch before any submission
         let mut bad = samples.clone();
         bad[7] = vec![0u8; 3];
-        assert!(reg.classify_batch(Some("csr"), bad).is_err());
-        assert!(reg.classify_batch(Some("nope"), samples).is_err());
+        assert!(classify_many(&reg, Some("csr"), bad).is_err());
+        assert!(classify_many(&reg, Some("nope"), samples).is_err());
+        reg.shutdown();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_route() {
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        reg.register_quant("m", quant_mlp(Activation::Relu, 20), EngineKind::Csr, None)
+            .unwrap();
+        let mut rng = Rng::new(21);
+        let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+        let one = reg.classify(Some("m"), pixels.clone()).unwrap();
+        let many = reg.classify_batch(None, vec![pixels]).unwrap();
+        assert_eq!(one.class, many[0].class);
         reg.shutdown();
     }
 
@@ -408,8 +464,8 @@ mod tests {
         let samples: Vec<Vec<u8>> =
             (0..25).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
         for model in ["csr", "bin"] {
-            let got = sharded.classify_batch(Some(model), samples.clone()).unwrap();
-            let want = plain.classify_batch(Some(model), samples.clone()).unwrap();
+            let got = classify_many(&sharded, Some(model), samples.clone()).unwrap();
+            let want = classify_many(&plain, Some(model), samples.clone()).unwrap();
             for (g, w) in got.iter().zip(&want) {
                 assert_eq!(g.class, w.class, "model {model}");
             }
@@ -432,6 +488,6 @@ mod tests {
     #[test]
     fn empty_registry_errors() {
         let reg = ModelRegistry::new(ServerConfig::default());
-        assert!(reg.classify(None, vec![0u8; 16]).is_err());
+        assert!(classify_one(&reg, None, vec![0u8; 16]).is_err());
     }
 }

@@ -3,9 +3,10 @@
 //! default route and per-route metrics. This is the L3 front door the
 //! CLI's `serve` subcommand and the serving bench exercise.
 
+use super::api::{Classify, ClassifyReply, ClassifyRequest};
 use super::server::{Response, Server, ServerConfig};
 use super::Engine;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
 /// Named collection of running servers.
@@ -26,34 +27,31 @@ impl Router {
         }
         let mut routes = HashMap::new();
         for (name, engine) in engines {
-            routes.insert(name, Server::start(engine, cfg.clone()));
+            let server = Server::start_named(engine, cfg.clone(), &name, None);
+            routes.insert(name, server);
         }
         Ok(Router { routes, default_route: default_route.to_string() })
     }
 
     /// Classify on a named route (None → default).
+    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::single`")]
     pub fn classify(&self, route: Option<&str>, pixels: Vec<u8>) -> Result<Response> {
-        let name = route.unwrap_or(&self.default_route);
-        match self.routes.get(name) {
-            Some(s) => s.classify(pixels),
-            None => bail!("unknown route '{name}'"),
-        }
+        let mut req = ClassifyRequest::single(pixels);
+        req.model = route.map(str::to_string);
+        let mut reply = Classify::submit(self, req)?;
+        reply.results.pop().ok_or_else(|| anyhow!("empty reply"))
     }
 
     /// Classify a whole micro-batch on a named route (None → default).
-    /// The samples are coalesced by the route's batcher and drained
-    /// through the engine's batch-fused path in as few weight-structure
-    /// traversals as the dispatch windows allow.
+    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::batch`")]
     pub fn classify_batch(
         &self,
         route: Option<&str>,
         samples: Vec<Vec<u8>>,
     ) -> Result<Vec<Response>> {
-        let name = route.unwrap_or(&self.default_route);
-        match self.routes.get(name) {
-            Some(s) => s.classify_batch(samples),
-            None => bail!("unknown route '{name}'"),
-        }
+        let mut req = ClassifyRequest::batch(samples);
+        req.model = route.map(str::to_string);
+        Ok(Classify::submit(self, req)?.results)
     }
 
     /// Route names.
@@ -76,6 +74,20 @@ impl Router {
     pub fn shutdown(self) {
         for (_, s) in self.routes {
             s.shutdown();
+        }
+    }
+}
+
+impl Classify for Router {
+    /// Blocking unified submit: route on `req.model` (`None` → the
+    /// default route), then submit through that route's batching
+    /// server. The samples are coalesced by the route's accumulator
+    /// lanes and drained through the engine's batch-fused path.
+    fn submit(&self, req: ClassifyRequest) -> Result<ClassifyReply> {
+        let name = req.model.as_deref().unwrap_or(&self.default_route);
+        match self.routes.get(name) {
+            Some(s) => s.submit(req),
+            None => bail!("unknown route '{name}'"),
         }
     }
 }
@@ -116,14 +128,33 @@ mod tests {
         let router = Router::new(engines(1), "float", ServerConfig::default()).unwrap();
         let mut rng = Rng::new(2);
         let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-        let a = router.classify(None, pixels.clone()).unwrap();
-        let b = router.classify(Some("pvq"), pixels.clone()).unwrap();
+        let a = router.submit(ClassifyRequest::single(pixels.clone())).unwrap();
+        let b = router
+            .submit(ClassifyRequest::single(pixels.clone()).with_model("pvq"))
+            .unwrap();
+        // the reply names the route that served it
+        assert_eq!(a.model, "float");
+        assert_eq!(b.model, "pvq");
         // K=N quantization: engines should agree on most inputs; don't
         // assert equality per-sample, just validity
-        assert!(a.class < 4 && b.class < 4);
-        assert!(router.classify(Some("nope"), pixels).is_err());
+        assert!(a.results[0].class < 4 && b.results[0].class < 4);
+        assert!(router
+            .submit(ClassifyRequest::single(pixels).with_model("nope"))
+            .is_err());
         let s = router.summary();
         assert!(s.contains("[float]") && s.contains("[pvq]"));
+        router.shutdown();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_route() {
+        let router = Router::new(engines(5), "float", ServerConfig::default()).unwrap();
+        let mut rng = Rng::new(6);
+        let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+        let one = router.classify(None, pixels.clone()).unwrap();
+        let many = router.classify_batch(Some("float"), vec![pixels]).unwrap();
+        assert_eq!(one.class, many[0].class);
         router.shutdown();
     }
 

@@ -1,24 +1,37 @@
-//! Batching inference server.
+//! Continuously batching inference server.
 //!
-//! vLLM-router-style shape scaled to this paper: a FIFO request queue, a
-//! dynamic batcher (dispatch when `max_batch` requests are waiting or the
-//! oldest has waited `max_wait`), and a worker pool executing an
-//! [`Engine`]. std::thread + mpsc (tokio is unavailable in this offline
-//! environment; the request path is CPU-bound anyway).
+//! vLLM-style continuous batching scaled to this paper: requests land on
+//! a bounded admission panel, and each worker thread is an *accumulator
+//! lane* that claims a fresh micro-batch the moment it frees up —
+//! greedily draining the backlog up to `max_batch`, then (only when the
+//! panel ran dry below a full batch) holding a short `max_wait`
+//! accumulation window for stragglers. There is no separate batcher
+//! thread and no fixed dispatch wave: admission is continuous, so a new
+//! request never waits behind a wave boundary when a lane is idle.
 //!
-//! Workers hand each dispatched micro-batch to
-//! [`Engine::classify_batch`] in one call, so the CSR and binary engines
-//! execute it through their batch-fused `forward_block` kernels — the
-//! weight structure is traversed once per batch, not once per request.
+//! Lanes hand each claimed micro-batch to [`Engine::classify_batch`] in
+//! one call, so the CSR and binary engines execute it through their
+//! batch-fused `forward_block` kernels — the weight structure is
+//! traversed once per batch, not once per request — and the result is
+//! bitwise identical to calling the engine directly (the load harness's
+//! oracle invariant).
+//!
+//! Callers use the unified [`Classify::submit`] entry point (or the
+//! callback-based [`Server::submit_async`] used by the event-driven HTTP
+//! front end); the old `classify`/`classify_batch` pair survives as
+//! `#[deprecated]` shims. std::thread + callbacks (tokio is unavailable
+//! in this offline environment; the request path is CPU-bound anyway).
 
+use super::api::{Classify, ClassifyReply, ClassifyRequest, ConfigError, ReplyCallback};
 use super::engine::Engine;
 use super::metrics::Metrics;
 use crate::hw::InferenceCost;
 use crate::obs::{self, Stage, TraceCtx};
-use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Why a request could not be admitted. Typed (rather than a stringly
@@ -27,7 +40,7 @@ use std::time::{Duration, Instant};
 /// `Closed` into `503`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmitError {
-    /// The bounded admission queue is full (backpressure); retry later.
+    /// The bounded admission panel is full (backpressure); retry later.
     QueueFull,
     /// The server is stopped or draining; the request was not enqueued.
     Closed,
@@ -44,16 +57,20 @@ impl std::fmt::Display for AdmitError {
 
 impl std::error::Error for AdmitError {}
 
-/// Server tuning knobs.
+/// Server tuning knobs. Prefer [`ServerConfig::builder`], which
+/// validates the knobs against each other at build time; the fields
+/// stay public so tests can construct deliberately broken configs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Dispatch as soon as this many requests are queued.
+    /// A lane claims at most this many requests per micro-batch.
     pub max_batch: usize,
-    /// …or when the oldest queued request has waited this long.
+    /// How long a lane holding a partial batch waits for stragglers
+    /// once the panel has run dry (zero = dispatch partial batches
+    /// immediately).
     pub max_wait: Duration,
-    /// Worker threads executing batches.
+    /// Worker threads (accumulator lanes) executing batches.
     pub workers: usize,
-    /// Bound on the admission queue (backpressure).
+    /// Bound on the admission panel (backpressure).
     pub queue_cap: usize,
     /// Intra-model shards per `forward_block` call: the registry
     /// configures each compiled engine's [`crate::nn::ShardPlan`]s with
@@ -76,6 +93,76 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// Builder-style constructor that validates the knobs at build time
+    /// and returns a typed [`ConfigError`] instead of panicking or
+    /// silently clamping at first use.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder {
+            cfg: ServerConfig::default(),
+        }
+    }
+}
+
+/// Validating builder for [`ServerConfig`]; see [`ServerConfig::builder`].
+#[derive(Clone, Debug)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    /// Set [`ServerConfig::max_batch`].
+    pub fn max_batch(mut self, v: usize) -> Self {
+        self.cfg.max_batch = v;
+        self
+    }
+
+    /// Set [`ServerConfig::max_wait`].
+    pub fn max_wait(mut self, v: Duration) -> Self {
+        self.cfg.max_wait = v;
+        self
+    }
+
+    /// Set [`ServerConfig::workers`].
+    pub fn workers(mut self, v: usize) -> Self {
+        self.cfg.workers = v;
+        self
+    }
+
+    /// Set [`ServerConfig::queue_cap`].
+    pub fn queue_cap(mut self, v: usize) -> Self {
+        self.cfg.queue_cap = v;
+        self
+    }
+
+    /// Set [`ServerConfig::shards`].
+    pub fn shards(mut self, v: usize) -> Self {
+        self.cfg.shards = v;
+        self
+    }
+
+    /// Validate the knobs against each other and return the config, or
+    /// a typed [`ConfigError`] naming the offending field.
+    pub fn build(self) -> Result<ServerConfig, ConfigError> {
+        if self.cfg.max_batch == 0 {
+            return Err(ConfigError::new("max_batch", "must be >= 1"));
+        }
+        if self.cfg.workers == 0 {
+            return Err(ConfigError::new("workers", "must be >= 1"));
+        }
+        if self.cfg.shards == 0 {
+            return Err(ConfigError::new("shards", "must be >= 1"));
+        }
+        if self.cfg.queue_cap < self.cfg.max_batch {
+            return Err(ConfigError::new(
+                "queue_cap",
+                format!("must be >= max_batch ({})", self.cfg.max_batch),
+            ));
+        }
+        Ok(self.cfg)
+    }
+}
+
 /// One classification response.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -91,27 +178,51 @@ pub struct Response {
     pub batch: usize,
 }
 
+/// Per-sample completion callback; invoked exactly once, possibly on a
+/// lane thread.
+type DoneCallback = Box<dyn FnOnce(Result<Response, String>) + Send + 'static>;
+
 struct Request {
     pixels: Vec<u8>,
     enqueued: Instant,
-    /// Trace context captured at admission ([`obs::current_ctx`]).
+    /// Trace context captured at admission.
     trace: TraceCtx,
-    /// Stamped by the batcher at dispatch: admission-to-dispatch wait.
+    /// Stamped when a lane pops this request off the panel.
+    joined: Instant,
+    /// Stamped at dispatch: admission-to-dispatch wait.
     queue: Duration,
-    resp: SyncSender<Result<Response, String>>,
+    done: DoneCallback,
 }
 
-/// Handle to a running server; dropping it (or calling [`Server::shutdown`])
-/// stops the threads.
-pub struct Server {
-    tx: Option<SyncSender<Request>>,
+/// The in-flight admission panel: a bounded FIFO the lanes claim from.
+struct Panel {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// State shared between the admission side and the lanes.
+struct Core {
+    panel: Mutex<Panel>,
+    lane_free: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+    queue_cap: usize,
     metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
+    model_id: u32,
+}
+
+const WORKERS_GONE: &str = "server worker pool shut down before the batch ran";
+
+/// Handle to a running server; dropping it (or calling [`Server::shutdown`])
+/// closes the panel and joins the lanes (which drain it first).
+pub struct Server {
+    core: Arc<Core>,
+    name: String,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start batcher + workers over `engine`. Accepts either a bare
+    /// Start the accumulator lanes over `engine`. Accepts either a bare
     /// [`Engine`] or an `Arc<Engine>` — the registry passes a shared
     /// handle so the same engine instance can also be called directly
     /// (the load harness's bitwise oracle path).
@@ -130,123 +241,174 @@ impl Server {
         name: &str,
         cost: Option<InferenceCost>,
     ) -> Server {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_cap);
-        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
-        let brx = Arc::new(Mutex::new(brx));
         let metrics = Arc::new(Metrics::new());
-        let stop = Arc::new(AtomicBool::new(false));
+        let core = Arc::new(Core {
+            panel: Mutex::new(Panel {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            lane_free: Condvar::new(),
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            queue_cap: cfg.queue_cap,
+            metrics,
+            model_id: obs::intern_model(name),
+        });
         let engine: Arc<Engine> = engine.into();
-        let model_id = obs::intern_model(name);
         let cost = cost.unwrap_or_default();
 
-        // batcher thread
-        let m = metrics.clone();
-        let stop_b = stop.clone();
-        let max_batch = cfg.max_batch;
-        let max_wait = cfg.max_wait;
-        let batcher = std::thread::Builder::new()
-            .name("pvq-batcher".into())
-            .spawn(move || {
-                batcher_loop(rx, btx, m, stop_b, max_batch, max_wait, model_id);
-            })
-            .expect("spawn batcher");
-
-        // workers
-        let mut threads = vec![batcher];
+        let mut threads = Vec::new();
+        if cfg.workers == 0 {
+            // No lanes could ever run a batch: claim and error-reply so
+            // every admitted request still gets an explicit answer.
+            let c = core.clone();
+            let t = std::thread::Builder::new()
+                .name("pvq-lane-failer".into())
+                .spawn(move || failer_loop(&c))
+                .expect("spawn failer");
+            threads.push(t);
+        }
         for wi in 0..cfg.workers {
-            let brx = brx.clone();
+            let c = core.clone();
             let engine = engine.clone();
-            let m = metrics.clone();
             let t = std::thread::Builder::new()
                 .name(format!("pvq-worker-{wi}"))
-                .spawn(move || worker_loop(brx, engine, m, model_id, cost))
+                .spawn(move || worker_loop(&c, &engine, cost))
                 .expect("spawn worker");
             threads.push(t);
         }
 
-        Server { tx: Some(tx), metrics, stop, threads }
+        Server {
+            core,
+            name: name.to_string(),
+            threads,
+        }
     }
 
-    /// Submit a request; returns the response channel. Errors with
-    /// [`AdmitError::QueueFull`] when the bounded admission queue is
-    /// full (backpressure) and [`AdmitError::Closed`] when the server
-    /// is stopped.
-    pub fn submit(
+    /// Admit one sample onto the panel with an explicit completion
+    /// callback. On admission failure the callback is dropped uncalled
+    /// and the typed error returned instead.
+    fn enqueue_with(
         &self,
         pixels: Vec<u8>,
-    ) -> Result<Receiver<Result<Response, String>>, AdmitError> {
-        use std::sync::mpsc::TrySendError;
-        let (rtx, rrx) = sync_channel(1);
-        let req = Request {
-            pixels,
-            enqueued: Instant::now(),
-            trace: obs::current_ctx(),
-            queue: Duration::ZERO,
-            resp: rtx,
-        };
-        match self.tx.as_ref().expect("server running").try_send(req) {
-            Ok(()) => {
-                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                Ok(rrx)
+        trace: TraceCtx,
+        done: DoneCallback,
+    ) -> Result<(), AdmitError> {
+        {
+            let mut panel = self.core.panel.lock().unwrap();
+            if panel.closed {
+                return Err(AdmitError::Closed);
             }
-            Err(TrySendError::Full(_)) => Err(AdmitError::QueueFull),
-            Err(TrySendError::Disconnected(_)) => Err(AdmitError::Closed),
+            if panel.queue.len() >= self.core.queue_cap {
+                return Err(AdmitError::QueueFull);
+            }
+            let now = Instant::now();
+            panel.queue.push_back(Request {
+                pixels,
+                enqueued: now,
+                trace,
+                joined: now,
+                queue: Duration::ZERO,
+                done,
+            });
+        }
+        self.core.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.core.lane_free.notify_one();
+        Ok(())
+    }
+
+    /// Admit one sample; returns the response channel. Errors with
+    /// [`AdmitError::QueueFull`] when the bounded admission panel is
+    /// full (backpressure) and [`AdmitError::Closed`] when the server
+    /// is stopped. The trace context is captured from the ambient
+    /// [`obs::current_ctx`] at admission.
+    pub fn enqueue(&self, pixels: Vec<u8>) -> Result<Receiver<Result<Response, String>>, AdmitError> {
+        let (rtx, rrx) = sync_channel(1);
+        self.enqueue_with(
+            pixels,
+            obs::current_ctx(),
+            Box::new(move |r| {
+                let _ = rtx.send(r);
+            }),
+        )?;
+        Ok(rrx)
+    }
+
+    /// Asynchronous unified submit: admit every sample in `req` and
+    /// invoke `done` exactly once when the last one completes (or
+    /// immediately on admission failure after awaiting what was already
+    /// admitted — in-flight work is never silently thrown away).
+    ///
+    /// This is the event-driven HTTP front end's entry point: the event
+    /// loop hands off the request here and goes back to polling; `done`
+    /// runs on a lane thread.
+    pub fn submit_async(&self, req: ClassifyRequest, done: ReplyCallback) {
+        let n = req.samples.len();
+        let model = self.name.clone();
+        if n == 0 {
+            done(Ok(ClassifyReply {
+                model,
+                results: Vec::new(),
+            }));
+            return;
+        }
+        let ctx = if req.trace_ctx.id != 0 {
+            req.trace_ctx
+        } else {
+            obs::current_ctx()
+        };
+        let join = Arc::new(Mutex::new(JoinState {
+            slots: vec![None; n],
+            remaining: n,
+            admit_err: None,
+            done: Some(done),
+            model,
+        }));
+        for (i, sample) in req.samples.into_iter().enumerate() {
+            let j = join.clone();
+            let admitted = self.enqueue_with(
+                sample,
+                ctx,
+                Box::new(move |r| JoinState::complete(&j, i, r)),
+            );
+            if let Err(e) = admitted {
+                JoinState::abort_from(&join, i, n, e);
+                return;
+            }
         }
     }
 
     /// Submit and wait.
+    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::single`")]
     pub fn classify(&self, pixels: Vec<u8>) -> Result<Response> {
-        let rx = self.submit(pixels)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        let mut reply = Classify::submit(self, ClassifyRequest::single(pixels))?;
+        reply.results.pop().ok_or_else(|| anyhow!("empty reply"))
     }
 
-    /// Submit a whole micro-batch and wait for every response, in request
-    /// order. The samples land on the admission queue back to back, so
-    /// the batcher coalesces them into full dispatch batches that the
-    /// worker drains through the engine's batch-fused `forward_block`
-    /// path in single weight-structure traversals.
-    ///
-    /// Backpressure: if the admission queue fills mid-batch (batch larger
-    /// than `queue_cap`, or racing concurrent submitters), the samples
-    /// already admitted are still awaited — never abandoned with their
-    /// results computed and discarded — before the error is returned.
+    /// Submit a whole micro-batch and wait for every response, in
+    /// request order.
+    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::batch`")]
     pub fn classify_batch(&self, samples: Vec<Vec<u8>>) -> Result<Vec<Response>> {
-        let mut rxs = Vec::with_capacity(samples.len());
-        for s in samples {
-            match self.submit(s) {
-                Ok(rx) => rxs.push(rx),
-                Err(e) => {
-                    // drain what was admitted so no in-flight work is
-                    // silently thrown away, then report the admission error
-                    for rx in rxs {
-                        let _ = rx.recv();
-                    }
-                    return Err(
-                        anyhow::Error::new(e).context("micro-batch admission failed partway")
-                    );
-                }
-            }
-        }
-        rxs.into_iter()
-            .map(|rx| {
-                rx.recv()
-                    .map_err(|_| anyhow::anyhow!("server dropped request"))?
-                    .map_err(|e| anyhow::anyhow!(e))
-            })
-            .collect()
+        Ok(Classify::submit(self, ClassifyRequest::batch(samples))?.results)
     }
 
     /// Shared metrics.
     pub fn metrics(&self) -> Arc<Metrics> {
-        self.metrics.clone()
+        self.core.metrics.clone()
     }
 
-    /// Stop threads and drain.
+    /// Close the panel and join the lanes; already-admitted requests
+    /// are drained (answered), new admissions get [`AdmitError::Closed`].
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.tx.take(); // close admission channel
+        self.close();
+    }
+
+    fn close(&mut self) {
+        {
+            let mut panel = self.core.panel.lock().unwrap();
+            panel.closed = true;
+        }
+        self.core.lane_free.notify_all();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -255,173 +417,231 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.tx.take();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        self.close();
+    }
+}
+
+impl Classify for Server {
+    /// Blocking unified submit: [`Server::submit_async`] + wait. The
+    /// samples land on the panel back to back, so lanes coalesce them
+    /// into full micro-batches for the engine's batch-fused path.
+    ///
+    /// Backpressure: if the panel fills mid-batch, the samples already
+    /// admitted are still awaited — never abandoned with their results
+    /// computed and discarded — before the admission error is returned
+    /// (downcast to [`AdmitError`] to map it).
+    fn submit(&self, req: ClassifyRequest) -> Result<ClassifyReply> {
+        let (rtx, rrx) = sync_channel(1);
+        self.submit_async(
+            req,
+            Box::new(move |r| {
+                let _ = rtx.send(r);
+            }),
+        );
+        rrx.recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+/// Fan-in state for one [`Server::submit_async`] call: per-sample result
+/// slots plus the reply callback, fired exactly once when the last
+/// outstanding sample lands.
+struct JoinState {
+    slots: Vec<Option<Result<Response, String>>>,
+    remaining: usize,
+    admit_err: Option<AdmitError>,
+    done: Option<ReplyCallback>,
+    model: String,
+}
+
+impl JoinState {
+    fn complete(join: &Arc<Mutex<JoinState>>, i: usize, r: Result<Response, String>) {
+        let mut st = join.lock().unwrap();
+        st.slots[i] = Some(r);
+        st.remaining -= 1;
+        JoinState::maybe_finish(st);
+    }
+
+    /// Admission failed at sample `admitted` of `total`: record the
+    /// typed error and stop waiting for the never-admitted tail.
+    fn abort_from(join: &Arc<Mutex<JoinState>>, admitted: usize, total: usize, e: AdmitError) {
+        let mut st = join.lock().unwrap();
+        if st.admit_err.is_none() {
+            st.admit_err = Some(e);
         }
+        st.remaining -= total - admitted;
+        JoinState::maybe_finish(st);
+    }
+
+    fn maybe_finish(mut st: MutexGuard<'_, JoinState>) {
+        if st.remaining != 0 {
+            return;
+        }
+        let Some(done) = st.done.take() else { return };
+        let result = st.assemble();
+        drop(st);
+        done(result);
+    }
+
+    fn assemble(&mut self) -> Result<ClassifyReply> {
+        if let Some(e) = self.admit_err {
+            return Err(anyhow::Error::new(e).context("micro-batch admission failed partway"));
+        }
+        let mut results = Vec::with_capacity(self.slots.len());
+        for s in self.slots.iter_mut() {
+            match s.take() {
+                Some(Ok(r)) => results.push(r),
+                Some(Err(msg)) => return Err(anyhow!(msg)),
+                None => return Err(anyhow!("server dropped request")),
+            }
+        }
+        Ok(ClassifyReply {
+            model: std::mem::take(&mut self.model),
+            results,
+        })
     }
 }
 
 /// Reply an explicit error to every request in `reqs`. Used on the
-/// teardown paths (worker pool gone, shutdown mid-drain) so a caller
-/// blocked on its response channel gets an error instead of waiting for
-/// its own timeout on a silently dropped request.
+/// teardown paths (worker pool gone, failing engine) so a caller
+/// blocked on its response gets an error instead of waiting for its own
+/// timeout on a silently dropped request.
 fn fail_requests(reqs: Vec<Request>, msg: &str) {
     for r in reqs {
-        let _ = r.resp.send(Err(msg.to_string()));
+        (r.done)(Err(msg.to_string()));
     }
 }
 
-/// Drain everything still sitting on the admission queue and error-reply
-/// it; called when batches can no longer reach the workers.
-fn fail_queued(rx: &Receiver<Request>, msg: &str) {
-    while let Ok(r) = rx.try_recv() {
-        let _ = r.resp.send(Err(msg.to_string()));
-    }
-}
-
-fn batcher_loop(
-    rx: Receiver<Request>,
-    btx: SyncSender<Vec<Request>>,
-    metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
-    max_batch: usize,
-    max_wait: Duration,
-    model_id: u32,
-) {
-    const WORKERS_GONE: &str = "server worker pool shut down before the batch ran";
+/// Claim the next micro-batch off the panel, or `None` when the panel
+/// is closed and fully drained (lane exit). Greedily drains the backlog
+/// up to `max_batch` first; only when the panel ran dry below a full
+/// batch does the lane hold a `max_wait` accumulation window, popping
+/// stragglers as they arrive. Under backlog the window never opens, so
+/// batches stay full exactly when load is highest (the wave-batcher's
+/// deadline-collapse regression cannot recur by construction).
+fn claim_batch(core: &Core) -> Option<Vec<Request>> {
+    let mut panel = core.panel.lock().unwrap();
     loop {
-        // block for the first request of a batch
-        let first = match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(r) => r,
-            Err(RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::SeqCst) {
-                    return;
-                }
+        if !panel.queue.is_empty() {
+            break;
+        }
+        if panel.closed {
+            return None;
+        }
+        let (g, _) = core
+            .lane_free
+            .wait_timeout(panel, Duration::from_millis(50))
+            .unwrap();
+        panel = g;
+    }
+    let mut batch = Vec::with_capacity(core.max_batch.min(panel.queue.len()));
+    while batch.len() < core.max_batch {
+        match panel.queue.pop_front() {
+            Some(mut r) => {
+                r.joined = Instant::now();
+                batch.push(r);
+            }
+            None => break,
+        }
+    }
+    if batch.len() < core.max_batch && !core.max_wait.is_zero() && !panel.closed {
+        let deadline = Instant::now() + core.max_wait;
+        while batch.len() < core.max_batch {
+            if let Some(mut r) = panel.queue.pop_front() {
+                r.joined = Instant::now();
+                batch.push(r);
                 continue;
             }
-            Err(RecvTimeoutError::Disconnected) => return,
-        };
-        // batch-form window opens when its first request is picked up
-        let t_open = Instant::now();
-        let mut batch = vec![first];
-        let mut disconnected = false;
-        // Backlog first: greedily drain already-queued requests up to
-        // max_batch *before* arming any deadline. Under queue pressure
-        // the oldest request's `enqueued + max_wait` is already in the
-        // past at pickup; keying the wait off it collapsed every batch
-        // to one sample exactly when load was highest.
-        while batch.len() < max_batch {
-            match rx.try_recv() {
-                Ok(r) => batch.push(r),
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    disconnected = true;
-                    break;
-                }
+            if panel.closed {
+                break;
             }
-        }
-        if !disconnected && batch.len() < max_batch {
-            // queue ran dry below a full batch: wait out the residual
-            // window, measured from now — not from the first request's
-            // enqueue time
-            let deadline = Instant::now() + max_wait;
-            while batch.len() < max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => batch.push(r),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => {
-                        disconnected = true;
-                        break;
-                    }
-                }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
             }
-        }
-        let dispatch = Instant::now();
-        // queue depth at dispatch: admitted minus already-dispatched
-        // minus this batch (both counters are monotone, so the gap is
-        // exactly what still sits on the admission queue, modulo races)
-        let depth = metrics
-            .requests
-            .load(Ordering::Relaxed)
-            .saturating_sub(metrics.batched_samples.load(Ordering::Relaxed))
-            .saturating_sub(batch.len() as u64);
-        metrics.record_queue_depth(depth);
-        let traced = obs::enabled();
-        for r in batch.iter_mut() {
-            // a request either waited on the queue before this window
-            // opened (queue = enqueue→open) or arrived inside it
-            // (queue = 0); either way it then rode the window to dispatch
-            let join = r.enqueued.max(t_open);
-            let queue = join.duration_since(r.enqueued);
-            let form = dispatch.duration_since(join);
-            r.queue = queue + form;
-            metrics.record_stage(Stage::Queue, queue);
-            metrics.record_stage(Stage::BatchForm, form);
-            if traced && r.trace.sampled {
-                obs::record_span_at(
-                    r.trace,
-                    Stage::Queue,
-                    obs::us_since(r.enqueued),
-                    queue.as_micros() as u64,
-                    model_id,
-                    [depth, 0, 0],
-                );
-                obs::record_span_at(
-                    r.trace,
-                    Stage::BatchForm,
-                    obs::us_since(join),
-                    form.as_micros() as u64,
-                    model_id,
-                    [batch.len() as u64, 0, 0],
-                );
+            let (g, timed_out) = core
+                .lane_free
+                .wait_timeout(panel, deadline - now)
+                .unwrap();
+            panel = g;
+            if timed_out.timed_out() && panel.queue.is_empty() {
+                break;
             }
-        }
-        metrics.record_batch(batch.len());
-        if let Err(send_err) = btx.send(batch) {
-            // worker pool is gone: error-reply this batch and everything
-            // still queued instead of dropping the requests on the floor
-            fail_requests(send_err.0, WORKERS_GONE);
-            fail_queued(&rx, WORKERS_GONE);
-            return;
-        }
-        if disconnected {
-            return;
         }
     }
+    Some(batch)
 }
 
-fn worker_loop(
-    brx: Arc<Mutex<Receiver<Vec<Request>>>>,
-    engine: Arc<Engine>,
-    metrics: Arc<Metrics>,
-    model_id: u32,
-    cost: InferenceCost,
-) {
-    loop {
-        let batch = {
-            let guard = brx.lock().unwrap();
-            match guard.recv() {
-                Ok(b) => b,
-                Err(_) => return,
-            }
-        };
+/// Dispatch bookkeeping for a claimed batch: queue-depth gauge, per-
+/// request Queue/BatchForm stage metrics and spans, occupancy histogram.
+fn mark_dispatch(core: &Core, batch: &mut [Request]) {
+    let dispatch = Instant::now();
+    let metrics = &core.metrics;
+    // queue depth at dispatch: admitted minus already-dispatched minus
+    // this batch (both counters are monotone, so the gap is exactly what
+    // still sits on the panel, modulo races)
+    let depth = metrics
+        .requests
+        .load(Ordering::Relaxed)
+        .saturating_sub(metrics.batched_samples.load(Ordering::Relaxed))
+        .saturating_sub(batch.len() as u64);
+    metrics.record_queue_depth(depth);
+    let traced = obs::enabled();
+    let batch_len = batch.len() as u64;
+    for r in batch.iter_mut() {
+        // a request either waited on the panel before a lane popped it
+        // (queue = enqueue→join) or was popped immediately (queue ≈ 0);
+        // either way it then rode the lane's window to dispatch
+        let queue = r.joined.duration_since(r.enqueued);
+        let form = dispatch.duration_since(r.joined);
+        r.queue = queue + form;
+        metrics.record_stage(Stage::Queue, queue);
+        metrics.record_stage(Stage::BatchForm, form);
+        if traced && r.trace.sampled {
+            obs::record_span_at(
+                r.trace,
+                Stage::Queue,
+                obs::us_since(r.enqueued),
+                queue.as_micros() as u64,
+                core.model_id,
+                [depth, 0, 0],
+            );
+            obs::record_span_at(
+                r.trace,
+                Stage::BatchForm,
+                obs::us_since(r.joined),
+                form.as_micros() as u64,
+                core.model_id,
+                [batch_len, 0, 0],
+            );
+        }
+    }
+    metrics.record_batch(batch.len());
+}
+
+/// One accumulator lane: claim, dispatch, compute, reply — forever,
+/// until the panel closes and drains.
+fn worker_loop(core: &Core, engine: &Engine, cost: InferenceCost) {
+    while let Some(mut batch) = claim_batch(core) {
+        if batch.is_empty() {
+            continue;
+        }
+        mark_dispatch(core, &mut batch);
         let views: Vec<&[u8]> = batch.iter().map(|r| r.pixels.as_slice()).collect();
         // adopt one sampled request's context for the whole batch, so
         // shard spans emitted inside the engine land on a real trace
         let batch_ctx = if obs::enabled() {
-            batch.iter().map(|r| r.trace).find(|c| c.sampled).unwrap_or(TraceCtx::OFF)
+            batch
+                .iter()
+                .map(|r| r.trace)
+                .find(|c| c.sampled)
+                .unwrap_or(TraceCtx::OFF)
         } else {
             TraceCtx::OFF
         };
         let t0 = Instant::now();
         let result = if batch_ctx.sampled {
-            engine.classify_batch_traced(&views, batch_ctx)
+            obs::with_ctx(batch_ctx, || engine.classify_batch(&views))
         } else {
             engine.classify_batch(&views)
         };
@@ -431,19 +651,19 @@ fn worker_loop(
             Ok(classes) => {
                 for (req, class) in batch.into_iter().zip(classes) {
                     let latency = req.enqueued.elapsed();
-                    metrics.record_latency(latency);
-                    metrics.record_stage(Stage::Compute, compute);
+                    core.metrics.record_latency(latency);
+                    core.metrics.record_stage(Stage::Compute, compute);
                     if req.trace.sampled {
                         obs::record_span_at(
                             req.trace,
                             Stage::Compute,
                             obs::us_since(t0),
                             compute.as_micros() as u64,
-                            model_id,
+                            core.model_id,
                             [batch_len as u64, cost.cycles_addonly, cost.dots],
                         );
                     }
-                    let _ = req.resp.send(Ok(Response {
+                    (req.done)(Ok(Response {
                         class,
                         latency,
                         queue: req.queue,
@@ -460,12 +680,22 @@ fn worker_loop(
     }
 }
 
+/// Degenerate lane for `workers == 0`: claim and error-reply, so every
+/// admitted request still gets an explicit answer instead of a silent
+/// drop that leaves the caller waiting out its own timeout.
+fn failer_loop(core: &Core) {
+    while let Some(batch) = claim_batch(core) {
+        fail_requests(batch, WORKERS_GONE);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nn::layers::{LayerParams, Model};
     use crate::nn::model::{Activation, LayerSpec, ModelSpec};
     use crate::testkit::Rng;
+    use std::sync::mpsc::RecvTimeoutError;
     use std::sync::Arc as StdArc;
 
     fn float_engine(seed: u64) -> Engine {
@@ -500,7 +730,7 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..100 {
             let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-            rxs.push(server.submit(pixels).unwrap());
+            rxs.push(server.enqueue(pixels).unwrap());
         }
         let mut answered = 0;
         for rx in rxs {
@@ -526,8 +756,9 @@ mod tests {
 
         let server = Server::start(float_engine(3), ServerConfig::default());
         for (s, &want) in samples.iter().zip(&direct) {
-            let r = server.classify(s.clone()).unwrap();
-            assert_eq!(r.class, want);
+            let reply = server.submit(ClassifyRequest::single(s.clone())).unwrap();
+            assert_eq!(reply.results.len(), 1);
+            assert_eq!(reply.results[0].class, want);
         }
         server.shutdown();
     }
@@ -548,7 +779,7 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..40 {
             let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-            rxs.push(server.submit(pixels).unwrap());
+            rxs.push(server.enqueue(pixels).unwrap());
         }
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
@@ -562,7 +793,7 @@ mod tests {
     }
 
     #[test]
-    fn classify_batch_answers_in_order() {
+    fn unified_batch_submit_answers_in_order() {
         let engine = float_engine(9);
         let mut rng = Rng::new(10);
         let samples: Vec<Vec<u8>> =
@@ -570,10 +801,11 @@ mod tests {
         let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
         let direct = engine.classify_batch(&views).unwrap();
 
-        let server = Server::start(float_engine(9), ServerConfig::default());
-        let got = server.classify_batch(samples).unwrap();
-        assert_eq!(got.len(), 23);
-        for (r, &want) in got.iter().zip(&direct) {
+        let server = Server::start_named(float_engine(9), ServerConfig::default(), "m9", None);
+        let reply = server.submit(ClassifyRequest::batch(samples)).unwrap();
+        assert_eq!(reply.model, "m9");
+        assert_eq!(reply.results.len(), 23);
+        for (r, &want) in reply.results.iter().zip(&direct) {
             assert_eq!(r.class, want);
         }
         // every dispatched batch lands in the occupancy histogram
@@ -583,8 +815,63 @@ mod tests {
         server.shutdown();
     }
 
+    #[test]
+    fn empty_submit_returns_empty_reply() {
+        let server = Server::start_named(float_engine(13), ServerConfig::default(), "e", None);
+        let reply = server.submit(ClassifyRequest::batch(Vec::new())).unwrap();
+        assert_eq!(reply.model, "e");
+        assert!(reply.results.is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_answer() {
+        let engine = float_engine(3);
+        let mut rng = Rng::new(4);
+        let samples: Vec<Vec<u8>> =
+            (0..8).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+        let direct = engine.classify_batch(&views).unwrap();
+
+        let server = Server::start(float_engine(3), ServerConfig::default());
+        let one = server.classify(samples[0].clone()).unwrap();
+        assert_eq!(one.class, direct[0]);
+        let all = server.classify_batch(samples.clone()).unwrap();
+        for (r, &want) in all.iter().zip(&direct) {
+            assert_eq!(r.class, want);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn builder_validates_knobs() {
+        let cfg = ServerConfig::builder()
+            .max_batch(16)
+            .queue_cap(64)
+            .workers(2)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.queue_cap, 64);
+        assert_eq!(cfg.workers, 2);
+
+        let err = ServerConfig::builder().max_batch(0).build().unwrap_err();
+        assert_eq!(err.field, "max_batch");
+        let err = ServerConfig::builder().workers(0).build().unwrap_err();
+        assert_eq!(err.field, "workers");
+        let err = ServerConfig::builder()
+            .max_batch(32)
+            .queue_cap(8)
+            .build()
+            .unwrap_err();
+        assert_eq!(err.field, "queue_cap");
+        // the error is a real std::error::Error with a useful Display
+        assert!(err.to_string().contains("queue_cap"));
+    }
+
     /// A float engine big enough that one dispatched batch takes real
-    /// time, so the admission queue backs up while the worker chews.
+    /// time, so the admission panel backs up while the lane chews.
     fn slow_float_engine(seed: u64) -> Engine {
         let spec = ModelSpec {
             name: "slow".into(),
@@ -612,12 +899,12 @@ mod tests {
 
     #[test]
     fn backlog_batches_do_not_collapse() {
-        // Regression for the deadline bug: with the deadline keyed off
-        // the first request's enqueue time, a backed-up queue made every
-        // deadline already-past at pickup and every batch degenerated to
-        // 1 sample. Pre-queue requests faster than the single worker
-        // drains and assert the median dispatched batch stays at least
-        // half full.
+        // Regression for the wave-batcher deadline bug: with the
+        // deadline keyed off the first request's enqueue time, a
+        // backed-up queue made every deadline already-past at pickup and
+        // every batch degenerated to 1 sample. The lane claim drains the
+        // backlog greedily before any window opens, so the median
+        // dispatched batch must stay at least half full.
         let max_batch = 16;
         let server = Server::start(
             slow_float_engine(21),
@@ -633,7 +920,7 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..400 {
             let pixels: Vec<u8> = (0..256).map(|_| rng.below(256) as u8).collect();
-            rxs.push(server.submit(pixels).unwrap());
+            rxs.push(server.enqueue(pixels).unwrap());
         }
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
@@ -650,10 +937,10 @@ mod tests {
 
     #[test]
     fn broken_worker_pool_errors_instead_of_dropping() {
-        // With zero workers the batch channel has no receiver, so the
-        // batcher's dispatch fails. Every submitted request must still
-        // get an explicit answer (an error) — never a silent drop that
-        // leaves the caller waiting out its own timeout.
+        // With zero workers no lane can ever run a batch. Every
+        // submitted request must still get an explicit answer (an error)
+        // — never a silent drop that leaves the caller waiting out its
+        // own timeout.
         let server = Server::start(
             float_engine(31),
             ServerConfig {
@@ -668,10 +955,10 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..50 {
             let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-            match server.submit(pixels) {
+            match server.enqueue(pixels) {
                 Ok(rx) => rxs.push(rx),
-                // the batcher may already have torn down the queue —
-                // a typed admission error is an acceptable answer too
+                // teardown may already have closed the panel — a typed
+                // admission error is an acceptable answer too
                 Err(AdmitError::Closed) => {}
                 Err(e) => panic!("unexpected admission error: {e}"),
             }
@@ -681,9 +968,8 @@ mod tests {
             let r = rx.recv_timeout(Duration::from_secs(5));
             match r {
                 Ok(resp) => assert!(resp.is_err(), "no worker could have produced {resp:?}"),
-                // batcher dropped the queue after replying to what it
-                // had drained; a disconnected response channel is still
-                // an explicit terminal outcome, not a hang
+                // a disconnected response channel is still an explicit
+                // terminal outcome, not a hang
                 Err(RecvTimeoutError::Disconnected) => {}
                 Err(RecvTimeoutError::Timeout) => panic!("request silently dropped"),
             }
@@ -697,17 +983,16 @@ mod tests {
         let mut rng = Rng::new(8);
         for _ in 0..10 {
             let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-            let _ = server.classify(pixels);
+            let _ = server.submit(ClassifyRequest::single(pixels));
         }
         server.shutdown(); // must not hang
     }
 
     #[test]
     fn shutdown_while_draining_answers_every_queued_request() {
-        // fill the admission queue, then shut down immediately: every
-        // already-admitted request must still get a response (the
-        // batcher flushes the queue on disconnect, workers drain the
-        // batch channel before exiting) — none may hang or be dropped.
+        // fill the panel, then shut down immediately: every already-
+        // admitted request must still get a response (the lanes drain
+        // the panel before exiting) — none may hang or be dropped.
         let server = Server::start(
             float_engine(11),
             ServerConfig {
@@ -723,9 +1008,9 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..200 {
             let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-            rxs.push(server.submit(pixels).unwrap());
+            rxs.push(server.enqueue(pixels).unwrap());
         }
-        server.shutdown(); // joins batcher + workers
+        server.shutdown(); // joins the lanes
         let mut answered = 0;
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();

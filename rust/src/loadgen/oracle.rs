@@ -115,7 +115,7 @@ impl Oracle {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{EngineKind, ServerConfig};
+    use crate::coordinator::{Classify, ClassifyRequest, EngineKind, ServerConfig};
     use crate::nn::{Activation, LayerSpec, Model, ModelSpec};
     use crate::pvq::RhoMode;
     use crate::quant::quantize;
@@ -149,12 +149,12 @@ mod tests {
         let samples: Vec<Vec<u8>> =
             (0..9).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
         for route in [None, Some("csr"), Some("bin")] {
-            let served: Vec<usize> = reg
-                .classify_batch(route, samples.clone())
-                .unwrap()
-                .iter()
-                .map(|r| r.class)
-                .collect();
+            let mut creq = ClassifyRequest::batch(samples.clone());
+            if let Some(name) = route {
+                creq = creq.with_model(name);
+            }
+            let served: Vec<usize> =
+                reg.submit(creq).unwrap().results.iter().map(|r| r.class).collect();
             oracle.verify(0, route, &samples, &served).unwrap();
         }
         reg.shutdown();
@@ -168,8 +168,9 @@ mod tests {
         let samples: Vec<Vec<u8>> =
             (0..3).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
         let mut served: Vec<usize> = reg
-            .classify_batch(Some("csr"), samples.clone())
+            .submit(ClassifyRequest::batch(samples.clone()).with_model("csr"))
             .unwrap()
+            .results
             .iter()
             .map(|r| r.class)
             .collect();

@@ -20,7 +20,8 @@ use super::oracle::Oracle;
 use super::plan::{FaultKind, LoadPlan, PlanConfig, PlannedRequest, TrafficShape};
 use super::report::{LoadReport, ModelServerStats, PathReport, TraceCheck};
 use crate::coordinator::{
-    AdmitError, EngineKind, HttpConfig, HttpServer, ModelRegistry, ServerConfig,
+    AdmitError, Classify, ClassifyRequest, EngineKind, HttpConfig, HttpServer, ModelRegistry,
+    ServerConfig,
 };
 use crate::nn::{Activation, LayerSpec, Model, ModelSpec};
 use crate::obs::{self, Stage};
@@ -38,6 +39,16 @@ pub const INPUT_LEN: usize = 16;
 /// Worker-pool size for open-loop sends (bounds concurrent
 /// connections; arrivals faster than the pool drains simply queue).
 const OPEN_POOL: usize = 8;
+
+/// Driver-side OS-thread cap for closed-loop runs: each thread
+/// multiplexes many simulated clients (one keep-alive connection
+/// apiece), so thousands of concurrent connections need only dozens of
+/// driver threads.
+const MAX_DRIVER_THREADS: usize = 64;
+
+/// Driver thread stack size — the client path has no deep recursion,
+/// and small stacks keep high-thread runs cheap.
+const DRIVER_STACK: usize = 256 * 1024;
 
 /// Full configuration of one load run.
 #[derive(Clone, Debug)]
@@ -196,11 +207,13 @@ fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
     if cfg.fault_every > 0 {
         http_cfg.read_deadline = Duration::from_millis(300);
     }
-    // one connection worker per concurrent load client: a keep-alive
-    // connection pins its worker for the connection's lifetime, so a
-    // smaller pool would starve the surplus clients into read timeouts
-    // — the harness measures serving behavior, not pool starvation
-    http_cfg.conn_workers = http_cfg.conn_workers.max(workers);
+    // the epoll front end multiplexes any number of connections per
+    // event loop, but the admission budgets must cover every simulated
+    // client — one keep-alive connection apiece, all potentially in
+    // flight at once — or the harness would measure its own refusals
+    http_cfg.max_conns = http_cfg.max_conns.max(workers * 2);
+    http_cfg.max_inflight = http_cfg.max_inflight.max(workers);
+    let _ = crate::coordinator::net::raise_nofile_limit();
     // 4 chunks × gap must overshoot the deadline, so a slow client
     // reliably trips the 408 path instead of racing it
     let slow_gap = http_cfg.read_deadline / 2;
@@ -237,24 +250,42 @@ fn drive_http(cfg: &LoadConfig, plan: &LoadPlan) -> Result<PathReport> {
         }
         match cfg.shape {
             TrafficShape::Closed { .. } => {
-                for w in 0..workers {
+                // client c serves requests with index ≡ c (mod workers);
+                // driver thread t multiplexes every client c ≡ t (mod
+                // threads), each keeping its own keep-alive connection,
+                // so `workers` concurrent connections cost at most
+                // MAX_DRIVER_THREADS OS threads
+                let threads = workers.min(MAX_DRIVER_THREADS);
+                for t in 0..threads {
                     let oracle = oracle.clone();
                     let sent = &sent;
                     let reqs: Vec<&PlannedRequest> = plan
                         .requests
                         .iter()
-                        .filter(|r| r.index % workers == w)
+                        .filter(|r| (r.index % workers) % threads == t)
                         .collect();
-                    handles.push(s.spawn(move || {
-                        let mut client =
-                            HttpClient::new(addr, cfg.read_timeout, slow_gap, max_body);
-                        let mut tally = PathReport::new("http", 0);
-                        let mut ids = Vec::new();
-                        for req in reqs {
-                            execute_one(&mut client, req, &oracle, &mut tally, &mut ids, sent);
-                        }
-                        (tally, ids)
-                    }));
+                    let handle = std::thread::Builder::new()
+                        .stack_size(DRIVER_STACK)
+                        .spawn_scoped(s, move || {
+                            let mut clients: HashMap<usize, HttpClient> = HashMap::new();
+                            let mut tally = PathReport::new("http", 0);
+                            let mut ids = Vec::new();
+                            for req in reqs {
+                                let c = req.index % workers;
+                                let client = clients.entry(c).or_insert_with(|| {
+                                    HttpClient::new(
+                                        addr,
+                                        cfg.read_timeout,
+                                        slow_gap,
+                                        max_body,
+                                    )
+                                });
+                                execute_one(client, req, &oracle, &mut tally, &mut ids, sent);
+                            }
+                            (tally, ids)
+                        })
+                        .expect("spawn load client thread");
+                    handles.push(handle);
                 }
             }
             TrafficShape::Open { .. } => {
@@ -445,12 +476,14 @@ fn execute_inproc(
         Some(_) => PlannedRequest { fault: None, ..req.clone() },
     };
     let t = Instant::now();
-    let outcome = match reg
-        .classify_batch(effective.model.as_deref(), effective.samples.clone())
-    {
-        Ok(responses) => Outcome::Answered {
+    let mut creq = ClassifyRequest::batch(effective.samples.clone());
+    if let Some(name) = effective.model.as_deref() {
+        creq = creq.with_model(name);
+    }
+    let outcome = match reg.submit(creq) {
+        Ok(reply) => Outcome::Answered {
             status: 200,
-            classes: responses.iter().map(|r| r.class).collect(),
+            classes: reply.results.iter().map(|r| r.class).collect(),
             latency_us: t.elapsed().as_micros() as u64,
             req_id: 0,
         },

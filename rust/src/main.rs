@@ -17,7 +17,8 @@
 
 use anyhow::{bail, Context, Result};
 use pvqnet::coordinator::{
-    Engine, EngineKind, HttpConfig, HttpServer, ModelRegistry, Router, ServerConfig,
+    Classify, ClassifyRequest, Engine, EngineKind, HttpConfig, HttpServer, ModelRegistry, Router,
+    ServerConfig,
 };
 use pvqnet::data::Dataset;
 use pvqnet::hw::HwReport;
@@ -322,7 +323,11 @@ fn cmd_serve_models(flags: &HashMap<String, String>, models: &str) -> Result<()>
         let samples: Vec<Vec<u8>> = (0..n)
             .map(|_| (0..len).map(|_| rng.below(256) as u8).collect())
             .collect();
-        reg.classify_batch(route, samples)?;
+        let mut creq = ClassifyRequest::batch(samples);
+        if let Some(name) = route {
+            creq = creq.with_model(name);
+        }
+        reg.submit(creq)?;
         served += n;
         wave_i += 1;
     }
@@ -363,19 +368,21 @@ fn cmd_serve_http(flags: &HashMap<String, String>, listen: &str) -> Result<()> {
     if let Some(d) = flags.get("default") {
         reg.set_default(d)?;
     }
-    let mut http_cfg = HttpConfig::default();
-    if let Some(v) = flags.get("http-workers") {
-        http_cfg.conn_workers = v.parse().context("parse --http-workers")?;
-        if http_cfg.conn_workers == 0 {
-            bail!("--http-workers must be ≥ 1");
-        }
+    let mut http_builder = HttpConfig::builder();
+    // --http-workers is kept as a legacy alias for --event-loops
+    if let Some(v) = flags.get("event-loops").or_else(|| flags.get("http-workers")) {
+        http_builder = http_builder.event_loops(v.parse().context("parse --event-loops")?);
+    }
+    if let Some(v) = flags.get("max-conns") {
+        http_builder = http_builder.max_conns(v.parse().context("parse --max-conns")?);
     }
     if let Some(v) = flags.get("max-inflight") {
-        http_cfg.max_inflight = v.parse().context("parse --max-inflight")?;
+        http_builder = http_builder.max_inflight(v.parse().context("parse --max-inflight")?);
     }
     if let Some(v) = flags.get("slow-ms") {
-        http_cfg.slow_ms = Some(v.parse().context("parse --slow-ms")?);
+        http_builder = http_builder.slow_ms(Some(v.parse().context("parse --slow-ms")?));
     }
+    let http_cfg = http_builder.build().map_err(anyhow::Error::msg)?;
     let trace_out = flags.get("trace-out").map(PathBuf::from);
     if flags.contains_key("trace") || trace_out.is_some() {
         let every: u64 = flags
@@ -449,7 +456,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let idxs: Vec<usize> = (0..n).map(|j| (served + j) % data.n).collect();
         let samples: Vec<Vec<u8>> = idxs.iter().map(|&i| data.sample(i).to_vec()).collect();
         let route = if wave_i % 4 == 0 { Some("float") } else { None };
-        for (&i, resp) in idxs.iter().zip(router.classify_batch(route, samples)?.iter()) {
+        let mut creq = ClassifyRequest::batch(samples);
+        if let Some(name) = route {
+            creq = creq.with_model(name);
+        }
+        for (&i, resp) in idxs.iter().zip(router.submit(creq)?.results.iter()) {
             if resp.class == data.labels[i] as usize {
                 correct += 1;
             }
@@ -635,7 +646,9 @@ fn main() -> Result<()> {
                             --shards N (default 1; intra-model shards per batch)\n\
                             --listen HOST:PORT  expose the registry over HTTP/1.1\n\
                             (POST /v1/classify, GET /v1/models, /metrics, /healthz,\n\
-                            /v1/trace)  with --http-workers N (default 4)\n\
+                            /v1/trace)  with --event-loops N (default 2 epoll\n\
+                            loops; --http-workers is a legacy alias)\n\
+                            --max-conns N (default 4096 open connections)\n\
                             --max-inflight N (default 256)  --duration-s N\n\
                             (default: run until killed)  --slow-ms N (log slow\n\
                             requests to stderr)  --trace [--trace-sample N]\n\

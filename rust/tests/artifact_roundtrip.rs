@@ -4,7 +4,7 @@
 //! through the batching server with per-model-correct predictions.
 
 use pvqnet::artifact::{inspect, read_model, write_model, ArtifactReader, ArtifactWriter};
-use pvqnet::coordinator::{EngineKind, ModelRegistry, ServerConfig};
+use pvqnet::coordinator::{Classify, ClassifyRequest, EngineKind, ModelRegistry, ServerConfig};
 use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
 use pvqnet::nn::{forward_int, ITensor, Model, QuantModel};
 use pvqnet::pvq::RhoMode;
@@ -251,9 +251,11 @@ fn registry_serves_two_models_concurrently_with_correct_predictions() {
         handles.push(std::thread::spawn(move || {
             for pass in 0..3 {
                 for (i, s) in samples.iter().enumerate() {
-                    let r = reg.classify(Some(model), s.clone()).unwrap();
+                    let reply = reg
+                        .submit(ClassifyRequest::single(s.clone()).with_model(model))
+                        .unwrap();
                     assert_eq!(
-                        r.class, want[i],
+                        reply.results[0].class, want[i],
                         "{model} sample {i} pass {pass}: wrong prediction"
                     );
                 }
@@ -302,8 +304,10 @@ fn registry_binary_engine_matches_reference() {
         let want = pvqnet::nn::tensor::argmax_i64(
             &forward_int(&qm, &ITensor::from_u8(&[16], &s)).unwrap().logits,
         );
-        let got = reg.classify(Some("bsrv"), s).unwrap();
-        assert_eq!(got.class, want);
+        let got = reg
+            .submit(ClassifyRequest::single(s).with_model("bsrv"))
+            .unwrap();
+        assert_eq!(got.results[0].class, want);
     }
     reg.shutdown();
     std::fs::remove_file(&path).unwrap();

@@ -16,7 +16,7 @@
 //! The shard sweeps below enforce this for both engines, layer kinds
 //! (dense/conv/pool), and the end-to-end registry serving path.
 
-use pvqnet::coordinator::{Engine, EngineKind, ModelRegistry, ServerConfig};
+use pvqnet::coordinator::{Classify, ClassifyRequest, Engine, EngineKind, ModelRegistry, ServerConfig};
 use pvqnet::nn::batch::{ActivationBlock, BitBlock};
 use pvqnet::nn::binary::{BinaryDense, BinaryNet, BitVec};
 use pvqnet::nn::csr_engine::CompiledQuantModel;
@@ -494,11 +494,20 @@ fn registry_batched_serving_matches_direct_engines() {
 
     let mut rng = Rng::new(33);
     let samples = random_samples(&mut rng, 40, 48);
-    let got_csr = reg.classify_batch(Some("csr"), samples.clone()).unwrap();
-    let got_bin = reg.classify_batch(Some("bin"), samples.clone()).unwrap();
+    let got_csr = reg
+        .submit(ClassifyRequest::batch(samples.clone()).with_model("csr"))
+        .unwrap();
+    let got_bin = reg
+        .submit(ClassifyRequest::batch(samples.clone()).with_model("bin"))
+        .unwrap();
+    assert_eq!(got_csr.model, "csr");
+    assert_eq!(got_bin.model, "bin");
     for (s, sample) in samples.iter().enumerate() {
-        assert_eq!(got_csr[s].class, compiled.classify(&ITensor::from_u8(&[48], sample)));
-        assert_eq!(got_bin[s].class, net.classify_u8(sample).unwrap());
+        assert_eq!(
+            got_csr.results[s].class,
+            compiled.classify(&ITensor::from_u8(&[48], sample))
+        );
+        assert_eq!(got_bin.results[s].class, net.classify_u8(sample).unwrap());
     }
     reg.shutdown();
 }

@@ -101,7 +101,7 @@ fn hlo_engine_serves_through_coordinator() {
         eprintln!("SKIP hlo_runtime: run `make artifacts` first");
         return;
     }
-    use pvqnet::coordinator::{Engine, Server, ServerConfig};
+    use pvqnet::coordinator::{Classify, ClassifyRequest, Engine, Server, ServerConfig};
     use std::sync::Arc;
     let hlo = HloModel::load(Path::new("artifacts/net_a.hlo.txt"), BATCH, 784, 10).unwrap();
     let data = Dataset::load(Path::new("artifacts/mnist_test.bin")).unwrap();
@@ -109,8 +109,10 @@ fn hlo_engine_serves_through_coordinator() {
     let mut correct = 0;
     let n = 64;
     for i in 0..n {
-        let r = server.classify(data.sample(i).to_vec()).unwrap();
-        if r.class == data.labels[i] as usize {
+        let r = server
+            .submit(ClassifyRequest::single(data.sample(i).to_vec()))
+            .unwrap();
+        if r.results[0].class == data.labels[i] as usize {
             correct += 1;
         }
     }

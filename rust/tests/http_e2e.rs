@@ -8,7 +8,9 @@
 //! `pvqnet::testkit::http`, shared with the bench harness and the
 //! `loadgen` subsystem. Loopback sockets only — no external network.
 
-use pvqnet::coordinator::{EngineKind, HttpConfig, HttpServer, ModelRegistry, ServerConfig};
+use pvqnet::coordinator::{
+    Classify, ClassifyRequest, EngineKind, HttpConfig, HttpServer, ModelRegistry, ServerConfig,
+};
 use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
 use pvqnet::nn::{Model, QuantModel};
 use pvqnet::pvq::RhoMode;
@@ -58,7 +60,7 @@ fn classify_roundtrip_matches_direct_registry() {
     // single-sample bodies, once routed by name and once by default
     for model_field in ["", "\"model\":\"m\","] {
         let p = random_pixels(&mut rng);
-        let want = direct.classify(None, p.clone()).unwrap().class;
+        let want = direct.submit(ClassifyRequest::single(p.clone())).unwrap().results[0].class;
         let body = format!("{{{model_field}\"pixels\":{}}}", pixels_json(&p));
         let resp = client.post_classify(&body, true);
         assert_eq!(resp.status, 200, "{}", resp.body);
@@ -70,8 +72,9 @@ fn classify_roundtrip_matches_direct_registry() {
     // batch body answers in request order
     let samples: Vec<Vec<u8>> = (0..9).map(|_| random_pixels(&mut rng)).collect();
     let want: Vec<usize> = direct
-        .classify_batch(None, samples.clone())
+        .submit(ClassifyRequest::batch(samples.clone()))
         .unwrap()
+        .results
         .iter()
         .map(|r| r.class)
         .collect();
@@ -126,8 +129,9 @@ fn error_status_codes() {
 
 #[test]
 fn slow_request_times_out_with_408() {
-    // the injectable read deadline (HttpConfig::read_deadline → net's
-    // HttpConn) turns a wedged-slow client into a fast explicit 408
+    // the injectable read deadline (HttpConfig::read_deadline → the
+    // event loop's deadline wheel) turns a wedged-slow client into a
+    // fast explicit 408
     let server = start(
         53,
         HttpConfig { read_deadline: Duration::from_millis(150), ..Default::default() },
@@ -176,9 +180,9 @@ fn saturation_answers_429_with_retry_after() {
 #[test]
 fn concurrent_keepalive_connections() {
     let direct = registry(47);
-    // one connection worker per client so all 8 keep-alive connections
-    // are genuinely served concurrently
-    let server = start(47, HttpConfig { conn_workers: 8, ..Default::default() });
+    // the epoll loops multiplex all 8 keep-alive connections without a
+    // per-connection worker
+    let server = start(47, HttpConfig::default());
     let addr = server.addr();
     let clients: u64 = 8;
     let per_client: u64 = 10;
@@ -189,7 +193,9 @@ fn concurrent_keepalive_connections() {
             (0..per_client)
                 .map(|_| {
                     let p = random_pixels(&mut rng);
-                    let want = direct.classify(None, p.clone()).unwrap().class;
+                    let want =
+                        direct.submit(ClassifyRequest::single(p.clone())).unwrap().results[0]
+                            .class;
                     (p, want)
                 })
                 .collect()
@@ -267,4 +273,45 @@ fn graceful_shutdown_answers_every_inflight_request() {
         total += outcomes.len();
     }
     assert!(total > 0, "shutdown raced ahead of every client");
+}
+
+#[test]
+fn four_thousand_concurrent_keepalive_clients_with_faults() {
+    // the headline scaling claim of the event-driven front end: 4096
+    // simultaneously open keep-alive connections (well past any
+    // worker-pool size), driven closed-loop through the seeded loadgen
+    // harness with the full wire-fault schedule — slow clients,
+    // mid-body disconnects, corrupt/truncated/oversized bodies, model
+    // misses. Every one of the 8192 requests must end in an explicit
+    // outcome (zero Unanswered) and every 200 must verify bitwise
+    // against the direct engines. Tracing stays off: 8192×8 spans
+    // would wrap the bounded span rings and fail the chain check
+    // spuriously (chain completeness is gated in loadgen_e2e at a
+    // ring-sized scale).
+    use pvqnet::loadgen::{run, LoadConfig, TrafficShape};
+    let cfg = LoadConfig {
+        seed: 4096,
+        requests: 8192,
+        shape: TrafficShape::Closed { clients: 4096 },
+        drive_http: true,
+        drive_inproc: false,
+        fault_every: 6,
+        drain_after: None,
+        server: ServerConfig::default(),
+        http: HttpConfig::default(),
+        read_timeout: Duration::from_secs(60),
+        model_seed: 42,
+        trace: false,
+    };
+    let report = run(&cfg).unwrap();
+    let http = report.http.as_ref().expect("http path driven");
+    assert_eq!(http.sent as usize, http.planned, "every request attempted");
+    assert_eq!(http.accounted(), http.sent, "outcome buckets must sum to sent");
+    assert_eq!(http.unanswered, 0, "swallowed requests under 4096-conn load");
+    assert_eq!(http.oracle_mismatches, 0, "{:?}", http.mismatch_examples);
+    assert!(http.oracle_checked > 0, "oracle never ran");
+    // the wire faults actually ran at scale
+    assert!(http.fault_answered > 0, "no injected fault was answered");
+    assert!(http.aborted > 0, "disconnect-mid-body faults never aborted");
+    assert!(report.passed(), "{}", report.render());
 }

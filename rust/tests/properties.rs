@@ -171,7 +171,7 @@ fn prop_coordinator_exactly_once() {
             let mut results = Vec::new();
             for _ in 0..per_client {
                 let pix: Vec<u8> = (0..8).map(|_| rng.below(256) as u8).collect();
-                let rx = server.submit(pix.clone()).unwrap();
+                let rx = server.enqueue(pix.clone()).unwrap();
                 results.push((pix, rx));
             }
             results
