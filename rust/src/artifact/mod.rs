@@ -12,7 +12,7 @@
 //! ## Container layout (little-endian)
 //!
 //! ```text
-//! header   magic "PVQM" · u16 version (=1) · u16 flags (=0)
+//! header   magic "PVQM" · u16 version (=2) · u16 flags (=0)
 //! sections, each:
 //!     tag   [u8;4]
 //!     len   u32            payload byte length
@@ -35,6 +35,14 @@
 //! PVQL container       compress_layer(w ++ b_pyramid) — self-describing
 //!                      (codec id, N, K, ρ, entropy-coded components)
 //! ```
+//!
+//! ## Versioning
+//!
+//! Version 2 (current) adds the CWRS layer codec (PVQL codec id 4,
+//! `crate::compress::cwrs`). Version-1 artifacts are still read; the
+//! writer can emit them via [`writer::write_model_with_version`], which
+//! restricts the per-layer best-of to the v1 codec set. A v1 file
+//! carrying a CWRS blob is malformed and rejected at `next_layer`.
 //!
 //! ## Example: pack a quantized model, read it back
 //!
@@ -90,13 +98,15 @@ pub mod spec_codec;
 pub mod writer;
 
 pub use manifest::{ArtifactManifest, LayerManifest};
-pub use reader::{inspect, read_model, ArtifactReader};
-pub use writer::{write_model, ArtifactWriter};
+pub use reader::{inspect, read_model, read_sparse_model, ArtifactReader};
+pub use writer::{write_model, write_model_with_version, ArtifactWriter};
 
 /// Container magic.
 pub const MAGIC: &[u8; 4] = b"PVQM";
-/// Current container version.
-pub const VERSION: u16 = 1;
+/// Current container version (2 = CWRS layer codec allowed).
+pub const VERSION: u16 = 2;
+/// Oldest container version the reader still accepts.
+pub const VERSION_MIN: u16 = 1;
 
 /// Section tags.
 pub const TAG_SPEC: &[u8; 4] = b"SPEC";

@@ -9,10 +9,15 @@
 use super::crc::crc32;
 use super::manifest::ArtifactManifest;
 use super::spec_codec::decode_spec;
-use super::{ByteReader, MAGIC, MAX_SECTION_LEN, TAG_END, TAG_LAYER, TAG_MANIFEST, TAG_SPEC, VERSION};
-use crate::compress::decompress_layer;
+use super::{
+    ByteReader, MAGIC, MAX_SECTION_LEN, TAG_END, TAG_LAYER, TAG_MANIFEST, TAG_SPEC, VERSION,
+    VERSION_MIN,
+};
+use crate::compress::{decompress_layer, decompress_layer_into, Codec};
 use crate::nn::model::ModelSpec;
-use crate::nn::pvq_engine::{QuantLayer, QuantModel};
+use crate::nn::pvq_engine::{
+    QuantLayer, QuantModel, SparseLayerBuilder, SparseQuantLayer, SparseQuantModel,
+};
 use anyhow::{bail, Context, Result};
 use std::io::Read;
 use std::path::Path;
@@ -22,6 +27,9 @@ pub struct ArtifactReader<R: Read> {
     inp: R,
     /// Model topology, decoded from the SPEC section up front.
     pub spec: ModelSpec,
+    /// Container version of the stream (v1 artifacts still read; their
+    /// layers must not carry the CWRS codec).
+    pub version: u16,
     manifest: Option<ArtifactManifest>,
     done: bool,
 }
@@ -47,8 +55,10 @@ impl<R: Read> ArtifactReader<R> {
         let mut u16buf = [0u8; 2];
         inp.read_exact(&mut u16buf)?;
         let version = u16::from_le_bytes(u16buf);
-        if version != VERSION {
-            bail!("unsupported .pvqm version {version} (reader supports {VERSION})");
+        if !(VERSION_MIN..=VERSION).contains(&version) {
+            bail!(
+                "unsupported .pvqm version {version} (reader supports {VERSION_MIN}..={VERSION})"
+            );
         }
         inp.read_exact(&mut u16buf)?; // flags, reserved
 
@@ -60,7 +70,7 @@ impl<R: Read> ArtifactReader<R> {
         // an inconsistent topology would pass per-layer geometry checks
         // yet panic the engines at serve time — reject it at load
         spec.validate_shapes().context("artifact spec has inconsistent topology")?;
-        Ok(ArtifactReader { inp, spec, manifest: None, done: false })
+        Ok(ArtifactReader { inp, spec, version, manifest: None, done: false })
     }
 
     /// The MANI section, once the stream has been consumed past it
@@ -69,15 +79,33 @@ impl<R: Read> ArtifactReader<R> {
         self.manifest.as_ref()
     }
 
-    /// Decode the next layer chunk. Returns `Ok(None)` once the ENDM
-    /// marker is reached; a stream that ends without ENDM is truncated
-    /// and errors instead.
+    /// Decode the next layer chunk densely. Returns `Ok(None)` once the
+    /// ENDM marker is reached; a stream that ends without ENDM is
+    /// truncated and errors instead.
     pub fn next_layer(&mut self) -> Result<Option<(usize, QuantLayer)>> {
+        match self.next_layer_payload()? {
+            Some(payload) => Ok(Some(decode_layer(&self.spec, &payload, self.version)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Decode the next layer chunk as a streamed pulse list — the
+    /// `decode_into` serving path: CWRS layers never materialize a dense
+    /// weight vector on the way to the engine compilers.
+    pub fn next_layer_sparse(&mut self) -> Result<Option<(usize, SparseQuantLayer)>> {
+        match self.next_layer_payload()? {
+            Some(payload) => Ok(Some(decode_layer_sparse(&self.spec, &payload, self.version)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Advance to the next LAYR payload, absorbing MANI/ENDM on the way.
+    fn next_layer_payload(&mut self) -> Result<Option<Vec<u8>>> {
         while !self.done {
             let (tag, payload) = read_section_raw(&mut self.inp)?;
             match &tag {
                 t if t == TAG_LAYER => {
-                    return Ok(Some(decode_layer(&self.spec, &payload)?));
+                    return Ok(Some(payload));
                 }
                 t if t == TAG_MANIFEST => {
                     self.manifest =
@@ -124,8 +152,22 @@ fn read_section_raw<R: Read>(inp: &mut R) -> Result<([u8; 4], Vec<u8>)> {
     Ok((tag, payload))
 }
 
-/// Decode one LAYR payload against the spec geometry.
-fn decode_layer(spec: &ModelSpec, payload: &[u8]) -> Result<(usize, QuantLayer)> {
+/// Geometry-checked pieces of one LAYR payload.
+struct LayerChunk<'a> {
+    layer_index: usize,
+    wlen: usize,
+    blen: usize,
+    b: Vec<i32>,
+    blob: &'a [u8],
+}
+
+/// Parse one LAYR payload header against the spec geometry and enforce
+/// the version/codec compatibility rules.
+fn parse_layer_chunk<'a>(
+    spec: &ModelSpec,
+    payload: &'a [u8],
+    version: u16,
+) -> Result<LayerChunk<'a>> {
     let mut r = ByteReader::new(payload);
     let layer_index = r.u32()? as usize;
     let wlen = r.u32()? as usize;
@@ -149,26 +191,55 @@ fn decode_layer(spec: &ModelSpec, payload: &[u8]) -> Result<(usize, QuantLayer)>
     for _ in 0..blen {
         b.push(r.i32()?);
     }
-    let pv = decompress_layer(r.rest())
-        .with_context(|| format!("decode compressed components of layer {layer_index}"))?;
-    if pv.components.len() != wlen + blen {
+    let blob = r.rest();
+    // the CWRS codec entered the format in v2; a v1 file carrying it is
+    // malformed (a real v1 reader could not decode the layer)
+    if version < 2 && blob.get(4) == Some(&Codec::Cwrs.id()) {
+        bail!("layer {layer_index}: codec cwrs requires .pvqm version ≥ 2, file is v{version}");
+    }
+    Ok(LayerChunk { layer_index, wlen, blen, b, blob })
+}
+
+/// Decode one LAYR payload densely against the spec geometry.
+fn decode_layer(spec: &ModelSpec, payload: &[u8], version: u16) -> Result<(usize, QuantLayer)> {
+    let c = parse_layer_chunk(spec, payload, version)?;
+    let pv = decompress_layer(c.blob)
+        .with_context(|| format!("decode compressed components of layer {}", c.layer_index))?;
+    if pv.components.len() != c.wlen + c.blen {
         bail!(
-            "layer {layer_index}: {} decoded components vs expected {}",
+            "layer {}: {} decoded components vs expected {}",
+            c.layer_index,
             pv.components.len(),
-            wlen + blen
+            c.wlen + c.blen
         );
     }
-    let (w, b_pyramid) = pv.components.split_at(wlen);
+    let (w, b_pyramid) = pv.components.split_at(c.wlen);
     Ok((
-        layer_index,
+        c.layer_index,
         QuantLayer {
             w: w.to_vec(),
-            b,
+            b: c.b,
             b_pyramid: b_pyramid.to_vec(),
             rho: pv.rho,
             k: pv.k,
         },
     ))
+}
+
+/// Decode one LAYR payload as a pulse stream against the spec geometry.
+fn decode_layer_sparse(
+    spec: &ModelSpec,
+    payload: &[u8],
+    version: u16,
+) -> Result<(usize, SparseQuantLayer)> {
+    let c = parse_layer_chunk(spec, payload, version)?;
+    let mut builder = SparseLayerBuilder::new(c.wlen, c.b);
+    decompress_layer_into(c.blob, &mut builder)
+        .with_context(|| format!("decode compressed components of layer {}", c.layer_index))?;
+    let sparse = builder
+        .finish()
+        .with_context(|| format!("layer {} geometry", c.layer_index))?;
+    Ok((c.layer_index, sparse))
 }
 
 /// Read a whole artifact back into a [`QuantModel`] (+ its manifest),
@@ -192,6 +263,32 @@ pub fn read_model(path: &Path) -> Result<(QuantModel, ArtifactManifest)> {
         .take()
         .with_context(|| format!("artifact {} has no manifest", path.display()))?;
     Ok((QuantModel { spec: reader.spec, layers }, manifest))
+}
+
+/// Read a whole artifact as streamed pulse lists (+ its manifest) — the
+/// serving load path. CWRS layers decode straight from the range-coded
+/// rank stream into [`SparseQuantLayer`] without ever materializing the
+/// dense component vector; other codecs are replayed through the same
+/// sink so downstream compilers see one representation.
+pub fn read_sparse_model(path: &Path) -> Result<(SparseQuantModel, ArtifactManifest)> {
+    let mut reader = ArtifactReader::open(path)?;
+    let mut layers: Vec<Option<SparseQuantLayer>> = vec![None; reader.spec.layers.len()];
+    while let Some((li, s)) = reader.next_layer_sparse()? {
+        if layers[li].is_some() {
+            bail!("duplicate layer {li} in {}", path.display());
+        }
+        layers[li] = Some(s);
+    }
+    for &li in &reader.spec.weighted_layers() {
+        if layers[li].is_none() {
+            bail!("artifact {} is missing weighted layer {li}", path.display());
+        }
+    }
+    let manifest = reader
+        .manifest
+        .take()
+        .with_context(|| format!("artifact {} has no manifest", path.display()))?;
+    Ok((SparseQuantModel { spec: reader.spec, layers }, manifest))
 }
 
 /// Read the spec + manifest in one pass (CRC-verifying every section on
@@ -270,6 +367,109 @@ mod tests {
         let m = r.manifest().unwrap();
         assert_eq!(m.model, "rtest");
         assert_eq!(m.layers.len(), 2);
+    }
+
+    #[test]
+    fn sparse_stream_matches_dense() {
+        let (qm, buf) = packed_bytes(6);
+        let mut r = ArtifactReader::new(buf.as_slice()).unwrap();
+        let mut n = 0;
+        while let Some((li, s)) = r.next_layer_sparse().unwrap() {
+            assert!(s.is_valid());
+            assert_eq!(Some(&s.to_dense()), qm.layers[li].as_ref());
+            n += 1;
+        }
+        assert_eq!(n, 2);
+        assert!(r.manifest().is_some());
+    }
+
+    #[test]
+    fn v1_artifact_reads_back_dense_and_sparse() {
+        let (qm, _) = packed_bytes(7);
+        let mut buf = Vec::new();
+        let mut w = ArtifactWriter::with_version(&mut buf, &qm.spec, 1).unwrap();
+        for (li, l) in qm.layers.iter().enumerate() {
+            if let Some(q) = l {
+                w.write_layer(li, q).unwrap();
+            }
+        }
+        w.finish().unwrap();
+        assert_eq!(buf[4], 1);
+
+        let mut r = ArtifactReader::new(buf.as_slice()).unwrap();
+        assert_eq!(r.version, 1);
+        while let Some((li, q)) = r.next_layer().unwrap() {
+            assert_eq!(Some(&q), qm.layers[li].as_ref());
+        }
+        let mut r = ArtifactReader::new(buf.as_slice()).unwrap();
+        while let Some((li, s)) = r.next_layer_sparse().unwrap() {
+            assert_eq!(Some(&s.to_dense()), qm.layers[li].as_ref());
+        }
+    }
+
+    #[test]
+    fn v1_artifact_with_cwrs_blob_rejected() {
+        use crate::artifact::crc::crc32;
+        use crate::artifact::spec_codec::encode_spec;
+        use crate::compress::compress_layer;
+        use crate::pvq::PvqVector;
+
+        let (qm, _) = packed_bytes(8);
+        let q = qm.layers[0].as_ref().unwrap();
+        let mut comps = q.w.clone();
+        comps.extend_from_slice(&q.b_pyramid);
+        let pv = PvqVector { k: q.k, components: comps, rho: q.rho };
+        let blob = compress_layer(&pv, Codec::Cwrs);
+        assert_eq!(blob[4], Codec::Cwrs.id());
+
+        // hand-assemble a v1 container whose first LAYR carries that blob
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        let mut section = |buf: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]| {
+            buf.extend_from_slice(tag);
+            buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            buf.extend_from_slice(payload);
+            buf.extend_from_slice(&crc32(payload).to_le_bytes());
+        };
+        section(&mut buf, TAG_SPEC, &encode_spec(&qm.spec).unwrap());
+        let mut layr = Vec::new();
+        layr.extend_from_slice(&0u32.to_le_bytes());
+        layr.extend_from_slice(&(q.w.len() as u32).to_le_bytes());
+        layr.extend_from_slice(&(q.b.len() as u32).to_le_bytes());
+        for &b in &q.b {
+            layr.extend_from_slice(&b.to_le_bytes());
+        }
+        layr.extend_from_slice(&blob);
+        section(&mut buf, TAG_LAYER, &layr);
+        section(&mut buf, TAG_END, &[]);
+
+        let mut r = ArtifactReader::new(buf.as_slice()).unwrap();
+        let err = r.next_layer().unwrap_err();
+        assert!(err.to_string().contains("cwrs"), "got: {err:#}");
+        let mut r = ArtifactReader::new(buf.as_slice()).unwrap();
+        assert!(r.next_layer_sparse().is_err());
+    }
+
+    #[test]
+    fn read_sparse_model_roundtrips_file() {
+        let (qm, buf) = packed_bytes(9);
+        let dir = std::env::temp_dir().join("pvqnet_reader_sparse_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.pvqm");
+        std::fs::write(&path, &buf).unwrap();
+        let (sm, mani) = read_sparse_model(&path).unwrap();
+        assert_eq!(sm.spec, qm.spec);
+        assert_eq!(mani.layers.len(), 2);
+        for (li, l) in sm.layers.iter().enumerate() {
+            match (l, qm.layers[li].as_ref()) {
+                (Some(s), Some(q)) => assert_eq!(&s.to_dense(), q),
+                (None, None) => {}
+                _ => panic!("layer {li} presence mismatch"),
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -9,8 +9,8 @@
 use super::crc::crc32;
 use super::manifest::{ArtifactManifest, LayerManifest};
 use super::spec_codec::encode_spec;
-use super::{MAGIC, TAG_END, TAG_LAYER, TAG_MANIFEST, TAG_SPEC, VERSION};
-use crate::compress::compress_layer_best;
+use super::{MAGIC, TAG_END, TAG_LAYER, TAG_MANIFEST, TAG_SPEC, VERSION, VERSION_MIN};
+use crate::compress::{compress_layer_best_of, Codec};
 use crate::nn::model::ModelSpec;
 use crate::nn::pvq_engine::{QuantLayer, QuantModel};
 use crate::pvq::PvqVector;
@@ -34,20 +34,38 @@ pub struct ArtifactWriter<W: Write> {
     entries: Vec<LayerManifest>,
     /// Weighted-layer indices already written (ordering + duplicate guard).
     written: Vec<usize>,
+    /// Container version being emitted; gates the layer codec set.
+    version: u16,
 }
 
 impl<W: Write> ArtifactWriter<W> {
     /// Write the header and SPEC section; the writer is then ready to
-    /// stream layers.
-    pub fn new(mut out: W, spec: &ModelSpec) -> Result<Self> {
+    /// stream layers. Emits the current container version.
+    pub fn new(out: W, spec: &ModelSpec) -> Result<Self> {
+        Self::with_version(out, spec, VERSION)
+    }
+
+    /// [`ArtifactWriter::new`] targeting an explicit container version —
+    /// v1 keeps the artifact readable by pre-CWRS deployments by
+    /// restricting the per-layer best-of to the v1 codec set.
+    pub fn with_version(mut out: W, spec: &ModelSpec, version: u16) -> Result<Self> {
+        if !(VERSION_MIN..=VERSION).contains(&version) {
+            bail!("unsupported .pvqm version {version} (writer supports {VERSION_MIN}..={VERSION})");
+        }
         // the reader rejects inconsistent topologies at open; packing one
         // would defer that failure to deploy time — refuse it here instead
         spec.validate_shapes().context("refusing to pack a spec with inconsistent topology")?;
         out.write_all(MAGIC)?;
-        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&version.to_le_bytes())?;
         out.write_all(&0u16.to_le_bytes())?; // flags
         write_section(&mut out, TAG_SPEC, &encode_spec(spec)?)?;
-        Ok(ArtifactWriter { out, spec: spec.clone(), entries: Vec::new(), written: Vec::new() })
+        Ok(ArtifactWriter {
+            out,
+            spec: spec.clone(),
+            entries: Vec::new(),
+            written: Vec::new(),
+            version,
+        })
     }
 
     /// Compress and append one quantized layer (`layer_index` into
@@ -85,10 +103,13 @@ impl<W: Write> ArtifactWriter<W> {
         }
 
         // entropy-code w ++ b̂ through the shared layer codec, best-of
+        // over the codecs this container version may carry
         let mut comps = q.w.clone();
         comps.extend_from_slice(&q.b_pyramid);
         let pv = PvqVector { k: q.k, components: comps, rho: q.rho };
-        let (codec, blob) = compress_layer_best(&pv);
+        let candidates: &[Codec] =
+            if self.version >= 2 { &Codec::ALL } else { &Codec::ALL[..4] };
+        let (codec, blob) = compress_layer_best_of(&pv, candidates);
 
         let mut payload =
             Vec::with_capacity(12 + 4 * q.b.len() + blob.len());
@@ -144,9 +165,19 @@ impl<W: Write> ArtifactWriter<W> {
 /// Pack a whole [`QuantModel`] into a `.pvqm` file — the one-call bridge
 /// from `quant::apply` output to a deployable artifact.
 pub fn write_model(path: &Path, model: &QuantModel) -> Result<ArtifactManifest> {
+    write_model_with_version(path, model, VERSION)
+}
+
+/// [`write_model`] at an explicit container version (v1 for pre-CWRS
+/// readers; see the module docs on versioning).
+pub fn write_model_with_version(
+    path: &Path,
+    model: &QuantModel,
+    version: u16,
+) -> Result<ArtifactManifest> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
-    let mut w = ArtifactWriter::new(std::io::BufWriter::new(f), &model.spec)?;
+    let mut w = ArtifactWriter::with_version(std::io::BufWriter::new(f), &model.spec, version)?;
     for (li, layer) in model.layers.iter().enumerate() {
         if let Some(q) = layer {
             w.write_layer(li, q)
@@ -210,6 +241,25 @@ mod tests {
         let mut w = ArtifactWriter::new(&mut buf, &qm.spec).unwrap();
         w.write_layer(0, qm.layers[0].as_ref().unwrap()).unwrap();
         assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn v1_writer_excludes_cwrs_and_bad_versions_rejected() {
+        let qm = small_quant();
+        let mut buf = Vec::new();
+        let mut w = ArtifactWriter::with_version(&mut buf, &qm.spec, 1).unwrap();
+        for (li, l) in qm.layers.iter().enumerate() {
+            if let Some(q) = l {
+                w.write_layer(li, q).unwrap();
+            }
+        }
+        let m = w.finish().unwrap();
+        assert_eq!(buf[4], 1, "version field must be 1");
+        for l in &m.layers {
+            assert_ne!(l.codec, Codec::Cwrs, "v1 artifact must not carry cwrs");
+        }
+        assert!(ArtifactWriter::with_version(Vec::new(), &qm.spec, 0).is_err());
+        assert!(ArtifactWriter::with_version(Vec::new(), &qm.spec, VERSION + 1).is_err());
     }
 
     #[test]

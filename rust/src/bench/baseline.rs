@@ -17,8 +17,12 @@
 //! * `PlatformSkip` — the platform fingerprints differ; numbers from
 //!   different machines are not comparable and are never gated.
 //! * `NoBaseline` — a new metric; recorded, not judged.
-//! * `Insufficient` — degenerate statistics (n < 2 or zero variance),
-//!   surfaced explicitly instead of as a `NaN` verdict.
+//! * `Insufficient` — degenerate statistics (fewer than two samples on
+//!   either side), surfaced explicitly instead of as a `NaN` verdict.
+//!   Zero-variance pairs are different: both sides deterministic means
+//!   exact comparison is *stronger* than a t-test, so those are judged
+//!   by mean equality against the effect floor and can gate (this is
+//!   how size metrics like `artifact/bytes_per_weight` stay honest).
 //!
 //! Only metrics marked `gate` (the hot paths: batch kernel throughput,
 //! shard scaling, HTTP p99, loadgen latency) can fail the gate, and an
@@ -302,9 +306,30 @@ pub fn compare(baseline: &BenchDoc, currents: &[BenchDoc], min_effect_pct: f64) 
                                 Verdict::Unchanged
                             }
                         }
-                        // a deterministic metric that reproduced exactly
-                        // is unchanged, not a statistics failure
-                        Err(StatError::ZeroVariance) if m.mean == b.mean => Verdict::Unchanged,
+                        // zero variance on both sides means the metric is
+                        // deterministic (artifact sizes, exact counts): an
+                        // exact reproduction is unchanged, and an exact
+                        // shift is a real effect that needs no t statistic
+                        // — only the effect floor applies. This is what
+                        // lets size metrics like artifact/bytes_per_weight
+                        // participate in the gate.
+                        Err(StatError::ZeroVariance) => {
+                            let delta = row
+                                .delta_pct
+                                .unwrap_or(if m.mean == b.mean { 0.0 } else { f64::INFINITY });
+                            let worse = if m.higher_is_better {
+                                m.mean < b.mean
+                            } else {
+                                m.mean > b.mean
+                            };
+                            if delta.abs() < min_effect_pct {
+                                Verdict::Unchanged
+                            } else if worse {
+                                Verdict::Regressed
+                            } else {
+                                Verdict::Improved
+                            }
+                        }
                         Err(e) => Verdict::Insufficient(e),
                     };
                 }
@@ -493,6 +518,33 @@ mod tests {
         assert_eq!(cmp.rows[1].verdict, Verdict::Unchanged, "exact reproduction is unchanged");
         assert_eq!(cmp.rows[2].verdict, Verdict::NoBaseline);
         assert!(!cmp.gate_failed());
+    }
+
+    #[test]
+    fn deterministic_metrics_gate_on_exact_shifts() {
+        // zero variance on both sides = deterministic metric: an exact
+        // mean shift past the floor is Regressed/Improved (no t-test),
+        // so size metrics like artifact/bytes_per_weight really gate
+        let base = doc(vec![metric("bytes_per_weight", 0.40, 0.0, 4, false, true)]);
+        // +25%: the compressed artifact got fatter — gate fails
+        let cur = doc(vec![metric("bytes_per_weight", 0.50, 0.0, 4, false, true)]);
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Regressed);
+        assert!(cmp.gate_failed());
+        // −25%: smaller is an improvement for lower-is-better
+        let cur = doc(vec![metric("bytes_per_weight", 0.30, 0.0, 4, false, true)]);
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Improved);
+        assert!(!cmp.gate_failed());
+        // a shift under the effect floor stays Unchanged
+        let cur = doc(vec![metric("bytes_per_weight", 0.404, 0.0, 4, false, true)]);
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Unchanged);
+        // baseline mean zero (delta undefined) still flags a shift
+        let base = doc(vec![metric("fallback_layers", 0.0, 0.0, 4, false, true)]);
+        let cur = doc(vec![metric("fallback_layers", 2.0, 0.0, 4, false, true)]);
+        let cmp = compare(&base, &[cur], 5.0);
+        assert_eq!(cmp.rows[0].verdict, Verdict::Regressed);
     }
 
     #[test]

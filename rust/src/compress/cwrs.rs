@@ -1,0 +1,513 @@
+//! CWRS — "coding with respect to a sphere/pyramid": grouped Fischer-rank
+//! coding of a PVQ layer through a dependency-free range coder.
+//!
+//! §II/§VI of the paper: a whole point of P(N,K) can be coded as one
+//! integer rank in ⌈log₂ Nₚ(N,K)⌉ bits — the most compact fixed-rate
+//! representation — but the rank is a very long integer for layer-sized
+//! N. This module makes that practical the way Opus/CELT does:
+//!
+//! * the layer is cut into **groups** of `group` components (default 128);
+//! * each group's pulse budget k_g is exp-Golomb coded, then the group's
+//!   Fischer rank within P(n_g, k_g) is emitted as one bounded
+//!   range-coder symbol (top ≤16 bits) plus raw low bits peeled off the
+//!   [`BigUint`] with [`BigUint::bit_window`] — **no giant division**;
+//! * groups whose budget exceeds [`K_TABLE_MAX`] (pathological
+//!   magnitudes, e.g. i32-boundary components) fall back to per-component
+//!   zigzag exp-Golomb inside the same range-coded stream.
+//!
+//! The range coder is the classic LZMA-style carry-counting coder over
+//! bytes, transported through [`bitio`](super::bitio) so the whole
+//! compress stack shares one I/O layer. Decoding is streamed: the rank
+//! walk emits `(position, magnitude, sign)` triples straight to the
+//! caller ([`decode_pulses`]), which is what the artifact `decode_into`
+//! path feeds into CSR pulse lists without a dense intermediate.
+
+use super::bitio::{BitReader, BitWriter};
+use crate::pvq::bigint::BigUint;
+use crate::pvq::{index_to_pulses, shared_table, vector_to_index};
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+
+/// Writer-side group width. Any 1..=255 decodes; 128 amortizes the
+/// per-group k_g header to well under 0.1 bits/weight while the count
+/// tables stay a few MB at worst.
+pub const DEFAULT_GROUP: u8 = 128;
+
+/// Largest per-group pulse budget coded via the Fischer rank; above this
+/// the group falls back to zigzag exp-Golomb components. Covers K/N up
+/// to 4 at the default group width and bounds the shared count-table
+/// cache at (group+1)·(K_TABLE_MAX+1) bigints per band.
+pub const K_TABLE_MAX: u64 = 512;
+
+// ---------------------------------------------------------------------------
+// Range coder (LZMA-style, carry-counting). Symbols are uniform over
+// [0, ft) with ft ≤ 2¹⁶, so `range / ft` is a plain u32 division.
+// ---------------------------------------------------------------------------
+
+const TOP: u32 = 1 << 24;
+const FT_MAX_BITS: u32 = 16;
+
+struct RangeEncoder {
+    w: BitWriter,
+    low: u64,
+    range: u32,
+    cache: u8,
+    /// Pending bytes (the cached byte + a run of 0xFF) that a future
+    /// carry may still increment.
+    cache_size: u64,
+}
+
+impl RangeEncoder {
+    fn new() -> Self {
+        RangeEncoder {
+            w: BitWriter::new(),
+            low: 0,
+            range: u32::MAX,
+            cache: 0,
+            cache_size: 1,
+        }
+    }
+
+    fn shift_low(&mut self) {
+        // Flush unless the outgoing byte is 0xFF with no carry resolved
+        // yet — those stay pending so a later carry can ripple through.
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            self.w.put_bits(self.cache.wrapping_add(carry) as u64, 8);
+            for _ in 1..self.cache_size {
+                self.w.put_bits(0xFFu8.wrapping_add(carry) as u64, 8);
+            }
+            self.cache = (self.low >> 24) as u8;
+            self.cache_size = 0;
+        }
+        self.cache_size += 1;
+        self.low = (self.low & 0x00FF_FFFF) << 8;
+    }
+
+    /// Encode `v` uniform over [0, ft), ft ≤ 2¹⁶. The last symbol absorbs
+    /// the division slack so the full range is always covered.
+    fn encode(&mut self, v: u32, ft: u32) {
+        debug_assert!(ft >= 1 && ft <= 1 << FT_MAX_BITS && v < ft);
+        if ft == 1 {
+            return;
+        }
+        let r = self.range / ft;
+        self.low += (r as u64) * (v as u64);
+        self.range = if v == ft - 1 { self.range - r * v } else { r };
+        while self.range < TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    /// Raw `n` bits of `v` (MSB-first), chunked into ≤16-bit symbols.
+    fn enc_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64 && (n == 64 || v >> n == 0));
+        let mut rem = n;
+        while rem > 0 {
+            let chunk = rem.min(FT_MAX_BITS);
+            rem -= chunk;
+            let part = (v >> rem) & ((1u64 << chunk) - 1);
+            self.encode(part as u32, 1u32 << chunk);
+        }
+    }
+
+    /// Unsigned exp-Golomb(0): for x = m+1 with nb significant bits,
+    /// nb−1 zero flags, the terminating 1 flag, then the low nb−1 bits
+    /// of x. Every unary flag — including the terminating 1 — must be
+    /// its own binary symbol: the decoder reads them with `decode(2)`,
+    /// and the coder's slack-absorption rule makes `encode(1, 2)`
+    /// followed by `encode(low, 2^{nb−1})` a *different* state
+    /// trajectory than one fused `encode(x, 2^nb)`.
+    fn enc_ue64(&mut self, m: u64) {
+        let x = m + 1;
+        let nb = 64 - x.leading_zeros();
+        for _ in 0..nb - 1 {
+            self.encode(0, 2);
+        }
+        self.encode(1, 2);
+        if nb > 1 {
+            self.enc_bits(x & ((1u64 << (nb - 1)) - 1), nb - 1);
+        }
+    }
+
+    /// Encode a Fischer rank uniform over [0, total): the top ≤16 bits as
+    /// one bounded symbol, the remaining low bits raw via
+    /// [`BigUint::bit_window`]. No bigint division anywhere.
+    fn enc_rank(&mut self, rank: &BigUint, total: &BigUint) {
+        let max = total.checked_sub(&BigUint::one()).expect("total ≥ 1");
+        let ftb = max.bits() as u32;
+        if ftb == 0 {
+            return; // total == 1: rank is necessarily 0
+        }
+        if ftb <= FT_MAX_BITS {
+            self.encode(
+                rank.to_u64().expect("rank < 2^16") as u32,
+                total.to_u64().expect("total ≤ 2^16") as u32,
+            );
+        } else {
+            let b = ftb - FT_MAX_BITS;
+            let top_total = max.shr_bits(b as u64).to_u64().expect("≤ 2^16") as u32 + 1;
+            self.encode(rank.shr_bits(b as u64).to_u64().expect("< 2^16") as u32, top_total);
+            let mut rem = b;
+            while rem > 0 {
+                let chunk = rem.min(FT_MAX_BITS);
+                rem -= chunk;
+                self.enc_bits(rank.bit_window(rem as u64, chunk), chunk);
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.w.finish()
+    }
+}
+
+struct RangeDecoder<'a> {
+    r: BitReader<'a>,
+    range: u32,
+    code: u32,
+}
+
+impl<'a> RangeDecoder<'a> {
+    fn new(payload: &'a [u8]) -> Self {
+        let mut r = BitReader::new(payload);
+        let _ = r.get_bits(8); // spurious leading zero byte (LZMA convention)
+        let mut code = 0u32;
+        for _ in 0..4 {
+            code = (code << 8) | r.get_bits(8).unwrap_or(0) as u32;
+        }
+        RangeDecoder { r, range: u32::MAX, code }
+    }
+
+    /// Past end-of-stream bytes read as 0: a truncated stream decodes
+    /// deterministically into garbage that the callers' invariant checks
+    /// (rank range, unary length, pulse sums) turn into typed errors.
+    fn read_byte(&mut self) -> u32 {
+        self.r.get_bits(8).unwrap_or(0) as u32
+    }
+
+    fn decode(&mut self, ft: u32) -> u32 {
+        debug_assert!(ft >= 1 && ft <= 1 << FT_MAX_BITS);
+        if ft == 1 {
+            return 0;
+        }
+        let r = self.range / ft;
+        let v = (self.code / r).min(ft - 1);
+        self.code -= r * v;
+        self.range = if v == ft - 1 { self.range - r * v } else { r };
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.read_byte();
+            self.range <<= 8;
+        }
+        v
+    }
+
+    fn dec_bits(&mut self, n: u32) -> u64 {
+        let mut rem = n;
+        let mut out = 0u64;
+        while rem > 0 {
+            let chunk = rem.min(FT_MAX_BITS);
+            rem -= chunk;
+            out |= (self.decode(1u32 << chunk) as u64) << rem;
+        }
+        out
+    }
+
+    fn dec_ue64(&mut self) -> Result<u64> {
+        let mut zeros = 0u32;
+        while self.decode(2) == 0 {
+            zeros += 1;
+            if zeros > 63 {
+                bail!("cwrs: exp-golomb unary overflow (corrupt stream)");
+            }
+        }
+        // the 1 just consumed is the top bit of x; zeros more bits follow
+        let rest = self.dec_bits(zeros);
+        Ok(((1u64 << zeros) | rest) - 1)
+    }
+
+    fn dec_rank(&mut self, total: &BigUint) -> Result<BigUint> {
+        let max = total.checked_sub(&BigUint::one()).expect("total ≥ 1");
+        let ftb = max.bits() as u32;
+        if ftb == 0 {
+            return Ok(BigUint::zero());
+        }
+        let rank = if ftb <= FT_MAX_BITS {
+            BigUint::from_u64(self.decode(total.to_u64().expect("total ≤ 2^16") as u32) as u64)
+        } else {
+            let b = ftb - FT_MAX_BITS;
+            let top_total = max.shr_bits(b as u64).to_u64().expect("≤ 2^16") as u32 + 1;
+            let mut rank = BigUint::from_u64(self.decode(top_total) as u64).shl_bits(b as u64);
+            let mut rem = b;
+            while rem > 0 {
+                let chunk = rem.min(FT_MAX_BITS);
+                rem -= chunk;
+                let v = self.dec_bits(chunk);
+                rank = rank.add(&BigUint::from_u64(v).shl_bits(rem as u64));
+            }
+            rank
+        };
+        if rank.cmp_big(total) != Ordering::Less {
+            bail!("cwrs: rank out of range (corrupt stream)");
+        }
+        Ok(rank)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grouped CWRS payload
+// ---------------------------------------------------------------------------
+
+/// Map i32 → even/odd unsigned so i32::MIN (magnitude 2³¹) stays exact.
+fn zigzag(v: i32) -> u64 {
+    if v >= 0 {
+        (v as u64) << 1
+    } else {
+        ((v.unsigned_abs() as u64) << 1) - 1
+    }
+}
+
+/// Inverse of [`zigzag`]; rejects magnitudes no i32 can hold (+2³¹ and up).
+fn unzigzag(m: u64) -> Result<i32> {
+    if m & 1 == 0 {
+        let mag = m >> 1;
+        if mag > i32::MAX as u64 {
+            bail!("cwrs: magnitude {mag} not representable as +i32");
+        }
+        Ok(mag as i32)
+    } else {
+        let mag = (m + 1) >> 1;
+        if mag > 1u64 << 31 {
+            bail!("cwrs: magnitude -{mag} overflows i32");
+        }
+        Ok(-(mag as i64) as i32)
+    }
+}
+
+/// Encode a full component slice as one grouped CWRS range-coder stream.
+/// `group` must be ≥ 1 (the PVQL frame stores it as the codec extra).
+pub fn encode_slice(components: &[i32], group: u8) -> Vec<u8> {
+    assert!(group >= 1, "cwrs group size must be ≥ 1");
+    let mut enc = RangeEncoder::new();
+    for slice in components.chunks(group as usize) {
+        let k_g: u64 = slice.iter().map(|&v| v.unsigned_abs() as u64).sum();
+        enc.enc_ue64(k_g);
+        if k_g == 0 {
+            continue;
+        }
+        if k_g > K_TABLE_MAX {
+            for &v in slice {
+                enc.enc_ue64(zigzag(v));
+            }
+        } else {
+            let table = shared_table(slice.len(), k_g as usize);
+            let rank = vector_to_index(slice, &table);
+            let total = table.count(slice.len(), k_g as usize).clone();
+            enc.enc_rank(&rank, &total);
+        }
+    }
+    enc.finish()
+}
+
+/// Streamed decode: emit one `(position, magnitude, is_negative)` triple
+/// per nonzero component, positions strictly increasing across the whole
+/// layer. Returns Σ magnitudes so the caller can check it against the
+/// layer's K. Never panics on corrupt input — typed errors only.
+pub fn decode_pulses<F: FnMut(usize, u32, bool)>(
+    payload: &[u8],
+    n: usize,
+    group: u8,
+    mut emit: F,
+) -> Result<u64> {
+    if group == 0 {
+        bail!("cwrs: group size 0 is invalid");
+    }
+    let g = group as usize;
+    let mut dec = RangeDecoder::new(payload);
+    let mut total_l1 = 0u64;
+    let mut base = 0usize;
+    while base < n {
+        let n_g = g.min(n - base);
+        let k_g = dec.dec_ue64()?;
+        if k_g == 0 {
+            base += n_g;
+            continue;
+        }
+        if k_g > K_TABLE_MAX {
+            let mut sum = 0u64;
+            for j in 0..n_g {
+                let v = unzigzag(dec.dec_ue64()?)?;
+                let mag = v.unsigned_abs();
+                if mag != 0 {
+                    emit(base + j, mag, v < 0);
+                }
+                sum += mag as u64;
+            }
+            if sum != k_g {
+                bail!("cwrs: group pulse sum {sum} ≠ header k={k_g} (corrupt stream)");
+            }
+        } else {
+            let table = shared_table(n_g, k_g as usize);
+            let total = table.count(n_g, k_g as usize).clone();
+            let rank = dec.dec_rank(&total)?;
+            index_to_pulses(&rank, n_g, k_g as u32, &table, |j, mag, neg| {
+                emit(base + j, mag, neg);
+            });
+        }
+        total_l1 += k_g;
+        base += n_g;
+    }
+    Ok(total_l1)
+}
+
+/// Dense decode (built on [`decode_pulses`]) for the legacy
+/// `PvqVector`-returning path.
+pub fn decode_slice(payload: &[u8], n: usize, group: u8) -> Result<Vec<i32>> {
+    let mut out = vec![0i32; n];
+    decode_pulses(payload, n, group, |pos, mag, neg| {
+        out[pos] = if neg { -(mag as i64) as i32 } else { mag as i32 };
+    })?;
+    Ok(out)
+}
+
+/// Exact compressed bits/weight of this slice under CWRS — the survey row.
+pub fn bits_per_weight(components: &[i32]) -> f64 {
+    if components.is_empty() {
+        return 0.0;
+    }
+    encode_slice(components, DEFAULT_GROUP).len() as f64 * 8.0 / components.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn range_coder_roundtrips_mixed_alphabets() {
+        let mut rng = Rng::new(11);
+        let mut symbols = Vec::new();
+        for _ in 0..10_000 {
+            let ft = 2 + (rng.next_u64() % 65_535) as u32; // 2..=65536
+            let v = (rng.next_u64() % ft as u64) as u32;
+            symbols.push((v, ft));
+        }
+        let mut enc = RangeEncoder::new();
+        for &(v, ft) in &symbols {
+            enc.encode(v, ft);
+        }
+        let bytes = enc.finish();
+        let mut dec = RangeDecoder::new(&bytes);
+        for &(v, ft) in &symbols {
+            assert_eq!(dec.decode(ft), v);
+        }
+    }
+
+    #[test]
+    fn range_coder_carry_cascade() {
+        // max symbols push low toward the top of the interval, forcing
+        // long 0xFF runs and the deferred-carry path in shift_low.
+        let mut enc = RangeEncoder::new();
+        for _ in 0..2_000 {
+            enc.encode(65_535, 65_536);
+        }
+        enc.encode(0, 65_536);
+        let bytes = enc.finish();
+        let mut dec = RangeDecoder::new(&bytes);
+        for _ in 0..2_000 {
+            assert_eq!(dec.decode(65_536), 65_535);
+        }
+        assert_eq!(dec.decode(65_536), 0);
+    }
+
+    #[test]
+    fn ue64_and_bits_roundtrip() {
+        let vals = [0u64, 1, 2, 7, 8, 255, 1 << 20, u32::MAX as u64, (1 << 40) + 3];
+        let mut enc = RangeEncoder::new();
+        for &m in &vals {
+            enc.enc_ue64(m);
+            enc.enc_bits(m & 0x1FFF_FFFF, 29);
+        }
+        let bytes = enc.finish();
+        let mut dec = RangeDecoder::new(&bytes);
+        for &m in &vals {
+            assert_eq!(dec.dec_ue64().unwrap(), m);
+            assert_eq!(dec.dec_bits(29), m & 0x1FFF_FFFF);
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip_small_and_boundary() {
+        let cases: Vec<Vec<i32>> = vec![
+            vec![],
+            vec![0, 0, 0, 0],
+            vec![0, 0, 3, 0, -1, 1, 0, 0, -2, 0, 0, 1],
+            vec![i32::MIN],
+            vec![i32::MAX, 0, -1, 1],
+            vec![i32::MIN, i32::MAX, i32::MIN, 7],
+            (0..100).map(|i| if i % 7 == 0 { (i as i32 % 5) - 2 } else { 0 }).collect(),
+        ];
+        for (gi, g) in [1u8, 3, 32, 255].into_iter().enumerate() {
+            for c in &cases {
+                let bytes = encode_slice(c, g);
+                let back = decode_slice(&bytes, c.len(), g).unwrap();
+                assert_eq!(&back, c, "group {g} case {gi}");
+            }
+        }
+    }
+
+    #[test]
+    fn pulses_stream_in_order_and_sum() {
+        let mut rng = Rng::new(5);
+        let v: Vec<i32> = (0..500)
+            .map(|_| {
+                if rng.next_u64() % 4 == 0 {
+                    (rng.next_u64() % 9) as i32 - 4
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let expect_l1: u64 = v.iter().map(|&c| c.unsigned_abs() as u64).sum();
+        let bytes = encode_slice(&v, DEFAULT_GROUP);
+        let mut last: Option<usize> = None;
+        let mut rebuilt = vec![0i32; v.len()];
+        let l1 = decode_pulses(&bytes, v.len(), DEFAULT_GROUP, |pos, mag, neg| {
+            assert!(mag > 0);
+            assert!(last.is_none_or(|p| pos > p), "positions must increase");
+            last = Some(pos);
+            rebuilt[pos] = if neg { -(mag as i32) } else { mag as i32 };
+        })
+        .unwrap();
+        assert_eq!(l1, expect_l1);
+        assert_eq!(rebuilt, v);
+    }
+
+    #[test]
+    fn corrupt_streams_fail_typed() {
+        let v: Vec<i32> = vec![0, 2, -1, 0, 0, 3, 0, -4, 1, 0, 0, 1];
+        let bytes = encode_slice(&v, 4);
+        // group size 0 rejected up front
+        assert!(decode_pulses(&bytes, v.len(), 0, |_, _, _| {}).is_err());
+        // truncations never panic; they either error or decode to a
+        // pulse stream whose sum the caller's K-check would reject
+        for cut in 0..bytes.len() {
+            let _ = decode_slice(&bytes[..cut], v.len(), 4);
+        }
+        // single-byte mutations likewise
+        for i in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 0x5A;
+            let _ = decode_slice(&m, v.len(), 4);
+        }
+        // empty payload with nonzero n decodes all-zero groups or errors
+        let r = decode_slice(&[], v.len(), 4);
+        if let Ok(c) = r {
+            assert!(c.iter().all(|&x| x == 0));
+        }
+    }
+}

@@ -3,17 +3,21 @@
 //! Binary layout (little-endian):
 //! ```text
 //! magic  "PVQL"                     4 bytes
-//! codec  u8   (0=ExpGolomb 1=Rle 2=Huffman 3=Raw)
+//! codec  u8   (0=ExpGolomb 1=Rle 2=Huffman 3=Raw 4=Cwrs)
 //! n      u32  component count
 //! k      u32  pulse budget
 //! rho    f64  gain
-//! extra  codec-specific header (Huffman: u8 v_max + (2v_max+2)×u32 lengths→freq table proxy)
+//! extra  codec-specific header (Huffman: u8 v_max + (2v_max+2)×u32 lengths→freq table proxy;
+//!        Cwrs: u8 group size)
 //! plen   u32  payload byte length
 //! payload
 //! ```
 //! For Huffman the symbol *frequencies* are stored (u32-clamped) so the
-//! decoder rebuilds the identical canonical codebook.
+//! decoder rebuilds the identical canonical codebook. For CWRS the
+//! single extra byte is the group width the range-coded Fischer ranks
+//! were cut at (`crate::compress::cwrs`).
 
+use super::cwrs;
 use super::expgolomb;
 use super::huffman::HuffmanCodec;
 use super::rle;
@@ -31,12 +35,21 @@ pub enum Codec {
     Huffman,
     /// Raw i32 components (debug/baseline).
     Raw,
+    /// Grouped Fischer-rank range coding (§II/§VI fixed-rate enumeration
+    /// made streamable — see [`cwrs`]).
+    Cwrs,
 }
 
 impl Codec {
     /// Every codec, in id order — the candidate set for
     /// [`compress_layer_best`].
-    pub const ALL: [Codec; 4] = [Codec::ExpGolomb, Codec::Rle, Codec::Huffman, Codec::Raw];
+    pub const ALL: [Codec; 5] = [
+        Codec::ExpGolomb,
+        Codec::Rle,
+        Codec::Huffman,
+        Codec::Raw,
+        Codec::Cwrs,
+    ];
 
     /// Stable on-disk id (also used by the `.pvqm` artifact manifest).
     pub fn id(self) -> u8 {
@@ -45,6 +58,7 @@ impl Codec {
             Codec::Rle => 1,
             Codec::Huffman => 2,
             Codec::Raw => 3,
+            Codec::Cwrs => 4,
         }
     }
 
@@ -55,6 +69,7 @@ impl Codec {
             1 => Codec::Rle,
             2 => Codec::Huffman,
             3 => Codec::Raw,
+            4 => Codec::Cwrs,
             _ => bail!("unknown codec id {id}"),
         })
     }
@@ -66,6 +81,7 @@ impl Codec {
             Codec::Rle => "rle",
             Codec::Huffman => "huffman",
             Codec::Raw => "raw",
+            Codec::Cwrs => "cwrs",
         }
     }
 }
@@ -109,6 +125,10 @@ pub fn compress_layer(q: &PvqVector, codec: Codec) -> Vec<u8> {
             }
             p
         }
+        Codec::Cwrs => {
+            out.push(cwrs::DEFAULT_GROUP);
+            cwrs::encode_slice(&q.components, cwrs::DEFAULT_GROUP)
+        }
     };
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&payload);
@@ -119,15 +139,22 @@ pub fn compress_layer(q: &PvqVector, codec: Codec) -> Vec<u8> {
 /// per-layer best-of selection the `.pvqm` artifact writer uses (§VI:
 /// which coder wins depends on the layer's N/K ratio).
 pub fn compress_layer_best(q: &PvqVector) -> (Codec, Vec<u8>) {
+    compress_layer_best_of(q, &Codec::ALL)
+}
+
+/// [`compress_layer_best`] over an explicit candidate set — the v1
+/// artifact writer restricts to the codecs v1 readers understand.
+/// Ties keep the earlier candidate. Panics on an empty set.
+pub fn compress_layer_best_of(q: &PvqVector, candidates: &[Codec]) -> (Codec, Vec<u8>) {
     let mut best: Option<(Codec, Vec<u8>)> = None;
-    for codec in Codec::ALL {
+    for &codec in candidates {
         let bytes = compress_layer(q, codec);
         match &best {
             Some((_, b)) if b.len() <= bytes.len() => {}
             _ => best = Some((codec, bytes)),
         }
     }
-    best.expect("Codec::ALL is non-empty")
+    best.expect("candidate codec set must be non-empty")
 }
 
 /// Deserialize a layer produced by [`compress_layer`].
@@ -160,6 +187,7 @@ pub fn decompress_layer(bytes: &[u8]) -> Result<PvqVector> {
     } else {
         None
     };
+    let group = if codec == Codec::Cwrs { take(&mut pos, 1)?[0] } else { 0 };
 
     let plen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
     let payload = take(&mut pos, plen)?;
@@ -182,12 +210,69 @@ pub fn decompress_layer(bytes: &[u8]) -> Result<PvqVector> {
                 .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                 .collect()
         }
+        Codec::Cwrs => {
+            cwrs::decode_slice(payload, n, group).context("cwrs payload corrupt")?
+        }
     };
     let q = PvqVector { k, components, rho };
     if !q.is_valid() && k != 0 {
         bail!("decoded layer violates pyramid invariant (Σ|ŷ|={} ≠ K={k})", q.l1());
     }
     Ok(q)
+}
+
+/// Receiver for a streamed layer decode ([`decompress_layer_into`]):
+/// `begin` announces the layer geometry, then one `pulse` call per
+/// nonzero component, positions strictly increasing.
+pub trait PulseSink {
+    /// Layer geometry: component count, pulse budget, gain.
+    fn begin(&mut self, n: usize, k: u32, rho: f64);
+    /// One nonzero component: flat position, magnitude, sign.
+    fn pulse(&mut self, pos: usize, mag: u32, neg: bool);
+}
+
+/// Streamed decode of a [`compress_layer`] container straight into a
+/// [`PulseSink`] — the `decode_into` serving path. CWRS layers stream
+/// natively (the Fischer-rank walk emits triples without a dense
+/// vector); other codecs decode densely and replay their nonzeros, so
+/// every codec feeds the same sink contract.
+pub fn decompress_layer_into<S: PulseSink>(bytes: &[u8], sink: &mut S) -> Result<()> {
+    let is_cwrs = bytes.len() >= 5 && &bytes[..4] == b"PVQL" && bytes[4] == Codec::Cwrs.id();
+    if !is_cwrs {
+        let q = decompress_layer(bytes)?;
+        sink.begin(q.components.len(), q.k, q.rho);
+        for (i, &v) in q.components.iter().enumerate() {
+            if v != 0 {
+                sink.pulse(i, v.unsigned_abs(), v < 0);
+            }
+        }
+        return Ok(());
+    }
+
+    let mut pos = 5usize; // past magic + codec id
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated layer container at offset {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let k = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let rho = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+    let group = take(&mut pos, 1)?[0];
+    let plen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let payload = take(&mut pos, plen)?;
+
+    sink.begin(n, k, rho);
+    let l1 = cwrs::decode_pulses(payload, n, group, |p, m, s| sink.pulse(p, m, s))
+        .context("cwrs payload corrupt")?;
+    // same k=0 escape hatch as the dense path's invariant check
+    if l1 != k as u64 && k != 0 {
+        bail!("decoded layer violates pyramid invariant (Σ|ŷ|={l1} ≠ K={k})");
+    }
+    Ok(())
 }
 
 /// Compressed size in bits for each codec on this layer (exact), plus the
@@ -199,6 +284,7 @@ pub fn codec_survey(q: &PvqVector) -> Vec<(String, f64)> {
         ("exp-golomb".into(), expgolomb::bits_per_weight(&q.components)),
         ("rle".into(), rle::bits_per_weight(&q.components)),
         ("huffman(V=7)".into(), h.bits_per_weight(&q.components)),
+        ("cwrs(g=128)".into(), cwrs::bits_per_weight(&q.components)),
         (
             "fischer-index".into(),
             crate::pvq::np_bits_estimate(q.components.len() as u64, q.k as u64) / n,
@@ -223,7 +309,7 @@ mod tests {
     #[test]
     fn roundtrip_all_codecs() {
         let q = sample_layer(1, 4000, 5);
-        for codec in [Codec::ExpGolomb, Codec::Rle, Codec::Huffman, Codec::Raw] {
+        for codec in Codec::ALL {
             let bytes = compress_layer(&q, codec);
             let back = decompress_layer(&bytes).unwrap();
             assert_eq!(back.components, q.components, "{codec:?}");
@@ -236,7 +322,7 @@ mod tests {
     fn compression_beats_raw() {
         let q = sample_layer(2, 50_000, 5);
         let raw = compress_layer(&q, Codec::Raw).len();
-        for codec in [Codec::ExpGolomb, Codec::Rle, Codec::Huffman] {
+        for codec in [Codec::ExpGolomb, Codec::Rle, Codec::Huffman, Codec::Cwrs] {
             let c = compress_layer(&q, codec).len();
             assert!(
                 (c as f64) < raw as f64 / 8.0,
@@ -254,8 +340,82 @@ mod tests {
             if name == "entropy-bound" || name == "raw-f32" || name == "fischer-index" {
                 continue;
             }
+            if name.starts_with("cwrs") {
+                // a vector code legitimately beats the per-symbol entropy
+                // bound — that is the whole point of Fischer enumeration
+                assert!(*bpw <= entropy + 0.2, "cwrs {bpw} over scalar entropy {entropy}");
+                continue;
+            }
             assert!(*bpw + 1e-9 >= entropy, "{name} {bpw} under entropy {entropy}");
             assert!(*bpw <= entropy + 1.2, "{name} {bpw} way over entropy {entropy}");
+        }
+    }
+
+    #[test]
+    fn cwrs_wins_best_of_on_typical_layers() {
+        // the acceptance bar: CWRS strictly smaller than every scalar
+        // codec on ordinary N/K layers
+        for (seed, ratio) in [(21u64, 2usize), (22, 5), (23, 8)] {
+            let q = sample_layer(seed, 8000, ratio);
+            let (codec, bytes) = compress_layer_best(&q);
+            assert_eq!(codec, Codec::Cwrs, "N/K={ratio}");
+            for other in [Codec::ExpGolomb, Codec::Rle, Codec::Huffman, Codec::Raw] {
+                assert!(bytes.len() < compress_layer(&q, other).len(), "vs {other:?}");
+            }
+        }
+    }
+
+    #[derive(Default)]
+    struct CollectSink {
+        n: usize,
+        k: u32,
+        rho: f64,
+        pulses: Vec<(usize, u32, bool)>,
+    }
+    impl PulseSink for CollectSink {
+        fn begin(&mut self, n: usize, k: u32, rho: f64) {
+            self.n = n;
+            self.k = k;
+            self.rho = rho;
+        }
+        fn pulse(&mut self, pos: usize, mag: u32, neg: bool) {
+            self.pulses.push((pos, mag, neg));
+        }
+    }
+
+    #[test]
+    fn decode_into_matches_dense_for_all_codecs() {
+        let q = sample_layer(30, 3000, 4);
+        for codec in Codec::ALL {
+            let bytes = compress_layer(&q, codec);
+            let mut sink = CollectSink::default();
+            decompress_layer_into(&bytes, &mut sink).unwrap();
+            assert_eq!((sink.n, sink.k, sink.rho), (q.components.len(), q.k, q.rho));
+            let mut dense = vec![0i32; sink.n];
+            let mut last: Option<usize> = None;
+            for &(pos, mag, neg) in &sink.pulses {
+                assert!(last.is_none_or(|p| pos > p), "{codec:?}: order");
+                last = Some(pos);
+                dense[pos] = if neg { -(mag as i32) } else { mag as i32 };
+            }
+            assert_eq!(dense, q.components, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn decode_into_rejects_corrupt_cwrs() {
+        let q = sample_layer(31, 256, 4);
+        let bytes = compress_layer(&q, Codec::Cwrs);
+        for cut in [4usize, 12, 21, bytes.len() - 1] {
+            let mut sink = CollectSink::default();
+            assert!(decompress_layer_into(&bytes[..cut], &mut sink).is_err(), "cut {cut}");
+        }
+        // flipping payload bytes must never panic; K-mismatch surfaces as Err
+        for i in 22..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 0xA5;
+            let mut sink = CollectSink::default();
+            let _ = decompress_layer_into(&m, &mut sink);
         }
     }
 

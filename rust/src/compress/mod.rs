@@ -6,11 +6,14 @@
 //! * [`rle`] — zero-run-length coding for sparse (N/K ≥ 2) layers.
 //! * [`huffman`] — canonical Huffman with escape (the paper's bounded-table
 //!   scheme).
+//! * [`cwrs`] — grouped Fischer-rank range coding (§II/§VI enumeration as a
+//!   streamable codec) and the `decode_into` pulse stream.
 //! * [`stats`] — Tables 5–8 bucketed distributions + entropy bounds.
 //! * [`layer_codec`] — self-describing compressed layer container and the
 //!   per-codec bits/weight survey.
 
 pub mod bitio;
+pub mod cwrs;
 pub mod expgolomb;
 pub mod huffman;
 pub mod layer_codec;
@@ -19,6 +22,7 @@ pub mod stats;
 
 pub use huffman::HuffmanCodec;
 pub use layer_codec::{
-    codec_survey, compress_layer, compress_layer_best, decompress_layer, Codec,
+    codec_survey, compress_layer, compress_layer_best, compress_layer_best_of,
+    decompress_layer, decompress_layer_into, Codec, PulseSink,
 };
 pub use stats::{entropy_bits, Distribution};

@@ -10,9 +10,6 @@
 //! ClassifyRequest { samples, model, trace_ctx }  →  ClassifyReply { model, results }
 //! ```
 //!
-//! The old entry points survive as thin `#[deprecated]` shims so
-//! out-of-tree callers migrate gradually.
-//!
 //! The module also hosts [`ConfigError`], the typed validation error
 //! returned by the builder-style constructors
 //! ([`super::ServerConfig::builder`], [`super::HttpConfig::builder`])

@@ -169,21 +169,6 @@ impl Engine {
         }
     }
 
-    /// [`Engine::classify_batch`] under the trace context `ctx`: any
-    /// shard spans emitted by the engine's sharded kernels (see
-    /// [`crate::nn::parallel::for_each_shard`]) attach to `ctx`'s request instead
-    /// of being dropped. Results are identical to `classify_batch`.
-    #[deprecated(
-        note = "use the unified `Classify::submit` with `ClassifyRequest::with_trace`, \
-                or wrap `classify_batch` in `obs::with_ctx`"
-    )]
-    pub fn classify_batch_traced(
-        &self,
-        samples: &[&[u8]],
-        ctx: crate::obs::TraceCtx,
-    ) -> Result<Vec<usize>> {
-        crate::obs::with_ctx(ctx, || self.classify_batch(samples))
-    }
 }
 
 impl Classify for Engine {

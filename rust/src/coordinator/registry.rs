@@ -16,13 +16,14 @@
 
 use super::api::{Classify, ClassifyReply, ClassifyRequest, ReplyCallback};
 use super::engine::Engine;
-use super::server::{Response, Server, ServerConfig};
-use crate::artifact::{read_model, ArtifactManifest};
+use super::server::{Server, ServerConfig};
+use crate::artifact::{read_model, read_sparse_model, ArtifactManifest};
 use crate::hw::HwReport;
 use crate::nn::binary::BinaryNet;
 use crate::nn::csr_engine::CompiledQuantModel;
+use crate::nn::pvq_engine::SparseQuantModel;
 use crate::nn::QuantModel;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -100,6 +101,38 @@ fn build_engine(model: QuantModel, kind: EngineKind, shards: usize) -> Result<En
     }
 }
 
+/// [`build_engine`] from pulse lists — the `decode_into` load path. The
+/// CSR and binary compilers consume the streamed pulses directly;
+/// [`EngineKind::Reference`] is the one engine that genuinely runs on
+/// dense buffers, so it expands the layers. Compiled engines are
+/// bitwise identical to the dense-decoded build (property-tested).
+fn build_engine_sparse(model: SparseQuantModel, kind: EngineKind, shards: usize) -> Result<Engine> {
+    match kind {
+        EngineKind::Reference => {
+            let layers = model.layers.iter().map(|l| l.as_ref().map(|s| s.to_dense())).collect();
+            Ok(Engine::PvqInt(Arc::new(QuantModel { spec: model.spec, layers })))
+        }
+        EngineKind::Binary => {
+            let mut net = BinaryNet::compile_sparse(&model.spec, &model.layers)?;
+            net.set_shards(shards);
+            Ok(Engine::Binary(Arc::new(net)))
+        }
+        EngineKind::Csr => {
+            let shape = model.spec.input_shape.clone();
+            let mut compiled = CompiledQuantModel::compile_sparse(&model.spec, &model.layers)?;
+            compiled.set_shards(shards);
+            Ok(Engine::PvqCompiled(Arc::new(compiled), shape))
+        }
+        EngineKind::Auto => match BinaryNet::compile_sparse(&model.spec, &model.layers) {
+            Ok(mut net) => {
+                net.set_shards(shards);
+                Ok(Engine::Binary(Arc::new(net)))
+            }
+            Err(_) => build_engine_sparse(model, EngineKind::Csr, shards),
+        },
+    }
+}
+
 impl ModelRegistry {
     /// Empty registry; models are added with the `register_*` calls.
     pub fn new(cfg: ServerConfig) -> Self {
@@ -118,15 +151,31 @@ impl ModelRegistry {
 
     /// Load one `.pvqm` artifact and start serving it. The routing name
     /// is the file stem (`models/net_a.pvqm` → `net_a`). Returns the name.
+    ///
+    /// The compiled engines load through the streamed `decode_into` path
+    /// ([`read_sparse_model`]): layer pulses flow straight from the
+    /// entropy decoder into the CSR / bit-plane compilers without a dense
+    /// weight vector in between. Only [`EngineKind::Reference`] — whose
+    /// engine genuinely runs on dense buffers — takes the dense
+    /// [`read_model`] path.
     pub fn register_artifact(&mut self, path: &Path, kind: EngineKind) -> Result<String> {
         let name = path
             .file_stem()
             .and_then(|s| s.to_str())
             .with_context(|| format!("cannot derive a model name from {}", path.display()))?
             .to_string();
-        let (model, manifest) = read_model(path)?;
-        self.register_quant(&name, model, kind, Some(&manifest))
-            .with_context(|| format!("register {}", path.display()))?;
+        match kind {
+            EngineKind::Reference => {
+                let (model, manifest) = read_model(path)?;
+                self.register_quant(&name, model, kind, Some(&manifest))
+                    .with_context(|| format!("register {}", path.display()))?;
+            }
+            _ => {
+                let (model, manifest) = read_sparse_model(path)?;
+                self.register_sparse(&name, model, kind, Some(&manifest))
+                    .with_context(|| format!("register {}", path.display()))?;
+            }
+        }
         Ok(name)
     }
 
@@ -146,6 +195,38 @@ impl ModelRegistry {
         // model; traced compute spans carry it next to measured wall time
         let cost = HwReport::from_model(&model).inference_cost();
         let engine = Arc::new(build_engine(model, kind, self.cfg.shards)?);
+        self.insert_entry(name, total_params, cost, engine, manifest);
+        Ok(())
+    }
+
+    /// Register an in-memory pulse-list model under `name` — the
+    /// streamed-artifact twin of [`ModelRegistry::register_quant`]. The
+    /// §VIII cost model is computed straight from the pulse lists.
+    pub fn register_sparse(
+        &mut self,
+        name: &str,
+        model: SparseQuantModel,
+        kind: EngineKind,
+        manifest: Option<&ArtifactManifest>,
+    ) -> Result<()> {
+        if self.entries.contains_key(name) {
+            bail!("model '{name}' already registered");
+        }
+        let total_params = model.spec.total_params();
+        let cost = HwReport::from_sparse(&model.spec, &model.layers).inference_cost();
+        let engine = Arc::new(build_engine_sparse(model, kind, self.cfg.shards)?);
+        self.insert_entry(name, total_params, cost, engine, manifest);
+        Ok(())
+    }
+
+    fn insert_entry(
+        &mut self,
+        name: &str,
+        total_params: usize,
+        cost: crate::hw::InferenceCost,
+        engine: Arc<Engine>,
+        manifest: Option<&ArtifactManifest>,
+    ) {
         let info = ModelInfo {
             name: name.to_string(),
             engine: engine.name().to_string(),
@@ -159,7 +240,6 @@ impl ModelRegistry {
         if self.default_model.is_none() {
             self.default_model = Some(name.to_string());
         }
-        Ok(())
     }
 
     /// Current default route, if any.
@@ -210,29 +290,6 @@ impl ModelRegistry {
             Ok(entry) => entry.server.submit_async(req, done),
             Err(e) => done(Err(e)),
         }
-    }
-
-    /// Classify on a named model (None → default) through its batching
-    /// server.
-    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::single`")]
-    pub fn classify(&self, model: Option<&str>, pixels: Vec<u8>) -> Result<Response> {
-        let mut req = ClassifyRequest::single(pixels);
-        req.model = model.map(str::to_string);
-        let mut reply = Classify::submit(self, req)?;
-        reply.results.pop().ok_or_else(|| anyhow!("empty reply"))
-    }
-
-    /// Classify a whole micro-batch on a named model (None → default)
-    /// through its batching server.
-    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::batch`")]
-    pub fn classify_batch(
-        &self,
-        model: Option<&str>,
-        samples: Vec<Vec<u8>>,
-    ) -> Result<Vec<Response>> {
-        let mut req = ClassifyRequest::batch(samples);
-        req.model = model.map(str::to_string);
-        Ok(Classify::submit(self, req)?.results)
     }
 
     /// Resolve a route to its model metadata: `None` → the default
@@ -311,8 +368,10 @@ impl Classify for ModelRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::server::Response;
     use crate::nn::layers::Model;
     use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+    use anyhow::anyhow;
     use crate::pvq::RhoMode;
     use crate::quant::quantize;
     use crate::testkit::Rng;
@@ -424,17 +483,39 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_route() {
-        let mut reg = ModelRegistry::new(ServerConfig::default());
-        reg.register_quant("m", quant_mlp(Activation::Relu, 20), EngineKind::Csr, None)
-            .unwrap();
+    fn register_sparse_matches_register_quant() {
+        use crate::nn::pvq_engine::SparseQuantLayer;
         let mut rng = Rng::new(21);
-        let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-        let one = reg.classify(Some("m"), pixels.clone()).unwrap();
-        let many = reg.classify_batch(None, vec![pixels]).unwrap();
-        assert_eq!(one.class, many[0].class);
-        reg.shutdown();
+        let samples: Vec<Vec<u8>> =
+            (0..10).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        for (act, kind) in [
+            (Activation::Relu, EngineKind::Auto),
+            (Activation::BSign, EngineKind::Auto),
+            (Activation::Relu, EngineKind::Csr),
+            (Activation::BSign, EngineKind::Binary),
+            (Activation::Relu, EngineKind::Reference),
+        ] {
+            let qm = quant_mlp(act, 20);
+            let sm = SparseQuantModel {
+                spec: qm.spec.clone(),
+                layers: qm
+                    .layers
+                    .iter()
+                    .map(|l| l.as_ref().map(SparseQuantLayer::from_dense))
+                    .collect(),
+            };
+            let mut reg = ModelRegistry::new(ServerConfig::default());
+            reg.register_quant("dense", qm, kind, None).unwrap();
+            reg.register_sparse("sparse", sm, kind, None).unwrap();
+            let models = reg.models();
+            assert_eq!(models[0].engine, models[1].engine, "{kind:?}");
+            for s in &samples {
+                let d = classify_one(&reg, Some("dense"), s.clone()).unwrap();
+                let p = classify_one(&reg, Some("sparse"), s.clone()).unwrap();
+                assert_eq!(d.class, p.class, "{act:?}/{kind:?}");
+            }
+            reg.shutdown();
+        }
     }
 
     #[test]

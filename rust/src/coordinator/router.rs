@@ -4,9 +4,9 @@
 //! CLI's `serve` subcommand and the serving bench exercise.
 
 use super::api::{Classify, ClassifyReply, ClassifyRequest};
-use super::server::{Response, Server, ServerConfig};
+use super::server::{Server, ServerConfig};
 use super::Engine;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 /// Named collection of running servers.
@@ -31,27 +31,6 @@ impl Router {
             routes.insert(name, server);
         }
         Ok(Router { routes, default_route: default_route.to_string() })
-    }
-
-    /// Classify on a named route (None → default).
-    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::single`")]
-    pub fn classify(&self, route: Option<&str>, pixels: Vec<u8>) -> Result<Response> {
-        let mut req = ClassifyRequest::single(pixels);
-        req.model = route.map(str::to_string);
-        let mut reply = Classify::submit(self, req)?;
-        reply.results.pop().ok_or_else(|| anyhow!("empty reply"))
-    }
-
-    /// Classify a whole micro-batch on a named route (None → default).
-    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::batch`")]
-    pub fn classify_batch(
-        &self,
-        route: Option<&str>,
-        samples: Vec<Vec<u8>>,
-    ) -> Result<Vec<Response>> {
-        let mut req = ClassifyRequest::batch(samples);
-        req.model = route.map(str::to_string);
-        Ok(Classify::submit(self, req)?.results)
     }
 
     /// Route names.
@@ -143,18 +122,6 @@ mod tests {
             .is_err());
         let s = router.summary();
         assert!(s.contains("[float]") && s.contains("[pvq]"));
-        router.shutdown();
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_route() {
-        let router = Router::new(engines(5), "float", ServerConfig::default()).unwrap();
-        let mut rng = Rng::new(6);
-        let pixels: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
-        let one = router.classify(None, pixels.clone()).unwrap();
-        let many = router.classify_batch(Some("float"), vec![pixels]).unwrap();
-        assert_eq!(one.class, many[0].class);
         router.shutdown();
     }
 

@@ -18,9 +18,8 @@
 //!
 //! Callers use the unified [`Classify::submit`] entry point (or the
 //! callback-based [`Server::submit_async`] used by the event-driven HTTP
-//! front end); the old `classify`/`classify_batch` pair survives as
-//! `#[deprecated]` shims. std::thread + callbacks (tokio is unavailable
-//! in this offline environment; the request path is CPU-bound anyway).
+//! front end). std::thread + callbacks (tokio is unavailable in this
+//! offline environment; the request path is CPU-bound anyway).
 
 use super::api::{Classify, ClassifyReply, ClassifyRequest, ConfigError, ReplyCallback};
 use super::engine::Engine;
@@ -376,20 +375,6 @@ impl Server {
                 return;
             }
         }
-    }
-
-    /// Submit and wait.
-    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::single`")]
-    pub fn classify(&self, pixels: Vec<u8>) -> Result<Response> {
-        let mut reply = Classify::submit(self, ClassifyRequest::single(pixels))?;
-        reply.results.pop().ok_or_else(|| anyhow!("empty reply"))
-    }
-
-    /// Submit a whole micro-batch and wait for every response, in
-    /// request order.
-    #[deprecated(note = "use the unified `Classify::submit` with `ClassifyRequest::batch`")]
-    pub fn classify_batch(&self, samples: Vec<Vec<u8>>) -> Result<Vec<Response>> {
-        Ok(Classify::submit(self, ClassifyRequest::batch(samples))?.results)
     }
 
     /// Shared metrics.
@@ -821,26 +806,6 @@ mod tests {
         let reply = server.submit(ClassifyRequest::batch(Vec::new())).unwrap();
         assert_eq!(reply.model, "e");
         assert!(reply.results.is_empty());
-        server.shutdown();
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_answer() {
-        let engine = float_engine(3);
-        let mut rng = Rng::new(4);
-        let samples: Vec<Vec<u8>> =
-            (0..8).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
-        let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
-        let direct = engine.classify_batch(&views).unwrap();
-
-        let server = Server::start(float_engine(3), ServerConfig::default());
-        let one = server.classify(samples[0].clone()).unwrap();
-        assert_eq!(one.class, direct[0]);
-        let all = server.classify_batch(samples.clone()).unwrap();
-        for (r, &want) in all.iter().zip(&direct) {
-            assert_eq!(r.class, want);
-        }
         server.shutdown();
     }
 

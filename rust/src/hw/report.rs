@@ -2,8 +2,8 @@
 //! op counts, and storage — the quantitative side of §VIII.
 
 use super::dot_sim::layer_cycles;
-use crate::nn::model::LayerSpec;
-use crate::nn::pvq_engine::QuantModel;
+use crate::nn::model::{LayerSpec, ModelSpec};
+use crate::nn::pvq_engine::{QuantModel, SparseQuantLayer};
 
 /// Per-layer hardware accounting.
 #[derive(Clone, Debug)]
@@ -130,6 +130,80 @@ impl HwReport {
         HwReport { layers }
     }
 
+    /// [`HwReport::from_model`] over pulse lists — the `decode_into`
+    /// serving path computes its cost report without ever materializing
+    /// dense weight buffers. Nonzero and pulse counts per output row
+    /// come straight from the sparse arrays; the exp-Golomb storage
+    /// estimate charges 1 bit (`se(0)`) per absent weight plus the exact
+    /// code length of every pulse value.
+    pub fn from_sparse(spec: &ModelSpec, qlayers: &[Option<SparseQuantLayer>]) -> Self {
+        let mut layers = Vec::new();
+        let mut hw: Option<(usize, usize)> = match spec.input_shape.as_slice() {
+            [h, w, _] => Some((*h, *w)),
+            _ => None,
+        };
+        let mut wi = 0;
+        for (l, q) in spec.layers.iter().zip(qlayers) {
+            match l {
+                LayerSpec::Dense { input, output, .. } => {
+                    let q = q.as_ref().expect("quantized");
+                    let mut nz = vec![0u64; *output];
+                    let mut pulses = vec![0u64; *output];
+                    for (&p, &v) in q.w_pos.iter().zip(&q.w_val) {
+                        let o = p as usize / input;
+                        nz[o] += 1;
+                        pulses[o] += v.unsigned_abs() as u64;
+                    }
+                    for (&p, &v) in q.b_pyramid_pos.iter().zip(&q.b_pyramid_val) {
+                        nz[p as usize] += 1;
+                        pulses[p as usize] += v.unsigned_abs() as u64;
+                    }
+                    layers.push(LayerHwReport {
+                        label: format!("FC{wi}"),
+                        dots: *output as u64,
+                        cycles_mult: layer_cycles(&nz, 1),
+                        cycles_addonly: layer_cycles(&pulses, 1),
+                        storage_bits_eg: sparse_eg_bits(q),
+                        storage_bits_f32: (q.wlen as u64) * 32,
+                    });
+                    wi += 1;
+                }
+                LayerSpec::Conv2d { cout, .. } => {
+                    let q = q.as_ref().expect("quantized");
+                    let (h, w) = hw.expect("conv geometry");
+                    let positions = (h * w) as u64;
+                    let mut nz = vec![0u64; *cout];
+                    let mut pulses = vec![0u64; *cout];
+                    for (&p, &v) in q.w_pos.iter().zip(&q.w_val) {
+                        let co = p as usize % cout;
+                        nz[co] += 1;
+                        pulses[co] += v.unsigned_abs() as u64;
+                    }
+                    for (&p, &v) in q.b_pyramid_pos.iter().zip(&q.b_pyramid_val) {
+                        nz[p as usize] += 1;
+                        pulses[p as usize] += v.unsigned_abs() as u64;
+                    }
+                    layers.push(LayerHwReport {
+                        label: format!("CONV{wi}"),
+                        dots: positions * *cout as u64,
+                        cycles_mult: positions * layer_cycles(&nz, 1),
+                        cycles_addonly: positions * layer_cycles(&pulses, 1),
+                        storage_bits_eg: sparse_eg_bits(q),
+                        storage_bits_f32: (q.wlen as u64) * 32,
+                    });
+                    wi += 1;
+                }
+                LayerSpec::MaxPool2x2 => {
+                    if let Some((h, w)) = hw {
+                        hw = Some((h / 2, w / 2));
+                    }
+                }
+                _ => {}
+            }
+        }
+        HwReport { layers }
+    }
+
     /// Condense the report into the per-inference cost triple the
     /// serving stack attaches to compute spans.
     pub fn inference_cost(&self) -> InferenceCost {
@@ -184,6 +258,14 @@ impl HwReport {
         ));
         out
     }
+}
+
+/// Exact signed exp-Golomb weight-storage bits of a pulse-list layer:
+/// every absent weight is a 1-bit `se(0)`, every pulse its code length.
+fn sparse_eg_bits(q: &SparseQuantLayer) -> u64 {
+    use crate::compress::expgolomb::se_len;
+    (q.wlen - q.w_val.len()) as u64
+        + q.w_val.iter().map(|&v| se_len(v as i64) as u64).sum::<u64>()
 }
 
 #[cfg(test)]
@@ -253,6 +335,36 @@ mod tests {
         assert!(eg * 8 < f32b, "EG {eg} vs f32 {f32b}");
         let text = rep.render();
         assert!(text.contains("FC0"));
+    }
+
+    #[test]
+    fn from_sparse_matches_from_model() {
+        let q = quantized_mlp(9, 3.0);
+        let dense = HwReport::from_model(&q.quant_model);
+        let sl: Vec<Option<SparseQuantLayer>> = q
+            .quant_model
+            .layers
+            .iter()
+            .map(|l| l.as_ref().map(SparseQuantLayer::from_dense))
+            .collect();
+        let sparse = HwReport::from_sparse(&q.quant_model.spec, &sl);
+        assert_eq!(sparse.layers.len(), dense.layers.len());
+        for (s, d) in sparse.layers.iter().zip(&dense.layers) {
+            assert_eq!(s.label, d.label);
+            assert_eq!(s.dots, d.dots);
+            assert_eq!(s.cycles_mult, d.cycles_mult);
+            assert_eq!(s.cycles_addonly, d.cycles_addonly);
+            assert_eq!(s.storage_bits_f32, d.storage_bits_f32);
+            // the dense path rounds through f64; the sparse path is exact
+            assert!(
+                s.storage_bits_eg.abs_diff(d.storage_bits_eg) <= 1,
+                "{}: {} vs {}",
+                s.label,
+                s.storage_bits_eg,
+                d.storage_bits_eg
+            );
+        }
+        assert_eq!(sparse.inference_cost(), dense.inference_cost());
     }
 
     #[test]

@@ -110,6 +110,46 @@ impl BinaryDense {
         BinaryDense { input, output, rows, plan: ShardPlan::single(output) }
     }
 
+    /// Compile straight from a pulse list (positions strictly increasing
+    /// over the out-major dense layout) — the `decode_into` path. Pulses
+    /// of one output row are contiguous in the stream, and each row's
+    /// per-value grouping is a `BTreeMap` keyed by weight value, so the
+    /// result is bitwise identical to [`BinaryDense::compile`] on the
+    /// materialized dense buffer.
+    pub fn compile_from_pulses(
+        w_pos: &[u32],
+        w_val: &[i32],
+        b: &[i32],
+        input: usize,
+        output: usize,
+    ) -> Self {
+        assert_eq!(w_pos.len(), w_val.len());
+        assert_eq!(b.len(), output);
+        let nwords = input.div_ceil(64);
+        let mut rows = Vec::with_capacity(output);
+        let mut t = 0usize;
+        for o in 0..output {
+            let hi = (o + 1) * input;
+            let mut by_val: std::collections::BTreeMap<i32, Vec<u64>> =
+                std::collections::BTreeMap::new();
+            while t < w_pos.len() && (w_pos[t] as usize) < hi {
+                let i = w_pos[t] as usize - o * input;
+                let mask = by_val.entry(w_val[t]).or_insert_with(|| vec![0u64; nwords]);
+                mask[i / 64] |= 1 << (i % 64);
+                t += 1;
+            }
+            let groups = by_val
+                .into_iter()
+                .map(|(v, mask)| {
+                    let pc: u32 = mask.iter().map(|w| w.count_ones()).sum();
+                    (v, mask, pc)
+                })
+                .collect();
+            rows.push(BinRow { groups, bias: b[o] });
+        }
+        BinaryDense { input, output, rows, plan: ShardPlan::single(output) }
+    }
+
     /// Partition the output rows into `shards` worker shards for the
     /// batched kernels, balanced by each row's nonzero mask-word count
     /// (the number of AND+popcount word loads that row costs); a layer
@@ -291,6 +331,84 @@ impl BinaryNet {
             first_plan: ShardPlan::single(first_out),
             hidden,
             last: BinaryDense::compile(&last_q.w, &last_q.b, last_in, last_out),
+            shards: 1,
+        })
+    }
+
+    /// [`BinaryNet::compile`] from pulse lists — the `decode_into`
+    /// serving path. Hidden and readout layers build their per-value
+    /// popcount masks directly from the streamed pulses; only the first
+    /// (integer) layer materializes a dense weight buffer, because u8
+    /// pixels are not ±1 and its kernel walks dense rows. Bitwise
+    /// identical to compiling the dense-decoded model.
+    pub fn compile_sparse(
+        spec: &crate::nn::model::ModelSpec,
+        qlayers: &[Option<crate::nn::pvq_engine::SparseQuantLayer>],
+    ) -> Result<Self> {
+        use crate::nn::model::{Activation, LayerSpec};
+        if spec.input_shape.len() != 1 {
+            bail!("binary engine needs a flat input, got {:?}", spec.input_shape);
+        }
+        if qlayers.len() != spec.layers.len() {
+            bail!("{} quantized layer slots vs {} spec layers", qlayers.len(), spec.layers.len());
+        }
+        let mut dense: Vec<(usize, usize, Activation, &crate::nn::pvq_engine::SparseQuantLayer)> =
+            Vec::new();
+        for (l, q) in spec.layers.iter().zip(qlayers) {
+            match l {
+                LayerSpec::Dense { input, output, act } => {
+                    let q = match q {
+                        Some(q) => q,
+                        None => bail!("dense layer not quantized"),
+                    };
+                    if q.wlen != input * output || q.b.len() != *output {
+                        bail!(
+                            "dense layer geometry w={} b={} vs spec w={} b={output}",
+                            q.wlen,
+                            q.b.len(),
+                            input * output
+                        );
+                    }
+                    dense.push((*input, *output, *act, q));
+                }
+                LayerSpec::Dropout(_) | LayerSpec::Scale(_) => {}
+                other => bail!("binary engine supports dense MLPs only, found {}", other.label()),
+            }
+        }
+        if dense.len() < 2 {
+            bail!("binary engine needs ≥2 dense layers, got {}", dense.len());
+        }
+        let (last_in, last_out, last_act, last_q) = *dense.last().unwrap();
+        if last_act != Activation::None {
+            bail!("last layer must be linear, got {last_act:?}");
+        }
+        for &(_, _, act, _) in &dense[..dense.len() - 1] {
+            if act != Activation::BSign {
+                bail!("hidden layers must be bsign, got {act:?}");
+            }
+        }
+        let (first_in, first_out, _, first_q) = dense[0];
+        let hidden = dense[1..dense.len() - 1]
+            .iter()
+            .map(|&(input, output, _, q)| {
+                BinaryDense::compile_from_pulses(&q.w_pos, &q.w_val, &q.b, input, output)
+            })
+            .collect();
+        Ok(BinaryNet {
+            input_len: first_in,
+            outputs: last_out,
+            first_w: first_q.dense_w(),
+            first_b: first_q.b.clone(),
+            first_out,
+            first_plan: ShardPlan::single(first_out),
+            hidden,
+            last: BinaryDense::compile_from_pulses(
+                &last_q.w_pos,
+                &last_q.w_val,
+                &last_q.b,
+                last_in,
+                last_out,
+            ),
             shards: 1,
         })
     }
@@ -566,6 +684,54 @@ mod tests {
         // ragged / wrong-length batches error out
         assert!(net.forward_block_u8(&[&[0u8; 3]]).is_err());
         assert!(net.forward_block_u8(&[]).is_err());
+    }
+
+    #[test]
+    fn compile_sparse_matches_dense_compile() {
+        use crate::nn::layers::Model;
+        use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+        use crate::nn::pvq_engine::SparseQuantLayer;
+        use crate::pvq::RhoMode;
+        use crate::quant::quantize;
+
+        let spec = ModelSpec {
+            name: "binsp".into(),
+            input_shape: vec![40],
+            layers: vec![
+                LayerSpec::Dense { input: 40, output: 30, act: Activation::BSign },
+                LayerSpec::Dense { input: 30, output: 17, act: Activation::BSign },
+                LayerSpec::Dense { input: 17, output: 6, act: Activation::None },
+            ],
+        };
+        let m = Model::synth(&spec, 23);
+        let qm = quantize(&m, &[2.0, 1.5, 1.0], RhoMode::Norm).unwrap().quant_model;
+        let dense_net = BinaryNet::compile(&qm).unwrap();
+        let sparse_layers: Vec<Option<SparseQuantLayer>> =
+            qm.layers.iter().map(|l| l.as_ref().map(SparseQuantLayer::from_dense)).collect();
+        let sparse_net = BinaryNet::compile_sparse(&qm.spec, &sparse_layers).unwrap();
+        let mut rng = Rng::new(41);
+        for _ in 0..20 {
+            let pix: Vec<u8> = (0..40).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(
+                sparse_net.forward_u8(&pix).unwrap(),
+                dense_net.forward_u8(&pix).unwrap()
+            );
+        }
+        // the fallback contract: a non-bsign spec still errors out
+        let relu = ModelSpec {
+            name: "rs".into(),
+            input_shape: vec![8],
+            layers: vec![
+                LayerSpec::Dense { input: 8, output: 6, act: Activation::Relu },
+                LayerSpec::Dense { input: 6, output: 3, act: Activation::None },
+            ],
+        };
+        let qr = quantize(&Model::synth(&relu, 1), &[1.0, 1.0], RhoMode::Norm)
+            .unwrap()
+            .quant_model;
+        let sl: Vec<Option<SparseQuantLayer>> =
+            qr.layers.iter().map(|l| l.as_ref().map(SparseQuantLayer::from_dense)).collect();
+        assert!(BinaryNet::compile_sparse(&qr.spec, &sl).is_err());
     }
 
     #[test]

@@ -25,7 +25,8 @@
 use super::batch::ActivationBlock;
 use super::model::{Activation, LayerSpec};
 use super::parallel::{for_each_shard, ShardPlan};
-use super::pvq_engine::{maxpool2x2_i64, QuantModel};
+use super::model::ModelSpec;
+use super::pvq_engine::{maxpool2x2_i64, QuantModel, SparseQuantLayer};
 use super::simd;
 use super::tensor::{argmax_i64, ITensor};
 use anyhow::{bail, Result};
@@ -160,6 +161,123 @@ impl CompiledQuantModel {
         let mut compiled = CompiledQuantModel {
             layers,
             input_shape: m.spec.input_shape.clone(),
+            outputs,
+            shards: 1,
+        };
+        compiled.set_shards(1); // materialize every layer's plan
+        Ok(compiled)
+    }
+
+    /// Compile straight from pulse lists — the `decode_into` serving
+    /// path. The artifact reader emits `(position, value)` pairs in
+    /// strictly increasing dense-position order, which is exactly the
+    /// visit order [`CompiledQuantModel::compile`] produces when it scans
+    /// the dense buffers: dense rows fill in CSR order (`pos = o·input +
+    /// i` groups by output row with ascending column), conv taps land in
+    /// per-channel `(ky, kx, ci)` order (`pos = ((ky·kw + kx)·cin +
+    /// ci)·cout + co`). The compiled model is therefore bitwise identical
+    /// to dense-decode-then-compile without ever materializing a dense
+    /// weight vector.
+    pub fn compile_sparse(
+        spec: &ModelSpec,
+        qlayers: &[Option<SparseQuantLayer>],
+    ) -> Result<Self> {
+        if qlayers.len() != spec.layers.len() {
+            bail!(
+                "{} quantized layer slots vs {} spec layers",
+                qlayers.len(),
+                spec.layers.len()
+            );
+        }
+        let mut layers = Vec::new();
+        let mut outputs = 0;
+        for (l, q) in spec.layers.iter().zip(qlayers) {
+            match l {
+                LayerSpec::Dense { input, output, act } => {
+                    let q = match q {
+                        Some(q) => q,
+                        None => bail!("dense layer not quantized"),
+                    };
+                    if q.wlen != input * output || q.b.len() != *output {
+                        bail!(
+                            "dense layer geometry w={} b={} vs spec w={} b={output}",
+                            q.wlen,
+                            q.b.len(),
+                            input * output
+                        );
+                    }
+                    let mut row_ptr = Vec::with_capacity(output + 1);
+                    let mut idx = Vec::with_capacity(q.w_pos.len());
+                    let mut val = Vec::with_capacity(q.w_pos.len());
+                    row_ptr.push(0u32);
+                    let mut open = 0usize; // row currently being filled
+                    for (t, &pos) in q.w_pos.iter().enumerate() {
+                        let o = pos as usize / input;
+                        while open < o {
+                            row_ptr.push(idx.len() as u32);
+                            open += 1;
+                        }
+                        idx.push((pos as usize % input) as u32);
+                        val.push(q.w_val[t]);
+                    }
+                    while open < *output {
+                        row_ptr.push(idx.len() as u32);
+                        open += 1;
+                    }
+                    layers.push(CompiledLayer::Dense(CsrDense {
+                        input: *input,
+                        output: *output,
+                        row_ptr,
+                        idx,
+                        val,
+                        bias: q.b.iter().map(|&b| b as i64).collect(),
+                        act: *act,
+                        plan: ShardPlan::single(*output),
+                    }));
+                    outputs = *output;
+                }
+                LayerSpec::Conv2d { kh, kw, cin, cout, act } => {
+                    let q = match q {
+                        Some(q) => q,
+                        None => bail!("conv layer not quantized"),
+                    };
+                    if q.wlen != kh * kw * cin * cout || q.b.len() != *cout {
+                        bail!(
+                            "conv layer geometry w={} b={} vs spec w={} b={cout}",
+                            q.wlen,
+                            q.b.len(),
+                            kh * kw * cin * cout
+                        );
+                    }
+                    let mut taps = vec![Vec::new(); *cout];
+                    for (t, &pos) in q.w_pos.iter().enumerate() {
+                        let p = pos as usize;
+                        let co = p % cout;
+                        let ci = (p / cout) % cin;
+                        let kx = (p / (cout * cin)) % kw;
+                        let ky = p / (cout * cin * kw);
+                        taps[co].push((ky as u8, kx as u8, ci as u16, q.w_val[t]));
+                    }
+                    layers.push(CompiledLayer::Conv(TapConv {
+                        kh: *kh,
+                        kw: *kw,
+                        cin: *cin,
+                        cout: *cout,
+                        taps,
+                        bias: q.b.iter().map(|&b| b as i64).collect(),
+                        act: *act,
+                        plan: ShardPlan::single(0),
+                    }));
+                    outputs = *cout;
+                }
+                LayerSpec::MaxPool2x2 => layers.push(CompiledLayer::MaxPool(ShardPlan::single(0))),
+                LayerSpec::Flatten => layers.push(CompiledLayer::Flatten),
+                LayerSpec::Dropout(_) | LayerSpec::Scale(_) => layers.push(CompiledLayer::Noop),
+            }
+        }
+        let mut compiled = CompiledQuantModel {
+            layers,
+            input_shape: spec.input_shape.clone(),
             outputs,
             shards: 1,
         };
@@ -590,6 +708,53 @@ mod tests {
         compiled.set_shards(4); // must not panic either
         let block = ActivationBlock::zeros(2, 9);
         assert!(compiled.forward_block(&block).is_err());
+    }
+
+    #[test]
+    fn compile_sparse_matches_dense_compile() {
+        use crate::nn::pvq_engine::SparseQuantLayer;
+        // MLP and CNN: the pulse-list compile must produce a bitwise
+        // identical engine to dense-decode-then-compile
+        let mut rng = Rng::new(31);
+        let specs = [
+            ModelSpec {
+                name: "sp-mlp".into(),
+                input_shape: vec![18],
+                layers: vec![
+                    LayerSpec::Dense { input: 18, output: 9, act: Activation::Relu },
+                    LayerSpec::Dense { input: 9, output: 4, act: Activation::None },
+                ],
+            },
+            ModelSpec {
+                name: "sp-cnn".into(),
+                input_shape: vec![6, 6, 2],
+                layers: vec![
+                    LayerSpec::Conv2d { kh: 3, kw: 3, cin: 2, cout: 3, act: Activation::Relu },
+                    LayerSpec::MaxPool2x2,
+                    LayerSpec::Flatten,
+                    LayerSpec::Dense { input: 3 * 3 * 3, output: 4, act: Activation::None },
+                ],
+            },
+        ];
+        for spec in specs {
+            let model = Model::synth(&spec, 13);
+            let q = quantize(&model, &[2.0, 2.0], RhoMode::Norm).unwrap();
+            let dense = CompiledQuantModel::compile(&q.quant_model).unwrap();
+            let sparse_layers: Vec<Option<SparseQuantLayer>> = q
+                .quant_model
+                .layers
+                .iter()
+                .map(|l| l.as_ref().map(SparseQuantLayer::from_dense))
+                .collect();
+            let sparse =
+                CompiledQuantModel::compile_sparse(&q.quant_model.spec, &sparse_layers).unwrap();
+            let feats: usize = spec.input_shape.iter().product();
+            for _ in 0..5 {
+                let pix: Vec<u8> = (0..feats).map(|_| rng.below(256) as u8).collect();
+                let xi = ITensor::from_u8(&spec.input_shape, &pix);
+                assert_eq!(sparse.forward(&xi), dense.forward(&xi), "{}", spec.name);
+            }
+        }
     }
 
     #[test]

@@ -20,5 +20,8 @@ pub use binary::{BinaryDense, BinaryNet, BitVec};
 pub use layers::{classify, forward, LayerParams, Model};
 pub use model::{Activation, LayerSpec, ModelSpec};
 pub use csr_engine::CompiledQuantModel;
-pub use pvq_engine::{classify_int, forward_int, IntForward, OpCount, QuantLayer, QuantModel};
+pub use pvq_engine::{
+    classify_int, forward_int, IntForward, OpCount, QuantLayer, QuantModel, SparseLayerBuilder,
+    SparseQuantLayer, SparseQuantModel,
+};
 pub use tensor::{argmax_f32, argmax_i64, ITensor, Tensor};

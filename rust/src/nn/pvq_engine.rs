@@ -19,6 +19,7 @@
 
 use super::model::{Activation, LayerSpec, ModelSpec};
 use super::tensor::{argmax_i64, ITensor};
+use crate::compress::PulseSink;
 use anyhow::{bail, Result};
 
 /// Activation magnitude that triggers the §V power-of-2 rescale.
@@ -69,6 +70,195 @@ pub struct QuantModel {
     pub spec: ModelSpec,
     /// Parallel to `spec.layers`; Some for weighted layers.
     pub layers: Vec<Option<QuantLayer>>,
+}
+
+/// One PVQ-encoded layer in pulse-list form — the `decode_into` target.
+///
+/// The artifact reader streams `(position, magnitude, sign)` triples
+/// straight into this structure without materializing the dense weight
+/// vector; positions are strictly increasing, which is exactly the
+/// visit order the CSR/bit-plane compilers need.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseQuantLayer {
+    /// Dense weight count (layout identical to [`QuantLayer::w`]).
+    pub wlen: usize,
+    /// Flat positions of the nonzero weights, strictly increasing.
+    pub w_pos: Vec<u32>,
+    /// Signed values at those positions (never 0), parallel to `w_pos`.
+    pub w_val: Vec<i32>,
+    /// Executable integer biases B (dense — biases are tiny).
+    pub b: Vec<i32>,
+    /// Positions of nonzero pyramid bias components b̂ within the bias
+    /// block (0-based, strictly increasing).
+    pub b_pyramid_pos: Vec<u32>,
+    /// Signed b̂ values, parallel to `b_pyramid_pos`.
+    pub b_pyramid_val: Vec<i32>,
+    /// Gain ρ of the layer's PVQ encoding.
+    pub rho: f64,
+    /// Pulse budget K (Σ|ŵ| + Σ|b̂|).
+    pub k: u32,
+}
+
+impl SparseQuantLayer {
+    /// Bias count of the layer.
+    pub fn blen(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Verify the pyramid invariant Σ|ŵ| + Σ|b̂| = K.
+    pub fn is_valid(&self) -> bool {
+        let l1: u64 = self
+            .w_val
+            .iter()
+            .chain(&self.b_pyramid_val)
+            .map(|&v| v.unsigned_abs() as u64)
+            .sum();
+        l1 == self.k as u64
+    }
+
+    /// Materialize the dense weight vector (tests / reference paths).
+    pub fn dense_w(&self) -> Vec<i32> {
+        let mut w = vec![0i32; self.wlen];
+        for (&p, &v) in self.w_pos.iter().zip(&self.w_val) {
+            w[p as usize] = v;
+        }
+        w
+    }
+
+    /// Materialize the dense b̂ vector.
+    pub fn dense_b_pyramid(&self) -> Vec<i32> {
+        let mut bp = vec![0i32; self.b.len()];
+        for (&p, &v) in self.b_pyramid_pos.iter().zip(&self.b_pyramid_val) {
+            bp[p as usize] = v;
+        }
+        bp
+    }
+
+    /// Build the pulse-list form from a dense [`QuantLayer`]. Positions
+    /// scan the dense buffers in order, so the result is bitwise
+    /// identical to what the streamed `decode_into` path produces.
+    pub fn from_dense(q: &QuantLayer) -> Self {
+        let mut s = SparseQuantLayer {
+            wlen: q.w.len(),
+            w_pos: Vec::new(),
+            w_val: Vec::new(),
+            b: q.b.clone(),
+            b_pyramid_pos: Vec::new(),
+            b_pyramid_val: Vec::new(),
+            rho: q.rho,
+            k: q.k,
+        };
+        for (i, &v) in q.w.iter().enumerate() {
+            if v != 0 {
+                s.w_pos.push(i as u32);
+                s.w_val.push(v);
+            }
+        }
+        for (i, &v) in q.b_pyramid.iter().enumerate() {
+            if v != 0 {
+                s.b_pyramid_pos.push(i as u32);
+                s.b_pyramid_val.push(v);
+            }
+        }
+        s
+    }
+
+    /// Expand into the dense [`QuantLayer`] representation.
+    pub fn to_dense(&self) -> QuantLayer {
+        QuantLayer {
+            w: self.dense_w(),
+            b: self.b.clone(),
+            b_pyramid: self.dense_b_pyramid(),
+            rho: self.rho,
+            k: self.k,
+        }
+    }
+}
+
+/// A model whose layers are held in pulse-list form — what the serving
+/// load path builds before compiling CSR/bit-plane engines.
+#[derive(Clone, Debug)]
+pub struct SparseQuantModel {
+    /// Architecture (shared with the float model).
+    pub spec: ModelSpec,
+    /// Parallel to `spec.layers`; Some for weighted layers.
+    pub layers: Vec<Option<SparseQuantLayer>>,
+}
+
+/// [`PulseSink`] that assembles a [`SparseQuantLayer`] from a streamed
+/// layer decode. Construct with the layer's geometry (`wlen`) and dense
+/// biases from the LAYR header, feed it to
+/// [`crate::compress::decompress_layer_into`], then [`finish`](Self::finish).
+pub struct SparseLayerBuilder {
+    wlen: usize,
+    b: Vec<i32>,
+    n: usize,
+    k: u32,
+    rho: f64,
+    w_pos: Vec<u32>,
+    w_val: Vec<i32>,
+    bp_pos: Vec<u32>,
+    bp_val: Vec<i32>,
+}
+
+impl SparseLayerBuilder {
+    /// New builder for a layer with `wlen` weights and the given biases.
+    pub fn new(wlen: usize, b: Vec<i32>) -> Self {
+        SparseLayerBuilder {
+            wlen,
+            b,
+            n: 0,
+            k: 0,
+            rho: 0.0,
+            w_pos: Vec::new(),
+            w_val: Vec::new(),
+            bp_pos: Vec::new(),
+            bp_val: Vec::new(),
+        }
+    }
+
+    /// Validate the streamed geometry and yield the sparse layer.
+    pub fn finish(self) -> Result<SparseQuantLayer> {
+        if self.n != self.wlen + self.b.len() {
+            bail!(
+                "layer stream carries {} components vs expected {} (w={} + b={})",
+                self.n,
+                self.wlen + self.b.len(),
+                self.wlen,
+                self.b.len()
+            );
+        }
+        Ok(SparseQuantLayer {
+            wlen: self.wlen,
+            w_pos: self.w_pos,
+            w_val: self.w_val,
+            b: self.b,
+            b_pyramid_pos: self.bp_pos,
+            b_pyramid_val: self.bp_val,
+            rho: self.rho,
+            k: self.k,
+        })
+    }
+}
+
+impl PulseSink for SparseLayerBuilder {
+    fn begin(&mut self, n: usize, k: u32, rho: f64) {
+        self.n = n;
+        self.k = k;
+        self.rho = rho;
+    }
+
+    fn pulse(&mut self, pos: usize, mag: u32, neg: bool) {
+        // mag ≤ 2³¹ with the sign guaranteed representable by the codec
+        let v = if neg { -(mag as i64) as i32 } else { mag as i32 };
+        if pos < self.wlen {
+            self.w_pos.push(pos as u32);
+            self.w_val.push(v);
+        } else {
+            self.bp_pos.push((pos - self.wlen) as u32);
+            self.bp_val.push(v);
+        }
+    }
 }
 
 /// Operation counts of one forward pass — the paper's §III/§V cost model.
@@ -431,6 +621,25 @@ mod tests {
         let (out, dims) = maxpool2x2_i64(&x, (4, 4, 1));
         assert_eq!(dims, (2, 2, 1));
         assert_eq!(out, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn sparse_builder_roundtrips_dense_layer() {
+        use crate::compress::{compress_layer, decompress_layer_into, Codec};
+        use crate::pvq::PvqVector;
+        let m = tiny_quant_model(Activation::Relu);
+        let q = m.layers[0].as_ref().unwrap();
+        let mut comps = q.w.clone();
+        comps.extend_from_slice(&q.b_pyramid);
+        let pv = PvqVector { k: q.k, components: comps, rho: q.rho };
+        for codec in [Codec::Cwrs, Codec::Rle] {
+            let blob = compress_layer(&pv, codec);
+            let mut builder = SparseLayerBuilder::new(q.w.len(), q.b.clone());
+            decompress_layer_into(&blob, &mut builder).unwrap();
+            let sparse = builder.finish().unwrap();
+            assert!(sparse.is_valid());
+            assert_eq!(&sparse.to_dense(), q, "{codec:?}");
+        }
     }
 
     #[test]

@@ -160,7 +160,17 @@ impl BigUint {
 
     /// (self / d, self % d) for a small divisor. Panics if d == 0.
     pub fn divmod_small(&self, d: u32) -> (BigUint, u32) {
-        assert!(d != 0, "division by zero");
+        self.checked_div_rem_u32(d).expect("division by zero")
+    }
+
+    /// (self / d, self % d) for a small divisor; `None` if d == 0.
+    /// The long division carries the running remainder across limbs, so
+    /// multi-limb values exercise the `(rem << 32) | limb` reassembly on
+    /// every step.
+    pub fn checked_div_rem_u32(&self, d: u32) -> Option<(BigUint, u32)> {
+        if d == 0 {
+            return None;
+        }
         let mut out = vec![0u32; self.limbs.len()];
         let mut rem = 0u64;
         for i in (0..self.limbs.len()).rev() {
@@ -170,7 +180,71 @@ impl BigUint {
         }
         let mut q = BigUint { limbs: out };
         q.trim();
-        (q, rem as u32)
+        Some((q, rem as u32))
+    }
+
+    /// Extract the bit window `[start, start + width)` (LSB-first) as a
+    /// u64; bits past the most significant bit read as 0. `width` ≤ 64.
+    ///
+    /// This is how the CWRS range coder peels the raw low bits off a
+    /// rank without any giant division (`crate::compress::cwrs`).
+    pub fn bit_window(&self, start: u64, width: u32) -> u64 {
+        assert!(width <= 64, "bit window wider than u64");
+        let mut out = 0u64;
+        for i in 0..width as u64 {
+            let bit = start + i;
+            let limb = (bit / 32) as usize;
+            if limb >= self.limbs.len() {
+                break;
+            }
+            out |= (((self.limbs[limb] >> (bit % 32)) & 1) as u64) << i;
+        }
+        out
+    }
+
+    /// self << n (bit shift).
+    pub fn shl_bits(&self, n: u64) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        let limb_shift = (n / 32) as usize;
+        let bit_shift = (n % 32) as u32;
+        let mut out = vec![0u32; limb_shift];
+        if bit_shift == 0 {
+            out.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u32;
+            for &l in &self.limbs {
+                out.push((l << bit_shift) | carry);
+                carry = l >> (32 - bit_shift);
+            }
+            if carry != 0 {
+                out.push(carry);
+            }
+        }
+        BigUint { limbs: out }
+    }
+
+    /// self >> n (bit shift; zero once every bit is shifted out).
+    pub fn shr_bits(&self, n: u64) -> BigUint {
+        let limb_shift = (n / 32) as usize;
+        if limb_shift >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let bit_shift = (n % 32) as u32;
+        let mut out = Vec::with_capacity(self.limbs.len() - limb_shift);
+        if bit_shift == 0 {
+            out.extend_from_slice(&self.limbs[limb_shift..]);
+        } else {
+            for i in limb_shift..self.limbs.len() {
+                let lo = self.limbs[i] >> bit_shift;
+                let hi = self.limbs.get(i + 1).map_or(0, |&h| h << (32 - bit_shift));
+                out.push(lo | hi);
+            }
+        }
+        let mut r = BigUint { limbs: out };
+        r.trim();
+        r
     }
 }
 
@@ -277,5 +351,80 @@ mod tests {
         assert!(a < b);
         assert!(b > a);
         assert_eq!(a.cmp_big(&a), Ordering::Equal);
+    }
+
+    #[test]
+    fn checked_div_rem_rejects_zero_divisor() {
+        assert!(BigUint::from_u64(42).checked_div_rem_u32(0).is_none());
+        let (q, r) = BigUint::from_u64(42).checked_div_rem_u32(5).unwrap();
+        assert_eq!(q.to_u64(), Some(8));
+        assert_eq!(r, 2);
+    }
+
+    #[test]
+    fn div_rem_multi_limb_carries() {
+        // 2^64 + 5 = 18446744073709551621 — three limbs [5, 0, 1] after
+        // the add; 2^64 ≡ 2 (mod 7), so (2^64 + 5) ≡ 0 (mod 7) and the
+        // quotient is exactly 2635249153387078803 (hand-checked:
+        // 2635249153387078803 · 7 = 18446744073709551621).
+        let v = BigUint::from_u64(u64::MAX).add(&BigUint::from_u64(6));
+        let (q, r) = v.checked_div_rem_u32(7).unwrap();
+        assert_eq!(r, 0);
+        assert_eq!(q.to_u64(), Some(2_635_249_153_387_078_803));
+
+        // u64::MAX / 10: the remainder must ride across both limbs.
+        let (q, r) = BigUint::from_u64(u64::MAX).checked_div_rem_u32(10).unwrap();
+        assert_eq!(q.to_u64(), Some(1_844_674_407_370_955_161));
+        assert_eq!(r, 5);
+
+        // (2^64 + 1) / 2 = 2^63 rem 1: the high limb's bit must carry
+        // down into the middle limb of the quotient.
+        let v = BigUint::one().shl_bits(64).add(&BigUint::one());
+        let (q, r) = v.checked_div_rem_u32(2).unwrap();
+        assert_eq!(q.to_u64(), Some(1u64 << 63));
+        assert_eq!(r, 1);
+
+        // 2^95 / 3: 2^95 mod 3 = 2 (powers of two alternate 2,1 mod 3).
+        let v = BigUint::one().shl_bits(95);
+        let (q, r) = v.checked_div_rem_u32(3).unwrap();
+        assert_eq!(r, 2);
+        assert_eq!(q.mul_small(3).add(&BigUint::from_u64(2)), v);
+    }
+
+    #[test]
+    fn bit_window_hand_computed() {
+        // limbs LE: [0x9ABCDEF0, 0x12345678, 0xDEADBEEF]
+        let v = BigUint::from_u64(0x1234_5678_9ABC_DEF0)
+            .add(&BigUint::from_u64(0xDEAD_BEEF).shl_bits(64));
+        // bits 28..36 straddle the limb boundary: top nibble of limb0 is
+        // 0x9, low nibble of limb1 is 0x8 → window reads 0x89.
+        assert_eq!(v.bit_window(28, 8), 0x89);
+        // whole limbs read back exactly
+        assert_eq!(v.bit_window(0, 32), 0x9ABC_DEF0);
+        assert_eq!(v.bit_window(32, 32), 0x1234_5678);
+        assert_eq!(v.bit_window(64, 32), 0xDEAD_BEEF);
+        // a 64-bit window across limbs 0..2
+        assert_eq!(v.bit_window(0, 64), 0x1234_5678_9ABC_DEF0);
+        // past the MSB the window zero-pads: bits 88..104 are
+        // 0xDE (top byte of limb2) then nothing.
+        assert_eq!(v.bit_window(88, 16), 0x00DE);
+        assert_eq!(v.bit_window(200, 64), 0);
+        assert_eq!(BigUint::zero().bit_window(0, 64), 0);
+    }
+
+    #[test]
+    fn shifts_roundtrip_with_carries() {
+        let v = BigUint::from_u64(0xDEAD_BEEF_CAFE_F00D);
+        for n in [0u64, 1, 31, 32, 33, 63, 64, 65, 95] {
+            let s = v.shl_bits(n);
+            assert_eq!(s.bits(), v.bits() + n);
+            assert_eq!(s.shr_bits(n), v, "shift {n}");
+        }
+        // 0x80000000 << 1 crosses into a second limb
+        let c = BigUint::from_u64(0x8000_0000).shl_bits(1);
+        assert_eq!(c.to_u64(), Some(1u64 << 32));
+        // shifting everything out yields zero
+        assert!(v.shr_bits(64).is_zero());
+        assert!(BigUint::zero().shl_bits(10).is_zero());
     }
 }

@@ -12,11 +12,15 @@
 //! instead of 32), so the table is held in [`BigUint`].
 
 use super::bigint::BigUint;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Memoized table of Nₚ(n,k) for 0 ≤ n ≤ N, 0 ≤ k ≤ K.
 ///
 /// Built once per (N,K); the index-mapping algorithms in
-/// [`crate::pvq::index`] walk it repeatedly.
+/// [`crate::pvq::index`] walk it repeatedly. Callers that hit the same
+/// shape repeatedly (the grouped CWRS codec does, once per group)
+/// should go through [`shared_table`] instead of rebuilding.
 pub struct CountTable {
     n: usize,
     k: usize,
@@ -24,23 +28,32 @@ pub struct CountTable {
     table: Vec<BigUint>,
 }
 
+/// One row of the Fischer recurrence: row `n` over columns 0..=k, given
+/// row `n−1`. Each V(N,K) row depends only on its predecessor and on
+/// itself one column back, so tables build row-at-a-time with no
+/// random access into earlier rows.
+fn next_row(prev: &[BigUint]) -> Vec<BigUint> {
+    let mut row = Vec::with_capacity(prev.len());
+    // Nₚ(n,0) = 1 (exactly the zero-pulse point)
+    row.push(BigUint::one());
+    for col in 1..prev.len() {
+        // Nₚ(n,k) = Nₚ(n−1,k) + Nₚ(n−1,k−1) + Nₚ(n,k−1)
+        row.push(prev[col].add(&prev[col - 1]).add(&row[col - 1]));
+    }
+    row
+}
+
 impl CountTable {
-    /// Build the full Nₚ table up to (n, k) via the Fischer recurrence.
+    /// Build the full Nₚ table up to (n, k), one row at a time.
     pub fn new(n: usize, k: usize) -> Self {
         let w = k + 1;
-        let mut table = vec![BigUint::zero(); (n + 1) * w];
-        // Nₚ(n,0) = 1 (the origin direction collapses; exactly the zero-pulse point)
-        for row in 0..=n {
-            table[row * w] = BigUint::one();
-        }
-        // Nₚ(0,k) = 0 for k >= 1 (already zero)
+        let mut table = Vec::with_capacity((n + 1) * w);
+        // Row 0: Nₚ(0,0) = 1, Nₚ(0,k) = 0 for k ≥ 1.
+        table.push(BigUint::one());
+        table.resize(w, BigUint::zero());
         for row in 1..=n {
-            for col in 1..=k {
-                let a = table[(row - 1) * w + col].clone(); // Nₚ(n−1,k)
-                let b = &table[(row - 1) * w + col - 1]; // Nₚ(n−1,k−1)
-                let c = &table[row * w + col - 1]; // Nₚ(n,k−1)
-                table[row * w + col] = a.add(b).add(c);
-            }
+            let next = next_row(&table[(row - 1) * w..row * w]);
+            table.extend(next);
         }
         CountTable { n, k, table }
     }
@@ -70,6 +83,28 @@ impl CountTable {
     pub fn max_k(&self) -> usize {
         self.k
     }
+}
+
+/// Process-wide memoized cache of count tables.
+///
+/// The returned table covers every (n', k') with n' ≤ n and k' ≤ the
+/// cached band, so one entry serves all smaller lookups. K is rounded
+/// up to the next power of two before keying: the grouped CWRS codec
+/// asks once per group with nearby pulse budgets, and banding keeps the
+/// cache at a handful of tables per group width instead of one per
+/// distinct k. Entries live for the process (worst case a few MB per
+/// band at the codec's group widths).
+pub fn shared_table(n: usize, k: usize) -> Arc<CountTable> {
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<CountTable>>>> = OnceLock::new();
+    let band = k.next_power_of_two().max(1);
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    if let Some(t) = map.get(&(n, band)) {
+        return Arc::clone(t);
+    }
+    let t = Arc::new(CountTable::new(n, band));
+    map.insert((n, band), Arc::clone(&t));
+    t
 }
 
 /// Convenience: Nₚ(n,k) without keeping the table.
@@ -203,6 +238,28 @@ mod tests {
                 "n={n} k={k}: exact {exact} est {est}"
             );
         }
+    }
+
+    #[test]
+    fn shared_table_bands_and_covers() {
+        // k rounds up to a power-of-two band, so nearby budgets share
+        // one table…
+        let a = shared_table(32, 5);
+        let b = shared_table(32, 8);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.max_k() >= 8 && a.max_n() == 32);
+        // …and a banded table answers exact sub-queries identically to a
+        // freshly built exact table.
+        let exact = CountTable::new(32, 5);
+        for n in 0..=32 {
+            for k in 0..=5 {
+                assert_eq!(a.count(n, k), exact.count(n, k), "N_p({n},{k})");
+            }
+        }
+        // different widths are distinct entries
+        let c = shared_table(16, 8);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(shared_table(8, 0).count(8, 0).to_u64(), Some(1));
     }
 
     #[test]

@@ -51,16 +51,26 @@ pub fn vector_to_index(y: &[i32], table: &CountTable) -> BigUint {
     index
 }
 
-/// Inverse of [`vector_to_index`]: recover the point of P(n,k) with the
-/// given rank. Panics if `index >= Nₚ(n,k)`.
-pub fn index_to_vector(index: &BigUint, n: usize, k: u32, table: &CountTable) -> Vec<i32> {
+/// Inverse of [`vector_to_index`], streamed: walk the rank and emit one
+/// `(position, magnitude, is_negative)` triple per *nonzero* component,
+/// in strictly increasing position order, without materializing the
+/// dense vector. This is the `decode_into` primitive: the CWRS codec
+/// feeds these triples straight into CSR pulse lists / bit-plane
+/// panels. Panics if `index >= Nₚ(n,k)` — callers decoding untrusted
+/// bytes must range-check the rank first.
+pub fn index_to_pulses<F: FnMut(usize, u32, bool)>(
+    index: &BigUint,
+    n: usize,
+    k: u32,
+    table: &CountTable,
+    mut emit: F,
+) {
     assert!(n <= table.max_n() && k as usize <= table.max_k(), "table too small");
     assert!(
         index.cmp_big(table.count(n, k as usize)) == std::cmp::Ordering::Less,
         "index out of range for P({n},{k})"
     );
     let mut rem = index.clone();
-    let mut y = vec![0i32; n];
     let mut k_rem = k as usize;
 
     for j in 0..n {
@@ -102,10 +112,21 @@ pub fn index_to_vector(index: &BigUint, n: usize, k: u32, table: &CountTable) ->
                 unreachable!("ran past pulse budget while decoding index");
             }
         }
-        y[j] = if neg { -(mag as i32) } else { mag as i32 };
+        if mag > 0 {
+            emit(j, mag as u32, neg);
+        }
         k_rem -= mag;
     }
     debug_assert_eq!(k_rem, 0, "decoded point does not exhaust pulses");
+}
+
+/// Inverse of [`vector_to_index`]: recover the point of P(n,k) with the
+/// given rank. Panics if `index >= Nₚ(n,k)`.
+pub fn index_to_vector(index: &BigUint, n: usize, k: u32, table: &CountTable) -> Vec<i32> {
+    let mut y = vec![0i32; n];
+    index_to_pulses(index, n, k, table, |j, mag, neg| {
+        y[j] = if neg { -(mag as i32) } else { mag as i32 };
+    });
     y
 }
 
@@ -191,6 +212,31 @@ mod tests {
         let table = CountTable::new(8, 4);
         assert_eq!(table.count(8, 4).to_u64(), Some(2816));
         assert_eq!(table.index_bits(8, 4), 12);
+    }
+
+    #[test]
+    fn pulses_match_dense_decode() {
+        let mut rng = Rng::new(9);
+        let table = CountTable::new(24, 24);
+        for _ in 0..50 {
+            let n = 4 + (rng.next_u64() % 21) as usize;
+            let k = 1 + (rng.next_u64() % 24) as u32;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_laplacian()).collect();
+            let q = encode_opt(&v, k, RhoMode::Norm);
+            let idx = vector_to_index(&q.components, &table);
+            let mut last_pos: Option<usize> = None;
+            let mut rebuilt = vec![0i32; n];
+            let mut l1 = 0u64;
+            index_to_pulses(&idx, n, k, &table, |pos, mag, neg| {
+                assert!(mag > 0, "zero components must not emit");
+                assert!(last_pos.is_none_or(|p| pos > p), "positions not increasing");
+                last_pos = Some(pos);
+                rebuilt[pos] = if neg { -(mag as i32) } else { mag as i32 };
+                l1 += mag as u64;
+            });
+            assert_eq!(rebuilt, q.components);
+            assert_eq!(l1, k as u64, "pulses must sum to K");
+        }
     }
 
     #[test]

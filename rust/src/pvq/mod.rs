@@ -15,8 +15,8 @@ pub mod grouped;
 pub mod index;
 pub mod types;
 
-pub use count::{np, np_bits_estimate, CountTable};
+pub use count::{np, np_bits_estimate, shared_table, CountTable};
 pub use encode::{cosine, encode, encode_fast, encode_opt, reconstruction_mse};
 pub use grouped::{encode_grouped, encode_grouped_shared_rho, GroupedPvq};
-pub use index::{index_to_vector, vector_to_index};
+pub use index::{index_to_pulses, index_to_vector, vector_to_index};
 pub use types::{PvqVector, RhoMode};

@@ -3,7 +3,10 @@
 //! and the multi-model registry must serve several artifacts concurrently
 //! through the batching server with per-model-correct predictions.
 
-use pvqnet::artifact::{inspect, read_model, write_model, ArtifactReader, ArtifactWriter};
+use pvqnet::artifact::{
+    inspect, read_model, write_model, write_model_with_version, ArtifactReader, ArtifactWriter,
+};
+use pvqnet::compress::Codec;
 use pvqnet::coordinator::{Classify, ClassifyRequest, EngineKind, ModelRegistry, ServerConfig};
 use pvqnet::nn::model::{Activation, LayerSpec, ModelSpec};
 use pvqnet::nn::{forward_int, ITensor, Model, QuantModel};
@@ -273,6 +276,75 @@ fn registry_serves_two_models_concurrently_with_correct_predictions() {
     }
     std::fs::remove_file(&pa).unwrap();
     std::fs::remove_file(&pb).unwrap();
+}
+
+/// Acceptance for the `decode_into` load path: the same model packed as
+/// a v1 artifact (dense-era codecs only) and as a v2 artifact (CWRS
+/// competing, streamed into the compilers) must serve bitwise-identical
+/// results — classes through the batching registry AND integer logits
+/// through the direct engine oracle — and both must match a
+/// reference-engine registration of the v2 file.
+#[test]
+fn v1_and_v2_artifacts_serve_bitwise_identical_results() {
+    for (act, engine_name) in [(Activation::Relu, "pvq-csr"), (Activation::BSign, "binary")] {
+        let spec = ModelSpec {
+            name: "vv".into(),
+            input_shape: vec![24],
+            layers: vec![
+                LayerSpec::Dense { input: 24, output: 14, act },
+                LayerSpec::Dense { input: 14, output: 5, act: Activation::None },
+            ],
+        };
+        let qm = quantize(&Model::synth(&spec, 41), &[2.0, 1.0], RhoMode::Norm)
+            .unwrap()
+            .quant_model;
+        let p1 = tmp_path(&format!("vv1_{engine_name}.pvqm"));
+        let p2 = tmp_path(&format!("vv2_{engine_name}.pvqm"));
+        let m1 = write_model_with_version(&p1, &qm, 1).unwrap();
+        let m2 = write_model(&p2, &qm).unwrap();
+        // a v1 writer must never have picked CWRS; the v2 writer picks
+        // it freely (and does, on these sparse layers)
+        assert!(m1.layers.iter().all(|l| l.codec != Codec::Cwrs), "{engine_name}");
+        assert!(m2.layers.iter().any(|l| l.codec == Codec::Cwrs), "{engine_name}");
+
+        let mut reg = ModelRegistry::new(ServerConfig::default());
+        reg.register_artifact(&p1, EngineKind::Auto).unwrap();
+        reg.register_artifact(&p2, EngineKind::Auto).unwrap();
+        reg.register_quant("oracle", qm.clone(), EngineKind::Reference, None).unwrap();
+        for m in reg.models() {
+            if m.name != "oracle" {
+                assert_eq!(m.engine, engine_name, "{}", m.name);
+            }
+        }
+
+        let v1_name = format!("vv1_{engine_name}");
+        let v2_name = format!("vv2_{engine_name}");
+        let e1 = reg.engine(Some(&v1_name)).unwrap();
+        let e2 = reg.engine(Some(&v2_name)).unwrap();
+        let mut rng = Rng::new(42);
+        for _ in 0..30 {
+            let s: Vec<u8> = (0..24).map(|_| rng.below(256) as u8).collect();
+            // integer logits are bitwise-reproducible on these engines:
+            // the streamed v2 load must reproduce the v1 dense-era load
+            // score for score, not just argmax
+            let l1 = e1.logits(&s).unwrap().expect("integer engine");
+            let l2 = e2.logits(&s).unwrap().expect("integer engine");
+            assert_eq!(l1, l2, "{engine_name}: logits diverge between v1 and v2 loads");
+            // and the served classes agree with the reference engine
+            let want = pvqnet::nn::tensor::argmax_i64(
+                &forward_int(&qm, &ITensor::from_u8(&[24], &s)).unwrap().logits,
+            );
+            for name in [v1_name.as_str(), v2_name.as_str(), "oracle"] {
+                let got = reg
+                    .submit(ClassifyRequest::single(s.clone()).with_model(name))
+                    .unwrap();
+                assert_eq!(got.results[0].class, want, "{engine_name}/{name}");
+            }
+        }
+        reg.shutdown();
+        std::fs::remove_file(&p1).unwrap();
+        std::fs::remove_file(&p2).unwrap();
+    }
 }
 
 /// A bsign-MLP artifact comes back up on the binary popcount engine and

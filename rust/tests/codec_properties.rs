@@ -3,7 +3,10 @@
 //! mutation fuzz on the layer-container decoder (corrupt bytes must
 //! read as errors, never panics).
 
-use pvqnet::compress::{compress_layer, compress_layer_best, decompress_layer, Codec};
+use pvqnet::compress::{
+    compress_layer, compress_layer_best, decompress_layer, decompress_layer_into, Codec,
+    PulseSink,
+};
 use pvqnet::pvq::{encode_fast, PvqVector, RhoMode};
 use pvqnet::testkit::{check, Rng};
 
@@ -89,7 +92,7 @@ fn mutated_containers_error_never_panic() {
         let n = 16 + rng.below(200) as usize;
         let ratio = [1usize, 2, 5][rng.below(3) as usize];
         let q = sample_layer(rng, n, ratio);
-        let codec = Codec::ALL[rng.below(4) as usize];
+        let codec = Codec::ALL[rng.below(Codec::ALL.len() as u64) as usize];
         let mut bytes = compress_layer(&q, codec);
         match rng.below(3) {
             // single byte flip anywhere (header, freq table, payload)
@@ -108,7 +111,90 @@ fn mutated_containers_error_never_panic() {
         if let Ok(back) = decompress_layer(&bytes) {
             assert!(back.is_valid() || back.k == 0);
         }
+        // the streamed decode_into path must be exactly as corruption-
+        // safe as the dense path: Ok with a valid pulse sum, or Err
+        let mut sink = RecordingSink::default();
+        if decompress_layer_into(&bytes, &mut sink).is_ok() {
+            assert!(sink.l1 == sink.k as u64 || sink.k == 0);
+        }
     });
+}
+
+/// PulseSink that rebuilds the dense vector and records stream order.
+#[derive(Default)]
+struct RecordingSink {
+    n: usize,
+    k: u32,
+    rho: f64,
+    dense: Vec<i32>,
+    l1: u64,
+    last_pos: Option<usize>,
+    ordered: bool,
+}
+
+impl PulseSink for RecordingSink {
+    fn begin(&mut self, n: usize, k: u32, rho: f64) {
+        self.n = n;
+        self.k = k;
+        self.rho = rho;
+        self.dense = vec![0; n];
+        self.l1 = 0;
+        self.last_pos = None;
+        self.ordered = true;
+    }
+    fn pulse(&mut self, pos: usize, mag: u32, neg: bool) {
+        if self.last_pos.is_some_and(|p| pos <= p) {
+            self.ordered = false;
+        }
+        self.last_pos = Some(pos);
+        self.dense[pos] = if neg { -(mag as i64) as i32 } else { mag as i32 };
+        self.l1 += mag as u64;
+    }
+}
+
+#[test]
+fn streamed_decode_matches_dense_decode_for_every_codec() {
+    // decode_into is the serving load path; it must reproduce exactly
+    // what dense decode-then-scan produces, for every codec (CWRS
+    // streams natively, the others replay their dense decode), with
+    // strictly increasing positions — the contract the CSR and binary
+    // compilers rely on.
+    check("decode_into ≡ dense decode", 0x51D3, 4, |_, rng| {
+        for n in [1usize, 63, 300] {
+            for ratio in [1usize, 3, 8] {
+                let q = sample_layer(rng, n, ratio);
+                for codec in Codec::ALL {
+                    let bytes = compress_layer(&q, codec);
+                    let mut sink = RecordingSink::default();
+                    decompress_layer_into(&bytes, &mut sink)
+                        .unwrap_or_else(|e| panic!("{codec:?} N={n} N/K={ratio}: {e}"));
+                    assert!(sink.ordered, "{codec:?}: positions must strictly increase");
+                    assert_eq!(sink.dense, q.components, "{codec:?} N={n} N/K={ratio}");
+                    assert_eq!(sink.k, q.k, "{codec:?}");
+                    assert_eq!(sink.rho.to_bits(), q.rho.to_bits(), "{codec:?}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn streamed_decode_handles_i32_boundary_magnitudes() {
+    // CWRS falls back to zigzag exp-Golomb groups when Σ|c| exceeds its
+    // count-table cap; the boundary magnitudes must stream through
+    // decode_into exactly (the sink sees magnitude 2^31 as u32)
+    let q = PvqVector {
+        k: u32::MAX,
+        components: vec![i32::MAX, 0, i32::MIN, 0],
+        rho: 2.0,
+    };
+    for codec in Codec::ALL {
+        let bytes = compress_layer(&q, codec);
+        let mut sink = RecordingSink::default();
+        decompress_layer_into(&bytes, &mut sink).unwrap();
+        assert_eq!(sink.dense, q.components, "{codec:?}");
+        assert_eq!(sink.l1, u32::MAX as u64, "{codec:?}");
+    }
 }
 
 /// Hand-build a PVQL container around a raw RLE payload.

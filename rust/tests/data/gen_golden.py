@@ -162,6 +162,275 @@ def huff_encode(values):
     return freq, w.finish()
 
 
+# ----------------------------------------- §4.6 grouped CWRS (codec 4)
+#
+# One LZMA-style carry-counting range-coder stream per layer. The layer
+# is cut into groups of `group` components; each group codes its pulse
+# budget k_g as exp-Golomb inside the stream, then either the group's
+# Fischer rank within P(n_g, k_g) (k_g ≤ K_TABLE_MAX) or, as a
+# fallback, per-component zigzag exp-Golomb.
+
+CWRS_TOP = 1 << 24
+CWRS_FT_MAX_BITS = 16
+CWRS_K_TABLE_MAX = 512
+CWRS_GROUP = 128
+
+
+def Np(n, k, _memo={}):
+    """Fischer's point count N_p(n,k), exact (Python int)."""
+    if k == 0:
+        return 1
+    if n == 0:
+        return 0
+    key = (n, k)
+    if key not in _memo:
+        _memo[key] = Np(n - 1, k) + Np(n - 1, k - 1) + Np(n, k - 1)
+    return _memo[key]
+
+
+def cwrs_zigzag(v):
+    # i32 → even/odd unsigned; i32::MIN (magnitude 2^31) stays exact
+    return (v << 1) if v >= 0 else ((-v) << 1) - 1
+
+
+def cwrs_unzigzag(m):
+    return (m >> 1) if m % 2 == 0 else -((m + 1) >> 1)
+
+
+def vector_to_index(y):
+    """Canonical Fischer rank: smaller |component| first, then + before −."""
+    n = len(y)
+    k_rem = sum(abs(v) for v in y)
+    index = 0
+    for j, v in enumerate(y):
+        if k_rem == 0:
+            break
+        dims_after = n - j - 1
+        mag = abs(v)
+        for w in range(mag):
+            c = Np(dims_after, k_rem - w)
+            index += c if w == 0 else 2 * c
+        if v < 0:
+            index += Np(dims_after, k_rem - mag)
+        k_rem -= mag
+    return index
+
+
+def index_to_vector(index, n, k):
+    """Inverse rank walk (mirrors the spec's decode procedure block-by-block)."""
+    y = [0] * n
+    rem = index
+    k_rem = k
+    for j in range(n):
+        if k_rem == 0:
+            break
+        dims_after = n - j - 1
+        mag, neg = 0, False
+        while True:
+            block = Np(dims_after, k_rem - mag)
+            if mag == 0:
+                if rem < block:
+                    break
+                rem -= block
+                mag += 1
+            else:
+                if rem < block:
+                    break
+                if rem < 2 * block:
+                    rem -= block
+                    neg = True
+                    break
+                rem -= 2 * block
+                mag += 1
+        if mag:
+            y[j] = -mag if neg else mag
+        k_rem -= mag
+    return y
+
+
+class RangeEncoder:
+    """LZMA-style carry-counting byte range coder (§4.6 state machine)."""
+
+    def __init__(self):
+        self.buf = bytearray()
+        self.low = 0
+        self.range = 0xFFFFFFFF
+        self.cache = 0
+        self.cache_size = 1
+
+    def _shift_low(self):
+        # flush unless the outgoing byte is 0xFF with no carry resolved
+        if (self.low & 0xFFFFFFFF) < 0xFF000000 or (self.low >> 32) != 0:
+            carry = self.low >> 32
+            self.buf.append((self.cache + carry) & 0xFF)
+            for _ in range(self.cache_size - 1):
+                self.buf.append((0xFF + carry) & 0xFF)
+            self.cache = (self.low >> 24) & 0xFF
+            self.cache_size = 0
+        self.cache_size += 1
+        self.low = (self.low & 0x00FFFFFF) << 8
+
+    def encode(self, v, ft):
+        assert 1 <= ft <= (1 << CWRS_FT_MAX_BITS) and 0 <= v < ft
+        if ft == 1:
+            return
+        r = self.range // ft
+        self.low += r * v
+        # the last symbol absorbs the division slack
+        self.range = self.range - r * v if v == ft - 1 else r
+        while self.range < CWRS_TOP:
+            self._shift_low()
+            self.range <<= 8
+
+    def enc_bits(self, v, n):
+        rem = n
+        while rem > 0:
+            chunk = min(rem, CWRS_FT_MAX_BITS)
+            rem -= chunk
+            self.encode((v >> rem) & ((1 << chunk) - 1), 1 << chunk)
+
+    def enc_ue64(self, m):
+        # every unary flag — including the terminating 1 — is its own
+        # binary symbol so the decoder's decode(2) reads stay in
+        # lockstep (the slack-absorption rule makes a fused
+        # encode(x, 2^nb) a different state trajectory)
+        x = m + 1
+        nb = x.bit_length()
+        for _ in range(nb - 1):
+            self.encode(0, 2)
+        self.encode(1, 2)
+        if nb > 1:
+            self.enc_bits(x & ((1 << (nb - 1)) - 1), nb - 1)
+
+    def enc_rank(self, rank, total):
+        mx = total - 1
+        ftb = mx.bit_length()
+        if ftb == 0:
+            return  # total == 1: rank is necessarily 0
+        if ftb <= CWRS_FT_MAX_BITS:
+            self.encode(rank, total)
+        else:
+            b = ftb - CWRS_FT_MAX_BITS
+            self.encode(rank >> b, (mx >> b) + 1)
+            rem = b
+            while rem > 0:
+                chunk = min(rem, CWRS_FT_MAX_BITS)
+                rem -= chunk
+                self.enc_bits((rank >> rem) & ((1 << chunk) - 1), chunk)
+
+    def finish(self):
+        for _ in range(5):
+            self._shift_low()
+        return bytes(self.buf)
+
+
+class RangeDecoder:
+    """Decoder twin of RangeEncoder (used by the self-tests below)."""
+
+    def __init__(self, payload):
+        self.data = payload
+        self.pos = 0
+        self._byte()  # spurious leading zero byte (LZMA convention)
+        self.range = 0xFFFFFFFF
+        self.code = 0
+        for _ in range(4):
+            self.code = (self.code << 8) | self._byte()
+
+    def _byte(self):
+        # past end-of-stream reads as 0 (truncation decodes to garbage
+        # that the invariant checks reject)
+        b = self.data[self.pos] if self.pos < len(self.data) else 0
+        self.pos += 1
+        return b
+
+    def decode(self, ft):
+        if ft == 1:
+            return 0
+        r = self.range // ft
+        v = min(self.code // r, ft - 1)
+        self.code -= r * v
+        self.range = self.range - r * v if v == ft - 1 else r
+        while self.range < CWRS_TOP:
+            self.code = ((self.code << 8) | self._byte()) & 0xFFFFFFFF
+            self.range <<= 8
+        return v
+
+    def dec_bits(self, n):
+        out, rem = 0, n
+        while rem > 0:
+            chunk = min(rem, CWRS_FT_MAX_BITS)
+            rem -= chunk
+            out |= self.decode(1 << chunk) << rem
+        return out
+
+    def dec_ue64(self):
+        zeros = 0
+        while self.decode(2) == 0:
+            zeros += 1
+            assert zeros <= 63, "exp-golomb unary overflow"
+        rest = self.dec_bits(zeros)
+        return ((1 << zeros) | rest) - 1
+
+    def dec_rank(self, total):
+        mx = total - 1
+        ftb = mx.bit_length()
+        if ftb == 0:
+            return 0
+        if ftb <= CWRS_FT_MAX_BITS:
+            rank = self.decode(total)
+        else:
+            b = ftb - CWRS_FT_MAX_BITS
+            rank = self.decode((mx >> b) + 1) << b
+            rem = b
+            while rem > 0:
+                chunk = min(rem, CWRS_FT_MAX_BITS)
+                rem -= chunk
+                rank |= self.dec_bits(chunk) << rem
+        assert rank < total, "rank out of range"
+        return rank
+
+
+def cwrs_encode(values, group=CWRS_GROUP):
+    enc = RangeEncoder()
+    for base in range(0, len(values), group):
+        sl = values[base : base + group]
+        k_g = sum(abs(v) for v in sl)
+        enc.enc_ue64(k_g)
+        if k_g == 0:
+            continue
+        if k_g > CWRS_K_TABLE_MAX:
+            for v in sl:
+                enc.enc_ue64(cwrs_zigzag(v))
+        else:
+            enc.enc_rank(vector_to_index(sl), Np(len(sl), k_g))
+    return enc.finish()
+
+
+def cwrs_decode(payload, n, group=CWRS_GROUP):
+    dec = RangeDecoder(payload)
+    out = [0] * n
+    base = 0
+    while base < n:
+        n_g = min(group, n - base)
+        k_g = dec.dec_ue64()
+        if k_g == 0:
+            base += n_g
+            continue
+        if k_g > CWRS_K_TABLE_MAX:
+            s = 0
+            for j in range(n_g):
+                v = cwrs_unzigzag(dec.dec_ue64())
+                out[base + j] = v
+                s += abs(v)
+            assert s == k_g, "group pulse sum mismatch"
+        else:
+            rank = dec.dec_rank(Np(n_g, k_g))
+            for j, v in enumerate(index_to_vector(rank, n_g, k_g)):
+                out[base + j] = v
+        base += n_g
+    return out
+
+
 # ------------------------------------------------- §4 container frame
 
 
@@ -193,6 +462,19 @@ for v, bits in [(0, 1), (1, 3), (-1, 3), (2, 5), (-3, 5), (4, 7), (-7, 7)]:
 # degenerate single-symbol table: 1 bit per symbol
 freq, payload = huff_encode([0] * 50)
 assert len(payload) == (50 + 7) // 8
+# §4.6 CWRS: paper's anchor count, first byte convention, round trips
+assert Np(8, 4) == 2816, "Fischer count N_p(8,4)"
+_c = cwrs_encode([0, 0, 3, 0, -1, 1, 0, 0, -2, 0, 0, 1])
+assert _c[0] == 0, "range-coder streams start with a zero byte"
+assert cwrs_decode(_c, 12) == [0, 0, 3, 0, -1, 1, 0, 0, -2, 0, 0, 1]
+assert cwrs_decode(cwrs_encode([0] * 9, 4), 9, 4) == [0] * 9
+_fb = [600, 0, -3]  # k_g > K_TABLE_MAX → zigzag fallback branch
+assert cwrs_decode(cwrs_encode(_fb, 4), 3, 4) == _fb
+_bd = [-(2**31), 2**31 - 1]  # i32-boundary magnitudes stay exact
+assert cwrs_decode(cwrs_encode(_bd, 2), 2, 2) == _bd
+# rank bijection on a small pyramid
+for _i in range(Np(4, 3)):
+    assert vector_to_index(index_to_vector(_i, 4, 3)) == _i
 
 # ------------------------------------------------- canonical vectors
 
@@ -214,6 +496,11 @@ golden = {
 freq, payload = huff_encode(HUFF)
 extra = b"".join(struct.pack("<I", f) for f in freq)
 golden["golden_huffman.pvql"] = container(2, HUFF, HUFF_K, HUFF_RHO, payload, extra)
+# CWRS codes the shared vector as one group (n = 12 ≤ group = 128); the
+# codec extra byte is the writer's group width.
+golden["golden_cwrs.pvql"] = container(
+    4, SHARED, SHARED_K, SHARED_RHO, cwrs_encode(SHARED), extra=bytes([CWRS_GROUP])
+)
 
 if __name__ == "__main__":
     for name, data in golden.items():
