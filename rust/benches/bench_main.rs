@@ -16,9 +16,9 @@
 //! iteration so CI can execute the kernel benches (and still emit their
 //! `BENCH_*.json`, with `iterations: 1` marking the numbers as
 //! statistically void) without paying for stable timings. Every metric
-//! recorded by the JSON-emitting experiments (batch, shard, http,
-//! loadgen, trace, artifact) also lands in the merged `--baseline-out`
-//! document, which `pvqnet bench-compare` consumes.
+//! recorded by the JSON-emitting experiments (batch, shard, binary,
+//! http, loadgen, trace, artifact) also lands in the merged
+//! `--baseline-out` document, which `pvqnet bench-compare` consumes.
 
 use pvqnet::bench::{fmt_secs as fmt_t, BenchDoc, Measurement, Metric, Platform, Protocol};
 use pvqnet::compress::codec_survey;
@@ -857,6 +857,66 @@ fn bench_trace() {
     write_doc("trace");
 }
 
+/// Zero-plane-skipping binary kernels (synth net C): gated end-to-end
+/// samples/s for the batch-fused classify path, plus the fraction of
+/// bit-plane words the kernels skipped. The skip fraction is a pure
+/// function of the compiled masks and the sample block — deterministic,
+/// so it is recorded as a zero-variance sample set (bench-compare
+/// judges it by exact mean shift) and gates: a drop toward 0 means the
+/// occupancy masks stopped eliding work.
+fn bench_binary() {
+    use pvqnet::nn::{BinaryNet, Model};
+
+    let spec = ModelSpec::by_name("c").unwrap();
+    let model = Model::synth(&spec, 42);
+    let q = quantize(&model, &spec.paper_ratios(), RhoMode::Norm).unwrap();
+    let net = BinaryNet::compile(&q.quant_model).unwrap();
+    let input_len: usize = spec.input_shape.iter().product();
+    let mut rng = Rng::new(79);
+    let b = 64usize;
+    let samples: Vec<Vec<u8>> = (0..b)
+        .map(|_| (0..input_len).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+
+    let sps = throughput(b, || {
+        std::hint::black_box(net.classify_block_u8(&views).unwrap());
+    });
+    let label = format!("binary classify_block_u8 (net C, B={b})");
+    println!("  {label:<44} {}", sps.format_rate("samp/s"));
+    record("binary", "sps", "samples/s", true, true, &sps);
+
+    // counters from one metered pass over the same block; the invariant
+    // (every plane word either visited or skipped) is also enforced by
+    // the property tests — asserting here keeps the bench honest too
+    let (_, ops) = net.classify_block_u8_ops(&views).unwrap();
+    let total = net.plane_words_total();
+    assert_eq!(
+        ops.plane_words_visited + ops.plane_words_skipped,
+        total,
+        "ops accounting must cover every plane word"
+    );
+    let frac = ops.skipped_frac();
+    println!(
+        "  plane words: {} visited + {} skipped of {total} ({:.1}% skipped), {} taps, {} adds",
+        ops.plane_words_visited,
+        ops.plane_words_skipped,
+        100.0 * frac,
+        ops.taps,
+        ops.adds
+    );
+    assert!(frac > 0.0, "synth net C skipped no plane words — occupancy masks inert?");
+    record(
+        "binary",
+        "plane_words_skipped_frac",
+        "frac",
+        true,
+        true,
+        &Measurement::from_values(vec![frac; 4], 0),
+    );
+    write_doc("binary");
+}
+
 /// Artifact pack/unpack timing + compressed bytes per weight on a
 /// net-A-shaped synthetic model; emits `BENCH_artifact.json`.
 ///
@@ -1014,6 +1074,7 @@ fn main() {
         ("http", bench_http),
         ("batch", bench_batch),
         ("shard", bench_shard),
+        ("binary", bench_binary),
         ("loadgen", bench_loadgen),
         ("trace", bench_trace),
         ("artifact", bench_artifact),

@@ -10,6 +10,7 @@ use crate::nn::csr_engine::CompiledQuantModel;
 use crate::nn::layers::Model;
 use crate::nn::pvq_engine::forward_int;
 use crate::nn::tensor::{argmax_i64, ITensor, Tensor};
+use crate::hw::BinOps;
 use crate::nn::QuantModel;
 use crate::runtime::HloModel;
 use anyhow::Result;
@@ -120,10 +121,26 @@ impl Engine {
     /// paths. The reference engines (float, pvq-int) keep the scalar loop
     /// by design: they exist for A/B-ing the optimized paths.
     pub fn classify_batch(&self, samples: &[&[u8]]) -> Result<Vec<usize>> {
+        Ok(self.classify_batch_ops(samples)?.0)
+    }
+
+    /// [`Engine::classify_batch`] plus the per-batch operation counters
+    /// the engine's kernels actually performed. Only the binary engine
+    /// meters its inner loops (plane words visited/skipped, taps, adds
+    /// — see [`crate::hw::BinOps`]); every other engine returns `None`
+    /// rather than a zeroed (and therefore misleading) counter set.
+    pub fn classify_batch_ops(
+        &self,
+        samples: &[&[u8]],
+    ) -> Result<(Vec<usize>, Option<BinOps>)> {
         if samples.is_empty() {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), None));
         }
-        match self {
+        if let Engine::Binary(m) = self {
+            let (classes, ops) = m.classify_block_u8_ops(samples)?;
+            return Ok((classes, Some(ops)));
+        }
+        let classes = match self {
             Engine::Float(m) => {
                 let shape = self.sample_shape();
                 Ok(samples
@@ -166,9 +183,9 @@ impl Engine {
                 }
                 Ok(out)
             }
-        }
+        }?;
+        Ok((classes, None))
     }
-
 }
 
 impl Classify for Engine {
@@ -181,10 +198,10 @@ impl Classify for Engine {
     fn submit(&self, req: ClassifyRequest) -> Result<ClassifyReply> {
         let views: Vec<&[u8]> = req.samples.iter().map(|s| s.as_slice()).collect();
         let t0 = Instant::now();
-        let classes = if req.trace_ctx.sampled {
-            crate::obs::with_ctx(req.trace_ctx, || self.classify_batch(&views))?
+        let (classes, ops) = if req.trace_ctx.sampled {
+            crate::obs::with_ctx(req.trace_ctx, || self.classify_batch_ops(&views))?
         } else {
-            self.classify_batch(&views)?
+            self.classify_batch_ops(&views)?
         };
         let elapsed = t0.elapsed();
         let batch = req.samples.len();
@@ -198,6 +215,7 @@ impl Classify for Engine {
                     queue: Duration::ZERO,
                     compute: elapsed,
                     batch,
+                    ops,
                 })
                 .collect(),
         })

@@ -701,7 +701,9 @@ impl EventLoop {
                 self.wheel.insert(token, gen, dl);
                 continue;
             }
-            let mut conn = self.conns.remove(&token).expect("checked above");
+            // `get` above proved membership, but stay panic-free on the
+            // event loop: a missing entry is a skipped tick, not a crash
+            let Some(mut conn) = self.conns.remove(&token) else { continue };
             conn.deadline = None;
             match conn.state {
                 ConnState::Reading if conn.started.is_some() => {
@@ -915,7 +917,7 @@ impl EventLoop {
                 obs::us_since(start),
                 write_d.as_micros() as u64,
                 0,
-                [conn.body_len as u64, 0, 0],
+                [conn.body_len as u64, 0, 0, 0, 0],
             );
         }
         if let (Some(limit_ms), Some(info)) = (self.shared.cfg.slow_ms, conn.slow.take()) {
@@ -923,10 +925,23 @@ impl EventLoop {
             let handle_us = start.duration_since(conn.t_handle).as_micros() as u64;
             let total_us = conn.recv_us + handle_us + write_us;
             if total_us > limit_ms.saturating_mul(1000) {
+                // per-inference ops line: what the plane kernels of the
+                // batch actually did (binary engine only)
+                let ops = info.ops.map_or(String::new(), |o| {
+                    format!(
+                        " plane_words_visited={} plane_words_skipped={} \
+                         plane_skip_frac={:.3} taps={} adds={}",
+                        o.plane_words_visited,
+                        o.plane_words_skipped,
+                        o.skipped_frac(),
+                        o.taps,
+                        o.adds,
+                    )
+                });
                 eprintln!(
                     "pvqnet slow-request id={} model={} total_us={total_us} \
                      recv_us={} parse_us={} queue_us={} compute_us={} \
-                     write_us={write_us} batch={} samples={}",
+                     write_us={write_us} batch={} samples={}{ops}",
                     conn.write_ctx.id,
                     info.model,
                     conn.recv_us,
@@ -1028,6 +1043,9 @@ struct SlowInfo {
     compute_us: u64,
     batch: usize,
     samples: usize,
+    /// Plane-kernel ops the batch actually performed (binary engine
+    /// only — `None` elsewhere), for the per-inference ops line.
+    ops: Option<crate::hw::BinOps>,
 }
 
 /// A routed response about to be written.
@@ -1119,9 +1137,9 @@ fn route(shared: &Shared, draining: bool, req: &HttpRequest, conn: &mut Conn) ->
             now.saturating_sub(req.recv_us),
             req.recv_us,
             0,
-            [req.body.len() as u64, 0, 0],
+            [req.body.len() as u64, 0, 0, 0, 0],
         );
-        obs::record_span_at(ctx, Stage::Admit, now, 0, 0, [0, 0, 0]);
+        obs::record_span_at(ctx, Stage::Admit, now, 0, 0, [0, 0, 0, 0, 0]);
     }
     match prepare_classify(shared, &req.body, ctx) {
         Ok(p) => {
@@ -1292,7 +1310,7 @@ fn prepare_classify(shared: &Shared, body: &[u8], ctx: TraceCtx) -> Result<Prepa
             obs::us_since(t_parse),
             parse_d.as_micros() as u64,
             0,
-            [0, 0, 0],
+            [0, 0, 0, 0, 0],
         );
     }
     let Some(info) = shared.registry.resolve(model) else {
@@ -1337,6 +1355,12 @@ fn finish_classify(result: Result<ClassifyReply>, meta: &ClassifyMeta) -> Reply 
         }
     };
     let responses = classified.results;
+    // an engine answering a nonempty request with zero results is a
+    // contract violation; map it to a typed 500 instead of indexing
+    // into an empty vec on the completion callback
+    if responses.is_empty() {
+        return Reply::error(500, "engine returned no results");
+    }
     let ctx = meta.ctx;
     let result_json = |r: &super::Response| {
         Json::Obj(vec![
@@ -1364,7 +1388,7 @@ fn finish_classify(result: Result<ClassifyReply>, meta: &ClassifyMeta) -> Reply 
             obs::us_since(t_ser),
             t_ser.elapsed().as_micros() as u64,
             0,
-            [body.len() as u64, 0, 0],
+            [body.len() as u64, 0, 0, 0, 0],
         );
     }
     let slow = SlowInfo {
@@ -1374,6 +1398,7 @@ fn finish_classify(result: Result<ClassifyReply>, meta: &ClassifyMeta) -> Reply 
         compute_us: responses.iter().map(|r| r.compute.as_micros() as u64).max().unwrap_or(0),
         batch: responses.iter().map(|r| r.batch).max().unwrap_or(0),
         samples: meta.n_samples,
+        ops: responses.iter().find_map(|r| r.ops),
     };
     Reply {
         status: 200,
@@ -1469,6 +1494,30 @@ mod tests {
         assert!(bad_method.starts_with("HTTP/1.1 405"), "{bad_method}");
         assert!(server.metrics().http_errors.load(Ordering::Relaxed) >= 2);
         server.shutdown();
+    }
+
+    #[test]
+    fn finish_classify_maps_empty_results_to_500() {
+        // regression: a misbehaving engine answering zero results used
+        // to panic the completion callback on `&responses[0]`
+        let meta = ClassifyMeta {
+            ctx: TraceCtx::OFF,
+            model: "tiny".into(),
+            batched: false,
+            parse_us: 0,
+            n_samples: 1,
+            keep: true,
+        };
+        let reply = finish_classify(
+            Ok(ClassifyReply { model: "tiny".into(), results: Vec::new() }),
+            &meta,
+        );
+        assert_eq!(reply.status, 500);
+        assert!(
+            String::from_utf8_lossy(&reply.body).contains("no results"),
+            "{:?}",
+            String::from_utf8_lossy(&reply.body)
+        );
     }
 
     #[test]

@@ -111,6 +111,17 @@ pub struct Metrics {
     queue_depth_last: AtomicU64,
     /// Peak sampled queue depth since start.
     queue_depth_peak: AtomicU64,
+    /// Bit-plane mask words the binary kernels actually visited
+    /// (nonzero in both operands — see [`crate::hw::BinOps`]).
+    pub binary_plane_words_visited: AtomicU64,
+    /// Bit-plane mask words the binary kernels skipped (all-zero in
+    /// either the weight group or the activation plane).
+    pub binary_plane_words_skipped: AtomicU64,
+    /// Weight taps applied across visited words (Σ popcount of visited
+    /// mask words).
+    pub binary_taps: AtomicU64,
+    /// i64 accumulator additions the binary kernels performed.
+    pub binary_adds: AtomicU64,
 }
 
 impl Metrics {
@@ -230,6 +241,17 @@ impl Metrics {
     /// like [`Metrics::latency_quantile_us`]); 0 when unobserved.
     pub fn stage_quantile_us(&self, stage: Stage, q: f64) -> u64 {
         stage.hist_index().map(|i| self.stages[i].quantile_us(q)).unwrap_or(0)
+    }
+
+    /// Fold one batch's plane-kernel operation counters into the
+    /// running totals. Called by the worker lane after each binary
+    /// engine dispatch; engines without plane kernels never call this,
+    /// so the `pvqnet_binary_*_total` families stay zero for them.
+    pub fn record_bin_ops(&self, ops: &crate::hw::BinOps) {
+        self.binary_plane_words_visited.fetch_add(ops.plane_words_visited, Ordering::Relaxed);
+        self.binary_plane_words_skipped.fetch_add(ops.plane_words_skipped, Ordering::Relaxed);
+        self.binary_taps.fetch_add(ops.taps, Ordering::Relaxed);
+        self.binary_adds.fetch_add(ops.adds, Ordering::Relaxed);
     }
 
     /// Record the admission-queue depth sampled at a batch dispatch.
@@ -423,7 +445,7 @@ pub fn prometheus_text_full(
     }
     // per-model counter families: header once, then one series per model
     type Get = fn(&Metrics) -> u64;
-    let counter_families: [(&str, &str, Get); 4] = [
+    let counter_families: [(&str, &str, Get); 8] = [
         (
             "pvqnet_requests_total",
             "Requests admitted to the batching queue",
@@ -438,6 +460,26 @@ pub fn prometheus_text_full(
         ("pvqnet_batched_samples_total", "Samples across dispatched micro-batches", |m| {
             m.batched_samples.load(Ordering::Relaxed)
         }),
+        (
+            "pvqnet_binary_plane_words_visited_total",
+            "Bit-plane mask words the binary kernels actually processed",
+            |m| m.binary_plane_words_visited.load(Ordering::Relaxed),
+        ),
+        (
+            "pvqnet_binary_plane_words_skipped_total",
+            "Bit-plane mask words skipped as all-zero in either operand",
+            |m| m.binary_plane_words_skipped.load(Ordering::Relaxed),
+        ),
+        (
+            "pvqnet_binary_taps_total",
+            "Weight taps applied across visited plane words",
+            |m| m.binary_taps.load(Ordering::Relaxed),
+        ),
+        (
+            "pvqnet_binary_adds_total",
+            "Accumulator additions performed by the binary kernels",
+            |m| m.binary_adds.load(Ordering::Relaxed),
+        ),
     ];
     for (name, help, get) in counter_families {
         let _ = writeln!(out, "# HELP {name} {help}");
@@ -604,6 +646,18 @@ mod tests {
         m.requests.fetch_add(3, Ordering::Relaxed);
         m.record_batch(3);
         m.record_latency(Duration::from_micros(100));
+        m.record_bin_ops(&crate::hw::BinOps {
+            plane_words_visited: 40,
+            plane_words_skipped: 24,
+            taps: 100,
+            adds: 56,
+        });
+        m.record_bin_ops(&crate::hw::BinOps {
+            plane_words_visited: 2,
+            plane_words_skipped: 1,
+            taps: 3,
+            adds: 4,
+        });
         let text = prometheus_text(&http, &[("net_a", &m)]);
         assert!(text.contains("pvqnet_http_admitted_total 5"));
         assert!(text.contains("pvqnet_http_rejected_total 2"));
@@ -614,12 +668,19 @@ mod tests {
             .contains("pvqnet_request_latency_seconds_bucket{model=\"net_a\",le=\"+Inf\"} 1"));
         assert!(text.contains("pvqnet_request_latency_seconds_count{model=\"net_a\"} 1"));
         assert!(text.contains("pvqnet_batch_occupancy_sum{model=\"net_a\"} 3"));
+        // plane-kernel ops counters accumulate across record_bin_ops calls
+        assert!(text.contains("pvqnet_binary_plane_words_visited_total{model=\"net_a\"} 42"));
+        assert!(text.contains("pvqnet_binary_plane_words_skipped_total{model=\"net_a\"} 25"));
+        assert!(text.contains("pvqnet_binary_taps_total{model=\"net_a\"} 103"));
+        assert!(text.contains("pvqnet_binary_adds_total{model=\"net_a\"} 60"));
         // exposition well-formedness: exactly one HELP/TYPE per family
         for fam in [
             "pvqnet_requests_total",
             "pvqnet_request_latency_seconds",
             "pvqnet_batch_occupancy",
             "pvqnet_http_admitted_total",
+            "pvqnet_binary_plane_words_visited_total",
+            "pvqnet_binary_plane_words_skipped_total",
         ] {
             let help = format!("# HELP {fam} ");
             assert_eq!(text.matches(&help).count(), 1, "family {fam}");

@@ -601,7 +601,10 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
     {
         *pos += 1;
     }
-    let s = std::str::from_utf8(&b[start..*pos]).expect("ASCII number bytes");
+    // the matched bytes are all ASCII so this cannot fail, but the
+    // input is network-controlled — answer a parse error, never panic
+    let s = std::str::from_utf8(&b[start..*pos])
+        .map_err(|_| format!("bad number bytes at offset {start}"))?;
     let n: f64 = s.parse().map_err(|_| format!("bad number '{s}' at offset {start}"))?;
     if !n.is_finite() {
         return Err(format!("non-finite number '{s}'"));
@@ -660,7 +663,9 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                 // copy one UTF-8 scalar (input is a &str, so boundaries
                 // are valid; find the char covering this byte)
                 let s = std::str::from_utf8(&b[*pos..]).map_err(|_| "bad UTF-8".to_string())?;
-                let ch = s.chars().next().expect("non-empty");
+                // `get` matched a byte, so the suffix is nonempty — but
+                // keep the wire-facing parser total rather than panicking
+                let ch = s.chars().next().ok_or_else(|| "unterminated string".to_string())?;
                 out.push(ch);
                 *pos += ch.len_utf8();
             }
@@ -816,6 +821,25 @@ mod tests {
         // depth bomb is rejected, not a stack overflow
         let bomb = "[".repeat(4000) + &"]".repeat(4000);
         assert!(Json::parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn parser_is_total_on_pathological_network_input() {
+        // the parser sits directly behind the socket: every byte
+        // sequence must produce Ok or a typed Err, never a panic —
+        // these shapes aim at the number and string scanners' internal
+        // "cannot happen" branches
+        for ugly in [
+            "+", "-", ".", "e", "E", "+.e", "--1", "1e", "1e+", ".e-E.",
+            "[+,]", "{\"a\":+}",
+        ] {
+            assert!(Json::parse(ugly).is_err(), "accepted {ugly:?}");
+        }
+        // multi-byte scalars walk the unescaped-char copy loop; a quote
+        // glued to a 4-byte emoji must terminate cleanly
+        let v = Json::parse("\"é😀\u{7f}\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "é😀\u{7f}");
+        assert!(Json::parse("\"😀").is_err(), "unterminated after multi-byte");
     }
 
     #[test]

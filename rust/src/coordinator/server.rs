@@ -175,6 +175,11 @@ pub struct Response {
     pub compute: Duration,
     /// Size of the dispatched batch this request rode in.
     pub batch: usize,
+    /// Plane-kernel operation counters for the batch this request rode
+    /// in — what the zero-plane-skipping binary kernels actually did
+    /// ([`crate::hw::BinOps`]). `None` for engines without metered
+    /// plane kernels (float, pvq-int, pvq-csr, hlo).
+    pub ops: Option<crate::hw::BinOps>,
 }
 
 /// Per-sample completion callback; invoked exactly once, possibly on a
@@ -589,7 +594,7 @@ fn mark_dispatch(core: &Core, batch: &mut [Request]) {
                 obs::us_since(r.enqueued),
                 queue.as_micros() as u64,
                 core.model_id,
-                [depth, 0, 0],
+                [depth, 0, 0, 0, 0],
             );
             obs::record_span_at(
                 r.trace,
@@ -597,7 +602,7 @@ fn mark_dispatch(core: &Core, batch: &mut [Request]) {
                 obs::us_since(r.joined),
                 form.as_micros() as u64,
                 core.model_id,
-                [batch_len, 0, 0],
+                [batch_len, 0, 0, 0, 0],
             );
         }
     }
@@ -626,14 +631,19 @@ fn worker_loop(core: &Core, engine: &Engine, cost: InferenceCost) {
         };
         let t0 = Instant::now();
         let result = if batch_ctx.sampled {
-            obs::with_ctx(batch_ctx, || engine.classify_batch(&views))
+            obs::with_ctx(batch_ctx, || engine.classify_batch_ops(&views))
         } else {
-            engine.classify_batch(&views)
+            engine.classify_batch_ops(&views)
         };
         let compute = t0.elapsed();
         let batch_len = batch.len();
         match result {
-            Ok(classes) => {
+            Ok((classes, ops)) => {
+                if let Some(ops) = &ops {
+                    core.metrics.record_bin_ops(ops);
+                }
+                let (visited, skipped) =
+                    ops.map_or((0, 0), |o| (o.plane_words_visited, o.plane_words_skipped));
                 for (req, class) in batch.into_iter().zip(classes) {
                     let latency = req.enqueued.elapsed();
                     core.metrics.record_latency(latency);
@@ -645,7 +655,7 @@ fn worker_loop(core: &Core, engine: &Engine, cost: InferenceCost) {
                             obs::us_since(t0),
                             compute.as_micros() as u64,
                             core.model_id,
-                            [batch_len as u64, cost.cycles_addonly, cost.dots],
+                            [batch_len as u64, cost.cycles_addonly, cost.dots, visited, skipped],
                         );
                     }
                     (req.done)(Ok(Response {
@@ -654,6 +664,7 @@ fn worker_loop(core: &Core, engine: &Engine, cost: InferenceCost) {
                         queue: req.queue,
                         compute,
                         batch: batch_len,
+                        ops,
                     }));
                 }
             }

@@ -104,6 +104,63 @@ pub fn bin_counter_arch(w: &[i32], x_pm1: &[i8]) -> SimResult {
     SimResult { value: counter, cycles }
 }
 
+/// Result and word-level accounting of one simulated zero-plane-skipping
+/// bit-serial dot product ([`bin_plane_arch`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneSimResult {
+    /// Accumulator value at the end.
+    pub value: i64,
+    /// 64-bit plane words fed to the AND+popcount unit (nonzero in both
+    /// operands).
+    pub words_visited: u64,
+    /// Plane words elided because either operand word was all-zero.
+    pub words_skipped: u64,
+    /// Weight bits applied: Σ popcount(mask word) over visited words.
+    pub taps: u64,
+}
+
+/// Word-level simulation of the zero-plane-skipping bit-serial datapath
+/// the binary engine implements in software: weights grouped by signed
+/// value into 64-bit +1-position masks, one AND+popcount per plane word
+/// that is nonzero in **both** operands, skipped otherwise. Always
+/// `words_visited + words_skipped == groups × ⌈N/64⌉`. Independent of
+/// the engine's compiled structures, so tests cross-check the live
+/// [`crate::hw::BinOps`] counters against this reference.
+pub fn bin_plane_arch(w: &[i32], x_pm1: &[i8]) -> PlaneSimResult {
+    assert_eq!(w.len(), x_pm1.len());
+    let nwords = w.len().div_ceil(64);
+    let mut xw = vec![0u64; nwords];
+    for (i, &v) in x_pm1.iter().enumerate() {
+        debug_assert!(v == 1 || v == -1);
+        if v == 1 {
+            xw[i / 64] |= 1 << (i % 64);
+        }
+    }
+    let mut by_val: std::collections::BTreeMap<i32, Vec<u64>> = std::collections::BTreeMap::new();
+    for (i, &v) in w.iter().enumerate() {
+        if v != 0 {
+            by_val.entry(v).or_insert_with(|| vec![0u64; nwords])[i / 64] |= 1 << (i % 64);
+        }
+    }
+    let mut r = PlaneSimResult::default();
+    for (v, mask) in by_val {
+        let pc: i64 = mask.iter().map(|m| m.count_ones() as i64).sum();
+        let mut plus = 0i64;
+        for (&m, &x) in mask.iter().zip(&xw) {
+            if m == 0 || x == 0 {
+                // popcount(0 & anything) = 0: skipping preserves value
+                r.words_skipped += 1;
+            } else {
+                plus += (m & x).count_ones() as i64;
+                r.words_visited += 1;
+                r.taps += m.count_ones() as u64;
+            }
+        }
+        r.value += v as i64 * (2 * plus - pc);
+    }
+    r
+}
+
 /// Layer-level cycle accounting for a serial PE array: with `pe` parallel
 /// dot-product units, `outputs` dot products of the given per-row cycle
 /// counts take ⌈outputs/pe⌉ waves, each as long as its slowest row.
@@ -203,6 +260,75 @@ mod tests {
             m.cycles,
             a.cycles
         );
+    }
+
+    #[test]
+    fn plane_arch_agrees_with_reference_and_accounts_every_word() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            // widths crossing word boundaries on purpose
+            let n = 1 + (rng.next_u64() % 200) as usize;
+            let w: Vec<i32> = (0..n)
+                .map(|_| match rng.next_u64() % 10 {
+                    0..=5 => 0,
+                    6 => 1,
+                    7 => -1,
+                    8 => 2,
+                    _ => -3,
+                })
+                .collect();
+            let x: Vec<i8> =
+                (0..n).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+            let x64: Vec<i64> = x.iter().map(|&v| v as i64).collect();
+            let r = bin_plane_arch(&w, &x);
+            assert_eq!(r.value, reference_dot(&w, &x64));
+            let groups = {
+                let mut vals: Vec<i32> = w.iter().copied().filter(|&v| v != 0).collect();
+                vals.sort_unstable();
+                vals.dedup();
+                vals.len() as u64
+            };
+            assert_eq!(r.words_visited + r.words_skipped, groups * n.div_ceil(64) as u64);
+        }
+    }
+
+    #[test]
+    fn plane_arch_matches_live_kernel_counters_at_b1() {
+        // the engine's skipping kernel must report exactly what the
+        // word-level simulator predicts for a single-sample block
+        use crate::hw::BinOps;
+        use crate::nn::batch::BitBlock;
+        use crate::nn::binary::BinaryDense;
+        let mut rng = Rng::new(6);
+        for _ in 0..20 {
+            let input = 1 + (rng.next_u64() % 190) as usize;
+            let output = 1 + (rng.next_u64() % 8) as usize;
+            let w: Vec<i32> = (0..input * output)
+                .map(|_| match rng.next_u64() % 10 {
+                    0..=5 => 0,
+                    6 => 1,
+                    7 => -1,
+                    _ => 2,
+                })
+                .collect();
+            let x: Vec<i8> =
+                (0..input).map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 }).collect();
+            let mut want = PlaneSimResult::default();
+            for o in 0..output {
+                let r = bin_plane_arch(&w[o * input..(o + 1) * input], &x);
+                want.words_visited += r.words_visited;
+                want.words_skipped += r.words_skipped;
+                want.taps += r.taps;
+            }
+            let bd = BinaryDense::compile(&w, &vec![0; output], input, output);
+            let rows = vec![x.iter().map(|&v| v as i64).collect::<Vec<i64>>()];
+            let blk = BitBlock::from_pm1_rows(&rows).unwrap();
+            let mut ops = BinOps::default();
+            bd.forward_block_ops(&blk, &mut ops);
+            assert_eq!(ops.plane_words_visited, want.words_visited);
+            assert_eq!(ops.plane_words_skipped, want.words_skipped);
+            assert_eq!(ops.taps, want.taps);
+        }
     }
 
     #[test]

@@ -4,9 +4,12 @@ pub mod dot_sim;
 pub mod lut_sim;
 pub mod report;
 
-pub use dot_sim::{add_only_arch, bin_accum_arch, bin_counter_arch, layer_cycles, mult_arch, SimResult};
+pub use dot_sim::{
+    add_only_arch, bin_accum_arch, bin_counter_arch, bin_plane_arch, layer_cycles, mult_arch,
+    PlaneSimResult, SimResult,
+};
 pub use lut_sim::{LutCost, LutRow};
-pub use report::{HwReport, InferenceCost, LayerHwReport};
+pub use report::{BinOps, HwReport, InferenceCost, LayerHwReport};
 
 /// Runtime AVX2 availability on this host. This is the same predicate
 /// [`crate::nn::simd::popcount_kernel`] dispatches on, exposed so the

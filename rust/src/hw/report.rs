@@ -3,7 +3,7 @@
 
 use super::dot_sim::layer_cycles;
 use crate::nn::model::{LayerSpec, ModelSpec};
-use crate::nn::pvq_engine::{QuantModel, SparseQuantLayer};
+use crate::nn::pvq_engine::{QuantLayer, QuantModel, SparseQuantLayer};
 
 /// Per-layer hardware accounting.
 #[derive(Clone, Debug)]
@@ -44,6 +44,57 @@ pub struct InferenceCost {
     pub cycles_addonly: u64,
 }
 
+/// Operations **actually performed** by the binary engine's bit-plane
+/// kernels over one forward block — the measured counterpart to the
+/// *predicted* [`InferenceCost`]. Where `InferenceCost` models the §VIII
+/// serial circuits from the weight structure alone, `BinOps` is counted
+/// live by the zero-plane-skipping kernels, so it reflects what the
+/// skipping actually saved on this input batch. Totals are per *block*
+/// (all samples of the batch), not per sample; the first integer layer
+/// and final argmax are outside the bit-plane kernels and uncounted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BinOps {
+    /// Weight-mask words fed to the AND+popcount lane kernel (nonzero
+    /// mask word × occupied activation plane).
+    pub plane_words_visited: u64,
+    /// Weight-mask words an unskipped traversal would have visited but
+    /// the skipping kernel did not: all-zero mask words (elided at
+    /// compile time) plus nonzero mask words whose activation plane held
+    /// no +1 bit in any sample. Always
+    /// `visited + skipped == rows × groups × words_per_row` — the
+    /// exactness invariant the property tests pin.
+    pub plane_words_skipped: u64,
+    /// Weight-bit taps applied: Σ popcount(mask word) over visited
+    /// words. Batch-independent, the live analogue of the add-only
+    /// architecture's per-pulse cycles.
+    pub taps: u64,
+    /// Lane accumulator updates performed: one per sample lane per
+    /// visited word (the popcount adds) plus one per sample lane per
+    /// value group (the `v·(2p−pc)` merge).
+    pub adds: u64,
+}
+
+impl BinOps {
+    /// Accumulate another counter set (layer → net → batch roll-up).
+    pub fn absorb(&mut self, o: &BinOps) {
+        self.plane_words_visited += o.plane_words_visited;
+        self.plane_words_skipped += o.plane_words_skipped;
+        self.taps += o.taps;
+        self.adds += o.adds;
+    }
+
+    /// Fraction of plane words skipped out of the unskipped traversal
+    /// total (0.0 when nothing was traversed).
+    pub fn skipped_frac(&self) -> f64 {
+        let total = self.plane_words_visited + self.plane_words_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.plane_words_skipped as f64 / total as f64
+        }
+    }
+}
+
 impl HwReport {
     /// Build from a quantized model. `image_hw` supplies the input
     /// geometry for conv nets (taken from the spec).
@@ -71,14 +122,12 @@ impl HwReport {
                         cyc_mult.push(nz);
                         cyc_add.push(pulses);
                     }
-                    let eg = crate::compress::expgolomb::bits_per_weight(&q.w)
-                        * q.w.len() as f64;
                     layers.push(LayerHwReport {
                         label: format!("FC{wi}"),
                         dots: *output as u64,
                         cycles_mult: layer_cycles(&cyc_mult, 1),
                         cycles_addonly: layer_cycles(&cyc_add, 1),
-                        storage_bits_eg: eg as u64,
+                        storage_bits_eg: dense_eg_bits(q),
                         storage_bits_f32: (q.w.len() as u64) * 32,
                     });
                     wi += 1;
@@ -107,14 +156,12 @@ impl HwReport {
                         cyc_mult.push(nz);
                         cyc_add.push(pulses);
                     }
-                    let eg = crate::compress::expgolomb::bits_per_weight(&q.w)
-                        * q.w.len() as f64;
                     layers.push(LayerHwReport {
                         label: format!("CONV{wi}"),
                         dots: positions * *cout as u64,
                         cycles_mult: positions * layer_cycles(&cyc_mult, 1),
                         cycles_addonly: positions * layer_cycles(&cyc_add, 1),
-                        storage_bits_eg: eg as u64,
+                        storage_bits_eg: dense_eg_bits(q),
                         storage_bits_f32: (q.w.len() as u64) * 32,
                     });
                     wi += 1;
@@ -134,8 +181,9 @@ impl HwReport {
     /// serving path computes its cost report without ever materializing
     /// dense weight buffers. Nonzero and pulse counts per output row
     /// come straight from the sparse arrays; the exp-Golomb storage
-    /// estimate charges 1 bit (`se(0)`) per absent weight plus the exact
-    /// code length of every pulse value.
+    /// figure charges 1 bit (`se(0)`) per absent weight or pyramid bias
+    /// plus the exact code length of every pulse value — bit-identical
+    /// to what [`HwReport::from_model`] charges on the dense form.
     pub fn from_sparse(spec: &ModelSpec, qlayers: &[Option<SparseQuantLayer>]) -> Self {
         let mut layers = Vec::new();
         let mut hw: Option<(usize, usize)> = match spec.input_shape.as_slice() {
@@ -260,12 +308,28 @@ impl HwReport {
     }
 }
 
+/// Exact signed exp-Golomb storage bits of a dense quantized layer:
+/// the sum of every weight's code length plus every pyramid-bias
+/// pulse's — the same definition [`sparse_eg_bits`] charges, so the two
+/// report paths agree bit for bit on the same model. (The old form
+/// multiplied the *average* bits/weight back by the count, losing
+/// fractional bits to f64 rounding, and ignored `b_pyramid` entirely.)
+fn dense_eg_bits(q: &QuantLayer) -> u64 {
+    use crate::compress::expgolomb::se_len;
+    q.w.iter().map(|&v| se_len(v as i64) as u64).sum::<u64>()
+        + q.b_pyramid.iter().map(|&v| se_len(v as i64) as u64).sum::<u64>()
+}
+
 /// Exact signed exp-Golomb weight-storage bits of a pulse-list layer:
-/// every absent weight is a 1-bit `se(0)`, every pulse its code length.
+/// every absent weight or pyramid bias is a 1-bit `se(0)`, every pulse
+/// its code length — identical to [`dense_eg_bits`] on the dense form
+/// of the same layer, since `se_len(0) == 1`.
 fn sparse_eg_bits(q: &SparseQuantLayer) -> u64 {
     use crate::compress::expgolomb::se_len;
     (q.wlen - q.w_val.len()) as u64
         + q.w_val.iter().map(|&v| se_len(v as i64) as u64).sum::<u64>()
+        + (q.b.len() - q.b_pyramid_val.len()) as u64
+        + q.b_pyramid_val.iter().map(|&v| se_len(v as i64) as u64).sum::<u64>()
 }
 
 #[cfg(test)]
@@ -355,16 +419,28 @@ mod tests {
             assert_eq!(s.cycles_mult, d.cycles_mult);
             assert_eq!(s.cycles_addonly, d.cycles_addonly);
             assert_eq!(s.storage_bits_f32, d.storage_bits_f32);
-            // the dense path rounds through f64; the sparse path is exact
-            assert!(
-                s.storage_bits_eg.abs_diff(d.storage_bits_eg) <= 1,
-                "{}: {} vs {}",
-                s.label,
-                s.storage_bits_eg,
-                d.storage_bits_eg
+            // both paths charge the exact per-value code-length sum
+            // (weights AND pyramid biases), so equality is bit-exact
+            assert_eq!(
+                s.storage_bits_eg, d.storage_bits_eg,
+                "{}: sparse vs dense EG bits",
+                s.label
             );
         }
         assert_eq!(sparse.inference_cost(), dense.inference_cost());
+    }
+
+    #[test]
+    fn dense_eg_bits_charges_biases_exactly() {
+        let q = quantized_mlp(11, 2.0);
+        for layer in q.quant_model.layers.iter().flatten() {
+            use crate::compress::expgolomb::se_len;
+            let weights: u64 = layer.w.iter().map(|&v| se_len(v as i64) as u64).sum();
+            let biases: u64 = layer.b_pyramid.iter().map(|&v| se_len(v as i64) as u64).sum();
+            assert_eq!(super::dense_eg_bits(layer), weights + biases);
+            // se_len(0) == 1, so the bias term is at least 1 bit/output
+            assert!(biases >= layer.b_pyramid.len() as u64);
+        }
     }
 
     #[test]

@@ -575,6 +575,31 @@ fn cmd_loadtest(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_bench_compare(flags: &HashMap<String, String>, paths: &[String]) -> Result<()> {
     use pvqnet::bench::{compare, BenchDoc};
 
+    // `--check-armed [FILE]`: sanity-check a baseline instead of
+    // comparing. A baseline that claims to be armed (advisory:false)
+    // but records no metrics would make every future gate vacuously
+    // green — exit nonzero so CI surfaces the broken arming.
+    if let Some(v) = flags.get("check-armed") {
+        let path = if v != "true" {
+            v.as_str()
+        } else {
+            paths.first().map(String::as_str).unwrap_or("bench/BASELINE.json")
+        };
+        let doc = BenchDoc::load(Path::new(path)).map_err(anyhow::Error::msg)?;
+        if !doc.advisory && doc.metrics.is_empty() {
+            bail!(
+                "{path}: baseline is armed (advisory:false) but records no metrics — \
+                 every gated comparison against it would pass vacuously; \
+                 re-record it with `cargo bench -- --baseline-out {path}`"
+            );
+        }
+        println!(
+            "{path}: {} baseline, {} metric(s) — ok",
+            if doc.advisory { "advisory" } else { "armed" },
+            doc.metrics.len()
+        );
+        return Ok(());
+    }
     if paths.len() < 2 {
         bail!(
             "bench-compare needs <BASELINE.json> <CURRENT.json>… (got {} path(s); \
@@ -651,7 +676,9 @@ fn main() -> Result<()> {
                             --max-conns N (default 4096 open connections)\n\
                             --max-inflight N (default 256)  --duration-s N\n\
                             (default: run until killed)  --slow-ms N (log slow\n\
-                            requests to stderr)  --trace [--trace-sample N]\n\
+                            requests to stderr; binary-engine lines carry the\n\
+                            plane words visited/skipped the batch performed)\n\
+                            --trace [--trace-sample N]\n\
                             --trace-out FILE (dump Chrome trace JSON on drain)\n\
                    loadtest: seeded load + fault harness, bitwise oracle, exits\n\
                             nonzero on any mismatch or silently dropped request:\n\
@@ -667,7 +694,10 @@ fn main() -> Result<()> {
                             verdict table vs a recorded baseline; exits nonzero\n\
                             when a gated hot-path metric regressed significantly.\n\
                             --min-effect PCT (default 5.0) sets the effect-size\n\
-                            floor. Record baselines with\n\
+                            floor. --check-armed [FILE] instead validates a\n\
+                            baseline (default bench/BASELINE.json): exits\n\
+                            nonzero if it is armed (advisory:false) yet\n\
+                            records no metrics. Record baselines with\n\
                             `cargo bench -- --baseline-out FILE`."
             );
         }

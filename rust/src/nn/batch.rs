@@ -149,6 +149,24 @@ pub struct BitBlock {
     batch: usize,
     /// `words[w*batch + s]` = 64-bit plane `w` of sample `s`, LSB-first.
     pub(crate) words: Vec<u64>,
+    /// Plane-occupancy mask: bit `w` of `occ[w / 64]` is set ⇔ plane `w`
+    /// has at least one nonzero sample word (some sample has a +1 in
+    /// those 64 features). Computed once at pack time; the binary
+    /// engine's skipping kernel consults it per weight-mask word to
+    /// avoid AND+popcount sweeps whose activation operand is all-zero —
+    /// which is result-preserving because such sweeps add nothing.
+    occ: Vec<u64>,
+}
+
+/// Derive the plane-occupancy mask from a packed word panel.
+fn plane_occupancy(words: &[u64], nwords: usize, batch: usize) -> Vec<u64> {
+    let mut occ = vec![0u64; nwords.div_ceil(64)];
+    for w in 0..nwords {
+        if super::simd::or_words(&words[w * batch..(w + 1) * batch]) != 0 {
+            occ[w / 64] |= 1 << (w % 64);
+        }
+    }
+    occ
 }
 
 impl BitBlock {
@@ -167,7 +185,8 @@ impl BitBlock {
                 }
             }
         }
-        BitBlock { len: features, batch, words }
+        let occ = plane_occupancy(&words, nwords, batch);
+        BitBlock { len: features, batch, words, occ }
     }
 
     /// Pack row-major ±1 samples. Errors on an empty batch, ragged
@@ -192,7 +211,8 @@ impl BitBlock {
                 }
             }
         }
-        Ok(BitBlock { len, batch, words })
+        let occ = plane_occupancy(&words, nwords, batch);
+        Ok(BitBlock { len, batch, words, occ })
     }
 
     /// Samples in the block.
@@ -213,6 +233,13 @@ impl BitBlock {
     /// The `B` contiguous sample words of 64-bit plane `w`.
     pub fn plane(&self, w: usize) -> &[u64] {
         &self.words[w * self.batch..(w + 1) * self.batch]
+    }
+
+    /// True ⇔ plane `w` has at least one nonzero sample word. O(1): a
+    /// bit test against the pack-time occupancy mask.
+    #[inline]
+    pub fn plane_occupied(&self, w: usize) -> bool {
+        self.occ[w / 64] >> (w % 64) & 1 == 1
     }
 
     /// Unpack sample `s` to ±1 values (test/debug readout).
@@ -280,6 +307,26 @@ mod tests {
     fn bitblock_rejects_non_pm1() {
         assert!(BitBlock::from_pm1_rows(&[vec![1, 0, -1]]).is_err());
         assert!(BitBlock::from_pm1_rows(&[]).is_err());
+    }
+
+    #[test]
+    fn plane_occupancy_tracks_nonzero_words() {
+        // 130 features = 3 planes (the last partial); all-(-1) rows pack
+        // to zero words, so occupancy is exactly "some sample hit the
+        // plane"
+        let mut rows = vec![vec![-1i64; 130]; 3];
+        rows[1][0] = 1; // plane 0
+        rows[2][129] = 1; // plane 2 (partial trailing word)
+        let blk = BitBlock::from_pm1_rows(&rows).unwrap();
+        assert!(blk.plane_occupied(0));
+        assert!(!blk.plane_occupied(1));
+        assert!(blk.plane_occupied(2));
+
+        // from_signs: negatives clear bits, zeros/positives set them
+        let all_neg = BitBlock::from_signs(&[-1, -2, -3, -4], 2, 2);
+        assert!(!all_neg.plane_occupied(0));
+        let one_pos = BitBlock::from_signs(&[-1, -2, 3, -4], 2, 2);
+        assert!(one_pos.plane_occupied(0));
     }
 
     #[test]

@@ -21,10 +21,34 @@
 //! goes through [`crate::nn::simd::and_popcount_lanes`], which takes
 //! the AVX2 path on hosts that have it. Both are bitwise identical to
 //! the scalar path for every shard count.
+//!
+//! # Zero-plane skipping
+//!
+//! Most weight bits are zero even after PVQ (the follow-up bit-level
+//! sparsity paper), so the batched kernels skip plane words that are
+//! all-zero in **either** operand:
+//!
+//! * weight side — each group's nonzero mask-word indices are
+//!   precomputed at compile time ([`BinGroup::nz_words`]), so all-zero
+//!   weight words are never even branched on in the hot loop;
+//! * activation side — [`crate::nn::batch::BitBlock`] carries a pack-time
+//!   plane-occupancy mask, and the kernel consults
+//!   `plane_occupied(w)` before the AND+popcount sweep.
+//!
+//! Skipping is **result-preserving by construction**: a plane word that
+//! is zero on either side contributes `popcount(0) = 0` to every lane,
+//! so eliding the sweep cannot change any accumulator. The skipping
+//! kernels also count what they actually did ([`crate::hw::BinOps`]:
+//! plane words visited vs skipped, weight taps applied, lane adds
+//! performed) — the live ops-actually-performed counterpart to the
+//! *predicted* [`crate::hw::InferenceCost`], at the cost of a few
+//! shard-local integer increments folded into per-shard atomics.
 
 use super::parallel::{for_each_shard, ShardPlan};
 use super::simd;
+use crate::hw::BinOps;
 use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// ±1 activations packed as a "+1 positions" bitmask.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,14 +81,78 @@ impl BitVec {
     }
 }
 
+/// One per-value weight group of an output row: the +1-position mask of
+/// the inputs weight value `v` touches, with its compile-time skipping
+/// metadata.
+#[derive(Clone, Debug)]
+struct BinGroup {
+    /// Signed weight value.
+    v: i32,
+    /// +1-position mask over the row's inputs, one word per 64 features.
+    mask: Vec<u64>,
+    /// popcount of the whole mask (Σ over words).
+    pc: u32,
+    /// Indices of the nonzero mask words — the only words the skipping
+    /// kernel iterates; all-zero weight words are elided here at
+    /// compile time.
+    nz_words: Vec<u32>,
+}
+
 /// One output row: weights grouped by signed value into position masks.
 #[derive(Clone, Debug)]
 struct BinRow {
-    /// (signed weight value v, +1-position mask of the inputs it touches,
-    ///  popcount of that mask)
-    groups: Vec<(i32, Vec<u64>, u32)>,
+    groups: Vec<BinGroup>,
     /// integer bias
     bias: i32,
+}
+
+/// Finish a row's per-value masks into [`BinGroup`]s (popcounts +
+/// nonzero-word index lists). Shared by both compile paths so dense and
+/// pulse-list compilation produce identical skipping structure.
+fn build_groups(by_val: std::collections::BTreeMap<i32, Vec<u64>>) -> Vec<BinGroup> {
+    by_val
+        .into_iter()
+        .map(|(v, mask)| {
+            let pc: u32 = mask.iter().map(|w| w.count_ones()).sum();
+            let nz_words: Vec<u32> = mask
+                .iter()
+                .enumerate()
+                .filter(|&(_, &m)| m != 0)
+                .map(|(w, _)| w as u32)
+                .collect();
+            BinGroup { v, mask, pc, nz_words }
+        })
+        .collect()
+}
+
+/// Shard-shared accumulator cells for the ops-actually-performed
+/// counters: each shard tallies into locals and folds them in with one
+/// `fetch_add` per cell when it finishes, so the hot loop never touches
+/// an atomic.
+#[derive(Default)]
+struct OpsCells {
+    visited: AtomicU64,
+    skipped: AtomicU64,
+    taps: AtomicU64,
+    adds: AtomicU64,
+}
+
+impl OpsCells {
+    fn fold(&self, visited: u64, skipped: u64, taps: u64, adds: u64) {
+        self.visited.fetch_add(visited, Ordering::Relaxed);
+        self.skipped.fetch_add(skipped, Ordering::Relaxed);
+        self.taps.fetch_add(taps, Ordering::Relaxed);
+        self.adds.fetch_add(adds, Ordering::Relaxed);
+    }
+
+    fn take(self) -> BinOps {
+        BinOps {
+            plane_words_visited: self.visited.into_inner(),
+            plane_words_skipped: self.skipped.into_inner(),
+            taps: self.taps.into_inner(),
+            adds: self.adds.into_inner(),
+        }
+    }
 }
 
 /// A bit-packed binary PVQ dense layer.
@@ -98,14 +186,7 @@ impl BinaryDense {
                     mask[i / 64] |= 1 << (i % 64);
                 }
             }
-            let groups = by_val
-                .into_iter()
-                .map(|(v, mask)| {
-                    let pc: u32 = mask.iter().map(|w| w.count_ones()).sum();
-                    (v, mask, pc)
-                })
-                .collect();
-            rows.push(BinRow { groups, bias: b[o] });
+            rows.push(BinRow { groups: build_groups(by_val), bias: b[o] });
         }
         BinaryDense { input, output, rows, plan: ShardPlan::single(output) }
     }
@@ -138,14 +219,7 @@ impl BinaryDense {
                 mask[i / 64] |= 1 << (i % 64);
                 t += 1;
             }
-            let groups = by_val
-                .into_iter()
-                .map(|(v, mask)| {
-                    let pc: u32 = mask.iter().map(|w| w.count_ones()).sum();
-                    (v, mask, pc)
-                })
-                .collect();
-            rows.push(BinRow { groups, bias: b[o] });
+            rows.push(BinRow { groups: build_groups(by_val), bias: b[o] });
         }
         BinaryDense { input, output, rows, plan: ShardPlan::single(output) }
     }
@@ -159,29 +233,27 @@ impl BinaryDense {
         let words: Vec<u64> = self
             .rows
             .iter()
-            .map(|r| {
-                r.groups
-                    .iter()
-                    .map(|(_, mask, _)| mask.iter().filter(|&&m| m != 0).count() as u64)
-                    .sum()
-            })
+            .map(|r| r.groups.iter().map(|g| g.nz_words.len() as u64).sum())
             .collect();
         self.plan = ShardPlan::balanced_capped(&words, shards);
     }
 
-    /// y = ŵ·x + b̂ for ±1 packed input — popcount path.
+    /// y = ŵ·x + b̂ for ±1 packed input — popcount path. Walks every
+    /// mask word unconditionally: this is the *unskipped* reference the
+    /// skipping block kernel must match bit for bit (and the word count
+    /// its `visited + skipped` invariant is defined against).
     pub fn forward(&self, x: &BitVec) -> Vec<i64> {
         debug_assert_eq!(x.len, self.input);
         let mut y = Vec::with_capacity(self.output);
         for row in &self.rows {
             let mut acc = row.bias as i64;
-            for (v, mask, pc) in &row.groups {
+            for g in &row.groups {
                 let mut plus = 0u32;
-                for (m, xw) in mask.iter().zip(&x.words) {
+                for (m, xw) in g.mask.iter().zip(&x.words) {
                     plus += (m & xw).count_ones();
                 }
                 // Σ v·x over mask = v·(plus − minus) = v·(2·plus − pc)
-                acc += *v as i64 * (2 * plus as i64 - *pc as i64);
+                acc += g.v as i64 * (2 * plus as i64 - g.pc as i64);
             }
             y.push(acc);
         }
@@ -211,32 +283,59 @@ impl BinaryDense {
     /// identical to `B` independent [`BinaryDense::forward`] calls for
     /// every shard count.
     pub fn forward_block(&self, x: &crate::nn::batch::BitBlock) -> Vec<i64> {
+        let mut ops = BinOps::default();
+        self.forward_block_ops(x, &mut ops)
+    }
+
+    /// [`BinaryDense::forward_block`] with zero-plane skipping made
+    /// observable: the kernel skips mask words that are all-zero in
+    /// either operand (weight-side via the compile-time [`BinGroup`]
+    /// nonzero-word lists, activation-side via the block's pack-time
+    /// plane-occupancy mask) and accumulates what it actually did into
+    /// `ops`. Identical output to the unskipped traversal — a zero word
+    /// on either side adds `popcount(0) = 0` to every lane — and
+    /// `visited + skipped` always equals the unskipped word count
+    /// ([`BinaryDense::plane_words_total`]).
+    pub fn forward_block_ops(&self, x: &crate::nn::batch::BitBlock, ops: &mut BinOps) -> Vec<i64> {
         debug_assert_eq!(x.len(), self.input);
         let b = x.batch();
         let mut y = vec![0i64; self.output * b];
         // resolve the SIMD dispatch once, not per mask word
         let popcount = simd::popcount_kernel();
+        let cells = OpsCells::default();
         for_each_shard(&self.plan, &mut y, b, |rows, chunk| {
             let mut plus = vec![0u32; b]; // per-shard scratch
+            let (mut visited, mut skipped, mut taps, mut groups) = (0u64, 0u64, 0u64, 0u64);
             for (ri, o) in rows.enumerate() {
                 let row = &self.rows[o];
                 let dst = &mut chunk[ri * b..(ri + 1) * b];
                 dst.fill(row.bias as i64);
-                for (v, mask, pc) in &row.groups {
+                for g in &row.groups {
                     plus.fill(0);
-                    for (w, &m) in mask.iter().enumerate() {
-                        if m == 0 {
-                            continue;
+                    // all-zero weight words were elided at compile time
+                    skipped += (g.mask.len() - g.nz_words.len()) as u64;
+                    for &w in &g.nz_words {
+                        let w = w as usize;
+                        if x.plane_occupied(w) {
+                            popcount(g.mask[w], x.plane(w), &mut plus);
+                            visited += 1;
+                            taps += g.mask[w].count_ones() as u64;
+                        } else {
+                            skipped += 1;
                         }
-                        popcount(m, x.plane(w), &mut plus);
                     }
-                    let (v, pc) = (*v as i64, *pc as i64);
+                    groups += 1;
+                    let (v, pc) = (g.v as i64, g.pc as i64);
                     for (acc, &p) in dst.iter_mut().zip(plus.iter()) {
                         *acc += v * (2 * p as i64 - pc);
                     }
                 }
             }
+            // adds: B popcount accumulates per visited word + B merge
+            // adds per group
+            cells.fold(visited, skipped, taps, (visited + groups) * b as u64);
         });
+        ops.absorb(&cells.take());
         y
     }
 
@@ -246,8 +345,33 @@ impl BinaryDense {
         &self,
         x: &crate::nn::batch::BitBlock,
     ) -> crate::nn::batch::BitBlock {
-        let y = self.forward_block(x);
+        let mut ops = BinOps::default();
+        self.forward_bsign_block_ops(x, &mut ops)
+    }
+
+    /// [`BinaryDense::forward_bsign_block`] accumulating ops counters.
+    pub fn forward_bsign_block_ops(
+        &self,
+        x: &crate::nn::batch::BitBlock,
+        ops: &mut BinOps,
+    ) -> crate::nn::batch::BitBlock {
+        let y = self.forward_block_ops(x, ops);
         crate::nn::batch::BitBlock::from_signs(&y, self.output, x.batch())
+    }
+
+    /// Mask words one *unskipped* block traversal of this layer walks:
+    /// `Σ_rows groups × words_per_row`. The denominator of the skipping
+    /// counters' exactness invariant
+    /// (`visited + skipped == plane_words_total`).
+    pub fn plane_words_total(&self) -> u64 {
+        let words_per_row = self.input.div_ceil(64) as u64;
+        self.rows.iter().map(|r| r.groups.len() as u64 * words_per_row).sum()
+    }
+
+    /// Per-value groups across all output rows (each contributes one
+    /// batch-wide merge add per lane in the block kernel).
+    pub fn groups_total(&self) -> u64 {
+        self.rows.iter().map(|r| r.groups.len() as u64).sum()
     }
 }
 
@@ -493,6 +617,16 @@ impl BinaryNet {
     /// accumulation order; property-tested in
     /// `tests/batch_equivalence.rs`).
     pub fn forward_block_u8(&self, samples: &[&[u8]]) -> Result<Vec<Vec<i64>>> {
+        Ok(self.forward_block_u8_ops(samples)?.0)
+    }
+
+    /// [`BinaryNet::forward_block_u8`] returning the block's
+    /// ops-actually-performed counters alongside the logits: the
+    /// [`BinOps`] accumulated by every bit-plane layer's skipping
+    /// kernel (the integer first layer and the argmax are outside the
+    /// plane kernels and uncounted). Totals are per block, not per
+    /// sample.
+    pub fn forward_block_u8_ops(&self, samples: &[&[u8]]) -> Result<(Vec<Vec<i64>>, BinOps)> {
         use crate::nn::batch::{ActivationBlock, BitBlock};
         let block = ActivationBlock::from_samples_u8(samples)?;
         if block.features() != self.input_len {
@@ -517,23 +651,46 @@ impl BinaryNet {
         });
 
         // bsign + popcount chain on packed planes
+        let mut ops = BinOps::default();
         let mut bits = BitBlock::from_signs(&h, self.first_out, b);
         for layer in &self.hidden {
-            bits = layer.forward_bsign_block(&bits);
+            bits = layer.forward_bsign_block_ops(&bits, &mut ops);
         }
-        let y = self.last.forward_block(&bits);
-        Ok((0..b)
+        let y = self.last.forward_block_ops(&bits, &mut ops);
+        let logits = (0..b)
             .map(|s| (0..self.outputs).map(|o| y[o * b + s]).collect())
-            .collect())
+            .collect();
+        Ok((logits, ops))
     }
 
     /// Classify a micro-batch through [`BinaryNet::forward_block_u8`].
     pub fn classify_block_u8(&self, samples: &[&[u8]]) -> Result<Vec<usize>> {
-        Ok(self
-            .forward_block_u8(samples)?
-            .iter()
-            .map(|logits| crate::nn::tensor::argmax_i64(logits))
-            .collect())
+        Ok(self.classify_block_u8_ops(samples)?.0)
+    }
+
+    /// [`BinaryNet::classify_block_u8`] returning the block's
+    /// [`BinOps`] counters — what the serving path records into compute
+    /// spans and `/metrics`.
+    pub fn classify_block_u8_ops(&self, samples: &[&[u8]]) -> Result<(Vec<usize>, BinOps)> {
+        let (logits, ops) = self.forward_block_u8_ops(samples)?;
+        Ok((
+            logits.iter().map(|l| crate::nn::tensor::argmax_i64(l)).collect(),
+            ops,
+        ))
+    }
+
+    /// Mask words one unskipped block traversal of the whole bit-plane
+    /// chain walks (hidden layers + readout) — the fixed denominator of
+    /// `visited + skipped` for any batch size.
+    pub fn plane_words_total(&self) -> u64 {
+        self.hidden.iter().map(|l| l.plane_words_total()).sum::<u64>()
+            + self.last.plane_words_total()
+    }
+
+    /// Per-value groups across the bit-plane chain (for the `adds`
+    /// counter invariant: `adds == (visited + groups_total) × B`).
+    pub fn groups_total(&self) -> u64 {
+        self.hidden.iter().map(|l| l.groups_total()).sum::<u64>() + self.last.groups_total()
     }
 }
 
@@ -684,6 +841,100 @@ mod tests {
         // ragged / wrong-length batches error out
         assert!(net.forward_block_u8(&[&[0u8; 3]]).is_err());
         assert!(net.forward_block_u8(&[]).is_err());
+    }
+
+    #[test]
+    fn block_ops_counters_exact_on_partial_trailing_words() {
+        use crate::nn::layers::Model;
+        use crate::nn::model::{Activation, LayerSpec, ModelSpec};
+        use crate::pvq::RhoMode;
+        use crate::quant::quantize;
+
+        // same 70/65/33/7 shapes as binary_net_block_matches_scalar:
+        // every bit-plane layer ends in a partial trailing word
+        let spec = ModelSpec {
+            name: "binops".into(),
+            input_shape: vec![70],
+            layers: vec![
+                LayerSpec::Dense { input: 70, output: 65, act: Activation::BSign },
+                LayerSpec::Dense { input: 65, output: 33, act: Activation::BSign },
+                LayerSpec::Dense { input: 33, output: 7, act: Activation::None },
+            ],
+        };
+        let m = Model::synth(&spec, 5);
+        let qm = quantize(&m, &[2.0, 1.5, 1.0], RhoMode::Norm).unwrap().quant_model;
+        let net = BinaryNet::compile(&qm).unwrap();
+        let total = net.plane_words_total();
+        let groups = net.groups_total();
+        assert!(total > 0 && groups > 0);
+        let mut rng = Rng::new(77);
+        for b in [1usize, 3, 9] {
+            let samples: Vec<Vec<u8>> =
+                (0..b).map(|_| (0..70).map(|_| rng.below(256) as u8).collect()).collect();
+            let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
+            let (logits, ops) = net.forward_block_u8_ops(&views).unwrap();
+            // outputs unchanged by skipping: bitwise equal to the
+            // unskipped scalar reference
+            for (s, sample) in samples.iter().enumerate() {
+                assert_eq!(logits[s], net.forward_u8(sample).unwrap(), "B={b} sample {s}");
+            }
+            // exactness: every unskipped word is accounted visited XOR
+            // skipped, for every batch size
+            assert_eq!(
+                ops.plane_words_visited + ops.plane_words_skipped,
+                total,
+                "B={b}"
+            );
+            assert_eq!(ops.adds, (ops.plane_words_visited + groups) * b as u64, "B={b}");
+            assert!(ops.taps > 0, "B={b}");
+            // PVQ weights are mostly zero → some words must be skipped
+            assert!(ops.plane_words_skipped > 0, "B={b}");
+        }
+    }
+
+    #[test]
+    fn dense_ops_match_hand_counted_masks() {
+        // crafted weights: row 0 = [1 at feature 0, 1 at feature 64],
+        // row 1 = [-2 at feature 1] over 70 inputs (2 plane words)
+        let mut w = vec![0i32; 70 * 2];
+        w[0] = 1;
+        w[64] = 1;
+        w[70 + 1] = -2;
+        let bd = BinaryDense::compile(&w, &[0, 0], 70, 2);
+        // 2 groups: row0 {v=1: nz words 0,1}, row1 {v=−2: nz word 0};
+        // unskipped traversal = 2 groups × 2 words = 4
+        assert_eq!(bd.groups_total(), 2);
+        assert_eq!(bd.plane_words_total(), 4);
+
+        // all-(+1) activations: every plane occupied, every nz word
+        // visited → visited = 3 nz words, skipped = 1 zero weight word,
+        // taps = popcounts of visited words = 1 + 1 + 1
+        let rows = vec![vec![1i64; 70]; 4];
+        let blk = crate::nn::batch::BitBlock::from_pm1_rows(&rows).unwrap();
+        let mut ops = BinOps::default();
+        let y = bd.forward_block_ops(&blk, &mut ops);
+        assert_eq!(ops.plane_words_visited, 3);
+        assert_eq!(ops.plane_words_skipped, 1);
+        assert_eq!(ops.taps, 3);
+        assert_eq!(ops.adds, (3 + 2) * 4);
+        assert!((ops.skipped_frac() - 0.25).abs() < 1e-12);
+        // row 0: 1·x0 + 1·x64 = 2; row 1: −2·x1 = −2, for all 4 lanes
+        assert_eq!(&y[..4], &[2, 2, 2, 2]);
+        assert_eq!(&y[4..], &[-2, -2, -2, -2]);
+
+        // all-(−1) activations: zero activation planes → everything
+        // skipped, outputs still exact
+        let rows = vec![vec![-1i64; 70]; 2];
+        let blk = crate::nn::batch::BitBlock::from_pm1_rows(&rows).unwrap();
+        let mut ops = BinOps::default();
+        let y = bd.forward_block_ops(&blk, &mut ops);
+        assert_eq!(ops.plane_words_visited, 0);
+        assert_eq!(ops.plane_words_skipped, 4);
+        assert_eq!(ops.taps, 0);
+        assert_eq!(ops.adds, 2 * 2); // merge adds still happen
+        assert_eq!(ops.skipped_frac(), 1.0);
+        assert_eq!(&y[..2], &[-2, -2]);
+        assert_eq!(&y[2..], &[2, 2]);
     }
 
     #[test]

@@ -215,7 +215,7 @@ where
             timings[i].0.load(Ordering::Relaxed),
             timings[i].1.load(Ordering::Relaxed),
             0,
-            [i as u64, range.len() as u64, plan.range_weights[i]],
+            [i as u64, range.len() as u64, plan.range_weights[i], 0, 0],
         );
     }
 }

@@ -76,9 +76,17 @@ pub type PopcountFn = fn(u64, &[u64], &mut [u32]);
 
 /// Resolve the AND+popcount lane kernel for this host **once**: the
 /// AVX2 path when the CPU supports it, the portable loop otherwise.
-/// The binary engine hoists this call out of its hot loop so the
-/// feature-detection branch is not re-taken per mask word.
+/// The result is cached in a `OnceLock`, so after the first call this
+/// is a relaxed atomic load — cheap enough for non-hoisting call sites,
+/// though hot loops still hoist it to keep the indirect call out of the
+/// inner loop entirely.
 pub fn popcount_kernel() -> PopcountFn {
+    static KERNEL: std::sync::OnceLock<PopcountFn> = std::sync::OnceLock::new();
+    *KERNEL.get_or_init(resolve_popcount_kernel)
+}
+
+/// One-time feature-detection resolve backing [`popcount_kernel`].
+fn resolve_popcount_kernel() -> PopcountFn {
     #[cfg(target_arch = "x86_64")]
     {
         if std::is_x86_feature_detected!("avx2") {
@@ -91,9 +99,11 @@ pub fn popcount_kernel() -> PopcountFn {
 
 /// `plus[s] += popcount(m & x[s])` for every lane `s` — one weight-mask
 /// word ANDed against the `B` packed activation words of a bit-plane
-/// (the binary engine's inner loop). Convenience wrapper around
-/// [`popcount_kernel`] that re-resolves the dispatch per call; hot
-/// loops should resolve once instead. Both paths are bitwise identical.
+/// (the binary engine's inner loop). Convenience wrapper around the
+/// `OnceLock`-cached [`popcount_kernel`]. Both paths are bitwise
+/// identical, and both skip the whole lane sweep when `m == 0` — a
+/// zero mask word contributes nothing, so the early-out cannot change
+/// results (the plane-skipping invariant the binary engine builds on).
 #[inline]
 pub fn and_popcount_lanes(m: u64, x: &[u64], plus: &mut [u32]) {
     debug_assert_eq!(x.len(), plus.len());
@@ -103,9 +113,23 @@ pub fn and_popcount_lanes(m: u64, x: &[u64], plus: &mut [u32]) {
 /// Portable reference path of [`and_popcount_lanes`].
 #[inline]
 fn and_popcount_lanes_scalar(m: u64, x: &[u64], plus: &mut [u32]) {
+    if m == 0 {
+        return;
+    }
     for (p, &xw) in plus.iter_mut().zip(x) {
         *p += (m & xw).count_ones();
     }
+}
+
+/// OR-reduce of a plane's packed sample words: nonzero ⇔ at least one
+/// sample has a +1 bit in this 64-feature plane. [`BitBlock`] uses this
+/// to build its plane-occupancy mask at pack time so the binary engine
+/// can skip activation-empty planes without touching them per row.
+///
+/// [`BitBlock`]: crate::nn::batch::BitBlock
+#[inline]
+pub fn or_words(words: &[u64]) -> u64 {
+    words.iter().fold(0u64, |acc, &w| acc | w)
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -122,6 +146,9 @@ mod x86 {
     /// (`is_x86_feature_detected!("avx2")`).
     #[target_feature(enable = "avx2")]
     pub unsafe fn and_popcount_lanes_avx2(m: u64, x: &[u64], plus: &mut [u32]) {
+        if m == 0 {
+            return; // AND with zero adds nothing; mirror the scalar early-out
+        }
         #[rustfmt::skip]
         let lut = _mm256_setr_epi8(
             0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
@@ -207,5 +234,21 @@ mod tests {
         assert_eq!(plus, vec![64, 0, 1, 8, 64, 2]);
         and_popcount_lanes(0, &x, &mut plus);
         assert_eq!(plus, vec![64, 0, 1, 8, 64, 2]); // mask 0 adds nothing
+    }
+
+    #[test]
+    fn popcount_kernel_is_cached_and_stable() {
+        // the OnceLock must hand back the same resolved fn every call —
+        // the per-call feature-detection regression this pins against
+        let a = popcount_kernel();
+        let b = popcount_kernel();
+        assert_eq!(a as usize, b as usize);
+    }
+
+    #[test]
+    fn or_words_known_values() {
+        assert_eq!(or_words(&[]), 0);
+        assert_eq!(or_words(&[0, 0, 0]), 0);
+        assert_eq!(or_words(&[0b0001, 0b1000, 0]), 0b1001);
     }
 }

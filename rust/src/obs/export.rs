@@ -52,6 +52,14 @@ pub fn chrome_trace(rec: &Recorder) -> String {
                     Json::Num(span.arg_b as f64),
                 ));
                 args.push(("predicted_dots".into(), Json::Num(span.arg_c as f64)));
+                args.push((
+                    "plane_words_visited".into(),
+                    Json::Num(span.arg_d as f64),
+                ));
+                args.push((
+                    "plane_words_skipped".into(),
+                    Json::Num(span.arg_e as f64),
+                ));
             }
             Stage::Shard => {
                 args.push(("shard".into(), Json::Num(span.arg_a as f64)));

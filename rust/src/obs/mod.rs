@@ -148,7 +148,7 @@ pub fn record_span_at(
     start_us: u64,
     dur_us: u64,
     model: u32,
-    args: [u64; 3],
+    args: [u64; 5],
 ) {
     if !enabled() || !ctx.sampled {
         return;
@@ -164,13 +164,15 @@ pub fn record_span_at(
             arg_a: args[0],
             arg_b: args[1],
             arg_c: args[2],
+            arg_d: args[3],
+            arg_e: args[4],
         });
     });
 }
 
 /// Record a span that started at instant `start` and ends now. No-op
 /// unless tracing is enabled and `ctx` is sampled.
-pub fn span_since(ctx: TraceCtx, stage: Stage, start: Instant, model: u32, args: [u64; 3]) {
+pub fn span_since(ctx: TraceCtx, stage: Stage, start: Instant, model: u32, args: [u64; 5]) {
     if !enabled() || !ctx.sampled {
         return;
     }

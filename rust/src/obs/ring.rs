@@ -5,7 +5,7 @@
 //! `docs/ARCHITECTURE.md` §Observability):
 //!
 //! * **Writers never block.** Each recording thread owns one
-//!   [`SpanRing`]; a record is nine atomic stores, no locks, no
+//!   [`SpanRing`]; a record is eleven atomic stores, no locks, no
 //!   allocation. The registry of rings is behind a `Mutex`, but it is
 //!   touched once per thread (registration), never per span.
 //! * **Memory is bounded.** A ring holds a fixed number of slots
@@ -30,7 +30,7 @@ use std::time::Instant;
 pub const DEFAULT_RING_CAP: usize = 4096;
 
 /// Max rings (≈ recording threads) per recorder. Total span memory is
-/// hard-bounded at `max_rings × cap × 72 B`; rings are allocated lazily
+/// hard-bounded at `max_rings × cap × 88 B`; rings are allocated lazily
 /// per recording thread, so a typical server (< 20 recording threads)
 /// stays far below the bound.
 pub const DEFAULT_MAX_RINGS: usize = 256;
@@ -54,6 +54,8 @@ struct Slot {
     a: AtomicU64,
     b: AtomicU64,
     c: AtomicU64,
+    d: AtomicU64,
+    e: AtomicU64,
     /// XOR of all payload fields and the generation seed; lets the
     /// reader reject a snapshot that mixed generations even in the
     /// theoretical window the seqlock re-check cannot order.
@@ -71,6 +73,8 @@ impl Slot {
             a: AtomicU64::new(0),
             b: AtomicU64::new(0),
             c: AtomicU64::new(0),
+            d: AtomicU64::new(0),
+            e: AtomicU64::new(0),
             check: AtomicU64::new(0),
         }
     }
@@ -86,8 +90,10 @@ fn checksum(
     a: u64,
     b: u64,
     c: u64,
+    d: u64,
+    e: u64,
 ) -> u64 {
-    generation.wrapping_mul(CHECK_SEED) ^ trace ^ start ^ dur ^ meta ^ a ^ b ^ c
+    generation.wrapping_mul(CHECK_SEED) ^ trace ^ start ^ dur ^ meta ^ a ^ b ^ c ^ d ^ e
 }
 
 /// A single-writer span ring. The registering thread is the only
@@ -142,8 +148,13 @@ impl SpanRing {
         slot.a.store(r.arg_a, Ordering::Relaxed);
         slot.b.store(r.arg_b, Ordering::Relaxed);
         slot.c.store(r.arg_c, Ordering::Relaxed);
+        slot.d.store(r.arg_d, Ordering::Relaxed);
+        slot.e.store(r.arg_e, Ordering::Relaxed);
         slot.check.store(
-            checksum(h, r.trace_id, r.start_us, r.dur_us, meta, r.arg_a, r.arg_b, r.arg_c),
+            checksum(
+                h, r.trace_id, r.start_us, r.dur_us, meta, r.arg_a, r.arg_b, r.arg_c, r.arg_d,
+                r.arg_e,
+            ),
             Ordering::Relaxed,
         );
         slot.seq.store(2 * h + 2, Ordering::Release); // published
@@ -166,6 +177,8 @@ impl SpanRing {
             let a = slot.a.load(Ordering::Relaxed);
             let b = slot.b.load(Ordering::Relaxed);
             let c = slot.c.load(Ordering::Relaxed);
+            let d = slot.d.load(Ordering::Relaxed);
+            let e = slot.e.load(Ordering::Relaxed);
             let check = slot.check.load(Ordering::Relaxed);
             let s2 = slot.seq.load(Ordering::Acquire);
             if s1 != s2 {
@@ -174,7 +187,7 @@ impl SpanRing {
             // generation-keyed integrity check: rejects mixed reads the
             // seq re-check alone cannot rule out
             let generation = s1 / 2 - 1;
-            if check != checksum(generation, trace, start, dur, meta, a, b, c) {
+            if check != checksum(generation, trace, start, dur, meta, a, b, c, d, e) {
                 continue;
             }
             let Some(stage) = Stage::from_u8((meta & 0xFF) as u8) else { continue };
@@ -188,6 +201,8 @@ impl SpanRing {
                 arg_a: a,
                 arg_b: b,
                 arg_c: c,
+                arg_d: d,
+                arg_e: e,
             });
         }
     }

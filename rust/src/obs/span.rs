@@ -2,7 +2,7 @@
 //! fixed-size span record the ring buffer stores.
 //!
 //! A *span* is one timed interval of one request's journey through the
-//! serving stack. Records are plain-old-data (`Copy`, nine 64-bit-or-
+//! serving stack. Records are plain-old-data (`Copy`, eleven 64-bit-or-
 //! smaller fields) so the recorder can publish them field-by-field
 //! through atomics without ever taking a lock on the hot path.
 
@@ -130,4 +130,11 @@ pub struct SpanRecord {
     /// Stage-specific argument C. Compute: predicted dot products per
     /// inference; Shard: planner work estimate for the shard.
     pub arg_c: u64,
+    /// Stage-specific argument D. Compute: bit-plane words actually
+    /// visited by the skipping kernels over the batch's block
+    /// ([`crate::hw::BinOps`]; 0 for engines without plane kernels).
+    pub arg_d: u64,
+    /// Stage-specific argument E. Compute: bit-plane words skipped
+    /// (all-zero in either operand) over the batch's block.
+    pub arg_e: u64,
 }

@@ -132,6 +132,15 @@ fn prop_binary_net_block_bitwise_identical() {
                 assert_eq!(got[s], net.forward_u8(sample).unwrap(), "B={b} sample {s}");
                 assert_eq!(classes[s], net.classify_u8(sample).unwrap(), "B={b} sample {s}");
             }
+            // the metered path is the same kernel: identical logits,
+            // and its skip accounting covers every plane word exactly
+            let (metered, ops) = net.forward_block_u8_ops(&views).unwrap();
+            assert_eq!(metered, got, "B={b} metered logits drifted");
+            assert_eq!(
+                ops.plane_words_visited + ops.plane_words_skipped,
+                net.plane_words_total(),
+                "B={b} ops accounting leak: {ops:?}"
+            );
         }
     });
 }
@@ -280,13 +289,23 @@ fn prop_binary_sharded_bitwise_identical() {
             let samples = random_samples(rng, b, d0);
             let views: Vec<&[u8]> = samples.iter().map(|s| s.as_slice()).collect();
             net.set_shards(1);
-            let want = net.forward_block_u8(&views).unwrap();
+            let (want, want_ops) = net.forward_block_u8_ops(&views).unwrap();
             for (s, sample) in samples.iter().enumerate() {
                 assert_eq!(want[s], net.forward_u8(sample).unwrap(), "B={b} sample {s}");
             }
+            assert_eq!(
+                want_ops.plane_words_visited + want_ops.plane_words_skipped,
+                net.plane_words_total(),
+                "B={b} ops accounting leak: {want_ops:?}"
+            );
             for shards in SHARD_SWEEP {
                 net.set_shards(shards);
-                assert_eq!(net.forward_block_u8(&views).unwrap(), want, "B={b} shards={shards}");
+                // outputs are bitwise identical AND the ops counters are
+                // exact — sharding repartitions the rows but must visit
+                // and skip precisely the same plane words
+                let (got, ops) = net.forward_block_u8_ops(&views).unwrap();
+                assert_eq!(got, want, "B={b} shards={shards}");
+                assert_eq!(ops, want_ops, "B={b} shards={shards} counters drifted");
             }
         }
     });
@@ -457,6 +476,18 @@ fn engine_batched_dispatch_matches_scalar_engines() {
     for (s, sample) in bsamples.iter().enumerate() {
         assert_eq!(bbatched[s], net.classify_u8(sample).unwrap());
     }
+
+    // metered dispatch: only the binary engine reports plane-kernel ops
+    let (classes, ops) = bengine.classify_batch_ops(&bviews).unwrap();
+    assert_eq!(classes, bbatched);
+    let ops = ops.expect("binary engine meters its kernels");
+    assert_eq!(
+        ops.plane_words_visited + ops.plane_words_skipped,
+        net.plane_words_total(),
+        "engine dispatch ops leak: {ops:?}"
+    );
+    let (_, no_ops) = engine.classify_batch_ops(&views).unwrap();
+    assert!(no_ops.is_none(), "csr engine must not report zeroed BinOps");
 }
 
 #[test]

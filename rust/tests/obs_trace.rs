@@ -24,6 +24,8 @@ fn record_for(i: u64, n: u64) -> SpanRecord {
         arg_a: t ^ 0xDEAD_BEEF,
         arg_b: n * 11,
         arg_c: t.wrapping_mul(3),
+        arg_d: t.rotate_left(13),
+        arg_e: n.wrapping_mul(17) ^ i,
     }
 }
 
@@ -40,6 +42,8 @@ fn assert_intact(r: &SpanRecord, max_tracks: u32, writes_per_thread: u64) {
     assert_eq!(r.arg_a, want.arg_a, "torn arg_a in {r:?}");
     assert_eq!(r.arg_b, want.arg_b, "torn arg_b in {r:?}");
     assert_eq!(r.arg_c, want.arg_c, "torn arg_c in {r:?}");
+    assert_eq!(r.arg_d, want.arg_d, "torn arg_d in {r:?}");
+    assert_eq!(r.arg_e, want.arg_e, "torn arg_e in {r:?}");
     assert!(r.track < max_tracks, "track {} out of range", r.track);
 }
 
@@ -93,12 +97,12 @@ fn exporter_emits_valid_chrome_trace_json() {
     let ring = rec.register("conn-0").expect("first ring");
     let model = rec.intern_label("net_a");
     let spans = [
-        (Stage::Accept, [96u64, 0, 0]),
-        (Stage::Parse, [0, 0, 0]),
-        (Stage::Queue, [3, 0, 0]),
-        (Stage::Compute, [4, 123_456, 789]),
-        (Stage::Shard, [1, 12, 40]),
-        (Stage::Write, [210, 0, 0]),
+        (Stage::Accept, [96u64, 0, 0, 0, 0]),
+        (Stage::Parse, [0, 0, 0, 0, 0]),
+        (Stage::Queue, [3, 0, 0, 0, 0]),
+        (Stage::Compute, [4, 123_456, 789, 5120, 1880]),
+        (Stage::Shard, [1, 12, 40, 0, 0]),
+        (Stage::Write, [210, 0, 0, 0, 0]),
     ];
     for (k, (stage, args)) in spans.iter().enumerate() {
         ring.record(&SpanRecord {
@@ -111,6 +115,8 @@ fn exporter_emits_valid_chrome_trace_json() {
             arg_a: args[0],
             arg_b: args[1],
             arg_c: args[2],
+            arg_d: args[3],
+            arg_e: args[4],
         });
     }
     let text = chrome_trace(&rec);
@@ -158,6 +164,8 @@ fn exporter_emits_valid_chrome_trace_json() {
     assert_eq!(compute.get("batch"), Some(&Json::Num(4.0)));
     assert_eq!(compute.get("predicted_cycles_addonly"), Some(&Json::Num(123_456.0)));
     assert_eq!(compute.get("predicted_dots"), Some(&Json::Num(789.0)));
+    assert_eq!(compute.get("plane_words_visited"), Some(&Json::Num(5120.0)));
+    assert_eq!(compute.get("plane_words_skipped"), Some(&Json::Num(1880.0)));
     let shard = by_name("shard");
     assert_eq!(shard.get("rows"), Some(&Json::Num(12.0)));
     assert_eq!(shard.get("work_estimate"), Some(&Json::Num(40.0)));
